@@ -1,0 +1,92 @@
+//! Format tour: one irregular matrix through every storage format the
+//! SpMV-on-GPU literature uses, with the size/padding/traffic trade-offs
+//! that motivate EHYB (paper §2.2, §3.4).
+//!
+//! ```text
+//! cargo run --release --example format_tour
+//! ```
+
+use ehyb::gpu::GpuDevice;
+use ehyb::perfmodel;
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::sparse::dia::Dia;
+use ehyb::sparse::ell::Ell;
+use ehyb::sparse::gen::{circuit, poisson3d};
+use ehyb::sparse::hyb::Hyb;
+use ehyb::sparse::sellp::SellP;
+use ehyb::sparse::stats::MatrixStats;
+
+fn main() -> anyhow::Result<()> {
+    for (label, m) in [
+        ("poisson3d 24^3 (structured CFD)", poisson3d::<f64>(24, 24, 24)),
+        ("circuit 20k (power-law rows)", circuit::<f64>(20_000, 4, 0.01, 7)),
+    ] {
+        println!("=== {label}: {} ===", MatrixStats::of(&m).oneline());
+        let nnz = m.nnz() as f64;
+
+        println!("  {:<10} {:>12} {:>10} {:>8}", "format", "bytes", "B/nnz", "fill");
+        println!("  {:<10} {:>12} {:>10.2} {:>8}", "csr", m.bytes(), m.bytes() as f64 / nnz, "-");
+
+        let ell = Ell::from_csr(&m);
+        println!(
+            "  {:<10} {:>12} {:>10.2} {:>8.2}",
+            "ell",
+            ell.bytes(),
+            ell.bytes() as f64 / nnz,
+            ell.fill_ratio()
+        );
+
+        let hyb = Hyb::from_csr_auto(&m, 2.0 / 3.0);
+        println!(
+            "  {:<10} {:>12} {:>10.2} {:>8}",
+            "hyb",
+            hyb.bytes(),
+            hyb.bytes() as f64 / nnz,
+            format!("{}+{}", hyb.ell.nnz(), hyb.coo.nnz())
+        );
+
+        let sellp = SellP::from_csr(&m, 32);
+        println!(
+            "  {:<10} {:>12} {:>10.2} {:>8.2}",
+            "sellp",
+            sellp.bytes(),
+            sellp.bytes() as f64 / nnz,
+            sellp.fill_ratio()
+        );
+
+        match Dia::from_csr(&m, 64) {
+            Some(dia) => println!(
+                "  {:<10} {:>12} {:>10.2} {:>8}",
+                "dia",
+                dia.bytes(),
+                dia.bytes() as f64 / nnz,
+                format!("{} diags", dia.num_diags())
+            ),
+            None => println!("  {:<10} {:>12}", "dia", "unsuitable (>64 diagonals)"),
+        }
+
+        let plan = EhybPlan::build(&m, &PreprocessConfig::default())?;
+        let e = &plan.matrix;
+        println!(
+            "  {:<10} {:>12} {:>10.2} {:>8.2}  (ER {:.1}%, u16 cols save {} bytes)",
+            "ehyb",
+            e.bytes(),
+            e.bytes() as f64 / nnz,
+            e.ell_fill_ratio(),
+            100.0 * e.er_fraction(),
+            e.bytes_u32_cols() - e.bytes()
+        );
+
+        // Roofline boundaries (the abstract's "theory up-boundary").
+        let dev = GpuDevice::v100();
+        let csr_bound = perfmodel::csr_bound(&m).roofline_gflops(m.nnz(), &dev);
+        let ehyb_bound = perfmodel::ehyb_bound(e).roofline_gflops(e.nnz(), &dev);
+        println!(
+            "  roofline: CSR-family bound {:.0} GFLOPS, EHYB bound {:.0} GFLOPS ({:+.1}%)\n",
+            csr_bound,
+            ehyb_bound,
+            100.0 * (ehyb_bound / csr_bound - 1.0)
+        );
+    }
+    Ok(())
+}

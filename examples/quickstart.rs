@@ -1,0 +1,79 @@
+//! Quickstart: the EHYB pipeline end to end on one matrix.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Generate an unstructured-mesh FEM matrix (locality hidden behind
+//!    random labels — the case graph partitioning exists for).
+//! 2. Preprocess: partition → reorder → sliced-ELL/ER split (paper
+//!    Algorithms 1–2), report the structure EHYB got.
+//! 3. SpMV three ways — CPU reference, optimized CPU engine, and the
+//!    AOT-compiled XLA artifact over PJRT — and check they agree.
+//! 4. Compare against every baseline on the simulated V100.
+
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::runner;
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::sparse::gen::unstructured_mesh;
+use ehyb::sparse::stats::MatrixStats;
+use ehyb::spmv::SpmvEngine;
+use ehyb::util::check::assert_allclose;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A 16k-row unstructured mesh (fits the "quickstart" bucket).
+    let m = unstructured_mesh::<f64>(128, 128, 0.5, 42);
+    println!("matrix: {}", MatrixStats::of(&m).oneline());
+
+    // 2. Preprocess (vec_size matched to the quickstart artifact).
+    let cfg = PreprocessConfig { vec_size_override: Some(512), ..Default::default() };
+    let plan = EhybPlan::build(&m, &cfg)?;
+    println!(
+        "EHYB: {} partitions x {} rows; ER = {:.2}% of nnz; ELL fill = {:.3}; {:.1}% smaller than u32 cols",
+        plan.matrix.num_parts,
+        plan.matrix.vec_size,
+        100.0 * plan.matrix.er_fraction(),
+        plan.matrix.ell_fill_ratio(),
+        100.0 * (1.0 - plan.matrix.bytes() as f64 / plan.matrix.bytes_u32_cols() as f64),
+    );
+    println!(
+        "preprocessing: partition {:.3}s + reorder {:.3}s",
+        plan.timings.partition_secs, plan.timings.reorder_secs
+    );
+
+    // 3. SpMV three ways.
+    let n = m.nrows();
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let oracle = m.spmv_f64_oracle(&x);
+
+    let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+    let mut y_cpu = vec![0.0; n];
+    engine.spmv(&x, &mut y_cpu);
+    assert_allclose(&y_cpu, &oracle, 1e-10, 1e-10).map_err(|e| anyhow::anyhow!(e))?;
+    println!("CPU EHYB engine: matches oracle");
+
+    match ehyb::runtime::PjrtRuntime::new("artifacts") {
+        Ok(rt) => {
+            let pjrt = rt.spmv_engine(&plan.matrix)?;
+            let mut y_pjrt = vec![0.0; n];
+            pjrt.spmv(&x, &mut y_pjrt)?;
+            assert_allclose(&y_pjrt, &oracle, 1e-9, 1e-9).map_err(|e| anyhow::anyhow!(e))?;
+            println!("PJRT ({}) via AOT artifact: matches oracle", rt.platform());
+        }
+        Err(e) => println!("PJRT skipped ({e}) — run `make artifacts`"),
+    }
+
+    // 4. Simulated V100 comparison.
+    let run = runner::run_matrix("quickstart", "demo", &m, &cfg, &GpuDevice::v100())?;
+    println!("\nsimulated V100:");
+    for row in &run.rows {
+        let speedup = run.gflops_of("ehyb").unwrap() / row.gflops;
+        println!(
+            "  {:>15}: {:7.2} GFLOPS{}",
+            row.framework,
+            row.gflops,
+            if row.framework == "ehyb" { String::new() } else { format!("  (EHYB is {speedup:.2}x)") }
+        );
+    }
+    Ok(())
+}

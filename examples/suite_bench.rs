@@ -1,0 +1,70 @@
+//! Paper-evaluation driver: regenerates the Figure 3/5 series, the
+//! Table 1/2 speedup statistics (over the 16-matrix corpus for speed;
+//! use `ehyb bench --table 1 --scale small` for the full 94), and the
+//! Figure 6 preprocessing decomposition — all on the simulated V100.
+//!
+//! ```text
+//! EHYB_SUITE_SCALE=tiny cargo run --release --example suite_bench   # fast
+//! cargo run --release --example suite_bench                         # default
+//! ```
+
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::{report, runner, suite, tables};
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::csr::Csr;
+
+fn main() -> anyhow::Result<()> {
+    let scale = suite::Scale::from_env();
+    let dev = GpuDevice::v100();
+    let specs = suite::suite16(scale);
+    println!("running {} matrices at {:?} scale on simulated {}\n", specs.len(), scale, dev.name);
+
+    let mut runs32 = Vec::new();
+    let mut runs64 = Vec::new();
+    for spec in &specs {
+        let m64 = spec.build();
+        let m32: Csr<f32> = m64.cast();
+        let cfg = PreprocessConfig::default();
+        let r32 = runner::run_matrix(&spec.name, spec.category, &m32, &cfg, &dev)?;
+        let r64 = runner::run_matrix(&spec.name, spec.category, &m64, &cfg, &dev)?;
+        println!(
+            "{:>20}: n={:>7} nnz={:>9}  f32 ehyb {:6.1} GF (vs alg2 {:4.2}x)   f64 ehyb {:6.1} GF (vs alg2 {:4.2}x)",
+            spec.name,
+            r64.n,
+            r64.nnz,
+            r32.gflops_of("ehyb").unwrap_or(0.0),
+            r32.speedup_vs("cusparse-alg2").unwrap_or(0.0),
+            r64.gflops_of("ehyb").unwrap_or(0.0),
+            r64.speedup_vs("cusparse-alg2").unwrap_or(0.0),
+        );
+        runs32.push(r32);
+        runs64.push(r64);
+    }
+
+    // Figure 3/5 summaries.
+    println!("\nFigure 3 (single precision):");
+    println!("{}", report::figure_summary(&tables::figure_series::<f32>(&runs32)));
+    println!("Figure 5 (double precision):");
+    println!("{}", report::figure_summary(&tables::figure_series::<f64>(&runs64)));
+
+    // Table 1/2 over this corpus.
+    println!(
+        "{}",
+        report::speedup_markdown(
+            "Table 1 (single precision, 16-matrix corpus)",
+            &tables::speedup_table::<f32>(&runs32)
+        )
+    );
+    println!(
+        "{}",
+        report::speedup_markdown(
+            "Table 2 (double precision, 16-matrix corpus)",
+            &tables::speedup_table::<f64>(&runs64)
+        )
+    );
+
+    // Figure 6.
+    println!("Figure 6 — preprocessing cost in units of one (simulated) SpMV:");
+    println!("{}", report::fig6_markdown(&tables::fig6_rows(&runs64)));
+    Ok(())
+}

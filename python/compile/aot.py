@@ -1,0 +1,98 @@
+"""AOT entry point: lower the L2 graphs at every shape bucket and write
+HLO-text artifacts + a manifest the Rust runtime indexes.
+
+Run once at build time (``make artifacts``); Python is never on the
+request path. Usage::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Bucket sizing: XLA executables are shape-static, so the runtime pads a
+matrix up to the smallest bucket that fits (zero padding is numerically
+inert — padding slots are col=0/val=0 and padded x entries are 0). The
+ladder below covers the tests, the quickstart, and the FEM-solver
+example; the 94-matrix perf sweeps run on the GPU simulator, not PJRT
+(DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from . import model  # noqa: E402
+
+
+# (name, P, W, R, E, WE) — n = P*R padded rows. E is generous: for 3D
+# stencils partitioned into ~512-row blocks, most rows are partition-
+# boundary rows (the block's surface), so ER row counts approach n.
+BUCKETS = [
+    ("tiny", 4, 8, 64, 256, 4),
+    ("small", 16, 16, 128, 2048, 8),
+    ("quickstart", 32, 16, 512, 16384, 8),
+    ("solver", 128, 8, 512, 57344, 8),
+]
+
+DTYPES = ["f32", "f64"]
+_DT = {"f32": "float32", "f64": "float64"}
+
+
+def artifact_name(kind: str, dtype: str, name: str) -> str:
+    return f"{kind}_{dtype}_{name}.hlo.txt"
+
+
+def build_all(out_dir: str, kinds=("spmv", "cg"), buckets=BUCKETS, dtypes=DTYPES) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"buckets": []}
+    for name, p, w, r, e, we in buckets:
+        for dt in dtypes:
+            for kind in kinds:
+                lower = model.lower_spmv if kind == "spmv" else model.lower_cg_step
+                text = lower(_DT[dt], p, w, r, e, we)
+                fname = artifact_name(kind, dt, name)
+                path = os.path.join(out_dir, fname)
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest["buckets"].append(
+                    {
+                        "kind": kind,
+                        "dtype": dt,
+                        "name": name,
+                        "p": p,
+                        "w": w,
+                        "r": r,
+                        "e": e,
+                        "we": we,
+                        "n": p * r,
+                        "file": fname,
+                        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                    }
+                )
+                print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['buckets'])} artifacts)")
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--kinds",
+        default="spmv,cg",
+        help="comma-separated artifact kinds to build (spmv,cg)",
+    )
+    args = ap.parse_args(argv)
+    build_all(args.out, kinds=tuple(args.kinds.split(",")))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

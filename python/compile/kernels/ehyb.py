@@ -1,0 +1,94 @@
+"""L1 — the EHYB sliced-ELL Pallas kernel with an explicitly cached
+input-vector slice.
+
+Paper Algorithm 3 on a GPU: one CUDA block per partition copies its
+x-slice into shared memory, then warps stream the partition's sliced-ELL
+entries and gather x from the cache.
+
+TPU rethink (DESIGN.md §Hardware-Adaptation): the explicit cache is a
+VMEM block. ``grid = (num_parts,)`` and the x-partition BlockSpec
+``lambda p: (p, 0)`` make Pallas stage exactly one partition's x-slice
+into VMEM per grid step — the HBM→VMEM copy *is* Algorithm 3 line 4.
+The (W, R) value/column blocks stream through VMEM the way the ELL
+slices stream through the SM; the gather ``x[cols]`` vectorizes across
+the 128-lane axis (R is a multiple of 128 in deployment shapes; the
+kernel itself only needs R % 8 == 0).
+
+Layout notes:
+
+* ``cols``/``vals`` are (P, W, R): partition-major, then ELL column
+  (width) index, then row-within-partition — the column-major-within-
+  partition order the paper uses for coalescing; on TPU it puts the row
+  axis last, i.e. across lanes.
+* Column indices are **partition-local** (< R = VecSize < 2^16, paper
+  §3.4). Storage in the Rust coordinator is u16; the PJRT boundary
+  widens them to i32 because XLA literals have no i16 entry point in
+  the runtime crate. On a real TPU the artifact would keep i16 in HBM
+  and widen in-register, like the CUDA kernel does.
+* Padding slots are ``col = 0, val = 0``: gather-safe and numerically
+  inert.
+* ``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; correctness is validated on this path and real-TPU
+  behaviour is estimated analytically (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ell_kernel(x_ref, col_ref, val_ref, o_ref):
+    """One grid step = one partition (paper: one CUDA block).
+
+    x_ref   : (1, R)  — the partition's x-slice, staged in VMEM.
+    col_ref : (1, W, R) int32 — partition-local column indices.
+    val_ref : (1, W, R) — matrix values (padding rows are 0).
+    o_ref   : (1, R) — this partition's slice of y.
+    """
+    x = x_ref[0, :]  # the explicitly cached vector slice
+    cols = col_ref[0]  # (W, R)
+    vals = val_ref[0]  # (W, R)
+    # Gather from the cached slice only — never from the full vector.
+    gathered = x[cols]  # (W, R)
+    o_ref[0, :] = jnp.sum(vals * gathered, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ell_spmv(xp, cols, vals):
+    """Sliced-ELL part of the EHYB SpMV.
+
+    Args:
+      xp:   (P*R,) input vector in the reordered (new) index space.
+      cols: (P, W, R) int32 partition-local columns.
+      vals: (P, W, R) values.
+
+    Returns:
+      (P*R,) the ELL part's contribution to y (new index space).
+    """
+    p, w, r = cols.shape
+    x_parts = xp.reshape(p, r)
+    out = pl.pallas_call(
+        _ell_kernel,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda i: (i, 0)),  # x-slice: the cache
+            pl.BlockSpec((1, w, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, r), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, r), vals.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x_parts, cols, vals)
+    return out.reshape(p * r)
+
+
+def vmem_bytes(p: int, w: int, r: int, dtype) -> int:
+    """Estimated VMEM working set per grid step: the cached x-slice plus
+    one (W, R) value block, one (W, R) int32 column block, and the output
+    slice. Used by DESIGN.md §9's footprint budget (≤ 16 MiB/core)."""
+    tau = jnp.dtype(dtype).itemsize
+    return r * tau + w * r * tau + w * r * 4 + r * tau

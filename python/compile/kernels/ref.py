@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the EHYB kernels — no Pallas, no tricks.
+
+The pytest suite (and hypothesis sweeps) compare every kernel and the
+full L2 model against these references, which are themselves validated
+against a dense matrix reconstruction in ``tests/test_ref.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(xp, cols, vals):
+    """Reference for the sliced-ELL part: identical math, no pallas_call.
+
+    xp: (P*R,), cols/vals: (P, W, R) -> (P*R,)
+    """
+    p, w, r = cols.shape
+    x_parts = xp.reshape(p, r)
+    # Per-partition gather from the partition's own slice.
+    gathered = jnp.take_along_axis(
+        x_parts[:, None, :].repeat(w, axis=1), cols, axis=2
+    )
+    return jnp.sum(vals * gathered, axis=1).reshape(p * r)
+
+
+def er_spmv_ref(xp, er_cols, er_vals):
+    """ER (extra rows) part: uncached gathers over the full vector.
+
+    er_cols/er_vals: (E, WE) with global (new-order) columns.
+    Returns (E,) per-ER-row contributions.
+    """
+    return jnp.sum(er_vals * xp[er_cols], axis=1)
+
+
+def ehyb_spmv_ref(xp, ell_cols, ell_vals, er_cols, er_vals, er_yidx):
+    """Full EHYB SpMV in the new index space (see model.ehyb_spmv)."""
+    y = ell_spmv_ref(xp, ell_cols, ell_vals)
+    contrib = er_spmv_ref(xp, er_cols, er_vals)
+    return y.at[er_yidx].add(contrib)
+
+
+def dense_from_ehyb(n, ell_cols, ell_vals, er_cols, er_vals, er_yidx):
+    """Reconstruct the dense operator A (new index space) from EHYB
+    arrays — the ground truth the references are tested against."""
+    p, w, r = ell_cols.shape
+    a = jnp.zeros((n, n), dtype=ell_vals.dtype)
+    for pi in range(p):
+        for wi in range(w):
+            for ri in range(r):
+                row = pi * r + ri
+                col = pi * r + int(ell_cols[pi, wi, ri])
+                if row < n and col < n:
+                    a = a.at[row, col].add(ell_vals[pi, wi, ri])
+    e, we = er_cols.shape
+    for ei in range(e):
+        row = int(er_yidx[ei])
+        for wi in range(we):
+            col = int(er_cols[ei, wi])
+            if row < n and col < n:
+                a = a.at[row, col].add(er_vals[ei, wi])
+    return a

@@ -1,0 +1,115 @@
+"""L2 — the EHYB SpMV compute graph (and a fused CG step), written in
+JAX on top of the L1 Pallas kernel, lowered once by ``aot.py`` to HLO
+text that the Rust runtime loads.
+
+Everything operates in the **new (reordered) index space**: the Rust
+coordinator permutes x once per solve (not per SpMV) and un-permutes y
+at the end, exactly as the CUDA implementation keeps its vectors
+pre-permuted on the device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ehyb import ell_spmv
+
+
+def ehyb_spmv(xp, ell_cols, ell_vals, er_cols, er_vals, er_yidx):
+    """Full EHYB SpMV: sliced-ELL (explicitly cached) + ER scatter-add.
+
+    Args:
+      xp:       (P*R,) input vector, new index space, padded.
+      ell_cols: (P, W, R) int32 partition-local columns.
+      ell_vals: (P, W, R) values.
+      er_cols:  (E, WE) int32 global (new-order) columns.
+      er_vals:  (E, WE) values (padding rows all-zero).
+      er_yidx:  (E,) int32 output row of each ER row (padding -> 0 with
+                zero values, so the scatter-add is inert).
+
+    Returns:
+      (P*R,) y in the new index space.
+    """
+    y = ell_spmv(xp, ell_cols, ell_vals)
+    # ER part: uncached gathers over the full vector + scatter-add —
+    # the paper processes these rows without the shared-memory cache.
+    contrib = jnp.sum(er_vals * xp[er_cols], axis=1)
+    return y.at[er_yidx].add(contrib)
+
+
+def cg_step(xk, rk, pk, rz, ell_cols, ell_vals, er_cols, er_vals, er_yidx, diag_inv):
+    """One Jacobi-preconditioned CG iteration, fused around the SpMV —
+    the L2 graph the solver example runs end-to-end (§6's amortization
+    argument: thousands of iterations share one preprocessing).
+
+    State: xk (iterate), rk (residual), pk (search direction),
+    rz = <r, z> from the previous step; diag_inv = 1/diag(A) (new order,
+    padding slots 0).
+
+    Returns (xk1, rk1, pk1, rz1, alpha_den) — alpha_den lets the host
+    monitor breakdown.
+    """
+    ap = ehyb_spmv(pk, ell_cols, ell_vals, er_cols, er_vals, er_yidx)
+    den = jnp.dot(pk, ap)
+    alpha = rz / jnp.where(den == 0, 1.0, den)
+    xk1 = xk + alpha * pk
+    rk1 = rk - alpha * ap
+    zk1 = diag_inv * rk1
+    rz1 = jnp.dot(rk1, zk1)
+    beta = rz1 / jnp.where(rz == 0, 1.0, rz)
+    pk1 = zk1 + beta * pk
+    return xk1, rk1, pk1, rz1, den
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers (the AOT bridge; see /opt/xla-example/gen_hlo.py).
+# HLO *text* is the interchange format: jax >= 0.5 emits protos with
+# 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+# parser reassigns ids and round-trips cleanly.
+# ---------------------------------------------------------------------------
+
+
+def spmv_arg_specs(dtype, p, w, r, e, we):
+    """ShapeDtypeStructs for ``ehyb_spmv`` at a given bucket shape."""
+    f = jnp.dtype(dtype)
+    i = jnp.dtype(jnp.int32)
+    return (
+        jax.ShapeDtypeStruct((p * r,), f),
+        jax.ShapeDtypeStruct((p, w, r), i),
+        jax.ShapeDtypeStruct((p, w, r), f),
+        jax.ShapeDtypeStruct((e, we), i),
+        jax.ShapeDtypeStruct((e, we), f),
+        jax.ShapeDtypeStruct((e,), i),
+    )
+
+
+def cg_arg_specs(dtype, p, w, r, e, we):
+    f = jnp.dtype(dtype)
+    n = p * r
+    vec = jax.ShapeDtypeStruct((n,), f)
+    scal = jax.ShapeDtypeStruct((), f)
+    # cg_step takes the matrix arguments without the xp vector.
+    matrix = spmv_arg_specs(dtype, p, w, r, e, we)[1:]
+    return (vec, vec, vec, scal) + matrix + (vec,)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spmv(dtype, p, w, r, e, we) -> str:
+    lowered = jax.jit(ehyb_spmv).lower(*spmv_arg_specs(dtype, p, w, r, e, we))
+    return to_hlo_text(lowered)
+
+
+def lower_cg_step(dtype, p, w, r, e, we) -> str:
+    lowered = jax.jit(cg_step).lower(*cg_arg_specs(dtype, p, w, r, e, we))
+    return to_hlo_text(lowered)

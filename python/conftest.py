@@ -1,0 +1,12 @@
+"""Pytest config: make the `compile` package importable whether pytest
+runs from `python/` or the repo root, and enable x64 before any other
+jax use."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,36 @@
+//! Bench: DESIGN.md §7 ablations on a representative unstructured-mesh
+//! matrix — isolates each of the paper's design choices:
+//! explicit cache, u16 columns, partitioner quality, descending-nnz
+//! sort, and the VecSize (equation 1-2) sweep.
+//! `cargo bench --bench ablations`.
+
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::{ablation, report, suite};
+use ehyb::preprocess::PreprocessConfig;
+
+fn main() {
+    let scale = suite::Scale::from_env();
+    let dim = match scale {
+        suite::Scale::Tiny => 48,
+        suite::Scale::Small => 200,
+        suite::Scale::Full => 600,
+    };
+    let m = ehyb::sparse::gen::unstructured_mesh::<f64>(dim, dim, 0.5, 42);
+    let cfg = PreprocessConfig::default();
+    let dev = GpuDevice::v100();
+    let mut out = String::new();
+
+    let rows = ablation::cache_and_cols(&m, &cfg, &dev).unwrap();
+    out += &report::ablation_markdown("§7.1+7.2 Explicit cache × column width", &rows);
+    let rows = ablation::partitioner_quality(&m, &cfg, &dev).unwrap();
+    out += &report::ablation_markdown("§7.3 Partitioner quality", &rows);
+    let rows = ablation::sort_ablation(&m, &cfg, &dev).unwrap();
+    out += &report::ablation_markdown("§7.4 Descending-nnz reorder", &rows);
+    let rows = ablation::vecsize_sweep(&m, &cfg, &dev, &[64, 128, 256, 512, 1024, 2048, 4096]).unwrap();
+    out += &report::ablation_markdown("§7.5 VecSize sweep (equations 1-2)", &rows);
+
+    println!("{out}");
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/ablations.md", out).ok();
+    eprintln!("wrote bench_out/ablations.md");
+}

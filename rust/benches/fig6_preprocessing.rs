@@ -1,0 +1,46 @@
+//! Bench: regenerate **Figure 6** — preprocessing time (partitioning +
+//! reordering) in units of one SpMV on the 16 commonly-tested matrices.
+//! Reports both the simulated-V100 unit (the paper's) and a CPU-engine
+//! unit as a wall-clock cross-check. `cargo bench --bench fig6_preprocessing`.
+
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::{report, runner, suite, tables};
+use ehyb::preprocess::PreprocessConfig;
+
+fn main() {
+    let scale = suite::Scale::from_env();
+    let dev = GpuDevice::v100();
+    let specs = suite::suite16(scale);
+    let mut runs = Vec::new();
+    println!("| matrix | partition (xSpMV-cpu) | reorder (xSpMV-cpu) |");
+    println!("|---|---|---|");
+    for spec in &specs {
+        let m = spec.build();
+        let cfg = PreprocessConfig::default();
+        // CPU wall-clock cross-check.
+        if let Ok((prep, cpu_spmv)) = runner::measure_prep_ratio_cpu(&m, &cfg) {
+            let u = prep.in_spmv_units(cpu_spmv);
+            println!("| {} | {:.0} | {:.0} |", spec.name, u.partition, u.reorder);
+        }
+        // Simulated-GPU unit (the paper's axis).
+        if let Ok(r) = runner::run_matrix(&spec.name, spec.category, &m, &cfg, &dev) {
+            runs.push(r);
+        }
+    }
+    println!("\nFigure 6 — preprocessing in units of one simulated-V100 SpMV:");
+    let rows = tables::fig6_rows(&runs);
+    println!("{}", report::fig6_markdown(&rows));
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/fig6_preprocessing.md", report::fig6_markdown(&rows)).ok();
+
+    // Paper's claimed band: partition 400-1500x, reorder 50-400x,
+    // total 500-2000x (on their testbed). Report our band.
+    let (mut pmin, mut pmax, mut tmin, mut tmax) = (f64::MAX, 0.0f64, f64::MAX, 0.0f64);
+    for r in &rows {
+        pmin = pmin.min(r.partition_x);
+        pmax = pmax.max(r.partition_x);
+        tmin = tmin.min(r.total_x);
+        tmax = tmax.max(r.total_x);
+    }
+    println!("measured bands: partitioning {pmin:.0}-{pmax:.0}x, total {tmin:.0}-{tmax:.0}x (paper: 400-1500x / 500-2000x)");
+}

@@ -1,0 +1,82 @@
+//! Bench: L3 hot-path wall-clock — CPU engines on this host (the §Perf
+//! iteration target) plus PJRT SpMV latency when artifacts exist.
+//! `cargo bench --bench hotpath`.
+
+use ehyb::harness::runner;
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::sparse::gen::{poisson3d, unstructured_mesh};
+use ehyb::util::timer::bench_secs;
+use std::time::Duration;
+
+fn main() {
+    let cases: Vec<(&str, ehyb::sparse::csr::Csr<f64>)> = vec![
+        ("poisson3d-44 (85k, stencil)", poisson3d(44, 44, 44)),
+        ("unstructured-300 (90k, irregular)", unstructured_mesh(300, 300, 0.5, 42)),
+    ];
+    for (label, m) in &cases {
+        println!("== {label}: n={} nnz={} ==", m.nrows(), m.nnz());
+        let cfg = PreprocessConfig::default();
+        match runner::bench_cpu_engines(m, &cfg) {
+            Ok(rows) => {
+                for (name, gflops) in rows {
+                    println!("  {name:>15}: {gflops:7.3} GFLOPS (cpu wallclock)");
+                }
+            }
+            Err(e) => println!("  failed: {e:#}"),
+        }
+        // Hot-loop detail: the EHYB engine's new-order path (the solver's
+        // inner loop, no permutation overhead).
+        let plan = EhybPlan::build(m, &cfg).unwrap();
+        let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+        let xp = vec![1.0f64; plan.matrix.padded_rows()];
+        let mut yp = vec![0.0f64; plan.matrix.padded_rows()];
+        // §Perf before/after: GPU-order baseline vs CPU-optimized loop.
+        let secs_lane = bench_secs(
+            || engine.spmv_new_order_lane_major(&xp, &mut yp),
+            5,
+            Duration::from_millis(300),
+        );
+        let secs = bench_secs(|| engine.spmv_new_order(&xp, &mut yp), 5, Duration::from_millis(300));
+        println!(
+            "  ehyb hot loop lane-major (before): {:.3} ms = {:.3} GFLOPS",
+            secs_lane * 1e3,
+            ehyb::spmv::gflops(plan.matrix.nnz(), secs_lane)
+        );
+        println!(
+            "  ehyb hot loop k-outer    (after) : {:.3} ms = {:.3} GFLOPS ({:.2}x)",
+            secs * 1e3,
+            ehyb::spmv::gflops(plan.matrix.nnz(), secs),
+            secs_lane / secs
+        );
+        // Memory-bound roofline check for this host: bytes touched/SpMV.
+        let bytes = plan.matrix.bytes() + 2 * 8 * plan.matrix.padded_rows();
+        println!(
+            "  format bytes/SpMV = {} ({:.2} GB/s effective)",
+            bytes,
+            bytes as f64 / secs / 1e9
+        );
+    }
+
+    // PJRT latency (bucketed shapes).
+    if let Ok(rt) = ehyb::runtime::PjrtRuntime::new("artifacts") {
+        let m = poisson3d::<f64>(40, 40, 40);
+        let cfg = PreprocessConfig { vec_size_override: Some(512), ..Default::default() };
+        let plan = EhybPlan::build(&m, &cfg).unwrap();
+        let engine = rt.spmv_engine(&plan.matrix).unwrap();
+        let xp = vec![1.0f64; engine.bucket.spec.n()];
+        let t0 = std::time::Instant::now();
+        let mut reps = 0u32;
+        while t0.elapsed() < Duration::from_secs(3) {
+            let _ = engine.spmv_new_order(&xp).unwrap();
+            reps += 1;
+        }
+        let secs = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "== PJRT (solver bucket, n=65536): {:.2} ms/SpMV over {} reps (interpret-mode Pallas on CPU) ==",
+            secs * 1e3,
+            reps
+        );
+    } else {
+        println!("== PJRT skipped (no artifacts) ==");
+    }
+}

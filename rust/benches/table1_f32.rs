@@ -1,0 +1,51 @@
+//! Bench: regenerate **Table 1** (single-precision EHYB speedups over
+//! yaSpMV / holaSpMV / CSR5 / merge / cuSPARSE ALG1+2 on the 94-matrix
+//! corpus) and the **Figure 2** series. Custom harness (no criterion in
+//! the offline closure) — run with `cargo bench --bench table1_f32`.
+//! Scale via EHYB_SUITE_SCALE=tiny|small|full (default small).
+
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::{report, runner, suite, tables};
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::csr::Csr;
+
+fn main() {
+    let scale = suite::Scale::from_env();
+    let dev = GpuDevice::v100();
+    let specs = suite::suite94(scale);
+    eprintln!("table1_f32: {} matrices at {scale:?}", specs.len());
+    let mut runs = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let m: Csr<f32> = spec.build().cast();
+        match runner::run_matrix(&spec.name, spec.category, &m, &PreprocessConfig::default(), &dev)
+        {
+            Ok(r) => {
+                eprintln!(
+                    "[{}/{}] {} ehyb={:.1}GF vs alg2 {:.2}x",
+                    i + 1,
+                    specs.len(),
+                    spec.name,
+                    r.gflops_of("ehyb").unwrap_or(0.0),
+                    r.speedup_vs("cusparse-alg2").unwrap_or(0.0)
+                );
+                runs.push(r);
+            }
+            Err(e) => eprintln!("[{}/{}] {} failed: {e:#}", i + 1, specs.len(), spec.name),
+        }
+    }
+    let table = tables::speedup_table::<f32>(&runs);
+    println!(
+        "{}",
+        report::speedup_markdown("Table 1 — EHYB speedup, single precision (simulated V100)", &table)
+    );
+    let fig = tables::figure_series::<f32>(&runs);
+    println!("Figure 2 summary:\n{}", report::figure_summary(&fig));
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/fig2_f32_94.csv", report::figure_csv(&fig)).ok();
+    std::fs::write(
+        "bench_out/table1_f32.md",
+        report::speedup_markdown("Table 1 — single precision", &table),
+    )
+    .ok();
+    eprintln!("wrote bench_out/fig2_f32_94.csv, bench_out/table1_f32.md");
+}

@@ -1,0 +1,64 @@
+//! Bench: regenerate **Table 2** (double-precision speedups; yaSpMV
+//! excluded — no f64 support, paper §5.2) and the **Figure 4** series,
+//! plus **Figures 3/5** (16 commonly-tested matrices, both precisions).
+//! Run with `cargo bench --bench table2_f64`.
+
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::{report, runner, suite, tables};
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::csr::Csr;
+
+fn sweep<S: ehyb::runtime::XlaScalar>(
+    specs: &[suite::MatrixSpec],
+    dev: &GpuDevice,
+    tag: &str,
+) -> Vec<runner::MatrixRun> {
+    let mut runs = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let m: Csr<S> = spec.build().cast();
+        match runner::run_matrix(&spec.name, spec.category, &m, &PreprocessConfig::default(), dev)
+        {
+            Ok(r) => {
+                eprintln!("[{tag} {}/{}] {}", i + 1, specs.len(), spec.name);
+                runs.push(r);
+            }
+            Err(e) => eprintln!("[{tag} {}/{}] {} failed: {e:#}", i + 1, specs.len(), spec.name),
+        }
+    }
+    runs
+}
+
+fn main() {
+    let scale = suite::Scale::from_env();
+    let dev = GpuDevice::v100();
+    std::fs::create_dir_all("bench_out").ok();
+
+    // Table 2 + Figure 4: 94 matrices, f64.
+    let specs94 = suite::suite94(scale);
+    let runs64 = sweep::<f64>(&specs94, &dev, "94/f64");
+    let table = tables::speedup_table::<f64>(&runs64);
+    println!(
+        "{}",
+        report::speedup_markdown("Table 2 — EHYB speedup, double precision (simulated V100)", &table)
+    );
+    let fig4 = tables::figure_series::<f64>(&runs64);
+    println!("Figure 4 summary:\n{}", report::figure_summary(&fig4));
+    std::fs::write("bench_out/fig4_f64_94.csv", report::figure_csv(&fig4)).ok();
+    std::fs::write(
+        "bench_out/table2_f64.md",
+        report::speedup_markdown("Table 2 — double precision", &table),
+    )
+    .ok();
+
+    // Figures 3 and 5: the 16 commonly tested matrices.
+    let specs16 = suite::suite16(scale);
+    let runs16_32 = sweep::<f32>(&specs16, &dev, "16/f32");
+    let runs16_64 = sweep::<f64>(&specs16, &dev, "16/f64");
+    let fig3 = tables::figure_series::<f32>(&runs16_32);
+    let fig5 = tables::figure_series::<f64>(&runs16_64);
+    println!("Figure 3 summary:\n{}", report::figure_summary(&fig3));
+    println!("Figure 5 summary:\n{}", report::figure_summary(&fig5));
+    std::fs::write("bench_out/fig3_f32_16.csv", report::figure_csv(&fig3)).ok();
+    std::fs::write("bench_out/fig5_f64_16.csv", report::figure_csv(&fig5)).ok();
+    eprintln!("wrote bench_out/{{table2_f64.md,fig4_f64_94.csv,fig3_f32_16.csv,fig5_f64_16.csv}}");
+}

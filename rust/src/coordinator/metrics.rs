@@ -1,0 +1,127 @@
+//! Service metrics: request counters and a fixed-bucket latency
+//! histogram (log-spaced), lock-free on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-spaced latency histogram from 1 µs to ~1 s (30 buckets, ×2 each).
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..30).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, secs: f64) {
+        let nanos = (secs * 1e9) as u64;
+        let us = nanos / 1000;
+        let idx = if us == 0 { 0 } else { (63 - us.leading_zeros() as usize).min(29) };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
+    }
+
+    /// Approximate quantile from the histogram (upper bucket edge).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64 * 1e-6; // bucket upper edge in µs
+            }
+        }
+        (1u64 << 30) as f64 * 1e-6
+    }
+}
+
+/// Service-level counters.
+#[derive(Default)]
+pub struct ServiceMetrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub spmv_latency: LatencyHistogram,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self { requests: AtomicU64::new(0), batches: AtomicU64::new(0), spmv_latency: LatencyHistogram::new() }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_means() {
+        let h = LatencyHistogram::new();
+        h.record(0.001);
+        h.record(0.003);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_secs() - 0.002).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert!(h.quantile_secs(0.5) <= h.quantile_secs(0.99));
+        assert!(h.quantile_secs(0.99) > 1e-4);
+    }
+
+    #[test]
+    fn batch_size_accounting() {
+        let m = ServiceMetrics::new();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.batches.fetch_add(4, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean_secs(), 0.0);
+        assert_eq!(h.quantile_secs(0.9), 0.0);
+    }
+}

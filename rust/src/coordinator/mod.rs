@@ -1,0 +1,22 @@
+//! L3 coordinator: the host-side system around the SpMV kernel.
+//!
+//! The paper's contribution is the kernel + preprocessing; the
+//! coordinator is the thin-but-real layer a downstream user deploys:
+//!
+//! * [`solver`] — preconditioned CG / BiCGSTAB whose hot path is the
+//!   EHYB SpMV (the §6 use case: SPAI-preconditioned iterative solvers
+//!   amortizing preprocessing over thousands of iterations).
+//! * [`precond`] — Jacobi and SPAI(0) preconditioners built from
+//!   scratch (paper refs [10][13]).
+//! * [`service`] — a single-threaded SpMV service owning the (!Send)
+//!   PJRT runtime, serving requests over channels with batching;
+//!   worker threads submit and await.
+//! * [`metrics`] — counters/latency histograms for the service.
+
+pub mod solver;
+pub mod precond;
+pub mod service;
+pub mod metrics;
+
+pub use precond::{Jacobi, Preconditioner, Spai0};
+pub use solver::{bicgstab, cg, SolveReport, SolverConfig};

@@ -1,0 +1,228 @@
+//! SpMV service: a dedicated thread owns the execution engine (the PJRT
+//! handles are `!Send`, so the device lives where it was created — the
+//! leader/worker topology of GPU serving systems) and serves requests
+//! from any number of worker threads over an MPSC channel, draining
+//! pending requests in batches to amortize wakeups.
+
+use super::metrics::ServiceMetrics;
+use crate::sparse::scalar::Scalar;
+use crate::util::Timer;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+enum Msg<S> {
+    Spmv { x: Vec<S>, reply: mpsc::Sender<Vec<S>> },
+    Shutdown,
+}
+
+/// Handle to a running SpMV service. Clone-able; each clone can submit.
+pub struct SpmvClient<S> {
+    tx: mpsc::Sender<Msg<S>>,
+    nrows: usize,
+}
+
+impl<S> Clone for SpmvClient<S> {
+    fn clone(&self) -> Self {
+        Self { tx: self.tx.clone(), nrows: self.nrows }
+    }
+}
+
+impl<S: Scalar> SpmvClient<S> {
+    /// Synchronous SpMV round-trip through the service.
+    pub fn spmv(&self, x: &[S]) -> crate::Result<Vec<S>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Spmv { x: x.to_vec(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        Ok(reply_rx.recv().map_err(|_| anyhow::anyhow!("service dropped reply"))?)
+    }
+
+    /// Fire-and-forget submit; returns the receiver for the result.
+    pub fn submit(&self, x: Vec<S>) -> crate::Result<mpsc::Receiver<Vec<S>>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Spmv { x, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        Ok(reply_rx)
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+}
+
+/// A running service; dropping shuts it down.
+pub struct SpmvService<S> {
+    client: SpmvClient<S>,
+    pub metrics: Arc<ServiceMetrics>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<S: Scalar> SpmvService<S> {
+    /// Spawn the service thread. `make_engine` runs *inside* the thread
+    /// (so it may construct `!Send` PJRT state) and returns the SpMV
+    /// closure plus the row count. `max_batch` bounds how many pending
+    /// requests one drain processes.
+    pub fn spawn<F, G>(make_engine: F, nrows: usize, max_batch: usize) -> crate::Result<Self>
+    where
+        F: FnOnce() -> crate::Result<G> + Send + 'static,
+        G: FnMut(&[S], &mut [S]),
+        S: 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Msg<S>>();
+        let metrics = Arc::new(ServiceMetrics::new());
+        let metrics_thread = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        let handle = std::thread::Builder::new().name("spmv-service".into()).spawn(move || {
+            let mut engine = match make_engine() {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let mut y = vec![S::ZERO; nrows];
+            let mut batch: Vec<(Vec<S>, mpsc::Sender<Vec<S>>)> = Vec::new();
+            'outer: loop {
+                // Block for the first request, then drain what's queued.
+                match rx.recv() {
+                    Ok(Msg::Spmv { x, reply }) => batch.push((x, reply)),
+                    Ok(Msg::Shutdown) | Err(_) => break 'outer,
+                }
+                while batch.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(Msg::Spmv { x, reply }) => batch.push((x, reply)),
+                        Ok(Msg::Shutdown) => {
+                            // Serve what we have, then stop.
+                            for (x, reply) in batch.drain(..) {
+                                let t = Timer::start();
+                                engine(&x, &mut y);
+                                metrics_thread.spmv_latency.record(t.elapsed_secs());
+                                let _ = reply.send(y.clone());
+                            }
+                            break 'outer;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                metrics_thread
+                    .requests
+                    .fetch_add(batch.len() as u64, std::sync::atomic::Ordering::Relaxed);
+                metrics_thread.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                for (x, reply) in batch.drain(..) {
+                    let t = Timer::start();
+                    engine(&x, &mut y);
+                    metrics_thread.spmv_latency.record(t.elapsed_secs());
+                    let _ = reply.send(y.clone());
+                }
+            }
+        })?;
+        ready_rx.recv().map_err(|_| anyhow::anyhow!("service died during init"))??;
+        Ok(Self { client: SpmvClient { tx, nrows }, metrics, handle: Some(handle) })
+    }
+
+    pub fn client(&self) -> SpmvClient<S> {
+        self.client.clone()
+    }
+}
+
+impl<S> Drop for SpmvService<S> {
+    fn drop(&mut self) {
+        let _ = self.client.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::preprocess::{EhybPlan, PreprocessConfig};
+    use crate::sparse::gen::poisson2d;
+    use crate::spmv::ehyb_cpu::EhybCpu;
+    use crate::spmv::SpmvEngine;
+
+    fn service() -> (SpmvService<f64>, crate::sparse::csr::Csr<f64>) {
+        let a = poisson2d::<f64>(16, 16);
+        let a2 = a.clone();
+        let svc = SpmvService::spawn(
+            move || {
+                let plan = EhybPlan::build(
+                    &a2,
+                    &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
+                )?;
+                let engine = EhybCpu::new(&plan);
+                Ok(move |x: &[f64], y: &mut [f64]| engine.spmv(x, y))
+            },
+            256,
+            8,
+        )
+        .unwrap();
+        (svc, a)
+    }
+
+    #[test]
+    fn serves_correct_results() {
+        let (svc, a) = service();
+        let client = svc.client();
+        let x: Vec<f64> = (0..256).map(|i| (i as f64 * 0.01).sin()).collect();
+        let y = client.spmv(&x).unwrap();
+        let mut want = vec![0.0; 256];
+        a.spmv(&x, &mut want);
+        for i in 0..256 {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+        assert_eq!(svc.metrics.spmv_latency.count(), 1);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (svc, a) = service();
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let client = svc.client();
+            let a = a.clone();
+            handles.push(std::thread::spawn(move || {
+                let x: Vec<f64> = (0..256).map(|i| ((i + t * 31) as f64 * 0.02).cos()).collect();
+                let y = client.spmv(&x).unwrap();
+                let mut want = vec![0.0; 256];
+                a.spmv(&x, &mut want);
+                for i in 0..256 {
+                    assert!((y[i] - want[i]).abs() < 1e-12);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 8);
+        assert!(svc.metrics.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn async_submit() {
+        let (svc, _) = service();
+        let client = svc.client();
+        let rx1 = client.submit(vec![1.0; 256]).unwrap();
+        let rx2 = client.submit(vec![2.0; 256]).unwrap();
+        let y1 = rx1.recv().unwrap();
+        let y2 = rx2.recv().unwrap();
+        for i in 0..256 {
+            assert!((y2[i] - 2.0 * y1[i]).abs() < 1e-9); // linearity
+        }
+    }
+
+    #[test]
+    fn init_failure_propagates() {
+        let r: crate::Result<SpmvService<f64>> = SpmvService::spawn(
+            || -> crate::Result<fn(&[f64], &mut [f64])> { anyhow::bail!("boom") },
+            4,
+            1,
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,69 @@
+//! GPU device models. Numbers for the V100-SXM2 come from the datasheet
+//! and the paper (§2.1: 900 GB/s HBM, 80 SMs, 96 KiB shared per SM).
+
+#[derive(Clone, Debug)]
+pub struct GpuDevice {
+    pub name: &'static str,
+    pub sms: usize,
+    pub warp_size: usize,
+    /// Shared memory available to one block (bytes).
+    pub shared_mem_per_block: usize,
+    /// Core clock, GHz.
+    pub clock_ghz: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// HBM latency (cycles) — the floor uncached gathers pay.
+    pub hbm_latency: f64,
+    /// L2 capacity in bytes.
+    pub l2_bytes: usize,
+    /// L2 hit bandwidth, bytes/s (V100 ≈ 2.5x HBM).
+    pub l2_bw: f64,
+    /// Shared-memory bandwidth per SM, bytes/cycle (V100: 128 B/clk).
+    pub shm_bytes_per_cycle: f64,
+    /// Warp instruction issue throughput per SM (schedulers).
+    pub issue_per_cycle: f64,
+    /// Kernel launch overhead, seconds.
+    pub launch_overhead: f64,
+    /// Memory sector (transaction) size, bytes.
+    pub sector_bytes: usize,
+}
+
+impl GpuDevice {
+    pub fn v100() -> Self {
+        Self {
+            name: "V100-SXM2",
+            sms: 80,
+            warp_size: 32,
+            shared_mem_per_block: 96 * 1024,
+            clock_ghz: 1.53,
+            hbm_bw: 900.0e9,
+            hbm_latency: 450.0,
+            l2_bytes: 6 * 1024 * 1024,
+            l2_bw: 2200.0e9,
+            shm_bytes_per_cycle: 128.0,
+            issue_per_cycle: 4.0,
+            launch_overhead: 4.0e-6,
+            sector_bytes: 32,
+        }
+    }
+
+    /// Cycles available per second across the device.
+    pub fn total_cycles_per_sec(&self) -> f64 {
+        self.clock_ghz * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_datasheet_sanity() {
+        let d = GpuDevice::v100();
+        assert_eq!(d.sms, 80);
+        assert_eq!(d.warp_size, 32);
+        assert_eq!(d.shared_mem_per_block, 98304);
+        assert!(d.hbm_bw > 8.0e11);
+        assert!(d.l2_bw > d.hbm_bw);
+    }
+}

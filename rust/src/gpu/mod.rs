@@ -1,0 +1,36 @@
+//! Warp-level GPU performance simulator — the V100 substitute
+//! (DESIGN.md §4). SpMV is memory-bound, so the simulator's job is to
+//! count *exactly* the memory traffic each format generates — sector-
+//! level coalescing, L2 hits/misses for input-vector gathers, shared-
+//! memory traffic for EHYB's explicit cache — and to combine those
+//! counts with an execution model (per-SM cycle loads, divergence,
+//! bandwidth bound) into a predicted kernel time.
+//!
+//! What it models and why it is sufficient for the paper's claims:
+//!
+//! * **Coalescing** ([`l2`], [`kernels`]): a warp's 32 gathers touch some
+//!   number of 32-byte sectors; each sector is one L2 probe and, on
+//!   miss, one HBM transaction. The EHYB-vs-baseline difference is
+//!   almost entirely *which* of these gathers hit.
+//! * **L2 cache** ([`l2::L2Sim`]): 16-way set-associative, 32 B sectors,
+//!   6 MiB (V100). Matrix streams run through it and evict x lines —
+//!   exactly the effect §3.1 argues makes implicit caching fail.
+//! * **Shared memory**: EHYB fills its x-slice once per block
+//!   (coalesced HBM reads), then serves all in-partition gathers at
+//!   shared-memory cost.
+//! * **Balance/divergence** ([`simulator`]): blocks are scheduled round-
+//!   robin over SMs; a warp-iteration costs the *maximum* lane trip
+//!   count of the slice (the padding the descending-nnz sort removes).
+//!
+//! Absolute times are estimates; the paper-facing output is the
+//! *relative* standing of formats, which is driven by the exact traffic
+//! counts.
+
+pub mod device;
+pub mod l2;
+pub mod kernels;
+pub mod simulator;
+
+pub use device::GpuDevice;
+pub use kernels::KernelTrace;
+pub use simulator::{simulate, SimReport};

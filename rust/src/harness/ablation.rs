@@ -1,0 +1,168 @@
+//! Ablations (DESIGN.md §7): isolate each design choice the paper
+//! motivates and measure its contribution on the simulator.
+
+use crate::gpu::{kernels, simulate, GpuDevice};
+use crate::partition::{PartitionConfig, PartitionMethod};
+use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub variant: String,
+    pub gflops: f64,
+    pub er_fraction: f64,
+    pub ell_fill: f64,
+}
+
+/// §7.1 + §7.2: explicit cache on/off × u16/u32 columns.
+pub fn cache_and_cols<S: Scalar>(
+    m: &Csr<S>,
+    cfg: &PreprocessConfig,
+    dev: &GpuDevice,
+) -> crate::Result<Vec<AblationRow>> {
+    let plan = EhybPlan::build(m, cfg)?;
+    let e = &plan.matrix;
+    let mut rows = Vec::new();
+    for (cache, u16c) in [(true, true), (true, false), (false, true), (false, false)] {
+        let r = simulate(&kernels::ehyb(e, dev, cache, u16c), dev);
+        rows.push(AblationRow {
+            variant: format!(
+                "cache={} cols={}",
+                if cache { "shm" } else { "l2" },
+                if u16c { "u16" } else { "u32" }
+            ),
+            gflops: r.gflops,
+            er_fraction: e.er_fraction(),
+            ell_fill: e.ell_fill_ratio(),
+        });
+    }
+    Ok(rows)
+}
+
+/// §7.3: partitioner quality (multilevel vs bfs vs index vs random).
+pub fn partitioner_quality<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    dev: &GpuDevice,
+) -> crate::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for method in [
+        PartitionMethod::Multilevel,
+        PartitionMethod::BfsBand,
+        PartitionMethod::IndexBlock,
+        PartitionMethod::Random,
+    ] {
+        let cfg = PreprocessConfig {
+            partition: PartitionConfig { method, ..base.partition.clone() },
+            ..base.clone()
+        };
+        let plan = EhybPlan::build(m, &cfg)?;
+        let r = simulate(&kernels::ehyb(&plan.matrix, dev, true, true), dev);
+        rows.push(AblationRow {
+            variant: format!("{method:?}"),
+            gflops: r.gflops,
+            er_fraction: plan.matrix.er_fraction(),
+            ell_fill: plan.matrix.ell_fill_ratio(),
+        });
+    }
+    Ok(rows)
+}
+
+/// §7.4: descending-nnz reorder on/off.
+pub fn sort_ablation<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    dev: &GpuDevice,
+) -> crate::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for sort in [true, false] {
+        let cfg = PreprocessConfig { sort_descending: sort, ..base.clone() };
+        let plan = EhybPlan::build(m, &cfg)?;
+        let r = simulate(&kernels::ehyb(&plan.matrix, dev, true, true), dev);
+        rows.push(AblationRow {
+            variant: format!("sort_desc={sort}"),
+            gflops: r.gflops,
+            er_fraction: plan.matrix.er_fraction(),
+            ell_fill: plan.matrix.ell_fill_ratio(),
+        });
+    }
+    Ok(rows)
+}
+
+/// §7.5: VecSize (cache size / K) sweep — paper equations (1)-(2) trade
+/// partition count against ER size.
+pub fn vecsize_sweep<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    dev: &GpuDevice,
+    sizes: &[usize],
+) -> crate::Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for &v in sizes {
+        if v >= m.nrows() {
+            continue;
+        }
+        let cfg = PreprocessConfig { vec_size_override: Some(v), ..base.clone() };
+        let plan = EhybPlan::build(m, &cfg)?;
+        let r = simulate(&kernels::ehyb(&plan.matrix, dev, true, true), dev);
+        rows.push(AblationRow {
+            variant: format!("vec_size={v}"),
+            gflops: r.gflops,
+            er_fraction: plan.matrix.er_fraction(),
+            ell_fill: plan.matrix.ell_fill_ratio(),
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::unstructured_mesh;
+
+    fn setup() -> (Csr<f64>, PreprocessConfig, GpuDevice) {
+        (
+            unstructured_mesh::<f64>(48, 48, 0.4, 5),
+            PreprocessConfig { vec_size_override: Some(256), ..Default::default() },
+            GpuDevice::v100(),
+        )
+    }
+
+    #[test]
+    fn cache_ablation_shows_benefit() {
+        let (m, cfg, dev) = setup();
+        let rows = cache_and_cols(&m, &cfg, &dev).unwrap();
+        assert_eq!(rows.len(), 4);
+        let g = |v: &str| rows.iter().find(|r| r.variant.starts_with(v)).unwrap().gflops;
+        // Full EHYB ≥ no-cache variant.
+        assert!(g("cache=shm cols=u16") >= g("cache=l2 cols=u16"));
+        // u16 ≥ u32 at same cache setting.
+        assert!(g("cache=shm cols=u16") >= g("cache=shm cols=u32"));
+    }
+
+    #[test]
+    fn partitioner_ablation_ordering() {
+        let (m, cfg, dev) = setup();
+        let rows = partitioner_quality(&m, &cfg, &dev).unwrap();
+        let er = |v: &str| rows.iter().find(|r| r.variant == v).unwrap().er_fraction;
+        assert!(er("Multilevel") < er("Random"));
+    }
+
+    #[test]
+    fn sort_ablation_fill() {
+        let (m, cfg, dev) = setup();
+        let rows = sort_ablation(&m, &cfg, &dev).unwrap();
+        let fill_on = rows.iter().find(|r| r.variant == "sort_desc=true").unwrap().ell_fill;
+        let fill_off = rows.iter().find(|r| r.variant == "sort_desc=false").unwrap().ell_fill;
+        assert!(fill_on <= fill_off);
+    }
+
+    #[test]
+    fn vecsize_sweep_runs() {
+        let (m, cfg, dev) = setup();
+        let rows = vecsize_sweep(&m, &cfg, &dev, &[64, 128, 256, 512]).unwrap();
+        assert!(rows.len() >= 3);
+        assert!(rows.iter().all(|r| r.gflops > 0.0));
+    }
+}

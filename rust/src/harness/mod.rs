@@ -1,0 +1,22 @@
+//! Benchmark harness: regenerates every table and figure in the paper's
+//! evaluation section (DESIGN.md §6 maps each to its experiment id).
+//!
+//! * [`suite`] — the synthetic 94-matrix corpus + the 16 "commonly
+//!   tested" analogues (SuiteSparse substitutes, DESIGN.md §4).
+//! * [`runner`] — runs every framework's simulated kernel (plus EHYB
+//!   preprocessing) over a matrix and collects [`SimReport`]s.
+//! * [`tables`] — Table 1/2 speedup statistics, Figure 2–5 series,
+//!   Figure 6 preprocessing decomposition.
+//! * [`ablation`] — DESIGN.md §7: explicit-cache on/off, u16/u32
+//!   columns, partitioner quality, descending-sort on/off, VecSize (K)
+//!   sweep.
+//! * [`report`] — markdown / CSV emission.
+
+pub mod suite;
+pub mod runner;
+pub mod tables;
+pub mod ablation;
+pub mod report;
+
+pub use runner::{run_matrix, FrameworkRow, MatrixRun};
+pub use suite::{suite16, suite94, MatrixSpec, Scale};

@@ -1,0 +1,125 @@
+//! Report emission: markdown tables (for EXPERIMENTS.md) and CSV (for
+//! external plotting) from the harness aggregates.
+
+use super::ablation::AblationRow;
+use super::tables::{Fig6Row, FigureSeries, SpeedupRow};
+use std::fmt::Write as _;
+
+/// Tables 1/2 as markdown (the paper's exact columns).
+pub fn speedup_markdown(title: &str, rows: &[SpeedupRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(
+        s,
+        "| SpMV framework | EHYB faster in % | max speedup | min speedup | average speedup | geomean |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {:.1}% | {:.2} | {:.2} | {:.3} | {:.3} |",
+            r.framework, r.win_pct, r.max, r.min, r.avg, r.geomean
+        );
+    }
+    s
+}
+
+/// Figure 2-5 series as CSV: matrix,nnz,<framework...>.
+pub fn figure_csv(f: &FigureSeries) -> String {
+    let mut s = String::new();
+    let _ = write!(s, "matrix,nnz");
+    for fw in &f.frameworks {
+        let _ = write!(s, ",{fw}");
+    }
+    let _ = writeln!(s);
+    for (i, m) in f.matrices.iter().enumerate() {
+        let _ = write!(s, "{m},{}", f.nnz[i]);
+        for series in &f.gflops {
+            let _ = write!(s, ",{:.3}", series[i]);
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// Compact figure summary for the terminal: per-framework GFLOPS
+/// geomean + EHYB win count (the "shape" of the plot).
+pub fn figure_summary(f: &FigureSeries) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{} matrices; per-framework geomean GFLOPS:", f.matrices.len());
+    for (fi, fw) in f.frameworks.iter().enumerate() {
+        let logs: f64 = f.gflops[fi].iter().map(|g| g.max(1e-9).ln()).sum();
+        let geo = (logs / f.matrices.len().max(1) as f64).exp();
+        let _ = writeln!(s, "  {fw:>15}: {geo:8.2}");
+    }
+    s
+}
+
+/// Figure 6 as markdown.
+pub fn fig6_markdown(rows: &[Fig6Row]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "| matrix | partition (xSpMV) | reorder (xSpMV) | total (xSpMV) |");
+    let _ = writeln!(s, "|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {:.0} | {:.0} | {:.0} |",
+            r.matrix, r.partition_x, r.reorder_x, r.total_x
+        );
+    }
+    s
+}
+
+pub fn ablation_markdown(title: &str, rows: &[AblationRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(s, "| variant | GFLOPS | ER fraction | ELL fill |");
+    let _ = writeln!(s, "|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(s, "| {} | {:.2} | {:.4} | {:.3} |", r.variant, r.gflops, r.er_fraction, r.ell_fill);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::tables::SpeedupRow;
+
+    #[test]
+    fn speedup_markdown_contains_rows() {
+        let rows = vec![SpeedupRow {
+            framework: "csr5",
+            win_pct: 100.0,
+            max: 1.9,
+            min: 1.3,
+            avg: 1.5,
+            geomean: 1.49,
+        }];
+        let md = speedup_markdown("Table 1", &rows);
+        assert!(md.contains("csr5"));
+        assert!(md.contains("100.0%"));
+    }
+
+    #[test]
+    fn figure_csv_shape() {
+        let f = FigureSeries {
+            matrices: vec!["a".into(), "b".into()],
+            nnz: vec![10, 20],
+            frameworks: vec!["ehyb", "csr5"],
+            gflops: vec![vec![100.0, 90.0], vec![80.0, 70.0]],
+        };
+        let csv = figure_csv(&f);
+        let lines: Vec<_> = csv.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("matrix,nnz,ehyb,csr5"));
+        assert!(lines[1].starts_with("a,10,100.000,80.000"));
+    }
+
+    #[test]
+    fn fig6_markdown_rows() {
+        let rows = vec![Fig6Row { matrix: "m".into(), partition_x: 700.0, reorder_x: 100.0, total_x: 800.0 }];
+        let md = fig6_markdown(&rows);
+        assert!(md.contains("| m | 700 | 100 | 800 |"));
+    }
+}

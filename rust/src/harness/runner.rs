@@ -1,0 +1,198 @@
+//! Per-matrix measurement: preprocess into EHYB, walk every framework's
+//! simulated kernel, and return one row per framework — the unit of
+//! work behind every figure and table.
+
+use crate::gpu::{kernels, simulate, GpuDevice, SimReport};
+use crate::preprocess::{EhybPlan, PreprocessConfig, PreprocessTimings};
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+use crate::util::Timer;
+
+/// One framework's result on one matrix.
+#[derive(Clone, Debug)]
+pub struct FrameworkRow {
+    pub framework: &'static str,
+    pub gflops: f64,
+    pub time_secs: f64,
+    pub bound: &'static str,
+}
+
+/// Everything measured for one matrix at one precision.
+#[derive(Clone, Debug)]
+pub struct MatrixRun {
+    pub name: String,
+    pub category: &'static str,
+    pub n: usize,
+    pub nnz: usize,
+    pub dtype: &'static str,
+    pub er_fraction: f64,
+    pub ell_fill: f64,
+    pub cut_fraction: f64,
+    pub rows: Vec<FrameworkRow>,
+    /// Host preprocessing wall-clock (partition + reorder).
+    pub prep: PreprocessTimings,
+    /// Simulated single-SpMV time of the EHYB kernel (Fig. 6's unit).
+    pub ehyb_spmv_secs: f64,
+}
+
+impl MatrixRun {
+    pub fn gflops_of(&self, framework: &str) -> Option<f64> {
+        self.rows.iter().find(|r| r.framework == framework).map(|r| r.gflops)
+    }
+
+    /// EHYB speedup vs `framework` (>1 = EHYB faster).
+    pub fn speedup_vs(&self, framework: &str) -> Option<f64> {
+        let e = self.gflops_of("ehyb")?;
+        let f = self.gflops_of(framework)?;
+        Some(e / f)
+    }
+}
+
+/// Frameworks compared in the paper's figures, in plot order.
+/// (f64 drops yaspmv — the paper notes it has no double support.)
+pub fn frameworks<S: Scalar>() -> Vec<&'static str> {
+    let mut v = vec!["holaspmv", "csr5", "merge", "cusparse-alg1", "cusparse-alg2"];
+    if S::BYTES == 4 {
+        v.insert(0, "yaspmv");
+    }
+    v
+}
+
+/// Run the full framework comparison on one matrix.
+pub fn run_matrix<S: Scalar>(
+    name: &str,
+    category: &'static str,
+    m: &Csr<S>,
+    cfg: &PreprocessConfig,
+    dev: &GpuDevice,
+) -> crate::Result<MatrixRun> {
+    let plan = EhybPlan::build(m, cfg)?;
+    let mut rows = Vec::new();
+
+    let push = |rows: &mut Vec<FrameworkRow>, r: SimReport| {
+        rows.push(FrameworkRow {
+            framework: r.name,
+            gflops: r.gflops,
+            time_secs: r.time_secs,
+            bound: r.bound,
+        });
+    };
+
+    // EHYB itself.
+    let ehyb_report = simulate(&kernels::ehyb(&plan.matrix, dev, true, true), dev);
+    let ehyb_spmv_secs = ehyb_report.time_secs;
+    push(&mut rows, ehyb_report);
+
+    // Baselines.
+    if S::BYTES == 4 {
+        push(&mut rows, simulate(&kernels::bcoo_yaspmv(m, dev), dev));
+    }
+    push(&mut rows, simulate(&kernels::hola(m, dev), dev));
+    push(&mut rows, simulate(&kernels::csr5(m, dev), dev));
+    push(&mut rows, simulate(&kernels::merge_based(m, dev), dev));
+    push(&mut rows, simulate(&kernels::csr_vector_alg1(m, dev), dev));
+    push(&mut rows, simulate(&kernels::csr_adaptive_alg2(m, dev), dev));
+
+    Ok(MatrixRun {
+        name: name.to_string(),
+        category,
+        n: m.nrows(),
+        nnz: m.nnz(),
+        dtype: S::NAME,
+        er_fraction: plan.matrix.er_fraction(),
+        ell_fill: plan.matrix.ell_fill_ratio(),
+        cut_fraction: plan.partition.cut_fraction,
+        rows,
+        prep: plan.timings,
+        ehyb_spmv_secs,
+    })
+}
+
+/// Measure host preprocessing against the *CPU* EHYB SpMV wall-clock —
+/// the apples-to-apples decomposition when no GPU exists (used as a
+/// cross-check next to the simulated ratio in Fig. 6).
+pub fn measure_prep_ratio_cpu<S: Scalar>(
+    m: &Csr<S>,
+    cfg: &PreprocessConfig,
+) -> crate::Result<(PreprocessTimings, f64)> {
+    let plan = EhybPlan::build(m, cfg)?;
+    let engine = crate::spmv::ehyb_cpu::EhybCpu::new(&plan);
+    use crate::spmv::SpmvEngine;
+    let x = vec![S::ONE; m.nrows()];
+    let mut y = vec![S::ZERO; m.nrows()];
+    let secs = crate::util::timer::bench_secs(
+        || engine.spmv(&x, &mut y),
+        3,
+        std::time::Duration::from_millis(30),
+    );
+    Ok((plan.timings, secs))
+}
+
+/// Wall-clock benchmark of the CPU engines (used by the hotpath bench
+/// and the §Perf iteration log).
+pub fn bench_cpu_engines<S: Scalar>(
+    m: &Csr<S>,
+    cfg: &PreprocessConfig,
+) -> crate::Result<Vec<(String, f64)>> {
+    let (engines, _plan) = crate::spmv::registry::all_engines(m, cfg)?;
+    let x = vec![S::ONE; m.nrows()];
+    let mut out = Vec::new();
+    for e in &engines {
+        let mut y = vec![S::ZERO; e.nrows()];
+        let secs = crate::util::timer::bench_secs(
+            || e.spmv(&x, &mut y),
+            3,
+            std::time::Duration::from_millis(30),
+        );
+        out.push((e.name().to_string(), crate::spmv::gflops(e.nnz(), secs)));
+    }
+    let _ = Timer::start();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{poisson3d, unstructured_mesh};
+
+    fn cfg(v: usize) -> PreprocessConfig {
+        PreprocessConfig { vec_size_override: Some(v), ..Default::default() }
+    }
+
+    #[test]
+    fn run_matrix_produces_all_frameworks_f64() {
+        let m = poisson3d::<f64>(10, 10, 10);
+        let run = run_matrix("p3d", "CFD", &m, &cfg(128), &GpuDevice::v100()).unwrap();
+        let names: Vec<_> = run.rows.iter().map(|r| r.framework).collect();
+        assert!(names.contains(&"ehyb"));
+        for f in frameworks::<f64>() {
+            assert!(names.contains(&f), "missing {f}");
+        }
+        assert!(!names.contains(&"yaspmv"), "yaspmv has no f64 (paper §5.2)");
+        assert!(run.rows.iter().all(|r| r.gflops > 0.0));
+    }
+
+    #[test]
+    fn run_matrix_f32_includes_yaspmv() {
+        let m = poisson3d::<f32>(8, 8, 8);
+        let run = run_matrix("p3d", "CFD", &m, &cfg(128), &GpuDevice::v100()).unwrap();
+        assert!(run.gflops_of("yaspmv").is_some());
+        assert!(run.speedup_vs("cusparse-alg1").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn prep_ratio_positive() {
+        let m = unstructured_mesh::<f64>(24, 24, 0.4, 3);
+        let (prep, spmv) = measure_prep_ratio_cpu(&m, &cfg(64)).unwrap();
+        assert!(spmv > 0.0);
+        assert!(prep.total_secs() > 0.0);
+    }
+
+    #[test]
+    fn cpu_engines_benchable() {
+        let m = poisson3d::<f64>(6, 6, 6);
+        let rows = bench_cpu_engines(&m, &cfg(64)).unwrap();
+        assert_eq!(rows.len(), 7);
+        assert!(rows.iter().all(|(_, g)| *g > 0.0));
+    }
+}

@@ -1,0 +1,254 @@
+//! The benchmark corpus: synthetic stand-ins for the paper's 94
+//! SuiteSparse FEM matrices (Table 3) and its 16 "commonly tested"
+//! matrices (Figures 3/5/6).
+//!
+//! Each spec reproduces its category's structural signature (nnz/row
+//! distribution, locality, degree skew). Linear dimensions scale with
+//! [`Scale`] so tests run in milliseconds, the default bench in
+//! minutes, and `Scale::Full` approaches paper-size matrices.
+
+use crate::sparse::csr::Csr;
+use crate::sparse::gen;
+
+/// Linear-dimension multiplier for the whole corpus.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Unit tests: n ≈ 1–5 k.
+    Tiny,
+    /// Default bench sweeps: n ≈ 10–100 k.
+    Small,
+    /// Paper-approaching: n ≈ 100 k – 1 M+ (slow).
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("EHYB_SUITE_SCALE").as_deref() {
+            Ok("tiny") => Scale::Tiny,
+            Ok("full") => Scale::Full,
+            _ => Scale::Small,
+        }
+    }
+
+    fn dim(&self, tiny: usize, small: usize, full: usize) -> usize {
+        match self {
+            Scale::Tiny => tiny,
+            Scale::Small => small,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// Generator recipe (all parameters scale-resolved at build time).
+#[derive(Clone, Debug)]
+pub enum Recipe {
+    Poisson3d { d: (usize, usize, usize) },
+    Stencil27 { d: (usize, usize, usize), seed: u64 },
+    Elasticity { d: (usize, usize, usize), ndof: usize, seed: u64 },
+    Unstructured { d: (usize, usize), extra: f64, seed: u64 },
+    Circuit { n: usize, deg: usize, hubs: f64, seed: u64 },
+    Kkt { nh: usize, seed: u64 },
+    Banded { n: usize, bw: usize, fill: f64, seed: u64 },
+}
+
+/// One corpus entry.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    pub name: String,
+    pub category: &'static str,
+    pub recipe: Recipe,
+}
+
+impl MatrixSpec {
+    pub fn build(&self) -> Csr<f64> {
+        match &self.recipe {
+            Recipe::Poisson3d { d } => gen::poisson3d(d.0, d.1, d.2),
+            Recipe::Stencil27 { d, seed } => gen::stencil27(d.0, d.1, d.2, *seed),
+            Recipe::Elasticity { d, ndof, seed } => gen::elasticity3d(d.0, d.1, d.2, *ndof, *seed),
+            Recipe::Unstructured { d, extra, seed } => gen::unstructured_mesh(d.0, d.1, *extra, *seed),
+            Recipe::Circuit { n, deg, hubs, seed } => gen::circuit(*n, *deg, *hubs, *seed),
+            Recipe::Kkt { nh, seed } => gen::kkt(*nh, *seed),
+            Recipe::Banded { n, bw, fill, seed } => gen::banded(*n, *bw, *fill, *seed),
+        }
+    }
+}
+
+/// The 16 "commonly tested" analogues (Fig. 3/5/6). Names reference the
+/// paper's matrices; shapes reproduce their category + relative size.
+pub fn suite16(s: Scale) -> Vec<MatrixSpec> {
+    let d3 = |t, sm, f| {
+        let d = s.dim(t, sm, f);
+        (d, d, d)
+    };
+    let d2 = |t, sm, f| {
+        let d = s.dim(t, sm, f);
+        (d, d)
+    };
+    let mk = |name: &str, category, recipe| MatrixSpec { name: name.to_string(), category, recipe };
+    vec![
+        mk("poisson3D-like", "CFD", Recipe::Poisson3d { d: d3(10, 44, 95) }),
+        mk("cant-like", "3D problem", Recipe::Stencil27 { d: d3(8, 29, 63), seed: 101 }),
+        mk("consph-like", "3D problem", Recipe::Stencil27 { d: d3(9, 32, 69), seed: 102 }),
+        mk("pwtk-like", "Structural", Recipe::Elasticity { d: d3(6, 20, 42), ndof: 3, seed: 103 }),
+        mk("shipsec5-like", "Structural", Recipe::Elasticity { d: d3(6, 19, 39), ndof: 3, seed: 104 }),
+        mk("bmwcra_1-like", "Structural", Recipe::Elasticity { d: d3(6, 18, 37), ndof: 3, seed: 105 }),
+        mk("crankseg_2-like", "Structural", Recipe::Elasticity { d: d3(5, 14, 28), ndof: 3, seed: 106 }),
+        mk("ldoor-like", "Structural", Recipe::Elasticity { d: d3(7, 22, 68), ndof: 3, seed: 107 }),
+        mk("audikw_1-like", "Structural", Recipe::Elasticity { d: d3(7, 21, 68), ndof: 3, seed: 108 }),
+        mk("boneS10-like", "Bio Engineering", Recipe::Elasticity { d: d3(7, 21, 67), ndof: 3, seed: 109 }),
+        mk("atmosmodj-like", "CFD", Recipe::Poisson3d { d: d3(11, 48, 108) }),
+        mk("G3_circuit-like", "Circuit Simulation", Recipe::Circuit {
+            n: s.dim(2_000, 60_000, 1_500_000),
+            deg: 3,
+            hubs: 0.001,
+            seed: 110,
+        }),
+        mk("memchip-like", "Circuit Simulation", Recipe::Circuit {
+            n: s.dim(2_500, 80_000, 2_500_000),
+            deg: 4,
+            hubs: 0.002,
+            seed: 111,
+        }),
+        mk("nlpkkt80-like", "Optimization", Recipe::Kkt { nh: s.dim(7, 26, 56), seed: 112 }),
+        mk("F1-like", "Structural", Recipe::Unstructured { d: d2(40, 190, 585), extra: 0.8, seed: 113 }),
+        mk("offshore-like", "Electromagnetics", Recipe::Unstructured { d: d2(35, 165, 510), extra: 0.5, seed: 114 }),
+    ]
+}
+
+/// The 94-matrix corpus: every category of the paper's Table 3, several
+/// size decades per category, deterministic seeds.
+pub fn suite94(s: Scale) -> Vec<MatrixSpec> {
+    let mut specs = Vec::with_capacity(94);
+    let mut n = 0usize;
+    let mut push = |name: String, category: &'static str, recipe: Recipe| {
+        specs.push(MatrixSpec { name, category, recipe });
+        n += 1;
+        let _ = n;
+    };
+
+    // Structural / elasticity (the largest category in the paper): 24.
+    for i in 0..24 {
+        let base = 5 + i % 8; // vary size
+        let d = s.dim(base, base * 4 + i % 5, base * 8);
+        push(
+            format!("struct_{i:02}"),
+            "Structural",
+            Recipe::Elasticity { d: (d, d, d), ndof: 3, seed: 200 + i as u64 },
+        );
+    }
+    // CFD 7-pt stencils: 16.
+    for i in 0..16 {
+        let base = 8 + (i % 6) * 2;
+        let d = s.dim(base, base * 6, base * 10 + i);
+        push(format!("cfd_{i:02}"), "CFD", Recipe::Poisson3d { d: (d, d + i % 3, d) });
+    }
+    // 3D problems, 27-pt: 12.
+    for i in 0..12 {
+        let base = 6 + i % 5;
+        let d = s.dim(base, base * 6, base * 9);
+        push(format!("fem3d_{i:02}"), "3D Problem", Recipe::Stencil27 { d: (d, d, d), seed: 300 + i as u64 });
+    }
+    // Electromagnetics / unstructured: 12.
+    for i in 0..12 {
+        let base = 24 + (i % 6) * 6;
+        let d = s.dim(base, base * 8, base * 14);
+        push(
+            format!("em_{i:02}"),
+            "Electromagnetics",
+            Recipe::Unstructured { d: (d, d), extra: 0.4 + 0.1 * (i % 3) as f64, seed: 400 + i as u64 },
+        );
+    }
+    // Biomedical (elasticity-like with higher variance): 8.
+    for i in 0..8 {
+        let base = 5 + i % 4;
+        let d = s.dim(base, base * 4, base * 9);
+        push(
+            format!("bio_{i:02}"),
+            "Bio Engineering",
+            Recipe::Elasticity { d: (d, d, d), ndof: 3, seed: 500 + i as u64 },
+        );
+    }
+    // Circuit / power: 10.
+    for i in 0..10 {
+        let nn = s.dim(1_500 + 500 * (i % 4), 150_000 + 50_000 * (i % 4), 1_000_000 + 400_000 * (i % 4));
+        push(
+            format!("circuit_{i:02}"),
+            "Circuit Simulation",
+            Recipe::Circuit { n: nn, deg: 3 + i % 3, hubs: 0.001 * (1 + i % 4) as f64, seed: 600 + i as u64 },
+        );
+    }
+    // Optimization (KKT): 6.
+    for i in 0..6 {
+        let nh = s.dim(6 + i % 3, 30 + 4 * (i % 3), 50 + 6 * (i % 3));
+        push(format!("opt_{i:02}"), "Optimization", Recipe::Kkt { nh, seed: 700 + i as u64 });
+    }
+    // Model reduction / semiconductor (banded): 6.
+    for i in 0..6 {
+        let nn = s.dim(2_000, 200_000 + 40_000 * (i % 3), 900_000);
+        push(
+            format!("semi_{i:02}"),
+            "Semiconductor",
+            Recipe::Banded { n: nn, bw: 12 + 4 * (i % 3), fill: 0.35, seed: 800 + i as u64 },
+        );
+    }
+    assert_eq!(specs.len(), 94, "corpus must have exactly 94 matrices");
+    specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats::MatrixStats;
+
+    #[test]
+    fn corpus_has_94() {
+        assert_eq!(suite94(Scale::Tiny).len(), 94);
+    }
+
+    #[test]
+    fn suite16_has_16_unique_names() {
+        let s = suite16(Scale::Tiny);
+        assert_eq!(s.len(), 16);
+        let mut names: Vec<_> = s.iter().map(|m| m.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 16);
+    }
+
+    #[test]
+    fn tiny_specs_build_and_are_square() {
+        for spec in suite16(Scale::Tiny) {
+            let m = spec.build();
+            assert_eq!(m.nrows(), m.ncols(), "{}", spec.name);
+            assert!(m.nnz() > 0, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn categories_have_distinct_signatures() {
+        // Structural (ndof=3, 27-pt) must have much higher nnz/row than
+        // circuit matrices — the paper's corpus diversity, reproduced.
+        let s16 = suite16(Scale::Tiny);
+        let stat = |name: &str| {
+            let spec = s16.iter().find(|m| m.name == name).unwrap();
+            MatrixStats::of(&spec.build())
+        };
+        let structural = stat("pwtk-like");
+        let circuit = stat("G3_circuit-like");
+        assert!(structural.row_nnz.mean > 3.0 * circuit.row_nnz.mean);
+    }
+
+    #[test]
+    fn scales_are_ordered() {
+        let spec_t = &suite16(Scale::Tiny)[0];
+        let spec_s = &suite16(Scale::Small)[0];
+        assert!(spec_s.build().nrows() > spec_t.build().nrows());
+    }
+
+    #[test]
+    fn deterministic_rebuild() {
+        let a = suite16(Scale::Tiny)[1].build();
+        let b = suite16(Scale::Tiny)[1].build();
+        assert_eq!(a.col_idx, b.col_idx);
+    }
+}

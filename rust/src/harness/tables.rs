@@ -1,0 +1,141 @@
+//! Aggregation into the paper's tables and figure series.
+
+use super::runner::{frameworks, MatrixRun};
+use crate::sparse::scalar::Scalar;
+use crate::util::stats::{win_rate, Summary};
+
+/// One row of Table 1 / Table 2.
+#[derive(Clone, Debug)]
+pub struct SpeedupRow {
+    pub framework: &'static str,
+    pub win_pct: f64,
+    pub max: f64,
+    pub min: f64,
+    pub avg: f64,
+    pub geomean: f64,
+}
+
+/// Tables 1 (f32) / 2 (f64): EHYB speedup statistics vs each framework.
+pub fn speedup_table<S: Scalar>(runs: &[MatrixRun]) -> Vec<SpeedupRow> {
+    frameworks::<S>()
+        .into_iter()
+        .map(|f| {
+            let speedups: Vec<f64> = runs.iter().filter_map(|r| r.speedup_vs(f)).collect();
+            let s = Summary::of(&speedups).unwrap_or(Summary {
+                n: 0,
+                min: 0.0,
+                max: 0.0,
+                mean: 0.0,
+                geomean: 0.0,
+                median: 0.0,
+                stddev: 0.0,
+            });
+            SpeedupRow {
+                framework: f,
+                win_pct: 100.0 * win_rate(&speedups),
+                max: s.max,
+                min: s.min,
+                avg: s.mean,
+                geomean: s.geomean,
+            }
+        })
+        .collect()
+}
+
+/// Figure 2/3 (f32) and 4/5 (f64) series: GFLOPS per (matrix, framework),
+/// matrices ordered by nnz as in the paper's plots.
+#[derive(Clone, Debug)]
+pub struct FigureSeries {
+    pub matrices: Vec<String>,
+    pub nnz: Vec<usize>,
+    pub frameworks: Vec<&'static str>,
+    /// `gflops[f][m]` for framework f, matrix m.
+    pub gflops: Vec<Vec<f64>>,
+}
+
+pub fn figure_series<S: Scalar>(runs: &[MatrixRun]) -> FigureSeries {
+    let mut order: Vec<usize> = (0..runs.len()).collect();
+    order.sort_by_key(|&i| runs[i].nnz);
+    let mut fw = vec!["ehyb"];
+    fw.extend(frameworks::<S>());
+    let gflops = fw
+        .iter()
+        .map(|f| order.iter().map(|&i| runs[i].gflops_of(f).unwrap_or(0.0)).collect())
+        .collect();
+    FigureSeries {
+        matrices: order.iter().map(|&i| runs[i].name.clone()).collect(),
+        nnz: order.iter().map(|&i| runs[i].nnz).collect(),
+        frameworks: fw,
+        gflops,
+    }
+}
+
+/// Figure 6 data point: preprocessing phases in units of one SpMV.
+#[derive(Clone, Debug)]
+pub struct Fig6Row {
+    pub matrix: String,
+    pub partition_x: f64,
+    pub reorder_x: f64,
+    pub total_x: f64,
+}
+
+pub fn fig6_rows(runs: &[MatrixRun]) -> Vec<Fig6Row> {
+    runs.iter()
+        .map(|r| {
+            let u = r.prep.in_spmv_units(r.ehyb_spmv_secs);
+            Fig6Row {
+                matrix: r.name.clone(),
+                partition_x: u.partition,
+                reorder_x: u.reorder,
+                total_x: u.total,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::GpuDevice;
+    use crate::harness::runner::run_matrix;
+    use crate::preprocess::PreprocessConfig;
+    use crate::sparse::gen::{poisson3d, stencil27};
+
+    fn runs_f64() -> Vec<MatrixRun> {
+        let cfg = PreprocessConfig { vec_size_override: Some(128), ..Default::default() };
+        let dev = GpuDevice::v100();
+        vec![
+            run_matrix("a", "CFD", &poisson3d::<f64>(8, 8, 8), &cfg, &dev).unwrap(),
+            run_matrix("b", "3D", &stencil27::<f64>(7, 7, 7, 1), &cfg, &dev).unwrap(),
+        ]
+    }
+
+    #[test]
+    fn speedup_table_has_all_frameworks() {
+        let t = speedup_table::<f64>(&runs_f64());
+        assert_eq!(t.len(), 5);
+        for row in &t {
+            assert!(row.max >= row.min);
+            assert!(row.avg > 0.0);
+            assert!((0.0..=100.0).contains(&row.win_pct));
+        }
+    }
+
+    #[test]
+    fn figure_series_sorted_by_nnz() {
+        let f = figure_series::<f64>(&runs_f64());
+        assert!(f.nnz.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(f.frameworks[0], "ehyb");
+        assert_eq!(f.gflops.len(), f.frameworks.len());
+        assert_eq!(f.gflops[0].len(), f.matrices.len());
+    }
+
+    #[test]
+    fn fig6_rows_consistent() {
+        let rows = fig6_rows(&runs_f64());
+        for r in rows {
+            assert!((r.partition_x + r.reorder_x - r.total_x).abs() < 1e-9);
+            assert!(r.total_x > 0.0);
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! # EHYB — Explicit-Caching Hybrid SpMV framework
+//!
+//! Reproduction of *"Explicit caching HYB: a new high-performance SpMV
+//! framework on GPGPU"* (Chong Chen, 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — all host-side systems: sparse formats, the
+//!   multilevel graph partitioner (METIS substitute), EHYB preprocessing
+//!   (paper Algorithms 1–2), CPU baseline SpMV engines, a warp-level GPU
+//!   simulator (V100 substitute), an analytic roofline model, the PJRT
+//!   runtime that executes AOT-compiled kernels, and the coordinator
+//!   (batched SpMV service + iterative solvers).
+//! * **L2 (python/compile/model.py)** — the JAX SpMV graph (sliced-ELL
+//!   kernel + ER part + inverse permutation), lowered once to HLO text.
+//! * **L1 (python/compile/kernels/ehyb.py)** — the Pallas kernel with the
+//!   input-vector partition explicitly staged into VMEM (the TPU analogue
+//!   of the paper's shared-memory cache).
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the rpath to the PJRT
+//! // runtime libs in this offline image; the same flow is executed by
+//! // rust/tests/integration.rs.)
+//! use ehyb::sparse::gen::poisson2d;
+//! use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+//! use ehyb::spmv::{SpmvEngine, ehyb_cpu::EhybCpu};
+//!
+//! let m = poisson2d::<f64>(32, 32); // 1024x1024 5-point stencil, CSR
+//! let plan = EhybPlan::build(&m, &PreprocessConfig::default()).unwrap();
+//! let x: Vec<f64> = (0..m.nrows()).map(|i| (i % 7) as f64).collect();
+//! let engine = EhybCpu::new(&plan);
+//! let mut y = vec![0.0; m.nrows()];
+//! engine.spmv(&x, &mut y);
+//! assert!(y.iter().all(|v| v.is_finite()));
+//! ```
+
+pub mod util;
+pub mod sparse;
+pub mod partition;
+pub mod preprocess;
+pub mod spmv;
+pub mod gpu;
+pub mod perfmodel;
+pub mod runtime;
+pub mod coordinator;
+pub mod harness;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,387 @@
+//! `ehyb` — CLI for the EHYB SpMV framework reproduction.
+//!
+//! Subcommands:
+//!   info        matrix structure statistics
+//!   preprocess  run Algorithms 1-2, report partition/ER/fill/timings
+//!   spmv        one SpMV: CPU wallclock + simulated V100 + optional PJRT
+//!   solve       preconditioned CG/BiCGSTAB over the chosen engine
+//!   bench       regenerate paper tables/figures (see DESIGN.md §6)
+//!   ablation    DESIGN.md §7 ablations
+//!
+//! Matrix selection: `--gen poisson3d:24` style specs or `--mtx file.mtx`.
+
+use ehyb::coordinator::{bicgstab, cg, Jacobi, Spai0, SolverConfig};
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::{report, runner, suite, tables};
+use ehyb::harness::suite::Scale;
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::sparse::csr::Csr;
+use ehyb::sparse::gen;
+use ehyb::sparse::mmio::read_matrix_market;
+use ehyb::sparse::stats::MatrixStats;
+use std::collections::HashMap;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let opts = parse_opts(&args[1..]);
+    let r = match cmd.as_str() {
+        "info" => cmd_info(&opts),
+        "preprocess" => cmd_preprocess(&opts),
+        "spmv" => cmd_spmv(&opts),
+        "solve" => cmd_solve(&opts),
+        "bench" => cmd_bench(&opts),
+        "ablation" => cmd_ablation(&opts),
+        "--help" | "-h" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other}");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: ehyb <cmd> [--gen SPEC | --mtx FILE] [options]\n\
+         cmds: info | preprocess | spmv | solve | bench | ablation\n\
+         gen specs: poisson2d:NX[:NY] poisson3d:N[:NY:NZ] stencil27:N\n\
+                    elasticity:N unstructured:N circuit:N kkt:N banded:N\n\
+         options: --vec-size V  --dtype f32|f64  --pjrt  --artifacts DIR\n\
+                  --precond none|jacobi|spai0  --solver cg|bicgstab\n\
+                  --table 1|2  --fig 2|3|4|5|6  --scale tiny|small|full\n\
+                  --out DIR  --which cache|partitioner|sort|vecsize"
+    );
+}
+
+fn parse_opts(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            eprintln!("ignoring stray argument {a}");
+            i += 1;
+        }
+    }
+    m
+}
+
+fn build_matrix(opts: &HashMap<String, String>) -> anyhow::Result<Csr<f64>> {
+    if let Some(path) = opts.get("mtx") {
+        return Ok(read_matrix_market::<f64, _>(path)?.to_csr());
+    }
+    let spec = opts.get("gen").cloned().unwrap_or_else(|| "poisson3d:20".to_string());
+    let parts: Vec<&str> = spec.split(':').collect();
+    let d = |i: usize, def: usize| parts.get(i).and_then(|s| s.parse().ok()).unwrap_or(def);
+    Ok(match parts[0] {
+        "poisson2d" => gen::poisson2d(d(1, 32), d(2, d(1, 32))),
+        "poisson3d" => gen::poisson3d(d(1, 20), d(2, d(1, 20)), d(3, d(1, 20))),
+        "stencil27" => gen::stencil27(d(1, 16), d(1, 16), d(1, 16), 1),
+        "elasticity" => gen::elasticity3d(d(1, 10), d(1, 10), d(1, 10), 3, 1),
+        "unstructured" => gen::unstructured_mesh(d(1, 64), d(1, 64), 0.5, 1),
+        "circuit" => gen::circuit(d(1, 10_000), 3, 0.01, 1),
+        "kkt" => gen::kkt(d(1, 16), 1),
+        "banded" => gen::banded(d(1, 10_000), 16, 0.4, 1),
+        other => anyhow::bail!("unknown generator {other}"),
+    })
+}
+
+fn preprocess_cfg(opts: &HashMap<String, String>) -> PreprocessConfig {
+    let mut cfg = PreprocessConfig::default();
+    if let Some(v) = opts.get("vec-size").and_then(|v| v.parse().ok()) {
+        cfg.vec_size_override = Some(v);
+    }
+    cfg
+}
+
+fn cmd_info(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let m = build_matrix(opts)?;
+    let s = MatrixStats::of(&m);
+    println!("{}", s.oneline());
+    println!(
+        "row nnz: mean={:.2} median={:.1} sd={:.2} min={:.0} max={:.0}; empty rows={}",
+        s.row_nnz.mean, s.row_nnz.median, s.row_nnz.stddev, s.row_nnz.min, s.row_nnz.max, s.empty_rows
+    );
+    println!(
+        "bandwidth={} mean|col-row|={:.1} structural symmetry={:.3}",
+        s.bandwidth, s.mean_band, s.structural_symmetry
+    );
+    Ok(())
+}
+
+fn cmd_preprocess(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let m = build_matrix(opts)?;
+    let cfg = preprocess_cfg(opts);
+    let plan = EhybPlan::build(&m, &cfg)?;
+    let e = &plan.matrix;
+    println!("partitions      : {} x vec_size {}", e.num_parts, e.vec_size);
+    println!("K (eq.1)        : {}", plan.cache.k);
+    println!(
+        "edge cut        : {} ({:.2}% of edges)",
+        plan.partition.edgecut,
+        100.0 * plan.partition.cut_fraction
+    );
+    println!("ELL nnz         : {} (fill ratio {:.3})", e.ell_nnz, e.ell_fill_ratio());
+    println!(
+        "ER nnz          : {} ({:.2}% of nnz, {} rows)",
+        e.er_nnz,
+        100.0 * e.er_fraction(),
+        e.er_rows
+    );
+    println!("bytes           : {} (u32 cols would be {})", e.bytes(), e.bytes_u32_cols());
+    println!("partition time  : {:.4}s", plan.timings.partition_secs);
+    println!("reorder time    : {:.4}s", plan.timings.reorder_secs);
+    Ok(())
+}
+
+fn cmd_spmv(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let m = build_matrix(opts)?;
+    let cfg = preprocess_cfg(opts);
+    let dev = GpuDevice::v100();
+    println!("matrix: n={} nnz={}", m.nrows(), m.nnz());
+
+    println!("\nCPU wall-clock (this host):");
+    for (name, gflops) in runner::bench_cpu_engines(&m, &cfg)? {
+        println!("  {name:>15}: {gflops:7.3} GFLOPS");
+    }
+
+    println!("\nsimulated V100 (GPU cost model):");
+    let run = runner::run_matrix("cli", "cli", &m, &cfg, &dev)?;
+    for row in &run.rows {
+        println!("  {:>15}: {:7.2} GFLOPS ({}-bound)", row.framework, row.gflops, row.bound);
+    }
+    println!("  er_fraction={:.4} ell_fill={:.3}", run.er_fraction, run.ell_fill);
+
+    if opts.contains_key("pjrt") {
+        let dir = opts.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+        let rt = ehyb::runtime::PjrtRuntime::new(dir)?;
+        let plan = EhybPlan::build(&m, &cfg)?;
+        let engine = rt.spmv_engine(&plan.matrix)?;
+        let x = vec![1.0f64; m.nrows()];
+        let mut y = vec![0.0; m.nrows()];
+        let t = ehyb::util::Timer::start();
+        engine.spmv(&x, &mut y)?;
+        let secs = t.elapsed_secs();
+        let oracle = m.spmv_f64_oracle(&x);
+        ehyb::util::check::assert_allclose(&y, &oracle, 1e-9, 1e-9)
+            .map_err(|e| anyhow::anyhow!("PJRT mismatch: {e}"))?;
+        println!("\nPJRT ({}): {:.3} ms/SpMV — results match oracle", rt.platform(), secs * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let m = build_matrix(opts)?;
+    let cfg = preprocess_cfg(opts);
+    let n = m.nrows();
+    let b: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) / 13.0 - 0.5).collect();
+    let solver = opts.get("solver").map(String::as_str).unwrap_or("cg");
+    let scfg = SolverConfig {
+        max_iters: opts.get("max-iters").and_then(|v| v.parse().ok()).unwrap_or(2000),
+        rtol: opts.get("rtol").and_then(|v| v.parse().ok()).unwrap_or(1e-8),
+        track_history: true,
+    };
+    let plan = EhybPlan::build(&m, &cfg)?;
+    let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+    use ehyb::spmv::SpmvEngine;
+    let spmv = |x: &[f64], y: &mut [f64]| engine.spmv(x, y);
+
+    let pre_name = opts.get("precond").map(String::as_str).unwrap_or("jacobi");
+    let report = match (solver, pre_name) {
+        ("cg", "jacobi") => cg(spmv, &b, &vec![0.0; n], &Jacobi::new(&m), &scfg).1,
+        ("cg", "spai0") => cg(spmv, &b, &vec![0.0; n], &Spai0::new(&m), &scfg).1,
+        ("cg", _) => cg(spmv, &b, &vec![0.0; n], &ehyb::coordinator::precond::Identity, &scfg).1,
+        ("bicgstab", "jacobi") => bicgstab(spmv, &b, &vec![0.0; n], &Jacobi::new(&m), &scfg).1,
+        ("bicgstab", "spai0") => bicgstab(spmv, &b, &vec![0.0; n], &Spai0::new(&m), &scfg).1,
+        ("bicgstab", _) => {
+            bicgstab(spmv, &b, &vec![0.0; n], &ehyb::coordinator::precond::Identity, &scfg).1
+        }
+        (s, _) => anyhow::bail!("unknown solver {s}"),
+    };
+    println!(
+        "{} + {}: {} iters, converged={}, final rel residual {:.3e}, {} SpMVs, {:.3}s",
+        report.solver,
+        pre_name,
+        report.iters,
+        report.converged,
+        report.final_rel_residual,
+        report.spmv_count,
+        report.wall_secs
+    );
+    let prep = plan.timings.total_secs();
+    let per_spmv = report.wall_secs / report.spmv_count.max(1) as f64;
+    println!(
+        "preprocessing {:.3}s = {:.0}x one SpMV; amortized over {} SpMVs: {:.1}% overhead",
+        prep,
+        prep / per_spmv.max(1e-12),
+        report.spmv_count,
+        100.0 * prep / (report.wall_secs + prep)
+    );
+    Ok(())
+}
+
+fn bench_runs<S: ehyb::runtime::XlaScalar>(
+    specs: &[suite::MatrixSpec],
+    dev: &GpuDevice,
+) -> Vec<runner::MatrixRun> {
+    let mut runs = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let m64 = spec.build();
+        let m: Csr<S> = m64.cast();
+        let cfg = PreprocessConfig::default();
+        match runner::run_matrix(&spec.name, spec.category, &m, &cfg, dev) {
+            Ok(run) => {
+                eprintln!(
+                    "[{}/{}] {}: n={} nnz={} ehyb={:.1} GF er={:.3}",
+                    i + 1,
+                    specs.len(),
+                    spec.name,
+                    run.n,
+                    run.nnz,
+                    run.gflops_of("ehyb").unwrap_or(0.0),
+                    run.er_fraction
+                );
+                runs.push(run);
+            }
+            Err(e) => eprintln!("[{}/{}] {} FAILED: {e:#}", i + 1, specs.len(), spec.name),
+        }
+    }
+    runs
+}
+
+fn cmd_bench(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let scale = match opts.get("scale").map(String::as_str) {
+        Some("tiny") => Scale::Tiny,
+        Some("full") => Scale::Full,
+        Some("small") | None => Scale::from_env(),
+        Some(other) => anyhow::bail!("unknown scale {other}"),
+    };
+    let dev = GpuDevice::v100();
+    let out_dir = opts.get("out").cloned();
+    let emit = |name: &str, content: &str| -> anyhow::Result<()> {
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir)?;
+            let path = format!("{dir}/{name}");
+            std::fs::write(&path, content)?;
+            println!("wrote {path}");
+        } else {
+            println!("{content}");
+        }
+        Ok(())
+    };
+
+    if let Some(t) = opts.get("table") {
+        let specs = suite::suite94(scale);
+        match t.as_str() {
+            "1" => {
+                let runs = bench_runs::<f32>(&specs, &dev);
+                let tab = tables::speedup_table::<f32>(&runs);
+                emit(
+                    "table1_f32.md",
+                    &report::speedup_markdown(
+                        "Table 1 — EHYB speedups, single precision, 94 matrices",
+                        &tab,
+                    ),
+                )?;
+            }
+            "2" => {
+                let runs = bench_runs::<f64>(&specs, &dev);
+                let tab = tables::speedup_table::<f64>(&runs);
+                emit(
+                    "table2_f64.md",
+                    &report::speedup_markdown(
+                        "Table 2 — EHYB speedups, double precision, 94 matrices",
+                        &tab,
+                    ),
+                )?;
+            }
+            other => anyhow::bail!("unknown table {other}"),
+        }
+        return Ok(());
+    }
+
+    let fig = opts.get("fig").map(String::as_str).unwrap_or("2");
+    match fig {
+        "2" | "4" => {
+            let specs = suite::suite94(scale);
+            if fig == "2" {
+                let runs = bench_runs::<f32>(&specs, &dev);
+                let f = tables::figure_series::<f32>(&runs);
+                emit("fig2_f32_94.csv", &report::figure_csv(&f))?;
+                println!("{}", report::figure_summary(&f));
+            } else {
+                let runs = bench_runs::<f64>(&specs, &dev);
+                let f = tables::figure_series::<f64>(&runs);
+                emit("fig4_f64_94.csv", &report::figure_csv(&f))?;
+                println!("{}", report::figure_summary(&f));
+            }
+        }
+        "3" | "5" => {
+            let specs = suite::suite16(scale);
+            if fig == "3" {
+                let runs = bench_runs::<f32>(&specs, &dev);
+                let f = tables::figure_series::<f32>(&runs);
+                emit("fig3_f32_16.csv", &report::figure_csv(&f))?;
+                println!("{}", report::figure_summary(&f));
+            } else {
+                let runs = bench_runs::<f64>(&specs, &dev);
+                let f = tables::figure_series::<f64>(&runs);
+                emit("fig5_f64_16.csv", &report::figure_csv(&f))?;
+                println!("{}", report::figure_summary(&f));
+            }
+        }
+        "6" => {
+            let specs = suite::suite16(scale);
+            let runs = bench_runs::<f64>(&specs, &dev);
+            let rows = tables::fig6_rows(&runs);
+            emit("fig6_preprocessing.md", &report::fig6_markdown(&rows))?;
+        }
+        other => anyhow::bail!("unknown figure {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_ablation(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    use ehyb::harness::ablation;
+    let m = build_matrix(opts)?;
+    let cfg = preprocess_cfg(opts);
+    let dev = GpuDevice::v100();
+    let which = opts.get("which").map(String::as_str).unwrap_or("all");
+    if which == "cache" || which == "all" {
+        let rows = ablation::cache_and_cols(&m, &cfg, &dev)?;
+        println!("{}", report::ablation_markdown("Explicit cache × column width", &rows));
+    }
+    if which == "partitioner" || which == "all" {
+        let rows = ablation::partitioner_quality(&m, &cfg, &dev)?;
+        println!("{}", report::ablation_markdown("Partitioner quality", &rows));
+    }
+    if which == "sort" || which == "all" {
+        let rows = ablation::sort_ablation(&m, &cfg, &dev)?;
+        println!("{}", report::ablation_markdown("Descending-nnz reorder", &rows));
+    }
+    if which == "vecsize" || which == "all" {
+        let rows = ablation::vecsize_sweep(&m, &cfg, &dev, &[64, 128, 256, 512, 1024, 2048])?;
+        println!("{}", report::ablation_markdown("VecSize (cache size) sweep", &rows));
+    }
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! Undirected weighted graph in CSR (METIS xadj/adjncy) layout, built
+//! from a sparse matrix's symmetrized structure (paper §3.1: "the sparse
+//! matrix will be recognized as an undirected graph with each row/column
+//! as a vertex and each entry as an edge").
+
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Adjacency offsets, `len = nvtx + 1`.
+    pub xadj: Vec<u32>,
+    /// Neighbour lists (no self-loops).
+    pub adjncy: Vec<u32>,
+    /// Vertex weights (1 at the finest level; sums under contraction).
+    pub vwgt: Vec<u32>,
+    /// Edge weights (1 at the finest level; parallel edges merge).
+    pub adjwgt: Vec<u32>,
+}
+
+impl Graph {
+    pub fn nvtx(&self) -> usize {
+        self.xadj.len() - 1
+    }
+
+    pub fn nedges(&self) -> usize {
+        self.adjncy.len() / 2
+    }
+
+    pub fn total_vwgt(&self) -> u64 {
+        self.vwgt.iter().map(|&w| w as u64).sum()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (usize, u32)> + '_ {
+        let lo = self.xadj[v] as usize;
+        let hi = self.xadj[v + 1] as usize;
+        self.adjncy[lo..hi].iter().zip(&self.adjwgt[lo..hi]).map(|(&u, &w)| (u as usize, w))
+    }
+
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        (self.xadj[v + 1] - self.xadj[v]) as usize
+    }
+
+    /// Build from a square matrix's structure: symmetrize, drop the
+    /// diagonal, unit vertex/edge weights.
+    pub fn from_matrix_structure<S: Scalar>(m: &Csr<S>) -> Graph {
+        assert_eq!(m.nrows(), m.ncols(), "partitioning graph needs a square matrix");
+        let s = m.symmetrize_structure();
+        let n = s.nrows();
+        let mut xadj = vec![0u32; n + 1];
+        for i in 0..n {
+            let (cols, _) = s.row(i);
+            let deg = cols.iter().filter(|&&c| c as usize != i).count();
+            xadj[i + 1] = xadj[i] + deg as u32;
+        }
+        let mut adjncy = vec![0u32; xadj[n] as usize];
+        let mut pos = xadj.clone();
+        for i in 0..n {
+            let (cols, _) = s.row(i);
+            for &c in cols {
+                if c as usize != i {
+                    adjncy[pos[i] as usize] = c;
+                    pos[i] += 1;
+                }
+            }
+        }
+        let nadj = adjncy.len();
+        Graph { xadj, adjncy, vwgt: vec![1; n], adjwgt: vec![1; nadj] }
+    }
+
+    /// Total weight of edges crossing partitions (each edge counted once).
+    pub fn edgecut(&self, part: &[u32]) -> u64 {
+        let mut cut = 0u64;
+        for v in 0..self.nvtx() {
+            for (u, w) in self.neighbors(v) {
+                if part[v] != part[u] {
+                    cut += w as u64;
+                }
+            }
+        }
+        cut / 2
+    }
+
+    /// Per-part vertex-weight loads.
+    pub fn part_loads(&self, part: &[u32], k: usize) -> Vec<u64> {
+        let mut loads = vec![0u64; k];
+        for v in 0..self.nvtx() {
+            loads[part[v] as usize] += self.vwgt[v] as u64;
+        }
+        loads
+    }
+
+    /// A pseudo-peripheral vertex: BFS twice from an arbitrary start —
+    /// standard device to make BFS-band partitions long and thin.
+    pub fn pseudo_peripheral(&self, start: usize) -> usize {
+        let mut far = start;
+        for _ in 0..2 {
+            let order = self.bfs_order(far);
+            if let Some(&last) = order.last() {
+                far = last as usize;
+            }
+        }
+        far
+    }
+
+    /// BFS visitation order from `start`, visiting every component
+    /// (disconnected graphs restart from the lowest unvisited vertex).
+    pub fn bfs_order(&self, start: usize) -> Vec<u32> {
+        let n = self.nvtx();
+        let mut order = Vec::with_capacity(n);
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::new();
+        let mut next_unseen = 0usize;
+        let mut s = start.min(n.saturating_sub(1));
+        while order.len() < n {
+            if !seen[s] {
+                seen[s] = true;
+                queue.push_back(s);
+            }
+            while let Some(v) = queue.pop_front() {
+                order.push(v as u32);
+                for (u, _) in self.neighbors(v) {
+                    if !seen[u] {
+                        seen[u] = true;
+                        queue.push_back(u);
+                    }
+                }
+            }
+            // Next component.
+            while next_unseen < n && seen[next_unseen] {
+                next_unseen += 1;
+            }
+            if next_unseen >= n {
+                break;
+            }
+            s = next_unseen;
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{poisson1d, poisson2d};
+
+    #[test]
+    fn from_poisson1d() {
+        let g = Graph::from_matrix_structure(&poisson1d::<f64>(5));
+        assert_eq!(g.nvtx(), 5);
+        assert_eq!(g.nedges(), 4);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+    }
+
+    #[test]
+    fn no_self_loops() {
+        let g = Graph::from_matrix_structure(&poisson2d::<f64>(6, 6));
+        for v in 0..g.nvtx() {
+            assert!(g.neighbors(v).all(|(u, _)| u != v));
+        }
+    }
+
+    #[test]
+    fn edgecut_counts_each_edge_once() {
+        let g = Graph::from_matrix_structure(&poisson1d::<f64>(4));
+        // Parts {0,1} {2,3}: only edge (1,2) crosses.
+        assert_eq!(g.edgecut(&[0, 0, 1, 1]), 1);
+        assert_eq!(g.edgecut(&[0, 0, 0, 0]), 0);
+        assert_eq!(g.edgecut(&[0, 1, 0, 1]), 3);
+    }
+
+    #[test]
+    fn bfs_order_visits_all() {
+        let g = Graph::from_matrix_structure(&poisson2d::<f64>(5, 5));
+        let order = g.bfs_order(0);
+        assert_eq!(order.len(), 25);
+        let mut s = order.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..25).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn bfs_handles_disconnected() {
+        use crate::sparse::coo::Coo;
+        // Two disconnected dumbbells.
+        let m = Coo::<f64>::from_triplets(
+            4,
+            4,
+            vec![(0, 1, 1.0), (1, 0, 1.0), (2, 3, 1.0), (3, 2, 1.0)],
+        )
+        .unwrap()
+        .to_csr();
+        let g = Graph::from_matrix_structure(&m);
+        assert_eq!(g.bfs_order(0).len(), 4);
+    }
+
+    #[test]
+    fn pseudo_peripheral_on_path() {
+        let g = Graph::from_matrix_structure(&poisson1d::<f64>(10));
+        let p = g.pseudo_peripheral(5);
+        assert!(p == 0 || p == 9, "expected an end of the path, got {p}");
+    }
+
+    #[test]
+    fn part_loads_sum_to_total() {
+        let g = Graph::from_matrix_structure(&poisson2d::<f64>(4, 4));
+        let part: Vec<u32> = (0..16).map(|v| (v % 3) as u32).collect();
+        let loads = g.part_loads(&part, 3);
+        assert_eq!(loads.iter().sum::<u64>(), g.total_vwgt());
+    }
+}

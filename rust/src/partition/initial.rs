@@ -1,0 +1,156 @@
+//! Initial k-way partitioning of the coarsest graph: BFS-band growth.
+//! Vertices are visited in BFS order from a pseudo-peripheral seed and
+//! packed greedily into parts under a hard capacity. For mesh-like
+//! graphs this yields contiguous "bands" whose boundaries the FM
+//! refinement then polishes.
+
+use super::graph::Graph;
+
+/// Capacity-bounded BFS-band partition into `k` parts. `cap` is the
+/// maximum vertex weight per part; must satisfy `k * cap ≥ total_vwgt`.
+/// Returns `part[v] ∈ [0, k)`.
+pub fn bfs_band_partition(g: &Graph, k: usize, cap: u64) -> Vec<u32> {
+    let n = g.nvtx();
+    assert!(k >= 1);
+    assert!(
+        k as u64 * cap >= g.total_vwgt(),
+        "infeasible: k={k} cap={cap} total={}",
+        g.total_vwgt()
+    );
+    let seed = if n > 0 { g.pseudo_peripheral(0) } else { 0 };
+    let order = g.bfs_order(seed);
+    pack_in_order(g, &order, k, cap)
+}
+
+/// Pack vertices in the given visit order into k parts of capacity
+/// `cap`: fill the current part while it fits, advance otherwise; when
+/// fragmentation leaves no part with room (possible with weighted coarse
+/// vertices and zero slack), spill to the least-loaded part. Unit-weight
+/// graphs (the finest level) never spill; weighted coarse-level spills
+/// are repaired by [`super::refine::rebalance`] after projection.
+fn pack_in_order(g: &Graph, order: &[u32], k: usize, cap: u64) -> Vec<u32> {
+    let mut part = vec![0u32; g.nvtx()];
+    let mut loads = vec![0u64; k];
+    let mut cur = 0usize;
+    for &v0 in order {
+        let v = v0 as usize;
+        let w = g.vwgt[v] as u64;
+        if loads[cur] + w > cap {
+            if cur + 1 < k {
+                cur += 1;
+            }
+            if loads[cur] + w > cap {
+                // Fragmented: first-fit anywhere with room, else spill to
+                // the least-loaded part.
+                cur = (0..k).find(|&p| loads[p] + w <= cap).unwrap_or_else(|| {
+                    (0..k).min_by_key(|&p| loads[p]).unwrap()
+                });
+            }
+        }
+        part[v] = cur as u32;
+        loads[cur] += w;
+    }
+    part
+}
+
+/// Round-robin partition by vertex index — the "no partitioner" ablation
+/// baseline (what you get if you chunk rows naively).
+pub fn index_block_partition(g: &Graph, k: usize, cap: u64) -> Vec<u32> {
+    assert!(
+        k as u64 * cap >= g.total_vwgt(),
+        "infeasible: k={k} cap={cap} total={}",
+        g.total_vwgt()
+    );
+    let order: Vec<u32> = (0..g.nvtx() as u32).collect();
+    pack_in_order(g, &order, k, cap)
+}
+
+/// Random balanced partition — the worst-case ablation baseline.
+pub fn random_partition(g: &Graph, k: usize, cap: u64, seed: u64) -> Vec<u32> {
+    let n = g.nvtx();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut rng = crate::util::Xoshiro256::new(seed);
+    rng.shuffle(&mut order);
+    let mut part = vec![0u32; n];
+    let mut loads = vec![0u64; k];
+    let mut cur = 0usize;
+    for &v0 in &order {
+        let v = v0 as usize;
+        let w = g.vwgt[v] as u64;
+        let mut tries = 0;
+        while loads[cur] + w > cap && tries < k {
+            cur = (cur + 1) % k;
+            tries += 1;
+        }
+        part[v] = cur as u32;
+        loads[cur] += w;
+        cur = (cur + 1) % k;
+    }
+    part
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson2d;
+
+    fn grid_graph() -> Graph {
+        Graph::from_matrix_structure(&poisson2d::<f64>(16, 16))
+    }
+
+    fn check_capacity(g: &Graph, part: &[u32], k: usize, cap: u64) {
+        for (p, &load) in g.part_loads(part, k).iter().enumerate() {
+            assert!(load <= cap, "part {p} load {load} > cap {cap}");
+        }
+    }
+
+    #[test]
+    fn bfs_band_respects_capacity() {
+        let g = grid_graph();
+        let (k, cap) = (8, 32u64);
+        let part = bfs_band_partition(&g, k, cap);
+        check_capacity(&g, &part, k, cap);
+    }
+
+    #[test]
+    fn bfs_band_better_than_random() {
+        let g = grid_graph();
+        let (k, cap) = (8, 32u64);
+        let bfs = bfs_band_partition(&g, k, cap);
+        let rnd = random_partition(&g, k, cap, 1);
+        assert!(
+            g.edgecut(&bfs) < g.edgecut(&rnd),
+            "bfs={} random={}",
+            g.edgecut(&bfs),
+            g.edgecut(&rnd)
+        );
+    }
+
+    #[test]
+    fn index_block_respects_capacity() {
+        let g = grid_graph();
+        let part = index_block_partition(&g, 4, 64);
+        check_capacity(&g, &part, 4, 64);
+    }
+
+    #[test]
+    fn random_respects_capacity() {
+        let g = grid_graph();
+        let part = random_partition(&g, 4, 64, 3);
+        check_capacity(&g, &part, 4, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "infeasible")]
+    fn infeasible_capacity_panics() {
+        let g = grid_graph();
+        bfs_band_partition(&g, 2, 10);
+    }
+
+    #[test]
+    fn single_part() {
+        let g = grid_graph();
+        let part = bfs_band_partition(&g, 1, 256);
+        assert!(part.iter().all(|&p| p == 0));
+    }
+}

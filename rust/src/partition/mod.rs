@@ -1,0 +1,27 @@
+//! Multilevel k-way graph partitioning — the METIS substitute
+//! (DESIGN.md §4). Paper Algorithm 1 line 2 calls ParMETIS on the
+//! sparsity graph; here the same role is filled by a classical
+//! multilevel scheme:
+//!
+//! 1. **Coarsening** ([`matching`]): heavy-edge matching + contraction
+//!    until the graph is small.
+//! 2. **Initial partitioning** ([`initial`]): BFS-band growth from a
+//!    pseudo-peripheral seed, chunked into k capacity-bounded parts.
+//! 3. **Uncoarsening + refinement** ([`refine`]): project the partition
+//!    back level by level, improving it with greedy boundary FM moves
+//!    under a hard per-part capacity (EHYB needs every partition to fit
+//!    its x-slice cache: |part| ≤ VecSize).
+//!
+//! The quality metric that matters downstream is the **edge-cut
+//! fraction**: every cut edge becomes an ER entry (uncached vector
+//! access), so `PartitionResult::edgecut / total_edges` ≈ EHYB's
+//! `er_fraction`.
+
+pub mod graph;
+pub mod matching;
+pub mod initial;
+pub mod refine;
+pub mod kway;
+
+pub use graph::Graph;
+pub use kway::{partition_graph, PartitionConfig, PartitionMethod, PartitionResult};

@@ -1,0 +1,199 @@
+//! Greedy k-way boundary refinement (FM-style, no rollback): repeatedly
+//! move boundary vertices to the neighbouring part with the largest
+//! edge-cut gain, subject to the hard per-part capacity. A few passes per
+//! uncoarsening level, matching METIS's refinement budget.
+
+use super::graph::Graph;
+
+/// One refinement pass; returns the total gain achieved.
+/// `loads` is updated in place.
+pub fn refine_pass(g: &Graph, part: &mut [u32], loads: &mut [u64], cap: u64) -> i64 {
+    let n = g.nvtx();
+    let k = loads.len();
+    let mut total_gain = 0i64;
+    // Connectivity scratch: weight of v's edges into each part.
+    let mut conn = vec![0i64; k];
+    let mut touched: Vec<u32> = Vec::new();
+    for v in 0..n {
+        let pv = part[v] as usize;
+        // Compute connectivity to each adjacent part.
+        let mut is_boundary = false;
+        for (u, w) in g.neighbors(v) {
+            let pu = part[u] as usize;
+            if conn[pu] == 0 {
+                touched.push(pu as u32);
+            }
+            conn[pu] += w as i64;
+            if pu != pv {
+                is_boundary = true;
+            }
+        }
+        if is_boundary {
+            let internal = conn[pv];
+            let mut best: Option<(usize, i64)> = None;
+            for &t in &touched {
+                let t = t as usize;
+                if t == pv {
+                    continue;
+                }
+                let gain = conn[t] - internal;
+                if gain > 0
+                    && loads[t] + g.vwgt[v] as u64 <= cap
+                    && best.map(|(_, bg)| gain > bg).unwrap_or(true)
+                {
+                    best = Some((t, gain));
+                }
+            }
+            if let Some((t, gain)) = best {
+                loads[pv] -= g.vwgt[v] as u64;
+                loads[t] += g.vwgt[v] as u64;
+                part[v] = t as u32;
+                total_gain += gain;
+            }
+        }
+        for &t in &touched {
+            conn[t as usize] = 0;
+        }
+        touched.clear();
+    }
+    total_gain
+}
+
+/// Run up to `max_passes` refinement passes, stopping early when a pass
+/// yields no gain.
+pub fn refine(g: &Graph, part: &mut [u32], k: usize, cap: u64, max_passes: usize) -> i64 {
+    let mut loads = g.part_loads(part, k);
+    let mut total = 0i64;
+    for _ in 0..max_passes {
+        let gain = refine_pass(g, part, &mut loads, cap);
+        total += gain;
+        if gain == 0 {
+            break;
+        }
+    }
+    total
+}
+
+/// Repair capacity violations: move vertices out of overfull parts into
+/// parts with room, choosing moves that hurt the cut least (lowest
+/// internal connectivity, highest connectivity to a receiving part).
+/// With unit vertex weights and `k*cap ≥ n` this always terminates with
+/// every part ≤ cap.
+pub fn rebalance(g: &Graph, part: &mut [u32], k: usize, cap: u64) {
+    let mut loads = g.part_loads(part, k);
+    loop {
+        let Some(src) = (0..k).find(|&p| loads[p] > cap) else { return };
+        // Candidates in src, cheapest-to-move first.
+        let mut cands: Vec<(i64, u32, usize)> = Vec::new(); // (internal-external, vwgt, v)
+        for v in 0..g.nvtx() {
+            if part[v] as usize != src {
+                continue;
+            }
+            let mut internal = 0i64;
+            let mut best_ext = 0i64;
+            for (u, w) in g.neighbors(v) {
+                if part[u] as usize == src {
+                    internal += w as i64;
+                } else {
+                    best_ext = best_ext.max(w as i64);
+                }
+            }
+            cands.push((internal - best_ext, g.vwgt[v], v));
+        }
+        cands.sort();
+        let mut moved = false;
+        for &(_, w, v) in &cands {
+            if loads[src] <= cap {
+                break;
+            }
+            // Prefer the connected non-full part with the most room gain;
+            // fall back to the globally least-loaded part with room.
+            let mut target: Option<usize> = None;
+            let mut best_conn = -1i64;
+            for (u, ew) in g.neighbors(v) {
+                let p = part[u] as usize;
+                if p != src && loads[p] + w as u64 <= cap && (ew as i64) > best_conn {
+                    best_conn = ew as i64;
+                    target = Some(p);
+                }
+            }
+            if target.is_none() {
+                target = (0..k).filter(|&p| p != src && loads[p] + w as u64 <= cap).min_by_key(|&p| loads[p]);
+            }
+            if let Some(t) = target {
+                loads[src] -= w as u64;
+                loads[t] += w as u64;
+                part[v] = t as u32;
+                moved = true;
+            }
+        }
+        if !moved {
+            // No single vertex fits anywhere (heavy coarse vertices):
+            // give up — the caller rebalances again at a finer level
+            // where weights shrink.
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::initial::random_partition;
+    use crate::sparse::gen::poisson2d;
+
+    #[test]
+    fn rebalance_fixes_overfull_parts() {
+        let g = Graph::from_matrix_structure(&poisson2d::<f64>(8, 8));
+        // Everything crammed into part 0.
+        let mut part = vec![0u32; 64];
+        rebalance(&g, &mut part, 4, 16);
+        let loads = g.part_loads(&part, 4);
+        assert!(loads.iter().all(|&l| l <= 16), "{loads:?}");
+    }
+
+    #[test]
+    fn refinement_never_worsens_cut() {
+        let g = Graph::from_matrix_structure(&poisson2d::<f64>(16, 16));
+        let (k, cap) = (8usize, 36u64);
+        let mut part = random_partition(&g, k, cap, 11);
+        let before = g.edgecut(&part);
+        refine(&g, &mut part, k, cap, 8);
+        let after = g.edgecut(&part);
+        assert!(after <= before, "cut got worse: {before} -> {after}");
+        // Random partitions of a grid have lots of slack; expect real gains.
+        assert!(after < before, "no improvement at all is suspicious");
+    }
+
+    #[test]
+    fn refinement_respects_capacity() {
+        let g = Graph::from_matrix_structure(&poisson2d::<f64>(12, 12));
+        let (k, cap) = (6usize, 26u64);
+        let mut part = random_partition(&g, k, cap, 5);
+        refine(&g, &mut part, k, cap, 8);
+        for (p, &load) in g.part_loads(&part, k).iter().enumerate() {
+            assert!(load <= cap, "part {p}: {load} > {cap}");
+        }
+    }
+
+    #[test]
+    fn gain_reported_matches_cut_delta() {
+        let g = Graph::from_matrix_structure(&poisson2d::<f64>(10, 10));
+        let (k, cap) = (4usize, 30u64);
+        let mut part = random_partition(&g, k, cap, 9);
+        let before = g.edgecut(&part) as i64;
+        let gain = refine(&g, &mut part, k, cap, 16);
+        let after = g.edgecut(&part) as i64;
+        assert_eq!(before - after, gain);
+    }
+
+    #[test]
+    fn already_optimal_is_stable() {
+        let g = Graph::from_matrix_structure(&poisson2d::<f64>(8, 8));
+        // Perfect halves of the grid (columns 0-3 vs 4-7).
+        let mut part: Vec<u32> = (0..64).map(|v| if v % 8 < 4 { 0 } else { 1 }).collect();
+        let before = g.edgecut(&part);
+        refine(&g, &mut part, 2, 40, 4);
+        assert!(g.edgecut(&part) <= before);
+    }
+}

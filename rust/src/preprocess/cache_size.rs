@@ -1,0 +1,125 @@
+//! Paper §3.3 equations (1)–(2): choose the partition count `K × P` and
+//! the input-vector cache size `VecSize`.
+//!
+//! > K = MIN_{K∈Z} ( dimension × τ / (K × P) < SHM_max )
+//! > VecSize = dimension / (K × P)
+//!
+//! τ is the element width, P the processor count. Intent: use *all*
+//! compute units (partitions a multiple of P) while making each
+//! partition's x-slice as large as fits the scratchpad — bigger slices
+//! mean fewer partitions, fewer cut edges, a smaller ER part.
+
+use crate::sparse::scalar::Scalar;
+
+/// Device parameters that feed the sizing equations and the GPU cost
+/// model. Defaults model the paper's Tesla V100-SXM2.
+#[derive(Clone, Debug)]
+pub struct DeviceParams {
+    /// Streaming-multiprocessor (or TPU-core) count — the paper's P.
+    pub processors: usize,
+    /// Usable scratchpad bytes per block (V100: 96 KiB shared memory;
+    /// the paper reserves it entirely for the x-slice cache).
+    pub shm_bytes: usize,
+}
+
+impl DeviceParams {
+    /// Tesla V100-SXM2: 80 SMs, 96 KiB shared memory per SM.
+    pub fn v100() -> Self {
+        Self { processors: 80, shm_bytes: 96 * 1024 }
+    }
+
+    /// TPU-core analogue used by the L1 Pallas kernel: treat one core's
+    /// VMEM budget for the cached x-slice as 512 KiB out of ~16 MiB
+    /// (the rest holds the ELL value/col blocks being streamed), with
+    /// 2 cores standing in for "processors" on the single-host testbed.
+    pub fn tpu_core() -> Self {
+        Self { processors: 2, shm_bytes: 512 * 1024 }
+    }
+}
+
+/// Result of the sizing equations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CachePlan {
+    /// Paper's K (0 when VecSize was overridden).
+    pub k: usize,
+    /// Rows of x cached per partition (multiple of the slice height,
+    /// ≤ 2^16 so column indices fit u16 — §3.4).
+    pub vec_size: usize,
+    /// Partition count = ceil(n / vec_size) ≈ K × P.
+    pub num_parts: usize,
+}
+
+/// Apply equations (1)–(2), then round `VecSize` to hardware constraints:
+/// a multiple of `slice_height`, at most 2¹⁶ (u16 columns), at least one
+/// slice.
+pub fn cache_plan<S: Scalar>(n: usize, slice_height: usize, dev: &DeviceParams) -> CachePlan {
+    let tau = S::BYTES;
+    let p = dev.processors.max(1);
+    // Smallest K with n*tau/(K*P) < shm  ⇔  K > n*tau/(shm*P).
+    let k = (n * tau) / (dev.shm_bytes * p) + 1;
+    let parts_raw = k * p;
+    let vec_raw = n.div_ceil(parts_raw).max(1);
+    // Round up to slice height; clamp to the u16 index space.
+    let mut vec_size = vec_raw.div_ceil(slice_height) * slice_height;
+    vec_size = vec_size.min(1 << 16);
+    // Shared-memory feasibility after rounding (rounding up can only help
+    // K satisfy eq. (1) since VecSize*τ ≤ shm is re-checked here).
+    while vec_size * tau > dev.shm_bytes && vec_size > slice_height {
+        vec_size -= slice_height;
+    }
+    let num_parts = n.div_ceil(vec_size);
+    CachePlan { k, vec_size, num_parts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v100_f32_poisson3d_scale() {
+        // Paper-scale example: n = 1,270,432 (atmosmodj), f32 on V100.
+        // n*tau = 5.08 MB; shm*P = 96KiB*80 = 7.86 MB => K = 1,
+        // VecSize ≈ ceil(n/80) ≈ 15881 -> rounded to 15904.
+        let plan = cache_plan::<f32>(1_270_432, 32, &DeviceParams::v100());
+        assert_eq!(plan.k, 1);
+        assert!(plan.vec_size * 4 < 96 * 1024);
+        assert!(plan.vec_size % 32 == 0);
+        assert!(plan.num_parts >= 80);
+    }
+
+    #[test]
+    fn v100_f64_doubles_k_eventually() {
+        // f64 doubles τ: for a large enough n, K must grow.
+        let n = 10_000_000;
+        let p32 = cache_plan::<f32>(n, 32, &DeviceParams::v100());
+        let p64 = cache_plan::<f64>(n, 32, &DeviceParams::v100());
+        assert!(p64.k >= p32.k);
+        assert!(p64.vec_size * 8 <= 96 * 1024);
+    }
+
+    #[test]
+    fn vec_size_fits_scratchpad() {
+        for &n in &[1_000usize, 100_000, 1_000_000, 20_000_000] {
+            let plan = cache_plan::<f64>(n, 32, &DeviceParams::v100());
+            assert!(plan.vec_size * 8 <= 96 * 1024, "n={n}: {:?}", plan);
+            assert_eq!(plan.vec_size % 32, 0);
+            assert!(plan.num_parts * plan.vec_size >= n);
+        }
+    }
+
+    #[test]
+    fn u16_bound_respected() {
+        // Huge scratchpad would allow VecSize > 2^16; the clamp must hold
+        // so §3.4's u16 columns stay valid.
+        let dev = DeviceParams { processors: 1, shm_bytes: 1 << 30 };
+        let plan = cache_plan::<f32>(1_000_000, 32, &dev);
+        assert!(plan.vec_size <= 1 << 16);
+    }
+
+    #[test]
+    fn tiny_matrix() {
+        let plan = cache_plan::<f64>(100, 32, &DeviceParams::v100());
+        assert!(plan.vec_size >= 32);
+        assert!(plan.num_parts * plan.vec_size >= 100);
+    }
+}

@@ -1,0 +1,417 @@
+//! EHYB preprocessing — paper Algorithms 1 and 2.
+//!
+//! Pipeline (`EhybPlan::build`):
+//!
+//! 1. **Cache sizing** ([`cache_size`]): paper equations (1)–(2) pick the
+//!    partition count `K × P` and the x-slice size `VecSize` from the
+//!    matrix dimension, element width τ, processor count P, and the
+//!    shared-memory (VMEM budget) cap.
+//! 2. **Partitioning** (Algorithm 1 line 2): the matrix structure graph
+//!    goes through [`crate::partition::partition_graph`] with hard
+//!    capacity `VecSize`.
+//! 3. **Counting + reordering** (Algorithm 1 lines 3–27): per row, count
+//!    in-partition vs out-of-partition entries; within each partition
+//!    sort rows by *descending* in-partition count (kills slice padding
+//!    and warp divergence); ER rows sort globally by descending count;
+//!    emit `ReorderTable` (perm), `yIdxER`, and the slice position
+//!    vectors.
+//! 4. **Reordering phase** (Algorithm 2): scatter values/columns into the
+//!    sliced-ELL arrays (partition-local u16 columns) and the ER arrays.
+//!
+//! The two phases are timed separately — Figure 6 reports exactly this
+//! decomposition (partitioning ≈ 400–1500× one SpMV, reordering 50–400×).
+
+pub mod cache_size;
+pub mod timing;
+
+use crate::partition::{partition_graph, Graph, PartitionConfig, PartitionResult};
+use crate::sparse::csr::Csr;
+use crate::sparse::ehyb::EhybMatrix;
+use crate::sparse::scalar::Scalar;
+use crate::util::Timer;
+pub use cache_size::{cache_plan, CachePlan, DeviceParams};
+pub use timing::PreprocessTimings;
+
+/// Tunables for the preprocessing pipeline.
+#[derive(Clone, Debug)]
+pub struct PreprocessConfig {
+    /// Warp size on the target device; slice height of the ELL part.
+    pub slice_height: usize,
+    /// Device model used by equations (1)–(2).
+    pub device: DeviceParams,
+    /// Override VecSize directly (testing / ablations); must be a
+    /// multiple of `slice_height`.
+    pub vec_size_override: Option<usize>,
+    /// Graph-partitioner settings.
+    pub partition: PartitionConfig,
+    /// Paper's descending-nnz in-partition sort (ablation §7.4 turns it
+    /// off to measure slice-padding and divergence cost).
+    pub sort_descending: bool,
+}
+
+impl Default for PreprocessConfig {
+    fn default() -> Self {
+        Self {
+            slice_height: 32,
+            device: DeviceParams::v100(),
+            vec_size_override: None,
+            partition: PartitionConfig::default(),
+            sort_descending: true,
+        }
+    }
+}
+
+/// Output of preprocessing: the EHYB matrix plus provenance.
+#[derive(Clone, Debug)]
+pub struct EhybPlan<S: Scalar> {
+    pub matrix: EhybMatrix<S>,
+    pub partition: PartitionResult,
+    pub cache: CachePlan,
+    pub timings: PreprocessTimings,
+}
+
+impl<S: Scalar> EhybPlan<S> {
+    /// Run the full preprocessing pipeline on a square CSR matrix.
+    pub fn build(m: &Csr<S>, cfg: &PreprocessConfig) -> crate::Result<EhybPlan<S>> {
+        anyhow::ensure!(m.nrows() == m.ncols(), "EHYB requires a square matrix");
+        anyhow::ensure!(m.nrows() > 0, "empty matrix");
+        let n = m.nrows();
+        let h = cfg.slice_height;
+
+        // --- Equations (1)-(2): partition count and cache size. ---
+        let cache = match cfg.vec_size_override {
+            Some(v) => {
+                anyhow::ensure!(v % h == 0 && v <= 1 << 16, "bad vec_size override {v}");
+                CachePlan { vec_size: v, num_parts: n.div_ceil(v), k: 0 }
+            }
+            None => cache_plan::<S>(n, h, &cfg.device),
+        };
+        let vec_size = cache.vec_size;
+        let num_parts = cache.num_parts;
+
+        // --- Algorithm 1 line 2: graph partitioning (timed). ---
+        let t = Timer::start();
+        let graph = Graph::from_matrix_structure(m);
+        let partition = partition_graph(&graph, num_parts, vec_size as u64, &cfg.partition);
+        let partition_secs = t.elapsed_secs();
+
+        // --- Algorithm 1 lines 3-27 + Algorithm 2 (timed as "reorder"). ---
+        let t = Timer::start();
+        let matrix = assemble(m, &partition.assignment, num_parts, vec_size, h, cfg.sort_descending);
+        let reorder_secs = t.elapsed_secs();
+
+        debug_assert!(matrix.validate().is_ok(), "{:?}", matrix.validate());
+        Ok(EhybPlan {
+            matrix,
+            partition,
+            cache,
+            timings: PreprocessTimings { partition_secs, reorder_secs },
+        })
+    }
+}
+
+/// Algorithm 1 (counting, sorting, metadata) + Algorithm 2 (scatter).
+fn assemble<S: Scalar>(
+    m: &Csr<S>,
+    assignment: &[u32],
+    num_parts: usize,
+    vec_size: usize,
+    h: usize,
+    sort_descending: bool,
+) -> EhybMatrix<S> {
+    let n = m.nrows();
+    let padded = num_parts * vec_size;
+
+    // Members of each partition (original row ids).
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); num_parts];
+    for v in 0..n {
+        members[assignment[v] as usize].push(v as u32);
+    }
+
+    // Algorithm 1 lines 3-15: count in-partition (ELL) and
+    // out-of-partition (ER) entries per row.
+    let mut ell_len = vec![0u32; n];
+    let mut er_len = vec![0u32; n];
+    for row in 0..n {
+        let (cols, _) = m.row(row);
+        let pr = assignment[row];
+        for &c in cols {
+            if assignment[c as usize] == pr {
+                ell_len[row] += 1;
+            } else {
+                er_len[row] += 1;
+            }
+        }
+    }
+
+    // Algorithm 1 lines 17-19: per-partition descending sort by ELL count
+    // => ReorderTable (perm). Ties broken by original index for
+    // determinism.
+    let mut perm = vec![0u32; n];
+    let mut iperm = vec![u32::MAX; padded];
+    for (p, rows) in members.iter_mut().enumerate() {
+        if sort_descending {
+            rows.sort_by_key(|&r| (std::cmp::Reverse(ell_len[r as usize]), r));
+        }
+        for (rank, &r) in rows.iter().enumerate() {
+            let new = p * vec_size + rank;
+            perm[r as usize] = new as u32;
+            iperm[new] = r;
+        }
+    }
+    // Padding rows map to a sentinel beyond n; give them self-consistent
+    // iperm values pointing past n (unpermute skips them).
+    for (new, ip) in iperm.iter_mut().enumerate() {
+        if *ip == u32::MAX {
+            *ip = (n + new) as u32; // >= n => skipped by unpermute
+        }
+    }
+
+    // Slice widths for the ELL part (paper WidthELL / PositionELL).
+    let spp = vec_size / h;
+    let num_slices = num_parts * spp;
+    let mut slice_width = vec![0u32; num_slices];
+    for (p, rows) in members.iter().enumerate() {
+        for (rank, &r) in rows.iter().enumerate() {
+            let s = p * spp + rank / h;
+            slice_width[s] = slice_width[s].max(ell_len[r as usize]);
+        }
+    }
+    let mut slice_ptr = vec![0u32; num_slices + 1];
+    for s in 0..num_slices {
+        slice_ptr[s + 1] = slice_ptr[s] + slice_width[s] * h as u32;
+    }
+    let ell_total = slice_ptr[num_slices] as usize;
+
+    // Algorithm 1 line 16 + lines 23-26: ER rows sorted by descending ER
+    // count (globally), yIdxER maps ER slot -> new row index.
+    let mut er_rows_list: Vec<u32> = (0..n as u32).filter(|&r| er_len[r as usize] > 0).collect();
+    er_rows_list.sort_by_key(|&r| (std::cmp::Reverse(er_len[r as usize]), r));
+    let er_rows = er_rows_list.len();
+    let y_idx_er: Vec<u32> = er_rows_list.iter().map(|&r| perm[r as usize]).collect();
+
+    let er_slices = er_rows.div_ceil(h);
+    let mut er_slice_width = vec![0u32; er_slices];
+    for (j, &r) in er_rows_list.iter().enumerate() {
+        let s = j / h;
+        er_slice_width[s] = er_slice_width[s].max(er_len[r as usize]);
+    }
+    let mut er_slice_ptr = vec![0u32; er_slices + 1];
+    for s in 0..er_slices {
+        er_slice_ptr[s + 1] = er_slice_ptr[s] + er_slice_width[s] * h as u32;
+    }
+    let er_total = er_slice_ptr[er_slices] as usize;
+
+    // --- Algorithm 2: scatter into the ELL and ER arrays. ---
+    // Padding: col 0 / val 0 (gather-safe, numerically inert).
+    let mut ell_cols = vec![0u16; ell_total];
+    let mut ell_vals = vec![S::ZERO; ell_total];
+    let mut er_cols = vec![0u32; er_total];
+    let mut er_vals = vec![S::ZERO; er_total];
+
+    // Position of each ER row in the ER layout.
+    let mut er_rank = vec![u32::MAX; n];
+    for (j, &r) in er_rows_list.iter().enumerate() {
+        er_rank[r as usize] = j as u32;
+    }
+
+    let mut ell_nnz = 0usize;
+    let mut er_nnz = 0usize;
+    for row in 0..n {
+        let (cols, vals) = m.row(row);
+        let new_row = perm[row] as usize;
+        let p = new_row / vec_size;
+        let lane = new_row % h;
+        let s = p * spp + (new_row % vec_size) / h;
+        let ell_base = slice_ptr[s] as usize;
+        let part_base = (p * vec_size) as u32;
+        let mut k1 = 0usize; // Algorithm 2: k1 = in-partition entry counter
+        let mut k2 = 0usize; // k2 = ER entry counter
+        for (&c, &v) in cols.iter().zip(vals) {
+            let nc = perm[c as usize];
+            if assignment[c as usize] as usize == p {
+                let idx = ell_base + k1 * h + lane;
+                ell_cols[idx] = (nc - part_base) as u16;
+                ell_vals[idx] = v;
+                k1 += 1;
+                ell_nnz += 1;
+            } else {
+                let j = er_rank[row] as usize;
+                let es = j / h;
+                let elane = j % h;
+                let idx = er_slice_ptr[es] as usize + k2 * h + elane;
+                er_cols[idx] = nc;
+                er_vals[idx] = v;
+                k2 += 1;
+                er_nnz += 1;
+            }
+        }
+        debug_assert_eq!(k1 as u32, ell_len[row]);
+        debug_assert_eq!(k2 as u32, er_len[row]);
+    }
+
+    EhybMatrix {
+        n,
+        num_parts,
+        vec_size,
+        slice_height: h,
+        slice_ptr,
+        slice_width,
+        ell_cols,
+        ell_vals,
+        ell_nnz,
+        er_slice_ptr,
+        er_slice_width,
+        er_rows,
+        er_cols,
+        er_vals,
+        y_idx_er,
+        er_nnz,
+        perm,
+        iperm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::PartitionMethod;
+    use crate::sparse::gen::{circuit, poisson2d, poisson3d, unstructured_mesh};
+    use crate::util::check::assert_allclose;
+
+    fn roundtrip<SM: Fn() -> Csr<f64>>(mk: SM, cfg: &PreprocessConfig) {
+        let m = mk();
+        let plan = EhybPlan::build(&m, cfg).unwrap();
+        plan.matrix.validate().unwrap();
+        let n = m.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 31 + 7) % 17) as f64 * 0.25 - 2.0).collect();
+        let mut y_ref = vec![0.0; n];
+        m.spmv(&x, &mut y_ref);
+        let mut y = vec![0.0; n];
+        plan.matrix.spmv(&x, &mut y);
+        assert_allclose(&y, &y_ref, 1e-10, 1e-10).unwrap();
+        // nnz conservation.
+        assert_eq!(plan.matrix.nnz(), m.nnz());
+    }
+
+    fn small_cfg(vec_size: usize) -> PreprocessConfig {
+        PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() }
+    }
+
+    #[test]
+    fn roundtrip_poisson2d() {
+        roundtrip(|| poisson2d::<f64>(20, 20), &small_cfg(64));
+    }
+
+    #[test]
+    fn roundtrip_poisson3d() {
+        roundtrip(|| poisson3d::<f64>(8, 8, 8), &small_cfg(128));
+    }
+
+    #[test]
+    fn roundtrip_unstructured() {
+        roundtrip(|| unstructured_mesh::<f64>(24, 24, 0.5, 3), &small_cfg(96));
+    }
+
+    #[test]
+    fn roundtrip_circuit_with_hubs() {
+        roundtrip(|| circuit::<f64>(700, 4, 0.03, 9), &small_cfg(64));
+    }
+
+    #[test]
+    fn roundtrip_non_multiple_dimension() {
+        roundtrip(|| poisson2d::<f64>(17, 13), &small_cfg(32));
+    }
+
+    #[test]
+    fn roundtrip_default_device_sizing() {
+        // No override: equations (1)-(2) with the V100 model.
+        roundtrip(|| poisson2d::<f64>(30, 30), &PreprocessConfig::default());
+    }
+
+    #[test]
+    fn roundtrip_all_partition_methods() {
+        for method in [
+            PartitionMethod::Multilevel,
+            PartitionMethod::BfsBand,
+            PartitionMethod::IndexBlock,
+            PartitionMethod::Random,
+        ] {
+            let cfg = PreprocessConfig {
+                vec_size_override: Some(64),
+                partition: PartitionConfig { method, ..Default::default() },
+                ..Default::default()
+            };
+            roundtrip(|| poisson2d::<f64>(16, 16), &cfg);
+        }
+    }
+
+    #[test]
+    fn roundtrip_without_descending_sort() {
+        let cfg = PreprocessConfig {
+            vec_size_override: Some(64),
+            sort_descending: false,
+            ..Default::default()
+        };
+        roundtrip(|| unstructured_mesh::<f64>(16, 16, 0.5, 5), &cfg);
+    }
+
+    #[test]
+    fn descending_sort_reduces_fill() {
+        let m = unstructured_mesh::<f64>(32, 32, 1.0, 11);
+        let on = EhybPlan::build(&m, &small_cfg(128)).unwrap();
+        let off = EhybPlan::build(
+            &m,
+            &PreprocessConfig {
+                vec_size_override: Some(128),
+                sort_descending: false,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            on.matrix.ell_fill_ratio() <= off.matrix.ell_fill_ratio(),
+            "sorted fill {} > unsorted {}",
+            on.matrix.ell_fill_ratio(),
+            off.matrix.ell_fill_ratio()
+        );
+    }
+
+    #[test]
+    fn multilevel_has_lower_er_fraction_than_random() {
+        let m = unstructured_mesh::<f64>(32, 32, 0.3, 13);
+        let mk = |method| {
+            let cfg = PreprocessConfig {
+                vec_size_override: Some(128),
+                partition: PartitionConfig { method, ..Default::default() },
+                ..Default::default()
+            };
+            EhybPlan::build(&m, &cfg).unwrap().matrix.er_fraction()
+        };
+        let ml = mk(PartitionMethod::Multilevel);
+        let rd = mk(PartitionMethod::Random);
+        assert!(ml < rd, "multilevel {ml} >= random {rd}");
+    }
+
+    #[test]
+    fn timings_populated() {
+        let m = poisson2d::<f64>(24, 24);
+        let plan = EhybPlan::build(&m, &small_cfg(64)).unwrap();
+        assert!(plan.timings.partition_secs >= 0.0);
+        assert!(plan.timings.reorder_secs > 0.0);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        use crate::sparse::coo::Coo;
+        let m = Coo::<f64>::new(3, 4).to_csr();
+        assert!(EhybPlan::build(&m, &PreprocessConfig::default()).is_err());
+    }
+
+    #[test]
+    fn u16_cols_within_partition() {
+        let m = poisson2d::<f64>(24, 24);
+        let plan = EhybPlan::build(&m, &small_cfg(64)).unwrap();
+        assert!(plan.matrix.ell_cols.iter().all(|&c| (c as usize) < 64));
+    }
+}

@@ -1,0 +1,56 @@
+//! Preprocessing time decomposition — the quantity Figure 6 reports in
+//! units of a single SpMV.
+
+/// Wall-clock seconds of the two preprocessing phases.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PreprocessTimings {
+    /// Graph partitioning (Algorithm 1 line 2).
+    pub partition_secs: f64,
+    /// Counting, sorting, metadata and the Algorithm 2 scatter.
+    pub reorder_secs: f64,
+}
+
+impl PreprocessTimings {
+    pub fn total_secs(&self) -> f64 {
+        self.partition_secs + self.reorder_secs
+    }
+
+    /// Express the phases as multiples of one SpMV — Figure 6's y-axis.
+    pub fn in_spmv_units(&self, spmv_secs: f64) -> SpmvUnits {
+        let s = spmv_secs.max(1e-12);
+        SpmvUnits {
+            partition: self.partition_secs / s,
+            reorder: self.reorder_secs / s,
+            total: self.total_secs() / s,
+        }
+    }
+}
+
+/// Figure 6 data point.
+#[derive(Clone, Copy, Debug)]
+pub struct SpmvUnits {
+    pub partition: f64,
+    pub reorder: f64,
+    pub total: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units_scale() {
+        let t = PreprocessTimings { partition_secs: 1.0, reorder_secs: 0.25 };
+        let u = t.in_spmv_units(0.001);
+        assert!((u.partition - 1000.0).abs() < 1e-9);
+        assert!((u.reorder - 250.0).abs() < 1e-9);
+        assert!((u.total - 1250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_spmv_guarded() {
+        let t = PreprocessTimings { partition_secs: 1.0, reorder_secs: 1.0 };
+        let u = t.in_spmv_units(0.0);
+        assert!(u.total.is_finite());
+    }
+}

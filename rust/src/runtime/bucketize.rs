@@ -1,0 +1,222 @@
+//! Marshal a preprocessed [`EhybMatrix`] into the dense bucket-shaped
+//! arrays an AOT artifact expects (see `python/compile/model.py`
+//! for the argument contract):
+//!
+//! * `ell_cols`/`ell_vals`: `(P, W, R)`, partition-major, width-major,
+//!   row-within-partition last; partition-local i32 columns.
+//! * `er_cols`/`er_vals`: `(E, WE)` with **bucket-global** columns.
+//! * `er_yidx`: `(E,)` bucket-global output rows.
+//!
+//! Bucket-global index of (partition p, local q) is `p * R + q` — note
+//! R is the *bucket's* row stride, not the matrix's `vec_size`, so all
+//! new-order indices are remapped here.
+
+use super::manifest::BucketSpec;
+use crate::sparse::ehyb::EhybMatrix;
+use crate::sparse::scalar::Scalar;
+
+/// Bucket-shaped arrays plus the old-order ↔ bucket-order permutation.
+#[derive(Clone, Debug)]
+pub struct BucketizedEhyb<S: Scalar> {
+    pub spec: BucketSpec,
+    /// Original (unpadded) dimension.
+    pub n: usize,
+    pub ell_cols: Vec<i32>,
+    pub ell_vals: Vec<S>,
+    pub er_cols: Vec<i32>,
+    pub er_vals: Vec<S>,
+    pub er_yidx: Vec<i32>,
+    /// `perm[old_row] = bucket index`.
+    pub perm: Vec<u32>,
+}
+
+impl<S: Scalar> BucketizedEhyb<S> {
+    /// Lay `m` out in `spec`'s shapes. Fails if the matrix does not fit.
+    pub fn build(m: &EhybMatrix<S>, spec: &BucketSpec) -> crate::Result<Self> {
+        let max_w = m.slice_width.iter().copied().max().unwrap_or(0) as usize;
+        let max_er_w = m.er_slice_width.iter().copied().max().unwrap_or(0) as usize;
+        anyhow::ensure!(
+            spec.fits(m.num_parts, m.vec_size, max_w, m.er_rows, max_er_w),
+            "matrix (parts={} vec={} w={} er={}x{}) does not fit bucket {} (p={} r={} w={} e={} we={})",
+            m.num_parts,
+            m.vec_size,
+            max_w,
+            m.er_rows,
+            max_er_w,
+            spec.name,
+            spec.p,
+            spec.r,
+            spec.w,
+            spec.e,
+            spec.we,
+        );
+        let (pb, wb, rb) = (spec.p, spec.w, spec.r);
+        let h = m.slice_height;
+        let spp = m.slices_per_part();
+
+        // ELL: (P, W, R) with padding col=0/val=0.
+        let mut ell_cols = vec![0i32; pb * wb * rb];
+        let mut ell_vals = vec![S::ZERO; pb * wb * rb];
+        for p in 0..m.num_parts {
+            for ls in 0..spp {
+                let s = p * spp + ls;
+                let base = m.slice_ptr[s] as usize;
+                let w = m.slice_width[s] as usize;
+                for lane in 0..h {
+                    let q = ls * h + lane; // row within partition
+                    for k in 0..w {
+                        let idx = base + k * h + lane;
+                        let dst = (p * wb + k) * rb + q;
+                        ell_cols[dst] = m.ell_cols[idx] as i32;
+                        ell_vals[dst] = m.ell_vals[idx];
+                    }
+                }
+            }
+        }
+
+        // Remap a matrix new-order index (p*vec_size + q) to bucket order
+        // (p*R + q).
+        let remap = |new: u32| -> i32 {
+            let p = new as usize / m.vec_size;
+            let q = new as usize % m.vec_size;
+            (p * rb + q) as i32
+        };
+
+        // ER: (E, WE); padding rows keep yidx=0 with all-zero values.
+        let mut er_cols = vec![0i32; spec.e * spec.we];
+        let mut er_vals = vec![S::ZERO; spec.e * spec.we];
+        let mut er_yidx = vec![0i32; spec.e];
+        for j in 0..m.er_rows {
+            let s = j / h;
+            let lane = j % h;
+            let base = m.er_slice_ptr[s] as usize;
+            let w = m.er_slice_width[s] as usize;
+            er_yidx[j] = remap(m.y_idx_er[j]);
+            for k in 0..w {
+                let idx = base + k * h + lane;
+                // Skip stored padding (val 0) to keep gathers tight.
+                er_cols[j * spec.we + k] = remap(m.er_cols[idx]);
+                er_vals[j * spec.we + k] = m.er_vals[idx];
+            }
+        }
+
+        let perm: Vec<u32> = (0..m.n).map(|old| remap(m.perm[old]) as u32).collect();
+        Ok(Self { spec: spec.clone(), n: m.n, ell_cols, ell_vals, er_cols, er_vals, er_yidx, perm })
+    }
+
+    /// Old-order x → bucket-order padded xp.
+    pub fn permute_x(&self, x: &[S]) -> Vec<S> {
+        assert_eq!(x.len(), self.n);
+        let mut xp = vec![S::ZERO; self.spec.n()];
+        for old in 0..self.n {
+            xp[self.perm[old] as usize] = x[old];
+        }
+        xp
+    }
+
+    /// Bucket-order yp → old-order y.
+    pub fn unpermute_y(&self, yp: &[S], y: &mut [S]) {
+        assert_eq!(y.len(), self.n);
+        for old in 0..self.n {
+            y[old] = yp[self.perm[old] as usize];
+        }
+    }
+
+    /// Reference execution of the bucket arrays (the exact math the HLO
+    /// performs) — lets tests validate marshalling without PJRT.
+    pub fn spmv_reference(&self, xp: &[S]) -> Vec<S> {
+        let (pb, wb, rb) = (self.spec.p, self.spec.w, self.spec.r);
+        assert_eq!(xp.len(), pb * rb);
+        let mut yp = vec![S::ZERO; pb * rb];
+        for p in 0..pb {
+            for q in 0..rb {
+                let mut acc = S::ZERO;
+                for k in 0..wb {
+                    let idx = (p * wb + k) * rb + q;
+                    let c = p * rb + self.ell_cols[idx] as usize;
+                    acc = self.ell_vals[idx].mul_add(xp[c], acc);
+                }
+                yp[p * rb + q] = acc;
+            }
+        }
+        for j in 0..self.spec.e {
+            let mut acc = S::ZERO;
+            for k in 0..self.spec.we {
+                let idx = j * self.spec.we + k;
+                acc = self.er_vals[idx].mul_add(xp[self.er_cols[idx] as usize], acc);
+            }
+            let out = self.er_yidx[j] as usize;
+            yp[out] += acc;
+        }
+        yp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::preprocess::{EhybPlan, PreprocessConfig};
+    use crate::sparse::gen::{poisson2d, unstructured_mesh};
+    use crate::util::check::assert_allclose;
+
+    fn spec(p: usize, w: usize, r: usize, e: usize, we: usize) -> BucketSpec {
+        BucketSpec {
+            kind: "spmv".into(),
+            dtype: "f64".into(),
+            name: "test".into(),
+            p,
+            w,
+            r,
+            e,
+            we,
+            file: "unused".into(),
+        }
+    }
+
+    fn check_roundtrip(m: &crate::sparse::csr::Csr<f64>, vec_size: usize, s: BucketSpec) {
+        let plan = EhybPlan::build(
+            m,
+            &PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() },
+        )
+        .unwrap();
+        let b = BucketizedEhyb::build(&plan.matrix, &s).unwrap();
+        let x: Vec<f64> = (0..m.nrows()).map(|i| ((i * 7 + 3) % 13) as f64 * 0.5 - 3.0).collect();
+        let xp = b.permute_x(&x);
+        let yp = b.spmv_reference(&xp);
+        let mut y = vec![0.0; m.nrows()];
+        b.unpermute_y(&yp, &mut y);
+        let mut y_ref = vec![0.0; m.nrows()];
+        m.spmv(&x, &mut y_ref);
+        assert_allclose(&y, &y_ref, 1e-10, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn exact_fit_bucket() {
+        let m = poisson2d::<f64>(16, 16);
+        check_roundtrip(&m, 64, spec(4, 8, 64, 256, 8));
+    }
+
+    #[test]
+    fn padded_bucket_larger_r_and_p() {
+        // Bucket much larger than the matrix: R and P padding paths.
+        let m = poisson2d::<f64>(12, 11);
+        check_roundtrip(&m, 32, spec(8, 8, 128, 256, 8));
+    }
+
+    #[test]
+    fn irregular_matrix() {
+        let m = unstructured_mesh::<f64>(20, 20, 0.5, 3);
+        check_roundtrip(&m, 96, spec(8, 16, 128, 1024, 8));
+    }
+
+    #[test]
+    fn rejects_too_small_bucket() {
+        let m = poisson2d::<f64>(16, 16);
+        let plan = EhybPlan::build(
+            &m,
+            &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
+        )
+        .unwrap();
+        assert!(BucketizedEhyb::build(&plan.matrix, &spec(2, 8, 64, 128, 8)).is_err());
+    }
+}

@@ -1,0 +1,307 @@
+//! PJRT client wrapper + the EHYB PJRT execution engine.
+//!
+//! The xla crate's handles wrap raw pointers (`!Send`), so the runtime
+//! lives on one thread — the coordinator's service loop owns it and
+//! serves SpMV requests over channels (the "leader owns the device"
+//! topology; see [`crate::coordinator`]).
+
+use super::bucketize::BucketizedEhyb;
+use super::manifest::{BucketSpec, Manifest};
+use super::XlaScalar;
+use crate::sparse::ehyb::EhybMatrix;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// PJRT CPU client + executable cache keyed by artifact file name.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch from cache) the artifact for `spec`.
+    pub fn load(&self, spec: &BucketSpec) -> crate::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(&spec.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.artifact_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.cache.borrow_mut().insert(spec.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn pick_bucket<S: XlaScalar>(
+        &self,
+        kind: &str,
+        m: &EhybMatrix<S>,
+    ) -> crate::Result<BucketSpec> {
+        let max_w = m.slice_width.iter().copied().max().unwrap_or(0) as usize;
+        let max_er_w = m.er_slice_width.iter().copied().max().unwrap_or(0) as usize;
+        Ok(self
+            .manifest
+            .pick(kind, S::DTYPE_TAG, m.num_parts, m.vec_size, max_w, m.er_rows, max_er_w)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no {kind}/{} bucket fits parts={} vec={} w={} er={}x{}",
+                    S::DTYPE_TAG,
+                    m.num_parts,
+                    m.vec_size,
+                    max_w,
+                    m.er_rows,
+                    max_er_w
+                )
+            })?
+            .clone())
+    }
+
+    /// Build the PJRT SpMV engine for a preprocessed matrix: pick the
+    /// smallest fitting `spmv` bucket, marshal, compile.
+    pub fn spmv_engine<S: XlaScalar>(&self, m: &EhybMatrix<S>) -> crate::Result<EhybPjrt<S>> {
+        let spec = self.pick_bucket("spmv", m)?;
+        let exe = self.load(&spec)?;
+        let b = BucketizedEhyb::build(m, &spec)?;
+        EhybPjrt::new(exe, b, m.nnz())
+    }
+
+    /// Build the fused CG-step engine (the `cg` artifact kind): one PJRT
+    /// execution per iteration — SpMV, both dot products, the axpys and
+    /// the Jacobi preconditioner application all inside one executable.
+    /// `diag` is the matrix diagonal in the *original* index space.
+    pub fn cg_engine<S: XlaScalar>(
+        &self,
+        m: &EhybMatrix<S>,
+        diag: &[S],
+    ) -> crate::Result<CgPjrt<S>> {
+        let spec = self.pick_bucket("cg", m)?;
+        let exe = self.load(&spec)?;
+        let b = BucketizedEhyb::build(m, &spec)?;
+        CgPjrt::new(exe, b, diag)
+    }
+}
+
+/// The EHYB SpMV engine running over PJRT: matrix literals are uploaded
+/// once at construction; each `spmv` call marshals only the x vector.
+pub struct EhybPjrt<S: XlaScalar> {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub bucket: BucketizedEhyb<S>,
+    nnz: usize,
+    // Cached matrix-argument literals (arg order of model.ehyb_spmv).
+    ell_cols: xla::Literal,
+    ell_vals: xla::Literal,
+    er_cols: xla::Literal,
+    er_vals: xla::Literal,
+    er_yidx: xla::Literal,
+}
+
+impl<S: XlaScalar> EhybPjrt<S> {
+    fn new(
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        b: BucketizedEhyb<S>,
+        nnz: usize,
+    ) -> crate::Result<Self> {
+        let s = &b.spec;
+        let (p, w, r) = (s.p as i64, s.w as i64, s.r as i64);
+        let (e, we) = (s.e as i64, s.we as i64);
+        let ell_cols = xla::Literal::vec1(&b.ell_cols).reshape(&[p, w, r])?;
+        let ell_vals = xla::Literal::vec1(&b.ell_vals).reshape(&[p, w, r])?;
+        let er_cols = xla::Literal::vec1(&b.er_cols).reshape(&[e, we])?;
+        let er_vals = xla::Literal::vec1(&b.er_vals).reshape(&[e, we])?;
+        let er_yidx = xla::Literal::vec1(&b.er_yidx);
+        Ok(Self { exe, bucket: b, nnz, ell_cols, ell_vals, er_cols, er_vals, er_yidx })
+    }
+
+    pub fn name(&self) -> &'static str {
+        "ehyb-pjrt"
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.bucket.n
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// `y = A x` in the original index space.
+    pub fn spmv(&self, x: &[S], y: &mut [S]) -> crate::Result<()> {
+        let xp = self.bucket.permute_x(x);
+        let yp = self.spmv_new_order(&xp)?;
+        self.bucket.unpermute_y(&yp, y);
+        Ok(())
+    }
+
+    /// `yp = A xp` in bucket order — the hot call the solver loop uses
+    /// (keeps vectors permanently permuted, like the CUDA version).
+    pub fn spmv_new_order(&self, xp: &[S]) -> crate::Result<Vec<S>> {
+        anyhow::ensure!(xp.len() == self.bucket.spec.n(), "xp length");
+        let x_lit = xla::Literal::vec1(xp);
+        // Borrowed literals: the matrix-argument uploads are reused
+        // across calls (deep-cloning Literals would copy the arrays).
+        let result = self.exe.execute::<&xla::Literal>(&[
+            &x_lit,
+            &self.ell_cols,
+            &self.ell_vals,
+            &self.er_cols,
+            &self.er_vals,
+            &self.er_yidx,
+        ])?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(out.to_vec::<S>()?)
+    }
+}
+
+/// Fused CG-step engine over the `cg` artifact
+/// (`python/compile/model.py::cg_step`): Jacobi-preconditioned CG with
+/// the whole iteration body in one XLA executable. Vectors live in
+/// bucket order between iterations (permutation only at solve
+/// boundaries, like the CUDA implementation).
+pub struct CgPjrt<S: XlaScalar> {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    pub bucket: BucketizedEhyb<S>,
+    ell_cols: xla::Literal,
+    ell_vals: xla::Literal,
+    er_cols: xla::Literal,
+    er_vals: xla::Literal,
+    er_yidx: xla::Literal,
+    diag_inv: xla::Literal,
+}
+
+/// One CG iteration's host-visible state (bucket order).
+pub struct CgState<S> {
+    pub x: Vec<S>,
+    pub r: Vec<S>,
+    pub p: Vec<S>,
+    pub rz: S,
+    /// <p, Ap> from the last step (breakdown monitor).
+    pub alpha_den: S,
+}
+
+impl<S: XlaScalar> CgPjrt<S> {
+    fn new(
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        b: BucketizedEhyb<S>,
+        diag: &[S],
+    ) -> crate::Result<Self> {
+        let s = &b.spec;
+        let (p, w, r) = (s.p as i64, s.w as i64, s.r as i64);
+        let (e, we) = (s.e as i64, s.we as i64);
+        // 1/diag in bucket order; padded slots get 0 (their residual
+        // stays 0, so they never enter the Krylov space).
+        let mut dinv = vec![<S as crate::sparse::scalar::Scalar>::ZERO; s.n()];
+        for old in 0..b.n {
+            let d = diag[old];
+            dinv[b.perm[old] as usize] =
+                if d.to_f64().abs() < 1e-300 { S::ONE } else { S::ONE / d };
+        }
+        Ok(Self {
+            exe,
+            ell_cols: xla::Literal::vec1(&b.ell_cols).reshape(&[p, w, r])?,
+            ell_vals: xla::Literal::vec1(&b.ell_vals).reshape(&[p, w, r])?,
+            er_cols: xla::Literal::vec1(&b.er_cols).reshape(&[e, we])?,
+            er_vals: xla::Literal::vec1(&b.er_vals).reshape(&[e, we])?,
+            er_yidx: xla::Literal::vec1(&b.er_yidx),
+            diag_inv: xla::Literal::vec1(&dinv),
+            bucket: b,
+        })
+    }
+
+    /// Initial state for right-hand side `b_rhs` (original order), x0=0:
+    /// r0 = b, z0 = M⁻¹ r0, p0 = z0, rz = <r0, z0>.
+    pub fn init(&self, b_rhs: &[S]) -> CgState<S> {
+        let r = self.bucket.permute_x(b_rhs);
+        let dinv = self.diag_inv.to_vec::<S>().expect("diag_inv literal readback");
+        let z: Vec<S> = dinv.iter().zip(&r).map(|(&d, &ri)| d * ri).collect();
+        let rz = crate::sparse::scalar::dot(&r, &z);
+        CgState { x: vec![<S as crate::sparse::scalar::Scalar>::ZERO; r.len()], r, p: z, rz, alpha_den: <S as crate::sparse::scalar::Scalar>::ZERO }
+    }
+
+    /// Run one fused iteration on the device state.
+    pub fn step(&self, st: &mut CgState<S>) -> crate::Result<()> {
+        let xk = xla::Literal::vec1(&st.x);
+        let rk = xla::Literal::vec1(&st.r);
+        let pk = xla::Literal::vec1(&st.p);
+        let rz = xla::Literal::from(st.rz);
+        let result = self.exe.execute::<&xla::Literal>(&[
+            &xk,
+            &rk,
+            &pk,
+            &rz,
+            &self.ell_cols,
+            &self.ell_vals,
+            &self.er_cols,
+            &self.er_vals,
+            &self.er_yidx,
+            &self.diag_inv,
+        ])?;
+        let outs = result[0][0].to_literal_sync()?.to_tuple()?;
+        anyhow::ensure!(outs.len() == 5, "cg artifact returned {} outputs", outs.len());
+        st.x = outs[0].to_vec::<S>()?;
+        st.r = outs[1].to_vec::<S>()?;
+        st.p = outs[2].to_vec::<S>()?;
+        st.rz = outs[3].get_first_element::<S>()?;
+        st.alpha_den = outs[4].get_first_element::<S>()?;
+        Ok(())
+    }
+
+    /// Relative residual ‖r‖/‖b‖ of the current state.
+    pub fn rel_residual(&self, st: &CgState<S>, bnorm: f64) -> f64 {
+        crate::sparse::scalar::norm2(&st.r).to_f64() / bnorm.max(1e-300)
+    }
+
+    /// Full solve: returns (x in original order, iterations, converged).
+    pub fn solve(
+        &self,
+        b_rhs: &[S],
+        rtol: f64,
+        max_iters: usize,
+    ) -> crate::Result<(Vec<S>, usize, bool)> {
+        let bnorm = crate::sparse::scalar::norm2(b_rhs).to_f64();
+        let mut st = self.init(b_rhs);
+        let mut converged = false;
+        let mut iters = 0;
+        for k in 0..max_iters {
+            self.step(&mut st)?;
+            iters = k + 1;
+            if self.rel_residual(&st, bnorm) < rtol {
+                converged = true;
+                break;
+            }
+        }
+        let mut x = vec![<S as crate::sparse::scalar::Scalar>::ZERO; self.bucket.n];
+        self.bucket.unpermute_y(&st.x, &mut x);
+        Ok((x, iters, converged))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT round-trip tests live in rust/tests/runtime_pjrt.rs (they
+    // need built artifacts); unit tests here cover pure logic only.
+    use super::*;
+
+    #[test]
+    fn runtime_errors_without_artifacts() {
+        let err = PjrtRuntime::new("/nonexistent-artifacts-dir");
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

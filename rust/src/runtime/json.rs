@@ -1,0 +1,233 @@
+//! Minimal JSON reader — just enough for `artifacts/manifest.json`
+//! (objects, arrays, strings, numbers, bools, null; UTF-8 passthrough;
+//! no escapes beyond \" \\ \/ \n \t). No serde in the offline
+//! dependency closure.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> crate::Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        anyhow::ensure!(p.i == p.b.len(), "trailing bytes at {}", p.i);
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> crate::Result<Json> {
+        anyhow::ensure!(self.i < self.b.len(), "unexpected EOF");
+        match self.b[self.i] {
+            b'{' => self.obj(),
+            b'[' => self.arr(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.num(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> crate::Result<Json> {
+        anyhow::ensure!(self.b[self.i..].starts_with(word.as_bytes()), "bad literal at {}", self.i);
+        self.i += word.len();
+        Ok(v)
+    }
+
+    fn num(&mut self) -> crate::Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number {s:?}: {e}"))?))
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        anyhow::ensure!(
+            self.i < self.b.len() && self.b[self.i] == b'"',
+            "expected string at {}",
+            self.i
+        );
+        self.i += 1;
+        let mut out = Vec::new();
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(String::from_utf8(out)?);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    anyhow::ensure!(self.i < self.b.len(), "EOF in escape");
+                    out.push(match self.b[self.i] {
+                        b'n' => b'\n',
+                        b't' => b'\t',
+                        b'r' => b'\r',
+                        c @ (b'"' | b'\\' | b'/') => c,
+                        c => anyhow::bail!("unsupported escape \\{}", c as char),
+                    });
+                    self.i += 1;
+                }
+                c => {
+                    out.push(c);
+                    self.i += 1;
+                }
+            }
+        }
+        anyhow::bail!("unterminated string")
+    }
+
+    fn obj(&mut self) -> crate::Result<Json> {
+        self.i += 1; // '{'
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            anyhow::ensure!(self.b.get(self.i) == Some(&b':'), "expected ':' at {}", self.i);
+            self.i += 1;
+            self.ws();
+            let v = self.value()?;
+            m.insert(k, v);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => anyhow::bail!("expected ',' or '}}' at {}", self.i),
+            }
+        }
+    }
+
+    fn arr(&mut self) -> crate::Result<Json> {
+        self.i += 1; // '['
+        let mut a = Vec::new();
+        self.ws();
+        if self.i < self.b.len() && self.b[self.i] == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(a));
+        }
+        loop {
+            self.ws();
+            a.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(a));
+                }
+                _ => anyhow::bail!("expected ',' or ']' at {}", self.i),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let j = Json::parse(r#"{"buckets": [{"name": "tiny", "p": 4, "file": "a.txt"}]}"#).unwrap();
+        let b = &j.get("buckets").unwrap().as_arr().unwrap()[0];
+        assert_eq!(b.get("name").unwrap().as_str(), Some("tiny"));
+        assert_eq!(b.get("p").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("3.5").unwrap().as_f64(), Some(3.5));
+        assert_eq!(Json::parse("-42").unwrap().as_f64(), Some(-42.0));
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(r#""hi\n""#).unwrap().as_str(), Some("hi\n"));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let j = Json::parse(r#"{"a": [1, [2, {"b": "c"}], 3]}"#).unwrap();
+        let a = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse(r#"{"a": }"#).is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+}

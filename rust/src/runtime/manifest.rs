@@ -1,0 +1,140 @@
+//! Artifact manifest: which HLO files exist at which bucket shapes.
+
+use super::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact's shape contract (mirrors aot.py's BUCKETS).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BucketSpec {
+    pub kind: String,
+    pub dtype: String,
+    pub name: String,
+    pub p: usize,
+    pub w: usize,
+    pub r: usize,
+    pub e: usize,
+    pub we: usize,
+    pub file: String,
+}
+
+impl BucketSpec {
+    /// Padded dimension the artifact computes over.
+    pub fn n(&self) -> usize {
+        self.p * self.r
+    }
+
+    /// Can a matrix with these EHYB stats run in this bucket?
+    pub fn fits(&self, num_parts: usize, vec_size: usize, max_width: usize, er_rows: usize, er_width: usize) -> bool {
+        num_parts <= self.p && vec_size <= self.r && max_width <= self.w && er_rows <= self.e && er_width <= self.we
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub buckets: Vec<BucketSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("read {path:?}: {e} (run `make artifacts` first)"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> crate::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let arr = j
+            .get("buckets")
+            .and_then(|b| b.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing buckets"))?;
+        let mut buckets = Vec::with_capacity(arr.len());
+        for b in arr {
+            let s = |k: &str| -> crate::Result<String> {
+                Ok(b.get(k)
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("bucket missing {k}"))?
+                    .to_string())
+            };
+            let u = |k: &str| -> crate::Result<usize> {
+                b.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow::anyhow!("bucket missing {k}"))
+            };
+            buckets.push(BucketSpec {
+                kind: s("kind")?,
+                dtype: s("dtype")?,
+                name: s("name")?,
+                p: u("p")?,
+                w: u("w")?,
+                r: u("r")?,
+                e: u("e")?,
+                we: u("we")?,
+                file: s("file")?,
+            });
+        }
+        Ok(Manifest { dir, buckets })
+    }
+
+    /// The smallest bucket (by padded n, then slot count) of the given
+    /// kind/dtype that fits the matrix.
+    pub fn pick(
+        &self,
+        kind: &str,
+        dtype: &str,
+        num_parts: usize,
+        vec_size: usize,
+        max_width: usize,
+        er_rows: usize,
+        er_width: usize,
+    ) -> Option<&BucketSpec> {
+        self.buckets
+            .iter()
+            .filter(|b| b.kind == kind && b.dtype == dtype)
+            .filter(|b| b.fits(num_parts, vec_size, max_width, er_rows, er_width))
+            .min_by_key(|b| (b.n(), b.p * b.w * b.r))
+    }
+
+    pub fn artifact_path(&self, b: &BucketSpec) -> PathBuf {
+        self.dir.join(&b.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"buckets": [
+        {"kind":"spmv","dtype":"f64","name":"tiny","p":4,"w":8,"r":64,"e":64,"we":4,"n":256,"file":"spmv_f64_tiny.hlo.txt","sha256":"x"},
+        {"kind":"spmv","dtype":"f64","name":"small","p":16,"w":16,"r":128,"e":512,"we":8,"n":2048,"file":"spmv_f64_small.hlo.txt","sha256":"y"}
+    ]}"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.buckets.len(), 2);
+        assert_eq!(m.buckets[0].n(), 256);
+    }
+
+    #[test]
+    fn pick_smallest_fitting() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let b = m.pick("spmv", "f64", 4, 64, 5, 10, 2).unwrap();
+        assert_eq!(b.name, "tiny");
+        let b = m.pick("spmv", "f64", 4, 64, 12, 10, 2).unwrap();
+        assert_eq!(b.name, "small"); // width 12 > tiny's 8
+        assert!(m.pick("spmv", "f64", 100, 64, 5, 10, 2).is_none());
+        assert!(m.pick("spmv", "f32", 4, 64, 5, 10, 2).is_none());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // When `make artifacts` has run, the real manifest must load.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.pick("spmv", "f64", 4, 64, 8, 64, 4).is_some());
+            assert!(m.pick("cg", "f32", 4, 64, 8, 64, 4).is_some());
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (built once by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//! Python is never on the request path — after `make artifacts` the
+//! binary is self-contained.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (a dependency-free
+//!   JSON reader lives in [`json`]).
+//! * [`bucketize`] — XLA executables are shape-static, so a preprocessed
+//!   [`EhybMatrix`](crate::sparse::ehyb::EhybMatrix) is padded into the
+//!   smallest compiled bucket that fits (padding is col=0/val=0 and
+//!   zero x entries — numerically inert).
+//! * [`client`] — `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//!   → `compile` → `execute`, with an executable cache keyed by
+//!   artifact file; the [`client::EhybPjrt`] engine implements
+//!   [`SpmvEngine`](crate::spmv::SpmvEngine) so the whole harness can
+//!   run over PJRT.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod json;
+pub mod manifest;
+pub mod bucketize;
+pub mod client;
+
+pub use bucketize::BucketizedEhyb;
+pub use client::{EhybPjrt, PjrtRuntime};
+pub use manifest::{BucketSpec, Manifest};
+
+use crate::sparse::scalar::Scalar;
+
+/// Scalars that can cross the PJRT literal boundary.
+pub trait XlaScalar: Scalar + xla::NativeType + xla::ArrayElement {
+    /// dtype tag used in artifact names ("f32"/"f64").
+    const DTYPE_TAG: &'static str;
+}
+
+impl XlaScalar for f32 {
+    const DTYPE_TAG: &'static str = "f32";
+}
+impl XlaScalar for f64 {
+    const DTYPE_TAG: &'static str = "f64";
+}

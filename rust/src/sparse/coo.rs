@@ -1,0 +1,226 @@
+//! Coordinate (COO) format — the interchange format. Paper Algorithm 1
+//! takes a COO matrix as input; Matrix-Market files are COO by nature.
+
+use super::csr::Csr;
+use super::scalar::Scalar;
+
+/// Coordinate-format sparse matrix. Triplets need not be sorted;
+/// duplicates are allowed until [`Coo::sum_duplicates`] is called.
+#[derive(Clone, Debug)]
+pub struct Coo<S: Scalar> {
+    nrows: usize,
+    ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<S>,
+}
+
+impl<S: Scalar> Coo<S> {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, nnz: usize) -> Self {
+        Self {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(nnz),
+            cols: Vec::with_capacity(nnz),
+            vals: Vec::with_capacity(nnz),
+        }
+    }
+
+    /// Build from triplets, validating bounds.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: impl IntoIterator<Item = (usize, usize, S)>,
+    ) -> crate::Result<Self> {
+        let mut m = Coo::new(nrows, ncols);
+        for (r, c, v) in triplets {
+            anyhow::ensure!(r < nrows && c < ncols, "entry ({r},{c}) out of bounds {nrows}x{ncols}");
+            m.push(r, c, v);
+        }
+        Ok(m)
+    }
+
+    #[inline]
+    pub fn push(&mut self, row: usize, col: usize, val: S) {
+        debug_assert!(row < self.nrows && col < self.ncols);
+        self.rows.push(row as u32);
+        self.cols.push(col as u32);
+        self.vals.push(val);
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Sort triplets by (row, col). Stable with respect to duplicate
+    /// coordinates (insertion order preserved).
+    pub fn sort(&mut self) {
+        let mut idx: Vec<u32> = (0..self.nnz() as u32).collect();
+        idx.sort_by_key(|&i| (self.rows[i as usize], self.cols[i as usize], i));
+        self.permute(&idx);
+    }
+
+    fn permute(&mut self, idx: &[u32]) {
+        self.rows = idx.iter().map(|&i| self.rows[i as usize]).collect();
+        self.cols = idx.iter().map(|&i| self.cols[i as usize]).collect();
+        self.vals = idx.iter().map(|&i| self.vals[i as usize]).collect();
+    }
+
+    /// Sort and merge duplicate coordinates by summation (Matrix-Market
+    /// symmetric expansion can produce duplicates on the diagonal).
+    pub fn sum_duplicates(&mut self) {
+        if self.nnz() == 0 {
+            return;
+        }
+        self.sort();
+        let mut w = 0usize;
+        for r in 1..self.nnz() {
+            if self.rows[r] == self.rows[w] && self.cols[r] == self.cols[w] {
+                let v = self.vals[r];
+                self.vals[w] += v;
+            } else {
+                w += 1;
+                self.rows[w] = self.rows[r];
+                self.cols[w] = self.cols[r];
+                self.vals[w] = self.vals[r];
+            }
+        }
+        self.rows.truncate(w + 1);
+        self.cols.truncate(w + 1);
+        self.vals.truncate(w + 1);
+    }
+
+    /// Convert to CSR (sorts + merges duplicates first).
+    pub fn to_csr(&self) -> Csr<S> {
+        let mut m = self.clone();
+        m.sum_duplicates();
+        let mut row_ptr = vec![0u32; self.nrows + 1];
+        for &r in &m.rows {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        Csr::from_raw(self.nrows, self.ncols, row_ptr, m.cols, m.vals)
+    }
+
+    /// Reference SpMV: `y = A * x`. O(nnz); order-of-accumulation follows
+    /// triplet order.
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        y.fill(S::ZERO);
+        for i in 0..self.nnz() {
+            let r = self.rows[i] as usize;
+            let c = self.cols[i] as usize;
+            y[r] = self.vals[i].mul_add(x[c], y[r]);
+        }
+    }
+
+    /// Transpose (swaps row/col indices).
+    pub fn transpose(&self) -> Coo<S> {
+        Coo {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo<f64> {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        Coo::from_triplets(3, 3, vec![(0, 0, 1.0), (2, 2, 5.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0)])
+            .unwrap()
+    }
+
+    #[test]
+    fn dims_and_nnz() {
+        let m = sample();
+        assert_eq!((m.nrows(), m.ncols(), m.nnz()), (3, 3, 5));
+    }
+
+    #[test]
+    fn bounds_checked() {
+        assert!(Coo::<f64>::from_triplets(2, 2, vec![(2, 0, 1.0)]).is_err());
+        assert!(Coo::<f64>::from_triplets(2, 2, vec![(0, 2, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn spmv_reference() {
+        let m = sample();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn sort_orders_triplets() {
+        let mut m = sample();
+        m.sort();
+        let coords: Vec<(u32, u32)> = m.rows.iter().zip(&m.cols).map(|(&r, &c)| (r, c)).collect();
+        let mut sorted = coords.clone();
+        sorted.sort();
+        assert_eq!(coords, sorted);
+    }
+
+    #[test]
+    fn sum_duplicates_merges() {
+        let mut m = Coo::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 1, 3.0)]).unwrap();
+        m.sum_duplicates();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.vals[0], 3.0);
+    }
+
+    #[test]
+    fn to_csr_matches_spmv() {
+        let m = sample();
+        let csr = m.to_csr();
+        let x = [0.5, -1.0, 2.0];
+        let mut y1 = [0.0; 3];
+        let mut y2 = [0.0; 3];
+        m.spmv(&x, &mut y1);
+        csr.spmv(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose().transpose();
+        let x = [1.0, 1.0, 1.0];
+        let mut y1 = [0.0; 3];
+        let mut y2 = [0.0; 3];
+        m.spmv(&x, &mut y1);
+        t.spmv(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = Coo::<f32>::new(4, 4);
+        let x = [1.0f32; 4];
+        let mut y = [9.0f32; 4];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [0.0; 4]);
+        assert_eq!(m.to_csr().nnz(), 0);
+    }
+}

@@ -1,0 +1,342 @@
+//! Compressed Sparse Row — the workhorse format. All baseline GPU-kernel
+//! models (cuSPARSE ALG1/ALG2 analogues, merge-based, CSR5-like) and the
+//! EHYB preprocessing pipeline consume CSR.
+
+use super::coo::Coo;
+use super::scalar::Scalar;
+
+/// CSR matrix with u32 indices (the paper's matrices all fit; ≤ 4.29 G
+/// rows/nnz per array — `stokes`, the largest, has 349 M nnz).
+#[derive(Clone, Debug)]
+pub struct Csr<S: Scalar> {
+    nrows: usize,
+    ncols: usize,
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<S>,
+}
+
+impl<S: Scalar> Csr<S> {
+    /// Assemble from raw parts. `row_ptr` must be monotone with
+    /// `row_ptr[0] == 0` and `row_ptr[nrows] == nnz`; `col_idx[k]` are
+    /// filled into their row slots in input order (counting sort).
+    pub(crate) fn from_raw(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<u32>,
+        sorted_cols: Vec<u32>,
+        sorted_vals: Vec<S>,
+    ) -> Self {
+        debug_assert_eq!(row_ptr.len(), nrows + 1);
+        debug_assert_eq!(*row_ptr.last().unwrap() as usize, sorted_cols.len());
+        Self { nrows, ncols, row_ptr, col_idx: sorted_cols, vals: sorted_vals }
+    }
+
+    /// Validated constructor from components.
+    pub fn new(
+        nrows: usize,
+        ncols: usize,
+        row_ptr: Vec<u32>,
+        col_idx: Vec<u32>,
+        vals: Vec<S>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(row_ptr.len() == nrows + 1, "row_ptr length");
+        anyhow::ensure!(row_ptr[0] == 0, "row_ptr[0] != 0");
+        anyhow::ensure!(
+            row_ptr.windows(2).all(|w| w[0] <= w[1]),
+            "row_ptr not monotone"
+        );
+        anyhow::ensure!(*row_ptr.last().unwrap() as usize == col_idx.len(), "nnz mismatch");
+        anyhow::ensure!(col_idx.len() == vals.len(), "col/val length mismatch");
+        anyhow::ensure!(col_idx.iter().all(|&c| (c as usize) < ncols), "col out of bounds");
+        Ok(Self { nrows, ncols, row_ptr, col_idx, vals })
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Row `i`'s (cols, vals) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[S]) {
+        let lo = self.row_ptr[i] as usize;
+        let hi = self.row_ptr[i + 1] as usize;
+        (&self.col_idx[lo..hi], &self.vals[lo..hi])
+    }
+
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    pub fn max_row_nnz(&self) -> usize {
+        (0..self.nrows).map(|i| self.row_nnz(i)).max().unwrap_or(0)
+    }
+
+    /// Reference row-major SpMV: `y = A x`.
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let mut acc = S::ZERO;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc = v.mul_add(x[c as usize], acc);
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Dense `y = A x` in f64 regardless of S — the high-precision oracle
+    /// the test-suite compares every engine against.
+    pub fn spmv_f64_oracle(&self, x: &[S]) -> Vec<f64> {
+        let mut y = vec![0.0f64; self.nrows];
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0f64;
+            for (&c, &v) in cols.iter().zip(vals) {
+                acc += v.to_f64() * x[c as usize].to_f64();
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    pub fn to_coo(&self) -> Coo<S> {
+        let mut m = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                m.push(i, c as usize, v);
+            }
+        }
+        m
+    }
+
+    /// Transpose via counting sort: O(nnz + n).
+    pub fn transpose(&self) -> Csr<S> {
+        let mut cnt = vec![0u32; self.ncols + 1];
+        for &c in &self.col_idx {
+            cnt[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            cnt[i + 1] += cnt[i];
+        }
+        let row_ptr = cnt.clone();
+        let mut col_idx = vec![0u32; self.nnz()];
+        let mut vals = vec![S::ZERO; self.nnz()];
+        let mut next = cnt;
+        for i in 0..self.nrows {
+            let (cols, vs) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vs) {
+                let slot = next[c as usize] as usize;
+                next[c as usize] += 1;
+                col_idx[slot] = i as u32;
+                vals[slot] = v;
+            }
+        }
+        Csr { nrows: self.ncols, ncols: self.nrows, row_ptr, col_idx, vals }
+    }
+
+    /// Structural symmetrization `A ∪ Aᵀ` with values from A where present
+    /// (values of the transpose only fill structural holes). Used to build
+    /// the undirected partitioning graph of Algorithm 1 for non-symmetric
+    /// matrices.
+    pub fn symmetrize_structure(&self) -> Csr<S> {
+        assert_eq!(self.nrows, self.ncols, "symmetrize requires square");
+        let t = self.transpose();
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz() * 2);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(i, c as usize, v);
+            }
+            let (tcols, _) = t.row(i);
+            for &c in tcols {
+                // Push a structural zero; sum_duplicates keeps the value
+                // from A when both exist (0 + v = v).
+                coo.push(i, c as usize, S::ZERO);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Extract the diagonal (missing entries are zero).
+    pub fn diagonal(&self) -> Vec<S> {
+        let mut d = vec![S::ZERO; self.nrows.min(self.ncols)];
+        for i in 0..d.len() {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize == i {
+                    d[i] = v;
+                }
+            }
+        }
+        d
+    }
+
+    /// Permute rows and columns symmetrically: `B = P A Pᵀ` where
+    /// `perm[old] = new`. Used by reordering ablations.
+    pub fn permute_symmetric(&self, perm: &[u32]) -> Csr<S> {
+        assert_eq!(perm.len(), self.nrows);
+        assert_eq!(self.nrows, self.ncols);
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            let ni = perm[i] as usize;
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(ni, perm[c as usize] as usize, v);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Memory footprint in bytes (index + value arrays) — input to the
+    /// traffic models.
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.vals.len() * S::BYTES
+    }
+
+    /// Cast values to another scalar type (f64 suite → f32 runs).
+    pub fn cast<T: Scalar>(&self) -> Csr<T> {
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            row_ptr: self.row_ptr.clone(),
+            col_idx: self.col_idx.clone(),
+            vals: self.vals.iter().map(|v| T::from_f64(v.to_f64())).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr<f64> {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        Coo::from_triplets(3, 3, vec![(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)])
+            .unwrap()
+            .to_csr()
+    }
+
+    #[test]
+    fn construction_validates() {
+        assert!(Csr::<f64>::new(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_ok());
+        assert!(Csr::<f64>::new(2, 2, vec![0, 3, 2], vec![0, 1], vec![1.0, 2.0]).is_err()); // non-monotone
+        assert!(Csr::<f64>::new(2, 2, vec![0, 1, 2], vec![0, 5], vec![1.0, 2.0]).is_err()); // col oob
+        assert!(Csr::<f64>::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // row_ptr len
+    }
+
+    #[test]
+    fn row_access() {
+        let m = sample();
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[1.0, 2.0]);
+        assert_eq!(m.row_nnz(1), 1);
+        assert_eq!(m.max_row_nnz(), 2);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = sample();
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let m = sample();
+        let t = m.transpose();
+        // Column 0 of A = [1, 0, 4] => row 0 of T.
+        let (cols, vals) = t.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[1.0, 4.0]);
+        // (Ax, y) == (x, A^T y)
+        let x = [1.0, 2.0, 3.0];
+        let y = [4.0, 5.0, 6.0];
+        let mut ax = [0.0; 3];
+        m.spmv(&x, &mut ax);
+        let mut aty = [0.0; 3];
+        t.spmv(&y, &mut aty);
+        let lhs: f64 = ax.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let rhs: f64 = x.iter().zip(&aty).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let m = sample();
+        let s = m.symmetrize_structure();
+        let t = s.transpose();
+        // Structure of s must equal structure of its transpose.
+        assert_eq!(s.row_ptr, t.row_ptr);
+        assert_eq!(s.col_idx, t.col_idx);
+        // Values from A preserved.
+        let (cols, vals) = s.row(0);
+        let pos = cols.iter().position(|&c| c == 2).unwrap();
+        assert_eq!(vals[pos], 2.0);
+    }
+
+    #[test]
+    fn diagonal_extraction() {
+        let m = sample();
+        assert_eq!(m.diagonal(), vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn permute_symmetric_preserves_spmv() {
+        let m = sample();
+        let perm = [2u32, 0, 1]; // old->new
+        let p = m.permute_symmetric(&perm);
+        // y_new[perm[i]] should equal y_old[i] when x permuted likewise.
+        let x = [1.0, 2.0, 3.0];
+        let mut xp = [0.0; 3];
+        for i in 0..3 {
+            xp[perm[i] as usize] = x[i];
+        }
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        let mut yp = [0.0; 3];
+        p.spmv(&xp, &mut yp);
+        for i in 0..3 {
+            assert!((yp[perm[i] as usize] - y[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn oracle_matches_spmv_for_f64() {
+        let m = sample();
+        let x = [0.1, 0.2, 0.3];
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        let o = m.spmv_f64_oracle(&x);
+        for i in 0..3 {
+            assert!((y[i] - o[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cast_f32() {
+        let m = sample().cast::<f32>();
+        assert_eq!(m.vals[0], 1.0f32);
+        assert_eq!(m.nnz(), 5);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let m = sample();
+        assert_eq!(m.bytes(), 4 * 4 + 5 * 4 + 5 * 8);
+    }
+}

@@ -1,0 +1,116 @@
+//! DIA (diagonal) format — stores dense diagonals. Only efficient for
+//! structured-stencil matrices; included as the structured-case contrast
+//! baseline from Bell & Garland 2009 and for validating the Poisson
+//! generators (whose stencils are exactly banded).
+
+use super::csr::Csr;
+use super::scalar::Scalar;
+
+#[derive(Clone, Debug)]
+pub struct Dia<S: Scalar> {
+    nrows: usize,
+    ncols: usize,
+    /// Diagonal offsets, ascending (0 = main, negative = sub).
+    pub offsets: Vec<i64>,
+    /// `data[d * nrows + i]` = A[i, i + offsets[d]].
+    pub data: Vec<S>,
+}
+
+impl<S: Scalar> Dia<S> {
+    /// Build from CSR. Returns `None` when the number of occupied
+    /// diagonals exceeds `max_diags` (format unsuitable).
+    pub fn from_csr(csr: &Csr<S>, max_diags: usize) -> Option<Self> {
+        let mut offsets: Vec<i64> = Vec::new();
+        for i in 0..csr.nrows() {
+            let (cols, _) = csr.row(i);
+            for &c in cols {
+                let off = c as i64 - i as i64;
+                if let Err(pos) = offsets.binary_search(&off) {
+                    offsets.insert(pos, off);
+                    if offsets.len() > max_diags {
+                        return None;
+                    }
+                }
+            }
+        }
+        let nrows = csr.nrows();
+        let mut data = vec![S::ZERO; offsets.len() * nrows];
+        for i in 0..nrows {
+            let (cols, vals) = csr.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let off = c as i64 - i as i64;
+                let d = offsets.binary_search(&off).unwrap();
+                data[d * nrows + i] = v;
+            }
+        }
+        Some(Self { nrows, ncols: csr.ncols(), offsets, data })
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn num_diags(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        y.fill(S::ZERO);
+        for (d, &off) in self.offsets.iter().enumerate() {
+            let base = d * self.nrows;
+            let lo = (-off).max(0) as usize;
+            let hi = self.nrows.min((self.ncols as i64 - off).max(0) as usize);
+            for i in lo..hi {
+                let j = (i as i64 + off) as usize;
+                y[i] = self.data[base + i].mul_add(x[j], y[i]);
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.offsets.len() * 8 + self.data.len() * S::BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::poisson1d;
+
+    #[test]
+    fn tridiagonal_has_three_diags() {
+        let csr = poisson1d::<f64>(16);
+        let dia = Dia::from_csr(&csr, 8).unwrap();
+        assert_eq!(dia.num_diags(), 3);
+        assert_eq!(dia.offsets, vec![-1, 0, 1]);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let csr = poisson1d::<f64>(50);
+        let dia = Dia::from_csr(&csr, 8).unwrap();
+        let x: Vec<f64> = (0..50).map(|i| (i as f64 * 0.1).cos()).collect();
+        let mut y1 = vec![0.0; 50];
+        let mut y2 = vec![0.0; 50];
+        csr.spmv(&x, &mut y1);
+        dia.spmv(&x, &mut y2);
+        for i in 0..50 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn unsuitable_matrix_rejected() {
+        use crate::sparse::coo::Coo;
+        use crate::util::Xoshiro256;
+        let mut rng = Xoshiro256::new(3);
+        let mut coo = Coo::<f64>::new(64, 64);
+        for i in 0..64 {
+            for _ in 0..4 {
+                coo.push(i, rng.next_below(64), 1.0);
+            }
+        }
+        assert!(Dia::from_csr(&coo.to_csr(), 8).is_none());
+    }
+}

@@ -1,0 +1,299 @@
+//! The EHYB storage format (paper §3, Figure 1): the result of the
+//! "partitioning, reordering, and caching" preprocessing.
+//!
+//! After graph partitioning and the per-partition descending-nnz
+//! reordering, the matrix (in the *new* row/column order) splits into:
+//!
+//! * **Sliced-ELL part** — entries whose row and column fall in the same
+//!   partition. Stored as SELL-P slices (slice height = warp size = 32),
+//!   contiguous per partition, with **partition-local u16 column
+//!   indices** (valid because the partition's x-slice is capped by
+//!   shared-memory/VMEM capacity < 2¹⁶ elements — paper §3.4).
+//! * **ER (extra rows) part** — entries whose column leaves the row's
+//!   partition, re-arranged into descending-length rows with global u32
+//!   columns, plus the `yIdxER` map from ER slot to output row.
+//!
+//! Padding slots store `col = 0, val = 0` — numerically inert and
+//! gather-safe (index 0 always in bounds), matching what the L1 Pallas
+//! kernel needs. Logical nnz is tracked in explicit fields.
+//!
+//! This module owns storage, invariant validation, and a serial
+//! reference SpMV with exactly the kernel's semantics. Construction
+//! lives in [`crate::preprocess`]; the optimized engine in
+//! [`crate::spmv::ehyb_cpu`]; the simulated CUDA kernel in
+//! [`crate::gpu::kernels`].
+
+use super::scalar::Scalar;
+
+/// EHYB matrix in new (post-reorder) index space plus the permutation
+/// back to the original ordering.
+#[derive(Clone, Debug)]
+pub struct EhybMatrix<S: Scalar> {
+    /// Original dimension (square matrices only — FEM systems).
+    pub n: usize,
+    /// Number of partitions (paper: K × P).
+    pub num_parts: usize,
+    /// Rows (and x-entries) per partition = the paper's `VecSize`;
+    /// multiple of `slice_height`. The last partition may be logically
+    /// short; it is padded to `vec_size`.
+    pub vec_size: usize,
+    /// Slice height (warp size; 32).
+    pub slice_height: usize,
+
+    // ---- sliced-ELL (in-partition) part ----
+    /// Element offset of each slice, `len = num_slices + 1`
+    /// (paper `PositionELL`). Slices are contiguous per partition:
+    /// partition p owns slices `[p*slices_per_part, (p+1)*slices_per_part)`.
+    pub slice_ptr: Vec<u32>,
+    /// Max nnz of rows in each slice (paper `WidthELL`).
+    pub slice_width: Vec<u32>,
+    /// Partition-local column indices (paper §3.4 compact format).
+    pub ell_cols: Vec<u16>,
+    pub ell_vals: Vec<S>,
+    /// Logical (unpadded) nonzeros in the ELL part.
+    pub ell_nnz: usize,
+
+    // ---- ER (out-of-partition) part ----
+    /// ER slice offsets (paper `PositionER`).
+    pub er_slice_ptr: Vec<u32>,
+    pub er_slice_width: Vec<u32>,
+    /// Number of logical ER rows.
+    pub er_rows: usize,
+    /// Global (new-order) column indices.
+    pub er_cols: Vec<u32>,
+    pub er_vals: Vec<S>,
+    /// `y_idx_er[j]` = new-order output row of ER row `j` (paper `yIdxER`).
+    pub y_idx_er: Vec<u32>,
+    /// Logical nonzeros in the ER part.
+    pub er_nnz: usize,
+
+    // ---- permutation ----
+    /// `perm[old] = new` (paper `ReorderTable`).
+    pub perm: Vec<u32>,
+    /// `iperm[new] = old`.
+    pub iperm: Vec<u32>,
+}
+
+impl<S: Scalar> EhybMatrix<S> {
+    pub fn nnz(&self) -> usize {
+        self.ell_nnz + self.er_nnz
+    }
+
+    pub fn num_slices(&self) -> usize {
+        self.slice_width.len()
+    }
+
+    pub fn slices_per_part(&self) -> usize {
+        self.vec_size / self.slice_height
+    }
+
+    /// Padded row count = num_parts * vec_size.
+    pub fn padded_rows(&self) -> usize {
+        self.num_parts * self.vec_size
+    }
+
+    /// Fraction of nonzeros that fell out of their partition — the
+    /// edge-cut quality metric of the partitioner (lower is better).
+    pub fn er_fraction(&self) -> f64 {
+        if self.nnz() == 0 {
+            return 0.0;
+        }
+        self.er_nnz as f64 / self.nnz() as f64
+    }
+
+    /// Stored ELL slots / logical ELL nnz (padding overhead the
+    /// descending-nnz reorder minimizes).
+    pub fn ell_fill_ratio(&self) -> f64 {
+        if self.ell_nnz == 0 {
+            return 1.0;
+        }
+        self.ell_vals.len() as f64 / self.ell_nnz as f64
+    }
+
+    /// Device-memory footprint in bytes — the quantity §3.4's u16 trick
+    /// reduces by 25 % (f32) / 13.3 % (f64) on the ELL part.
+    pub fn bytes(&self) -> usize {
+        self.slice_ptr.len() * 4
+            + self.slice_width.len() * 4
+            + self.ell_cols.len() * 2
+            + self.ell_vals.len() * S::BYTES
+            + self.er_slice_ptr.len() * 4
+            + self.er_slice_width.len() * 4
+            + self.er_cols.len() * 4
+            + self.er_vals.len() * S::BYTES
+            + self.y_idx_er.len() * 4
+            + self.perm.len() * 4
+    }
+
+    /// Bytes if the ELL columns were stored as u32 (ablation §7.2).
+    pub fn bytes_u32_cols(&self) -> usize {
+        self.bytes() + self.ell_cols.len() * 2
+    }
+
+    /// Validate all structural invariants. Called by tests and after
+    /// preprocessing in debug builds.
+    pub fn validate(&self) -> crate::Result<()> {
+        use anyhow::ensure;
+        ensure!(self.vec_size % self.slice_height == 0, "vec_size not multiple of slice height");
+        ensure!(self.vec_size <= (1 << 16), "vec_size {} exceeds u16 index space", self.vec_size);
+        ensure!(self.padded_rows() >= self.n, "partitions do not cover matrix");
+        ensure!(self.num_slices() == self.num_parts * self.slices_per_part(), "slice count");
+        ensure!(self.slice_ptr.len() == self.num_slices() + 1, "slice_ptr length");
+        ensure!(self.slice_ptr[0] == 0, "slice_ptr[0]");
+        for s in 0..self.num_slices() {
+            ensure!(
+                self.slice_ptr[s + 1] - self.slice_ptr[s]
+                    == self.slice_width[s] * self.slice_height as u32,
+                "slice {s} extent != width*height"
+            );
+        }
+        ensure!(*self.slice_ptr.last().unwrap() as usize == self.ell_vals.len(), "ELL size");
+        ensure!(self.ell_cols.len() == self.ell_vals.len(), "ELL col/val len");
+        ensure!(
+            self.ell_cols.iter().all(|&c| (c as usize) < self.vec_size),
+            "ELL local col out of partition"
+        );
+        // ER invariants.
+        ensure!(self.er_slice_ptr.len() == self.er_slice_width.len() + 1, "ER slice_ptr len");
+        ensure!(*self.er_slice_ptr.last().unwrap_or(&0) as usize == self.er_vals.len(), "ER size");
+        ensure!(self.er_cols.len() == self.er_vals.len(), "ER col/val len");
+        ensure!(self.er_cols.iter().all(|&c| (c as usize) < self.padded_rows()), "ER col bound");
+        ensure!(self.y_idx_er.len() >= self.er_rows, "yIdxER length");
+        ensure!(
+            self.y_idx_er[..self.er_rows].iter().all(|&r| (r as usize) < self.n + (self.padded_rows() - self.n)),
+            "yIdxER bound"
+        );
+        // Permutation is a bijection old<->new over n rows.
+        ensure!(self.perm.len() == self.n && self.iperm.len() >= self.n, "perm length");
+        for old in 0..self.n {
+            let new = self.perm[old] as usize;
+            ensure!(new < self.padded_rows(), "perm out of range");
+            ensure!(self.iperm[new] as usize == old, "perm/iperm mismatch at {old}");
+        }
+        Ok(())
+    }
+
+    /// Reference SpMV with the kernel's exact semantics, in the original
+    /// index space: `y = A x`. Serial; used as the correctness oracle for
+    /// the optimized engines and the GPU-simulated kernel.
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        // Permute x into new order (the GPU kernel stores x pre-permuted;
+        // the runtime does this once per solve, not per SpMV).
+        let xp = self.permute_x(x);
+        let yp = self.spmv_new_order(&xp);
+        for new in 0..self.padded_rows() {
+            let old = self.iperm[new] as usize;
+            if old < self.n {
+                y[old] = yp[new];
+            }
+        }
+    }
+
+    /// Permute x (old order) to the new order, padded to `padded_rows`.
+    pub fn permute_x(&self, x: &[S]) -> Vec<S> {
+        let mut xp = vec![S::ZERO; self.padded_rows()];
+        for old in 0..self.n {
+            xp[self.perm[old] as usize] = x[old];
+        }
+        xp
+    }
+
+    /// Scatter y (new order, padded) back to old order.
+    pub fn unpermute_y(&self, yp: &[S]) -> Vec<S> {
+        let mut y = vec![S::ZERO; self.n];
+        for new in 0..self.padded_rows() {
+            let old = self.iperm[new] as usize;
+            if old < self.n {
+                y[old] = yp[new];
+            }
+        }
+        y
+    }
+
+    /// SpMV entirely in the new (reordered, padded) index space —
+    /// mirrors Algorithm 3: per partition, gather from the partition's
+    /// x-slice (the "explicitly cached" segment), then the ER pass.
+    pub fn spmv_new_order(&self, xp: &[S]) -> Vec<S> {
+        assert_eq!(xp.len(), self.padded_rows());
+        let mut yp = vec![S::ZERO; self.padded_rows()];
+        let h = self.slice_height;
+        let spp = self.slices_per_part();
+        for p in 0..self.num_parts {
+            // Algorithm 3 line 4: the explicit cache — a view of the
+            // partition's x slice (on GPU: copied to shared memory).
+            let cached = &xp[p * self.vec_size..(p + 1) * self.vec_size];
+            for ls in 0..spp {
+                let s = p * spp + ls;
+                let base = self.slice_ptr[s] as usize;
+                let w = self.slice_width[s] as usize;
+                let row0 = p * self.vec_size + ls * h;
+                for lane in 0..h {
+                    let mut acc = S::ZERO;
+                    for k in 0..w {
+                        let idx = base + k * h + lane;
+                        // Padding is col=0,val=0: contributes nothing.
+                        acc = self.ell_vals[idx].mul_add(cached[self.ell_cols[idx] as usize], acc);
+                    }
+                    yp[row0 + lane] = acc;
+                }
+            }
+        }
+        // ER pass: uncached gathers over the full vector, scatter-add.
+        let h = self.slice_height;
+        for s in 0..self.er_slice_width.len() {
+            let base = self.er_slice_ptr[s] as usize;
+            let w = self.er_slice_width[s] as usize;
+            for lane in 0..h {
+                let j = s * h + lane;
+                if j >= self.er_rows {
+                    break;
+                }
+                let mut acc = S::ZERO;
+                for k in 0..w {
+                    let idx = base + k * h + lane;
+                    acc = self.er_vals[idx].mul_add(xp[self.er_cols[idx] as usize], acc);
+                }
+                let out = self.y_idx_er[j] as usize;
+                yp[out] += acc;
+            }
+        }
+        yp
+    }
+}
+
+// NOTE: constructed by `crate::preprocess::EhybPlan::build`; tests that
+// need a real instance live there and in `rust/tests/`.
+#[cfg(test)]
+mod tests {
+    use crate::preprocess::{EhybPlan, PreprocessConfig};
+    use crate::sparse::gen::poisson2d;
+
+    #[test]
+    fn bytes_u16_smaller_than_u32() {
+        let m = poisson2d::<f32>(24, 24);
+        let plan = EhybPlan::build(&m, &PreprocessConfig::default()).unwrap();
+        let e = &plan.matrix;
+        assert!(e.bytes() < e.bytes_u32_cols());
+        // §3.4: saving is exactly 2 bytes per stored ELL slot.
+        assert_eq!(e.bytes_u32_cols() - e.bytes(), e.ell_cols.len() * 2);
+    }
+
+    #[test]
+    fn validate_passes_on_built_matrix() {
+        let m = poisson2d::<f64>(17, 13); // deliberately non-multiple dims
+        let plan = EhybPlan::build(&m, &PreprocessConfig::default()).unwrap();
+        plan.matrix.validate().unwrap();
+    }
+
+    #[test]
+    fn er_fraction_bounded() {
+        let m = poisson2d::<f64>(32, 32);
+        let plan = EhybPlan::build(&m, &PreprocessConfig::default()).unwrap();
+        let f = plan.matrix.er_fraction();
+        assert!((0.0..=1.0).contains(&f));
+        // A good partitioner keeps most stencil entries in-partition.
+        assert!(f < 0.5, "er_fraction={f}");
+    }
+}

@@ -1,0 +1,154 @@
+//! ELLPACK format: dense `nrows × width` value/column arrays in
+//! column-major order so that consecutive rows (GPU threads) access
+//! consecutive memory — the coalescing-friendly layout from
+//! Bell & Garland 2009. Building block of [`super::hyb`].
+
+use super::csr::Csr;
+use super::scalar::Scalar;
+
+/// ELL matrix. `cols[k * nrows + i]` / `vals[k * nrows + i]` hold the
+/// k-th entry of row i; padding slots have `col = PAD` and `val = 0`.
+#[derive(Clone, Debug)]
+pub struct Ell<S: Scalar> {
+    nrows: usize,
+    ncols: usize,
+    width: usize,
+    pub cols: Vec<u32>,
+    pub vals: Vec<S>,
+}
+
+/// Padding marker. Using a valid column (0) with value 0 would also be
+/// correct numerically; a sentinel keeps traffic accounting honest.
+pub const PAD: u32 = u32::MAX;
+
+impl<S: Scalar> Ell<S> {
+    /// Build from CSR with the natural width = max row nnz.
+    pub fn from_csr(csr: &Csr<S>) -> Self {
+        Self::from_csr_with_width(csr, csr.max_row_nnz())
+    }
+
+    /// Build with an explicit width; rows longer than `width` are an error
+    /// (HYB handles the overflow instead).
+    pub fn from_csr_with_width(csr: &Csr<S>, width: usize) -> Self {
+        let nrows = csr.nrows();
+        let mut cols = vec![PAD; nrows * width];
+        let mut vals = vec![S::ZERO; nrows * width];
+        for i in 0..nrows {
+            let (rc, rv) = csr.row(i);
+            assert!(rc.len() <= width, "row {i} nnz {} exceeds ELL width {width}", rc.len());
+            for (k, (&c, &v)) in rc.iter().zip(rv).enumerate() {
+                cols[k * nrows + i] = c;
+                vals[k * nrows + i] = v;
+            }
+        }
+        Self { nrows, ncols: csr.ncols(), width, cols, vals }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Stored nonzeros (excludes padding).
+    pub fn nnz(&self) -> usize {
+        self.cols.iter().filter(|&&c| c != PAD).count()
+    }
+
+    /// Padding overhead ratio: stored slots / nnz.
+    pub fn fill_ratio(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            return 1.0;
+        }
+        (self.nrows * self.width) as f64 / nnz as f64
+    }
+
+    /// `y = A x` traversing column-major (the GPU access order).
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        y.fill(S::ZERO);
+        for k in 0..self.width {
+            let base = k * self.nrows;
+            for i in 0..self.nrows {
+                let c = self.cols[base + i];
+                if c != PAD {
+                    y[i] = self.vals[base + i].mul_add(x[c as usize], y[i]);
+                }
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.cols.len() * 4 + self.vals.len() * S::BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn sample() -> Csr<f64> {
+        Coo::from_triplets(
+            3,
+            4,
+            vec![(0, 0, 1.0), (0, 3, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0), (2, 3, 6.0)],
+        )
+        .unwrap()
+        .to_csr()
+    }
+
+    #[test]
+    fn from_csr_width() {
+        let e = Ell::from_csr(&sample());
+        assert_eq!(e.width(), 3);
+        assert_eq!(e.nnz(), 6);
+    }
+
+    #[test]
+    fn column_major_layout() {
+        let e = Ell::from_csr(&sample());
+        // First entries of each row live contiguously: rows 0,1,2 -> cols 0,1,0.
+        assert_eq!(&e.cols[0..3], &[0, 1, 0]);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let csr = sample();
+        let e = Ell::from_csr(&csr);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y1 = [0.0; 3];
+        let mut y2 = [0.0; 3];
+        csr.spmv(&x, &mut y1);
+        e.spmv(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn fill_ratio() {
+        let e = Ell::from_csr(&sample());
+        assert!((e.fill_ratio() - 9.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds ELL width")]
+    fn overflow_width_panics() {
+        Ell::from_csr_with_width(&sample(), 2);
+    }
+
+    #[test]
+    fn empty() {
+        let csr = Coo::<f64>::new(2, 2).to_csr();
+        let e = Ell::from_csr(&csr);
+        assert_eq!(e.width(), 0);
+        let mut y = [1.0; 2];
+        e.spmv(&[1.0, 1.0], &mut y);
+        assert_eq!(y, [0.0, 0.0]);
+    }
+}

@@ -1,0 +1,439 @@
+//! Synthetic matrix generators standing in for the paper's 94 SuiteSparse
+//! FEM matrices (no network access in this environment — see DESIGN.md §4).
+//!
+//! Each generator reproduces the *structural* properties that determine
+//! SpMV behaviour for its category: nnz/row distribution, bandwidth /
+//! locality (how partitionable the graph is), and value magnitudes.
+//! Categories map 1:1 to the paper's Table 3 corpus: structural (3D
+//! elasticity, 27-pt stencils), CFD (7-pt/anisotropic), electromagnetics
+//! (edge elements ≈ mixed-degree local graphs), circuit/power (power-law
+//! degree with long-range couplings), optimization (KKT-style block
+//! systems), model reduction / semiconductor (unstructured + bands).
+
+use super::coo::Coo;
+use super::csr::Csr;
+use super::scalar::Scalar;
+use crate::util::Xoshiro256;
+
+/// 1D Laplacian (tridiagonal [-1, 2, -1]); mostly for unit tests.
+pub fn poisson1d<S: Scalar>(n: usize) -> Csr<S> {
+    let mut coo = Coo::with_capacity(n, n, 3 * n);
+    for i in 0..n {
+        coo.push(i, i, S::from_f64(2.0));
+        if i > 0 {
+            coo.push(i, i - 1, S::from_f64(-1.0));
+        }
+        if i + 1 < n {
+            coo.push(i, i + 1, S::from_f64(-1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+/// 2D 5-point Laplacian on an `nx × ny` grid.
+pub fn poisson2d<S: Scalar>(nx: usize, ny: usize) -> Csr<S> {
+    let n = nx * ny;
+    let mut coo = Coo::with_capacity(n, n, 5 * n);
+    for y in 0..ny {
+        for x in 0..nx {
+            let i = y * nx + x;
+            coo.push(i, i, S::from_f64(4.0));
+            if x > 0 {
+                coo.push(i, i - 1, S::from_f64(-1.0));
+            }
+            if x + 1 < nx {
+                coo.push(i, i + 1, S::from_f64(-1.0));
+            }
+            if y > 0 {
+                coo.push(i, i - nx, S::from_f64(-1.0));
+            }
+            if y + 1 < ny {
+                coo.push(i, i + nx, S::from_f64(-1.0));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 3D 7-point Laplacian on an `nx × ny × nz` grid — the canonical CFD /
+/// thermal matrix (paper's atmosmodX, FEM_3D_thermal2 class).
+pub fn poisson3d<S: Scalar>(nx: usize, ny: usize, nz: usize) -> Csr<S> {
+    let n = nx * ny * nz;
+    let mut coo = Coo::with_capacity(n, n, 7 * n);
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let i = idx(x, y, z);
+                coo.push(i, i, S::from_f64(6.0));
+                if x > 0 {
+                    coo.push(i, idx(x - 1, y, z), S::from_f64(-1.0));
+                }
+                if x + 1 < nx {
+                    coo.push(i, idx(x + 1, y, z), S::from_f64(-1.0));
+                }
+                if y > 0 {
+                    coo.push(i, idx(x, y - 1, z), S::from_f64(-1.0));
+                }
+                if y + 1 < ny {
+                    coo.push(i, idx(x, y + 1, z), S::from_f64(-1.0));
+                }
+                if z > 0 {
+                    coo.push(i, idx(x, y, z - 1), S::from_f64(-1.0));
+                }
+                if z + 1 < nz {
+                    coo.push(i, idx(x, y, z + 1), S::from_f64(-1.0));
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 3D 27-point stencil — trilinear (Q1) hexahedral FEM assembly pattern
+/// (the paper's 3D-problem class: cant, consph, BenElechi1).
+pub fn stencil27<S: Scalar>(nx: usize, ny: usize, nz: usize, seed: u64) -> Csr<S> {
+    let n = nx * ny * nz;
+    let mut rng = Xoshiro256::new(seed);
+    let mut coo = Coo::with_capacity(n, n, 27 * n);
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let i = idx(x, y, z);
+                for dz in -1i64..=1 {
+                    for dy in -1i64..=1 {
+                        for dx in -1i64..=1 {
+                            let (xx, yy, zz) = (x as i64 + dx, y as i64 + dy, z as i64 + dz);
+                            if xx < 0 || yy < 0 || zz < 0 {
+                                continue;
+                            }
+                            let (xx, yy, zz) = (xx as usize, yy as usize, zz as usize);
+                            if xx >= nx || yy >= ny || zz >= nz {
+                                continue;
+                            }
+                            let j = idx(xx, yy, zz);
+                            let v = if i == j {
+                                26.0 + rng.next_f64()
+                            } else {
+                                -1.0 + 0.1 * rng.next_gaussian()
+                            };
+                            coo.push(i, j, S::from_f64(v));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 3D linear elasticity pattern: `ndof` unknowns per grid node coupled
+/// within the 27-point neighbourhood — dense `ndof × ndof` blocks give
+/// the high nnz/row (~60–81) of the paper's structural matrices
+/// (audikw_1, Emilia_923, bone010 …).
+pub fn elasticity3d<S: Scalar>(nx: usize, ny: usize, nz: usize, ndof: usize, seed: u64) -> Csr<S> {
+    let nodes = nx * ny * nz;
+    let n = nodes * ndof;
+    let mut rng = Xoshiro256::new(seed);
+    let mut coo = Coo::with_capacity(n, n, 27 * ndof * ndof * nodes / 2);
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let node_i = idx(x, y, z);
+                for dz in -1i64..=1 {
+                    for dy in -1i64..=1 {
+                        for dx in -1i64..=1 {
+                            let (xx, yy, zz) = (x as i64 + dx, y as i64 + dy, z as i64 + dz);
+                            if xx < 0 || yy < 0 || zz < 0 {
+                                continue;
+                            }
+                            let (xx, yy, zz) = (xx as usize, yy as usize, zz as usize);
+                            if xx >= nx || yy >= ny || zz >= nz {
+                                continue;
+                            }
+                            let node_j = idx(xx, yy, zz);
+                            for a in 0..ndof {
+                                for b in 0..ndof {
+                                    let i = node_i * ndof + a;
+                                    let j = node_j * ndof + b;
+                                    let v = if i == j {
+                                        80.0 + rng.next_f64()
+                                    } else {
+                                        -1.0 + 0.05 * rng.next_gaussian()
+                                    };
+                                    coo.push(i, j, S::from_f64(v));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Unstructured-mesh graph: points on a jittered grid connected to their
+/// spatial neighbours within a radius, giving the irregular-but-local
+/// sparsity of unstructured FEM meshes (offshore, F1, Fault_639 …).
+/// Node numbering is randomized, so locality is *hidden* from naive
+/// partition-by-index — exactly the case where graph partitioning earns
+/// its keep.
+pub fn unstructured_mesh<S: Scalar>(nx: usize, ny: usize, avg_extra: f64, seed: u64) -> Csr<S> {
+    let n = nx * ny;
+    let mut rng = Xoshiro256::new(seed);
+    // Random relabeling.
+    let mut label: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut label);
+    let idx = |x: usize, y: usize| label[y * nx + x];
+    let mut coo = Coo::with_capacity(n, n, 8 * n);
+    for y in 0..ny {
+        for x in 0..nx {
+            let i = idx(x, y);
+            coo.push(i, i, S::from_f64(8.0 + rng.next_f64()));
+            // 8-neighbourhood with random dropout => degree jitter.
+            for (dx, dy) in
+                [(-1i64, 0i64), (1, 0), (0, -1), (0, 1), (-1, -1), (1, 1), (-1, 1), (1, -1)]
+            {
+                let (xx, yy) = (x as i64 + dx, y as i64 + dy);
+                if xx < 0 || yy < 0 || xx >= nx as i64 || yy >= ny as i64 {
+                    continue;
+                }
+                if rng.next_f64() < 0.8 {
+                    let j = idx(xx as usize, yy as usize);
+                    coo.push(i, j, S::from_f64(-1.0 + 0.1 * rng.next_gaussian()));
+                }
+            }
+            // A few longer-range couplings (mesh grading / contact).
+            let extra = (avg_extra * 2.0 * rng.next_f64()) as usize;
+            for _ in 0..extra {
+                let dx = rng.next_below(7) as i64 - 3;
+                let dy = rng.next_below(7) as i64 - 3;
+                let (xx, yy) = (x as i64 + dx, y as i64 + dy);
+                if xx >= 0 && yy >= 0 && xx < nx as i64 && yy < ny as i64 {
+                    coo.push(i, idx(xx as usize, yy as usize), S::from_f64(0.05 * rng.next_gaussian()));
+                }
+            }
+        }
+    }
+    let mut m = coo;
+    m.sum_duplicates();
+    m.to_csr()
+}
+
+/// Circuit-simulation pattern (Freescale1, memchip, rajat31): mostly very
+/// short rows plus a power-law tail of high-degree "net" rows with
+/// long-range connections — the format-stress case.
+pub fn circuit<S: Scalar>(n: usize, avg_deg: usize, hub_fraction: f64, seed: u64) -> Csr<S> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut coo = Coo::with_capacity(n, n, n * (avg_deg + 1));
+    for i in 0..n {
+        coo.push(i, i, S::from_f64(2.0 + rng.next_f64()));
+        let deg = if rng.next_f64() < hub_fraction {
+            // Hub row: power-law length, capped.
+            let u = rng.next_f64().max(1e-9);
+            ((avg_deg as f64 * 20.0 * u.powf(-0.5)) as usize).min(n / 4).max(avg_deg)
+        } else {
+            1 + rng.next_below(avg_deg.max(1))
+        };
+        for _ in 0..deg {
+            // Mostly local, some global couplings.
+            let j = if rng.next_f64() < 0.7 {
+                let span = 200.min(n);
+                let lo = i.saturating_sub(span / 2);
+                (lo + rng.next_below(span)).min(n - 1)
+            } else {
+                rng.next_below(n)
+            };
+            coo.push(i, j, S::from_f64(-0.1 + 0.05 * rng.next_gaussian()));
+        }
+    }
+    let mut m = coo;
+    m.sum_duplicates();
+    m.to_csr()
+}
+
+/// KKT-style optimization matrix (nlpkkt80/120/160): a 2×2 block system
+/// [[H, Aᵀ], [A, 0]] with stencil H and a sparse coupling A.
+pub fn kkt<S: Scalar>(nh: usize, seed: u64) -> Csr<S> {
+    let h = poisson3d::<S>(nh, nh, nh);
+    let m = h.nrows();
+    let nc = m / 2; // constraint count
+    let n = m + nc;
+    let mut rng = Xoshiro256::new(seed);
+    let mut coo = Coo::with_capacity(n, n, h.nnz() + 6 * nc);
+    for i in 0..m {
+        let (cols, vals) = h.row(i);
+        for (&c, &v) in cols.iter().zip(vals) {
+            coo.push(i, c as usize, v);
+        }
+    }
+    for k in 0..nc {
+        // Each constraint couples ~3 primal variables.
+        for _ in 0..3 {
+            let j = rng.next_below(m);
+            let v = S::from_f64(1.0 + rng.next_f64());
+            coo.push(m + k, j, v);
+            coo.push(j, m + k, v);
+        }
+    }
+    let mut c = coo;
+    c.sum_duplicates();
+    c.to_csr()
+}
+
+/// Banded matrix with uniform random fill inside the band — model
+/// reduction / semiconductor device class (t3dh, nv2-like bandedness).
+pub fn banded<S: Scalar>(n: usize, bandwidth: usize, fill: f64, seed: u64) -> Csr<S> {
+    let mut rng = Xoshiro256::new(seed);
+    let mut coo = Coo::with_capacity(n, n, (n as f64 * bandwidth as f64 * fill) as usize);
+    for i in 0..n {
+        coo.push(i, i, S::from_f64(4.0 + rng.next_f64()));
+        let lo = i.saturating_sub(bandwidth);
+        let hi = (i + bandwidth + 1).min(n);
+        for j in lo..hi {
+            if j != i && rng.next_f64() < fill {
+                coo.push(i, j, S::from_f64(-0.5 + 0.2 * rng.next_gaussian()));
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Make a matrix strictly diagonally dominant (in place on a clone):
+/// guarantees SPD-like behaviour for solver tests when symmetrized.
+pub fn diag_dominant<S: Scalar>(csr: &Csr<S>) -> Csr<S> {
+    let n = csr.nrows();
+    let mut coo = Coo::with_capacity(n, n, csr.nnz());
+    for i in 0..n {
+        let (cols, vals) = csr.row(i);
+        let offsum: f64 = cols
+            .iter()
+            .zip(vals)
+            .filter(|(&c, _)| c as usize != i)
+            .map(|(_, &v)| v.to_f64().abs())
+            .sum();
+        for (&c, &v) in cols.iter().zip(vals) {
+            if c as usize == i {
+                coo.push(i, i, S::from_f64(offsum + 1.0));
+            } else {
+                coo.push(i, c as usize, v);
+            }
+        }
+        if !cols.iter().any(|&c| c as usize == i) {
+            coo.push(i, i, S::from_f64(offsum + 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson1d_structure() {
+        let m = poisson1d::<f64>(5);
+        assert_eq!(m.nnz(), 13);
+        assert_eq!(m.row_nnz(0), 2);
+        assert_eq!(m.row_nnz(2), 3);
+        assert_eq!(m.diagonal(), vec![2.0; 5]);
+    }
+
+    #[test]
+    fn poisson2d_row_sums() {
+        // Interior rows of the Laplacian sum to zero.
+        let m = poisson2d::<f64>(5, 5);
+        let x = vec![1.0; 25];
+        let mut y = vec![0.0; 25];
+        m.spmv(&x, &mut y);
+        assert_eq!(y[12], 0.0); // center
+        assert!(y[0] > 0.0); // corner has fewer neighbours
+    }
+
+    #[test]
+    fn poisson3d_dims() {
+        let m = poisson3d::<f32>(4, 5, 6);
+        assert_eq!(m.nrows(), 120);
+        assert_eq!(m.max_row_nnz(), 7);
+    }
+
+    #[test]
+    fn stencil27_max_degree() {
+        let m = stencil27::<f64>(4, 4, 4, 1);
+        assert_eq!(m.max_row_nnz(), 27);
+        assert_eq!(m.nrows(), 64);
+    }
+
+    #[test]
+    fn elasticity_block_degree() {
+        let m = elasticity3d::<f64>(3, 3, 3, 3, 2);
+        assert_eq!(m.nrows(), 81);
+        // Interior node: 27 neighbours × 3 dof = 81 nnz/row.
+        assert_eq!(m.max_row_nnz(), 81);
+    }
+
+    #[test]
+    fn unstructured_is_symmetric_structure_after_symmetrize() {
+        let m = unstructured_mesh::<f64>(16, 16, 0.5, 3);
+        assert_eq!(m.nrows(), 256);
+        assert!(m.nnz() > 256 * 4);
+        let s = m.symmetrize_structure();
+        let t = s.transpose();
+        assert_eq!(s.col_idx, t.col_idx);
+    }
+
+    #[test]
+    fn circuit_has_hubs() {
+        let m = circuit::<f64>(2000, 3, 0.02, 7);
+        let max = m.max_row_nnz();
+        let avg = m.nnz() as f64 / 2000.0;
+        assert!(max as f64 > avg * 5.0, "max={max} avg={avg}");
+    }
+
+    #[test]
+    fn kkt_is_square_and_indefinite_structured() {
+        let m = kkt::<f64>(6, 5);
+        assert_eq!(m.nrows(), 216 + 108);
+        assert_eq!(m.nrows(), m.ncols());
+    }
+
+    #[test]
+    fn banded_within_band() {
+        let m = banded::<f64>(100, 5, 0.5, 11);
+        for i in 0..100 {
+            let (cols, _) = m.row(i);
+            for &c in cols {
+                assert!((c as i64 - i as i64).unsigned_abs() <= 5);
+            }
+        }
+    }
+
+    #[test]
+    fn diag_dominant_property() {
+        let m = diag_dominant(&unstructured_mesh::<f64>(8, 8, 0.5, 9));
+        for i in 0..m.nrows() {
+            let (cols, vals) = m.row(i);
+            let mut diag = 0.0;
+            let mut off = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize == i {
+                    diag = v;
+                } else {
+                    off += v.abs();
+                }
+            }
+            assert!(diag > off, "row {i}: {diag} <= {off}");
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = circuit::<f64>(500, 3, 0.05, 42);
+        let b = circuit::<f64>(500, 3, 0.05, 42);
+        assert_eq!(a.col_idx, b.col_idx);
+        assert_eq!(a.vals, b.vals);
+    }
+}

@@ -1,0 +1,122 @@
+//! Classic HYB = ELL + COO tail (Bell & Garland 2009; the cuSPARSE HYB
+//! format). The width is chosen so that the ELL part covers most entries
+//! and pathological long rows spill to COO. EHYB replaces the "ELL +
+//! spill" split with "in-partition + out-of-partition".
+
+use super::coo::Coo;
+use super::csr::Csr;
+use super::ell::Ell;
+use super::scalar::Scalar;
+
+#[derive(Clone, Debug)]
+pub struct Hyb<S: Scalar> {
+    pub ell: Ell<S>,
+    pub coo: Coo<S>,
+}
+
+impl<S: Scalar> Hyb<S> {
+    /// Split at `width`: first `width` entries of each row go to ELL, the
+    /// rest to COO.
+    pub fn from_csr_with_width(csr: &Csr<S>, width: usize) -> Self {
+        let nrows = csr.nrows();
+        // Truncate each row to `width` for the ELL part.
+        let mut ell_rowptr = vec![0u32; nrows + 1];
+        let mut ell_cols = Vec::new();
+        let mut ell_vals = Vec::new();
+        let mut coo = Coo::new(nrows, csr.ncols());
+        for i in 0..nrows {
+            let (cols, vals) = csr.row(i);
+            let cut = cols.len().min(width);
+            ell_cols.extend_from_slice(&cols[..cut]);
+            ell_vals.extend_from_slice(&vals[..cut]);
+            ell_rowptr[i + 1] = ell_rowptr[i] + cut as u32;
+            for (&c, &v) in cols[cut..].iter().zip(&vals[cut..]) {
+                coo.push(i, c as usize, v);
+            }
+        }
+        let ell_csr = Csr::from_raw(nrows, csr.ncols(), ell_rowptr, ell_cols, ell_vals);
+        Hyb { ell: Ell::from_csr_with_width(&ell_csr, width), coo }
+    }
+
+    /// cuSPARSE-style automatic width: the largest k such that at least
+    /// `threshold` (e.g. 2/3) of rows have ≥ k entries — equivalently a
+    /// quantile of the nnz/row distribution.
+    pub fn from_csr_auto(csr: &Csr<S>, threshold: f64) -> Self {
+        let mut lens: Vec<usize> = (0..csr.nrows()).map(|i| csr.row_nnz(i)).collect();
+        lens.sort_unstable();
+        let idx = ((csr.nrows() as f64) * (1.0 - threshold)) as usize;
+        let width = if lens.is_empty() { 0 } else { lens[idx.min(lens.len() - 1)] };
+        Self::from_csr_with_width(csr, width.max(1))
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.ell.nnz() + self.coo.nnz()
+    }
+
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        self.ell.spmv(x, y);
+        // COO part accumulates on top.
+        for i in 0..self.coo.nnz() {
+            let r = self.coo.rows[i] as usize;
+            let c = self.coo.cols[i] as usize;
+            y[r] = self.coo.vals[i].mul_add(x[c], y[r]);
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.ell.bytes() + self.coo.nnz() * (8 + S::BYTES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+
+    fn skewed() -> Csr<f64> {
+        // Row 0 has 5 entries, rows 1-3 have 1 each.
+        let mut t = vec![(0usize, 0usize, 1.0), (0, 1, 2.0), (0, 2, 3.0), (0, 3, 4.0), (0, 4, 5.0)];
+        t.push((1, 1, 6.0));
+        t.push((2, 2, 7.0));
+        t.push((3, 3, 8.0));
+        Coo::from_triplets(4, 5, t).unwrap().to_csr()
+    }
+
+    #[test]
+    fn split_counts() {
+        let h = Hyb::from_csr_with_width(&skewed(), 1);
+        assert_eq!(h.ell.nnz(), 4);
+        assert_eq!(h.coo.nnz(), 4);
+        assert_eq!(h.nnz(), 8);
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let csr = skewed();
+        for width in 1..=5 {
+            let h = Hyb::from_csr_with_width(&csr, width);
+            let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+            let mut y1 = [0.0; 4];
+            let mut y2 = [0.0; 4];
+            csr.spmv(&x, &mut y1);
+            h.spmv(&x, &mut y2);
+            assert_eq!(y1, y2, "width={width}");
+        }
+    }
+
+    #[test]
+    fn auto_width_reasonable() {
+        let h = Hyb::from_csr_auto(&skewed(), 2.0 / 3.0);
+        // 3 of 4 rows have exactly 1 entry => width 1.
+        assert_eq!(h.ell.width(), 1);
+    }
+
+    #[test]
+    fn uniform_matrix_no_coo() {
+        let m = Coo::from_triplets(3, 3, vec![(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0)])
+            .unwrap()
+            .to_csr();
+        let h = Hyb::from_csr_auto(&m, 2.0 / 3.0);
+        assert_eq!(h.coo.nnz(), 0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Sparse-matrix substrate: element trait, storage formats, conversions,
+//! Matrix-Market I/O, synthetic FEM-style generators, and structure
+//! statistics.
+//!
+//! Formats implemented (all from the SpMV-on-GPU literature the paper
+//! builds on — Bell & Garland 2009, SELL-P, EHYB itself):
+//!
+//! | module   | format | role in the paper |
+//! |----------|--------|-------------------|
+//! | [`coo`]  | coordinate | interchange / input format (Algorithm 1 input) |
+//! | [`csr`]  | compressed sparse row | baseline engines, cuSPARSE analogues |
+//! | [`ell`]  | ELLPACK | HYB building block |
+//! | [`hyb`]  | ELL + COO hybrid | classic HYB the paper's name riffs on |
+//! | [`sellp`]| sliced ELL, padded | the layout EHYB's in-partition part extends |
+//! | [`dia`]  | diagonal | structured-stencil contrast baseline |
+//! | [`ehyb`] | EHYB storage proper | the paper's format (built by [`crate::preprocess`]) |
+
+pub mod scalar;
+pub mod coo;
+pub mod csr;
+pub mod ell;
+pub mod hyb;
+pub mod sellp;
+pub mod dia;
+pub mod ehyb;
+pub mod mmio;
+pub mod gen;
+pub mod stats;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dia::Dia;
+pub use ehyb::EhybMatrix;
+pub use ell::Ell;
+pub use hyb::Hyb;
+pub use scalar::Scalar;
+pub use sellp::SellP;

@@ -1,0 +1,181 @@
+//! SELL-P — sliced ELLPACK with padding (Anzt, Tomov & Dongarra 2014,
+//! paper ref [2]). Rows are grouped into slices of `slice_height` (the
+//! warp size, 32); each slice stores its own width = max row nnz in the
+//! slice, column-major within the slice. EHYB's in-partition part is a
+//! SELL-P layout whose slices are additionally sorted by descending row
+//! nnz *within each partition* and whose column indices are partition-
+//! local u16.
+
+use super::csr::Csr;
+use super::ell::PAD;
+use super::scalar::Scalar;
+
+#[derive(Clone, Debug)]
+pub struct SellP<S: Scalar> {
+    nrows: usize,
+    ncols: usize,
+    pub slice_height: usize,
+    /// Start offset (in elements) of each slice in `cols`/`vals`;
+    /// `len = num_slices + 1`. Matches the paper's `PositionELL`.
+    pub slice_ptr: Vec<u32>,
+    /// Width (max nnz) of each slice — the paper's `WidthELL`.
+    pub slice_width: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<S>,
+}
+
+impl<S: Scalar> SellP<S> {
+    pub fn from_csr(csr: &Csr<S>, slice_height: usize) -> Self {
+        let nrows = csr.nrows();
+        let num_slices = nrows.div_ceil(slice_height);
+        let mut slice_width = vec![0u32; num_slices];
+        for s in 0..num_slices {
+            let lo = s * slice_height;
+            let hi = (lo + slice_height).min(nrows);
+            slice_width[s] = (lo..hi).map(|i| csr.row_nnz(i)).max().unwrap_or(0) as u32;
+        }
+        let mut slice_ptr = vec![0u32; num_slices + 1];
+        for s in 0..num_slices {
+            slice_ptr[s + 1] = slice_ptr[s] + slice_width[s] * slice_height as u32;
+        }
+        let total = slice_ptr[num_slices] as usize;
+        let mut cols = vec![PAD; total];
+        let mut vals = vec![S::ZERO; total];
+        for s in 0..num_slices {
+            let lo = s * slice_height;
+            let hi = (lo + slice_height).min(nrows);
+            let base = slice_ptr[s] as usize;
+            for i in lo..hi {
+                let (rc, rv) = csr.row(i);
+                let lane = i - lo;
+                for (k, (&c, &v)) in rc.iter().zip(rv).enumerate() {
+                    cols[base + k * slice_height + lane] = c;
+                    vals[base + k * slice_height + lane] = v;
+                }
+            }
+        }
+        Self { nrows, ncols: csr.ncols(), slice_height, slice_ptr, slice_width, cols, vals }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+    pub fn num_slices(&self) -> usize {
+        self.slice_width.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.cols.iter().filter(|&&c| c != PAD).count()
+    }
+
+    /// Stored slots / nnz — the padding overhead the descending-nnz
+    /// reorder in EHYB minimizes.
+    pub fn fill_ratio(&self) -> f64 {
+        let nnz = self.nnz();
+        if nnz == 0 {
+            return 1.0;
+        }
+        self.cols.len() as f64 / nnz as f64
+    }
+
+    pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let h = self.slice_height;
+        for s in 0..self.num_slices() {
+            let base = self.slice_ptr[s] as usize;
+            let w = self.slice_width[s] as usize;
+            let lo = s * h;
+            let hi = (lo + h).min(self.nrows);
+            for i in lo..hi {
+                let lane = i - lo;
+                let mut acc = S::ZERO;
+                for k in 0..w {
+                    let c = self.cols[base + k * h + lane];
+                    if c != PAD {
+                        acc = self.vals[base + k * h + lane].mul_add(x[c as usize], acc);
+                    }
+                }
+                y[i] = acc;
+            }
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.slice_ptr.len() * 4 + self.slice_width.len() * 4 + self.cols.len() * 4 + self.vals.len() * S::BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::util::Xoshiro256;
+
+    fn random_csr(n: usize, seed: u64) -> Csr<f64> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut coo = Coo::new(n, n);
+        for i in 0..n {
+            let deg = 1 + rng.next_below(9);
+            for _ in 0..deg {
+                coo.push(i, rng.next_below(n), rng.range_f64(-1.0, 1.0));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn spmv_matches_csr_various_heights() {
+        let csr = random_csr(100, 42);
+        let x: Vec<f64> = (0..100).map(|i| (i as f64).sin()).collect();
+        let mut y_ref = vec![0.0; 100];
+        csr.spmv(&x, &mut y_ref);
+        for &h in &[1usize, 4, 32, 64, 128] {
+            let s = SellP::from_csr(&csr, h);
+            let mut y = vec![0.0; 100];
+            s.spmv(&x, &mut y);
+            for i in 0..100 {
+                assert!((y[i] - y_ref[i]).abs() < 1e-12, "h={h} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_count() {
+        let csr = random_csr(100, 1);
+        let s = SellP::from_csr(&csr, 32);
+        assert_eq!(s.num_slices(), 4); // ceil(100/32)
+    }
+
+    #[test]
+    fn nnz_preserved() {
+        let csr = random_csr(64, 7);
+        let s = SellP::from_csr(&csr, 32);
+        assert_eq!(s.nnz(), csr.nnz());
+    }
+
+    #[test]
+    fn fill_ratio_at_least_one() {
+        let csr = random_csr(64, 9);
+        let s = SellP::from_csr(&csr, 32);
+        assert!(s.fill_ratio() >= 1.0);
+    }
+
+    #[test]
+    fn per_slice_width_less_than_global() {
+        // A matrix with one long row: SELL-P should only pad one slice.
+        let mut coo = Coo::<f64>::new(64, 64);
+        for j in 0..32 {
+            coo.push(0, j, 1.0);
+        }
+        for i in 1..64 {
+            coo.push(i, i, 1.0);
+        }
+        let s = SellP::from_csr(&coo.to_csr(), 32);
+        assert_eq!(s.slice_width[0], 32);
+        assert_eq!(s.slice_width[1], 1);
+    }
+}

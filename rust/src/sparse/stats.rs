@@ -1,0 +1,122 @@
+//! Matrix structure statistics — used by the harness reports and to
+//! verify that the synthetic corpus matches the paper's categories
+//! (nnz/row distributions, bandwidth, symmetry).
+
+use super::csr::Csr;
+use super::scalar::Scalar;
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct MatrixStats {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    pub row_nnz: Summary,
+    pub empty_rows: usize,
+    /// Max |col - row| over all entries.
+    pub bandwidth: usize,
+    /// Average |col - row| — a locality proxy.
+    pub mean_band: f64,
+    /// Fraction of entries with a structural mirror (1.0 = structurally
+    /// symmetric).
+    pub structural_symmetry: f64,
+}
+
+impl MatrixStats {
+    pub fn of<S: Scalar>(m: &Csr<S>) -> Self {
+        let n = m.nrows();
+        let lens: Vec<f64> = (0..n).map(|i| m.row_nnz(i) as f64).collect();
+        let mut bandwidth = 0usize;
+        let mut band_sum = 0f64;
+        for i in 0..n {
+            let (cols, _) = m.row(i);
+            for &c in cols {
+                let d = (c as i64 - i as i64).unsigned_abs() as usize;
+                bandwidth = bandwidth.max(d);
+                band_sum += d as f64;
+            }
+        }
+        // Structural symmetry via transpose comparison.
+        let t = m.transpose();
+        let mut mirrored = 0usize;
+        for i in 0..n.min(m.ncols()) {
+            let (a, _) = m.row(i);
+            let (b, _) = t.row(i);
+            // Count intersection of two sorted lists.
+            let (mut p, mut q) = (0, 0);
+            while p < a.len() && q < b.len() {
+                match a[p].cmp(&b[q]) {
+                    std::cmp::Ordering::Less => p += 1,
+                    std::cmp::Ordering::Greater => q += 1,
+                    std::cmp::Ordering::Equal => {
+                        mirrored += 1;
+                        p += 1;
+                        q += 1;
+                    }
+                }
+            }
+        }
+        MatrixStats {
+            nrows: n,
+            ncols: m.ncols(),
+            nnz: m.nnz(),
+            row_nnz: Summary::of(&lens).unwrap_or(Summary {
+                n: 0,
+                min: 0.0,
+                max: 0.0,
+                mean: 0.0,
+                geomean: 0.0,
+                median: 0.0,
+                stddev: 0.0,
+            }),
+            empty_rows: lens.iter().filter(|&&l| l == 0.0).count(),
+            bandwidth,
+            mean_band: if m.nnz() == 0 { 0.0 } else { band_sum / m.nnz() as f64 },
+            structural_symmetry: if m.nnz() == 0 { 1.0 } else { mirrored as f64 / m.nnz() as f64 },
+        }
+    }
+
+    /// One-line report used by `ehyb info`.
+    pub fn oneline(&self) -> String {
+        format!(
+            "n={} nnz={} nnz/row(avg={:.1},max={:.0},sd={:.1}) bw={} sym={:.2}",
+            self.nrows,
+            self.nnz,
+            self.row_nnz.mean,
+            self.row_nnz.max,
+            self.row_nnz.stddev,
+            self.bandwidth,
+            self.structural_symmetry
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{poisson2d, circuit};
+
+    #[test]
+    fn poisson_stats() {
+        let s = MatrixStats::of(&poisson2d::<f64>(10, 10));
+        assert_eq!(s.nrows, 100);
+        assert_eq!(s.bandwidth, 10);
+        assert!((s.structural_symmetry - 1.0).abs() < 1e-12);
+        assert_eq!(s.empty_rows, 0);
+        assert_eq!(s.row_nnz.max, 5.0);
+    }
+
+    #[test]
+    fn circuit_not_symmetric() {
+        let s = MatrixStats::of(&circuit::<f64>(500, 3, 0.05, 1));
+        assert!(s.structural_symmetry < 1.0);
+    }
+
+    #[test]
+    fn oneline_contains_fields() {
+        let s = MatrixStats::of(&poisson2d::<f64>(4, 4));
+        let line = s.oneline();
+        assert!(line.contains("n=16"));
+        assert!(line.contains("bw=4"));
+    }
+}

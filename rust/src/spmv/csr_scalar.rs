@@ -1,0 +1,72 @@
+//! CSR "scalar" engine: one pass per row, the textbook kernel
+//! (one CUDA thread per row in Bell & Garland's csr-scalar). On CPU this
+//! is also the strongest serial layout, so it doubles as the wall-clock
+//! reference for the perf pass.
+
+use super::SpmvEngine;
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+
+pub struct CsrScalar<S: Scalar> {
+    m: Csr<S>,
+}
+
+impl<S: Scalar> CsrScalar<S> {
+    pub fn new(m: &Csr<S>) -> Self {
+        Self { m: m.clone() }
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for CsrScalar<S> {
+    fn name(&self) -> &'static str {
+        "csr-scalar"
+    }
+
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        let m = &self.m;
+        assert_eq!(x.len(), m.ncols());
+        assert_eq!(y.len(), m.nrows());
+        let row_ptr = &m.row_ptr;
+        let cols = &m.col_idx;
+        let vals = &m.vals;
+        for i in 0..m.nrows() {
+            let lo = row_ptr[i] as usize;
+            let hi = row_ptr[i + 1] as usize;
+            let mut acc = S::ZERO;
+            for k in lo..hi {
+                // Safety note: indices validated at construction.
+                acc = vals[k].mul_add(x[cols[k] as usize], acc);
+            }
+            y[i] = acc;
+        }
+    }
+
+    fn nrows(&self) -> usize {
+        self.m.nrows()
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+    fn format_bytes(&self) -> usize {
+        self.m.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::testutil::validate_engine;
+    use crate::sparse::gen::{circuit, poisson2d};
+
+    #[test]
+    fn validates_f64() {
+        let m = poisson2d::<f64>(15, 17);
+        validate_engine(&CsrScalar::new(&m), &m);
+    }
+
+    #[test]
+    fn validates_f32() {
+        let m = circuit::<f32>(400, 4, 0.05, 3);
+        validate_engine(&CsrScalar::new(&m), &m);
+    }
+}

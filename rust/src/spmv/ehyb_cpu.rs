@@ -1,0 +1,283 @@
+//! The optimized CPU engine for EHYB — Algorithm 3's semantics with the
+//! L3 hot path tuned for cache behaviour: per-partition processing keeps
+//! the x-slice resident in L1/L2 (the CPU analogue of the explicit
+//! shared-memory cache), the u16 column stream halves index bandwidth,
+//! and slices are walked lane-major so `y` accumulates in registers.
+
+use super::SpmvEngine;
+use crate::sparse::ehyb::EhybMatrix;
+use crate::sparse::scalar::Scalar;
+use std::sync::Mutex;
+
+pub struct EhybCpu<S: Scalar> {
+    m: EhybMatrix<S>,
+    /// Scratch for the permuted x / y (reused across calls; allocation in
+    /// the hot loop costs ~10 % on paper-scale matrices).
+    scratch: Mutex<Scratch<S>>,
+}
+
+struct Scratch<S> {
+    xp: Vec<S>,
+    yp: Vec<S>,
+}
+
+impl<S: Scalar> EhybCpu<S> {
+    pub fn new(plan: &crate::preprocess::EhybPlan<S>) -> Self {
+        Self::from_matrix(plan.matrix.clone())
+    }
+
+    pub fn from_matrix(m: EhybMatrix<S>) -> Self {
+        let padded = m.padded_rows();
+        Self { m, scratch: Mutex::new(Scratch { xp: vec![S::ZERO; padded], yp: vec![S::ZERO; padded] }) }
+    }
+
+    pub fn matrix(&self) -> &EhybMatrix<S> {
+        &self.m
+    }
+
+    /// Core kernel in the new index space (no permutations) — this is
+    /// what the GPU kernel does per launch, and what the solver calls
+    /// when it keeps its vectors permanently in the new order.
+    ///
+    /// Loop order (§Perf iteration 1): **k-outer / lane-inner**. The
+    /// slice data is column-major (lane contiguous within each k
+    /// column), so the inner loop streams `vals`/`cols` sequentially and
+    /// gathers from the L1-resident cached x-slice; the h accumulators
+    /// live in a stack array. The GPU-order walk (lane-outer, stride-h
+    /// through the arrays) is kept as [`Self::spmv_new_order_lane_major`]
+    /// for the before/after log in EXPERIMENTS.md §Perf.
+    pub fn spmv_new_order(&self, xp: &[S], yp: &mut [S]) {
+        let m = &self.m;
+        debug_assert_eq!(xp.len(), m.padded_rows());
+        debug_assert_eq!(yp.len(), m.padded_rows());
+        let h = m.slice_height;
+        let spp = m.slices_per_part();
+        debug_assert!(h <= 64);
+        let mut acc = [S::ZERO; 64];
+        for p in 0..m.num_parts {
+            // Explicit cache: this slice of xp stays hot in L1/L2 for the
+            // whole partition (GPU: copied into shared memory once).
+            let cached = &xp[p * m.vec_size..(p + 1) * m.vec_size];
+            let mut row = p * m.vec_size;
+            for ls in 0..spp {
+                let s = p * spp + ls;
+                let base = m.slice_ptr[s] as usize;
+                let w = m.slice_width[s] as usize;
+                acc[..h].fill(S::ZERO);
+                for k in 0..w {
+                    let off = base + k * h;
+                    let vals = &m.ell_vals[off..off + h];
+                    let cols = &m.ell_cols[off..off + h];
+                    for lane in 0..h {
+                        // Padding is col=0/val=0: branch-free. Bounds
+                        // are guaranteed by EhybMatrix::validate.
+                        acc[lane] = unsafe {
+                            vals.get_unchecked(lane)
+                                .mul_add(*cached.get_unchecked(*cols.get_unchecked(lane) as usize), acc[lane])
+                        };
+                    }
+                }
+                yp[row..row + h].copy_from_slice(&acc[..h]);
+                row += h;
+            }
+        }
+        // ER pass: uncached gathers over the full xp, same loop order.
+        for s in 0..m.er_slice_width.len() {
+            let base = m.er_slice_ptr[s] as usize;
+            let w = m.er_slice_width[s] as usize;
+            let jmax = (m.er_rows - s * h).min(h);
+            acc[..jmax].fill(S::ZERO);
+            for k in 0..w {
+                let off = base + k * h;
+                for lane in 0..jmax {
+                    let idx = off + lane;
+                    acc[lane] = unsafe {
+                        m.er_vals
+                            .get_unchecked(idx)
+                            .mul_add(*xp.get_unchecked(*m.er_cols.get_unchecked(idx) as usize), acc[lane])
+                    };
+                }
+            }
+            for lane in 0..jmax {
+                let out = m.y_idx_er[s * h + lane] as usize;
+                yp[out] += acc[lane];
+            }
+        }
+    }
+
+    /// The GPU-order walk (lane-outer, stride-h array access) — kept as
+    /// the §Perf baseline. Identical arithmetic per row, so results are
+    /// bit-equal to [`Self::spmv_new_order`].
+    pub fn spmv_new_order_lane_major(&self, xp: &[S], yp: &mut [S]) {
+        let m = &self.m;
+        let h = m.slice_height;
+        let spp = m.slices_per_part();
+        for p in 0..m.num_parts {
+            let cached = &xp[p * m.vec_size..(p + 1) * m.vec_size];
+            let mut row = p * m.vec_size;
+            for ls in 0..spp {
+                let s = p * spp + ls;
+                let base = m.slice_ptr[s] as usize;
+                let w = m.slice_width[s] as usize;
+                for lane in 0..h {
+                    let mut acc = S::ZERO;
+                    let mut idx = base + lane;
+                    for _ in 0..w {
+                        acc = unsafe {
+                            m.ell_vals
+                                .get_unchecked(idx)
+                                .mul_add(*cached.get_unchecked(*m.ell_cols.get_unchecked(idx) as usize), acc)
+                        };
+                        idx += h;
+                    }
+                    yp[row + lane] = acc;
+                }
+                row += h;
+            }
+        }
+        for s in 0..m.er_slice_width.len() {
+            let base = m.er_slice_ptr[s] as usize;
+            let w = m.er_slice_width[s] as usize;
+            let jmax = (m.er_rows - s * h).min(h);
+            for lane in 0..jmax {
+                let mut acc = S::ZERO;
+                let mut idx = base + lane;
+                for _ in 0..w {
+                    acc = unsafe {
+                        m.er_vals
+                            .get_unchecked(idx)
+                            .mul_add(*xp.get_unchecked(*m.er_cols.get_unchecked(idx) as usize), acc)
+                    };
+                    idx += h;
+                }
+                let out = m.y_idx_er[s * h + lane] as usize;
+                yp[out] += acc;
+            }
+        }
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
+    fn name(&self) -> &'static str {
+        "ehyb"
+    }
+
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        let m = &self.m;
+        assert_eq!(x.len(), m.n);
+        assert_eq!(y.len(), m.n);
+        let mut guard = self.scratch.lock().unwrap();
+        let Scratch { xp, yp } = &mut *guard;
+        // Permute in (gather by iperm is sequential-write).
+        for new in 0..m.padded_rows() {
+            let old = m.iperm[new] as usize;
+            xp[new] = if old < m.n { x[old] } else { S::ZERO };
+        }
+        self.spmv_new_order(xp, yp);
+        for new in 0..m.padded_rows() {
+            let old = m.iperm[new] as usize;
+            if old < m.n {
+                y[old] = yp[new];
+            }
+        }
+    }
+
+    fn nrows(&self) -> usize {
+        self.m.n
+    }
+    fn nnz(&self) -> usize {
+        self.m.nnz()
+    }
+    fn format_bytes(&self) -> usize {
+        self.m.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::preprocess::{EhybPlan, PreprocessConfig};
+    use crate::spmv::testutil::validate_engine;
+    use crate::sparse::gen::{circuit, poisson2d, poisson3d, unstructured_mesh};
+
+    fn cfg(v: usize) -> PreprocessConfig {
+        PreprocessConfig { vec_size_override: Some(v), ..Default::default() }
+    }
+
+    #[test]
+    fn validates_poisson2d() {
+        let m = poisson2d::<f64>(20, 20);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        validate_engine(&EhybCpu::new(&plan), &m);
+    }
+
+    #[test]
+    fn validates_poisson3d_f32() {
+        let m = poisson3d::<f32>(9, 8, 7);
+        let plan = EhybPlan::build(&m, &cfg(96)).unwrap();
+        validate_engine(&EhybCpu::new(&plan), &m);
+    }
+
+    #[test]
+    fn validates_unstructured() {
+        let m = unstructured_mesh::<f64>(24, 24, 0.7, 8);
+        let plan = EhybPlan::build(&m, &cfg(128)).unwrap();
+        validate_engine(&EhybCpu::new(&plan), &m);
+    }
+
+    #[test]
+    fn validates_circuit() {
+        let m = circuit::<f64>(900, 4, 0.04, 15);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        validate_engine(&EhybCpu::new(&plan), &m);
+    }
+
+    #[test]
+    fn matches_reference_semantics() {
+        // Engine must agree with the EhybMatrix reference spmv exactly
+        // (same arithmetic order).
+        let m = unstructured_mesh::<f64>(16, 16, 0.5, 6);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        let engine = EhybCpu::new(&plan);
+        let x: Vec<f64> = (0..m.nrows()).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut y1 = vec![0.0; m.nrows()];
+        let mut y2 = vec![0.0; m.nrows()];
+        engine.spmv(&x, &mut y1);
+        plan.matrix.spmv(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn loop_orders_agree_exactly() {
+        // k-outer (CPU-optimized) and lane-outer (GPU-order baseline)
+        // accumulate per-row in the same k order => bit-identical.
+        let m = unstructured_mesh::<f64>(20, 20, 0.6, 9);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        let engine = EhybCpu::new(&plan);
+        let xp = plan.matrix.permute_x(
+            &(0..m.nrows()).map(|i| (i as f64 * 0.11).cos()).collect::<Vec<_>>(),
+        );
+        let mut y1 = vec![0.0; plan.matrix.padded_rows()];
+        let mut y2 = vec![0.0; plan.matrix.padded_rows()];
+        engine.spmv_new_order(&xp, &mut y1);
+        engine.spmv_new_order_lane_major(&xp, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn new_order_path_consistent() {
+        let m = poisson2d::<f64>(16, 16);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        let engine = EhybCpu::new(&plan);
+        let x: Vec<f64> = (0..256).map(|i| i as f64 * 0.01).collect();
+        let xp = plan.matrix.permute_x(&x);
+        let mut yp = vec![0.0; plan.matrix.padded_rows()];
+        engine.spmv_new_order(&xp, &mut yp);
+        let y = plan.matrix.unpermute_y(&yp);
+        let mut y_ref = vec![0.0; 256];
+        m.spmv(&x, &mut y_ref);
+        for i in 0..256 {
+            assert!((y[i] - y_ref[i]).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! ELL engine — wraps [`crate::sparse::ell::Ell`] behind the engine
+//! trait. Column-major traversal, the coalesced GPU order.
+
+use super::SpmvEngine;
+use crate::sparse::csr::Csr;
+use crate::sparse::ell::Ell;
+use crate::sparse::scalar::Scalar;
+
+pub struct EllEngine<S: Scalar> {
+    e: Ell<S>,
+    nnz: usize,
+}
+
+impl<S: Scalar> EllEngine<S> {
+    pub fn new(m: &Csr<S>) -> Self {
+        let e = Ell::from_csr(m);
+        let nnz = m.nnz();
+        Self { e, nnz }
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for EllEngine<S> {
+    fn name(&self) -> &'static str {
+        "ell"
+    }
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        self.e.spmv(x, y);
+    }
+    fn nrows(&self) -> usize {
+        self.e.nrows()
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn format_bytes(&self) -> usize {
+        self.e.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::testutil::validate_engine;
+    use crate::sparse::gen::poisson2d;
+
+    #[test]
+    fn validates() {
+        let m = poisson2d::<f64>(12, 9);
+        validate_engine(&EllEngine::new(&m), &m);
+    }
+}

@@ -1,0 +1,48 @@
+//! HYB engine (cuSPARSE-HYB analogue): auto-width ELL + COO tail.
+
+use super::SpmvEngine;
+use crate::sparse::csr::Csr;
+use crate::sparse::hyb::Hyb;
+use crate::sparse::scalar::Scalar;
+
+pub struct HybEngine<S: Scalar> {
+    h: Hyb<S>,
+    nrows: usize,
+}
+
+impl<S: Scalar> HybEngine<S> {
+    pub fn new(m: &Csr<S>) -> Self {
+        Self { h: Hyb::from_csr_auto(m, 2.0 / 3.0), nrows: m.nrows() }
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for HybEngine<S> {
+    fn name(&self) -> &'static str {
+        "hyb"
+    }
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        self.h.spmv(x, y);
+    }
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn nnz(&self) -> usize {
+        self.h.nnz()
+    }
+    fn format_bytes(&self) -> usize {
+        self.h.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::testutil::validate_engine;
+    use crate::sparse::gen::circuit;
+
+    #[test]
+    fn validates_on_skewed() {
+        let m = circuit::<f64>(600, 3, 0.05, 21);
+        validate_engine(&HybEngine::new(&m), &m);
+    }
+}

@@ -1,0 +1,71 @@
+//! CPU SpMV engines: the optimized EHYB hot path plus every baseline the
+//! paper compares against (§5): CSR scalar/vector (cuSPARSE ALG1/ALG2
+//! analogues), ELL, HYB, SELL-P, merge-based (Merrill & Garland), and a
+//! CSR5-like tiled engine. All engines implement [`SpmvEngine`] and are
+//! validated against the f64 CSR oracle.
+//!
+//! These serve two roles:
+//! 1. wall-clock baselines for the L3 perf pass (SpMV is memory-bound on
+//!    CPU too, so relative format behaviour is meaningful), and
+//! 2. executable semantics for the GPU-simulated kernels in
+//!    [`crate::gpu::kernels`] (same traversal order, so the simulator's
+//!    traffic counts describe exactly this arithmetic).
+
+pub mod csr_scalar;
+pub mod csr_vector;
+pub mod ell;
+pub mod hyb;
+pub mod sellp;
+pub mod merge;
+pub mod csr5;
+pub mod ehyb_cpu;
+pub mod registry;
+
+use crate::sparse::scalar::Scalar;
+
+/// A prepared SpMV engine: `y = A x` for the matrix it was built from.
+pub trait SpmvEngine<S: Scalar>: Send + Sync {
+    /// Engine name as it appears in reports (matches the paper's labels).
+    fn name(&self) -> &'static str;
+    /// Execute one SpMV.
+    fn spmv(&self, x: &[S], y: &mut [S]);
+    /// Rows of the underlying matrix.
+    fn nrows(&self) -> usize;
+    /// Logical nonzeros (for GFLOPS accounting: 2·nnz flops per SpMV).
+    fn nnz(&self) -> usize;
+    /// Device-memory bytes the format occupies (traffic-model input).
+    fn format_bytes(&self) -> usize;
+}
+
+/// GFLOPS for `secs` per SpMV at this engine's nnz (2 flops per entry —
+/// the convention the paper's figures use).
+pub fn gflops(nnz: usize, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    2.0 * nnz as f64 / secs / 1e9
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::sparse::csr::Csr;
+    use crate::util::check::assert_allclose;
+
+    /// Validate `engine` against the f64 oracle on a deterministic x.
+    pub fn validate_engine<S: Scalar>(engine: &dyn SpmvEngine<S>, csr: &Csr<S>) {
+        let n = csr.ncols();
+        let x: Vec<S> =
+            (0..n).map(|i| S::from_f64(((i * 13 + 5) % 23) as f64 * 0.125 - 1.0)).collect();
+        let oracle = csr.spmv_f64_oracle(&x);
+        let mut y = vec![S::ZERO; csr.nrows()];
+        engine.spmv(&x, &mut y);
+        let y64: Vec<f64> = y.iter().map(|v| v.to_f64()).collect();
+        let (rtol, atol) = if S::BYTES == 4 { (1e-4, 1e-4) } else { (1e-10, 1e-10) };
+        assert_allclose(&y64, &oracle, rtol, atol)
+            .unwrap_or_else(|e| panic!("{} mismatch: {e}", engine.name()));
+        assert_eq!(engine.nrows(), csr.nrows());
+        assert_eq!(engine.nnz(), csr.nnz(), "{} nnz", engine.name());
+        assert!(engine.format_bytes() > 0);
+    }
+}

@@ -1,0 +1,66 @@
+//! Engine registry: build every paper baseline (and EHYB) for a matrix.
+//! The harness iterates this list to produce the Figure 2–5 series and
+//! Table 1–2 speedups.
+
+use super::csr5::Csr5Like;
+use super::csr_scalar::CsrScalar;
+use super::csr_vector::CsrVector;
+use super::ehyb_cpu::EhybCpu;
+use super::hyb::HybEngine;
+use super::merge::MergeSpmv;
+use super::sellp::SellPEngine;
+use super::SpmvEngine;
+use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+
+/// Baseline engines (everything except EHYB, which needs preprocessing).
+pub fn baselines<S: Scalar>(m: &Csr<S>) -> Vec<Box<dyn SpmvEngine<S>>> {
+    vec![
+        Box::new(CsrScalar::new(m)),
+        Box::new(CsrVector::new(m)),
+        Box::new(HybEngine::new(m)),
+        Box::new(SellPEngine::new(m)),
+        Box::new(MergeSpmv::new(m)),
+        Box::new(Csr5Like::new(m)),
+    ]
+}
+
+/// All engines including EHYB (returns the plan too, for Fig. 6 data).
+pub fn all_engines<S: Scalar>(
+    m: &Csr<S>,
+    cfg: &PreprocessConfig,
+) -> crate::Result<(Vec<Box<dyn SpmvEngine<S>>>, EhybPlan<S>)> {
+    let plan = EhybPlan::build(m, cfg)?;
+    let mut engines = baselines(m);
+    engines.push(Box::new(EhybCpu::new(&plan)));
+    Ok((engines, plan))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::testutil::validate_engine;
+    use crate::sparse::gen::unstructured_mesh;
+
+    #[test]
+    fn every_engine_validates() {
+        let m = unstructured_mesh::<f64>(20, 20, 0.5, 12);
+        let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+        let (engines, _plan) = all_engines(&m, &cfg).unwrap();
+        assert_eq!(engines.len(), 7);
+        for e in &engines {
+            validate_engine(e.as_ref(), &m);
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let m = unstructured_mesh::<f64>(12, 12, 0.5, 1);
+        let engines = baselines(&m);
+        let mut names: Vec<&str> = engines.iter().map(|e| e.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), engines.len());
+    }
+}

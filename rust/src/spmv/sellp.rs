@@ -1,0 +1,51 @@
+//! SELL-P engine (paper ref [2], the format EHYB's ELL part extends).
+
+use super::SpmvEngine;
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+use crate::sparse::sellp::SellP;
+
+pub struct SellPEngine<S: Scalar> {
+    s: SellP<S>,
+    nnz: usize,
+}
+
+impl<S: Scalar> SellPEngine<S> {
+    pub fn new(m: &Csr<S>) -> Self {
+        Self { s: SellP::from_csr(m, 32), nnz: m.nnz() }
+    }
+    pub fn with_slice_height(m: &Csr<S>, h: usize) -> Self {
+        Self { s: SellP::from_csr(m, h), nnz: m.nnz() }
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for SellPEngine<S> {
+    fn name(&self) -> &'static str {
+        "sellp"
+    }
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        self.s.spmv(x, y);
+    }
+    fn nrows(&self) -> usize {
+        self.s.nrows()
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn format_bytes(&self) -> usize {
+        self.s.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmv::testutil::validate_engine;
+    use crate::sparse::gen::unstructured_mesh;
+
+    #[test]
+    fn validates() {
+        let m = unstructured_mesh::<f64>(18, 18, 0.5, 2);
+        validate_engine(&SellPEngine::new(&m), &m);
+    }
+}

@@ -1,0 +1,79 @@
+//! Lightweight property-test harness (proptest is not in the offline
+//! dependency closure). A property is a closure over a seeded PRNG; the
+//! runner executes many random cases and reports the failing seed so a
+//! failure reproduces deterministically.
+
+use super::prng::Xoshiro256;
+
+/// Number of cases per property; override with `EHYB_PROPTEST_CASES`.
+pub fn default_cases() -> u64 {
+    std::env::var("EHYB_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` for `cases` random seeds derived from `base_seed`.
+/// The closure returns `Err(msg)` to signal a violated property.
+pub fn check_prop<F>(name: &str, base_seed: u64, cases: u64, prop: F)
+where
+    F: Fn(&mut Xoshiro256) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(case);
+        let mut rng = Xoshiro256::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {case} (seed={seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert two float slices match to a relative-or-absolute tolerance.
+/// SpMV accumulation order differs between engines, so exact equality is
+/// wrong; this mirrors `numpy.testing.assert_allclose` semantics.
+pub fn assert_allclose(actual: &[f64], expected: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+    if actual.len() != expected.len() {
+        return Err(format!("length mismatch: {} vs {}", actual.len(), expected.len()));
+    }
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        let tol = atol + rtol * e.abs();
+        if (a - e).abs() > tol {
+            return Err(format!("index {i}: actual={a} expected={e} (|diff|={} > tol={tol})", (a - e).abs()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        check_prop("trivial", 1, 16, |rng| {
+            let n = rng.next_below(100);
+            if n < 100 { Ok(()) } else { Err("impossible".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics() {
+        check_prop("always-fails", 1, 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_accepts_close() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9, 1e-9).is_ok());
+    }
+
+    #[test]
+    fn allclose_rejects_far() {
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-9, 1e-9).is_err());
+    }
+
+    #[test]
+    fn allclose_rejects_len_mismatch() {
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-9, 1e-9).is_err());
+    }
+}

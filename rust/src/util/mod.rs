@@ -1,0 +1,12 @@
+//! Small shared utilities: deterministic PRNG, timers, stats, and a
+//! scoped-thread parallel map (the crate has no external deps beyond
+//! `xla`/`anyhow`, so rand/rayon equivalents live here).
+
+pub mod prng;
+pub mod timer;
+pub mod stats;
+pub mod par;
+pub mod check;
+
+pub use prng::Xoshiro256;
+pub use timer::Timer;

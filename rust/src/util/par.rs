@@ -1,0 +1,92 @@
+//! Minimal data-parallel helpers over `std::thread::scope` (no rayon in
+//! the offline dependency closure). Used by the multilevel partitioner —
+//! the paper runs METIS with 16 host threads — and by the suite harness
+//! to overlap independent matrix measurements.
+
+/// Number of worker threads to use: honours `EHYB_THREADS`, defaults to
+/// `min(available_parallelism, 16)` to mirror the paper's "at most 16 CPU
+/// cores for preprocessing".
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("EHYB_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Parallel map over an index range with static chunking. `f` must be
+/// `Sync`; results are returned in index order.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n < 64 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = t * chunk;
+                for (i, slot) in slice.iter_mut().enumerate() {
+                    *slot = Some(f(base + i));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Parallel for-each over mutable chunks of a slice: each worker owns a
+/// contiguous chunk. `f(chunk_start_index, chunk)`.
+pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(xs: &mut [T], chunk: usize, f: F) {
+    let chunk = chunk.max(1);
+    if xs.len() <= chunk {
+        f(0, xs);
+        return;
+    }
+    std::thread::scope(|s| {
+        for (t, slice) in xs.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || f(t * chunk, slice));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial() {
+        let out = par_map(1000, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_small_input() {
+        assert_eq!(par_map(3, |i| i + 1), vec![1, 2, 3]);
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_all() {
+        let mut xs = vec![0usize; 10_000];
+        par_chunks_mut(&mut xs, 1024, |base, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = base + i;
+            }
+        });
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,110 @@
+//! Descriptive statistics used by the harness's speedup tables
+//! (paper Tables 1–2) and matrix structure reports.
+
+/// Summary of a sample: used for the "max / min / average speedup" rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub geomean: f64,
+    pub median: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let n = xs.len();
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let sum: f64 = xs.iter().sum();
+        let mean = sum / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let logsum: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Some(Summary {
+            n,
+            min: sorted[0],
+            max: sorted[n - 1],
+            mean,
+            geomean: (logsum / n as f64).exp(),
+            median,
+            stddev: var.sqrt(),
+        })
+    }
+}
+
+/// Fraction of entries strictly greater than 1.0 — the paper's
+/// "EHYB is faster in % of matrices" column.
+pub fn win_rate(speedups: &[f64]) -> f64 {
+    if speedups.is_empty() {
+        return 0.0;
+    }
+    speedups.iter().filter(|&&s| s > 1.0).count() as f64 / speedups.len() as f64
+}
+
+/// Histogram with fixed bin width starting at `lo`; used for nnz/row
+/// distribution reports in `sparse::stats`.
+pub fn histogram(xs: &[f64], lo: f64, width: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    for &x in xs {
+        let b = ((x - lo) / width).floor();
+        if b >= 0.0 && (b as usize) < bins {
+            h[b as usize] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert!((s.geomean - 24f64.powf(0.25)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single() {
+        let s = Summary::of(&[7.0]).unwrap();
+        assert_eq!(s.min, 7.0);
+        assert_eq!(s.max, 7.0);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn summary_empty_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn win_rate_counts_strict_wins() {
+        assert_eq!(win_rate(&[1.5, 0.9, 1.0, 2.0]), 0.5);
+        assert_eq!(win_rate(&[]), 0.0);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let h = histogram(&[0.5, 1.5, 1.7, 9.9, -1.0, 100.0], 0.0, 1.0, 10);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[1], 2);
+        assert_eq!(h[9], 1);
+        assert_eq!(h.iter().sum::<usize>(), 4); // outliers dropped
+    }
+}

@@ -1,0 +1,108 @@
+//! Wall-clock timing helpers used by the preprocessing decomposition
+//! (paper Fig. 6) and the benchmark harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap time in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.elapsed_secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Run `f` repeatedly until `min_time` has elapsed (at least `min_iters`
+/// times) and return the mean seconds per iteration. The benchmark
+/// equivalent of criterion's core loop, sized for SpMV-scale kernels.
+pub fn bench_secs<F: FnMut()>(mut f: F, min_iters: u32, min_time: Duration) -> f64 {
+    // Warmup.
+    f();
+    let start = Instant::now();
+    let mut iters = 0u32;
+    loop {
+        f();
+        iters += 1;
+        if iters >= min_iters && start.elapsed() >= min_time {
+            break;
+        }
+        // Hard cap so pathological cases cannot hang a suite run.
+        if iters >= 1_000_000 {
+            break;
+        }
+    }
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Median-of-runs measurement: more robust than the mean for the short
+/// kernels in the Fig. 6 preprocessing-ratio experiment.
+pub fn bench_median<F: FnMut()>(mut f: F, runs: usize) -> f64 {
+    let mut times: Vec<f64> = (0..runs.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_secs() >= 0.001);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let l1 = t.lap();
+        let l2 = t.elapsed_secs();
+        assert!(l1 >= 0.001);
+        assert!(l2 < l1);
+    }
+
+    #[test]
+    fn bench_secs_positive() {
+        let mut x = 0u64;
+        let s = bench_secs(
+            || {
+                x = x.wrapping_add(1);
+                std::hint::black_box(x);
+            },
+            10,
+            Duration::from_millis(1),
+        );
+        assert!(s > 0.0);
+    }
+
+    #[test]
+    fn bench_median_ordering() {
+        let s = bench_median(|| std::thread::sleep(Duration::from_micros(100)), 5);
+        assert!(s >= 50e-6);
+    }
+}

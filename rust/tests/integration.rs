@@ -1,0 +1,185 @@
+//! Cross-module integration tests: the full pipeline (generator → graph
+//! partitioner → preprocessing → engines → solver → harness) on real
+//! workloads, no PJRT required (that path is covered in runtime_pjrt.rs).
+
+use ehyb::coordinator::service::SpmvService;
+use ehyb::coordinator::{bicgstab, cg, Jacobi, Spai0, SolverConfig};
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::{runner, suite};
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::sparse::csr::Csr;
+use ehyb::sparse::gen;
+use ehyb::sparse::mmio;
+use ehyb::spmv::registry;
+use ehyb::spmv::SpmvEngine;
+use ehyb::util::check::assert_allclose;
+
+fn x_for(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i * 29 + 13) % 31) as f64 * 0.125 - 1.5).collect()
+}
+
+#[test]
+fn full_pipeline_all_engines_agree_across_generators() {
+    let matrices: Vec<(&str, Csr<f64>)> = vec![
+        ("poisson2d", gen::poisson2d(23, 19)),
+        ("poisson3d", gen::poisson3d(9, 8, 7)),
+        ("stencil27", gen::stencil27(7, 7, 7, 3)),
+        ("elasticity", gen::elasticity3d(4, 4, 4, 3, 5)),
+        ("unstructured", gen::unstructured_mesh(20, 20, 0.6, 7)),
+        ("circuit", gen::circuit(600, 4, 0.03, 9)),
+        ("kkt", gen::kkt(6, 11)),
+        ("banded", gen::banded(500, 9, 0.5, 13)),
+    ];
+    for (name, m) in matrices {
+        let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+        let (engines, plan) = registry::all_engines(&m, &cfg).unwrap();
+        plan.matrix.validate().unwrap();
+        let x = x_for(m.ncols());
+        let oracle = m.spmv_f64_oracle(&x);
+        for e in &engines {
+            let mut y = vec![0.0; m.nrows()];
+            e.spmv(&x, &mut y);
+            assert_allclose(&y, &oracle, 1e-9, 1e-9)
+                .unwrap_or_else(|err| panic!("{name}/{}: {err}", e.name()));
+        }
+    }
+}
+
+#[test]
+fn mmio_roundtrip_through_full_pipeline() {
+    let m = gen::unstructured_mesh::<f64>(16, 16, 0.4, 21);
+    let dir = std::env::temp_dir().join("ehyb_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.mtx");
+    mmio::write_matrix_market(&m.to_coo(), &path).unwrap();
+    let m2: Csr<f64> = mmio::read_matrix_market::<f64, _>(&path).unwrap().to_csr();
+    assert_eq!(m.nnz(), m2.nnz());
+    let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+    let plan = EhybPlan::build(&m2, &cfg).unwrap();
+    let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+    let x = x_for(m.ncols());
+    let mut y = vec![0.0; m.nrows()];
+    engine.spmv(&x, &mut y);
+    assert_allclose(&y, &m.spmv_f64_oracle(&x), 1e-10, 1e-10).unwrap();
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn solvers_match_across_engines() {
+    let a = gen::poisson3d::<f64>(7, 7, 7);
+    let n = a.nrows();
+    let b = x_for(n);
+    let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+    let plan = EhybPlan::build(&a, &cfg).unwrap();
+    let ehyb_engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+    let pre = Jacobi::new(&a);
+    let scfg = SolverConfig::default();
+    let (x1, r1) = cg(|v, y: &mut [f64]| a.spmv(v, y), &b, &vec![0.0; n], &pre, &scfg);
+    let (x2, r2) = cg(|v, y: &mut [f64]| ehyb_engine.spmv(v, y), &b, &vec![0.0; n], &pre, &scfg);
+    assert!(r1.converged && r2.converged);
+    assert_allclose(&x1, &x2, 1e-6, 1e-8).unwrap();
+}
+
+#[test]
+fn bicgstab_spai_on_nonsymmetric_through_ehyb() {
+    let a = gen::diag_dominant(&gen::circuit::<f64>(800, 4, 0.02, 3));
+    let n = a.nrows();
+    let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+    let plan = EhybPlan::build(&a, &cfg).unwrap();
+    let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+    let b = x_for(n);
+    let pre = Spai0::new(&a);
+    let (x, rep) = bicgstab(
+        |v, y: &mut [f64]| engine.spmv(v, y),
+        &b,
+        &vec![0.0; n],
+        &pre,
+        &SolverConfig { max_iters: 3000, ..Default::default() },
+    );
+    assert!(rep.converged, "{rep:?}");
+    let mut ax = vec![0.0; n];
+    a.spmv(&x, &mut ax);
+    assert_allclose(&ax, &b, 1e-6, 1e-7).unwrap();
+}
+
+#[test]
+fn service_solver_roundtrip() {
+    let a = gen::poisson2d::<f64>(20, 20);
+    let n = a.nrows();
+    let a2 = a.clone();
+    let svc = SpmvService::spawn(
+        move || {
+            let plan = EhybPlan::build(
+                &a2,
+                &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
+            )?;
+            let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+            Ok(move |x: &[f64], y: &mut [f64]| engine.spmv(x, y))
+        },
+        n,
+        8,
+    )
+    .unwrap();
+    let client = svc.client();
+    let b = x_for(n);
+    let pre = Jacobi::new(&a);
+    let (x, rep) = cg(
+        |v, y: &mut [f64]| y.copy_from_slice(&client.spmv(v).unwrap()),
+        &b,
+        &vec![0.0; n],
+        &pre,
+        &SolverConfig::default(),
+    );
+    assert!(rep.converged);
+    let mut ax = vec![0.0; n];
+    a.spmv(&x, &mut ax);
+    // rtol-1e-8 solve: entries of b that are exactly 0 need a real atol.
+    assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
+    assert!(svc.metrics.spmv_latency.count() > 0);
+}
+
+#[test]
+fn harness_runner_over_tiny_corpus() {
+    // Every suite16 matrix must preprocess and simulate cleanly at Tiny.
+    let dev = GpuDevice::v100();
+    for spec in suite::suite16(suite::Scale::Tiny) {
+        let m = spec.build();
+        let run =
+            runner::run_matrix(&spec.name, spec.category, &m, &PreprocessConfig::default(), &dev)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", spec.name));
+        assert!(run.gflops_of("ehyb").unwrap() > 0.0, "{}", spec.name);
+        assert!(run.rows.len() >= 6, "{}", spec.name);
+        assert!((0.0..=1.0).contains(&run.er_fraction));
+    }
+}
+
+#[test]
+fn equations_1_2_feasible_across_scales() {
+    // Equation (1)'s constraint VecSize·τ < SHM holds at every scale,
+    // partitions cover the matrix, and f32 never caches fewer rows
+    // than f64 (τ is halved).
+    use ehyb::preprocess::cache_size::{cache_plan, DeviceParams};
+    let dev = DeviceParams::v100();
+    for n in [10_000usize, 100_000, 1_000_000, 10_000_000, 50_000_000] {
+        let p64 = cache_plan::<f64>(n, 32, &dev);
+        assert!(p64.vec_size * 8 <= dev.shm_bytes, "n={n}");
+        assert!(p64.num_parts * p64.vec_size >= n, "n={n}");
+        let p32 = cache_plan::<f32>(n, 32, &dev);
+        assert!(p32.vec_size * 4 <= dev.shm_bytes, "n={n}");
+        assert!(p32.vec_size >= p64.vec_size, "f32 cache should fit at least as many rows");
+    }
+}
+
+#[test]
+fn gpu_sim_ordering_stable_across_runs() {
+    // The simulator is deterministic: same matrix -> identical report.
+    let m = gen::unstructured_mesh::<f64>(32, 32, 0.5, 17);
+    let cfg = PreprocessConfig { vec_size_override: Some(128), ..Default::default() };
+    let dev = GpuDevice::v100();
+    let a = runner::run_matrix("x", "t", &m, &cfg, &dev).unwrap();
+    let b = runner::run_matrix("x", "t", &m, &cfg, &dev).unwrap();
+    for (ra, rb) in a.rows.iter().zip(&b.rows) {
+        assert_eq!(ra.framework, rb.framework);
+        assert!((ra.gflops - rb.gflops).abs() < 1e-9);
+    }
+}

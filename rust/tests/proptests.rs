@@ -1,0 +1,251 @@
+//! Property-based tests over randomly generated matrices and partitions
+//! (custom harness in `ehyb::util::check` — proptest is not in the
+//! offline dependency closure; failures reproduce from the printed
+//! seed). Cases default to 64 per property; override with
+//! EHYB_PROPTEST_CASES.
+
+use ehyb::partition::{partition_graph, Graph, PartitionConfig, PartitionMethod};
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::sparse::coo::Coo;
+use ehyb::sparse::csr::Csr;
+use ehyb::spmv::registry;
+use ehyb::spmv::SpmvEngine;
+use ehyb::util::check::{assert_allclose, check_prop, default_cases};
+use ehyb::util::Xoshiro256;
+
+/// Random square matrix: mixes local band structure with global
+/// scatter, random degree distribution, possible empty rows.
+fn random_matrix(rng: &mut Xoshiro256) -> Csr<f64> {
+    let n = 16 + rng.next_below(400);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        if rng.next_f64() < 0.05 {
+            continue; // empty row
+        }
+        coo.push(i, i, rng.range_f64(1.0, 4.0)); // keep a diagonal
+        let deg = rng.next_below(12);
+        for _ in 0..deg {
+            let j = if rng.next_f64() < 0.6 {
+                // local
+                let span = 24.min(n);
+                (i + rng.next_below(span)).saturating_sub(span / 2).min(n - 1)
+            } else {
+                rng.next_below(n)
+            };
+            coo.push(i, j, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+fn random_x(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+}
+
+#[test]
+fn prop_all_engines_match_oracle() {
+    check_prop("engines-match-oracle", 0xE41B, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let vec_size = 32 * (1 + rng.next_below(4));
+        let cfg = PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() };
+        let (engines, plan) =
+            registry::all_engines(&m, &cfg).map_err(|e| format!("build: {e:#}"))?;
+        plan.matrix.validate().map_err(|e| format!("validate: {e:#}"))?;
+        let x = random_x(rng, m.ncols());
+        let oracle = m.spmv_f64_oracle(&x);
+        for e in &engines {
+            let mut y = vec![0.0; m.nrows()];
+            e.spmv(&x, &mut y);
+            assert_allclose(&y, &oracle, 1e-9, 1e-9).map_err(|err| format!("{}: {err}", e.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmv_linearity() {
+    check_prop("spmv-linearity", 0x11AA, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+        let plan = EhybPlan::build(&m, &cfg).map_err(|e| e.to_string())?;
+        let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+        let n = m.nrows();
+        let x = random_x(rng, n);
+        let z = random_x(rng, n);
+        let (a, b) = (rng.range_f64(-3.0, 3.0), rng.range_f64(-3.0, 3.0));
+        let combo: Vec<f64> = x.iter().zip(&z).map(|(xi, zi)| a * xi + b * zi).collect();
+        let mut y_combo = vec![0.0; n];
+        engine.spmv(&combo, &mut y_combo);
+        let mut yx = vec![0.0; n];
+        let mut yz = vec![0.0; n];
+        engine.spmv(&x, &mut yx);
+        engine.spmv(&z, &mut yz);
+        let lin: Vec<f64> = yx.iter().zip(&yz).map(|(p, q)| a * p + b * q).collect();
+        assert_allclose(&y_combo, &lin, 1e-8, 1e-8)
+    });
+}
+
+#[test]
+fn prop_partition_invariants() {
+    check_prop("partition-invariants", 0x9A77, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let g = Graph::from_matrix_structure(&m);
+        let n = g.nvtx();
+        let cap = 32 * (1 + rng.next_below(4)) as u64;
+        let k = (n as u64).div_ceil(cap) as usize + rng.next_below(3);
+        let method = match rng.next_below(4) {
+            0 => PartitionMethod::Multilevel,
+            1 => PartitionMethod::BfsBand,
+            2 => PartitionMethod::IndexBlock,
+            _ => PartitionMethod::Random,
+        };
+        let r = partition_graph(
+            &g,
+            k,
+            cap,
+            &PartitionConfig { method, seed: rng.next_u64(), ..Default::default() },
+        );
+        // 1. Every vertex assigned a valid part.
+        if !r.assignment.iter().all(|&p| (p as usize) < k) {
+            return Err("assignment out of range".into());
+        }
+        // 2. Hard capacity respected.
+        for (p, &load) in r.loads.iter().enumerate() {
+            if load > cap {
+                return Err(format!("part {p} load {load} > cap {cap} ({method:?})"));
+            }
+        }
+        // 3. Loads account for every vertex.
+        if r.loads.iter().sum::<u64>() != n as u64 {
+            return Err("loads do not sum to n".into());
+        }
+        // 4. Reported edgecut equals a fresh count.
+        if r.edgecut != g.edgecut(&r.assignment) {
+            return Err("edgecut mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_preprocess_structure_invariants() {
+    check_prop("preprocess-invariants", 0xBEEF, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let cfg = PreprocessConfig {
+            vec_size_override: Some(32 * (1 + rng.next_below(3))),
+            sort_descending: rng.next_below(2) == 0,
+            ..Default::default()
+        };
+        let plan = EhybPlan::build(&m, &cfg).map_err(|e| e.to_string())?;
+        let e = &plan.matrix;
+        e.validate().map_err(|err| format!("validate: {err:#}"))?;
+        // nnz conservation.
+        if e.nnz() != m.nnz() {
+            return Err(format!("nnz {} != {}", e.nnz(), m.nnz()));
+        }
+        // Permutation is a bijection on [0, n).
+        let mut seen = vec![false; e.padded_rows()];
+        for &p in &e.perm {
+            if seen[p as usize] {
+                return Err("perm not injective".into());
+            }
+            seen[p as usize] = true;
+        }
+        // Slice widths bound the rows they contain (via fill ratio ≥ 1).
+        if e.ell_fill_ratio() < 1.0 - 1e-12 {
+            return Err(format!("fill ratio {} < 1", e.ell_fill_ratio()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_permute_roundtrip() {
+    check_prop("permute-roundtrip", 0x7777, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+        let plan = EhybPlan::build(&m, &cfg).map_err(|e| e.to_string())?;
+        let x = random_x(rng, m.nrows());
+        let xp = plan.matrix.permute_x(&x);
+        let back = plan.matrix.unpermute_y(&xp);
+        assert_allclose(&back, &x, 0.0, 0.0)
+    });
+}
+
+#[test]
+fn prop_mmio_roundtrip() {
+    check_prop("mmio-roundtrip", 0x31337, 16, |rng| {
+        let m = random_matrix(rng);
+        let dir = std::env::temp_dir().join("ehyb_proptests");
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let path = dir.join(format!("rt_{}.mtx", rng.next_u64()));
+        ehyb::sparse::mmio::write_matrix_market(&m.to_coo(), &path).map_err(|e| e.to_string())?;
+        let m2: Csr<f64> = ehyb::sparse::mmio::read_matrix_market::<f64, _>(&path)
+            .map_err(|e| e.to_string())?
+            .to_csr();
+        std::fs::remove_file(&path).ok();
+        if m2.nnz() != m.nnz() {
+            return Err(format!("nnz {} != {}", m2.nnz(), m.nnz()));
+        }
+        let x = random_x(rng, m.ncols());
+        assert_allclose(&m2.spmv_f64_oracle(&x), &m.spmv_f64_oracle(&x), 1e-12, 1e-12)
+    });
+}
+
+#[test]
+fn prop_l2_sim_sanity() {
+    // Hit rate rises monotonically with capacity for a looping pattern.
+    check_prop("l2-monotone-capacity", 0xCAFE, 16, |rng| {
+        use ehyb::gpu::l2::L2Sim;
+        let working_set = 256 + rng.next_below(2048) as u64;
+        let mut last_rate = -1.0f64;
+        for cap_kb in [8usize, 32, 128, 512] {
+            let mut l2 = L2Sim::new(cap_kb * 1024, 32);
+            for _ in 0..4 {
+                for s in 0..working_set {
+                    l2.access(s);
+                }
+            }
+            let rate = l2.hit_rate();
+            if rate + 1e-9 < last_rate {
+                return Err(format!("hit rate fell: {last_rate} -> {rate} at {cap_kb}KiB"));
+            }
+            last_rate = rate;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solver_solves_spd() {
+    check_prop("cg-solves-spd", 0x50D, 12, |rng| {
+        // Random SPD: symmetrize values (A+Aᵀ)/2, then make it strictly
+        // diagonally dominant — symmetric + dominant ⇒ positive definite.
+        let m = random_matrix(rng);
+        let mut coo = Coo::<f64>::new(m.nrows(), m.ncols());
+        for i in 0..m.nrows() {
+            let (cols, vals) = m.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(i, c as usize, 0.5 * v);
+                coo.push(c as usize, i, 0.5 * v);
+            }
+        }
+        let a = ehyb::sparse::gen::diag_dominant(&coo.to_csr());
+        let n = a.nrows();
+        let b = random_x(rng, n);
+        let pre = ehyb::coordinator::Jacobi::new(&a);
+        let (x, rep) = ehyb::coordinator::cg(
+            |v, y: &mut [f64]| a.spmv(v, y),
+            &b,
+            &vec![0.0; n],
+            &pre,
+            &ehyb::coordinator::SolverConfig { max_iters: 4000, ..Default::default() },
+        );
+        if !rep.converged {
+            return Err(format!("CG failed: {rep:?}"));
+        }
+        let mut ax = vec![0.0; n];
+        a.spmv(&x, &mut ax);
+        assert_allclose(&ax, &b, 1e-5, 1e-6)
+    });
+}

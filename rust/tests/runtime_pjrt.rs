@@ -1,0 +1,177 @@
+//! Integration tests for the PJRT path: load the AOT artifacts built by
+//! `make artifacts`, execute the EHYB SpMV through XLA, and compare
+//! against the CSR oracle. These are the proof that all three layers
+//! compose: L1 Pallas kernel → L2 JAX graph → HLO text → L3 Rust/PJRT.
+//!
+//! Skipped (with a loud message) when artifacts are missing.
+
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::runtime::PjrtRuntime;
+use ehyb::sparse::gen::{poisson2d, poisson3d, unstructured_mesh};
+use ehyb::util::check::assert_allclose;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn plan_for(m: &ehyb::sparse::csr::Csr<f64>, vec_size: usize) -> EhybPlan<f64> {
+    EhybPlan::build(
+        m,
+        &PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() },
+    )
+    .unwrap()
+}
+
+#[test]
+fn pjrt_spmv_matches_oracle_poisson2d() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    let m = poisson2d::<f64>(16, 16);
+    let plan = plan_for(&m, 64);
+    let engine = rt.spmv_engine(&plan.matrix).unwrap();
+    let x: Vec<f64> = (0..256).map(|i| (i as f64 * 0.1).sin()).collect();
+    let mut y = vec![0.0; 256];
+    engine.spmv(&x, &mut y).unwrap();
+    let oracle = m.spmv_f64_oracle(&x);
+    assert_allclose(&y, &oracle, 1e-10, 1e-12).unwrap();
+}
+
+#[test]
+fn pjrt_spmv_matches_oracle_unstructured_f32() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    let m = unstructured_mesh::<f32>(24, 24, 0.5, 7);
+    let plan = EhybPlan::build(
+        &m,
+        &PreprocessConfig { vec_size_override: Some(128), ..Default::default() },
+    )
+    .unwrap();
+    let engine = rt.spmv_engine(&plan.matrix).unwrap();
+    let n = m.nrows();
+    let x: Vec<f32> = (0..n).map(|i| ((i * 13 % 31) as f32) * 0.25 - 2.0).collect();
+    let mut y = vec![0.0f32; n];
+    engine.spmv(&x, &mut y).unwrap();
+    let oracle = m.spmv_f64_oracle(&x);
+    let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    assert_allclose(&y64, &oracle, 1e-4, 1e-4).unwrap();
+}
+
+#[test]
+fn pjrt_matches_cpu_engine() {
+    // PJRT result should agree with the CPU EHYB engine to fp tolerance
+    // (not bitwise — XLA reassociates), across several matrices.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    for (m, v) in [
+        (poisson3d::<f64>(8, 8, 4), 64usize),
+        (unstructured_mesh::<f64>(16, 16, 0.3, 3), 64),
+    ] {
+        let plan = plan_for(&m, v);
+        let pjrt = rt.spmv_engine(&plan.matrix).unwrap();
+        let cpu = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+        use ehyb::spmv::SpmvEngine;
+        let n = m.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 1) % 19) as f64 * 0.5 - 4.0).collect();
+        let mut y1 = vec![0.0; n];
+        pjrt.spmv(&x, &mut y1).unwrap();
+        let mut y2 = vec![0.0; n];
+        cpu.spmv(&x, &mut y2);
+        assert_allclose(&y1, &y2, 1e-11, 1e-11).unwrap();
+    }
+}
+
+#[test]
+fn pjrt_repeated_calls_consistent() {
+    // Matrix literals are uploaded once; repeated executions must not
+    // corrupt state.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    let m = poisson2d::<f64>(16, 16);
+    let plan = plan_for(&m, 64);
+    let engine = rt.spmv_engine(&plan.matrix).unwrap();
+    let x: Vec<f64> = (0..256).map(|i| (i % 11) as f64).collect();
+    let mut y0 = vec![0.0; 256];
+    engine.spmv(&x, &mut y0).unwrap();
+    for _ in 0..5 {
+        let mut y = vec![0.0; 256];
+        engine.spmv(&x, &mut y).unwrap();
+        assert_eq!(y, y0);
+    }
+}
+
+#[test]
+fn pjrt_executable_cache_shared() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    let m = poisson2d::<f64>(16, 16);
+    let plan = plan_for(&m, 64);
+    // Two engines over the same bucket exercise the compile cache.
+    let e1 = rt.spmv_engine(&plan.matrix).unwrap();
+    let e2 = rt.spmv_engine(&plan.matrix).unwrap();
+    let x = vec![1.0; 256];
+    let mut y1 = vec![0.0; 256];
+    let mut y2 = vec![0.0; 256];
+    e1.spmv(&x, &mut y1).unwrap();
+    e2.spmv(&x, &mut y2).unwrap();
+    assert_eq!(y1, y2);
+}
+
+#[test]
+fn pjrt_fused_cg_step_artifact_solves() {
+    // The second artifact kind: the whole CG iteration fused into one
+    // executable (model.cg_step). Must converge to the same solution as
+    // the host-side CG.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    let m = poisson2d::<f64>(16, 16);
+    let plan = plan_for(&m, 64);
+    let n = m.nrows();
+    let cg_engine = rt.cg_engine(&plan.matrix, &m.diagonal()).unwrap();
+    let b: Vec<f64> = (0..n).map(|i| ((i % 5) as f64) - 2.0).collect();
+    let (x, iters, converged) = cg_engine.solve(&b, 1e-9, 500).unwrap();
+    assert!(converged, "fused CG did not converge in {iters} iters");
+    let mut ax = vec![0.0; n];
+    m.spmv(&x, &mut ax);
+    assert_allclose(&ax, &b, 1e-6, 1e-7).unwrap();
+    // Cross-check against the host solver's solution.
+    let pre = ehyb::coordinator::Jacobi::new(&m);
+    let (x_host, _) = ehyb::coordinator::cg(
+        |v: &[f64], y: &mut [f64]| m.spmv(v, y),
+        &b,
+        &vec![0.0; n],
+        &pre,
+        &ehyb::coordinator::SolverConfig { rtol: 1e-9, ..Default::default() },
+    );
+    assert_allclose(&x, &x_host, 1e-5, 1e-6).unwrap();
+}
+
+#[test]
+fn pjrt_cg_solver_end_to_end() {
+    // CG through the PJRT SpMV: the full three-layer stack solving a
+    // real SPD system.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::new(dir).unwrap();
+    let m = poisson2d::<f64>(16, 16);
+    let plan = plan_for(&m, 64);
+    let engine = rt.spmv_engine(&plan.matrix).unwrap();
+    let n = m.nrows();
+    let b: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) - 3.0).collect();
+    let pre = ehyb::coordinator::Jacobi::new(&m);
+    let (x, rep) = ehyb::coordinator::cg(
+        |v: &[f64], y: &mut [f64]| engine.spmv(v, y).unwrap(),
+        &b,
+        &vec![0.0; n],
+        &pre,
+        &ehyb::coordinator::SolverConfig::default(),
+    );
+    assert!(rep.converged, "{rep:?}");
+    let mut ax = vec![0.0; n];
+    m.spmv(&x, &mut ax);
+    assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
+}
