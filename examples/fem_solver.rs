@@ -89,7 +89,8 @@ fn main() -> anyhow::Result<()> {
                 &PreprocessConfig { vec_size_override: Some(512), ..Default::default() },
             )?;
             let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
-            Ok(move |x: &[f64], y: &mut [f64]| engine.spmv(x, y))
+            let fb = engine.format_bytes();
+            Ok((move |xs: &[&[f64]], ys: &mut [Vec<f64>]| engine.spmv_batch(xs, ys), fb))
         },
         n,
         16,
@@ -115,6 +116,15 @@ fn main() -> anyhow::Result<()> {
         1e3 * svc.metrics.spmv_latency.quantile_secs(0.99),
         svc.metrics.spmv_latency.count()
     );
+    {
+        use std::sync::atomic::Ordering;
+        println!(
+            "[SVC ] {} fused batches, mean width {:.2}, ~{:.1} MiB streamed",
+            svc.metrics.batches.load(Ordering::Relaxed),
+            svc.metrics.batch_width.mean(),
+            svc.metrics.bytes_moved.load(Ordering::Relaxed) as f64 / (1u64 << 20) as f64
+        );
+    }
 
     // --- §6 amortization accounting. ---
     let rep = pjrt_report.as_ref().unwrap_or(&cpu_rep);

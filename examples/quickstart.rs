@@ -52,6 +52,19 @@ fn main() -> anyhow::Result<()> {
     assert_allclose(&y_cpu, &oracle, 1e-10, 1e-10).map_err(|e| anyhow::anyhow!(e))?;
     println!("CPU EHYB engine: matches oracle");
 
+    // Batched SpMV: 4 vectors through the blocked SpMM kernel — the
+    // matrix streams once per register block instead of once per vector.
+    let xs: Vec<Vec<f64>> =
+        (0..4).map(|t| (0..n).map(|i| ((i * 3 + t * 7) % 13) as f64 * 0.5 - 3.0).collect()).collect();
+    let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+    let mut ys: Vec<Vec<f64>> = vec![Vec::new(); xrefs.len()];
+    engine.spmv_batch(&xrefs, &mut ys);
+    for (xb, yb) in xs.iter().zip(&ys) {
+        assert_allclose(yb, &m.spmv_f64_oracle(xb), 1e-10, 1e-10)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+    println!("CPU EHYB spmv_batch (B=4): matches oracle");
+
     match ehyb::runtime::PjrtRuntime::new("artifacts") {
         Ok(rt) => {
             let pjrt = rt.spmv_engine(&plan.matrix)?;

@@ -1,11 +1,14 @@
 //! Bench: L3 hot-path wall-clock — CPU engines on this host (the §Perf
-//! iteration target) plus PJRT SpMV latency when artifacts exist.
-//! `cargo bench --bench hotpath`.
+//! iteration target), the batch-width sweep for the blocked SpMM path,
+//! the `EHYB_THREADS` sweep for the partition-parallel walk, plus PJRT
+//! SpMV latency when artifacts exist. `cargo bench --bench hotpath`.
 
 use ehyb::harness::runner;
 use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::spmv::SpmvEngine;
 use ehyb::sparse::gen::{poisson3d, unstructured_mesh};
 use ehyb::util::timer::bench_secs;
+use ehyb::util::par;
 use std::time::Duration;
 
 fn main() {
@@ -55,6 +58,66 @@ fn main() {
             bytes,
             bytes as f64 / secs / 1e9
         );
+
+        // Threads sweep: serial kernel vs partition-parallel walk
+        // (set EHYB_THREADS to pin; the override below sweeps 1 vs all).
+        let pinned_t = par::num_threads(); // honours EHYB_THREADS
+        let max_t = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        println!("  threads sweep (partition-parallel ELL walk, single vector):");
+        let mut sweep = vec![1usize];
+        if max_t > 1 {
+            sweep.push(max_t);
+        }
+        let mut secs_t1 = secs;
+        for &t in &sweep {
+            par::set_num_threads(t);
+            let secs_par = bench_secs(
+                || engine.spmv_new_order_parallel(&xp, &mut yp),
+                5,
+                Duration::from_millis(300),
+            );
+            if t == 1 {
+                secs_t1 = secs_par;
+            }
+            println!(
+                "    threads={t:>2}: {:.3} ms = {:.3} GFLOPS ({:.2}x vs 1 thread)",
+                secs_par * 1e3,
+                ehyb::spmv::gflops(plan.matrix.nnz(), secs_par),
+                secs_t1 / secs_par
+            );
+        }
+        par::set_num_threads(pinned_t);
+
+        // Batch-width sweep: one fused spmv_batch (blocked SpMM) vs the
+        // same B vectors through repeated single-vector spmv calls.
+        println!("  batch-width sweep (fused spmv_batch vs B sequential spmv):");
+        let n = m.nrows();
+        let mut y_seq = vec![0.0f64; n];
+        for &bw in &[1usize, 2, 4, 8, 16] {
+            let xs: Vec<Vec<f64>> = (0..bw)
+                .map(|t| (0..n).map(|i| ((i * 7 + t * 13) % 17) as f64 * 0.25 - 2.0).collect())
+                .collect();
+            let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+            let mut ys: Vec<Vec<f64>> = vec![Vec::new(); bw];
+            let secs_fused =
+                bench_secs(|| engine.spmv_batch(&xrefs, &mut ys), 3, Duration::from_millis(200));
+            let secs_seq = bench_secs(
+                || {
+                    for x in &xrefs {
+                        engine.spmv(x, &mut y_seq);
+                    }
+                },
+                3,
+                Duration::from_millis(200),
+            );
+            let flops = 2.0 * (plan.matrix.nnz() * bw) as f64;
+            println!(
+                "    B={bw:>2}: fused {:8.3} GFLOPS vs sequential {:8.3} GFLOPS ({:.2}x)",
+                flops / secs_fused / 1e9,
+                flops / secs_seq / 1e9,
+                secs_seq / secs_fused
+            );
+        }
     }
 
     // PJRT latency (bucketed shapes).

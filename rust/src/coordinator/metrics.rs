@@ -1,5 +1,7 @@
-//! Service metrics: request counters and a fixed-bucket latency
-//! histogram (log-spaced), lock-free on the hot path.
+//! Service metrics: request counters, a fixed-bucket latency histogram
+//! (log-spaced), a fused-batch-width histogram, and a bytes-moved
+//! counter — all lock-free on the hot path. Rendered by
+//! [`crate::harness::report::service_markdown`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -65,17 +67,98 @@ impl LatencyHistogram {
     }
 }
 
+/// Power-of-two histogram of fused-batch widths: bucket `i` counts
+/// widths in `[2^i, 2^(i+1))`, the last bucket absorbs the overflow.
+/// Makes the request-fusion win (mean width > 1) observable.
+pub struct WidthHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for WidthHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WidthHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..16).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, width: usize) {
+        let w = width.max(1) as u64;
+        let idx = (63 - w.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(w, Ordering::Relaxed);
+        self.max.fetch_max(w, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean recorded width (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Count in bucket `i` (widths in `[2^i, 2^(i+1))`).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+}
+
 /// Service-level counters.
-#[derive(Default)]
 pub struct ServiceMetrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
+    /// Kernel latency each request observed (the fused call's wall time).
     pub spmv_latency: LatencyHistogram,
+    /// Width of every fused kernel call.
+    pub batch_width: WidthHistogram,
+    /// Estimated bytes streamed by the engine: the matrix format once
+    /// per fused call plus `2 · nrows · sizeof(S)` per request (x in,
+    /// y out) — the quantity request fusion amortizes.
+    pub bytes_moved: AtomicU64,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl ServiceMetrics {
     pub fn new() -> Self {
-        Self { requests: AtomicU64::new(0), batches: AtomicU64::new(0), spmv_latency: LatencyHistogram::new() }
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            spmv_latency: LatencyHistogram::new(),
+            batch_width: WidthHistogram::new(),
+            bytes_moved: AtomicU64::new(0),
+        }
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -123,5 +206,29 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.mean_secs(), 0.0);
         assert_eq!(h.quantile_secs(0.9), 0.0);
+    }
+
+    #[test]
+    fn width_histogram_buckets_and_stats() {
+        let h = WidthHistogram::new();
+        for w in [1usize, 1, 2, 3, 8, 16] {
+            h.record(w);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max(), 16);
+        assert!((h.mean() - 31.0 / 6.0).abs() < 1e-12);
+        assert_eq!(h.bucket(0), 2); // widths 1
+        assert_eq!(h.bucket(1), 2); // widths 2..3
+        assert_eq!(h.bucket(3), 1); // width 8
+        assert_eq!(h.bucket(4), 1); // width 16
+    }
+
+    #[test]
+    fn width_histogram_empty_and_overflow() {
+        let h = WidthHistogram::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+        h.record(1 << 20); // overflow clamps into the last bucket
+        assert_eq!(h.bucket(h.num_buckets() - 1), 1);
     }
 }

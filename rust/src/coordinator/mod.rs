@@ -5,13 +5,17 @@
 //!
 //! * [`solver`] — preconditioned CG / BiCGSTAB whose hot path is the
 //!   EHYB SpMV (the §6 use case: SPAI-preconditioned iterative solvers
-//!   amortizing preprocessing over thousands of iterations).
+//!   amortizing preprocessing over thousands of iterations), plus the
+//!   multi-RHS [`solver::cg_many`] that fuses every iteration's SpMVs
+//!   into one batched kernel call.
 //! * [`precond`] — Jacobi and SPAI(0) preconditioners built from
 //!   scratch (paper refs [10][13]).
 //! * [`service`] — a single-threaded SpMV service owning the (!Send)
-//!   PJRT runtime, serving requests over channels with batching;
-//!   worker threads submit and await.
-//! * [`metrics`] — counters/latency histograms for the service.
+//!   PJRT runtime, serving requests over channels; a drained request
+//!   batch executes as one fused `spmv_batch` call with recycled
+//!   output buffers.
+//! * [`metrics`] — counters, latency and batch-width histograms, and
+//!   the bytes-moved estimate for the service.
 
 pub mod solver;
 pub mod precond;
@@ -19,4 +23,4 @@ pub mod service;
 pub mod metrics;
 
 pub use precond::{Jacobi, Preconditioner, Spai0};
-pub use solver::{bicgstab, cg, SolveReport, SolverConfig};
+pub use solver::{bicgstab, cg, cg_many, SolveReport, SolverConfig};

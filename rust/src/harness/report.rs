@@ -1,8 +1,10 @@
 //! Report emission: markdown tables (for EXPERIMENTS.md) and CSV (for
-//! external plotting) from the harness aggregates.
+//! external plotting) from the harness aggregates, plus the service
+//! observability surface (batch-width / bytes-moved metrics).
 
 use super::ablation::AblationRow;
 use super::tables::{Fig6Row, FigureSeries, SpeedupRow};
+use crate::coordinator::metrics::ServiceMetrics;
 use std::fmt::Write as _;
 
 /// Tables 1/2 as markdown (the paper's exact columns).
@@ -70,6 +72,40 @@ pub fn fig6_markdown(rows: &[Fig6Row]) -> String {
     s
 }
 
+/// Service metrics as markdown — makes the request-fusion win
+/// observable: fused-batch widths, estimated bytes streamed, and the
+/// latency profile.
+pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
+    use std::sync::atomic::Ordering;
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(
+        s,
+        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p99 (ms) |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|");
+    let _ = writeln!(
+        s,
+        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} |",
+        m.requests.load(Ordering::Relaxed),
+        m.batches.load(Ordering::Relaxed),
+        m.batch_width.mean(),
+        m.batch_width.max(),
+        m.bytes_moved.load(Ordering::Relaxed),
+        1e3 * m.spmv_latency.mean_secs(),
+        1e3 * m.spmv_latency.quantile_secs(0.99),
+    );
+    let _ = write!(s, "\nbatch widths:");
+    for i in 0..m.batch_width.num_buckets() {
+        let c = m.batch_width.bucket(i);
+        if c > 0 {
+            let _ = write!(s, " {}+:{}", 1u64 << i, c);
+        }
+    }
+    let _ = writeln!(s);
+    s
+}
+
 pub fn ablation_markdown(title: &str, rows: &[AblationRow]) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "### {title}\n");
@@ -114,6 +150,22 @@ mod tests {
         assert_eq!(lines.len(), 3);
         assert!(lines[0].starts_with("matrix,nnz,ehyb,csr5"));
         assert!(lines[1].starts_with("a,10,100.000,80.000"));
+    }
+
+    #[test]
+    fn service_markdown_shows_fusion_metrics() {
+        use std::sync::atomic::Ordering;
+        let m = ServiceMetrics::new();
+        m.requests.fetch_add(12, Ordering::Relaxed);
+        m.batches.fetch_add(3, Ordering::Relaxed);
+        m.batch_width.record(4);
+        m.batch_width.record(4);
+        m.batch_width.record(4);
+        m.bytes_moved.fetch_add(1024, Ordering::Relaxed);
+        m.spmv_latency.record(0.002);
+        let md = service_markdown("Service", &m);
+        assert!(md.contains("| 12 | 3 | 4.00 | 4 | 1024 |"), "{md}");
+        assert!(md.contains("batch widths: 4+:3"), "{md}");
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //!
 //! * **L3 (this crate)** — all host-side systems: sparse formats, the
 //!   multilevel graph partitioner (METIS substitute), EHYB preprocessing
-//!   (paper Algorithms 1–2), CPU baseline SpMV engines, a warp-level GPU
-//!   simulator (V100 substitute), an analytic roofline model, the PJRT
-//!   runtime that executes AOT-compiled kernels, and the coordinator
-//!   (batched SpMV service + iterative solvers).
+//!   (paper Algorithms 1–2), CPU baseline SpMV engines (single-vector,
+//!   partition-parallel, and blocked multi-vector `spmv_batch`), a
+//!   warp-level GPU simulator (V100 substitute), an analytic roofline
+//!   model, the PJRT runtime that executes AOT-compiled kernels
+//!   (feature `pjrt`), and the coordinator (request-fusing SpMV
+//!   service + single- and multi-RHS iterative solvers).
 //! * **L2 (python/compile/model.py)** — the JAX SpMV graph (sliced-ELL
 //!   kernel + ER part + inverse permutation), lowered once to HLO text.
 //! * **L1 (python/compile/kernels/ehyb.py)** — the Pallas kernel with the
@@ -36,7 +38,28 @@
 //! let mut y = vec![0.0; m.nrows()];
 //! engine.spmv(&x, &mut y);
 //! assert!(y.iter().all(|v| v.is_finite()));
+//!
+//! // Batched multi-vector SpMV: the blocked SpMM kernel streams the
+//! // matrix once per register block instead of once per vector.
+//! let xs: Vec<Vec<f64>> = (0..4)
+//!     .map(|t| (0..m.nrows()).map(|i| ((i + t) % 5) as f64).collect())
+//!     .collect();
+//! let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+//! let mut ys: Vec<Vec<f64>> = vec![Vec::new(); xrefs.len()];
+//! engine.spmv_batch(&xrefs, &mut ys); // ys[i] = A * xs[i]
 //! ```
+//!
+//! ## Tuning
+//!
+//! * **`EHYB_THREADS`** — worker-thread count for the partition-
+//!   parallel SpMV/SpMM hot paths (and the preprocessing partitioner).
+//!   Defaults to `min(cores, 16)`; resolved once and cached, override
+//!   at runtime with [`util::par::set_num_threads`]. The parallel walk
+//!   is bit-identical to the serial kernel at any thread count.
+//! * **Batching** — prefer [`spmv::SpmvEngine::spmv_batch`] (or the
+//!   service's request fusion / [`coordinator::cg_many`]) whenever
+//!   several vectors share one matrix: SpMV is memory-bound, so batch
+//!   width multiplies arithmetic intensity.
 
 pub mod util;
 pub mod sparse;

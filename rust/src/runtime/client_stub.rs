@@ -1,0 +1,126 @@
+//! API-compatible stand-in for [`client`](super) when the `pjrt`
+//! feature is off (the `xla` bindings are outside the offline
+//! dependency closure). [`PjrtRuntime::new`] always fails, so the
+//! engine types are uninhabited (`Infallible` field) and their methods
+//! are statically unreachable — callers keep their artifact-missing
+//! fallback paths and the whole crate builds without XLA.
+
+use super::bucketize::BucketizedEhyb;
+use super::manifest::Manifest;
+use super::XlaScalar;
+use crate::sparse::ehyb::EhybMatrix;
+use std::convert::Infallible;
+
+/// Stub runtime: construction always errors (feature `pjrt` is off).
+pub struct PjrtRuntime {
+    never: Infallible,
+    pub manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Always fails: the PJRT client needs the `xla` bindings.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
+        let _ = artifact_dir.as_ref();
+        anyhow::bail!(
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (enable it with the xla bindings and run `make artifacts`)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn spmv_engine<S: XlaScalar>(&self, _m: &EhybMatrix<S>) -> crate::Result<EhybPjrt<S>> {
+        match self.never {}
+    }
+
+    pub fn cg_engine<S: XlaScalar>(
+        &self,
+        _m: &EhybMatrix<S>,
+        _diag: &[S],
+    ) -> crate::Result<CgPjrt<S>> {
+        match self.never {}
+    }
+}
+
+/// Stub PJRT SpMV engine (uninhabited — see [`PjrtRuntime::new`]).
+pub struct EhybPjrt<S: XlaScalar> {
+    never: Infallible,
+    pub bucket: BucketizedEhyb<S>,
+}
+
+impl<S: XlaScalar> EhybPjrt<S> {
+    pub fn name(&self) -> &'static str {
+        match self.never {}
+    }
+
+    pub fn nrows(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn spmv(&self, _x: &[S], _y: &mut [S]) -> crate::Result<()> {
+        match self.never {}
+    }
+
+    pub fn spmv_new_order(&self, _xp: &[S]) -> crate::Result<Vec<S>> {
+        match self.never {}
+    }
+}
+
+/// Stub fused CG-step engine (uninhabited).
+pub struct CgPjrt<S: XlaScalar> {
+    never: Infallible,
+    pub bucket: BucketizedEhyb<S>,
+}
+
+/// One CG iteration's host-visible state (bucket order) — shape shared
+/// with the real client so downstream signatures match.
+pub struct CgState<S> {
+    pub x: Vec<S>,
+    pub r: Vec<S>,
+    pub p: Vec<S>,
+    pub rz: S,
+    /// <p, Ap> from the last step (breakdown monitor).
+    pub alpha_den: S,
+}
+
+impl<S: XlaScalar> CgPjrt<S> {
+    pub fn init(&self, _b_rhs: &[S]) -> CgState<S> {
+        match self.never {}
+    }
+
+    pub fn step(&self, _st: &mut CgState<S>) -> crate::Result<()> {
+        match self.never {}
+    }
+
+    pub fn rel_residual(&self, _st: &CgState<S>, _bnorm: f64) -> f64 {
+        match self.never {}
+    }
+
+    pub fn solve(
+        &self,
+        _b_rhs: &[S],
+        _rtol: f64,
+        _max_iters: usize,
+    ) -> crate::Result<(Vec<S>, usize, bool)> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_errors_without_pjrt_feature() {
+        let err = PjrtRuntime::new("/nonexistent-artifacts-dir");
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}

@@ -18,10 +18,20 @@
 //! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The real client needs the `xla` bindings, which are not in the
+//! offline dependency closure — it is gated behind the **`pjrt`**
+//! cargo feature. Without the feature an API-compatible stub keeps
+//! every caller compiling: `PjrtRuntime::new` returns an error, so the
+//! artifact-missing fallback paths (CPU engines) run instead.
 
 pub mod json;
 pub mod manifest;
 pub mod bucketize;
+#[cfg(feature = "pjrt")]
+pub mod client;
+#[cfg(not(feature = "pjrt"))]
+#[path = "client_stub.rs"]
 pub mod client;
 
 pub use bucketize::BucketizedEhyb;
@@ -31,7 +41,17 @@ pub use manifest::{BucketSpec, Manifest};
 use crate::sparse::scalar::Scalar;
 
 /// Scalars that can cross the PJRT literal boundary.
+#[cfg(feature = "pjrt")]
 pub trait XlaScalar: Scalar + xla::NativeType + xla::ArrayElement {
+    /// dtype tag used in artifact names ("f32"/"f64").
+    const DTYPE_TAG: &'static str;
+}
+
+/// Scalars that can cross the PJRT literal boundary. Without the
+/// `pjrt` feature the bound degenerates to [`Scalar`] so generic call
+/// sites (harness, CLI) compile unchanged.
+#[cfg(not(feature = "pjrt"))]
+pub trait XlaScalar: Scalar {
     /// dtype tag used in artifact names ("f32"/"f64").
     const DTYPE_TAG: &'static str;
 }

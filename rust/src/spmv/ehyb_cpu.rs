@@ -3,22 +3,94 @@
 //! the x-slice resident in L1/L2 (the CPU analogue of the explicit
 //! shared-memory cache), the u16 column stream halves index bandwidth,
 //! and slices are walked lane-major so `y` accumulates in registers.
+//!
+//! On top of the single-vector kernel this module provides the two
+//! levers that multiply throughput on a memory-bound kernel:
+//!
+//! * **Partition parallelism** — every partition owns a disjoint
+//!   `vec_size` row range of `yp`, so the ELL pass splits race-free
+//!   across [`crate::util::par`] worker threads (`EHYB_THREADS`); the
+//!   ER scatter stays a serial tail. The parallel walk keeps each
+//!   row's k-accumulation order, so results are **bit-identical** to
+//!   the serial kernel.
+//! * **Blocked SpMM** — [`EhybCpu::spmm_new_order`] streams each
+//!   partition's slice data once for a register block of input
+//!   vectors, multiplying arithmetic intensity by the block width
+//!   (the paper's data-movement economics applied across a request
+//!   batch instead of within one SpMV).
 
 use super::SpmvEngine;
 use crate::sparse::ehyb::EhybMatrix;
 use crate::sparse::scalar::Scalar;
+use crate::util::par;
 use std::sync::Mutex;
+
+/// Stack-accumulator bound: slice heights are warp-sized (≤ 64).
+const MAX_H: usize = 64;
+/// Below this much work per call (stored entries × batch lanes) the
+/// scoped-thread spawn/join costs more than the kernel saves; the auto
+/// paths stay serial. ~256k entries ≈ a few hundred µs of serial work,
+/// comfortably above per-call thread fan-out overhead.
+const PAR_MIN_NNZ: usize = 256 * 1024;
 
 pub struct EhybCpu<S: Scalar> {
     m: EhybMatrix<S>,
-    /// Scratch for the permuted x / y (reused across calls; allocation in
-    /// the hot loop costs ~10 % on paper-scale matrices).
-    scratch: Mutex<Scratch<S>>,
+    /// Reusable permuted-vector buffers (allocation in the hot loop
+    /// costs ~10 % on paper-scale matrices). A pool, not a single
+    /// locked slot: concurrent callers pop distinct scratches and only
+    /// touch the lock at call boundaries, so engine use never
+    /// serializes on the compute itself.
+    pool: ScratchPool<S>,
 }
 
+/// Permuted x/y buffers for one in-flight call (one pair per batch lane).
 struct Scratch<S> {
-    xp: Vec<S>,
-    yp: Vec<S>,
+    xps: Vec<Vec<S>>,
+    yps: Vec<Vec<S>>,
+}
+
+impl<S> Default for Scratch<S> {
+    fn default() -> Self {
+        Self { xps: Vec::new(), yps: Vec::new() }
+    }
+}
+
+struct ScratchPool<S> {
+    free: Mutex<Vec<Scratch<S>>>,
+}
+
+impl<S: Scalar> ScratchPool<S> {
+    fn new() -> Self {
+        Self { free: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop (or create) a scratch with at least `width` buffer pairs of
+    /// length `padded`. Contents are unspecified — both passes fully
+    /// overwrite their buffers before reading.
+    fn take(&self, width: usize, padded: usize) -> Scratch<S> {
+        let mut s = self.free.lock().unwrap().pop().unwrap_or_default();
+        while s.xps.len() < width {
+            s.xps.push(Vec::new());
+        }
+        while s.yps.len() < width {
+            s.yps.push(Vec::new());
+        }
+        for v in s.xps[..width].iter_mut().chain(s.yps[..width].iter_mut()) {
+            if v.len() != padded {
+                v.clear();
+                v.resize(padded, S::ZERO);
+            }
+        }
+        s
+    }
+
+    fn put(&self, s: Scratch<S>) {
+        let mut free = self.free.lock().unwrap();
+        // Bound pooled memory under bursty concurrency.
+        if free.len() < 8 {
+            free.push(s);
+        }
+    }
 }
 
 impl<S: Scalar> EhybCpu<S> {
@@ -27,8 +99,7 @@ impl<S: Scalar> EhybCpu<S> {
     }
 
     pub fn from_matrix(m: EhybMatrix<S>) -> Self {
-        let padded = m.padded_rows();
-        Self { m, scratch: Mutex::new(Scratch { xp: vec![S::ZERO; padded], yp: vec![S::ZERO; padded] }) }
+        Self { m, pool: ScratchPool::new() }
     }
 
     pub fn matrix(&self) -> &EhybMatrix<S> {
@@ -37,7 +108,8 @@ impl<S: Scalar> EhybCpu<S> {
 
     /// Core kernel in the new index space (no permutations) — this is
     /// what the GPU kernel does per launch, and what the solver calls
-    /// when it keeps its vectors permanently in the new order.
+    /// when it keeps its vectors permanently in the new order. Serial;
+    /// see [`Self::spmv_new_order_parallel`] for the threaded walk.
     ///
     /// Loop order (§Perf iteration 1): **k-outer / lane-inner**. The
     /// slice data is column-major (lane contiguous within each k
@@ -47,18 +119,129 @@ impl<S: Scalar> EhybCpu<S> {
     /// through the arrays) is kept as [`Self::spmv_new_order_lane_major`]
     /// for the before/after log in EXPERIMENTS.md §Perf.
     pub fn spmv_new_order(&self, xp: &[S], yp: &mut [S]) {
+        debug_assert_eq!(xp.len(), self.m.padded_rows());
+        debug_assert_eq!(yp.len(), self.m.padded_rows());
+        self.ell_pass(xp, yp, 0);
+        self.er_pass(xp, yp);
+    }
+
+    /// Partition-parallel SpMV in the new index space. Each worker owns
+    /// a contiguous run of partitions and therefore a disjoint row
+    /// range of `yp`; per-row arithmetic order is unchanged, so the
+    /// result is bit-identical to [`Self::spmv_new_order`] at any
+    /// thread count. The ER scatter (arbitrary `y_idx_er` targets)
+    /// runs as a serial tail.
+    pub fn spmv_new_order_parallel(&self, xp: &[S], yp: &mut [S]) {
         let m = &self.m;
         debug_assert_eq!(xp.len(), m.padded_rows());
         debug_assert_eq!(yp.len(), m.padded_rows());
+        let threads = par::num_threads().min(m.num_parts).max(1);
+        if threads <= 1 {
+            self.ell_pass(xp, yp, 0);
+        } else {
+            let vec_size = m.vec_size;
+            let rows_per = m.num_parts.div_ceil(threads) * vec_size;
+            par::par_chunks_mut(yp, rows_per, |base, chunk| {
+                self.ell_pass(xp, chunk, base / vec_size);
+            });
+        }
+        self.er_pass(xp, yp);
+    }
+
+    /// Blocked multi-vector SpMM in the new index space:
+    /// `yps[i] = A xps[i]` for all padded vectors at once. The batch is
+    /// processed in register blocks of up to 4 vectors; within a
+    /// block each partition's `ell_vals`/`ell_cols` stream is read
+    /// **once**, its cached x-slices for all block lanes stay hot, and
+    /// block×h outputs accumulate in stack registers. Per-row
+    /// accumulation order matches the single-vector kernel, so each
+    /// output is bit-identical to a [`Self::spmv_new_order`] call.
+    pub fn spmm_new_order(&self, xps: &[&[S]], yps: &mut [Vec<S>]) {
+        assert_eq!(xps.len(), yps.len(), "batch inputs/outputs disagree");
+        let m = &self.m;
+        let padded = m.padded_rows();
+        for xp in xps {
+            assert_eq!(xp.len(), padded, "xp not in padded new order");
+        }
+        for yp in yps.iter_mut() {
+            if yp.len() != padded {
+                yp.clear();
+                yp.resize(padded, S::ZERO);
+            }
+        }
+        // Fan out over partitions ONCE for the whole batch (each worker
+        // walks every register block over its partition range), so the
+        // thread spawn/join cost is paid per call, not per block.
+        let threads = if m.nnz().saturating_mul(xps.len()) < PAR_MIN_NNZ {
+            1
+        } else {
+            par::num_threads().min(m.num_parts).max(1)
+        };
+        if threads <= 1 {
+            let mut chunks: Vec<&mut [S]> = yps.iter_mut().map(|y| &mut y[..]).collect();
+            self.spmm_ell_blocks(xps, &mut chunks, 0);
+        } else {
+            let parts_per = m.num_parts.div_ceil(threads);
+            let rows_per = parts_per * m.vec_size;
+            // Transpose the split: work unit t = (first partition,
+            // the t-th row-chunk of every output vector).
+            let mut its: Vec<_> =
+                yps.iter_mut().map(|y| y[..padded].chunks_mut(rows_per)).collect();
+            let nchunks = m.num_parts.div_ceil(parts_per);
+            let work: Vec<(usize, Vec<&mut [S]>)> = (0..nchunks)
+                .map(|c| (c * parts_per, its.iter_mut().map(|it| it.next().unwrap()).collect()))
+                .collect();
+            par::par_for_each(work, |_, (p0, mut chunks)| {
+                self.spmm_ell_blocks(xps, &mut chunks, p0);
+            });
+        }
+        // ER tail: uncached gathers + scatter-add, serial per vector.
+        for (xp, yp) in xps.iter().zip(yps.iter_mut()) {
+            self.er_pass(xp, yp);
+        }
+    }
+
+    /// Walk the batch in register blocks of 4/2/1 over one partition
+    /// chunk (`youts` are the chunk's row ranges, one per vector).
+    fn spmm_ell_blocks(&self, xps: &[&[S]], youts: &mut [&mut [S]], p0: usize) {
+        debug_assert_eq!(xps.len(), youts.len());
+        let mut b0 = 0;
+        while b0 < xps.len() {
+            // Widest block that fits the remaining lanes.
+            let nb = match xps.len() - b0 {
+                n if n >= 4 => {
+                    self.spmm_parts::<4>(&xps[b0..b0 + 4], &mut youts[b0..b0 + 4], p0);
+                    4
+                }
+                n if n >= 2 => {
+                    self.spmm_parts::<2>(&xps[b0..b0 + 2], &mut youts[b0..b0 + 2], p0);
+                    2
+                }
+                _ => {
+                    self.spmm_parts::<1>(&xps[b0..b0 + 1], &mut youts[b0..b0 + 1], p0);
+                    1
+                }
+            };
+            b0 += nb;
+        }
+    }
+
+    /// ELL pass over the partition range starting at `p0`, writing into
+    /// `yp_chunk` whose row 0 is partition `p0`'s first row. Extracted
+    /// so the serial and parallel walks share one kernel body.
+    fn ell_pass(&self, xp: &[S], yp_chunk: &mut [S], p0: usize) {
+        let m = &self.m;
         let h = m.slice_height;
         let spp = m.slices_per_part();
-        debug_assert!(h <= 64);
-        let mut acc = [S::ZERO; 64];
-        for p in 0..m.num_parts {
+        debug_assert!(h <= MAX_H);
+        debug_assert_eq!(yp_chunk.len() % m.vec_size, 0);
+        let nparts = yp_chunk.len() / m.vec_size;
+        let mut acc = [S::ZERO; MAX_H];
+        let mut row = 0usize;
+        for p in p0..p0 + nparts {
             // Explicit cache: this slice of xp stays hot in L1/L2 for the
             // whole partition (GPU: copied into shared memory once).
             let cached = &xp[p * m.vec_size..(p + 1) * m.vec_size];
-            let mut row = p * m.vec_size;
             for ls in 0..spp {
                 let s = p * spp + ls;
                 let base = m.slice_ptr[s] as usize;
@@ -72,16 +255,72 @@ impl<S: Scalar> EhybCpu<S> {
                         // Padding is col=0/val=0: branch-free. Bounds
                         // are guaranteed by EhybMatrix::validate.
                         acc[lane] = unsafe {
-                            vals.get_unchecked(lane)
-                                .mul_add(*cached.get_unchecked(*cols.get_unchecked(lane) as usize), acc[lane])
+                            vals.get_unchecked(lane).mul_add(
+                                *cached.get_unchecked(*cols.get_unchecked(lane) as usize),
+                                acc[lane],
+                            )
                         };
                     }
                 }
-                yp[row..row + h].copy_from_slice(&acc[..h]);
+                yp_chunk[row..row + h].copy_from_slice(&acc[..h]);
                 row += h;
             }
         }
-        // ER pass: uncached gathers over the full xp, same loop order.
+    }
+
+    /// Blocked ELL kernel over the partition range starting at `p0`:
+    /// NB input vectors, NB disjoint output row-chunks. The val/col
+    /// load per (k, lane) slot is shared by NB fused multiply-adds —
+    /// the batch-width multiplier on arithmetic intensity.
+    fn spmm_parts<const NB: usize>(&self, xps: &[&[S]], yout: &mut [&mut [S]], p0: usize) {
+        let m = &self.m;
+        let h = m.slice_height;
+        let spp = m.slices_per_part();
+        debug_assert!(h <= MAX_H);
+        debug_assert_eq!(xps.len(), NB);
+        debug_assert_eq!(yout.len(), NB);
+        debug_assert_eq!(yout[0].len() % m.vec_size, 0);
+        let nparts = yout[0].len() / m.vec_size;
+        let mut acc = [[S::ZERO; MAX_H]; NB];
+        let mut row = 0usize;
+        for p in p0..p0 + nparts {
+            let lo = p * m.vec_size;
+            let cached: [&[S]; NB] = std::array::from_fn(|b| &xps[b][lo..lo + m.vec_size]);
+            for ls in 0..spp {
+                let s = p * spp + ls;
+                let base = m.slice_ptr[s] as usize;
+                let w = m.slice_width[s] as usize;
+                for a in acc.iter_mut() {
+                    a[..h].fill(S::ZERO);
+                }
+                for k in 0..w {
+                    let off = base + k * h;
+                    let vals = &m.ell_vals[off..off + h];
+                    let cols = &m.ell_cols[off..off + h];
+                    for lane in 0..h {
+                        let (v, c) = unsafe {
+                            (*vals.get_unchecked(lane), *cols.get_unchecked(lane) as usize)
+                        };
+                        for b in 0..NB {
+                            acc[b][lane] =
+                                unsafe { v.mul_add(*cached[b].get_unchecked(c), acc[b][lane]) };
+                        }
+                    }
+                }
+                for (b, a) in acc.iter().enumerate() {
+                    yout[b][row..row + h].copy_from_slice(&a[..h]);
+                }
+                row += h;
+            }
+        }
+    }
+
+    /// ER pass: uncached gathers over the full xp, scatter-add into yp.
+    fn er_pass(&self, xp: &[S], yp: &mut [S]) {
+        let m = &self.m;
+        let h = m.slice_height;
+        debug_assert!(h <= MAX_H);
+        let mut acc = [S::ZERO; MAX_H];
         for s in 0..m.er_slice_width.len() {
             let base = m.er_slice_ptr[s] as usize;
             let w = m.er_slice_width[s] as usize;
@@ -92,9 +331,10 @@ impl<S: Scalar> EhybCpu<S> {
                 for lane in 0..jmax {
                     let idx = off + lane;
                     acc[lane] = unsafe {
-                        m.er_vals
-                            .get_unchecked(idx)
-                            .mul_add(*xp.get_unchecked(*m.er_cols.get_unchecked(idx) as usize), acc[lane])
+                        m.er_vals.get_unchecked(idx).mul_add(
+                            *xp.get_unchecked(*m.er_cols.get_unchecked(idx) as usize),
+                            acc[lane],
+                        )
                     };
                 }
             }
@@ -155,6 +395,30 @@ impl<S: Scalar> EhybCpu<S> {
             }
         }
     }
+
+    /// Permute `x` (old order) into `xp` (padded new order).
+    fn permute_in(&self, x: &[S], xp: &mut [S]) {
+        let m = &self.m;
+        for new in 0..m.padded_rows() {
+            let old = m.iperm[new] as usize;
+            xp[new] = if old < m.n { x[old] } else { S::ZERO };
+        }
+    }
+
+    /// Scatter `yp` (padded new order) back into `y` (old order).
+    fn permute_out(&self, yp: &[S], y: &mut [S]) {
+        let m = &self.m;
+        for new in 0..m.padded_rows() {
+            let old = m.iperm[new] as usize;
+            if old < m.n {
+                y[old] = yp[new];
+            }
+        }
+    }
+
+    fn want_parallel(&self) -> bool {
+        self.m.num_parts > 1 && self.m.nnz() >= PAR_MIN_NNZ && par::num_threads() > 1
+    }
 }
 
 impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
@@ -166,20 +430,47 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
         let m = &self.m;
         assert_eq!(x.len(), m.n);
         assert_eq!(y.len(), m.n);
-        let mut guard = self.scratch.lock().unwrap();
-        let Scratch { xp, yp } = &mut *guard;
-        // Permute in (gather by iperm is sequential-write).
-        for new in 0..m.padded_rows() {
-            let old = m.iperm[new] as usize;
-            xp[new] = if old < m.n { x[old] } else { S::ZERO };
-        }
-        self.spmv_new_order(xp, yp);
-        for new in 0..m.padded_rows() {
-            let old = m.iperm[new] as usize;
-            if old < m.n {
-                y[old] = yp[new];
+        let mut scr = self.pool.take(1, m.padded_rows());
+        {
+            let Scratch { xps, yps } = &mut scr;
+            self.permute_in(x, &mut xps[0]);
+            if self.want_parallel() {
+                self.spmv_new_order_parallel(&xps[0], &mut yps[0]);
+            } else {
+                self.spmv_new_order(&xps[0], &mut yps[0]);
             }
         }
+        self.permute_out(&scr.yps[0], y);
+        self.pool.put(scr);
+    }
+
+    fn spmv_batch(&self, xs: &[&[S]], ys: &mut [Vec<S>]) {
+        assert_eq!(xs.len(), ys.len(), "batch inputs/outputs disagree");
+        if xs.is_empty() {
+            return;
+        }
+        let m = &self.m;
+        let bw = xs.len();
+        let mut scr = self.pool.take(bw, m.padded_rows());
+        {
+            let Scratch { xps, yps } = &mut scr;
+            for (b, x) in xs.iter().enumerate() {
+                assert_eq!(x.len(), m.n);
+                self.permute_in(x, &mut xps[b]);
+            }
+            let xrefs: Vec<&[S]> = xps[..bw].iter().map(|v| v.as_slice()).collect();
+            self.spmm_new_order(&xrefs, &mut yps[..bw]);
+        }
+        for (b, y) in ys.iter_mut().enumerate() {
+            // Size without zero-filling recycled buffers: permute_out
+            // writes every row (iperm is a bijection over [0, n)).
+            if y.len() != m.n {
+                y.clear();
+                y.resize(m.n, S::ZERO);
+            }
+            self.permute_out(&scr.yps[b], y);
+        }
+        self.pool.put(scr);
     }
 
     fn nrows(&self) -> usize {
@@ -278,6 +569,108 @@ mod tests {
         m.spmv(&x, &mut y_ref);
         for i in 0..256 {
             assert!((y[i] - y_ref[i]).abs() < 1e-12);
+        }
+    }
+
+    fn parallel_matches_serial_for<SC: Scalar>(vec_size: usize) {
+        // Big enough for several partitions so the fan-out is real.
+        let m = crate::sparse::gen::poisson2d::<SC>(48, 48);
+        let plan = EhybPlan::build(&m, &cfg(vec_size)).unwrap();
+        let engine = EhybCpu::new(&plan);
+        let xp = plan.matrix.permute_x(
+            &(0..m.nrows())
+                .map(|i| SC::from_f64((((i * 13 + 7) % 29) as f64) * 0.125 - 1.0))
+                .collect::<Vec<_>>(),
+        );
+        let mut y_ser = vec![SC::ZERO; plan.matrix.padded_rows()];
+        let mut y_par = vec![SC::ZERO; plan.matrix.padded_rows()];
+        engine.spmv_new_order(&xp, &mut y_ser);
+        engine.spmv_new_order_parallel(&xp, &mut y_par);
+        assert_eq!(y_ser, y_par, "parallel ELL walk diverged ({})", SC::NAME);
+    }
+
+    #[test]
+    fn parallel_bit_identical_to_serial_f64() {
+        parallel_matches_serial_for::<f64>(64);
+    }
+
+    #[test]
+    fn parallel_bit_identical_to_serial_f32() {
+        parallel_matches_serial_for::<f32>(96);
+    }
+
+    #[test]
+    fn spmm_bit_identical_to_repeated_spmv() {
+        let m = unstructured_mesh::<f64>(28, 28, 0.6, 11);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        let engine = EhybCpu::new(&plan);
+        let padded = plan.matrix.padded_rows();
+        // Odd batch width exercises the 4/2/1 block dispatch.
+        let xps: Vec<Vec<f64>> = (0..7)
+            .map(|t| {
+                plan.matrix.permute_x(
+                    &(0..m.nrows())
+                        .map(|i| ((i * 3 + t * 17) % 23) as f64 * 0.25 - 2.5)
+                        .collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        let xrefs: Vec<&[f64]> = xps.iter().map(|v| v.as_slice()).collect();
+        let mut yps: Vec<Vec<f64>> = vec![Vec::new(); xrefs.len()];
+        engine.spmm_new_order(&xrefs, &mut yps);
+        for (xp, yb) in xrefs.iter().zip(&yps) {
+            let mut y1 = vec![0.0; padded];
+            engine.spmv_new_order(xp, &mut y1);
+            assert_eq!(&y1, yb);
+        }
+    }
+
+    #[test]
+    fn batch_engine_entry_matches_single() {
+        let m = poisson3d::<f64>(10, 9, 8);
+        let plan = EhybPlan::build(&m, &cfg(128)).unwrap();
+        let engine = EhybCpu::new(&plan);
+        let n = m.nrows();
+        let xs: Vec<Vec<f64>> =
+            (0..5).map(|t| (0..n).map(|i| ((i + t * 41) as f64 * 0.01).sin()).collect()).collect();
+        let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys: Vec<Vec<f64>> = vec![Vec::new(); xs.len()];
+        engine.spmv_batch(&xrefs, &mut ys);
+        for (x, yb) in xs.iter().zip(&ys) {
+            let mut y1 = vec![0.0; n];
+            engine.spmv(x, &mut y1);
+            assert_eq!(&y1, yb);
+        }
+    }
+
+    #[test]
+    fn concurrent_spmv_uses_distinct_scratch() {
+        // Hammer one engine from several threads; every result must
+        // match the serial answer (the pool hands out disjoint buffers).
+        let m = poisson2d::<f64>(32, 32);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        let engine = std::sync::Arc::new(EhybCpu::new(&plan));
+        let n = m.nrows();
+        let mut handles = Vec::new();
+        for t in 0..6 {
+            let engine = engine.clone();
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                let x: Vec<f64> =
+                    (0..n).map(|i| ((i * 7 + t * 13) % 19) as f64 * 0.5 - 4.0).collect();
+                let mut y = vec![0.0; n];
+                for _ in 0..8 {
+                    engine.spmv(&x, &mut y);
+                }
+                let mut want = vec![0.0; n];
+                m.spmv(&x, &mut want);
+                for i in 0..n {
+                    assert!((y[i] - want[i]).abs() < 1e-10);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
         }
     }
 }

@@ -29,6 +29,26 @@ pub trait SpmvEngine<S: Scalar>: Send + Sync {
     fn name(&self) -> &'static str;
     /// Execute one SpMV.
     fn spmv(&self, x: &[S], y: &mut [S]);
+    /// Execute SpMV for a batch of input vectors sharing this matrix:
+    /// `ys[i] = A xs[i]`, with each `ys[i]` resized to [`Self::nrows`].
+    ///
+    /// SpMV is memory-bound, so engines with a real SpMM path override
+    /// this to stream the matrix **once** per batch (arithmetic
+    /// intensity × batch width). The default keeps every baseline
+    /// correct by looping [`Self::spmv`]; overrides must stay
+    /// element-wise identical to that loop.
+    fn spmv_batch(&self, xs: &[&[S]], ys: &mut [Vec<S>]) {
+        assert_eq!(xs.len(), ys.len(), "batch inputs/outputs disagree");
+        for (x, y) in xs.iter().zip(ys.iter_mut()) {
+            // Size without zero-filling recycled buffers: `spmv`
+            // overwrites every row.
+            if y.len() != self.nrows() {
+                y.clear();
+                y.resize(self.nrows(), S::ZERO);
+            }
+            self.spmv(x, y);
+        }
+    }
     /// Rows of the underlying matrix.
     fn nrows(&self) -> usize;
     /// Logical nonzeros (for GFLOPS accounting: 2·nnz flops per SpMV).
@@ -67,5 +87,22 @@ pub(crate) mod testutil {
         assert_eq!(engine.nrows(), csr.nrows());
         assert_eq!(engine.nnz(), csr.nnz(), "{} nnz", engine.name());
         assert!(engine.format_bytes() > 0);
+        // The batched entry must agree with the single-vector path
+        // bit-for-bit: blocked kernels keep per-row accumulation order.
+        let xs: Vec<Vec<S>> = (0..3)
+            .map(|t| {
+                (0..n)
+                    .map(|i| S::from_f64((((i * 7 + t * 11 + 3) % 19) as f64) * 0.25 - 2.0))
+                    .collect()
+            })
+            .collect();
+        let xrefs: Vec<&[S]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys: Vec<Vec<S>> = vec![Vec::new(); xs.len()];
+        engine.spmv_batch(&xrefs, &mut ys);
+        for (xb, yb) in xs.iter().zip(&ys) {
+            let mut y1 = vec![S::ZERO; engine.nrows()];
+            engine.spmv(xb, &mut y1);
+            assert_eq!(&y1, yb, "{}: spmv_batch != repeated spmv", engine.name());
+        }
     }
 }

@@ -1,12 +1,44 @@
 //! Minimal data-parallel helpers over `std::thread::scope` (no rayon in
 //! the offline dependency closure). Used by the multilevel partitioner —
-//! the paper runs METIS with 16 host threads — and by the suite harness
-//! to overlap independent matrix measurements.
+//! the paper runs METIS with 16 host threads — by the suite harness to
+//! overlap independent matrix measurements, and by the partition-parallel
+//! EHYB SpMV/SpMM hot paths in [`crate::spmv::ehyb_cpu`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Cached worker-thread count; 0 = not yet resolved. `num_threads()` now
+/// sits on the SpMV hot path, so the `EHYB_THREADS` env lookup must run
+/// once, not per call. An atomic (rather than a `OnceLock`) lets
+/// [`set_num_threads`] re-point it for bench sweeps.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
 
 /// Number of worker threads to use: honours `EHYB_THREADS`, defaults to
 /// `min(available_parallelism, 16)` to mirror the paper's "at most 16 CPU
-/// cores for preprocessing".
+/// cores for preprocessing". Resolved once and cached; override at
+/// runtime with [`set_num_threads`].
 pub fn num_threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let t = threads_from_env();
+            // Install the env-derived value only if still unresolved, so
+            // a racing `set_num_threads` override is never clobbered.
+            match THREADS.compare_exchange(0, t, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => t,
+                Err(current) => current,
+            }
+        }
+        t => t,
+    }
+}
+
+/// Override the worker-thread count (takes precedence over the cached
+/// `EHYB_THREADS` value) — the knob behind the hotpath bench's threads
+/// sweep and embedders that manage their own thread budget.
+pub fn set_num_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+fn threads_from_env() -> usize {
     if let Ok(v) = std::env::var("EHYB_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -54,6 +86,25 @@ pub fn par_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(xs: &mut [T], chun
     });
 }
 
+/// Run `f(index, item)` once per item, each on its own scoped thread —
+/// the fan-out for work units that already carry their mutable state
+/// (e.g. one disjoint row-chunk per output vector in the batched SpMM).
+/// With 0 or 1 items no thread is spawned.
+pub fn par_for_each<T: Send, F: Fn(usize, T) + Sync>(items: Vec<T>, f: F) {
+    if items.len() <= 1 {
+        for (i, it) in items.into_iter().enumerate() {
+            f(i, it);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for (i, it) in items.into_iter().enumerate() {
+            let f = &f;
+            s.spawn(move || f(i, it));
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,7 +137,28 @@ mod tests {
     }
 
     #[test]
+    fn par_for_each_runs_every_item() {
+        use std::sync::atomic::AtomicU64;
+        let hits: Vec<AtomicU64> = (0..8).map(|_| AtomicU64::new(0)).collect();
+        let items: Vec<usize> = (0..8).collect();
+        par_for_each(items, |i, item| {
+            assert_eq!(i, item);
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn set_num_threads_overrides_and_restores() {
+        let before = num_threads();
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_num_threads(before);
+        assert_eq!(num_threads(), before);
     }
 }

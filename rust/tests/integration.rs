@@ -114,7 +114,8 @@ fn service_solver_roundtrip() {
                 &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
             )?;
             let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
-            Ok(move |x: &[f64], y: &mut [f64]| engine.spmv(x, y))
+            let fb = engine.format_bytes();
+            Ok((move |xs: &[&[f64]], ys: &mut [Vec<f64>]| engine.spmv_batch(xs, ys), fb))
         },
         n,
         8,

@@ -63,6 +63,77 @@ fn prop_all_engines_match_oracle() {
 }
 
 #[test]
+fn prop_spmv_batch_matches_repeated_spmv_all_engines() {
+    // The batched entry must be element-wise identical to looping the
+    // single-vector kernel, for every engine in the registry (the
+    // default impl trivially; the EHYB blocked SpMM by keeping per-row
+    // accumulation order).
+    check_prop("spmv-batch-equals-repeated", 0xBA7C4, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let vec_size = 32 * (1 + rng.next_below(4));
+        let cfg = PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() };
+        let (engines, _plan) =
+            registry::all_engines(&m, &cfg).map_err(|e| format!("build: {e:#}"))?;
+        let bw = 1 + rng.next_below(6);
+        let xs: Vec<Vec<f64>> = (0..bw).map(|_| random_x(rng, m.ncols())).collect();
+        let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        for e in &engines {
+            let mut ys: Vec<Vec<f64>> = vec![Vec::new(); bw];
+            e.spmv_batch(&xrefs, &mut ys);
+            for (b, x) in xs.iter().enumerate() {
+                let mut y1 = vec![0.0; m.nrows()];
+                e.spmv(x, &mut y1);
+                if y1 != ys[b] {
+                    return Err(format!("{}: batch lane {b} != single spmv (B={bw})", e.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_ehyb_bit_identical_f64() {
+    check_prop("parallel-ehyb-bitwise-f64", 0x9A11E1, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+        let plan = EhybPlan::build(&m, &cfg).map_err(|e| e.to_string())?;
+        let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+        let xp = plan.matrix.permute_x(&random_x(rng, m.nrows()));
+        let padded = plan.matrix.padded_rows();
+        let mut y_ser = vec![0.0; padded];
+        let mut y_par = vec![0.0; padded];
+        engine.spmv_new_order(&xp, &mut y_ser);
+        engine.spmv_new_order_parallel(&xp, &mut y_par);
+        if y_ser != y_par {
+            return Err("parallel ELL walk not bit-identical (f64)".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_ehyb_bit_identical_f32() {
+    check_prop("parallel-ehyb-bitwise-f32", 0x9A11E2, default_cases(), |rng| {
+        let m: Csr<f32> = random_matrix(rng).cast();
+        let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+        let plan = EhybPlan::build(&m, &cfg).map_err(|e| e.to_string())?;
+        let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+        let x: Vec<f32> = random_x(rng, m.nrows()).iter().map(|&v| v as f32).collect();
+        let xp = plan.matrix.permute_x(&x);
+        let padded = plan.matrix.padded_rows();
+        let mut y_ser = vec![0.0f32; padded];
+        let mut y_par = vec![0.0f32; padded];
+        engine.spmv_new_order(&xp, &mut y_ser);
+        engine.spmv_new_order_parallel(&xp, &mut y_par);
+        if y_ser != y_par {
+            return Err("parallel ELL walk not bit-identical (f32)".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_spmv_linearity() {
     check_prop("spmv-linearity", 0x11AA, default_cases(), |rng| {
         let m = random_matrix(rng);
