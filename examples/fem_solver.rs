@@ -2,20 +2,19 @@
 //! (EXPERIMENTS.md §E2E): a 3-D Poisson problem with 64,000 unknowns is
 //! solved with Jacobi-preconditioned CG whose SpMV runs through the
 //! full three-layer stack (Pallas kernel → JAX graph → AOT HLO → Rust
-//! PJRT), logging the residual curve, then re-solved with the CPU
-//! engine and the SpMV service for comparison. Finishes with the paper
-//! §6 amortization accounting.
+//! PJRT), logging the residual curve, then re-solved with the
+//! [`SpmvContext`] solver handle and the SpMV service spawned from the
+//! same context. Finishes with the paper §6 amortization accounting.
 //!
 //! ```text
 //! make artifacts && cargo run --release --example fem_solver
 //! ```
 
-use ehyb::coordinator::service::SpmvService;
 use ehyb::coordinator::{cg, Jacobi, SolverConfig};
-use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::preprocess::PreprocessConfig;
 use ehyb::sparse::gen::poisson3d;
-use ehyb::spmv::SpmvEngine;
 use ehyb::util::Timer;
+use ehyb::{EngineKind, SpmvContext};
 
 fn main() -> anyhow::Result<()> {
     // Problem: -Δu = f on a 40^3 grid (64,000 unknowns — the `solver`
@@ -26,10 +25,13 @@ fn main() -> anyhow::Result<()> {
     let b: Vec<f64> = (0..n).map(|i| if i % 97 == 0 { 1.0 } else { 0.0 }).collect();
     println!("system: 3D Poisson {nx}x{ny}x{nz} -> n={n}, nnz={}", a.nnz());
 
-    // Preprocess once (vec_size matches the solver bucket's R).
+    // Preprocess once behind the facade (vec_size matches the solver
+    // bucket's R); everything below — PJRT, CPU solve, service — runs
+    // off this one prepared context.
     let cfg = PreprocessConfig { vec_size_override: Some(512), ..Default::default() };
     let t = Timer::start();
-    let plan = EhybPlan::build(&a, &cfg)?;
+    let ctx = SpmvContext::builder(a.clone()).engine(EngineKind::Ehyb).config(cfg).build()?;
+    let plan = ctx.plan().expect("EHYB context carries a plan");
     println!(
         "preprocess: {:.3}s (partition {:.3}s, reorder {:.3}s); {} partitions, ER {:.2}%",
         t.elapsed_secs(),
@@ -39,15 +41,15 @@ fn main() -> anyhow::Result<()> {
         100.0 * plan.matrix.er_fraction()
     );
 
-    let pre = Jacobi::new(&a);
+    let pre = Jacobi::new(ctx.matrix());
     let scfg = SolverConfig { max_iters: 600, rtol: 1e-8, track_history: true };
-    let x0 = vec![0.0; n];
 
     // --- Solve 1: full three-layer stack over PJRT. ---
     let pjrt_report = match ehyb::runtime::PjrtRuntime::new("artifacts") {
         Ok(rt) => {
             let engine = rt.spmv_engine(&plan.matrix)?;
             println!("\n[PJRT] solving via AOT artifact on {} ...", rt.platform());
+            let x0 = vec![0.0; n];
             let (x, rep) =
                 cg(|v: &[f64], y: &mut [f64]| engine.spmv(v, y).unwrap(), &b, &x0, &pre, &scfg);
             print_history("pjrt-cg", &rep.history);
@@ -67,10 +69,10 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    // --- Solve 2: optimized CPU engine. ---
-    let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
-    println!("\n[CPU ] solving via EhybCpu engine ...");
-    let (x, cpu_rep) = cg(|v: &[f64], y: &mut [f64]| engine.spmv(v, y), &b, &x0, &pre, &scfg);
+    // --- Solve 2: the context's solver handle over the prepared CPU
+    //     engine (dimension-checked, typed errors). ---
+    println!("\n[CPU ] solving via ctx.solver().cg ...");
+    let (x, cpu_rep) = ctx.solver().cg(&b, None, &pre, &scfg)?;
     verify(&a, &x, &b);
     println!(
         "[CPU ] {} iters in {:.2}s ({:.3} ms/SpMV), converged={}",
@@ -80,30 +82,18 @@ fn main() -> anyhow::Result<()> {
         cpu_rep.converged
     );
 
-    // --- Solve 3: through the batched SpMV service (leader/worker). ---
-    let a2 = a.clone();
-    let svc = SpmvService::spawn(
-        move || {
-            let plan = EhybPlan::build(
-                &a2,
-                &PreprocessConfig { vec_size_override: Some(512), ..Default::default() },
-            )?;
-            let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
-            let fb = engine.format_bytes();
-            Ok((move |xs: &[&[f64]], ys: &mut [Vec<f64>]| engine.spmv_batch(xs, ys), fb))
-        },
-        n,
-        16,
-    )?;
+    // --- Solve 3: through the batched SpMV service (leader/worker),
+    //     spawned straight off the context. ---
+    let svc = ctx.serve(16)?;
     let client = svc.client();
     println!("\n[SVC ] solving via SpMV service ...");
     let (x, svc_rep) = cg(
         |v: &[f64], y: &mut [f64]| {
-            let out = client.spmv(v).unwrap();
+            let out = client.spmv(v.to_vec()).unwrap();
             y.copy_from_slice(&out);
         },
         &b,
-        &x0,
+        &vec![0.0; n],
         &pre,
         &scfg,
     );
@@ -124,6 +114,16 @@ fn main() -> anyhow::Result<()> {
             svc.metrics.batch_width.mean(),
             svc.metrics.bytes_moved.load(Ordering::Relaxed) as f64 / (1u64 << 20) as f64
         );
+    }
+
+    // --- Multi-RHS: several load cases fused per iteration. ---
+    let bs: Vec<Vec<f64>> = (0..3)
+        .map(|t| (0..n).map(|i| if i % (89 + t) == 0 { 1.0 } else { 0.0 }).collect())
+        .collect();
+    let many = ctx.solver().cg_many(&bs, &pre, &scfg)?;
+    for (i, (xm, rep)) in many.iter().enumerate() {
+        verify(&a, xm, &bs[i]);
+        println!("[MANY] rhs {i}: {} iters, converged={}", rep.iters, rep.converged);
     }
 
     // --- §6 amortization accounting. ---

@@ -8,13 +8,13 @@
 
 use ehyb::gpu::GpuDevice;
 use ehyb::perfmodel;
-use ehyb::preprocess::{EhybPlan, PreprocessConfig};
 use ehyb::sparse::dia::Dia;
 use ehyb::sparse::ell::Ell;
 use ehyb::sparse::gen::{circuit, poisson3d};
 use ehyb::sparse::hyb::Hyb;
 use ehyb::sparse::sellp::SellP;
 use ehyb::sparse::stats::MatrixStats;
+use ehyb::{EngineKind, SpmvContext};
 
 fn main() -> anyhow::Result<()> {
     for (label, m) in [
@@ -65,8 +65,8 @@ fn main() -> anyhow::Result<()> {
             None => println!("  {:<10} {:>12}", "dia", "unsuitable (>64 diagonals)"),
         }
 
-        let plan = EhybPlan::build(&m, &PreprocessConfig::default())?;
-        let e = &plan.matrix;
+        let ctx = SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).build()?;
+        let e = &ctx.plan().expect("EHYB context carries a plan").matrix;
         println!(
             "  {:<10} {:>12} {:>10.2} {:>8.2}  (ER {:.1}%, u16 cols save {} bytes)",
             "ehyb",

@@ -1,4 +1,5 @@
-//! Quickstart: the EHYB pipeline end to end on one matrix.
+//! Quickstart: the EHYB pipeline end to end on one matrix, through the
+//! [`SpmvContext`] facade.
 //!
 //! ```text
 //! cargo run --release --example quickstart
@@ -6,28 +7,33 @@
 //!
 //! 1. Generate an unstructured-mesh FEM matrix (locality hidden behind
 //!    random labels — the case graph partitioning exists for).
-//! 2. Preprocess: partition → reorder → sliced-ELL/ER split (paper
-//!    Algorithms 1–2), report the structure EHYB got.
-//! 3. SpMV three ways — CPU reference, optimized CPU engine, and the
-//!    AOT-compiled XLA artifact over PJRT — and check they agree.
+//! 2. Build the context once: partition → reorder → sliced-ELL/ER split
+//!    (paper Algorithms 1–2) behind `SpmvContext::builder`, report the
+//!    structure EHYB got.
+//! 3. SpMV three ways — CPU reference, the context's prepared engine,
+//!    and the AOT-compiled XLA artifact over PJRT — and check they agree.
 //! 4. Compare against every baseline on the simulated V100.
 
 use ehyb::gpu::GpuDevice;
 use ehyb::harness::runner;
-use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::preprocess::PreprocessConfig;
 use ehyb::sparse::gen::unstructured_mesh;
 use ehyb::sparse::stats::MatrixStats;
-use ehyb::spmv::SpmvEngine;
 use ehyb::util::check::assert_allclose;
+use ehyb::{BatchBuf, EngineKind, SpmvContext};
 
 fn main() -> anyhow::Result<()> {
     // 1. A 16k-row unstructured mesh (fits the "quickstart" bucket).
     let m = unstructured_mesh::<f64>(128, 128, 0.5, 42);
     println!("matrix: {}", MatrixStats::of(&m).oneline());
+    let n = m.nrows();
 
-    // 2. Preprocess (vec_size matched to the quickstart artifact).
+    // 2. Build the prepared handle once (vec_size matched to the
+    //    quickstart artifact). `EngineKind::Auto` would let the
+    //    roofline model pick the engine instead.
     let cfg = PreprocessConfig { vec_size_override: Some(512), ..Default::default() };
-    let plan = EhybPlan::build(&m, &cfg)?;
+    let ctx = SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg.clone()).build()?;
+    let plan = ctx.plan().expect("EHYB context carries a plan");
     println!(
         "EHYB: {} partitions x {} rows; ER = {:.2}% of nnz; ELL fill = {:.3}; {:.1}% smaller than u32 cols",
         plan.matrix.num_parts,
@@ -42,28 +48,38 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 3. SpMV three ways.
-    let n = m.nrows();
     let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
     let oracle = m.spmv_f64_oracle(&x);
 
-    let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
-    let mut y_cpu = vec![0.0; n];
-    engine.spmv(&x, &mut y_cpu);
+    let y_cpu = ctx.spmv_alloc(&x)?;
     assert_allclose(&y_cpu, &oracle, 1e-10, 1e-10).map_err(|e| anyhow::anyhow!(e))?;
-    println!("CPU EHYB engine: matches oracle");
+    println!("CPU EHYB engine (ctx.spmv): matches oracle");
 
-    // Batched SpMV: 4 vectors through the blocked SpMM kernel — the
-    // matrix streams once per register block instead of once per vector.
-    let xs: Vec<Vec<f64>> =
-        (0..4).map(|t| (0..n).map(|i| ((i * 3 + t * 7) % 13) as f64 * 0.5 - 3.0).collect()).collect();
-    let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
-    let mut ys: Vec<Vec<f64>> = vec![Vec::new(); xrefs.len()];
-    engine.spmv_batch(&xrefs, &mut ys);
-    for (xb, yb) in xs.iter().zip(&ys) {
-        assert_allclose(yb, &m.spmv_f64_oracle(xb), 1e-10, 1e-10)
+    // Batched SpMV over ONE contiguous allocation per side: the blocked
+    // SpMM kernel streams the matrix once per register block instead of
+    // once per vector.
+    let mut xs = BatchBuf::<f64>::zeros(n, 4);
+    for t in 0..4 {
+        for i in 0..n {
+            xs.col_mut(t)[i] = ((i * 3 + t * 7) % 13) as f64 * 0.5 - 3.0;
+        }
+    }
+    let mut ys = BatchBuf::<f64>::zeros(n, 4);
+    {
+        let mut ysv = ys.view_mut();
+        ctx.spmv_batch(xs.view(), &mut ysv)?; // ys.col(b) = A * xs.col(b)
+    }
+    for b in 0..4 {
+        assert_allclose(ys.col(b), &m.spmv_f64_oracle(xs.col(b)), 1e-10, 1e-10)
             .map_err(|e| anyhow::anyhow!(e))?;
     }
-    println!("CPU EHYB spmv_batch (B=4): matches oracle");
+    println!("CPU EHYB ctx.spmv_batch (B=4): matches oracle");
+
+    // Bad input lengths are typed errors, not panics.
+    assert!(matches!(
+        ctx.spmv_alloc(&x[..n - 1]),
+        Err(ehyb::EhybError::DimensionMismatch { .. })
+    ));
 
     match ehyb::runtime::PjrtRuntime::new("artifacts") {
         Ok(rt) => {

@@ -6,6 +6,7 @@
 use ehyb::harness::runner;
 use ehyb::preprocess::{EhybPlan, PreprocessConfig};
 use ehyb::spmv::SpmvEngine;
+use ehyb::BatchBuf;
 use ehyb::sparse::gen::{poisson3d, unstructured_mesh};
 use ehyb::util::timer::bench_secs;
 use ehyb::util::par;
@@ -88,23 +89,32 @@ fn main() {
         }
         par::set_num_threads(pinned_t);
 
-        // Batch-width sweep: one fused spmv_batch (blocked SpMM) vs the
-        // same B vectors through repeated single-vector spmv calls.
+        // Batch-width sweep: one fused spmv_batch (blocked SpMM over
+        // contiguous VecBatch views) vs the same B vectors through
+        // repeated single-vector spmv calls.
         println!("  batch-width sweep (fused spmv_batch vs B sequential spmv):");
         let n = m.nrows();
         let mut y_seq = vec![0.0f64; n];
         for &bw in &[1usize, 2, 4, 8, 16] {
-            let xs: Vec<Vec<f64>> = (0..bw)
-                .map(|t| (0..n).map(|i| ((i * 7 + t * 13) % 17) as f64 * 0.25 - 2.0).collect())
-                .collect();
-            let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
-            let mut ys: Vec<Vec<f64>> = vec![Vec::new(); bw];
-            let secs_fused =
-                bench_secs(|| engine.spmv_batch(&xrefs, &mut ys), 3, Duration::from_millis(200));
+            let mut xs = BatchBuf::<f64>::zeros(n, bw);
+            for t in 0..bw {
+                for i in 0..n {
+                    xs.col_mut(t)[i] = ((i * 7 + t * 13) % 17) as f64 * 0.25 - 2.0;
+                }
+            }
+            let mut ys = BatchBuf::<f64>::zeros(n, bw);
+            let secs_fused = bench_secs(
+                || {
+                    let mut ysv = ys.view_mut();
+                    engine.spmv_batch(xs.view(), &mut ysv)
+                },
+                3,
+                Duration::from_millis(200),
+            );
             let secs_seq = bench_secs(
                 || {
-                    for x in &xrefs {
-                        engine.spmv(x, &mut y_seq);
+                    for t in 0..bw {
+                        engine.spmv(xs.col(t), &mut y_seq);
                     }
                 },
                 3,

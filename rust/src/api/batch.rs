@@ -1,0 +1,264 @@
+//! Borrowed multi-vector views over one contiguous allocation.
+//!
+//! The seed's batched SpMV signature (`&[&[S]]` in, `&mut [Vec<S>]` out)
+//! forced every caller to own `Vec<Vec<S>>` and re-slice per call, and
+//! let the batch scatter across N heap allocations. [`VecBatch`] /
+//! [`VecBatchMut`] replace it with views over **column-major contiguous
+//! storage**: vector `b` of a width-`W` batch over length-`n` vectors is
+//! the slice `data[b*n .. (b+1)*n]`. One allocation per batch, cheap
+//! column access, and a layout the blocked SpMM kernel, the service's
+//! fused drain, and `cg_many` can all share. [`BatchBuf`] is the owned
+//! companion that hands out the views.
+
+use crate::api::error::EhybError;
+use crate::sparse::scalar::Scalar;
+
+/// Immutable view of a batch of equal-length vectors in one contiguous
+/// column-major slice.
+#[derive(Clone, Copy, Debug)]
+pub struct VecBatch<'a, S> {
+    data: &'a [S],
+    n: usize,
+}
+
+impl<'a, S: Scalar> VecBatch<'a, S> {
+    /// View `data` as a batch of vectors of length `n`. Errors unless
+    /// `data.len()` is a whole number of vectors.
+    pub fn new(data: &'a [S], n: usize) -> crate::Result<Self> {
+        if n == 0 {
+            if !data.is_empty() {
+                return Err(EhybError::DimensionMismatch {
+                    what: "batch storage (n = 0 requires empty data)",
+                    expected: 0,
+                    got: data.len(),
+                });
+            }
+            return Ok(Self { data, n });
+        }
+        if data.len() % n != 0 {
+            return Err(EhybError::DimensionMismatch {
+                what: "batch storage (must be width * n elements)",
+                expected: n * (data.len() / n + 1),
+                got: data.len(),
+            });
+        }
+        Ok(Self { data, n })
+    }
+
+    /// Vector length (rows per column).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of vectors in the batch.
+    pub fn width(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            self.data.len() / self.n
+        }
+    }
+
+    /// Vector `b` of the batch.
+    #[inline]
+    pub fn col(&self, b: usize) -> &'a [S] {
+        &self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    /// Iterate over the vectors in batch order.
+    pub fn cols(&self) -> impl Iterator<Item = &'a [S]> + '_ {
+        self.data.chunks(self.n.max(1))
+    }
+
+    /// The whole contiguous storage.
+    pub fn as_slice(&self) -> &'a [S] {
+        self.data
+    }
+}
+
+/// Mutable view of a batch of equal-length vectors in one contiguous
+/// column-major slice.
+#[derive(Debug)]
+pub struct VecBatchMut<'a, S> {
+    data: &'a mut [S],
+    n: usize,
+}
+
+impl<'a, S: Scalar> VecBatchMut<'a, S> {
+    /// View `data` as a mutable batch of vectors of length `n`.
+    pub fn new(data: &'a mut [S], n: usize) -> crate::Result<Self> {
+        VecBatch::new(&*data, n)?; // same shape validation
+        Ok(Self { data, n })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn width(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            self.data.len() / self.n
+        }
+    }
+
+    /// Vector `b` of the batch, mutably.
+    #[inline]
+    pub fn col_mut(&mut self, b: usize) -> &mut [S] {
+        &mut self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    /// Vector `b` of the batch, immutably.
+    #[inline]
+    pub fn col(&self, b: usize) -> &[S] {
+        &self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    /// Iterate over the vectors mutably, in batch order.
+    pub fn cols_mut(&mut self) -> impl Iterator<Item = &mut [S]> + '_ {
+        self.data.chunks_mut(self.n.max(1))
+    }
+
+    /// Reborrow as an immutable batch view.
+    pub fn as_batch(&self) -> VecBatch<'_, S> {
+        VecBatch { data: self.data, n: self.n }
+    }
+}
+
+/// Owned column-major batch storage: one `Vec<S>` holding `width`
+/// vectors of length `n`, handing out [`VecBatch`]/[`VecBatchMut`]
+/// views. The allocation persists across calls, so repeated batched
+/// SpMVs are allocation-free.
+#[derive(Clone, Debug)]
+pub struct BatchBuf<S> {
+    data: Vec<S>,
+    n: usize,
+}
+
+impl<S: Scalar> BatchBuf<S> {
+    /// `width` zero vectors of length `n`.
+    pub fn zeros(n: usize, width: usize) -> Self {
+        Self { data: vec![S::ZERO; n * width], n }
+    }
+
+    /// Copy a set of equal-length columns into contiguous storage.
+    pub fn from_cols(cols: &[&[S]]) -> crate::Result<Self> {
+        let n = cols.first().map_or(0, |c| c.len());
+        let mut data = Vec::with_capacity(n * cols.len());
+        for col in cols {
+            if col.len() != n {
+                return Err(EhybError::DimensionMismatch {
+                    what: "batch column",
+                    expected: n,
+                    got: col.len(),
+                });
+            }
+            data.extend_from_slice(col);
+        }
+        Ok(Self { data, n })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn width(&self) -> usize {
+        if self.n == 0 {
+            0
+        } else {
+            self.data.len() / self.n
+        }
+    }
+
+    /// Resize in place to `width` vectors (new columns are zeroed).
+    pub fn set_width(&mut self, width: usize) {
+        self.data.resize(self.n * width, S::ZERO);
+    }
+
+    #[inline]
+    pub fn col(&self, b: usize) -> &[S] {
+        &self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, b: usize) -> &mut [S] {
+        &mut self.data[b * self.n..(b + 1) * self.n]
+    }
+
+    /// Immutable view of the whole batch.
+    pub fn view(&self) -> VecBatch<'_, S> {
+        VecBatch { data: &self.data, n: self.n }
+    }
+
+    /// Mutable view of the whole batch.
+    pub fn view_mut(&mut self) -> VecBatchMut<'_, S> {
+        VecBatchMut { data: &mut self.data, n: self.n }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_shape_validated() {
+        let data = [1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = VecBatch::new(&data, 3).unwrap();
+        assert_eq!(b.width(), 2);
+        assert_eq!(b.col(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(b.col(1), &[4.0, 5.0, 6.0]);
+        assert!(matches!(
+            VecBatch::new(&data, 4),
+            Err(EhybError::DimensionMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn empty_batch() {
+        let data: [f64; 0] = [];
+        let b = VecBatch::new(&data, 5).unwrap();
+        assert_eq!(b.width(), 0);
+        assert_eq!(b.cols().count(), 0);
+    }
+
+    #[test]
+    fn mut_view_writes_through() {
+        let mut data = vec![0.0f64; 6];
+        {
+            let mut b = VecBatchMut::new(&mut data, 2).unwrap();
+            assert_eq!(b.width(), 3);
+            b.col_mut(1).copy_from_slice(&[7.0, 8.0]);
+        }
+        assert_eq!(data, vec![0.0, 0.0, 7.0, 8.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn buf_round_trip() {
+        let xs: Vec<Vec<f64>> = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let refs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let buf = BatchBuf::from_cols(&refs).unwrap();
+        assert_eq!(buf.width(), 2);
+        assert_eq!(buf.view().col(1), &[3.0, 4.0]);
+        let mut out = BatchBuf::<f64>::zeros(2, 2);
+        out.col_mut(0).copy_from_slice(buf.col(0));
+        assert_eq!(out.view().col(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn from_cols_rejects_ragged() {
+        let a = [1.0f64, 2.0];
+        let b = [3.0f64];
+        assert!(BatchBuf::from_cols(&[&a[..], &b[..]]).is_err());
+    }
+
+    #[test]
+    fn set_width_preserves_prefix() {
+        let mut buf = BatchBuf::<f64>::zeros(3, 1);
+        buf.col_mut(0).copy_from_slice(&[1.0, 2.0, 3.0]);
+        buf.set_width(3);
+        assert_eq!(buf.width(), 3);
+        assert_eq!(buf.col(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(buf.col(2), &[0.0, 0.0, 0.0]);
+    }
+}

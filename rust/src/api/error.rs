@@ -1,0 +1,151 @@
+//! Typed error surface for the crate — replaces the `anyhow` string
+//! errors (and the panicking dimension `assert!`s on the facade entry
+//! points) with a thiserror-style enum callers can match on.
+//!
+//! `crate::Result<T>` is an alias for `Result<T, EhybError>`; every
+//! fallible public API in the crate returns it. The `crate::ensure!` /
+//! `crate::bail!` macros below mirror `anyhow::ensure!` / `anyhow::bail!`
+//! for invariant checks whose only payload is a message.
+
+use std::fmt;
+
+/// Everything that can go wrong in the EHYB pipeline, by category.
+#[derive(Debug)]
+pub enum EhybError {
+    /// An input/output vector (or batch) length disagrees with the
+    /// matrix dimensions. Returned by the [`crate::api::SpmvContext`]
+    /// entry points instead of panicking.
+    DimensionMismatch {
+        /// Which argument was wrong ("x", "y", "batch width", ...).
+        what: &'static str,
+        expected: usize,
+        got: usize,
+    },
+    /// The graph partitioner produced an unusable assignment (capacity
+    /// overflow or wrong cardinality).
+    PartitionFailed(String),
+    /// The matrix shape/storage is not supported by the requested
+    /// pipeline (non-square for EHYB, non-coordinate Matrix Market, ...).
+    UnsupportedFormat(String),
+    /// The SpMV service thread has shut down (or dropped the reply);
+    /// the request was not served.
+    ServiceStopped,
+    /// Backend/runtime failure (PJRT client, missing artifacts).
+    Runtime(String),
+    /// Filesystem / OS error, with context.
+    Io(String),
+    /// Malformed input text (Matrix Market, JSON manifest).
+    Parse(String),
+    /// A structural invariant was violated (validation failures,
+    /// bad configuration values).
+    Invalid(String),
+}
+
+impl fmt::Display for EhybError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EhybError::DimensionMismatch { what, expected, got } => {
+                write!(f, "dimension mismatch for {what}: expected {expected}, got {got}")
+            }
+            EhybError::PartitionFailed(msg) => write!(f, "partitioning failed: {msg}"),
+            EhybError::UnsupportedFormat(msg) => write!(f, "unsupported format: {msg}"),
+            EhybError::ServiceStopped => write!(f, "SpMV service stopped"),
+            EhybError::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            EhybError::Io(msg) => write!(f, "I/O error: {msg}"),
+            EhybError::Parse(msg) => write!(f, "parse error: {msg}"),
+            EhybError::Invalid(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EhybError {}
+
+impl From<std::io::Error> for EhybError {
+    fn from(e: std::io::Error) -> Self {
+        EhybError::Io(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for EhybError {
+    fn from(e: std::num::ParseIntError) -> Self {
+        EhybError::Parse(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for EhybError {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        EhybError::Parse(e.to_string())
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for EhybError {
+    fn from(e: xla::Error) -> Self {
+        EhybError::Runtime(format!("xla: {e}"))
+    }
+}
+
+/// Return `Err(EhybError::Invalid(format!(...)))` — the crate-local
+/// analogue of `anyhow::bail!` for message-only failures.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::EhybError::Invalid(format!($($arg)*)))
+    };
+}
+
+/// Check an invariant, returning `EhybError::Invalid` on violation —
+/// the crate-local analogue of `anyhow::ensure!`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_covers_variants() {
+        let e = EhybError::DimensionMismatch { what: "x", expected: 4, got: 3 };
+        assert_eq!(e.to_string(), "dimension mismatch for x: expected 4, got 3");
+        assert!(EhybError::ServiceStopped.to_string().contains("stopped"));
+        assert!(EhybError::PartitionFailed("cap".into()).to_string().contains("cap"));
+        assert!(EhybError::UnsupportedFormat("array".into()).to_string().contains("array"));
+    }
+
+    #[test]
+    fn macros_produce_invalid() {
+        fn f(ok: bool) -> crate::Result<()> {
+            crate::ensure!(ok, "flag was {}", ok);
+            Ok(())
+        }
+        assert!(f(true).is_ok());
+        match f(false) {
+            Err(EhybError::Invalid(msg)) => assert!(msg.contains("false")),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        // Callers with `anyhow::Result` keep working via `?`.
+        fn f() -> anyhow::Result<()> {
+            Err(EhybError::ServiceStopped)?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("stopped"));
+    }
+
+    #[test]
+    fn io_and_parse_conversions() {
+        let e: EhybError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(matches!(e, EhybError::Io(_)));
+        let e: EhybError = "x".parse::<usize>().unwrap_err().into();
+        assert!(matches!(e, EhybError::Parse(_)));
+    }
+}

@@ -1,0 +1,543 @@
+//! The public facade: a *preprocess-once, execute-many* handle over the
+//! whole pipeline (OSKI's tuning-handle design applied to EHYB).
+//!
+//! [`SpmvContext`] owns the matrix, the EHYB plan (when applicable), and
+//! a prepared engine; it is built once through [`SpmvContext::builder`]
+//! and then drives everything downstream:
+//!
+//! * [`SpmvContext::spmv`] / [`SpmvContext::spmv_batch`] — dimension-
+//!   checked execution (typed [`EhybError::DimensionMismatch`] instead
+//!   of a panic);
+//! * [`SpmvContext::serve`] — spawn the request-fusing
+//!   [`SpmvService`](crate::coordinator::service::SpmvService) on this
+//!   context's engine;
+//! * [`SpmvContext::solver`] — preconditioned CG / BiCGSTAB / multi-RHS
+//!   CG over this context's engine.
+//!
+//! [`EngineKind::Auto`] picks the engine from the
+//! [`crate::perfmodel`] roofline predictions (EHYB vs the CSR-family and
+//! ELL-family bounds) instead of hard-coding EHYB.
+
+pub mod batch;
+pub mod error;
+
+pub use batch::{BatchBuf, VecBatch, VecBatchMut};
+pub use error::EhybError;
+
+use crate::coordinator::precond::Preconditioner;
+use crate::coordinator::service::{BatchKernel, SpmvService};
+use crate::coordinator::solver::{self, SolveReport, SolverConfig};
+use crate::gpu::device::GpuDevice;
+use crate::perfmodel;
+use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+use crate::spmv::csr5::Csr5Like;
+use crate::spmv::csr_scalar::CsrScalar;
+use crate::spmv::csr_vector::CsrVector;
+use crate::spmv::ehyb_cpu::EhybCpu;
+use crate::spmv::ell::EllEngine;
+use crate::spmv::hyb::HybEngine;
+use crate::spmv::merge::MergeSpmv;
+use crate::spmv::sellp::SellPEngine;
+use crate::spmv::SpmvEngine;
+use std::sync::{Arc, OnceLock};
+
+/// Which prepared engine a [`SpmvContext`] should carry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Choose via the [`crate::perfmodel`] roofline bounds (EHYB when
+    /// its predicted up-boundary wins, else the best baseline).
+    Auto,
+    /// The paper's explicitly-cached hybrid engine (requires a square
+    /// matrix; runs Algorithms 1–2 at build time).
+    Ehyb,
+    CsrScalar,
+    CsrVector,
+    Ell,
+    Hyb,
+    SellP,
+    Merge,
+    Csr5,
+}
+
+impl EngineKind {
+    /// Every concrete (non-`Auto`) engine kind — the paper's EHYB plus
+    /// all seven baselines.
+    pub const ALL: [EngineKind; 8] = [
+        EngineKind::Ehyb,
+        EngineKind::CsrScalar,
+        EngineKind::CsrVector,
+        EngineKind::Ell,
+        EngineKind::Hyb,
+        EngineKind::SellP,
+        EngineKind::Merge,
+        EngineKind::Csr5,
+    ];
+}
+
+/// Builder for [`SpmvContext`]: `SpmvContext::builder(m).engine(..)
+/// .config(..).build()?`.
+pub struct SpmvContextBuilder<S: Scalar> {
+    matrix: Csr<S>,
+    kind: EngineKind,
+    config: PreprocessConfig,
+}
+
+impl<S: Scalar> SpmvContextBuilder<S> {
+    /// Select the engine (default: [`EngineKind::Ehyb`]).
+    pub fn engine(mut self, kind: EngineKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Preprocessing tunables for the EHYB plan (ignored by baselines).
+    pub fn config(mut self, config: PreprocessConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Run preprocessing (when needed) and prepare the engine.
+    pub fn build(self) -> crate::Result<SpmvContext<S>> {
+        let SpmvContextBuilder { matrix, kind, config } = self;
+        let (resolved, plan): (EngineKind, Option<EhybPlan<S>>) = match kind {
+            EngineKind::Ehyb => (EngineKind::Ehyb, Some(EhybPlan::build(&matrix, &config)?)),
+            EngineKind::Auto => choose_auto(&matrix, &config),
+            concrete => (concrete, None),
+        };
+        Ok(SpmvContext {
+            matrix,
+            config,
+            kind: resolved,
+            requested: kind,
+            plan,
+            engine: OnceLock::new(),
+        })
+    }
+}
+
+/// Roofline-model engine choice for [`EngineKind::Auto`]: build the EHYB
+/// plan (when the matrix is square) and compare its predicted memory-
+/// bound up-boundary against the CSR-family and ELL-family bounds.
+fn choose_auto<S: Scalar>(
+    m: &Csr<S>,
+    config: &PreprocessConfig,
+) -> (EngineKind, Option<EhybPlan<S>>) {
+    // Roofline device: the bounds are ratios of bytes moved, so any
+    // bandwidth-bound device ranks the formats identically; V100 is the
+    // paper's reference part. (`PreprocessConfig::device` shapes the
+    // cache plan but carries no bandwidth numbers, so it cannot drive
+    // the roofline itself.)
+    let dev = GpuDevice::v100();
+    let nnz = m.nnz();
+    let csr_gf = perfmodel::csr_bound(m).roofline_gflops(nnz, &dev);
+    let ell_fill =
+        if nnz == 0 { 1.0 } else { (m.max_row_nnz() * m.nrows()) as f64 / nnz as f64 };
+    let ell_gf = perfmodel::ell_bound(m, ell_fill.max(1.0)).roofline_gflops(nnz, &dev);
+    let baseline =
+        if ell_gf > csr_gf { (EngineKind::Ell, ell_gf) } else { (EngineKind::CsrScalar, csr_gf) };
+    if m.nrows() != m.ncols() {
+        return (baseline.0, None);
+    }
+    match EhybPlan::build(m, config) {
+        Ok(plan) => {
+            let ehyb_gf =
+                perfmodel::ehyb_bound(&plan.matrix).roofline_gflops(plan.matrix.nnz(), &dev);
+            if ehyb_gf >= baseline.1 {
+                (EngineKind::Ehyb, Some(plan))
+            } else {
+                (baseline.0, None)
+            }
+        }
+        Err(_) => (baseline.0, None),
+    }
+}
+
+/// A prepared SpMV pipeline: matrix + (optional) EHYB plan + engine.
+/// Build once, execute many times — the handle every layer of the crate
+/// (service, solvers, harness, examples) now goes through.
+pub struct SpmvContext<S: Scalar> {
+    matrix: Csr<S>,
+    config: PreprocessConfig,
+    kind: EngineKind,
+    requested: EngineKind,
+    plan: Option<EhybPlan<S>>,
+    /// Constructed lazily on first execution: plan-only consumers (the
+    /// harness reads partition/timing provenance off `plan()`) never
+    /// pay for the engine's own copy of the format.
+    engine: OnceLock<Arc<dyn SpmvEngine<S>>>,
+}
+
+impl<S: Scalar> SpmvContext<S> {
+    /// Start building a context over `matrix` (takes ownership — the
+    /// context is the long-lived handle).
+    pub fn builder(matrix: Csr<S>) -> SpmvContextBuilder<S> {
+        SpmvContextBuilder { matrix, kind: EngineKind::Ehyb, config: PreprocessConfig::default() }
+    }
+
+    /// Shorthand for the default EHYB pipeline with default config.
+    pub fn new(matrix: Csr<S>) -> crate::Result<Self> {
+        Self::builder(matrix).build()
+    }
+
+    /// The concrete engine kind this context runs (never `Auto`).
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// The kind that was requested at build time (may be `Auto`).
+    pub fn requested_kind(&self) -> EngineKind {
+        self.requested
+    }
+
+    pub fn matrix(&self) -> &Csr<S> {
+        &self.matrix
+    }
+
+    pub fn config(&self) -> &PreprocessConfig {
+        &self.config
+    }
+
+    /// The EHYB preprocessing output (present iff the resolved engine is
+    /// [`EngineKind::Ehyb`]) — partition provenance, cache plan, and the
+    /// Figure 6 timings live here.
+    pub fn plan(&self) -> Option<&EhybPlan<S>> {
+        self.plan.as_ref()
+    }
+
+    fn engine_cell(&self) -> &Arc<dyn SpmvEngine<S>> {
+        self.engine.get_or_init(|| match self.kind {
+            EngineKind::Ehyb => {
+                Arc::new(EhybCpu::new(self.plan.as_ref().expect("Ehyb kind carries a plan")))
+            }
+            EngineKind::CsrScalar => Arc::new(CsrScalar::new(&self.matrix)),
+            EngineKind::CsrVector => Arc::new(CsrVector::new(&self.matrix)),
+            EngineKind::Ell => Arc::new(EllEngine::new(&self.matrix)),
+            EngineKind::Hyb => Arc::new(HybEngine::new(&self.matrix)),
+            EngineKind::SellP => Arc::new(SellPEngine::new(&self.matrix)),
+            EngineKind::Merge => Arc::new(MergeSpmv::new(&self.matrix)),
+            EngineKind::Csr5 => Arc::new(Csr5Like::new(&self.matrix)),
+            EngineKind::Auto => unreachable!("Auto resolves to a concrete kind at build time"),
+        })
+    }
+
+    /// The prepared engine (built on first use, then cached).
+    pub fn engine(&self) -> &dyn SpmvEngine<S> {
+        self.engine_cell().as_ref()
+    }
+
+    /// Shared handle to the prepared engine (what [`Self::serve`] moves
+    /// into the service thread).
+    pub fn engine_arc(&self) -> Arc<dyn SpmvEngine<S>> {
+        self.engine_cell().clone()
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.matrix.nrows()
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.matrix.ncols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.matrix.nnz()
+    }
+
+    fn check_dim(what: &'static str, expected: usize, got: usize) -> crate::Result<()> {
+        if expected != got {
+            return Err(EhybError::DimensionMismatch { what, expected, got });
+        }
+        Ok(())
+    }
+
+    /// One dimension-checked SpMV: `y = A x`.
+    pub fn spmv(&self, x: &[S], y: &mut [S]) -> crate::Result<()> {
+        Self::check_dim("x", self.ncols(), x.len())?;
+        Self::check_dim("y", self.nrows(), y.len())?;
+        self.engine().spmv(x, y);
+        Ok(())
+    }
+
+    /// Allocating convenience: `A x`.
+    pub fn spmv_alloc(&self, x: &[S]) -> crate::Result<Vec<S>> {
+        let mut y = vec![S::ZERO; self.nrows()];
+        self.spmv(x, &mut y)?;
+        Ok(y)
+    }
+
+    /// Dimension-checked batched SpMV over borrowed contiguous views:
+    /// `ys[b] = A xs[b]` for every column of the batch, through the
+    /// engine's fused SpMM path when it has one.
+    pub fn spmv_batch(&self, xs: VecBatch<'_, S>, ys: &mut VecBatchMut<'_, S>) -> crate::Result<()> {
+        Self::check_dim("x batch rows", self.ncols(), xs.n())?;
+        Self::check_dim("y batch rows", self.nrows(), ys.n())?;
+        Self::check_dim("batch width", xs.width(), ys.width())?;
+        self.engine().spmv_batch(xs, ys);
+        Ok(())
+    }
+
+    /// Spawn the request-fusing SpMV service on this context's engine.
+    /// `max_batch` bounds how many queued requests one drain fuses into
+    /// a single batched kernel call.
+    pub fn serve(&self, max_batch: usize) -> crate::Result<SpmvService<S>> {
+        if self.nrows() != self.ncols() {
+            return Err(EhybError::UnsupportedFormat(format!(
+                "SpMV service requires a square matrix, got {}x{}",
+                self.nrows(),
+                self.ncols()
+            )));
+        }
+        let engine = self.engine_arc();
+        let nrows = self.nrows();
+        SpmvService::spawn(
+            move || {
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<S> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+                Ok((kernel, fb))
+            },
+            nrows,
+            max_batch,
+        )
+    }
+
+    /// Iterative solvers running over this context's engine.
+    pub fn solver(&self) -> SolverHandle<'_, S> {
+        SolverHandle { ctx: self }
+    }
+}
+
+/// Solver entry points bound to one [`SpmvContext`] — dimension-checked,
+/// with the SpMV (and the multi-RHS fused batch) wired to the context's
+/// prepared engine.
+pub struct SolverHandle<'c, S: Scalar> {
+    ctx: &'c SpmvContext<S>,
+}
+
+impl<S: Scalar> SolverHandle<'_, S> {
+    fn check_square(&self) -> crate::Result<usize> {
+        let (n, m) = (self.ctx.nrows(), self.ctx.ncols());
+        if n != m {
+            return Err(EhybError::UnsupportedFormat(format!(
+                "iterative solvers require a square matrix, got {n}x{m}"
+            )));
+        }
+        Ok(n)
+    }
+
+    /// Preconditioned conjugate gradients; `x0 = None` starts from zero.
+    pub fn cg(
+        &self,
+        b: &[S],
+        x0: Option<&[S]>,
+        precond: &dyn Preconditioner<S>,
+        cfg: &SolverConfig,
+    ) -> crate::Result<(Vec<S>, SolveReport)> {
+        let n = self.check_square()?;
+        SpmvContext::<S>::check_dim("b", n, b.len())?;
+        if let Some(x0) = x0 {
+            SpmvContext::<S>::check_dim("x0", n, x0.len())?;
+        }
+        let zeros;
+        let x0 = match x0 {
+            Some(x0) => x0,
+            None => {
+                zeros = vec![S::ZERO; n];
+                &zeros
+            }
+        };
+        let engine = self.ctx.engine();
+        Ok(solver::cg(|x, y| engine.spmv(x, y), b, x0, precond, cfg))
+    }
+
+    /// Preconditioned BiCGSTAB; `x0 = None` starts from zero.
+    pub fn bicgstab(
+        &self,
+        b: &[S],
+        x0: Option<&[S]>,
+        precond: &dyn Preconditioner<S>,
+        cfg: &SolverConfig,
+    ) -> crate::Result<(Vec<S>, SolveReport)> {
+        let n = self.check_square()?;
+        SpmvContext::<S>::check_dim("b", n, b.len())?;
+        if let Some(x0) = x0 {
+            SpmvContext::<S>::check_dim("x0", n, x0.len())?;
+        }
+        let zeros;
+        let x0 = match x0 {
+            Some(x0) => x0,
+            None => {
+                zeros = vec![S::ZERO; n];
+                &zeros
+            }
+        };
+        let engine = self.ctx.engine();
+        Ok(solver::bicgstab(|x, y| engine.spmv(x, y), b, x0, precond, cfg))
+    }
+
+    /// Multi-RHS preconditioned CG: every iteration's SpMVs fuse into
+    /// one batched call on the context's engine (zero starts).
+    pub fn cg_many(
+        &self,
+        bs: &[Vec<S>],
+        precond: &dyn Preconditioner<S>,
+        cfg: &SolverConfig,
+    ) -> crate::Result<Vec<(Vec<S>, SolveReport)>> {
+        let n = self.check_square()?;
+        for b in bs {
+            SpmvContext::<S>::check_dim("b", n, b.len())?;
+        }
+        let x0s = vec![vec![S::ZERO; n]; bs.len()];
+        let engine = self.ctx.engine();
+        Ok(solver::cg_many(|xs, ys| engine.spmv_batch(xs, ys), bs, &x0s, precond, cfg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::precond::Jacobi;
+    use crate::sparse::gen::{poisson2d, unstructured_mesh};
+    use crate::util::check::assert_allclose;
+
+    fn ctx_for(kind: EngineKind) -> SpmvContext<f64> {
+        let m = poisson2d::<f64>(16, 16);
+        SpmvContext::builder(m)
+            .engine(kind)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn every_kind_matches_oracle() {
+        let m = poisson2d::<f64>(16, 16);
+        let x: Vec<f64> = (0..256).map(|i| ((i * 7 + 3) % 13) as f64 * 0.5 - 3.0).collect();
+        let oracle = m.spmv_f64_oracle(&x);
+        for kind in EngineKind::ALL {
+            let ctx = ctx_for(kind);
+            assert_eq!(ctx.kind(), kind);
+            let y = ctx.spmv_alloc(&x).unwrap();
+            assert_allclose(&y, &oracle, 1e-10, 1e-10)
+                .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_is_typed_not_a_panic() {
+        for kind in EngineKind::ALL {
+            let ctx = ctx_for(kind);
+            let short = vec![0.0; ctx.ncols() - 1];
+            let mut y = vec![0.0; ctx.nrows()];
+            match ctx.spmv(&short, &mut y) {
+                Err(EhybError::DimensionMismatch { what: "x", .. }) => {}
+                other => panic!("{kind:?}: expected DimensionMismatch, got {other:?}"),
+            }
+            let x = vec![0.0; ctx.ncols()];
+            let mut long = vec![0.0; ctx.nrows() + 3];
+            match ctx.spmv(&x, &mut long) {
+                Err(EhybError::DimensionMismatch { what: "y", .. }) => {}
+                other => panic!("{kind:?}: expected DimensionMismatch, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn batch_entry_checks_dims() {
+        let ctx = ctx_for(EngineKind::Ehyb);
+        let n = ctx.nrows();
+        let xs = BatchBuf::<f64>::zeros(n - 1, 2);
+        let mut ys = BatchBuf::<f64>::zeros(n, 2);
+        let mut ysv = ys.view_mut();
+        assert!(matches!(
+            ctx.spmv_batch(xs.view(), &mut ysv),
+            Err(EhybError::DimensionMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn batch_matches_repeated_spmv() {
+        let ctx = ctx_for(EngineKind::Ehyb);
+        let n = ctx.nrows();
+        let mut xs = BatchBuf::<f64>::zeros(n, 3);
+        for b in 0..3 {
+            for i in 0..n {
+                xs.col_mut(b)[i] = ((i * 5 + b * 11) % 17) as f64 * 0.25 - 2.0;
+            }
+        }
+        let mut ys = BatchBuf::<f64>::zeros(n, 3);
+        {
+            let mut ysv = ys.view_mut();
+            ctx.spmv_batch(xs.view(), &mut ysv).unwrap();
+        }
+        for b in 0..3 {
+            let y1 = ctx.spmv_alloc(xs.col(b)).unwrap();
+            assert_eq!(ys.col(b), &y1[..], "lane {b}");
+        }
+    }
+
+    #[test]
+    fn ehyb_context_carries_plan() {
+        let ctx = ctx_for(EngineKind::Ehyb);
+        let plan = ctx.plan().expect("plan");
+        assert_eq!(plan.matrix.n, ctx.nrows());
+        assert!(ctx_for(EngineKind::Merge).plan().is_none());
+    }
+
+    #[test]
+    fn auto_picks_ehyb_on_partition_friendly_mesh() {
+        // A mesh with strong locality: EHYB's u16-column bound beats the
+        // CSR-family bound, so Auto must resolve to Ehyb.
+        let m = unstructured_mesh::<f64>(48, 48, 0.3, 1);
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::Auto)
+            .config(PreprocessConfig { vec_size_override: Some(512), ..Default::default() })
+            .build()
+            .unwrap();
+        assert_eq!(ctx.requested_kind(), EngineKind::Auto);
+        assert_eq!(ctx.kind(), EngineKind::Ehyb);
+        assert!(ctx.plan().is_some());
+    }
+
+    #[test]
+    fn auto_on_non_square_falls_back_to_baseline() {
+        use crate::sparse::coo::Coo;
+        let mut coo = Coo::<f64>::new(4, 6);
+        for i in 0..4 {
+            coo.push(i, i, 1.0);
+            coo.push(i, i + 2, 0.5);
+        }
+        let ctx = SpmvContext::builder(coo.to_csr()).engine(EngineKind::Auto).build().unwrap();
+        assert_ne!(ctx.kind(), EngineKind::Ehyb);
+        let y = ctx.spmv_alloc(&[1.0; 6]).unwrap();
+        assert_eq!(y.len(), 4);
+    }
+
+    #[test]
+    fn ehyb_rejects_non_square_with_typed_error() {
+        use crate::sparse::coo::Coo;
+        let m = Coo::<f64>::new(3, 4).to_csr();
+        match SpmvContext::builder(m).engine(EngineKind::Ehyb).build() {
+            Err(EhybError::UnsupportedFormat(_)) => {}
+            other => panic!("expected UnsupportedFormat, got {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn solver_handle_solves() {
+        let ctx = ctx_for(EngineKind::Ehyb);
+        let n = ctx.nrows();
+        let b: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 23) as f64 / 23.0 - 0.5).collect();
+        let pre = Jacobi::new(ctx.matrix());
+        let (x, rep) = ctx.solver().cg(&b, None, &pre, &SolverConfig::default()).unwrap();
+        assert!(rep.converged, "{rep:?}");
+        let mut ax = vec![0.0; n];
+        ctx.matrix().spmv(&x, &mut ax);
+        assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
+        // Wrong-length rhs is a typed error.
+        assert!(matches!(
+            ctx.solver().cg(&b[..n - 1], None, &pre, &SolverConfig::default()),
+            Err(EhybError::DimensionMismatch { .. })
+        ));
+    }
+}

@@ -4,17 +4,27 @@
 //! from any number of worker threads over an MPSC channel.
 //!
 //! Pending requests are drained in batches and executed as **one fused
-//! batched kernel call** (`spmv_batch`-shaped engine closure): the
-//! matrix streams once per drain instead of once per request, which is
-//! the whole game for a memory-bound kernel. Output buffers are
-//! recycled — each reply reuses the request's own `x` allocation, so
-//! the steady state does zero per-request allocation.
+//! batched kernel call** over borrowed [`VecBatch`]/[`VecBatchMut`]
+//! views of two persistent contiguous buffers: the matrix streams once
+//! per drain instead of once per request, which is the whole game for a
+//! memory-bound kernel. Requests hand their `x` allocation over
+//! ([`SpmvClient::spmv`] takes `Vec<S>` — no hidden copy on the client
+//! side), replies reuse that same allocation for the output, and the
+//! two batch buffers persist across drains — steady state does zero
+//! per-request allocation.
 
 use super::metrics::ServiceMetrics;
+use crate::api::batch::{VecBatch, VecBatchMut};
+use crate::api::error::EhybError;
 use crate::sparse::scalar::Scalar;
 use crate::util::Timer;
 use std::sync::mpsc;
 use std::sync::Arc;
+
+/// The batched kernel a service thread runs per drain:
+/// `ys.col(b) = A xs.col(b)`. Built inside the service thread (so it
+/// may close over `!Send` PJRT state).
+pub type BatchKernel<S> = Box<dyn FnMut(VecBatch<'_, S>, &mut VecBatchMut<'_, S>)>;
 
 enum Msg<S> {
     Spmv { x: Vec<S>, reply: mpsc::Sender<Vec<S>> },
@@ -34,21 +44,25 @@ impl<S> Clone for SpmvClient<S> {
 }
 
 impl<S: Scalar> SpmvClient<S> {
-    /// Synchronous SpMV round-trip through the service.
-    pub fn spmv(&self, x: &[S]) -> crate::Result<Vec<S>> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Spmv { x: x.to_vec(), reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("service stopped"))?;
-        Ok(reply_rx.recv().map_err(|_| anyhow::anyhow!("service dropped reply"))?)
+    /// Synchronous SpMV round-trip through the service. Takes `x` by
+    /// value — the allocation travels to the service and comes back as
+    /// the reply buffer, so the round-trip copies nothing.
+    pub fn spmv(&self, x: Vec<S>) -> crate::Result<Vec<S>> {
+        let rx = self.submit(x)?;
+        rx.recv().map_err(|_| EhybError::ServiceStopped)
     }
 
     /// Fire-and-forget submit; returns the receiver for the result.
     pub fn submit(&self, x: Vec<S>) -> crate::Result<mpsc::Receiver<Vec<S>>> {
+        if x.len() != self.nrows {
+            return Err(EhybError::DimensionMismatch {
+                what: "service request x",
+                expected: self.nrows,
+                got: x.len(),
+            });
+        }
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Spmv { x, reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("service stopped"))?;
+        self.tx.send(Msg::Spmv { x, reply: reply_tx }).map_err(|_| EhybError::ServiceStopped)?;
         Ok(reply_rx)
     }
 
@@ -58,9 +72,7 @@ impl<S: Scalar> SpmvClient<S> {
     pub fn spmv_many(&self, xs: Vec<Vec<S>>) -> crate::Result<Vec<Vec<S>>> {
         let rxs: Vec<_> =
             xs.into_iter().map(|x| self.submit(x)).collect::<crate::Result<Vec<_>>>()?;
-        rxs.into_iter()
-            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("service dropped reply")))
-            .collect()
+        rxs.into_iter().map(|rx| rx.recv().map_err(|_| EhybError::ServiceStopped)).collect()
     }
 
     pub fn nrows(&self) -> usize {
@@ -78,16 +90,13 @@ pub struct SpmvService<S> {
 impl<S: Scalar> SpmvService<S> {
     /// Spawn the service thread. `make_engine` runs *inside* the thread
     /// (so it may construct `!Send` PJRT state) and returns the batched
-    /// SpMV closure (`ys[i] = A xs[i]`; the closure must size each
-    /// `ys[i]` to `nrows` itself — every `spmv_batch` implementation
-    /// already does) plus the format's device-memory bytes (for the
+    /// SpMV kernel plus the format's device-memory bytes (for the
     /// bytes-moved metric). `max_batch` bounds how many pending
-    /// requests one drain fuses.
-    pub fn spawn<F, G>(make_engine: F, nrows: usize, max_batch: usize) -> crate::Result<Self>
+    /// requests one drain fuses. Requests carry square-system vectors
+    /// of length `nrows`.
+    pub fn spawn<F>(make_engine: F, nrows: usize, max_batch: usize) -> crate::Result<Self>
     where
-        F: FnOnce() -> crate::Result<(G, usize)> + Send + 'static,
-        G: FnMut(&[&[S]], &mut [Vec<S>]),
-        S: 'static,
+        F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Msg<S>>();
         let metrics = Arc::new(ServiceMetrics::new());
@@ -104,10 +113,11 @@ impl<S: Scalar> SpmvService<S> {
                     return;
                 }
             };
-            // Reused fused-call output buffers; after each drain they
-            // swap with the requests' x buffers, so no allocation
-            // happens per request once the pool is warm.
-            let mut ys: Vec<Vec<S>> = Vec::new();
+            // Persistent contiguous batch storage for the fused calls —
+            // grows to the high-water batch width once, then is reused
+            // by every drain.
+            let mut xbuf: Vec<S> = Vec::new();
+            let mut ybuf: Vec<S> = Vec::new();
             let mut batch: Vec<(Vec<S>, mpsc::Sender<Vec<S>>)> = Vec::new();
             loop {
                 // Block for the first request, then drain what's queued.
@@ -126,13 +136,21 @@ impl<S: Scalar> SpmvService<S> {
                         Err(_) => break,
                     }
                 }
-                serve_fused(&mut engine, &mut batch, &mut ys, nrows, &metrics_thread, format_bytes);
+                serve_fused(
+                    &mut engine,
+                    &mut batch,
+                    &mut xbuf,
+                    &mut ybuf,
+                    nrows,
+                    &metrics_thread,
+                    format_bytes,
+                );
                 if shutdown {
                     break;
                 }
             }
         })?;
-        ready_rx.recv().map_err(|_| anyhow::anyhow!("service died during init"))??;
+        ready_rx.recv().map_err(|_| EhybError::ServiceStopped)??;
         Ok(Self { client: SpmvClient { tx, nrows }, metrics, handle: Some(handle) })
     }
 
@@ -141,11 +159,13 @@ impl<S: Scalar> SpmvService<S> {
     }
 }
 
-/// Execute one drained batch as a single fused kernel call and reply.
-fn serve_fused<S: Scalar, G: FnMut(&[&[S]], &mut [Vec<S>])>(
-    engine: &mut G,
+/// Execute one drained batch as a single fused kernel call over the
+/// persistent contiguous buffers and reply.
+fn serve_fused<S: Scalar>(
+    engine: &mut BatchKernel<S>,
     batch: &mut Vec<(Vec<S>, mpsc::Sender<Vec<S>>)>,
-    ys: &mut Vec<Vec<S>>,
+    xbuf: &mut Vec<S>,
+    ybuf: &mut Vec<S>,
     nrows: usize,
     metrics: &ServiceMetrics,
     format_bytes: usize,
@@ -155,15 +175,21 @@ fn serve_fused<S: Scalar, G: FnMut(&[&[S]], &mut [Vec<S>])>(
         return;
     }
     let bw = batch.len();
-    if ys.len() < bw {
-        ys.resize_with(bw, Vec::new);
+    if xbuf.len() < bw * nrows {
+        xbuf.resize(bw * nrows, S::ZERO);
+        ybuf.resize(bw * nrows, S::ZERO);
     }
-    // No zero-fill here: the engine closure sizes and overwrites each
-    // output (every `spmv_batch` impl clears/resizes its ys).
+    // Stage the requests into ONE contiguous input batch (lengths were
+    // validated at submit time).
+    for (b, (x, _)) in batch.iter().enumerate() {
+        xbuf[b * nrows..(b + 1) * nrows].copy_from_slice(x);
+    }
     let t = Timer::start();
     {
-        let xrefs: Vec<&[S]> = batch.iter().map(|(x, _)| x.as_slice()).collect();
-        engine(&xrefs, &mut ys[..bw]);
+        let xs = VecBatch::new(&xbuf[..bw * nrows], nrows).expect("contiguous request batch");
+        let mut ys =
+            VecBatchMut::new(&mut ybuf[..bw * nrows], nrows).expect("contiguous reply batch");
+        engine(xs, &mut ys);
     }
     let secs = t.elapsed_secs();
     metrics.requests.fetch_add(bw as u64, Ordering::Relaxed);
@@ -174,10 +200,10 @@ fn serve_fused<S: Scalar, G: FnMut(&[&[S]], &mut [Vec<S>])>(
         .fetch_add((format_bytes + bw * 2 * nrows * S::BYTES) as u64, Ordering::Relaxed);
     for (i, (x, reply)) in batch.drain(..).enumerate() {
         metrics.spmv_latency.record(secs);
-        // Reply with the computed y; the request's x buffer stays in
-        // `ys` as the next drain's output slot (buffer recycling).
+        // Reply reuses the request's own x allocation (buffer
+        // recycling — zero per-request allocation in steady state).
         let mut out = x;
-        std::mem::swap(&mut out, &mut ys[i]);
+        out.copy_from_slice(&ybuf[i * nrows..(i + 1) * nrows]);
         let _ = reply.send(out);
     }
 }
@@ -194,30 +220,24 @@ impl<S> Drop for SpmvService<S> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::preprocess::{EhybPlan, PreprocessConfig};
+    use crate::api::{EngineKind, SpmvContext};
+    use crate::preprocess::PreprocessConfig;
     use crate::sparse::gen::poisson2d;
-    use crate::spmv::ehyb_cpu::EhybCpu;
-    use crate::spmv::SpmvEngine;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
-    fn service() -> (SpmvService<f64>, crate::sparse::csr::Csr<f64>) {
+    fn context() -> (SpmvContext<f64>, crate::sparse::csr::Csr<f64>) {
         let a = poisson2d::<f64>(16, 16);
-        let a2 = a.clone();
-        let svc = SpmvService::spawn(
-            move || {
-                let plan = EhybPlan::build(
-                    &a2,
-                    &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
-                )?;
-                let engine = EhybCpu::new(&plan);
-                let fb = engine.format_bytes();
-                Ok((move |xs: &[&[f64]], ys: &mut [Vec<f64>]| engine.spmv_batch(xs, ys), fb))
-            },
-            256,
-            8,
-        )
-        .unwrap();
-        (svc, a)
+        let ctx = SpmvContext::builder(a.clone())
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .build()
+            .unwrap();
+        (ctx, a)
+    }
+
+    fn service() -> (SpmvService<f64>, crate::sparse::csr::Csr<f64>) {
+        let (ctx, a) = context();
+        (ctx.serve(8).unwrap(), a)
     }
 
     #[test]
@@ -225,7 +245,7 @@ mod tests {
         let (svc, a) = service();
         let client = svc.client();
         let x: Vec<f64> = (0..256).map(|i| (i as f64 * 0.01).sin()).collect();
-        let y = client.spmv(&x).unwrap();
+        let y = client.spmv(x.clone()).unwrap();
         let mut want = vec![0.0; 256];
         a.spmv(&x, &mut want);
         for i in 0..256 {
@@ -244,7 +264,7 @@ mod tests {
             let a = a.clone();
             handles.push(std::thread::spawn(move || {
                 let x: Vec<f64> = (0..256).map(|i| ((i + t * 31) as f64 * 0.02).cos()).collect();
-                let y = client.spmv(&x).unwrap();
+                let y = client.spmv(x.clone()).unwrap();
                 let mut want = vec![0.0; 256];
                 a.spmv(&x, &mut want);
                 for i in 0..256 {
@@ -278,25 +298,19 @@ mod tests {
         // N queued requests must be served by < N kernel invocations:
         // the engine sleeps so later submissions pile up behind the
         // first drain and fuse into one batched call.
-        let a = poisson2d::<f64>(16, 16);
+        let (ctx, _) = context();
         let calls = Arc::new(AtomicUsize::new(0));
         let calls_engine = calls.clone();
+        let engine = ctx.engine_arc();
         let svc: SpmvService<f64> = SpmvService::spawn(
             move || {
-                let plan = EhybPlan::build(
-                    &a,
-                    &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
-                )?;
-                let engine = EhybCpu::new(&plan);
                 let fb = engine.format_bytes();
-                Ok((
-                    move |xs: &[&[f64]], ys: &mut [Vec<f64>]| {
-                        calls_engine.fetch_add(1, Ordering::Relaxed);
-                        std::thread::sleep(std::time::Duration::from_millis(25));
-                        engine.spmv_batch(xs, ys)
-                    },
-                    fb,
-                ))
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                    calls_engine.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(std::time::Duration::from_millis(25));
+                    engine.spmv_batch(xs, ys)
+                });
+                Ok((kernel, fb))
             },
             256,
             16,
@@ -304,15 +318,12 @@ mod tests {
         .unwrap();
         let client = svc.client();
         let n_req = 8;
-        let rxs: Vec<_> = (0..n_req)
-            .map(|t| client.submit(vec![1.0 + t as f64; 256]).unwrap())
-            .collect();
-        for (t, rx) in rxs.into_iter().enumerate() {
+        let rxs: Vec<_> =
+            (0..n_req).map(|t| client.submit(vec![1.0 + t as f64; 256]).unwrap()).collect();
+        for rx in rxs {
             let y = rx.recv().unwrap();
             assert_eq!(y.len(), 256);
-            // Linearity: input (1 + t) * ones ⇒ output scales with it.
             assert!(y.iter().all(|v| v.is_finite()));
-            let _ = t;
         }
         let k = calls.load(Ordering::Relaxed);
         assert!(k < n_req, "expected fused execution, got {k} kernel calls for {n_req} requests");
@@ -338,9 +349,33 @@ mod tests {
     }
 
     #[test]
+    fn wrong_length_request_is_typed_error() {
+        let (svc, _) = service();
+        let client = svc.client();
+        match client.spmv(vec![1.0; 17]) {
+            Err(EhybError::DimensionMismatch { expected: 256, got: 17, .. }) => {}
+            other => panic!("expected DimensionMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stopped_service_returns_service_stopped() {
+        let (svc, _) = service();
+        let client = svc.client();
+        drop(svc); // joins the service thread; the channel receiver dies
+        match client.spmv(vec![0.0; 256]) {
+            Err(EhybError::ServiceStopped) => {}
+            other => panic!("expected ServiceStopped, got {other:?}"),
+        }
+        assert!(matches!(client.submit(vec![0.0; 256]), Err(EhybError::ServiceStopped)));
+    }
+
+    #[test]
     fn init_failure_propagates() {
         let r: crate::Result<SpmvService<f64>> = SpmvService::spawn(
-            || -> crate::Result<(fn(&[&[f64]], &mut [Vec<f64>]), usize)> { anyhow::bail!("boom") },
+            || -> crate::Result<(BatchKernel<f64>, usize)> {
+                Err(EhybError::Runtime("boom".into()))
+            },
             4,
             1,
         );

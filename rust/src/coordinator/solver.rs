@@ -4,6 +4,7 @@
 //! every layer of the stack.
 
 use super::precond::Preconditioner;
+use crate::api::batch::{VecBatch, VecBatchMut};
 use crate::sparse::scalar::{axpy, dot, norm2, Scalar};
 use crate::util::Timer;
 
@@ -158,9 +159,11 @@ pub fn cg<S: Scalar>(
 /// Multi-RHS preconditioned CG: solve `A xᵢ = bᵢ` for several
 /// right-hand sides sharing one matrix (multiple load cases /
 /// preconditioned systems over one FEM stiffness matrix). Every
-/// iteration's SpMVs are fused into **one** batched call, so the
-/// matrix streams once per iteration instead of once per system —
-/// the solver-layer consumer of [`crate::spmv::SpmvEngine::spmv_batch`].
+/// iteration's SpMVs are fused into **one** batched call over borrowed
+/// [`VecBatch`]/[`VecBatchMut`] views of two persistent contiguous
+/// buffers, so the matrix streams once per iteration instead of once
+/// per system and the batch occupies one allocation per side — the
+/// solver-layer consumer of [`crate::spmv::SpmvEngine::spmv_batch`].
 ///
 /// The per-system arithmetic is identical to [`cg`], so when
 /// `spmv_batch` is element-wise equal to repeated `spmv` (every engine
@@ -168,7 +171,7 @@ pub fn cg<S: Scalar>(
 /// standalone [`cg`] solve. Converged (or broken-down) systems drop
 /// out of the batch; the loop ends when none remain active.
 pub fn cg_many<S: Scalar>(
-    mut spmv_batch: impl FnMut(&[&[S]], &mut [Vec<S>]),
+    mut spmv_batch: impl FnMut(VecBatch<'_, S>, &mut VecBatchMut<'_, S>),
     bs: &[Vec<S>],
     x0s: &[Vec<S>],
     precond: &dyn Preconditioner<S>,
@@ -200,17 +203,25 @@ pub fn cg_many<S: Scalar>(
         history: Vec<f64>,
     }
 
-    // Reused fused-call outputs (Ax₀ now, then Ap for the active set).
-    let mut ys: Vec<Vec<S>> = vec![vec![S::ZERO; n]; nsys];
+    // Persistent contiguous batch storage for the fused calls: inputs
+    // (x₀ now, then the active p's) and outputs (Ax₀ / Ap), one
+    // allocation per side for the whole solve.
+    let mut xdata = vec![S::ZERO; nsys * n];
+    let mut ydata = vec![S::ZERO; nsys * n];
+    for (i, x0) in x0s.iter().enumerate() {
+        xdata[i * n..(i + 1) * n].copy_from_slice(x0);
+    }
     {
-        let xrefs: Vec<&[S]> = x0s.iter().map(|x| x.as_slice()).collect();
-        spmv_batch(&xrefs, &mut ys);
+        let xs = VecBatch::new(&xdata, n).expect("contiguous solver batch");
+        let mut ys = VecBatchMut::new(&mut ydata, n).expect("contiguous solver batch");
+        spmv_batch(xs, &mut ys);
     }
     let mut sys: Vec<Sys<S>> = (0..nsys)
         .map(|i| {
+            let ax0 = &ydata[i * n..(i + 1) * n];
             let mut r = vec![S::ZERO; n];
             for j in 0..n {
-                r[j] = bs[i][j] - ys[i][j];
+                r[j] = bs[i][j] - ax0[j];
             }
             let mut z = vec![S::ZERO; n];
             precond.apply(&r, &mut z);
@@ -238,12 +249,20 @@ pub fn cg_many<S: Scalar>(
             break;
         }
         {
-            let xrefs: Vec<&[S]> = act.iter().map(|&i| sys[i].p.as_slice()).collect();
-            spmv_batch(&xrefs, &mut ys[..act.len()]);
+            // Stage the active search directions into the contiguous
+            // input batch (the copy is O(act·n), dwarfed by the SpMV).
+            for (j, &i) in act.iter().enumerate() {
+                xdata[j * n..(j + 1) * n].copy_from_slice(&sys[i].p);
+            }
+            let xs =
+                VecBatch::new(&xdata[..act.len() * n], n).expect("contiguous solver batch");
+            let mut ys =
+                VecBatchMut::new(&mut ydata[..act.len() * n], n).expect("contiguous solver batch");
+            spmv_batch(xs, &mut ys);
         }
         for (j, &i) in act.iter().enumerate() {
             let s = &mut sys[i];
-            let ap: &[S] = &ys[j];
+            let ap: &[S] = &ydata[j * n..(j + 1) * n];
             s.iters += 1;
             s.spmv_count += 1;
             match cg_step(
@@ -526,13 +545,7 @@ mod tests {
         let x0s = vec![vec![0.0; n]; 3];
         let pre = Jacobi::new(&a);
         let cfg = SolverConfig::default();
-        let many = cg_many(
-            |xs: &[&[f64]], ys: &mut [Vec<f64>]| engine.spmv_batch(xs, ys),
-            &bs,
-            &x0s,
-            &pre,
-            &cfg,
-        );
+        let many = cg_many(|xs, ys| engine.spmv_batch(xs, ys), &bs, &x0s, &pre, &cfg);
         assert_eq!(many.len(), 3);
         for (i, (x, rep)) in many.iter().enumerate() {
             let (x1, rep1) = cg(|v, y: &mut [f64]| engine.spmv(v, y), &bs[i], &x0s[i], &pre, &cfg);
@@ -556,11 +569,9 @@ mod tests {
         let x0s = vec![vec![0.0; n]; 2];
         let pre = Jacobi::new(&a);
         let res = cg_many(
-            |xs: &[&[f64]], ys: &mut [Vec<f64>]| {
-                for (x, y) in xs.iter().zip(ys.iter_mut()) {
-                    y.clear();
-                    y.resize(n, 0.0);
-                    a.spmv(x, y);
+            |xs, ys| {
+                for b in 0..xs.width() {
+                    a.spmv(xs.col(b), ys.col_mut(b));
                 }
             },
             &bs,
@@ -578,13 +589,7 @@ mod tests {
     fn cg_many_empty_input() {
         let a = poisson2d::<f64>(4, 4);
         let pre = Jacobi::new(&a);
-        let res = cg_many(
-            |_xs: &[&[f64]], _ys: &mut [Vec<f64>]| {},
-            &[],
-            &[],
-            &pre,
-            &SolverConfig::default(),
-        );
+        let res = cg_many(|_xs, _ys| {}, &[], &[], &pre, &SolverConfig::default());
         assert!(res.is_empty());
     }
 

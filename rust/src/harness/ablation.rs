@@ -1,9 +1,10 @@
 //! Ablations (DESIGN.md §7): isolate each design choice the paper
 //! motivates and measure its contribution on the simulator.
 
+use super::runner::ehyb_context;
 use crate::gpu::{kernels, simulate, GpuDevice};
 use crate::partition::{PartitionConfig, PartitionMethod};
-use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::preprocess::PreprocessConfig;
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
 
@@ -21,8 +22,8 @@ pub fn cache_and_cols<S: Scalar>(
     cfg: &PreprocessConfig,
     dev: &GpuDevice,
 ) -> crate::Result<Vec<AblationRow>> {
-    let plan = EhybPlan::build(m, cfg)?;
-    let e = &plan.matrix;
+    let ctx = ehyb_context(m, cfg)?;
+    let e = &ctx.plan().expect("EHYB context carries a plan").matrix;
     let mut rows = Vec::new();
     for (cache, u16c) in [(true, true), (true, false), (false, true), (false, false)] {
         let r = simulate(&kernels::ehyb(e, dev, cache, u16c), dev);
@@ -57,7 +58,8 @@ pub fn partitioner_quality<S: Scalar>(
             partition: PartitionConfig { method, ..base.partition.clone() },
             ..base.clone()
         };
-        let plan = EhybPlan::build(m, &cfg)?;
+        let ctx = ehyb_context(m, &cfg)?;
+        let plan = ctx.plan().expect("EHYB context carries a plan");
         let r = simulate(&kernels::ehyb(&plan.matrix, dev, true, true), dev);
         rows.push(AblationRow {
             variant: format!("{method:?}"),
@@ -78,7 +80,8 @@ pub fn sort_ablation<S: Scalar>(
     let mut rows = Vec::new();
     for sort in [true, false] {
         let cfg = PreprocessConfig { sort_descending: sort, ..base.clone() };
-        let plan = EhybPlan::build(m, &cfg)?;
+        let ctx = ehyb_context(m, &cfg)?;
+        let plan = ctx.plan().expect("EHYB context carries a plan");
         let r = simulate(&kernels::ehyb(&plan.matrix, dev, true, true), dev);
         rows.push(AblationRow {
             variant: format!("sort_desc={sort}"),
@@ -104,7 +107,8 @@ pub fn vecsize_sweep<S: Scalar>(
             continue;
         }
         let cfg = PreprocessConfig { vec_size_override: Some(v), ..base.clone() };
-        let plan = EhybPlan::build(m, &cfg)?;
+        let ctx = ehyb_context(m, &cfg)?;
+        let plan = ctx.plan().expect("EHYB context carries a plan");
         let r = simulate(&kernels::ehyb(&plan.matrix, dev, true, true), dev);
         rows.push(AblationRow {
             variant: format!("vec_size={v}"),

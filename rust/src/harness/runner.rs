@@ -2,11 +2,25 @@
 //! simulated kernel, and return one row per framework — the unit of
 //! work behind every figure and table.
 
+use crate::api::{EngineKind, SpmvContext};
 use crate::gpu::{kernels, simulate, GpuDevice, SimReport};
-use crate::preprocess::{EhybPlan, PreprocessConfig, PreprocessTimings};
+use crate::preprocess::{PreprocessConfig, PreprocessTimings};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
+use crate::spmv::SpmvEngine;
 use crate::util::Timer;
+
+/// Build an EHYB [`SpmvContext`] for a harness measurement — the one
+/// place the harness runs preprocessing (everything downstream,
+/// including [`super::ablation`], reads the plan back off the context;
+/// the engine itself is built lazily, so plan-only measurements never
+/// pay for it).
+pub(crate) fn ehyb_context<S: Scalar>(
+    m: &Csr<S>,
+    cfg: &PreprocessConfig,
+) -> crate::Result<SpmvContext<S>> {
+    SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg.clone()).build()
+}
 
 /// One framework's result on one matrix.
 #[derive(Clone, Debug)]
@@ -66,7 +80,8 @@ pub fn run_matrix<S: Scalar>(
     cfg: &PreprocessConfig,
     dev: &GpuDevice,
 ) -> crate::Result<MatrixRun> {
-    let plan = EhybPlan::build(m, cfg)?;
+    let ctx = ehyb_context(m, cfg)?;
+    let plan = ctx.plan().expect("EHYB context carries a plan");
     let mut rows = Vec::new();
 
     let push = |rows: &mut Vec<FrameworkRow>, r: SimReport| {
@@ -108,6 +123,7 @@ pub fn run_matrix<S: Scalar>(
     })
 }
 
+
 /// Measure host preprocessing against the *CPU* EHYB SpMV wall-clock —
 /// the apples-to-apples decomposition when no GPU exists (used as a
 /// cross-check next to the simulated ratio in Fig. 6).
@@ -115,9 +131,9 @@ pub fn measure_prep_ratio_cpu<S: Scalar>(
     m: &Csr<S>,
     cfg: &PreprocessConfig,
 ) -> crate::Result<(PreprocessTimings, f64)> {
-    let plan = EhybPlan::build(m, cfg)?;
-    let engine = crate::spmv::ehyb_cpu::EhybCpu::new(&plan);
-    use crate::spmv::SpmvEngine;
+    let ctx = ehyb_context(m, cfg)?;
+    let timings = ctx.plan().expect("EHYB context carries a plan").timings;
+    let engine = ctx.engine();
     let x = vec![S::ONE; m.nrows()];
     let mut y = vec![S::ZERO; m.nrows()];
     let secs = crate::util::timer::bench_secs(
@@ -125,7 +141,7 @@ pub fn measure_prep_ratio_cpu<S: Scalar>(
         3,
         std::time::Duration::from_millis(30),
     );
-    Ok((plan.timings, secs))
+    Ok((timings, secs))
 }
 
 /// Wall-clock benchmark of the CPU engines (used by the hotpath bench

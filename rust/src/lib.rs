@@ -19,34 +19,60 @@
 //!   of the paper's shared-memory cache).
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! index, `EXPERIMENTS.md` for paper-vs-measured results, and
+//! `MIGRATION.md` for the pre-facade → [`SpmvContext`] call mapping.
 //!
 //! ## Quickstart
+//!
+//! The whole pipeline — preprocess once (partition → reorder →
+//! explicitly-cached format), execute many — lives behind one prepared
+//! handle, [`SpmvContext`]:
 //!
 //! ```no_run
 //! // (no_run: doctest binaries don't inherit the rpath to the PJRT
 //! // runtime libs in this offline image; the same flow is executed by
-//! // rust/tests/integration.rs.)
+//! // rust/tests/integration.rs and rust/tests/api.rs.)
 //! use ehyb::sparse::gen::poisson2d;
-//! use ehyb::preprocess::{EhybPlan, PreprocessConfig};
-//! use ehyb::spmv::{SpmvEngine, ehyb_cpu::EhybCpu};
+//! use ehyb::{BatchBuf, EngineKind, SpmvContext};
 //!
 //! let m = poisson2d::<f64>(32, 32); // 1024x1024 5-point stencil, CSR
-//! let plan = EhybPlan::build(&m, &PreprocessConfig::default()).unwrap();
-//! let x: Vec<f64> = (0..m.nrows()).map(|i| (i % 7) as f64).collect();
-//! let engine = EhybCpu::new(&plan);
-//! let mut y = vec![0.0; m.nrows()];
-//! engine.spmv(&x, &mut y);
+//! let n = m.nrows();
+//!
+//! // Build once: runs Algorithms 1-2 and prepares the EHYB engine.
+//! // `EngineKind::Auto` would instead pick the engine whose roofline
+//! // bound wins on this matrix.
+//! let ctx = SpmvContext::builder(m).engine(EngineKind::Ehyb).build()?;
+//!
+//! // Execute many: dimension-checked SpMV (typed EhybError instead of
+//! // a panic on bad input lengths).
+//! let x: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+//! let y = ctx.spmv_alloc(&x)?;
 //! assert!(y.iter().all(|v| v.is_finite()));
 //!
-//! // Batched multi-vector SpMV: the blocked SpMM kernel streams the
-//! // matrix once per register block instead of once per vector.
-//! let xs: Vec<Vec<f64>> = (0..4)
-//!     .map(|t| (0..m.nrows()).map(|i| ((i + t) % 5) as f64).collect())
-//!     .collect();
-//! let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
-//! let mut ys: Vec<Vec<f64>> = vec![Vec::new(); xrefs.len()];
-//! engine.spmv_batch(&xrefs, &mut ys); // ys[i] = A * xs[i]
+//! // Batched SpMV over ONE contiguous allocation: the blocked SpMM
+//! // kernel streams the matrix once per register block instead of once
+//! // per vector.
+//! let mut xs = BatchBuf::<f64>::zeros(n, 4);
+//! for b in 0..4 {
+//!     for i in 0..n {
+//!         xs.col_mut(b)[i] = ((i + b) % 5) as f64;
+//!     }
+//! }
+//! let mut ys = BatchBuf::<f64>::zeros(n, 4);
+//! {
+//!     let mut ysv = ys.view_mut();
+//!     ctx.spmv_batch(xs.view(), &mut ysv)?; // ys.col(b) = A * xs.col(b)
+//! }
+//!
+//! // The same handle spawns the request-fusing service and drives the
+//! // iterative solvers:
+//! let svc = ctx.serve(16)?; // SpmvService; svc.client().spmv(x) round-trips
+//! let pre = ehyb::coordinator::Jacobi::new(ctx.matrix());
+//! let cfg = ehyb::coordinator::SolverConfig::default();
+//! let (sol, report) = ctx.solver().cg(&x, None, &pre, &cfg)?;
+//! assert_eq!(sol.len(), n);
+//! drop((svc, report));
+//! # Ok::<(), ehyb::EhybError>(())
 //! ```
 //!
 //! ## Tuning
@@ -54,12 +80,13 @@
 //! * **`EHYB_THREADS`** — worker-thread count for the partition-
 //!   parallel SpMV/SpMM hot paths (and the preprocessing partitioner).
 //!   Defaults to `min(cores, 16)`; resolved once and cached, override
-//!   at runtime with [`util::par::set_num_threads`]. The parallel walk
-//!   is bit-identical to the serial kernel at any thread count.
-//! * **Batching** — prefer [`spmv::SpmvEngine::spmv_batch`] (or the
-//!   service's request fusion / [`coordinator::cg_many`]) whenever
-//!   several vectors share one matrix: SpMV is memory-bound, so batch
-//!   width multiplies arithmetic intensity.
+//!   at runtime with [`util::par::set_num_threads`]. Both the parallel
+//!   ELL walk and the parallel ER scatter are bit-identical to the
+//!   serial kernel at any thread count.
+//! * **Batching** — prefer [`SpmvContext::spmv_batch`] (or the
+//!   service's request fusion / [`SpmvContext::solver`]'s `cg_many`)
+//!   whenever several vectors share one matrix: SpMV is memory-bound,
+//!   so batch width multiplies arithmetic intensity.
 
 pub mod util;
 pub mod sparse;
@@ -71,6 +98,9 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod coordinator;
 pub mod harness;
+pub mod api;
 
-/// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub use api::{BatchBuf, EhybError, EngineKind, SpmvContext, VecBatch, VecBatchMut};
+
+/// Crate-wide result type over the typed [`EhybError`].
+pub type Result<T> = std::result::Result<T, EhybError>;

@@ -10,12 +10,13 @@
 //!
 //! Matrix selection: `--gen poisson3d:24` style specs or `--mtx file.mtx`.
 
-use ehyb::coordinator::{bicgstab, cg, Jacobi, Spai0, SolverConfig};
+use ehyb::coordinator::{Jacobi, Spai0, SolverConfig};
 use ehyb::gpu::GpuDevice;
 use ehyb::harness::{report, runner, suite, tables};
 use ehyb::harness::suite::Scale;
-use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::preprocess::PreprocessConfig;
 use ehyb::sparse::csr::Csr;
+use ehyb::{EngineKind, SpmvContext};
 use ehyb::sparse::gen;
 use ehyb::sparse::mmio::read_matrix_market;
 use ehyb::sparse::stats::MatrixStats;
@@ -132,7 +133,8 @@ fn cmd_info(opts: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_preprocess(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let m = build_matrix(opts)?;
     let cfg = preprocess_cfg(opts);
-    let plan = EhybPlan::build(&m, &cfg)?;
+    let ctx = SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg).build()?;
+    let plan = ctx.plan().expect("EHYB context carries a plan");
     let e = &plan.matrix;
     println!("partitions      : {} x vec_size {}", e.num_parts, e.vec_size);
     println!("K (eq.1)        : {}", plan.cache.k);
@@ -175,8 +177,8 @@ fn cmd_spmv(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     if opts.contains_key("pjrt") {
         let dir = opts.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
         let rt = ehyb::runtime::PjrtRuntime::new(dir)?;
-        let plan = EhybPlan::build(&m, &cfg)?;
-        let engine = rt.spmv_engine(&plan.matrix)?;
+        let ctx = SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg).build()?;
+        let engine = rt.spmv_engine(&ctx.plan().expect("EHYB context carries a plan").matrix)?;
         let x = vec![1.0f64; m.nrows()];
         let mut y = vec![0.0; m.nrows()];
         let t = ehyb::util::Timer::start();
@@ -201,20 +203,19 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         rtol: opts.get("rtol").and_then(|v| v.parse().ok()).unwrap_or(1e-8),
         track_history: true,
     };
-    let plan = EhybPlan::build(&m, &cfg)?;
-    let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
-    use ehyb::spmv::SpmvEngine;
-    let spmv = |x: &[f64], y: &mut [f64]| engine.spmv(x, y);
+    let ctx = SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg).build()?;
+    let m = ctx.matrix();
+    let h = ctx.solver();
 
     let pre_name = opts.get("precond").map(String::as_str).unwrap_or("jacobi");
     let report = match (solver, pre_name) {
-        ("cg", "jacobi") => cg(spmv, &b, &vec![0.0; n], &Jacobi::new(&m), &scfg).1,
-        ("cg", "spai0") => cg(spmv, &b, &vec![0.0; n], &Spai0::new(&m), &scfg).1,
-        ("cg", _) => cg(spmv, &b, &vec![0.0; n], &ehyb::coordinator::precond::Identity, &scfg).1,
-        ("bicgstab", "jacobi") => bicgstab(spmv, &b, &vec![0.0; n], &Jacobi::new(&m), &scfg).1,
-        ("bicgstab", "spai0") => bicgstab(spmv, &b, &vec![0.0; n], &Spai0::new(&m), &scfg).1,
+        ("cg", "jacobi") => h.cg(&b, None, &Jacobi::new(m), &scfg)?.1,
+        ("cg", "spai0") => h.cg(&b, None, &Spai0::new(m), &scfg)?.1,
+        ("cg", _) => h.cg(&b, None, &ehyb::coordinator::precond::Identity, &scfg)?.1,
+        ("bicgstab", "jacobi") => h.bicgstab(&b, None, &Jacobi::new(m), &scfg)?.1,
+        ("bicgstab", "spai0") => h.bicgstab(&b, None, &Spai0::new(m), &scfg)?.1,
         ("bicgstab", _) => {
-            bicgstab(spmv, &b, &vec![0.0; n], &ehyb::coordinator::precond::Identity, &scfg).1
+            h.bicgstab(&b, None, &ehyb::coordinator::precond::Identity, &scfg)?.1
         }
         (s, _) => anyhow::bail!("unknown solver {s}"),
     };
@@ -228,7 +229,7 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         report.spmv_count,
         report.wall_secs
     );
-    let prep = plan.timings.total_secs();
+    let prep = ctx.plan().expect("EHYB context carries a plan").timings.total_secs();
     let per_spmv = report.wall_secs / report.spmv_count.max(1) as f64;
     println!(
         "preprocessing {:.3}s = {:.0}x one SpMV; amortized over {} SpMVs: {:.1}% overhead",

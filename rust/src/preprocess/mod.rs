@@ -73,15 +73,23 @@ pub struct EhybPlan<S: Scalar> {
 impl<S: Scalar> EhybPlan<S> {
     /// Run the full preprocessing pipeline on a square CSR matrix.
     pub fn build(m: &Csr<S>, cfg: &PreprocessConfig) -> crate::Result<EhybPlan<S>> {
-        anyhow::ensure!(m.nrows() == m.ncols(), "EHYB requires a square matrix");
-        anyhow::ensure!(m.nrows() > 0, "empty matrix");
+        if m.nrows() != m.ncols() {
+            return Err(crate::EhybError::UnsupportedFormat(format!(
+                "EHYB requires a square matrix, got {}x{}",
+                m.nrows(),
+                m.ncols()
+            )));
+        }
+        if m.nrows() == 0 {
+            return Err(crate::EhybError::UnsupportedFormat("empty matrix".into()));
+        }
         let n = m.nrows();
         let h = cfg.slice_height;
 
         // --- Equations (1)-(2): partition count and cache size. ---
         let cache = match cfg.vec_size_override {
             Some(v) => {
-                anyhow::ensure!(v % h == 0 && v <= 1 << 16, "bad vec_size override {v}");
+                crate::ensure!(v % h == 0 && v <= 1 << 16, "bad vec_size override {v}");
                 CachePlan { vec_size: v, num_parts: n.div_ceil(v), k: 0 }
             }
             None => cache_plan::<S>(n, h, &cfg.device),
@@ -94,6 +102,23 @@ impl<S: Scalar> EhybPlan<S> {
         let graph = Graph::from_matrix_structure(m);
         let partition = partition_graph(&graph, num_parts, vec_size as u64, &cfg.partition);
         let partition_secs = t.elapsed_secs();
+        // The assembler scatters by partition rank; an assignment that
+        // misses rows or overfills a part would corrupt the layout, so
+        // fail with a typed error instead.
+        if partition.assignment.len() != n {
+            return Err(crate::EhybError::PartitionFailed(format!(
+                "assignment covers {} of {} rows",
+                partition.assignment.len(),
+                n
+            )));
+        }
+        if let Some((p, &load)) =
+            partition.loads.iter().enumerate().find(|(_, &l)| l > vec_size as u64)
+        {
+            return Err(crate::EhybError::PartitionFailed(format!(
+                "part {p} load {load} exceeds capacity {vec_size}"
+            )));
+        }
 
         // --- Algorithm 1 lines 3-27 + Algorithm 2 (timed as "reorder"). ---
         let t = Timer::start();

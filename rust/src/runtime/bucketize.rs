@@ -35,7 +35,7 @@ impl<S: Scalar> BucketizedEhyb<S> {
     pub fn build(m: &EhybMatrix<S>, spec: &BucketSpec) -> crate::Result<Self> {
         let max_w = m.slice_width.iter().copied().max().unwrap_or(0) as usize;
         let max_er_w = m.er_slice_width.iter().copied().max().unwrap_or(0) as usize;
-        anyhow::ensure!(
+        crate::ensure!(
             spec.fits(m.num_parts, m.vec_size, max_w, m.er_rows, max_er_w),
             "matrix (parts={} vec={} w={} er={}x{}) does not fit bucket {} (p={} r={} w={} e={} we={})",
             m.num_parts,

@@ -40,7 +40,7 @@ impl PjrtRuntime {
         }
         let path = self.manifest.artifact_path(spec);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            path.to_str().ok_or_else(|| crate::EhybError::Runtime("non-utf8 path".into()))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = Rc::new(self.client.compile(&comp)?);
@@ -59,7 +59,7 @@ impl PjrtRuntime {
             .manifest
             .pick(kind, S::DTYPE_TAG, m.num_parts, m.vec_size, max_w, m.er_rows, max_er_w)
             .ok_or_else(|| {
-                anyhow::anyhow!(
+                crate::EhybError::Runtime(format!(
                     "no {kind}/{} bucket fits parts={} vec={} w={} er={}x{}",
                     S::DTYPE_TAG,
                     m.num_parts,
@@ -67,7 +67,7 @@ impl PjrtRuntime {
                     max_w,
                     m.er_rows,
                     max_er_w
-                )
+                ))
             })?
             .clone())
     }
@@ -151,7 +151,7 @@ impl<S: XlaScalar> EhybPjrt<S> {
     /// `yp = A xp` in bucket order — the hot call the solver loop uses
     /// (keeps vectors permanently permuted, like the CUDA version).
     pub fn spmv_new_order(&self, xp: &[S]) -> crate::Result<Vec<S>> {
-        anyhow::ensure!(xp.len() == self.bucket.spec.n(), "xp length");
+        crate::ensure!(xp.len() == self.bucket.spec.n(), "xp length");
         let x_lit = xla::Literal::vec1(xp);
         // Borrowed literals: the matrix-argument uploads are reused
         // across calls (deep-cloning Literals would copy the arrays).
@@ -252,7 +252,7 @@ impl<S: XlaScalar> CgPjrt<S> {
             &self.diag_inv,
         ])?;
         let outs = result[0][0].to_literal_sync()?.to_tuple()?;
-        anyhow::ensure!(outs.len() == 5, "cg artifact returned {} outputs", outs.len());
+        crate::ensure!(outs.len() == 5, "cg artifact returned {} outputs", outs.len());
         st.x = outs[0].to_vec::<S>()?;
         st.r = outs[1].to_vec::<S>()?;
         st.p = outs[2].to_vec::<S>()?;

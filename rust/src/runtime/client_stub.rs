@@ -21,10 +21,11 @@ impl PjrtRuntime {
     /// Always fails: the PJRT client needs the `xla` bindings.
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> crate::Result<Self> {
         let _ = artifact_dir.as_ref();
-        anyhow::bail!(
+        Err(crate::EhybError::Runtime(
             "PJRT runtime unavailable: built without the `pjrt` feature \
              (enable it with the xla bindings and run `make artifacts`)"
-        )
+                .into(),
+        ))
     }
 
     pub fn platform(&self) -> String {

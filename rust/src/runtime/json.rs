@@ -21,7 +21,7 @@ impl Json {
         p.ws();
         let v = p.value()?;
         p.ws();
-        anyhow::ensure!(p.i == p.b.len(), "trailing bytes at {}", p.i);
+        crate::ensure!(p.i == p.b.len(), "trailing bytes at {}", p.i);
         Ok(v)
     }
 
@@ -71,7 +71,7 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> crate::Result<Json> {
-        anyhow::ensure!(self.i < self.b.len(), "unexpected EOF");
+        crate::ensure!(self.i < self.b.len(), "unexpected EOF");
         match self.b[self.i] {
             b'{' => self.obj(),
             b'[' => self.arr(),
@@ -84,7 +84,7 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> crate::Result<Json> {
-        anyhow::ensure!(self.b[self.i..].starts_with(word.as_bytes()), "bad literal at {}", self.i);
+        crate::ensure!(self.b[self.i..].starts_with(word.as_bytes()), "bad literal at {}", self.i);
         self.i += word.len();
         Ok(v)
     }
@@ -97,11 +97,11 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number {s:?}: {e}"))?))
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| crate::EhybError::Parse(format!("bad number {s:?}: {e}")))?))
     }
 
     fn string(&mut self) -> crate::Result<String> {
-        anyhow::ensure!(
+        crate::ensure!(
             self.i < self.b.len() && self.b[self.i] == b'"',
             "expected string at {}",
             self.i
@@ -116,13 +116,13 @@ impl<'a> Parser<'a> {
                 }
                 b'\\' => {
                     self.i += 1;
-                    anyhow::ensure!(self.i < self.b.len(), "EOF in escape");
+                    crate::ensure!(self.i < self.b.len(), "EOF in escape");
                     out.push(match self.b[self.i] {
                         b'n' => b'\n',
                         b't' => b'\t',
                         b'r' => b'\r',
                         c @ (b'"' | b'\\' | b'/') => c,
-                        c => anyhow::bail!("unsupported escape \\{}", c as char),
+                        c => crate::bail!("unsupported escape \\{}", c as char),
                     });
                     self.i += 1;
                 }
@@ -132,7 +132,7 @@ impl<'a> Parser<'a> {
                 }
             }
         }
-        anyhow::bail!("unterminated string")
+        crate::bail!("unterminated string")
     }
 
     fn obj(&mut self) -> crate::Result<Json> {
@@ -147,7 +147,7 @@ impl<'a> Parser<'a> {
             self.ws();
             let k = self.string()?;
             self.ws();
-            anyhow::ensure!(self.b.get(self.i) == Some(&b':'), "expected ':' at {}", self.i);
+            crate::ensure!(self.b.get(self.i) == Some(&b':'), "expected ':' at {}", self.i);
             self.i += 1;
             self.ws();
             let v = self.value()?;
@@ -159,7 +159,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                _ => anyhow::bail!("expected ',' or '}}' at {}", self.i),
+                _ => crate::bail!("expected ',' or '}}' at {}", self.i),
             }
         }
     }
@@ -182,7 +182,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(a));
                 }
-                _ => anyhow::bail!("expected ',' or ']' at {}", self.i),
+                _ => crate::bail!("expected ',' or ']' at {}", self.i),
             }
         }
     }

@@ -40,7 +40,7 @@ impl Manifest {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("read {path:?}: {e} (run `make artifacts` first)"))?;
+            .map_err(|e| crate::EhybError::Io(format!("read {path:?}: {e} (run `make artifacts` first)")))?;
         Self::parse(&text, dir)
     }
 
@@ -49,17 +49,17 @@ impl Manifest {
         let arr = j
             .get("buckets")
             .and_then(|b| b.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("manifest missing buckets"))?;
+            .ok_or_else(|| crate::EhybError::Parse("manifest missing buckets".into()))?;
         let mut buckets = Vec::with_capacity(arr.len());
         for b in arr {
             let s = |k: &str| -> crate::Result<String> {
                 Ok(b.get(k)
                     .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow::anyhow!("bucket missing {k}"))?
+                    .ok_or_else(|| crate::EhybError::Parse(format!("bucket missing {k}")))?
                     .to_string())
             };
             let u = |k: &str| -> crate::Result<usize> {
-                b.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow::anyhow!("bucket missing {k}"))
+                b.get(k).and_then(|v| v.as_usize()).ok_or_else(|| crate::EhybError::Parse(format!("bucket missing {k}")))
             };
             buckets.push(BucketSpec {
                 kind: s("kind")?,

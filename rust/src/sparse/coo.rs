@@ -38,7 +38,7 @@ impl<S: Scalar> Coo<S> {
     ) -> crate::Result<Self> {
         let mut m = Coo::new(nrows, ncols);
         for (r, c, v) in triplets {
-            anyhow::ensure!(r < nrows && c < ncols, "entry ({r},{c}) out of bounds {nrows}x{ncols}");
+            crate::ensure!(r < nrows && c < ncols, "entry ({r},{c}) out of bounds {nrows}x{ncols}");
             m.push(r, c, v);
         }
         Ok(m)

@@ -40,15 +40,15 @@ impl<S: Scalar> Csr<S> {
         col_idx: Vec<u32>,
         vals: Vec<S>,
     ) -> crate::Result<Self> {
-        anyhow::ensure!(row_ptr.len() == nrows + 1, "row_ptr length");
-        anyhow::ensure!(row_ptr[0] == 0, "row_ptr[0] != 0");
-        anyhow::ensure!(
+        crate::ensure!(row_ptr.len() == nrows + 1, "row_ptr length");
+        crate::ensure!(row_ptr[0] == 0, "row_ptr[0] != 0");
+        crate::ensure!(
             row_ptr.windows(2).all(|w| w[0] <= w[1]),
             "row_ptr not monotone"
         );
-        anyhow::ensure!(*row_ptr.last().unwrap() as usize == col_idx.len(), "nnz mismatch");
-        anyhow::ensure!(col_idx.len() == vals.len(), "col/val length mismatch");
-        anyhow::ensure!(col_idx.iter().all(|&c| (c as usize) < ncols), "col out of bounds");
+        crate::ensure!(*row_ptr.last().unwrap() as usize == col_idx.len(), "nnz mismatch");
+        crate::ensure!(col_idx.len() == vals.len(), "col/val length mismatch");
+        crate::ensure!(col_idx.iter().all(|&c| (c as usize) < ncols), "col out of bounds");
         Ok(Self { nrows, ncols, row_ptr, col_idx, vals })
     }
 

@@ -133,7 +133,7 @@ impl<S: Scalar> EhybMatrix<S> {
     /// Validate all structural invariants. Called by tests and after
     /// preprocessing in debug builds.
     pub fn validate(&self) -> crate::Result<()> {
-        use anyhow::ensure;
+        use crate::ensure;
         ensure!(self.vec_size % self.slice_height == 0, "vec_size not multiple of slice height");
         ensure!(self.vec_size <= (1 << 16), "vec_size {} exceeds u16 index space", self.vec_size);
         ensure!(self.padded_rows() >= self.n, "partitions do not cover matrix");
@@ -163,6 +163,14 @@ impl<S: Scalar> EhybMatrix<S> {
             self.y_idx_er[..self.er_rows].iter().all(|&r| (r as usize) < self.n + (self.padded_rows() - self.n)),
             "yIdxER bound"
         );
+        // Injectivity: one ER slot per distinct output row. The parallel
+        // ER scatter in `spmv::ehyb_cpu` relies on this to write
+        // disjoint yp entries from different slice ranges.
+        let mut er_seen = vec![false; self.padded_rows()];
+        for &r in &self.y_idx_er[..self.er_rows] {
+            ensure!(!er_seen[r as usize], "yIdxER not injective at row {r}");
+            er_seen[r as usize] = true;
+        }
         // Permutation is a bijection old<->new over n rows.
         ensure!(self.perm.len() == self.n && self.iperm.len() >= self.n, "perm length");
         for old in 0..self.n {

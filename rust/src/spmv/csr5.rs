@@ -73,6 +73,9 @@ impl<S: Scalar> SpmvEngine<S> for Csr5Like<S> {
     fn nrows(&self) -> usize {
         self.m.nrows()
     }
+    fn ncols(&self) -> usize {
+        self.m.ncols()
+    }
     fn nnz(&self) -> usize {
         self.m.nnz()
     }

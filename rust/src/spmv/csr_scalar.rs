@@ -44,6 +44,9 @@ impl<S: Scalar> SpmvEngine<S> for CsrScalar<S> {
     fn nrows(&self) -> usize {
         self.m.nrows()
     }
+    fn ncols(&self) -> usize {
+        self.m.ncols()
+    }
     fn nnz(&self) -> usize {
         self.m.nnz()
     }

@@ -53,6 +53,9 @@ impl<S: Scalar> SpmvEngine<S> for CsrVector<S> {
     fn nrows(&self) -> usize {
         self.m.nrows()
     }
+    fn ncols(&self) -> usize {
+        self.m.ncols()
+    }
     fn nnz(&self) -> usize {
         self.m.nnz()
     }

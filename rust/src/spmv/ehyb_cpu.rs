@@ -9,17 +9,23 @@
 //!
 //! * **Partition parallelism** — every partition owns a disjoint
 //!   `vec_size` row range of `yp`, so the ELL pass splits race-free
-//!   across [`crate::util::par`] worker threads (`EHYB_THREADS`); the
-//!   ER scatter stays a serial tail. The parallel walk keeps each
-//!   row's k-accumulation order, so results are **bit-identical** to
-//!   the serial kernel.
+//!   across [`crate::util::par`] worker threads (`EHYB_THREADS`). The
+//!   ER scatter parallelizes too: each ER slot maps to a *distinct*
+//!   output row (`y_idx_er` is injective, checked by
+//!   `EhybMatrix::validate`), so ER slice ranges scatter into disjoint
+//!   `yp` entries. Per-row accumulation order is unchanged in both
+//!   passes, so results are **bit-identical** to the serial kernel at
+//!   any thread count.
 //! * **Blocked SpMM** — [`EhybCpu::spmm_new_order`] streams each
 //!   partition's slice data once for a register block of input
 //!   vectors, multiplying arithmetic intensity by the block width
 //!   (the paper's data-movement economics applied across a request
-//!   batch instead of within one SpMV).
+//!   batch instead of within one SpMV). The engine-level batch entry
+//!   ([`SpmvEngine::spmv_batch`]) runs over borrowed
+//!   [`VecBatch`]/[`VecBatchMut`] views and stages the whole batch in
+//!   **one** contiguous scratch allocation per side.
 
-use super::SpmvEngine;
+use super::{SpmvEngine, VecBatch, VecBatchMut};
 use crate::sparse::ehyb::EhybMatrix;
 use crate::sparse::scalar::Scalar;
 use crate::util::par;
@@ -35,6 +41,14 @@ const PAR_MIN_NNZ: usize = 256 * 1024;
 
 pub struct EhybCpu<S: Scalar> {
     m: EhybMatrix<S>,
+    /// True iff `y_idx_er` is injective over the logical ER slots and
+    /// every target is in bounds — checked **once at construction**
+    /// (not just in `validate()`/debug builds), because the parallel
+    /// ER scatter's safety argument depends on it and `EhybMatrix` has
+    /// public fields, so a hand-assembled matrix can reach
+    /// [`Self::from_matrix`] without ever passing validation. When
+    /// false, the ER tail stays serial (correct for any targets).
+    er_scatter_disjoint: bool,
     /// Reusable permuted-vector buffers (allocation in the hot loop
     /// costs ~10 % on paper-scale matrices). A pool, not a single
     /// locked slot: concurrent callers pop distinct scratches and only
@@ -43,15 +57,17 @@ pub struct EhybCpu<S: Scalar> {
     pool: ScratchPool<S>,
 }
 
-/// Permuted x/y buffers for one in-flight call (one pair per batch lane).
+/// Permuted x/y storage for one in-flight call: one contiguous
+/// allocation per side holding `width` padded vectors column-major
+/// (lane `b` = `xp[b*padded..(b+1)*padded]`).
 struct Scratch<S> {
-    xps: Vec<Vec<S>>,
-    yps: Vec<Vec<S>>,
+    xp: Vec<S>,
+    yp: Vec<S>,
 }
 
 impl<S> Default for Scratch<S> {
     fn default() -> Self {
-        Self { xps: Vec::new(), yps: Vec::new() }
+        Self { xp: Vec::new(), yp: Vec::new() }
     }
 }
 
@@ -64,21 +80,16 @@ impl<S: Scalar> ScratchPool<S> {
         Self { free: Mutex::new(Vec::new()) }
     }
 
-    /// Pop (or create) a scratch with at least `width` buffer pairs of
-    /// length `padded`. Contents are unspecified — both passes fully
+    /// Pop (or create) a scratch sized for `width` lanes of `padded`
+    /// elements per side. Contents are unspecified — both passes fully
     /// overwrite their buffers before reading.
     fn take(&self, width: usize, padded: usize) -> Scratch<S> {
         let mut s = self.free.lock().unwrap().pop().unwrap_or_default();
-        while s.xps.len() < width {
-            s.xps.push(Vec::new());
-        }
-        while s.yps.len() < width {
-            s.yps.push(Vec::new());
-        }
-        for v in s.xps[..width].iter_mut().chain(s.yps[..width].iter_mut()) {
-            if v.len() != padded {
+        let want = width * padded;
+        for v in [&mut s.xp, &mut s.yp] {
+            if v.len() != want {
                 v.clear();
-                v.resize(padded, S::ZERO);
+                v.resize(want, S::ZERO);
             }
         }
         s
@@ -93,13 +104,29 @@ impl<S: Scalar> ScratchPool<S> {
     }
 }
 
+/// Raw-pointer capsule for the parallel ER scatter; the unsafe Send/Sync
+/// is justified at the single use site (disjoint scatter targets).
+struct SendPtr<S>(*mut S);
+unsafe impl<S: Send> Send for SendPtr<S> {}
+unsafe impl<S: Send> Sync for SendPtr<S> {}
+
 impl<S: Scalar> EhybCpu<S> {
     pub fn new(plan: &crate::preprocess::EhybPlan<S>) -> Self {
         Self::from_matrix(plan.matrix.clone())
     }
 
     pub fn from_matrix(m: EhybMatrix<S>) -> Self {
-        Self { m, pool: ScratchPool::new() }
+        // O(er_rows) one-time check backing the parallel ER scatter's
+        // disjointness argument; see the field doc.
+        let mut seen = vec![false; m.padded_rows()];
+        let er_scatter_disjoint = match m.y_idx_er.get(..m.er_rows) {
+            Some(slots) => slots.iter().all(|&r| {
+                let r = r as usize;
+                r < seen.len() && !std::mem::replace(&mut seen[r], true)
+            }),
+            None => false, // malformed lengths: never fan the scatter out
+        };
+        Self { m, er_scatter_disjoint, pool: ScratchPool::new() }
     }
 
     pub fn matrix(&self) -> &EhybMatrix<S> {
@@ -127,10 +154,10 @@ impl<S: Scalar> EhybCpu<S> {
 
     /// Partition-parallel SpMV in the new index space. Each worker owns
     /// a contiguous run of partitions and therefore a disjoint row
-    /// range of `yp`; per-row arithmetic order is unchanged, so the
-    /// result is bit-identical to [`Self::spmv_new_order`] at any
-    /// thread count. The ER scatter (arbitrary `y_idx_er` targets)
-    /// runs as a serial tail.
+    /// range of `yp` for the ELL pass; the ER scatter parallelizes over
+    /// slice ranges (disjoint targets — see [`Self::er_pass_parallel`]).
+    /// Per-row arithmetic order is unchanged, so the result is
+    /// bit-identical to [`Self::spmv_new_order`] at any thread count.
     pub fn spmv_new_order_parallel(&self, xp: &[S], yp: &mut [S]) {
         let m = &self.m;
         debug_assert_eq!(xp.len(), m.padded_rows());
@@ -145,29 +172,27 @@ impl<S: Scalar> EhybCpu<S> {
                 self.ell_pass(xp, chunk, base / vec_size);
             });
         }
-        self.er_pass(xp, yp);
+        self.er_pass_parallel(xp, yp);
     }
 
     /// Blocked multi-vector SpMM in the new index space:
-    /// `yps[i] = A xps[i]` for all padded vectors at once. The batch is
-    /// processed in register blocks of up to 4 vectors; within a
-    /// block each partition's `ell_vals`/`ell_cols` stream is read
-    /// **once**, its cached x-slices for all block lanes stay hot, and
-    /// block×h outputs accumulate in stack registers. Per-row
-    /// accumulation order matches the single-vector kernel, so each
-    /// output is bit-identical to a [`Self::spmv_new_order`] call.
-    pub fn spmm_new_order(&self, xps: &[&[S]], yps: &mut [Vec<S>]) {
+    /// `yps[i] = A xps[i]` for all padded vectors at once (each `yps[i]`
+    /// must already be `padded_rows` long). The batch is processed in
+    /// register blocks of up to 4 vectors; within a block each
+    /// partition's `ell_vals`/`ell_cols` stream is read **once**, its
+    /// cached x-slices for all block lanes stay hot, and block×h
+    /// outputs accumulate in stack registers. Per-row accumulation
+    /// order matches the single-vector kernel, so each output is
+    /// bit-identical to a [`Self::spmv_new_order`] call.
+    pub fn spmm_new_order(&self, xps: &[&[S]], yps: &mut [&mut [S]]) {
         assert_eq!(xps.len(), yps.len(), "batch inputs/outputs disagree");
         let m = &self.m;
         let padded = m.padded_rows();
         for xp in xps {
             assert_eq!(xp.len(), padded, "xp not in padded new order");
         }
-        for yp in yps.iter_mut() {
-            if yp.len() != padded {
-                yp.clear();
-                yp.resize(padded, S::ZERO);
-            }
+        for yp in yps.iter() {
+            assert_eq!(yp.len(), padded, "yp not in padded new order");
         }
         // Fan out over partitions ONCE for the whole batch (each worker
         // walks every register block over its partition range), so the
@@ -178,15 +203,13 @@ impl<S: Scalar> EhybCpu<S> {
             par::num_threads().min(m.num_parts).max(1)
         };
         if threads <= 1 {
-            let mut chunks: Vec<&mut [S]> = yps.iter_mut().map(|y| &mut y[..]).collect();
-            self.spmm_ell_blocks(xps, &mut chunks, 0);
+            self.spmm_ell_blocks(xps, yps, 0);
         } else {
             let parts_per = m.num_parts.div_ceil(threads);
             let rows_per = parts_per * m.vec_size;
             // Transpose the split: work unit t = (first partition,
             // the t-th row-chunk of every output vector).
-            let mut its: Vec<_> =
-                yps.iter_mut().map(|y| y[..padded].chunks_mut(rows_per)).collect();
+            let mut its: Vec<_> = yps.iter_mut().map(|y| y.chunks_mut(rows_per)).collect();
             let nchunks = m.num_parts.div_ceil(parts_per);
             let work: Vec<(usize, Vec<&mut [S]>)> = (0..nchunks)
                 .map(|c| (c * parts_per, its.iter_mut().map(|it| it.next().unwrap()).collect()))
@@ -195,9 +218,17 @@ impl<S: Scalar> EhybCpu<S> {
                 self.spmm_ell_blocks(xps, &mut chunks, p0);
             });
         }
-        // ER tail: uncached gathers + scatter-add, serial per vector.
-        for (xp, yp) in xps.iter().zip(yps.iter_mut()) {
-            self.er_pass(xp, yp);
+        // ER tail: uncached gathers + scatter-add. Lanes are disjoint
+        // output vectors, so the batch case parallelizes across lanes
+        // without any aliasing.
+        if threads > 1 && xps.len() > 1 && self.m.er_nnz > 0 {
+            let work: Vec<(&[S], &mut [S])> =
+                xps.iter().zip(yps.iter_mut()).map(|(x, y)| (*x, &mut **y)).collect();
+            par::par_for_each(work, |_, (xp, yp)| self.er_pass(xp, yp));
+        } else {
+            for (xp, yp) in xps.iter().zip(yps.iter_mut()) {
+                self.er_pass(xp, yp);
+            }
         }
     }
 
@@ -315,13 +346,23 @@ impl<S: Scalar> EhybCpu<S> {
         }
     }
 
-    /// ER pass: uncached gathers over the full xp, scatter-add into yp.
-    fn er_pass(&self, xp: &[S], yp: &mut [S]) {
+    /// ER pass over the slice range `[s0, s1)`: uncached gathers over
+    /// the full xp, scatter-add through the raw `yp` pointer. Extracted
+    /// so the serial tail and the parallel scatter share one kernel
+    /// body (a raw pointer rather than `&mut [S]` so concurrent workers
+    /// never hold aliasing mutable slices).
+    ///
+    /// # Safety
+    /// `yp` must point to at least `yp_len` initialized elements, every
+    /// `y_idx_er` target must be `< yp_len` (checked by
+    /// `EhybMatrix::validate`), and no other thread may concurrently
+    /// access the `yp` elements this range scatters into.
+    unsafe fn er_pass_range(&self, xp: &[S], yp: *mut S, yp_len: usize, s0: usize, s1: usize) {
         let m = &self.m;
         let h = m.slice_height;
         debug_assert!(h <= MAX_H);
         let mut acc = [S::ZERO; MAX_H];
-        for s in 0..m.er_slice_width.len() {
+        for s in s0..s1 {
             let base = m.er_slice_ptr[s] as usize;
             let w = m.er_slice_width[s] as usize;
             let jmax = (m.er_rows - s * h).min(h);
@@ -340,9 +381,54 @@ impl<S: Scalar> EhybCpu<S> {
             }
             for lane in 0..jmax {
                 let out = m.y_idx_er[s * h + lane] as usize;
-                yp[out] += acc[lane];
+                // Always-on: a malformed target must panic (as the old
+                // safe indexing did), never write out of bounds. One
+                // predictable branch per ER row — noise next to the
+                // k-loop above.
+                assert!(out < yp_len, "yIdxER target {out} out of bounds {yp_len}");
+                unsafe { *yp.add(out) += acc[lane] };
             }
         }
+    }
+
+    /// Serial ER tail over every slice.
+    fn er_pass(&self, xp: &[S], yp: &mut [S]) {
+        // SAFETY: exclusive &mut access to all of yp; validate() bounds
+        // every y_idx_er target below padded_rows == yp.len().
+        unsafe { self.er_pass_range(xp, yp.as_mut_ptr(), yp.len(), 0, self.m.er_slice_width.len()) }
+    }
+
+    /// Parallel ER scatter: ER slice ranges split across worker
+    /// threads. Each logical ER slot `j = s*h + lane` targets output
+    /// row `y_idx_er[j]`, and `y_idx_er` is **injective** over logical
+    /// slots (one slot per distinct ER row — guaranteed by the
+    /// assembler, asserted by `EhybMatrix::validate`, and re-checked at
+    /// engine construction into `er_scatter_disjoint`, which gates this
+    /// fan-out), so different slice ranges scatter into
+    /// pairwise-disjoint `yp` entries. Each row still gets exactly one
+    /// k-ordered accumulate plus one add, so the result is bit-identical
+    /// to the serial [`Self::er_pass`].
+    fn er_pass_parallel(&self, xp: &[S], yp: &mut [S]) {
+        let nslices = self.m.er_slice_width.len();
+        let threads = par::num_threads().min(nslices).max(1);
+        if threads <= 1 || !self.er_scatter_disjoint {
+            return self.er_pass(xp, yp);
+        }
+        let len = yp.len();
+        let base = SendPtr(yp.as_mut_ptr());
+        let chunk = nslices.div_ceil(threads);
+        let ranges: Vec<(usize, usize)> = (0..threads)
+            .map(|t| (t * chunk, ((t + 1) * chunk).min(nslices)))
+            .filter(|r| r.0 < r.1)
+            .collect();
+        par::par_for_each(ranges, |_, (s0, s1)| {
+            // SAFETY: we hold the only &mut to yp for the duration of
+            // the scoped fan-out; each worker writes only its range's
+            // y_idx_er targets, disjoint from every other worker's by
+            // injectivity, through the raw pointer (no aliasing &mut
+            // slices are formed). xp and the matrix are only read.
+            unsafe { self.er_pass_range(xp, base.0, len, s0, s1) };
+        });
     }
 
     /// The GPU-order walk (lane-outer, stride-h array access) — kept as
@@ -431,44 +517,37 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
         assert_eq!(x.len(), m.n);
         assert_eq!(y.len(), m.n);
         let mut scr = self.pool.take(1, m.padded_rows());
-        {
-            let Scratch { xps, yps } = &mut scr;
-            self.permute_in(x, &mut xps[0]);
-            if self.want_parallel() {
-                self.spmv_new_order_parallel(&xps[0], &mut yps[0]);
-            } else {
-                self.spmv_new_order(&xps[0], &mut yps[0]);
-            }
+        self.permute_in(x, &mut scr.xp);
+        if self.want_parallel() {
+            self.spmv_new_order_parallel(&scr.xp, &mut scr.yp);
+        } else {
+            self.spmv_new_order(&scr.xp, &mut scr.yp);
         }
-        self.permute_out(&scr.yps[0], y);
+        self.permute_out(&scr.yp, y);
         self.pool.put(scr);
     }
 
-    fn spmv_batch(&self, xs: &[&[S]], ys: &mut [Vec<S>]) {
-        assert_eq!(xs.len(), ys.len(), "batch inputs/outputs disagree");
-        if xs.is_empty() {
+    fn spmv_batch(&self, xs: VecBatch<'_, S>, ys: &mut VecBatchMut<'_, S>) {
+        assert_eq!(xs.width(), ys.width(), "batch inputs/outputs disagree");
+        let bw = xs.width();
+        if bw == 0 {
             return;
         }
         let m = &self.m;
-        let bw = xs.len();
-        let mut scr = self.pool.take(bw, m.padded_rows());
-        {
-            let Scratch { xps, yps } = &mut scr;
-            for (b, x) in xs.iter().enumerate() {
-                assert_eq!(x.len(), m.n);
-                self.permute_in(x, &mut xps[b]);
-            }
-            let xrefs: Vec<&[S]> = xps[..bw].iter().map(|v| v.as_slice()).collect();
-            self.spmm_new_order(&xrefs, &mut yps[..bw]);
+        assert_eq!(xs.n(), m.n);
+        assert_eq!(ys.n(), m.n);
+        let padded = m.padded_rows();
+        let mut scr = self.pool.take(bw, padded);
+        for (b, chunk) in scr.xp.chunks_mut(padded).enumerate() {
+            self.permute_in(xs.col(b), chunk);
         }
-        for (b, y) in ys.iter_mut().enumerate() {
-            // Size without zero-filling recycled buffers: permute_out
-            // writes every row (iperm is a bijection over [0, n)).
-            if y.len() != m.n {
-                y.clear();
-                y.resize(m.n, S::ZERO);
-            }
-            self.permute_out(&scr.yps[b], y);
+        {
+            let xcols: Vec<&[S]> = scr.xp.chunks(padded).collect();
+            let mut ycols: Vec<&mut [S]> = scr.yp.chunks_mut(padded).collect();
+            self.spmm_new_order(&xcols, &mut ycols);
+        }
+        for (b, chunk) in scr.yp.chunks(padded).enumerate() {
+            self.permute_out(chunk, ys.col_mut(b));
         }
         self.pool.put(scr);
     }
@@ -487,6 +566,7 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::batch::BatchBuf;
     use crate::preprocess::{EhybPlan, PreprocessConfig};
     use crate::spmv::testutil::validate_engine;
     use crate::sparse::gen::{circuit, poisson2d, poisson3d, unstructured_mesh};
@@ -572,10 +652,8 @@ mod tests {
         }
     }
 
-    fn parallel_matches_serial_for<SC: Scalar>(vec_size: usize) {
-        // Big enough for several partitions so the fan-out is real.
-        let m = crate::sparse::gen::poisson2d::<SC>(48, 48);
-        let plan = EhybPlan::build(&m, &cfg(vec_size)).unwrap();
+    fn parallel_matches_serial_on<SC: Scalar>(m: &crate::sparse::csr::Csr<SC>, vec_size: usize) {
+        let plan = EhybPlan::build(m, &cfg(vec_size)).unwrap();
         let engine = EhybCpu::new(&plan);
         let xp = plan.matrix.permute_x(
             &(0..m.nrows())
@@ -586,17 +664,63 @@ mod tests {
         let mut y_par = vec![SC::ZERO; plan.matrix.padded_rows()];
         engine.spmv_new_order(&xp, &mut y_ser);
         engine.spmv_new_order_parallel(&xp, &mut y_par);
-        assert_eq!(y_ser, y_par, "parallel ELL walk diverged ({})", SC::NAME);
+        assert_eq!(
+            y_ser,
+            y_par,
+            "parallel walk diverged ({}, er_nnz={})",
+            SC::NAME,
+            plan.matrix.er_nnz
+        );
     }
 
     #[test]
     fn parallel_bit_identical_to_serial_f64() {
-        parallel_matches_serial_for::<f64>(64);
+        // Big enough for several partitions so the fan-out is real.
+        parallel_matches_serial_on(&poisson2d::<f64>(48, 48), 64);
     }
 
     #[test]
     fn parallel_bit_identical_to_serial_f32() {
-        parallel_matches_serial_for::<f32>(96);
+        parallel_matches_serial_on(&poisson2d::<f32>(48, 48), 96);
+    }
+
+    #[test]
+    fn parallel_bit_identical_on_er_heavy_matrix() {
+        // A hub-heavy circuit graph at tiny vec_size scatters a large
+        // fraction of nnz into the ER part — this exercises the parallel
+        // ER scatter across many slices, not just the ELL fan-out.
+        let m = circuit::<f64>(2_000, 5, 0.05, 23);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        assert!(
+            plan.matrix.er_fraction() > 0.2,
+            "matrix not ER-heavy enough: {}",
+            plan.matrix.er_fraction()
+        );
+        assert!(plan.matrix.er_slice_width.len() >= 4, "need several ER slices");
+        parallel_matches_serial_on(&m, 64);
+    }
+
+    #[test]
+    fn non_injective_er_targets_fall_back_to_serial() {
+        // EhybMatrix has public fields, so a hand-assembled matrix can
+        // carry duplicate y_idx_er targets without ever being
+        // validated. The engine must detect that at construction and
+        // keep the ER tail serial (same result as the serial kernel on
+        // the same data) instead of fanning out a racy scatter.
+        let m = circuit::<f64>(600, 4, 0.05, 3);
+        let plan = EhybPlan::build(&m, &cfg(32)).unwrap();
+        let mut bad = plan.matrix.clone();
+        assert!(bad.er_rows >= 2, "need at least two ER rows");
+        bad.y_idx_er[1] = bad.y_idx_er[0]; // duplicate scatter target
+        let engine = EhybCpu::from_matrix(bad.clone());
+        assert!(!engine.er_scatter_disjoint, "duplicate target not detected");
+        let xp: Vec<f64> =
+            (0..bad.padded_rows()).map(|i| ((i * 11 + 3) % 13) as f64 * 0.5 - 3.0).collect();
+        let mut y_ser = vec![0.0; bad.padded_rows()];
+        let mut y_par = vec![0.0; bad.padded_rows()];
+        engine.spmv_new_order(&xp, &mut y_ser);
+        engine.spmv_new_order_parallel(&xp, &mut y_par);
+        assert_eq!(y_ser, y_par);
     }
 
     #[test]
@@ -616,9 +740,12 @@ mod tests {
             })
             .collect();
         let xrefs: Vec<&[f64]> = xps.iter().map(|v| v.as_slice()).collect();
-        let mut yps: Vec<Vec<f64>> = vec![Vec::new(); xrefs.len()];
-        engine.spmm_new_order(&xrefs, &mut yps);
-        for (xp, yb) in xrefs.iter().zip(&yps) {
+        let mut ydata = vec![vec![0.0f64; padded]; xrefs.len()];
+        {
+            let mut yrefs: Vec<&mut [f64]> = ydata.iter_mut().map(|v| v.as_mut_slice()).collect();
+            engine.spmm_new_order(&xrefs, &mut yrefs);
+        }
+        for (xp, yb) in xrefs.iter().zip(&ydata) {
             let mut y1 = vec![0.0; padded];
             engine.spmv_new_order(xp, &mut y1);
             assert_eq!(&y1, yb);
@@ -631,15 +758,21 @@ mod tests {
         let plan = EhybPlan::build(&m, &cfg(128)).unwrap();
         let engine = EhybCpu::new(&plan);
         let n = m.nrows();
-        let xs: Vec<Vec<f64>> =
-            (0..5).map(|t| (0..n).map(|i| ((i + t * 41) as f64 * 0.01).sin()).collect()).collect();
-        let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
-        let mut ys: Vec<Vec<f64>> = vec![Vec::new(); xs.len()];
-        engine.spmv_batch(&xrefs, &mut ys);
-        for (x, yb) in xs.iter().zip(&ys) {
+        let mut xs = BatchBuf::<f64>::zeros(n, 5);
+        for t in 0..5 {
+            for i in 0..n {
+                xs.col_mut(t)[i] = ((i + t * 41) as f64 * 0.01).sin();
+            }
+        }
+        let mut ys = BatchBuf::<f64>::zeros(n, 5);
+        {
+            let mut ysv = ys.view_mut();
+            engine.spmv_batch(xs.view(), &mut ysv);
+        }
+        for t in 0..5 {
             let mut y1 = vec![0.0; n];
-            engine.spmv(x, &mut y1);
-            assert_eq!(&y1, yb);
+            engine.spmv(xs.col(t), &mut y1);
+            assert_eq!(&y1[..], ys.col(t));
         }
     }
 

@@ -29,6 +29,9 @@ impl<S: Scalar> SpmvEngine<S> for EllEngine<S> {
     fn nrows(&self) -> usize {
         self.e.nrows()
     }
+    fn ncols(&self) -> usize {
+        self.e.ncols()
+    }
     fn nnz(&self) -> usize {
         self.nnz
     }

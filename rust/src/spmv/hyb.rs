@@ -26,6 +26,9 @@ impl<S: Scalar> SpmvEngine<S> for HybEngine<S> {
     fn nrows(&self) -> usize {
         self.nrows
     }
+    fn ncols(&self) -> usize {
+        self.h.ell.ncols()
+    }
     fn nnz(&self) -> usize {
         self.h.nnz()
     }

@@ -10,6 +10,10 @@
 //! 2. executable semantics for the GPU-simulated kernels in
 //!    [`crate::gpu::kernels`] (same traversal order, so the simulator's
 //!    traffic counts describe exactly this arithmetic).
+//!
+//! Callers normally reach engines through the
+//! [`SpmvContext`](crate::api::SpmvContext) facade, which adds
+//! dimension checking with typed errors on top of the raw trait.
 
 pub mod csr_scalar;
 pub mod csr_vector;
@@ -22,6 +26,7 @@ pub mod ehyb_cpu;
 pub mod registry;
 
 use crate::sparse::scalar::Scalar;
+pub use crate::api::batch::{VecBatch, VecBatchMut};
 
 /// A prepared SpMV engine: `y = A x` for the matrix it was built from.
 pub trait SpmvEngine<S: Scalar>: Send + Sync {
@@ -29,28 +34,61 @@ pub trait SpmvEngine<S: Scalar>: Send + Sync {
     fn name(&self) -> &'static str;
     /// Execute one SpMV.
     fn spmv(&self, x: &[S], y: &mut [S]);
-    /// Execute SpMV for a batch of input vectors sharing this matrix:
-    /// `ys[i] = A xs[i]`, with each `ys[i]` resized to [`Self::nrows`].
+    /// Execute SpMV for a batch of vectors sharing this matrix:
+    /// `ys.col(b) = A xs.col(b)` for every column of the borrowed
+    /// contiguous views (one allocation per side, not N).
     ///
     /// SpMV is memory-bound, so engines with a real SpMM path override
     /// this to stream the matrix **once** per batch (arithmetic
     /// intensity × batch width). The default keeps every baseline
     /// correct by looping [`Self::spmv`]; overrides must stay
     /// element-wise identical to that loop.
-    fn spmv_batch(&self, xs: &[&[S]], ys: &mut [Vec<S>]) {
+    fn spmv_batch(&self, xs: VecBatch<'_, S>, ys: &mut VecBatchMut<'_, S>) {
+        assert_eq!(xs.width(), ys.width(), "batch inputs/outputs disagree");
+        for b in 0..xs.width() {
+            self.spmv(xs.col(b), ys.col_mut(b));
+        }
+    }
+    /// Deprecated shim with the seed's scattered-allocation batch shape
+    /// (`&[&[S]]` in, `&mut [Vec<S>]` out, each `ys[i]` resized to
+    /// [`Self::nrows`]). Packs into contiguous storage and runs
+    /// [`Self::spmv_batch`], so results are bit-identical to the view
+    /// path.
+    #[deprecated(since = "0.2.0", note = "use spmv_batch with VecBatch/VecBatchMut views")]
+    fn spmv_batch_vecs(&self, xs: &[&[S]], ys: &mut [Vec<S>]) {
         assert_eq!(xs.len(), ys.len(), "batch inputs/outputs disagree");
-        for (x, y) in xs.iter().zip(ys.iter_mut()) {
-            // Size without zero-filling recycled buffers: `spmv`
+        if xs.is_empty() {
+            return;
+        }
+        let n = xs[0].len();
+        let mut xbuf = Vec::with_capacity(n * xs.len());
+        for x in xs {
+            assert_eq!(x.len(), n, "batch inputs have unequal lengths");
+            xbuf.extend_from_slice(x);
+        }
+        let nrows = self.nrows();
+        let mut ybuf = vec![S::ZERO; nrows * xs.len()];
+        {
+            let xv = VecBatch::new(&xbuf, n).expect("contiguous batch");
+            let mut yv = VecBatchMut::new(&mut ybuf, nrows).expect("contiguous batch");
+            self.spmv_batch(xv, &mut yv);
+        }
+        for (b, y) in ys.iter_mut().enumerate() {
+            // Size without zero-filling recycled buffers: the batch path
             // overwrites every row.
-            if y.len() != self.nrows() {
+            if y.len() != nrows {
                 y.clear();
-                y.resize(self.nrows(), S::ZERO);
+                y.resize(nrows, S::ZERO);
             }
-            self.spmv(x, y);
+            y.copy_from_slice(&ybuf[b * nrows..(b + 1) * nrows]);
         }
     }
     /// Rows of the underlying matrix.
     fn nrows(&self) -> usize;
+    /// Columns of the underlying matrix (defaults to square).
+    fn ncols(&self) -> usize {
+        self.nrows()
+    }
     /// Logical nonzeros (for GFLOPS accounting: 2·nnz flops per SpMV).
     fn nnz(&self) -> usize;
     /// Device-memory bytes the format occupies (traffic-model input).
@@ -69,10 +107,15 @@ pub fn gflops(nnz: usize, secs: f64) -> f64 {
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
+    use crate::api::batch::BatchBuf;
     use crate::sparse::csr::Csr;
     use crate::util::check::assert_allclose;
 
-    /// Validate `engine` against the f64 oracle on a deterministic x.
+    /// Validate `engine` against the f64 oracle on a deterministic x,
+    /// then check that both batch entry points — the borrowed-view
+    /// [`SpmvEngine::spmv_batch`] and the deprecated
+    /// [`SpmvEngine::spmv_batch_vecs`] shim — are bit-identical to
+    /// repeated single-vector calls.
     pub fn validate_engine<S: Scalar>(engine: &dyn SpmvEngine<S>, csr: &Csr<S>) {
         let n = csr.ncols();
         let x: Vec<S> =
@@ -85,9 +128,10 @@ pub(crate) mod testutil {
         assert_allclose(&y64, &oracle, rtol, atol)
             .unwrap_or_else(|e| panic!("{} mismatch: {e}", engine.name()));
         assert_eq!(engine.nrows(), csr.nrows());
+        assert_eq!(engine.ncols(), csr.ncols(), "{} ncols", engine.name());
         assert_eq!(engine.nnz(), csr.nnz(), "{} nnz", engine.name());
         assert!(engine.format_bytes() > 0);
-        // The batched entry must agree with the single-vector path
+        // Batched entries must agree with the single-vector path
         // bit-for-bit: blocked kernels keep per-row accumulation order.
         let xs: Vec<Vec<S>> = (0..3)
             .map(|t| {
@@ -97,12 +141,34 @@ pub(crate) mod testutil {
             })
             .collect();
         let xrefs: Vec<&[S]> = xs.iter().map(|v| v.as_slice()).collect();
-        let mut ys: Vec<Vec<S>> = vec![Vec::new(); xs.len()];
-        engine.spmv_batch(&xrefs, &mut ys);
-        for (xb, yb) in xs.iter().zip(&ys) {
+        // 1. Borrowed contiguous views.
+        let xbatch = BatchBuf::from_cols(&xrefs).expect("equal-length columns");
+        let mut ybatch = BatchBuf::<S>::zeros(engine.nrows(), xs.len());
+        {
+            let mut yv = ybatch.view_mut();
+            engine.spmv_batch(xbatch.view(), &mut yv);
+        }
+        for (b, xb) in xs.iter().enumerate() {
             let mut y1 = vec![S::ZERO; engine.nrows()];
             engine.spmv(xb, &mut y1);
-            assert_eq!(&y1, yb, "{}: spmv_batch != repeated spmv", engine.name());
+            assert_eq!(
+                ybatch.col(b),
+                &y1[..],
+                "{}: spmv_batch (view) != repeated spmv",
+                engine.name()
+            );
+        }
+        // 2. Deprecated shim with the seed call shape.
+        let mut ys: Vec<Vec<S>> = vec![Vec::new(); xs.len()];
+        #[allow(deprecated)]
+        engine.spmv_batch_vecs(&xrefs, &mut ys);
+        for (b, yb) in ys.iter().enumerate() {
+            assert_eq!(
+                &yb[..],
+                ybatch.col(b),
+                "{}: deprecated shim != view batch path",
+                engine.name()
+            );
         }
     }
 }

@@ -29,6 +29,9 @@ impl<S: Scalar> SpmvEngine<S> for SellPEngine<S> {
     fn nrows(&self) -> usize {
         self.s.nrows()
     }
+    fn ncols(&self) -> usize {
+        self.s.ncols()
+    }
     fn nnz(&self) -> usize {
         self.nnz
     }

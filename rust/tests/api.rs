@@ -1,0 +1,121 @@
+//! Facade-level acceptance tests for the `SpmvContext` redesign:
+//! every engine kind through the context API, bit-identity of both
+//! batch entry points (borrowed `VecBatch` views and the deprecated
+//! seed-shaped shim), typed error paths, and the service/solver wiring.
+
+use ehyb::coordinator::Jacobi;
+use ehyb::coordinator::SolverConfig;
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::gen::{poisson2d, unstructured_mesh};
+use ehyb::spmv::SpmvEngine;
+use ehyb::util::check::assert_allclose;
+use ehyb::{BatchBuf, EhybError, EngineKind, SpmvContext};
+
+fn cfg64() -> PreprocessConfig {
+    PreprocessConfig { vec_size_override: Some(64), ..Default::default() }
+}
+
+#[test]
+fn all_engine_kinds_build_and_validate_through_context() {
+    let m = unstructured_mesh::<f64>(20, 20, 0.5, 7);
+    let n = m.nrows();
+    let x: Vec<f64> = (0..n).map(|i| ((i * 13 + 5) % 23) as f64 * 0.125 - 1.0).collect();
+    let oracle = m.spmv_f64_oracle(&x);
+    for kind in EngineKind::ALL {
+        let ctx = SpmvContext::builder(m.clone()).engine(kind).config(cfg64()).build().unwrap();
+        let y = ctx.spmv_alloc(&x).unwrap();
+        assert_allclose(&y, &oracle, 1e-9, 1e-9).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        assert_eq!(ctx.engine().nrows(), n);
+        assert_eq!(ctx.engine().ncols(), n);
+    }
+}
+
+#[test]
+fn both_batch_paths_bit_identical_on_every_engine() {
+    let m = poisson2d::<f64>(18, 14);
+    let n = m.nrows();
+    let xs: Vec<Vec<f64>> = (0..5)
+        .map(|t| (0..n).map(|i| ((i * 7 + t * 11 + 3) % 19) as f64 * 0.25 - 2.0).collect())
+        .collect();
+    let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+    for kind in EngineKind::ALL {
+        let ctx = SpmvContext::builder(m.clone()).engine(kind).config(cfg64()).build().unwrap();
+        let engine = ctx.engine();
+        // Borrowed-view path through the context.
+        let xbatch = BatchBuf::from_cols(&xrefs).unwrap();
+        let mut ybatch = BatchBuf::<f64>::zeros(n, xs.len());
+        {
+            let mut yv = ybatch.view_mut();
+            ctx.spmv_batch(xbatch.view(), &mut yv).unwrap();
+        }
+        // Deprecated shim with the seed's exact call shape:
+        //   let xrefs: Vec<&[f64]> = ...; let mut ys: Vec<Vec<f64>> = ...;
+        //   engine.spmv_batch_vecs(&xrefs, &mut ys);
+        let mut ys: Vec<Vec<f64>> = vec![Vec::new(); xrefs.len()];
+        #[allow(deprecated)]
+        engine.spmv_batch_vecs(&xrefs, &mut ys);
+        for (b, x) in xs.iter().enumerate() {
+            let mut y1 = vec![0.0; n];
+            engine.spmv(x, &mut y1);
+            assert_eq!(ybatch.col(b), &y1[..], "{kind:?}: view path lane {b}");
+            assert_eq!(&ys[b][..], &y1[..], "{kind:?}: shim lane {b}");
+        }
+    }
+}
+
+#[test]
+fn shim_recycles_preallocated_buffers() {
+    // Seed call sites that pass recycled ys buffers keep working.
+    let m = poisson2d::<f64>(8, 8);
+    let ctx = SpmvContext::builder(m).engine(EngineKind::CsrScalar).build().unwrap();
+    let xs: Vec<Vec<f64>> = vec![vec![1.0; 64], vec![2.0; 64]];
+    let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+    let mut ys: Vec<Vec<f64>> = vec![vec![9.0; 64], vec![9.0; 3]]; // wrong sizes on purpose
+    #[allow(deprecated)]
+    ctx.engine().spmv_batch_vecs(&xrefs, &mut ys);
+    assert!(ys.iter().all(|y| y.len() == 64));
+    for i in 0..64 {
+        assert!((ys[1][i] - 2.0 * ys[0][i]).abs() < 1e-12); // linearity
+    }
+}
+
+#[test]
+fn service_stopped_is_typed() {
+    let ctx = SpmvContext::builder(poisson2d::<f64>(8, 8)).config(cfg64()).build().unwrap();
+    let svc = ctx.serve(4).unwrap();
+    let client = svc.client();
+    assert_eq!(client.nrows(), 64);
+    let y = client.spmv(vec![1.0; 64]).unwrap();
+    assert_eq!(y.len(), 64);
+    drop(svc);
+    assert!(matches!(client.spmv(vec![1.0; 64]), Err(EhybError::ServiceStopped)));
+}
+
+#[test]
+fn solver_and_service_agree_with_direct_engine() {
+    let a = poisson2d::<f64>(16, 16);
+    let n = a.nrows();
+    let ctx = SpmvContext::builder(a.clone()).config(cfg64()).build().unwrap();
+    let b: Vec<f64> = (0..n).map(|i| ((i % 11) as f64) / 11.0 - 0.5).collect();
+    let pre = Jacobi::new(&a);
+    let (x, rep) = ctx.solver().cg(&b, None, &pre, &SolverConfig::default()).unwrap();
+    assert!(rep.converged);
+    let mut ax = vec![0.0; n];
+    a.spmv(&x, &mut ax);
+    assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
+    // bicgstab path too (works on SPD systems as well).
+    let (x2, rep2) = ctx.solver().bicgstab(&b, None, &pre, &SolverConfig::default()).unwrap();
+    assert!(rep2.converged);
+    let mut ax2 = vec![0.0; n];
+    a.spmv(&x2, &mut ax2);
+    assert_allclose(&ax2, &b, 1e-6, 1e-6).unwrap();
+}
+
+#[test]
+fn auto_is_deterministic_and_concrete() {
+    let m = poisson2d::<f64>(24, 24);
+    let k1 = SpmvContext::builder(m.clone()).engine(EngineKind::Auto).build().unwrap().kind();
+    let k2 = SpmvContext::builder(m).engine(EngineKind::Auto).build().unwrap().kind();
+    assert_eq!(k1, k2);
+    assert_ne!(k1, EngineKind::Auto);
+}

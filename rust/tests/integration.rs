@@ -2,7 +2,6 @@
 //! partitioner → preprocessing → engines → solver → harness) on real
 //! workloads, no PJRT required (that path is covered in runtime_pjrt.rs).
 
-use ehyb::coordinator::service::SpmvService;
 use ehyb::coordinator::{bicgstab, cg, Jacobi, Spai0, SolverConfig};
 use ehyb::gpu::GpuDevice;
 use ehyb::harness::{runner, suite};
@@ -13,6 +12,7 @@ use ehyb::sparse::mmio;
 use ehyb::spmv::registry;
 use ehyb::spmv::SpmvEngine;
 use ehyb::util::check::assert_allclose;
+use ehyb::{EngineKind, SpmvContext};
 
 fn x_for(n: usize) -> Vec<f64> {
     (0..n).map(|i| ((i * 29 + 13) % 31) as f64 * 0.125 - 1.5).collect()
@@ -106,26 +106,17 @@ fn bicgstab_spai_on_nonsymmetric_through_ehyb() {
 fn service_solver_roundtrip() {
     let a = gen::poisson2d::<f64>(20, 20);
     let n = a.nrows();
-    let a2 = a.clone();
-    let svc = SpmvService::spawn(
-        move || {
-            let plan = EhybPlan::build(
-                &a2,
-                &PreprocessConfig { vec_size_override: Some(64), ..Default::default() },
-            )?;
-            let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
-            let fb = engine.format_bytes();
-            Ok((move |xs: &[&[f64]], ys: &mut [Vec<f64>]| engine.spmv_batch(xs, ys), fb))
-        },
-        n,
-        8,
-    )
-    .unwrap();
+    let ctx = SpmvContext::builder(a.clone())
+        .engine(EngineKind::Ehyb)
+        .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+        .build()
+        .unwrap();
+    let svc = ctx.serve(8).unwrap();
     let client = svc.client();
     let b = x_for(n);
     let pre = Jacobi::new(&a);
     let (x, rep) = cg(
-        |v, y: &mut [f64]| y.copy_from_slice(&client.spmv(v).unwrap()),
+        |v, y: &mut [f64]| y.copy_from_slice(&client.spmv(v.to_vec()).unwrap()),
         &b,
         &vec![0.0; n],
         &pre,
@@ -137,6 +128,43 @@ fn service_solver_roundtrip() {
     // rtol-1e-8 solve: entries of b that are exactly 0 need a real atol.
     assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
     assert!(svc.metrics.spmv_latency.count() > 0);
+}
+
+#[test]
+fn context_facade_full_pipeline() {
+    // The facade end to end: build once, spmv / batch / service /
+    // solver off one prepared handle.
+    let a = gen::poisson3d::<f64>(8, 8, 8);
+    let n = a.nrows();
+    let ctx = SpmvContext::builder(a.clone())
+        .engine(EngineKind::Ehyb)
+        .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+        .build()
+        .unwrap();
+    let x = x_for(n);
+    let y = ctx.spmv_alloc(&x).unwrap();
+    assert_allclose(&y, &a.spmv_f64_oracle(&x), 1e-10, 1e-10).unwrap();
+
+    // Multi-RHS through the solver handle: each system must match a
+    // standalone CG solve through the same engine bit-for-bit.
+    let pre = Jacobi::new(&a);
+    let cfg = SolverConfig::default();
+    let bs: Vec<Vec<f64>> = (0..3)
+        .map(|t| (0..n).map(|i| ((i * 5 + t * 13 + 1) % 17) as f64 / 17.0 - 0.5).collect())
+        .collect();
+    let many = ctx.solver().cg_many(&bs, &pre, &cfg).unwrap();
+    assert_eq!(many.len(), 3);
+    for (i, (xm, rep)) in many.iter().enumerate() {
+        assert!(rep.converged, "system {i}: {rep:?}");
+        let (x1, rep1) = ctx.solver().cg(&bs[i], None, &pre, &cfg).unwrap();
+        assert_eq!(rep.iters, rep1.iters, "system {i}");
+        assert_eq!(xm, &x1, "system {i}");
+    }
+
+    // Service round-trip off the same context.
+    let svc = ctx.serve(4).unwrap();
+    let got = svc.client().spmv(x.clone()).unwrap();
+    assert_eq!(got, y);
 }
 
 #[test]

@@ -12,6 +12,7 @@ use ehyb::spmv::registry;
 use ehyb::spmv::SpmvEngine;
 use ehyb::util::check::{assert_allclose, check_prop, default_cases};
 use ehyb::util::Xoshiro256;
+use ehyb::{BatchBuf, EhybError, EngineKind, SpmvContext};
 
 /// Random square matrix: mixes local band structure with global
 /// scatter, random degree distribution, possible empty rows.
@@ -64,10 +65,11 @@ fn prop_all_engines_match_oracle() {
 
 #[test]
 fn prop_spmv_batch_matches_repeated_spmv_all_engines() {
-    // The batched entry must be element-wise identical to looping the
-    // single-vector kernel, for every engine in the registry (the
-    // default impl trivially; the EHYB blocked SpMM by keeping per-row
-    // accumulation order).
+    // Both batched entries — the borrowed-view spmv_batch and the
+    // deprecated spmv_batch_vecs shim — must be element-wise identical
+    // to looping the single-vector kernel, for every engine in the
+    // registry (the default impl trivially; the EHYB blocked SpMM by
+    // keeping per-row accumulation order).
     check_prop("spmv-batch-equals-repeated", 0xBA7C4, default_cases(), |rng| {
         let m = random_matrix(rng);
         let vec_size = 32 * (1 + rng.next_below(4));
@@ -77,16 +79,127 @@ fn prop_spmv_batch_matches_repeated_spmv_all_engines() {
         let bw = 1 + rng.next_below(6);
         let xs: Vec<Vec<f64>> = (0..bw).map(|_| random_x(rng, m.ncols())).collect();
         let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let xbatch = BatchBuf::from_cols(&xrefs).map_err(|e| e.to_string())?;
         for e in &engines {
-            let mut ys: Vec<Vec<f64>> = vec![Vec::new(); bw];
-            e.spmv_batch(&xrefs, &mut ys);
+            let mut ybatch = BatchBuf::<f64>::zeros(m.nrows(), bw);
+            {
+                let mut yv = ybatch.view_mut();
+                e.spmv_batch(xbatch.view(), &mut yv);
+            }
             for (b, x) in xs.iter().enumerate() {
                 let mut y1 = vec![0.0; m.nrows()];
                 e.spmv(x, &mut y1);
-                if y1 != ys[b] {
+                if y1[..] != *ybatch.col(b) {
                     return Err(format!("{}: batch lane {b} != single spmv (B={bw})", e.name()));
                 }
             }
+            // Deprecated shim: seed-shaped call sites must still work
+            // and stay bit-identical to the view path.
+            let mut ys: Vec<Vec<f64>> = vec![Vec::new(); bw];
+            #[allow(deprecated)]
+            e.spmv_batch_vecs(&xrefs, &mut ys);
+            for (b, yb) in ys.iter().enumerate() {
+                if yb[..] != *ybatch.col(b) {
+                    return Err(format!("{}: shim lane {b} != view path (B={bw})", e.name()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Random square matrix whose columns are mostly *global* scatter, so a
+/// small vec_size pushes a large fraction of nnz into the ER part —
+/// the stress shape for the parallel ER scatter.
+fn random_er_heavy_matrix(rng: &mut Xoshiro256) -> Csr<f64> {
+    let n = 128 + rng.next_below(400);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, rng.range_f64(1.0, 4.0));
+        let deg = 1 + rng.next_below(9);
+        for _ in 0..deg {
+            // 90% global columns: almost everything leaves its partition.
+            let j = if rng.next_f64() < 0.9 {
+                rng.next_below(n)
+            } else {
+                (i + rng.next_below(8)).min(n - 1)
+            };
+            coo.push(i, j, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn prop_parallel_ehyb_bit_identical_er_heavy() {
+    // ROADMAP follow-up: the ER tail is now partition-parallel too.
+    // On matrices where most nnz land in ER, the threaded scatter must
+    // stay bit-identical to the serial kernel.
+    check_prop("parallel-ehyb-bitwise-er-heavy", 0x9A11E3, default_cases(), |rng| {
+        let m = random_er_heavy_matrix(rng);
+        let cfg = PreprocessConfig { vec_size_override: Some(32), ..Default::default() };
+        let plan = EhybPlan::build(&m, &cfg).map_err(|e| e.to_string())?;
+        if plan.matrix.er_fraction() < 0.3 {
+            return Err(format!("generator not ER-heavy: {}", plan.matrix.er_fraction()));
+        }
+        let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+        let xp = plan.matrix.permute_x(&random_x(rng, m.nrows()));
+        let padded = plan.matrix.padded_rows();
+        let mut y_ser = vec![0.0; padded];
+        let mut y_par = vec![0.0; padded];
+        engine.spmv_new_order(&xp, &mut y_ser);
+        engine.spmv_new_order_parallel(&xp, &mut y_par);
+        if y_ser != y_par {
+            return Err(format!(
+                "parallel ER scatter not bit-identical (er_nnz={}, er_slices={})",
+                plan.matrix.er_nnz,
+                plan.matrix.er_slice_width.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dimension_mismatch_typed_on_every_engine() {
+    // Wrong-length x/y through the context API must return
+    // EhybError::DimensionMismatch — never panic — on all 8 engines.
+    check_prop("typed-dimension-mismatch", 0xD1360, 16, |rng| {
+        let m = random_matrix(rng);
+        let n = m.nrows();
+        let vec_size = 32 * (1 + rng.next_below(4));
+        let cfg = PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() };
+        for kind in EngineKind::ALL {
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg.clone())
+                .build()
+                .map_err(|e| format!("{kind:?}: build: {e}"))?;
+            // Off-by-k lengths in both directions, both arguments.
+            let delta = 1 + rng.next_below(5);
+            let bad_lens = [n.saturating_sub(delta), n + delta];
+            for &bad in &bad_lens {
+                let x = vec![0.0; bad];
+                let mut y = vec![0.0; n];
+                match ctx.spmv(&x, &mut y) {
+                    Err(EhybError::DimensionMismatch { .. }) => {}
+                    other => {
+                        return Err(format!("{kind:?}: bad x len {bad}: got {other:?}"));
+                    }
+                }
+                let x = vec![0.0; n];
+                let mut y = vec![0.0; bad];
+                match ctx.spmv(&x, &mut y) {
+                    Err(EhybError::DimensionMismatch { .. }) => {}
+                    other => {
+                        return Err(format!("{kind:?}: bad y len {bad}: got {other:?}"));
+                    }
+                }
+            }
+            // Correct lengths still work.
+            let x = random_x(rng, n);
+            let mut y = vec![0.0; n];
+            ctx.spmv(&x, &mut y).map_err(|e| format!("{kind:?}: good dims failed: {e}"))?;
         }
         Ok(())
     });
