@@ -1,0 +1,98 @@
+//! Autotune end to end: tune → persist → reload (the CI smoke job runs
+//! exactly this).
+//!
+//! ```text
+//! cargo run --release --example autotune
+//! ```
+//!
+//! 1. Fingerprint a mesh matrix and run the measured tuner over the
+//!    EHYB plan space (slice height, partition size vs. the scratchpad
+//!    budget, ELL/ER width cutoff) under a wall-clock budget.
+//! 2. Persist the winning plan in a plan-cache directory (atomic JSON,
+//!    keyed by fingerprint × device × dtype).
+//! 3. Rebuild from a fresh builder pointed at the same cache: the plan
+//!    loads with zero search and produces a byte-identical `EhybMatrix`
+//!    and identical SpMV results.
+
+use ehyb::autotune::{Fingerprint, PlanStore, TuneLevel};
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::gen::unstructured_mesh;
+use ehyb::util::check::assert_allclose;
+use ehyb::util::Timer;
+use ehyb::{EngineKind, SpmvContext};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("ehyb-autotune-example-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // 1. Matrix + fingerprint.
+    let m = unstructured_mesh::<f64>(64, 64, 0.4, 42);
+    let n = m.nrows();
+    let fp = Fingerprint::of(&m);
+    println!("matrix      : n={} nnz={} fingerprint={}", n, m.nnz(), fp.key());
+
+    // 2. Tune (measured probes, budget-capped) and persist. The budget
+    //    is generous so the search completes even on slow CI machines —
+    //    a budget-starved search (nothing compared) is deliberately not
+    //    persisted.
+    let cfg = PreprocessConfig { vec_size_override: Some(256), ..Default::default() };
+    let budget = TuneLevel::Measured { budget: std::time::Duration::from_secs(10) };
+    let t = Timer::start();
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .tune(budget)
+        .plan_cache(&dir)
+        .build()?;
+    let cold_secs = t.elapsed_secs();
+    let tp = ctx.tuned().expect("tuner-routed build carries a TunedPlan").clone();
+    println!(
+        "tuned plan  : engine={} slice_height={} vec_size={:?} cutoff={:?}",
+        tp.engine.name(),
+        tp.slice_height,
+        tp.vec_size,
+        tp.ell_width_cutoff
+    );
+    println!(
+        "score       : {:.3e}s vs default {:.3e}s ({} level)",
+        tp.score_secs, tp.default_score_secs, tp.level
+    );
+    anyhow::ensure!(
+        tp.score_secs <= tp.default_score_secs,
+        "selection guarantee violated: tuned plan scored worse than default"
+    );
+
+    let store = PlanStore::new(&dir);
+    let cache_file = store.path_for(&tp.fingerprint, &tp.device, &tp.dtype, &tp.scope);
+    anyhow::ensure!(cache_file.exists(), "plan was not persisted at {}", cache_file.display());
+    println!("persisted   : {} ({} bytes)", cache_file.display(), std::fs::metadata(&cache_file)?.len());
+
+    // 3. Reload: a fresh builder on the same cache dir must adopt the
+    //    stored plan without searching, and agree exactly.
+    let t = Timer::start();
+    let ctx2 = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg)
+        .tune(budget)
+        .plan_cache(&dir)
+        .build()?;
+    let warm_secs = t.elapsed_secs();
+    anyhow::ensure!(ctx2.tuned() == Some(&tp), "reloaded plan differs from the persisted one");
+    anyhow::ensure!(
+        ctx.plan().unwrap().matrix == ctx2.plan().unwrap().matrix,
+        "cache round-trip did not rebuild a byte-identical EhybMatrix"
+    );
+    println!("reload      : cache hit verified ({cold_secs:.3}s cold build -> {warm_secs:.3}s warm)");
+
+    // Correctness of the tuned pipeline.
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.29).cos()).collect();
+    let oracle = m.spmv_f64_oracle(&x);
+    assert_allclose(&ctx.spmv_alloc(&x)?, &oracle, 1e-10, 1e-10).map_err(|e| anyhow::anyhow!(e))?;
+    let y2 = ctx2.spmv_alloc(&x)?;
+    assert_allclose(&y2, &oracle, 1e-10, 1e-10).map_err(|e| anyhow::anyhow!(e))?;
+    println!("spmv        : tuned + reloaded contexts match the oracle");
+
+    std::fs::remove_dir_all(&dir).ok();
+    println!("ok");
+    Ok(())
+}

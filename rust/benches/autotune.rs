@@ -1,0 +1,104 @@
+//! Bench: autotuner payoff and cost — default vs heuristic-tuned vs
+//! measured-tuned EHYB plans (CPU wall-clock GFLOPS), the one-time
+//! search cost at each level, and the plan-cache warm-start time.
+//! `cargo bench --bench autotune`.
+
+use ehyb::autotune::TuneLevel;
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::gen::{circuit, poisson3d, unstructured_mesh};
+use ehyb::spmv::SpmvEngine;
+use ehyb::util::timer::bench_secs;
+use ehyb::util::Timer;
+use ehyb::{EngineKind, SpmvContext};
+use std::time::Duration;
+
+fn engine_gflops(ctx: &SpmvContext<f64>) -> f64 {
+    let n = ctx.nrows();
+    let x = vec![1.0f64; n];
+    let mut y = vec![0.0f64; n];
+    let engine = ctx.engine();
+    let secs = bench_secs(|| engine.spmv(&x, &mut y), 5, Duration::from_millis(200));
+    ehyb::spmv::gflops(ctx.nnz(), secs)
+}
+
+fn main() {
+    let cases: Vec<(&str, ehyb::sparse::csr::Csr<f64>)> = vec![
+        ("poisson3d-32 (33k, stencil)", poisson3d(32, 32, 32)),
+        ("unstructured-200 (40k, irregular)", unstructured_mesh(200, 200, 0.5, 42)),
+        ("circuit-30k (hub rows)", circuit(30_000, 4, 0.001, 7)),
+    ];
+    for (label, m) in &cases {
+        println!("== {label}: n={} nnz={} ==", m.nrows(), m.nnz());
+        let cfg = PreprocessConfig::default();
+        let variants: [(&str, Option<TuneLevel>); 3] = [
+            ("default", None),
+            ("heuristic", Some(TuneLevel::Heuristic)),
+            ("measured", Some(TuneLevel::Measured { budget: Duration::from_millis(500) })),
+        ];
+        for (name, level) in variants {
+            let t = Timer::start();
+            // Fresh search per variant; never touch the user's
+            // EHYB_TUNE_DIR cache from a benchmark.
+            let mut b = SpmvContext::builder(m.clone())
+                .engine(EngineKind::Ehyb)
+                .config(cfg.clone())
+                .no_plan_cache();
+            if let Some(level) = level {
+                b = b.tune(level);
+            }
+            let ctx = match b.build() {
+                Ok(ctx) => ctx,
+                Err(e) => {
+                    println!("  {name:>9}: build failed: {e:#}");
+                    continue;
+                }
+            };
+            let build_secs = t.elapsed_secs();
+            let gf = engine_gflops(&ctx);
+            let plan = ctx.plan().expect("EHYB context carries a plan");
+            let knobs = format!(
+                "vec_size={} h={} cutoff={:?}",
+                plan.matrix.vec_size,
+                plan.matrix.slice_height,
+                ctx.config().ell_width_cutoff
+            );
+            match ctx.tuned() {
+                Some(tp) => println!(
+                    "  {name:>9}: {gf:7.3} GFLOPS  ({knobs}; search+build {build_secs:.3}s; \
+                     score {:.3e}s vs default {:.3e}s)",
+                    tp.score_secs, tp.default_score_secs
+                ),
+                None => println!("  {name:>9}: {gf:7.3} GFLOPS  ({knobs}; build {build_secs:.3}s)"),
+            }
+        }
+        // Plan-cache warm start: persist the measured winner, then time
+        // a rebuild that loads it instead of searching.
+        let dir = std::env::temp_dir().join(format!("ehyb-autotune-bench-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cold = SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(cfg.clone())
+            .tune(TuneLevel::Measured { budget: Duration::from_millis(500) })
+            .plan_cache(&dir);
+        let t = Timer::start();
+        let ok = cold.build().is_ok();
+        let cold_secs = t.elapsed_secs();
+        if ok {
+            let t = Timer::start();
+            let _warm = SpmvContext::builder(m.clone())
+                .engine(EngineKind::Ehyb)
+                .config(cfg.clone())
+                .tune(TuneLevel::Measured { budget: Duration::from_millis(500) })
+                .plan_cache(&dir)
+                .build()
+                .unwrap();
+            let warm_secs = t.elapsed_secs();
+            println!(
+                "  plan cache: cold tune+build {cold_secs:.3}s -> warm reload {warm_secs:.3}s \
+                 ({:.1}x faster restart)",
+                cold_secs / warm_secs.max(1e-9)
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

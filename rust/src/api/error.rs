@@ -30,6 +30,12 @@ pub enum EhybError {
     /// The SpMV service thread has shut down (or dropped the reply);
     /// the request was not served.
     ServiceStopped,
+    /// The SpMV service's bounded request queue is full: the request was
+    /// shed instead of queued (backpressure). `queue_depth` is the
+    /// configured bound the queue had reached; retry after draining.
+    Overloaded {
+        queue_depth: usize,
+    },
     /// Backend/runtime failure (PJRT client, missing artifacts).
     Runtime(String),
     /// Filesystem / OS error, with context.
@@ -50,6 +56,9 @@ impl fmt::Display for EhybError {
             EhybError::PartitionFailed(msg) => write!(f, "partitioning failed: {msg}"),
             EhybError::UnsupportedFormat(msg) => write!(f, "unsupported format: {msg}"),
             EhybError::ServiceStopped => write!(f, "SpMV service stopped"),
+            EhybError::Overloaded { queue_depth } => {
+                write!(f, "SpMV service overloaded: request queue full at depth {queue_depth}")
+            }
             EhybError::Runtime(msg) => write!(f, "runtime error: {msg}"),
             EhybError::Io(msg) => write!(f, "I/O error: {msg}"),
             EhybError::Parse(msg) => write!(f, "parse error: {msg}"),
@@ -114,6 +123,8 @@ mod tests {
         let e = EhybError::DimensionMismatch { what: "x", expected: 4, got: 3 };
         assert_eq!(e.to_string(), "dimension mismatch for x: expected 4, got 3");
         assert!(EhybError::ServiceStopped.to_string().contains("stopped"));
+        let e = EhybError::Overloaded { queue_depth: 64 };
+        assert!(e.to_string().contains("overloaded") && e.to_string().contains("64"));
         assert!(EhybError::PartitionFailed("cap".into()).to_string().contains("cap"));
         assert!(EhybError::UnsupportedFormat("array".into()).to_string().contains("array"));
     }

@@ -14,9 +14,12 @@
 //! * [`SpmvContext::solver`] — preconditioned CG / BiCGSTAB / multi-RHS
 //!   CG over this context's engine.
 //!
-//! [`EngineKind::Auto`] picks the engine from the
-//! [`crate::perfmodel`] roofline predictions (EHYB vs the CSR-family and
-//! ELL-family bounds) instead of hard-coding EHYB.
+//! [`EngineKind::Auto`] and [`SpmvContextBuilder::tune`] route through
+//! the [`crate::autotune`] tuner: the plan knobs (and for `Auto` the
+//! engine kind itself) are searched per matrix — roofline-scored at
+//! [`TuneLevel::Heuristic`], microbenched at [`TuneLevel::Measured`] —
+//! and the winner can persist in a [`PlanStore`] so a restarted process
+//! warm-starts with zero search.
 
 pub mod batch;
 pub mod error;
@@ -24,11 +27,10 @@ pub mod error;
 pub use batch::{BatchBuf, VecBatch, VecBatchMut};
 pub use error::EhybError;
 
+use crate::autotune::{self, Fingerprint, PlanStore, TuneLevel, TunedPlan};
 use crate::coordinator::precond::Preconditioner;
-use crate::coordinator::service::{BatchKernel, SpmvService};
+use crate::coordinator::service::{self, BatchKernel, SpmvService};
 use crate::coordinator::solver::{self, SolveReport, SolverConfig};
-use crate::gpu::device::GpuDevice;
-use crate::perfmodel;
 use crate::preprocess::{EhybPlan, PreprocessConfig};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
@@ -41,13 +43,15 @@ use crate::spmv::hyb::HybEngine;
 use crate::spmv::merge::MergeSpmv;
 use crate::spmv::sellp::SellPEngine;
 use crate::spmv::SpmvEngine;
+use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
 /// Which prepared engine a [`SpmvContext`] should carry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
-    /// Choose via the [`crate::perfmodel`] roofline bounds (EHYB when
-    /// its predicted up-boundary wins, else the best baseline).
+    /// Choose via the [`crate::autotune`] tuner (heuristic roofline
+    /// scoring unless [`SpmvContextBuilder::tune`] asked for measured
+    /// probes): EHYB when its plan wins, else the best baseline.
     Auto,
     /// The paper's explicitly-cached hybrid engine (requires a square
     /// matrix; runs Algorithms 1–2 at build time).
@@ -74,14 +78,104 @@ impl EngineKind {
         EngineKind::Merge,
         EngineKind::Csr5,
     ];
+
+    /// Stable lowercase tag ("ehyb", "csr-scalar", ...) — used by the
+    /// persisted plan store and CLI flags. Inverse of
+    /// [`EngineKind::from_name`].
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Auto => "auto",
+            EngineKind::Ehyb => "ehyb",
+            EngineKind::CsrScalar => "csr-scalar",
+            EngineKind::CsrVector => "csr-vector",
+            EngineKind::Ell => "ell",
+            EngineKind::Hyb => "hyb",
+            EngineKind::SellP => "sellp",
+            EngineKind::Merge => "merge",
+            EngineKind::Csr5 => "csr5",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<EngineKind> {
+        Some(match name {
+            "auto" => EngineKind::Auto,
+            "ehyb" => EngineKind::Ehyb,
+            "csr-scalar" => EngineKind::CsrScalar,
+            "csr-vector" => EngineKind::CsrVector,
+            "ell" => EngineKind::Ell,
+            "hyb" => EngineKind::Hyb,
+            "sellp" => EngineKind::SellP,
+            "merge" => EngineKind::Merge,
+            "csr5" => EngineKind::Csr5,
+            _ => return None,
+        })
+    }
+}
+
+/// Construct the engine for a concrete kind — THE single code path for
+/// engine construction in the crate: the context's lazy cell, the
+/// harness's [`all_contexts`] sweep, and the tuner's measured probes
+/// all come through here (the old `spmv::registry` duplicate is
+/// retired).
+pub(crate) fn build_engine<S: Scalar>(
+    kind: EngineKind,
+    matrix: &Csr<S>,
+    plan: Option<&EhybPlan<S>>,
+) -> Arc<dyn SpmvEngine<S>> {
+    match kind {
+        EngineKind::Ehyb => Arc::new(EhybCpu::new(plan.expect("Ehyb kind carries a plan"))),
+        EngineKind::CsrScalar => Arc::new(CsrScalar::new(matrix)),
+        EngineKind::CsrVector => Arc::new(CsrVector::new(matrix)),
+        EngineKind::Ell => Arc::new(EllEngine::new(matrix)),
+        EngineKind::Hyb => Arc::new(HybEngine::new(matrix)),
+        EngineKind::SellP => Arc::new(SellPEngine::new(matrix)),
+        EngineKind::Merge => Arc::new(MergeSpmv::new(matrix)),
+        EngineKind::Csr5 => Arc::new(Csr5Like::new(matrix)),
+        EngineKind::Auto => unreachable!("Auto resolves to a concrete kind at build time"),
+    }
+}
+
+/// Whether the plain dense-width ELL format would blow up on this
+/// matrix: it stores `nrows × max_row_nnz` slots, which on power-law
+/// rows is arbitrarily larger than the matrix itself (the retired
+/// registry omitted plain ELL from its sweeps for exactly this
+/// reason). The engine sweeps and the tuner's measured probes skip
+/// plain ELL when padding exceeds 16× the nnz on a nontrivially-sized
+/// matrix; the sliced formats (SELL-P, HYB's split) bound padding and
+/// stay in.
+pub(crate) fn ell_padding_excessive<S: Scalar>(m: &Csr<S>) -> bool {
+    let slots = m.max_row_nnz().saturating_mul(m.nrows());
+    slots > (1 << 20) && slots > m.nnz().saturating_mul(16)
+}
+
+/// One prepared context per concrete engine kind (paper's EHYB + all
+/// seven baselines) — what the harness's engine sweep iterates now that
+/// `spmv::registry` is retired. Each context owns its own clone of the
+/// matrix; engines build lazily on first use. For large matrices where
+/// holding `ALL.len()` matrix copies at once matters, loop
+/// `EngineKind::ALL` and build/drop one context at a time instead (see
+/// `harness::runner::bench_cpu_engines`, which also skips plain ELL on
+/// padding-hostile matrices — [`EngineKind::Ell`] here only allocates
+/// its dense-width format if you actually call `.engine()`).
+pub fn all_contexts<S: Scalar>(
+    m: &Csr<S>,
+    cfg: &PreprocessConfig,
+) -> crate::Result<Vec<SpmvContext<S>>> {
+    EngineKind::ALL
+        .iter()
+        .map(|&kind| SpmvContext::builder(m.clone()).engine(kind).config(cfg.clone()).build())
+        .collect()
 }
 
 /// Builder for [`SpmvContext`]: `SpmvContext::builder(m).engine(..)
-/// .config(..).build()?`.
+/// .config(..).tune(..).build()?`.
 pub struct SpmvContextBuilder<S: Scalar> {
     matrix: Csr<S>,
     kind: EngineKind,
     config: PreprocessConfig,
+    tune: Option<TuneLevel>,
+    cache_dir: Option<PathBuf>,
+    cache_disabled: bool,
 }
 
 impl<S: Scalar> SpmvContextBuilder<S> {
@@ -97,13 +191,126 @@ impl<S: Scalar> SpmvContextBuilder<S> {
         self
     }
 
-    /// Run preprocessing (when needed) and prepare the engine.
+    /// Autotune the plan at build time (OSKI-style): search the EHYB
+    /// knobs — and, with [`EngineKind::Auto`], the engine kind — and
+    /// adopt the winner only if its score is no worse than the default
+    /// plan's. Combine with [`Self::plan_cache`] (or the
+    /// `EHYB_TUNE_DIR` environment variable) to persist winners and
+    /// warm-start later builds with zero search.
+    pub fn tune(mut self, level: TuneLevel) -> Self {
+        self.tune = Some(level);
+        self
+    }
+
+    /// Persist/load tuned plans in `dir` (overrides the `EHYB_TUNE_DIR`
+    /// environment convention). Only consulted on tuner-routed builds
+    /// ([`Self::tune`] or [`EngineKind::Auto`]).
+    pub fn plan_cache(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Opt this build out of the plan cache entirely — including the
+    /// `EHYB_TUNE_DIR` environment fallback. For measurement tools
+    /// (the tuning ablation, benches, tests) that must search fresh
+    /// and must not read from or write into the user's cache.
+    pub fn no_plan_cache(mut self) -> Self {
+        self.cache_disabled = true;
+        self.cache_dir = None;
+        self
+    }
+
+    /// Run preprocessing / tuning (as requested) and prepare the engine.
     pub fn build(self) -> crate::Result<SpmvContext<S>> {
-        let SpmvContextBuilder { matrix, kind, config } = self;
-        let (resolved, plan): (EngineKind, Option<EhybPlan<S>>) = match kind {
-            EngineKind::Ehyb => (EngineKind::Ehyb, Some(EhybPlan::build(&matrix, &config)?)),
-            EngineKind::Auto => choose_auto(&matrix, &config),
-            concrete => (concrete, None),
+        let SpmvContextBuilder { matrix, kind, mut config, tune, cache_dir, cache_disabled } = self;
+        let mut tuned: Option<TunedPlan> = None;
+        let (resolved, plan): (EngineKind, Option<EhybPlan<S>>) = match (kind, tune) {
+            (EngineKind::Ehyb, None) => (EngineKind::Ehyb, Some(EhybPlan::build(&matrix, &config)?)),
+            (concrete, None) if concrete != EngineKind::Auto => (concrete, None),
+            // Tuner-routed: explicit `.tune(..)` and/or `Auto`.
+            (requested, tune_level) => {
+                let explicit = tune_level.is_some();
+                let level = tune_level.unwrap_or(TuneLevel::Heuristic);
+                // The cache only participates for requests with a real
+                // search (`Auto` / `Ehyb`): tuning a fixed baseline is
+                // the identity, and persisting it would clobber the
+                // shared fingerprint entry with a no-op plan.
+                let store = if !cache_disabled
+                    && matches!(requested, EngineKind::Auto | EngineKind::Ehyb)
+                {
+                    cache_dir.map(PlanStore::new).or_else(PlanStore::from_env)
+                } else {
+                    None
+                };
+                // The fingerprint is a full O(nnz) hash pass — compute
+                // it once, only when a store can use it, and hand it on
+                // to the tuner so the search does not re-hash.
+                let fp = store.as_ref().map(|_| Fingerprint::of(&matrix));
+                let device = autotune::device_key(&config.device);
+                let cfg_key = autotune::config_key(&config);
+                // A damaged cache entry (Err) is treated as a miss, and
+                // a hit is honored only when it fits this build: the
+                // entry for this search scope (so Auto and EHYB-only
+                // winners never clobber each other), same (or Auto)
+                // engine request, compatible tune level, and an exactly
+                // matching base config — see `TunedPlan::usable_for`.
+                let hit = store
+                    .as_ref()
+                    .zip(fp.as_ref())
+                    .and_then(|(s, fp)| {
+                        s.load(&fp.key(), &device, S::NAME, requested.name()).ok().flatten()
+                    })
+                    .filter(|tp| tp.usable_for(requested, level, &cfg_key));
+                // Adopt the cached plan — unless rebuilding it fails
+                // (stale entry for a matrix/config drift the keys did
+                // not capture), in which case fall through to a fresh
+                // search rather than failing the build.
+                let adopted = hit.and_then(|tp| {
+                    let cfg2 = tp.apply(&config);
+                    if tp.engine == EngineKind::Ehyb {
+                        EhybPlan::build(&matrix, &cfg2).ok().map(|p| (tp, cfg2, Some(p)))
+                    } else {
+                        Some((tp, cfg2, None))
+                    }
+                });
+                match adopted {
+                    Some((tp, cfg2, plan)) => {
+                        config = cfg2;
+                        let engine = tp.engine;
+                        tuned = Some(tp);
+                        (engine, plan)
+                    }
+                    None => {
+                        let out = if explicit {
+                            autotune::tuner::tune_with_fingerprint(
+                                &matrix, &config, requested, level, fp,
+                            )?
+                        } else {
+                            // Implicit `Auto` (no `.tune(..)`): engine
+                            // choice only — one preprocessing pass,
+                            // like the pre-tuner roofline comparison.
+                            // The knob search stays opt-in.
+                            autotune::tuner::choose_engine(&matrix, &config, level, fp)?
+                        };
+                        // Persist only real search results: implicit
+                        // Auto's light engine choice and budget-starved
+                        // measured runs (`!searched()`) must not occupy
+                        // the entry a full `.tune(..)` search would
+                        // fill. Best-effort: an unwritable cache dir
+                        // must not fail the build.
+                        if explicit && out.searched() {
+                            if let Some(store) = &store {
+                                let _ = store.save(&out.plan);
+                            }
+                        }
+                        config = out.plan.apply(&config);
+                        let engine = out.plan.engine;
+                        let plan = out.ehyb;
+                        tuned = Some(out.plan);
+                        (engine, plan)
+                    }
+                }
+            }
         };
         Ok(SpmvContext {
             matrix,
@@ -111,45 +318,9 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             kind: resolved,
             requested: kind,
             plan,
+            tuned,
             engine: OnceLock::new(),
         })
-    }
-}
-
-/// Roofline-model engine choice for [`EngineKind::Auto`]: build the EHYB
-/// plan (when the matrix is square) and compare its predicted memory-
-/// bound up-boundary against the CSR-family and ELL-family bounds.
-fn choose_auto<S: Scalar>(
-    m: &Csr<S>,
-    config: &PreprocessConfig,
-) -> (EngineKind, Option<EhybPlan<S>>) {
-    // Roofline device: the bounds are ratios of bytes moved, so any
-    // bandwidth-bound device ranks the formats identically; V100 is the
-    // paper's reference part. (`PreprocessConfig::device` shapes the
-    // cache plan but carries no bandwidth numbers, so it cannot drive
-    // the roofline itself.)
-    let dev = GpuDevice::v100();
-    let nnz = m.nnz();
-    let csr_gf = perfmodel::csr_bound(m).roofline_gflops(nnz, &dev);
-    let ell_fill =
-        if nnz == 0 { 1.0 } else { (m.max_row_nnz() * m.nrows()) as f64 / nnz as f64 };
-    let ell_gf = perfmodel::ell_bound(m, ell_fill.max(1.0)).roofline_gflops(nnz, &dev);
-    let baseline =
-        if ell_gf > csr_gf { (EngineKind::Ell, ell_gf) } else { (EngineKind::CsrScalar, csr_gf) };
-    if m.nrows() != m.ncols() {
-        return (baseline.0, None);
-    }
-    match EhybPlan::build(m, config) {
-        Ok(plan) => {
-            let ehyb_gf =
-                perfmodel::ehyb_bound(&plan.matrix).roofline_gflops(plan.matrix.nnz(), &dev);
-            if ehyb_gf >= baseline.1 {
-                (EngineKind::Ehyb, Some(plan))
-            } else {
-                (baseline.0, None)
-            }
-        }
-        Err(_) => (baseline.0, None),
     }
 }
 
@@ -162,6 +333,9 @@ pub struct SpmvContext<S: Scalar> {
     kind: EngineKind,
     requested: EngineKind,
     plan: Option<EhybPlan<S>>,
+    /// Present iff the build was tuner-routed (`.tune(..)` or `Auto`):
+    /// the winning plan with its score provenance.
+    tuned: Option<TunedPlan>,
     /// Constructed lazily on first execution: plan-only consumers (the
     /// harness reads partition/timing provenance off `plan()`) never
     /// pay for the engine's own copy of the format.
@@ -172,7 +346,14 @@ impl<S: Scalar> SpmvContext<S> {
     /// Start building a context over `matrix` (takes ownership — the
     /// context is the long-lived handle).
     pub fn builder(matrix: Csr<S>) -> SpmvContextBuilder<S> {
-        SpmvContextBuilder { matrix, kind: EngineKind::Ehyb, config: PreprocessConfig::default() }
+        SpmvContextBuilder {
+            matrix,
+            kind: EngineKind::Ehyb,
+            config: PreprocessConfig::default(),
+            tune: None,
+            cache_dir: None,
+            cache_disabled: false,
+        }
     }
 
     /// Shorthand for the default EHYB pipeline with default config.
@@ -205,20 +386,16 @@ impl<S: Scalar> SpmvContext<S> {
         self.plan.as_ref()
     }
 
+    /// The tuner's winning plan + score provenance — present iff this
+    /// context was built through the tuner (`.tune(..)` or
+    /// [`EngineKind::Auto`]), whether searched fresh or loaded from the
+    /// plan cache.
+    pub fn tuned(&self) -> Option<&TunedPlan> {
+        self.tuned.as_ref()
+    }
+
     fn engine_cell(&self) -> &Arc<dyn SpmvEngine<S>> {
-        self.engine.get_or_init(|| match self.kind {
-            EngineKind::Ehyb => {
-                Arc::new(EhybCpu::new(self.plan.as_ref().expect("Ehyb kind carries a plan")))
-            }
-            EngineKind::CsrScalar => Arc::new(CsrScalar::new(&self.matrix)),
-            EngineKind::CsrVector => Arc::new(CsrVector::new(&self.matrix)),
-            EngineKind::Ell => Arc::new(EllEngine::new(&self.matrix)),
-            EngineKind::Hyb => Arc::new(HybEngine::new(&self.matrix)),
-            EngineKind::SellP => Arc::new(SellPEngine::new(&self.matrix)),
-            EngineKind::Merge => Arc::new(MergeSpmv::new(&self.matrix)),
-            EngineKind::Csr5 => Arc::new(Csr5Like::new(&self.matrix)),
-            EngineKind::Auto => unreachable!("Auto resolves to a concrete kind at build time"),
-        })
+        self.engine.get_or_init(|| build_engine(self.kind, &self.matrix, self.plan.as_ref()))
     }
 
     /// The prepared engine (built on first use, then cached).
@@ -279,8 +456,23 @@ impl<S: Scalar> SpmvContext<S> {
 
     /// Spawn the request-fusing SpMV service on this context's engine.
     /// `max_batch` bounds how many queued requests one drain fuses into
-    /// a single batched kernel call.
+    /// a single batched kernel call; the request queue is bounded at
+    /// [`service::DEFAULT_QUEUE_BOUND`] (submissions beyond it shed
+    /// with [`EhybError::Overloaded`]) — use [`Self::serve_bounded`] to
+    /// pick the bound.
     pub fn serve(&self, max_batch: usize) -> crate::Result<SpmvService<S>> {
+        self.serve_bounded(max_batch, service::DEFAULT_QUEUE_BOUND)
+    }
+
+    /// [`Self::serve`] with an explicit request-queue bound: at most
+    /// `queue_bound` requests wait in the service queue; further
+    /// submissions return [`EhybError::Overloaded`] immediately instead
+    /// of growing an unbounded backlog (load shedding / backpressure).
+    pub fn serve_bounded(
+        &self,
+        max_batch: usize,
+        queue_bound: usize,
+    ) -> crate::Result<SpmvService<S>> {
         if self.nrows() != self.ncols() {
             return Err(EhybError::UnsupportedFormat(format!(
                 "SpMV service requires a square matrix, got {}x{}",
@@ -290,7 +482,7 @@ impl<S: Scalar> SpmvContext<S> {
         }
         let engine = self.engine_arc();
         let nrows = self.nrows();
-        SpmvService::spawn(
+        SpmvService::spawn_bounded(
             move || {
                 let fb = engine.format_bytes();
                 let kernel: BatchKernel<S> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
@@ -298,6 +490,7 @@ impl<S: Scalar> SpmvContext<S> {
             },
             nrows,
             max_batch,
+            queue_bound,
         )
     }
 
@@ -521,6 +714,76 @@ mod tests {
             Err(EhybError::UnsupportedFormat(_)) => {}
             other => panic!("expected UnsupportedFormat, got {:?}", other.err()),
         }
+    }
+
+    #[test]
+    fn kind_names_roundtrip_and_are_unique() {
+        let mut seen = std::collections::BTreeSet::new();
+        for kind in EngineKind::ALL.into_iter().chain([EngineKind::Auto]) {
+            let name = kind.name();
+            assert!(seen.insert(name), "duplicate kind tag {name}");
+            assert_eq!(EngineKind::from_name(name), Some(kind));
+        }
+        assert_eq!(EngineKind::from_name("warp-drive"), None);
+    }
+
+    #[test]
+    fn all_contexts_covers_every_kind_and_validates() {
+        // The registry replacement: one context per concrete kind, each
+        // engine validated against the oracle + both batch entry points.
+        let m = crate::sparse::gen::unstructured_mesh::<f64>(20, 20, 0.5, 12);
+        let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+        let ctxs = all_contexts(&m, &cfg).unwrap();
+        assert_eq!(ctxs.len(), EngineKind::ALL.len());
+        let mut names: Vec<&str> = Vec::new();
+        for (ctx, &kind) in ctxs.iter().zip(EngineKind::ALL.iter()) {
+            assert_eq!(ctx.kind(), kind);
+            crate::spmv::testutil::validate_engine(ctx.engine(), &m);
+            names.push(ctx.engine().name());
+        }
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ctxs.len(), "engine report names must be unique");
+    }
+
+    #[test]
+    fn ell_padding_guard_detects_power_law() {
+        use crate::sparse::coo::Coo;
+        // One near-dense row in a big sparse matrix: plain ELL would
+        // allocate nrows × max_row_nnz ≈ 4.5M slots for 4.5k nonzeros.
+        let n = 3000;
+        let mut coo = Coo::<f64>::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 1.0);
+        }
+        for j in 1..1500 {
+            coo.push(0, j, 0.5);
+        }
+        assert!(ell_padding_excessive(&coo.to_csr()));
+        // Regular stencils are fine.
+        assert!(!ell_padding_excessive(&poisson2d::<f64>(16, 16)));
+    }
+
+    #[test]
+    fn tuned_build_exposes_plan_and_respects_score_guarantee() {
+        let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(128), ..Default::default() })
+            .tune(crate::autotune::TuneLevel::Heuristic)
+            .no_plan_cache()
+            .build()
+            .unwrap();
+        let tp = ctx.tuned().expect("tuner-routed build carries TunedPlan");
+        assert!(tp.score_secs <= tp.default_score_secs);
+        assert_eq!(ctx.kind(), tp.engine);
+        // The context's config reflects the tuned knobs, so plan() was
+        // built from exactly what the TunedPlan records.
+        assert_eq!(ctx.config().vec_size_override, tp.vec_size);
+        assert_eq!(ctx.config().ell_width_cutoff, tp.ell_width_cutoff);
+        assert!(ctx.plan().is_some());
+        // Untuned builds carry no TunedPlan.
+        assert!(ctx_for(EngineKind::Ehyb).tuned().is_none());
     }
 
     #[test]

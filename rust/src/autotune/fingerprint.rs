@@ -1,0 +1,165 @@
+//! Matrix fingerprinting for the autotuner's persistent plan cache.
+//!
+//! A [`Fingerprint`] is (1) a **structural hash** — FNV-1a over the
+//! dimensions and the full CSR structure (row lengths + column
+//! indices), so two matrices share a cache entry only when their
+//! sparsity patterns are identical — and (2) a small **feature vector**
+//! (row-length histogram moments, diagonal dominance, mean band)
+//! drawing on [`crate::sparse::stats`]. The hash keys the plan store;
+//! the features steer the tuner's candidate generation (e.g. where to
+//! place the ELL/ER width cutoff) without a second pass over the
+//! matrix.
+
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+use crate::util::stats::Summary;
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+#[inline]
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Structural identity + shape features of one matrix — the cache key
+/// and candidate-generation input of the autotuner.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fingerprint {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub nnz: usize,
+    /// FNV-1a over dimensions, per-row lengths, and column indices.
+    /// Values are deliberately excluded: the EHYB layout depends only
+    /// on structure, so numerically-updated matrices (same pattern)
+    /// reuse the cached plan — OSKI's "same structure, new values"
+    /// amortization.
+    pub structure_hash: u64,
+    /// Row-length histogram moments.
+    pub row_mean: f64,
+    pub row_max: f64,
+    pub row_stddev: f64,
+    pub row_median: f64,
+    /// Fraction of rows that are (weakly) diagonally dominant:
+    /// `|a_ii| >= Σ_{j≠i} |a_ij|`. The one value-dependent feature —
+    /// a proxy for FEM/SPD-like systems vs circuit-style matrices.
+    pub diag_dominant_fraction: f64,
+    /// Mean `|col - row|` over all entries (locality proxy).
+    pub mean_band: f64,
+}
+
+impl Fingerprint {
+    pub fn of<S: Scalar>(m: &Csr<S>) -> Self {
+        let n = m.nrows();
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, &(n as u64).to_le_bytes());
+        h = fnv1a(h, &(m.ncols() as u64).to_le_bytes());
+
+        let mut lens = Vec::with_capacity(n);
+        let mut band_sum = 0f64;
+        let mut dominant = 0usize;
+        for i in 0..n {
+            let (cols, vals) = m.row(i);
+            lens.push(cols.len() as f64);
+            h = fnv1a(h, &(cols.len() as u32).to_le_bytes());
+            let mut diag = 0f64;
+            let mut off = 0f64;
+            for (&c, &v) in cols.iter().zip(vals) {
+                h = fnv1a(h, &c.to_le_bytes());
+                band_sum += (c as i64 - i as i64).unsigned_abs() as f64;
+                let a = v.to_f64().abs();
+                if c as usize == i {
+                    diag += a;
+                } else {
+                    off += a;
+                }
+            }
+            if diag >= off {
+                dominant += 1;
+            }
+        }
+        let row = Summary::of(&lens);
+        Fingerprint {
+            nrows: n,
+            ncols: m.ncols(),
+            nnz: m.nnz(),
+            structure_hash: h,
+            row_mean: row.as_ref().map_or(0.0, |s| s.mean),
+            row_max: row.as_ref().map_or(0.0, |s| s.max),
+            row_stddev: row.as_ref().map_or(0.0, |s| s.stddev),
+            row_median: row.as_ref().map_or(0.0, |s| s.median),
+            diag_dominant_fraction: if n == 0 { 0.0 } else { dominant as f64 / n as f64 },
+            mean_band: if m.nnz() == 0 { 0.0 } else { band_sum / m.nnz() as f64 },
+        }
+    }
+
+    /// Filename-safe cache key: hash plus the human-auditable dims.
+    pub fn key(&self) -> String {
+        format!("{:016x}-n{}-nnz{}", self.structure_hash, self.nrows, self.nnz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen::{circuit, poisson2d};
+
+    #[test]
+    fn identical_structure_same_key_regardless_of_values() {
+        let a = poisson2d::<f64>(12, 12);
+        // Same structure, scaled values.
+        let mut coo = Coo::<f64>::new(a.nrows(), a.ncols());
+        for i in 0..a.nrows() {
+            let (cols, vals) = a.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                coo.push(i, c as usize, 3.0 * v);
+            }
+        }
+        let b = coo.to_csr();
+        assert_eq!(Fingerprint::of(&a).key(), Fingerprint::of(&b).key());
+    }
+
+    #[test]
+    fn different_structure_different_hash() {
+        let a = Fingerprint::of(&poisson2d::<f64>(12, 12));
+        let b = Fingerprint::of(&poisson2d::<f64>(12, 13));
+        let c = Fingerprint::of(&circuit::<f64>(144, 3, 0.05, 1));
+        assert_ne!(a.structure_hash, b.structure_hash);
+        assert_ne!(a.structure_hash, c.structure_hash);
+    }
+
+    #[test]
+    fn dtype_does_not_change_structure_hash() {
+        // The store key separates dtypes explicitly; the structural hash
+        // itself is value- and precision-independent.
+        let m64 = poisson2d::<f64>(10, 10);
+        let m32: Csr<f32> = m64.cast();
+        assert_eq!(
+            Fingerprint::of(&m64).structure_hash,
+            Fingerprint::of(&m32).structure_hash
+        );
+    }
+
+    #[test]
+    fn features_match_known_matrix() {
+        let fp = Fingerprint::of(&poisson2d::<f64>(10, 10));
+        assert_eq!(fp.nrows, 100);
+        assert_eq!(fp.row_max, 5.0);
+        // The 5-point Laplacian (4 on the diagonal, -1 off) is weakly
+        // diagonally dominant everywhere.
+        assert_eq!(fp.diag_dominant_fraction, 1.0);
+        assert!(fp.row_mean > 3.0 && fp.row_mean < 5.0);
+        assert!(fp.mean_band > 0.0);
+    }
+
+    #[test]
+    fn key_is_filename_safe() {
+        let key = Fingerprint::of(&poisson2d::<f64>(4, 4)).key();
+        assert!(key.chars().all(|c| c.is_ascii_alphanumeric() || c == '-'));
+    }
+}

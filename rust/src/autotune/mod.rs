@@ -1,0 +1,101 @@
+//! OSKI-style autotuning for the EHYB pipeline (ISSUE 3 tentpole): a
+//! layer between "format" and "engine" that picks the plan knobs
+//! *per matrix* instead of one-size-fits-all, and remembers the answer
+//! across process restarts.
+//!
+//! * [`fingerprint`] — structural hash + feature vector identifying a
+//!   matrix (the plan-cache key and the candidate generator's input).
+//! * [`tuner`] — searches the EHYB plan space (`slice_height`,
+//!   partition count vs. the shared-memory budget from
+//!   [`crate::preprocess::cache_size::cache_plan`], the ELL/ER width
+//!   cutoff, and the engine kind) at two [`TuneLevel`]s: `Heuristic`
+//!   scored by the [`crate::perfmodel`] roofline bounds, `Measured`
+//!   timing budget-capped probes of the real candidate engines.
+//! * [`store`] — the persistent plan cache: JSON via
+//!   [`crate::runtime::json`], atomic writes, keyed by
+//!   fingerprint × device × scalar type.
+//!
+//! Callers normally reach all of this through the facade:
+//! `SpmvContext::builder(m).tune(level).plan_cache(dir).build()?` —
+//! see [`crate::api::SpmvContextBuilder::tune`].
+
+pub mod fingerprint;
+pub mod store;
+pub mod tuner;
+
+pub use fingerprint::Fingerprint;
+pub use store::PlanStore;
+pub use tuner::{choose_engine, tune, tune_with_fingerprint, TuneLevel, TuneOutcome, TunedPlan};
+
+use crate::preprocess::cache_size::DeviceParams;
+use crate::preprocess::PreprocessConfig;
+
+/// Filename-safe identity of a device model for plan-store keying.
+/// Derived from the sizing-relevant parameters (processor count and
+/// scratchpad bytes) — two devices that size partitions identically
+/// share cached plans.
+pub fn device_key(dev: &DeviceParams) -> String {
+    format!("p{}-shm{}", dev.processors, dev.shm_bytes)
+}
+
+/// Canonical identity of the full base preprocessing config a tune ran
+/// under — the seed knobs the search derives its default plan and
+/// candidates from (`slice_height`, `vec_size_override`,
+/// `ell_width_cutoff`) **and** every other field that shapes the built
+/// `EhybMatrix` (sort, partitioner); the device has its own key
+/// component. Recorded in persisted plans and checked on cache hits,
+/// so a plan tuned from a different starting config — whose "default
+/// plan" (the ≤-guarantee's reference point) was a different plan —
+/// never silently serves this build.
+pub fn config_key(cfg: &PreprocessConfig) -> String {
+    let opt = |v: Option<usize>| v.map_or_else(|| "x".to_string(), |v| v.to_string());
+    format!(
+        "h{}-v{}-w{}-sd{}-{:?}-r{}-c{}-s{:x}",
+        cfg.slice_height,
+        opt(cfg.vec_size_override),
+        opt(cfg.ell_width_cutoff.map(|c| c as usize)),
+        cfg.sort_descending as u8,
+        cfg.partition.method,
+        cfg.partition.refine_passes,
+        cfg.partition.coarsen_factor,
+        cfg.partition.seed
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_key_distinguishes_models() {
+        assert_ne!(device_key(&DeviceParams::v100()), device_key(&DeviceParams::tpu_core()));
+        assert_eq!(device_key(&DeviceParams::v100()), "p80-shm98304");
+    }
+
+    #[test]
+    fn config_key_tracks_every_search_relevant_field() {
+        use crate::partition::{PartitionConfig, PartitionMethod};
+        let base = PreprocessConfig::default();
+        // The seed knobs change the key: a search started from a
+        // different default must not share cache entries (its
+        // ≤-default guarantee referenced a different plan).
+        for other in [
+            PreprocessConfig { slice_height: 16, ..base.clone() },
+            PreprocessConfig { vec_size_override: Some(96), ..base.clone() },
+            PreprocessConfig { ell_width_cutoff: Some(3), ..base.clone() },
+            PreprocessConfig { sort_descending: false, ..base.clone() },
+            PreprocessConfig {
+                partition: PartitionConfig {
+                    method: PartitionMethod::Random,
+                    ..base.partition.clone()
+                },
+                ..base.clone()
+            },
+        ] {
+            assert_ne!(config_key(&base), config_key(&other), "{other:?}");
+        }
+        // Deterministic and device-independent (device has its own key).
+        let other_dev = PreprocessConfig { device: DeviceParams::tpu_core(), ..base.clone() };
+        assert_eq!(config_key(&base), config_key(&other_dev));
+    }
+}

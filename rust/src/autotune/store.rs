@@ -1,0 +1,217 @@
+//! The persistent plan store: one JSON file per (fingerprint × device
+//! × scalar type × search scope) under a cache directory, written
+//! atomically
+//! (temp-file + rename) so concurrent tuners and readers never observe
+//! a torn plan. A restarted server pointing at the same directory
+//! warm-starts with zero search — the OSKI "offline tuning, online
+//! reuse" amortization.
+//!
+//! Directory resolution convention (what the facade uses):
+//! `SpmvContextBuilder::plan_cache(dir)` explicitly, else the
+//! `EHYB_TUNE_DIR` environment variable, else no persistence.
+//!
+//! The store is deliberately dumb: it persists and retrieves
+//! [`TunedPlan`]s by key and verifies the entry's self-described
+//! identity. Whether a retrieved plan actually *fits* a given build
+//! (engine kind, tune level, base config) is the facade's decision via
+//! [`TunedPlan::usable_for`].
+
+use super::tuner::TunedPlan;
+use crate::runtime::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-process sequence for temp-file names: two threads saving the
+/// same key concurrently must not share a temp file, or one could
+/// rename the other's half-written JSON into place.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Environment variable naming the default plan-cache directory.
+pub const ENV_DIR: &str = "EHYB_TUNE_DIR";
+
+/// A plan-cache directory handle.
+#[derive(Clone, Debug)]
+pub struct PlanStore {
+    dir: PathBuf,
+}
+
+impl PlanStore {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// Store at the `EHYB_TUNE_DIR` directory, if the variable is set
+    /// and non-empty.
+    pub fn from_env() -> Option<Self> {
+        std::env::var(ENV_DIR).ok().filter(|v| !v.is_empty()).map(Self::new)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Cache file for one (fingerprint, device, dtype, scope) key.
+    /// `scope` is the search scope that owns the entry
+    /// ([`crate::api::EngineKind::name`] of the requested kind), so an
+    /// `Auto` winner and an EHYB-only winner coexist instead of
+    /// clobbering each other.
+    pub fn path_for(&self, fingerprint: &str, device: &str, dtype: &str, scope: &str) -> PathBuf {
+        self.dir.join(format!("{fingerprint}-{device}-{dtype}-{scope}.json"))
+    }
+
+    /// Load the cached plan for a key. `Ok(None)` = no entry (cold
+    /// cache); `Err` = an entry exists but cannot be used (unreadable /
+    /// malformed / mislabeled) — callers that prefer to re-tune on a
+    /// damaged cache can treat `Err` as a miss.
+    pub fn load(
+        &self,
+        fingerprint: &str,
+        device: &str,
+        dtype: &str,
+        scope: &str,
+    ) -> crate::Result<Option<TunedPlan>> {
+        let path = self.path_for(fingerprint, device, dtype, scope);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(crate::EhybError::Io(format!("{}: {e}", path.display()))),
+        };
+        let plan = TunedPlan::from_json(&Json::parse(&text)?)?;
+        crate::ensure!(
+            plan.fingerprint == fingerprint
+                && plan.device == device
+                && plan.dtype == dtype
+                && plan.scope == scope,
+            "plan cache entry {} is keyed for ({}, {}, {}, {})",
+            path.display(),
+            plan.fingerprint,
+            plan.device,
+            plan.dtype,
+            plan.scope
+        );
+        Ok(Some(plan))
+    }
+
+    /// Persist `plan` under its own key. Atomic: the JSON is written to
+    /// a temp file unique per process *and* per save (so concurrent
+    /// in-process tuners never share one) in the same directory and
+    /// renamed into place — readers see either the old entry or the
+    /// new one, never a partial write.
+    pub fn save(&self, plan: &TunedPlan) -> crate::Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.path_for(&plan.fingerprint, &plan.device, &plan.dtype, &plan.scope);
+        let tmp = self.dir.join(format!(
+            ".{}-{}-{}.tmp",
+            path.file_name().and_then(|n| n.to_str()).unwrap_or("plan"),
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, plan.to_json().dump())
+            .map_err(|e| crate::EhybError::Io(format!("{}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| crate::EhybError::Io(format!("{}: {e}", path.display())))?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::EngineKind;
+
+    fn plan() -> TunedPlan {
+        TunedPlan {
+            engine: EngineKind::Ehyb,
+            slice_height: 32,
+            vec_size: Some(128),
+            ell_width_cutoff: None,
+            score_secs: 1e-4,
+            default_score_secs: 2e-4,
+            level: "heuristic".into(),
+            fingerprint: "deadbeef-n64-nnz256".into(),
+            device: "p80-shm98304".into(),
+            dtype: "f64".into(),
+            base_config: "sd1-Multilevel-r4-c8-s9e3779b9".into(),
+            scope: "ehyb".into(),
+        }
+    }
+
+    fn temp_store(tag: &str) -> PlanStore {
+        PlanStore::new(std::env::temp_dir().join(format!("ehyb-store-{tag}-{}", std::process::id())))
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let store = temp_store("rt");
+        let p = plan();
+        let path = store.save(&p).unwrap();
+        assert!(path.exists());
+        let back = store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).unwrap().unwrap();
+        assert_eq!(back, p);
+        // No temp droppings left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(store.dir())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn missing_entry_is_none() {
+        let store = temp_store("miss");
+        assert!(store.load("nope", "dev", "f64", "auto").unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_entry_is_err_not_panic() {
+        let store = temp_store("bad");
+        std::fs::create_dir_all(store.dir()).unwrap();
+        std::fs::write(store.path_for("k", "d", "f64", "auto"), "{not json").unwrap();
+        assert!(store.load("k", "d", "f64", "auto").is_err());
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn mislabeled_entry_is_err() {
+        let store = temp_store("mislabel");
+        let p = plan();
+        store.save(&p).unwrap();
+        // Copy the file under a different key: load must reject it.
+        std::fs::copy(
+            store.path_for(&p.fingerprint, &p.device, &p.dtype, &p.scope),
+            store.path_for("other-key", &p.device, &p.dtype, &p.scope),
+        )
+        .unwrap();
+        assert!(store.load("other-key", &p.device, &p.dtype, &p.scope).is_err());
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn scopes_have_separate_entries() {
+        // An EHYB-only tune must not clobber what an Auto search
+        // established for the same matrix.
+        let store = temp_store("scopes");
+        let auto_plan =
+            TunedPlan { engine: EngineKind::CsrScalar, scope: "auto".into(), ..plan() };
+        let ehyb_plan = plan(); // scope "ehyb"
+        store.save(&auto_plan).unwrap();
+        store.save(&ehyb_plan).unwrap();
+        let a = store.load(&plan().fingerprint, &plan().device, "f64", "auto").unwrap().unwrap();
+        let e = store.load(&plan().fingerprint, &plan().device, "f64", "ehyb").unwrap().unwrap();
+        assert_eq!(a, auto_plan);
+        assert_eq!(e, ehyb_plan);
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn from_env_requires_nonempty() {
+        // Does not mutate the environment (unsafe under parallel
+        // tests): just exercise both constructor paths directly.
+        assert!(PlanStore::new("/tmp/x").dir().ends_with("x"));
+        if std::env::var(ENV_DIR).is_err() {
+            assert!(PlanStore::from_env().is_none());
+        }
+    }
+}

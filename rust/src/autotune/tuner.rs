@@ -1,0 +1,896 @@
+//! The OSKI-style plan search: enumerate EHYB knob settings (and, for
+//! [`EngineKind::Auto`], the baseline engines), score each candidate,
+//! and return the winner as a serializable [`TunedPlan`].
+//!
+//! Two search modes:
+//!
+//! * [`TuneLevel::Heuristic`] — score = the [`crate::perfmodel`]
+//!   roofline-predicted seconds per SpMV (total idealized bytes /
+//!   HBM bandwidth). Free of wall-clock noise; no kernel runs.
+//! * [`TuneLevel::Measured`] — score = measured seconds per SpMV of a
+//!   real microbench probe of each candidate engine, capped by a time
+//!   **budget**: the default plan is always measured, further
+//!   candidates are probed only while the budget has room.
+//!
+//! Selection guarantee (ISSUE 3 acceptance): the default plan is the
+//! first scored candidate and is replaced only by a *strictly lower*
+//! score, so the tuned plan's score is never worse than the default's.
+
+use super::fingerprint::Fingerprint;
+use crate::api::EngineKind;
+use crate::gpu::device::GpuDevice;
+use crate::perfmodel;
+use crate::preprocess::cache_size::cache_plan;
+use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::runtime::json::{self, Json};
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+use crate::spmv::SpmvEngine;
+use crate::util::timer::bench_secs;
+use crate::util::Timer;
+use std::time::Duration;
+
+/// How hard to search (and how to score candidates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneLevel {
+    /// Rank candidates by the roofline-predicted time; no kernel runs.
+    Heuristic,
+    /// Time real microbench probes of each candidate, spending at most
+    /// `budget` wall-clock on the whole search (the default plan is
+    /// always probed; further candidates only while budget remains).
+    Measured { budget: Duration },
+}
+
+impl TuneLevel {
+    /// `Measured` with the default 250 ms search budget.
+    pub fn measured() -> Self {
+        TuneLevel::Measured { budget: Duration::from_millis(250) }
+    }
+
+    /// Tag stored in persisted plans ("heuristic" / "measured").
+    pub fn tag(&self) -> &'static str {
+        match self {
+            TuneLevel::Heuristic => "heuristic",
+            TuneLevel::Measured { .. } => "measured",
+        }
+    }
+}
+
+/// The winning plan — everything needed to rebuild the exact pipeline
+/// (engine kind + EHYB knobs) plus provenance for auditing. This is
+/// the unit the [`super::PlanStore`] persists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedPlan {
+    /// Concrete engine to run (never [`EngineKind::Auto`]).
+    pub engine: EngineKind,
+    pub slice_height: usize,
+    /// `Some(v)` pins `vec_size_override`; `None` keeps equations
+    /// (1)–(2) sizing (so the plan stays portable across device models
+    /// within one store key).
+    pub vec_size: Option<usize>,
+    pub ell_width_cutoff: Option<u32>,
+    /// Winner's score: seconds per SpMV (roofline-predicted or
+    /// measured, per `level`). Lower is better.
+    pub score_secs: f64,
+    /// The default plan's score under the same metric — always
+    /// `>= score_secs` (selection guarantee).
+    pub default_score_secs: f64,
+    /// "heuristic" | "measured".
+    pub level: String,
+    /// [`Fingerprint::key`] of the matrix this plan was tuned for.
+    pub fingerprint: String,
+    /// [`super::device_key`] of the device model used for sizing.
+    pub device: String,
+    /// Scalar tag ("f32"/"f64").
+    pub dtype: String,
+    /// [`super::config_key`] of the full base config the plan was
+    /// tuned under (seed knobs included — they define the default plan
+    /// the ≤-guarantee references). A cache hit is honored only when
+    /// it matches, so the recorded scores always describe the search
+    /// this build would have run.
+    pub base_config: String,
+    /// The search scope that produced this plan: the requested
+    /// [`EngineKind::name`] ("auto" searched every engine, "ehyb" only
+    /// the EHYB knobs, ...). Part of the store *filename*, so an
+    /// EHYB-only tune can never clobber the entry an `Auto` search
+    /// established (and vice versa).
+    pub scope: String,
+}
+
+/// Overlay the three tuned knobs onto a base config — THE single code
+/// path for turning (slice_height, vec_size, cutoff) into a
+/// `PreprocessConfig`: candidate scoring ([`Candidate::config`]) and
+/// plan-cache rebuilds ([`TunedPlan::apply`]) both come through here,
+/// so a warm start rebuilds exactly the configuration that was scored.
+fn knob_overlay(
+    base: &PreprocessConfig,
+    slice_height: usize,
+    vec_size: Option<usize>,
+    cutoff: Option<u32>,
+) -> PreprocessConfig {
+    PreprocessConfig {
+        slice_height,
+        vec_size_override: vec_size,
+        ell_width_cutoff: cutoff,
+        ..base.clone()
+    }
+}
+
+impl TunedPlan {
+    /// Overlay this plan's knobs onto a base preprocessing config
+    /// (see [`knob_overlay`] — shared with the tuner's own candidate
+    /// builds, so a cache round-trip rebuilds a byte-identical
+    /// `EhybMatrix`).
+    pub fn apply(&self, base: &PreprocessConfig) -> PreprocessConfig {
+        knob_overlay(base, self.slice_height, self.vec_size, self.ell_width_cutoff)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt_num = |v: Option<usize>| match v {
+            Some(v) => Json::Num(v as f64),
+            None => Json::Null,
+        };
+        json::obj([
+            ("version", Json::Num(1.0)),
+            ("engine", Json::Str(self.engine.name().into())),
+            ("slice_height", Json::Num(self.slice_height as f64)),
+            ("vec_size", opt_num(self.vec_size)),
+            ("ell_width_cutoff", opt_num(self.ell_width_cutoff.map(|c| c as usize))),
+            ("score_secs", Json::Num(self.score_secs)),
+            ("default_score_secs", Json::Num(self.default_score_secs)),
+            ("level", Json::Str(self.level.clone())),
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("device", Json::Str(self.device.clone())),
+            ("dtype", Json::Str(self.dtype.clone())),
+            ("base_config", Json::Str(self.base_config.clone())),
+            ("scope", Json::Str(self.scope.clone())),
+        ])
+    }
+
+    /// Whether a cached plan may serve a build that requested
+    /// `requested` at `level` under a base config with `config_key`:
+    ///
+    /// * an explicit engine request is never overridden (a plan whose
+    ///   winner is another engine is a miss);
+    /// * a measured plan serves both levels (it supersedes the
+    ///   heuristic model), a heuristic plan never serves a measured
+    ///   request — so `Measured` always gets real probes;
+    /// * the base config (seed knobs included) must match exactly —
+    ///   otherwise the cached search started from a different default
+    ///   plan and its scores do not describe this build.
+    pub fn usable_for(&self, requested: EngineKind, level: TuneLevel, config_key: &str) -> bool {
+        let kind_ok = requested == EngineKind::Auto || self.engine == requested;
+        let level_ok = self.level == level.tag() || self.level == "measured";
+        kind_ok && level_ok && self.base_config == config_key
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<TunedPlan> {
+        fn field<'a>(j: &'a Json, k: &str) -> crate::Result<&'a Json> {
+            j.get(k).ok_or_else(|| crate::EhybError::Parse(format!("tuned plan missing {k:?}")))
+        }
+        fn str_field(j: &Json, k: &str) -> crate::Result<String> {
+            Ok(field(j, k)?
+                .as_str()
+                .ok_or_else(|| crate::EhybError::Parse(format!("tuned plan field {k:?} not a string")))?
+                .to_string())
+        }
+        fn num_field(j: &Json, k: &str) -> crate::Result<f64> {
+            field(j, k)?
+                .as_f64()
+                .ok_or_else(|| crate::EhybError::Parse(format!("tuned plan field {k:?} not a number")))
+        }
+        fn opt_usize(j: &Json, k: &str) -> crate::Result<Option<usize>> {
+            match field(j, k)? {
+                Json::Null => Ok(None),
+                v => Ok(Some(v.as_usize().ok_or_else(|| {
+                    crate::EhybError::Parse(format!("tuned plan field {k:?} not a number"))
+                })?)),
+            }
+        }
+        let engine_name = str_field(j, "engine")?;
+        let engine = EngineKind::from_name(&engine_name).ok_or_else(|| {
+            crate::EhybError::Parse(format!("tuned plan has unknown engine {engine_name:?}"))
+        })?;
+        crate::ensure!(engine != EngineKind::Auto, "tuned plan engine must be concrete");
+        let plan = TunedPlan {
+            engine,
+            slice_height: num_field(j, "slice_height")? as usize,
+            vec_size: opt_usize(j, "vec_size")?,
+            ell_width_cutoff: opt_usize(j, "ell_width_cutoff")?.map(|c| c as u32),
+            score_secs: num_field(j, "score_secs")?,
+            default_score_secs: num_field(j, "default_score_secs")?,
+            level: str_field(j, "level")?,
+            fingerprint: str_field(j, "fingerprint")?,
+            device: str_field(j, "device")?,
+            dtype: str_field(j, "dtype")?,
+            base_config: str_field(j, "base_config")?,
+            scope: str_field(j, "scope")?,
+        };
+        // Range-validate before anything downstream trusts the knobs: a
+        // corrupted / hand-edited cache entry must surface as an error
+        // (treated as a miss by the facade), never as a panic inside
+        // `EhybPlan::build` on every warm start. The EHYB knob checks
+        // only apply to EHYB winners — baseline plans carry the base
+        // config's values verbatim, which may legitimately be
+        // EHYB-infeasible (that can be exactly why a baseline won).
+        if plan.engine == EngineKind::Ehyb {
+            crate::ensure!(
+                plan.slice_height >= 1 && plan.slice_height <= (1 << 16),
+                "tuned plan slice_height {} out of range",
+                plan.slice_height
+            );
+            if let Some(v) = plan.vec_size {
+                crate::ensure!(
+                    v >= plan.slice_height && v % plan.slice_height == 0 && v <= (1 << 16),
+                    "tuned plan vec_size {v} invalid for slice_height {}",
+                    plan.slice_height
+                );
+            }
+            if let Some(c) = plan.ell_width_cutoff {
+                crate::ensure!(c >= 1, "tuned plan ell_width_cutoff must be >= 1");
+            }
+        }
+        crate::ensure!(
+            plan.level == "heuristic" || plan.level == "measured",
+            "tuned plan has unknown level {:?}",
+            plan.level
+        );
+        Ok(plan)
+    }
+}
+
+/// One point in the search space.
+#[derive(Clone, Debug, PartialEq)]
+struct Candidate {
+    engine: EngineKind,
+    slice_height: usize,
+    vec_size: Option<usize>,
+    cutoff: Option<u32>,
+}
+
+impl Candidate {
+    fn baseline(kind: EngineKind, base: &PreprocessConfig) -> Candidate {
+        Candidate {
+            engine: kind,
+            slice_height: base.slice_height,
+            vec_size: base.vec_size_override,
+            cutoff: base.ell_width_cutoff,
+        }
+    }
+
+    fn ehyb_base(base: &PreprocessConfig) -> Candidate {
+        Candidate {
+            engine: EngineKind::Ehyb,
+            slice_height: base.slice_height,
+            vec_size: base.vec_size_override,
+            cutoff: base.ell_width_cutoff,
+        }
+    }
+
+    fn config(&self, base: &PreprocessConfig) -> PreprocessConfig {
+        knob_overlay(base, self.slice_height, self.vec_size, self.cutoff)
+    }
+}
+
+/// Result of one `tune` run: the winning plan, the already-built EHYB
+/// preprocessing output for it (when the winner is EHYB — so the facade
+/// never rebuilds what the search already paid for), and search stats.
+pub struct TuneOutcome<S: Scalar> {
+    pub plan: TunedPlan,
+    pub ehyb: Option<EhybPlan<S>>,
+    /// Candidates actually scored (the default plan is always one).
+    pub candidates_tried: usize,
+    /// Candidates skipped for any reason (budget exhausted or
+    /// infeasible config).
+    pub candidates_skipped: usize,
+    /// The subset of `candidates_skipped` shed purely because the
+    /// `Measured` budget ran out (always 0 for `Heuristic`).
+    pub budget_skipped: usize,
+    pub search_secs: f64,
+}
+
+impl<S: Scalar> TuneOutcome<S> {
+    /// Whether the search covered everything the budget allowed. A
+    /// budget-starved `Measured` run that probed only the default is
+    /// NOT a search result worth caching: persisting it would
+    /// permanently pin the unsearched default as the "measured
+    /// winner" for every later, better-budgeted request. Infeasible
+    /// candidates (e.g. partition failures) do not count against the
+    /// search — they can never score, so skipping them loses nothing.
+    pub fn searched(&self) -> bool {
+        self.candidates_tried > 1 || self.budget_skipped == 0
+    }
+}
+
+struct Scored<S: Scalar> {
+    cand: Candidate,
+    score: f64,
+    ehyb: Option<EhybPlan<S>>,
+}
+
+/// Search the plan space for `m` under `base`, honoring `requested`:
+///
+/// * [`EngineKind::Auto`] — search EHYB knob settings **and** every
+///   baseline engine;
+/// * [`EngineKind::Ehyb`] — tune the EHYB knobs (`slice_height`,
+///   `vec_size` against the shared-memory budget, ELL/ER width cutoff)
+///   with the base config as the default plan;
+/// * any other concrete kind — nothing to vary, the default plan is
+///   returned unchanged (tuning a fixed baseline is the identity).
+pub fn tune<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    requested: EngineKind,
+    level: TuneLevel,
+) -> crate::Result<TuneOutcome<S>> {
+    tune_with_fingerprint(m, base, requested, level, None)
+}
+
+/// [`tune`] with an optionally precomputed [`Fingerprint`]: the facade
+/// already hashes the matrix for its plan-cache lookup, and the
+/// structural hash is a full O(nnz) pass — recomputing it here would
+/// double that cost on every cached-capable build.
+pub fn tune_with_fingerprint<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    requested: EngineKind,
+    level: TuneLevel,
+    fingerprint: Option<Fingerprint>,
+) -> crate::Result<TuneOutcome<S>> {
+    search(m, base, requested, level, fingerprint, true)
+}
+
+/// Engine choice only — what implicit [`EngineKind::Auto`] (no
+/// `.tune(..)`) uses: score the base EHYB plan against the baseline
+/// bounds without the knob search, so an untouched `Auto` build pays
+/// one preprocessing pass exactly like the pre-tuner roofline
+/// comparison did. The full knob search stays opt-in via `.tune(..)`.
+///
+/// When `fingerprint` is `None` the O(nnz) hash is skipped too and the
+/// returned plan's `fingerprint` is an `unhashed-…` placeholder — do
+/// not persist such a plan (the facade never does).
+pub fn choose_engine<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    level: TuneLevel,
+    fingerprint: Option<Fingerprint>,
+) -> crate::Result<TuneOutcome<S>> {
+    search(m, base, EngineKind::Auto, level, fingerprint, false)
+}
+
+fn search<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    requested: EngineKind,
+    level: TuneLevel,
+    fingerprint: Option<Fingerprint>,
+    knob_variants: bool,
+) -> crate::Result<TuneOutcome<S>> {
+    let t0 = Timer::start();
+    let square = m.nrows() == m.ncols() && m.nrows() > 0;
+    // The fingerprint's O(nnz) hash is only needed to generate knob
+    // variants (row moments) or to key a persisted plan. Without a
+    // caller-supplied fingerprint (the facade passes one whenever a
+    // store exists), the light engine-choice path AND identity tunes
+    // of fixed baseline kinds — which generate no variants — skip the
+    // pass and record a placeholder; such plans are never persisted by
+    // the facade.
+    let generates_variants = knob_variants
+        && (requested == EngineKind::Ehyb || (requested == EngineKind::Auto && square));
+    let fp = match (fingerprint, generates_variants) {
+        (Some(fp), _) => Some(fp),
+        (None, true) => Some(Fingerprint::of(m)),
+        (None, false) => None,
+    };
+    let fp_key = fp
+        .as_ref()
+        .map(|f| f.key())
+        .unwrap_or_else(|| format!("unhashed-n{}-nnz{}", m.nrows(), m.nnz()));
+    // Roofline device for heuristic scoring: bounds are byte ratios, so
+    // any bandwidth-bound device ranks candidates identically; V100 is
+    // the paper's reference part (same convention the pre-tuner
+    // `EngineKind::Auto` used).
+    let dev = GpuDevice::v100();
+
+    let default_cand = match requested {
+        EngineKind::Auto if square => Candidate::ehyb_base(base),
+        EngineKind::Auto => Candidate::baseline(EngineKind::CsrScalar, base),
+        EngineKind::Ehyb => Candidate::ehyb_base(base),
+        concrete => Candidate::baseline(concrete, base),
+    };
+
+    let mut cands: Vec<Candidate> = Vec::new();
+    match requested {
+        EngineKind::Auto => {
+            if square && knob_variants {
+                // knob_variants implies fp is Some (see above).
+                cands.extend(ehyb_variants::<S>(base, fp.as_ref().expect("fingerprint")));
+            }
+            for k in EngineKind::ALL {
+                // Plain dense-width ELL can dwarf the matrix on
+                // power-law rows; never build (or even model) it as a
+                // candidate there — a measured probe would OOM.
+                if k == EngineKind::Ell && crate::api::ell_padding_excessive(m) {
+                    continue;
+                }
+                if k != EngineKind::Ehyb && k != default_cand.engine {
+                    cands.push(Candidate::baseline(k, base));
+                }
+            }
+        }
+        EngineKind::Ehyb => {
+            if knob_variants {
+                cands.extend(ehyb_variants::<S>(base, fp.as_ref().expect("fingerprint")));
+            }
+        }
+        _ => {}
+    }
+    cands.retain(|c| *c != default_cand);
+
+    // The default plan is always scored — even under a zero budget —
+    // so the tuner can never return something it didn't compare
+    // against. An error here (e.g. explicit EHYB on a non-square
+    // matrix) propagates, matching the untuned builder — except under
+    // `Auto`, where an infeasible EHYB default (partition failure, bad
+    // override) falls back to the CSR-scalar baseline, matching the
+    // pre-tuner `Auto` behaviour.
+    let mut best = match score_candidate::<S>(m, base, &default_cand, level, &dev) {
+        Ok(s) => s,
+        Err(_) if requested == EngineKind::Auto && default_cand.engine == EngineKind::Ehyb => {
+            cands.retain(|c| c.engine != EngineKind::Ehyb);
+            let fallback = Candidate::baseline(EngineKind::CsrScalar, base);
+            cands.retain(|c| *c != fallback);
+            score_candidate::<S>(m, base, &fallback, level, &dev)?
+        }
+        Err(e) => return Err(e),
+    };
+    let default_score = best.score;
+    let mut tried = 1usize;
+    let mut skipped = 0usize;
+    let mut budget_skipped = 0usize;
+    let budget = match level {
+        TuneLevel::Measured { budget } => Some(budget),
+        TuneLevel::Heuristic => None,
+    };
+    for c in &cands {
+        if let Some(b) = budget {
+            if t0.elapsed() >= b {
+                skipped += 1;
+                budget_skipped += 1;
+                continue;
+            }
+        }
+        match score_candidate::<S>(m, base, c, level, &dev) {
+            Ok(s) => {
+                tried += 1;
+                if s.score < best.score {
+                    best = s;
+                }
+            }
+            // Infeasible candidate (partition failure, bad override):
+            // not an error for the search, just not a contender.
+            Err(_) => skipped += 1,
+        }
+    }
+    debug_assert!(best.score <= default_score, "tuned {} > default {}", best.score, default_score);
+
+    Ok(TuneOutcome {
+        plan: TunedPlan {
+            engine: best.cand.engine,
+            slice_height: best.cand.slice_height,
+            vec_size: best.cand.vec_size,
+            ell_width_cutoff: best.cand.cutoff,
+            score_secs: best.score,
+            default_score_secs: default_score,
+            level: level.tag().to_string(),
+            fingerprint: fp_key,
+            device: super::device_key(&base.device),
+            dtype: S::NAME.to_string(),
+            base_config: super::config_key(base),
+            scope: requested.name().to_string(),
+        },
+        ehyb: best.ehyb,
+        candidates_tried: tried,
+        candidates_skipped: skipped,
+        budget_skipped,
+        search_secs: t0.elapsed_secs(),
+    })
+}
+
+/// EHYB knob variants around the base config: `vec_size` halvings and
+/// doubling against the shared-memory budget, a halved slice height,
+/// and ELL/ER width cutoffs placed from the row-length moments.
+fn ehyb_variants<S: Scalar>(base: &PreprocessConfig, fp: &Fingerprint) -> Vec<Candidate> {
+    let h = base.slice_height;
+    let v0 = base
+        .vec_size_override
+        .unwrap_or_else(|| cache_plan::<S>(fp.nrows, h, &base.device).vec_size);
+    let shm_rows = (base.device.shm_bytes / S::BYTES).max(h);
+    let clamp = |v: usize, h: usize| -> Option<usize> {
+        let mut v = (v / h).max(1) * h;
+        v = v.min(1 << 16);
+        while v > shm_rows && v > h {
+            v -= h;
+        }
+        Some(v)
+    };
+
+    let mut out: Vec<Candidate> = Vec::new();
+    let mut push = |c: Candidate| {
+        if !out.contains(&c) {
+            out.push(c);
+        }
+    };
+
+    // Cache-size sweep: fewer/more partitions against the scratchpad
+    // budget (the Akbudak et al. motivation: measured/ modeled cache
+    // behaviour, not a constant, picks the partition size).
+    for v in [v0 / 2, v0 * 2, v0 / 4] {
+        if let Some(v) = clamp(v, h) {
+            if v != v0 {
+                push(Candidate {
+                    engine: EngineKind::Ehyb,
+                    slice_height: h,
+                    vec_size: Some(v),
+                    cutoff: base.ell_width_cutoff,
+                });
+            }
+        }
+    }
+    // Halved slice height: shorter slices pad less on skewed rows.
+    // v0 is a multiple of h, hence of h/2.
+    if h >= 16 && h % 2 == 0 {
+        push(Candidate {
+            engine: EngineKind::Ehyb,
+            slice_height: h / 2,
+            vec_size: Some(v0),
+            cutoff: base.ell_width_cutoff,
+        });
+    }
+    // ELL/ER width cutoffs from the row histogram: clamp heavy rows a
+    // little above the mean, and above the mean + 2σ tail.
+    for c in [
+        fp.row_mean.ceil() as u32 + 1,
+        (fp.row_mean + 2.0 * fp.row_stddev).ceil() as u32 + 1,
+    ] {
+        if c >= 1 && (c as f64) < fp.row_max {
+            push(Candidate {
+                engine: EngineKind::Ehyb,
+                slice_height: h,
+                vec_size: base.vec_size_override,
+                cutoff: Some(c),
+            });
+        }
+    }
+    out
+}
+
+fn score_candidate<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    cand: &Candidate,
+    level: TuneLevel,
+    dev: &GpuDevice,
+) -> crate::Result<Scored<S>> {
+    if cand.engine == EngineKind::Ehyb {
+        let cfg = cand.config(base);
+        let plan = EhybPlan::build(m, &cfg)?;
+        let score = match level {
+            TuneLevel::Heuristic => perfmodel::ehyb_bound(&plan.matrix).predicted_secs(dev),
+            TuneLevel::Measured { .. } => {
+                let engine = crate::api::build_engine(EngineKind::Ehyb, m, Some(&plan));
+                measure_spmv(engine.as_ref(), m)
+            }
+        };
+        Ok(Scored { cand: cand.clone(), score, ehyb: Some(plan) })
+    } else {
+        let score = match level {
+            TuneLevel::Heuristic => baseline_predicted_secs(cand.engine, m, dev),
+            TuneLevel::Measured { .. } => {
+                let engine = crate::api::build_engine(cand.engine, m, None);
+                measure_spmv(engine.as_ref(), m)
+            }
+        };
+        Ok(Scored { cand: cand.clone(), score, ehyb: None })
+    }
+}
+
+/// Roofline-predicted seconds per SpMV for a baseline kind: ELL-family
+/// formats pay their fill ratio — dense-width for plain ELL, per-slice
+/// for SELL-P (one heavy row inflates its own 32-row slice, not the
+/// whole matrix) — everything else gets the CSR-family bound (HYB
+/// splits precisely to avoid ELL padding).
+fn baseline_predicted_secs<S: Scalar>(kind: EngineKind, m: &Csr<S>, dev: &GpuDevice) -> f64 {
+    let nnz = m.nnz();
+    match kind {
+        EngineKind::Ell => {
+            let fill =
+                if nnz == 0 { 1.0 } else { (m.max_row_nnz() * m.nrows()) as f64 / nnz as f64 };
+            perfmodel::ell_bound(m, fill.max(1.0)).predicted_secs(dev)
+        }
+        EngineKind::SellP => {
+            perfmodel::ell_bound(m, sellp_fill(m, 32)).predicted_secs(dev)
+        }
+        _ => perfmodel::csr_bound(m).predicted_secs(dev),
+    }
+}
+
+/// SELL-P fill ratio at slice height `h`: stored slots (each slice of
+/// `h` rows padded to its own max width) over logical nnz.
+fn sellp_fill<S: Scalar>(m: &Csr<S>, h: usize) -> f64 {
+    let nnz = m.nnz();
+    if nnz == 0 {
+        return 1.0;
+    }
+    let n = m.nrows();
+    let mut slots = 0usize;
+    let mut s = 0;
+    while s < n {
+        let end = (s + h).min(n);
+        let maxw = (s..end).map(|i| m.row_nnz(i)).max().unwrap_or(0);
+        slots += (end - s) * maxw;
+        s = end;
+    }
+    (slots as f64 / nnz as f64).max(1.0)
+}
+
+/// Deterministic-input microbench probe: mean seconds per `spmv` call.
+fn measure_spmv<S: Scalar>(engine: &dyn SpmvEngine<S>, m: &Csr<S>) -> f64 {
+    let x: Vec<S> =
+        (0..m.ncols()).map(|i| S::from_f64(((i * 13 + 7) % 17) as f64 * 0.25 - 2.0)).collect();
+    let mut y = vec![S::ZERO; m.nrows()];
+    bench_secs(|| engine.spmv(&x, &mut y), 3, Duration::from_millis(2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{circuit, poisson2d, unstructured_mesh};
+
+    fn cfg(v: usize) -> PreprocessConfig {
+        PreprocessConfig { vec_size_override: Some(v), ..Default::default() }
+    }
+
+    #[test]
+    fn heuristic_never_worse_than_default() {
+        for (name, m) in [
+            ("poisson", poisson2d::<f64>(24, 24)),
+            ("mesh", unstructured_mesh::<f64>(32, 32, 0.4, 5)),
+            ("circuit", circuit::<f64>(700, 4, 0.03, 9)),
+        ] {
+            for requested in [EngineKind::Ehyb, EngineKind::Auto] {
+                let out = tune(&m, &cfg(128), requested, TuneLevel::Heuristic).unwrap();
+                assert!(
+                    out.plan.score_secs <= out.plan.default_score_secs,
+                    "{name}/{requested:?}: {} > {}",
+                    out.plan.score_secs,
+                    out.plan.default_score_secs
+                );
+                assert!(out.candidates_tried >= 1);
+                assert_ne!(out.plan.engine, EngineKind::Auto);
+            }
+        }
+    }
+
+    #[test]
+    fn measured_never_worse_than_default() {
+        let m = unstructured_mesh::<f64>(24, 24, 0.4, 7);
+        let out = tune(&m, &cfg(64), EngineKind::Ehyb, TuneLevel::measured()).unwrap();
+        assert!(out.plan.score_secs <= out.plan.default_score_secs);
+        assert_eq!(out.plan.level, "measured");
+        assert!(out.ehyb.is_some());
+    }
+
+    #[test]
+    fn zero_budget_probes_only_the_default() {
+        let m = unstructured_mesh::<f64>(24, 24, 0.4, 7);
+        let out = tune(
+            &m,
+            &cfg(64),
+            EngineKind::Ehyb,
+            TuneLevel::Measured { budget: Duration::ZERO },
+        )
+        .unwrap();
+        // Budget respected: the default is the only scored candidate,
+        // everything else was shed on budget.
+        assert_eq!(out.candidates_tried, 1);
+        assert!(out.candidates_skipped > 0, "no candidates existed to skip");
+        assert_eq!(out.budget_skipped, out.candidates_skipped);
+        assert!(!out.searched(), "a budget-starved run must not present as a search");
+        assert_eq!(out.plan.score_secs, out.plan.default_score_secs);
+        // The winner under a zero budget IS the default plan.
+        assert_eq!(out.plan.engine, EngineKind::Ehyb);
+        assert_eq!(out.plan.vec_size, Some(64));
+    }
+
+    #[test]
+    fn generous_budget_probes_more_candidates() {
+        let m = poisson2d::<f64>(16, 16);
+        let out = tune(
+            &m,
+            &cfg(64),
+            EngineKind::Ehyb,
+            TuneLevel::Measured { budget: Duration::from_secs(30) },
+        )
+        .unwrap();
+        assert!(out.candidates_tried > 1, "tried {}", out.candidates_tried);
+    }
+
+    #[test]
+    fn concrete_baseline_kind_is_identity() {
+        let m = poisson2d::<f64>(16, 16);
+        let out = tune(&m, &cfg(64), EngineKind::Merge, TuneLevel::Heuristic).unwrap();
+        assert_eq!(out.plan.engine, EngineKind::Merge);
+        assert_eq!(out.candidates_tried, 1);
+        assert_eq!(out.plan.score_secs, out.plan.default_score_secs);
+    }
+
+    #[test]
+    fn auto_on_non_square_never_picks_ehyb() {
+        use crate::sparse::coo::Coo;
+        let mut coo = Coo::<f64>::new(4, 6);
+        for i in 0..4 {
+            coo.push(i, i, 1.0);
+        }
+        let out = tune(&coo.to_csr(), &PreprocessConfig::default(), EngineKind::Auto, TuneLevel::Heuristic)
+            .unwrap();
+        assert_ne!(out.plan.engine, EngineKind::Ehyb);
+        assert!(out.ehyb.is_none());
+    }
+
+    #[test]
+    fn sellp_fill_not_punished_by_one_hub_row() {
+        use crate::sparse::coo::Coo;
+        let n = 320;
+        let mut coo = Coo::<f64>::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 1.0);
+        }
+        for j in 1..200 {
+            coo.push(0, j, 0.5);
+        }
+        let m = coo.to_csr();
+        let dense_fill = (m.max_row_nnz() * m.nrows()) as f64 / m.nnz() as f64;
+        let sliced = sellp_fill(&m, 32);
+        // The hub row inflates only its own slice, not the whole format.
+        assert!(sliced >= 1.0);
+        assert!(sliced < dense_fill / 5.0, "sliced {sliced} vs dense {dense_fill}");
+        // And the heuristic ranks SELL-P strictly ahead of plain ELL here.
+        let dev = GpuDevice::v100();
+        assert!(
+            baseline_predicted_secs(EngineKind::SellP, &m, &dev)
+                < baseline_predicted_secs(EngineKind::Ell, &m, &dev)
+        );
+    }
+
+    #[test]
+    fn choose_engine_scores_only_the_base_ehyb_plan() {
+        let m = poisson2d::<f64>(16, 16);
+        let out = choose_engine(&m, &cfg(64), TuneLevel::Heuristic, None).unwrap();
+        assert_ne!(out.plan.engine, EngineKind::Auto);
+        // No knob variants: an EHYB winner is the base plan itself.
+        if out.plan.engine == EngineKind::Ehyb {
+            assert_eq!(out.plan.vec_size, Some(64));
+            assert_eq!(out.plan.slice_height, 32);
+            assert_eq!(out.plan.ell_width_cutoff, None);
+        }
+        // Only the default and the baselines can have been scored.
+        assert!(out.candidates_tried <= EngineKind::ALL.len());
+    }
+
+    #[test]
+    fn auto_with_infeasible_ehyb_falls_back_to_baseline() {
+        // vec_size 48 is not a multiple of slice_height 32, so every
+        // EHYB build fails; Auto must still tune (pre-tuner `Auto`
+        // silently fell back too), explicit Ehyb must error.
+        let m = poisson2d::<f64>(16, 16);
+        let bad = cfg(48);
+        let out = tune(&m, &bad, EngineKind::Auto, TuneLevel::Heuristic).unwrap();
+        assert_ne!(out.plan.engine, EngineKind::Ehyb);
+        assert!(out.ehyb.is_none());
+        assert!(tune(&m, &bad, EngineKind::Ehyb, TuneLevel::Heuristic).is_err());
+    }
+
+    fn sample_plan() -> TunedPlan {
+        TunedPlan {
+            engine: EngineKind::Ehyb,
+            slice_height: 32,
+            vec_size: Some(96),
+            ell_width_cutoff: Some(5),
+            score_secs: 1.25e-4,
+            default_score_secs: 2.5e-4,
+            level: "heuristic".into(),
+            fingerprint: "abc-n100-nnz500".into(),
+            device: "p80-shm98304".into(),
+            dtype: "f64".into(),
+            base_config: "sd1-Multilevel-r4-c8-s9e3779b9".into(),
+            scope: "ehyb".into(),
+        }
+    }
+
+    #[test]
+    fn tuned_plan_json_roundtrip() {
+        let plan = sample_plan();
+        let back = TunedPlan::from_json(&Json::parse(&plan.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, plan);
+        // None fields round-trip through JSON null.
+        let plan2 = TunedPlan { vec_size: None, ell_width_cutoff: None, ..plan };
+        let back2 = TunedPlan::from_json(&Json::parse(&plan2.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back2, plan2);
+    }
+
+    #[test]
+    fn malformed_plan_json_is_a_parse_error() {
+        let j = Json::parse(r#"{"engine": "warp-drive"}"#).unwrap();
+        assert!(matches!(
+            TunedPlan::from_json(&j),
+            Err(crate::EhybError::Parse(_))
+        ));
+    }
+
+    #[test]
+    fn out_of_range_plan_json_is_an_error_not_a_panic() {
+        // slice_height 0 (or an incompatible vec_size) in a corrupted
+        // cache entry must be rejected at parse time — adopting it
+        // would divide by zero inside EhybPlan::build on every warm
+        // start.
+        for (k, v) in [("slice_height", "0"), ("vec_size", "48"), ("ell_width_cutoff", "0")] {
+            let mut j = sample_plan().to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert(k.to_string(), Json::parse(v).unwrap());
+            }
+            assert!(TunedPlan::from_json(&j).is_err(), "field {k}={v} accepted");
+        }
+        let mut j = sample_plan().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("level".into(), Json::Str("vibes".into()));
+        }
+        assert!(TunedPlan::from_json(&j).is_err());
+        // Baseline winners carry base-config values verbatim, which may
+        // be EHYB-infeasible (e.g. the Auto fallback after an
+        // infeasible override) — they must still load.
+        let baseline = TunedPlan {
+            engine: EngineKind::CsrScalar,
+            vec_size: Some(48), // not a multiple of slice_height 32
+            scope: "auto".into(),
+            ..sample_plan()
+        };
+        let back = TunedPlan::from_json(&Json::parse(&baseline.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, baseline);
+    }
+
+    #[test]
+    fn usable_for_honors_kind_level_and_config() {
+        let heuristic = sample_plan();
+        let key = heuristic.base_config.clone();
+        // Kind: explicit requests are never overridden; Auto takes any.
+        assert!(heuristic.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, &key));
+        assert!(heuristic.usable_for(EngineKind::Auto, TuneLevel::Heuristic, &key));
+        let baseline = TunedPlan { engine: EngineKind::CsrScalar, ..sample_plan() };
+        assert!(!baseline.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, &key));
+        assert!(baseline.usable_for(EngineKind::Auto, TuneLevel::Heuristic, &key));
+        // Level: measured supersedes heuristic, never the reverse.
+        assert!(!heuristic.usable_for(EngineKind::Ehyb, TuneLevel::measured(), &key));
+        let measured = TunedPlan { level: "measured".into(), ..sample_plan() };
+        assert!(measured.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, &key));
+        assert!(measured.usable_for(EngineKind::Ehyb, TuneLevel::measured(), &key));
+        // Base config must match exactly.
+        assert!(!heuristic.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, "sd0-other"));
+    }
+
+    #[test]
+    fn ehyb_variants_are_feasible_and_distinct() {
+        let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+        let fp = Fingerprint::of(&m);
+        let base = cfg(128);
+        let variants = ehyb_variants::<f64>(&base, &fp);
+        assert!(!variants.is_empty());
+        for (i, c) in variants.iter().enumerate() {
+            assert_eq!(c.engine, EngineKind::Ehyb);
+            // Every variant must build.
+            EhybPlan::build(&m, &c.config(&base))
+                .unwrap_or_else(|e| panic!("variant {c:?} infeasible: {e}"));
+            assert!(!variants[..i].contains(c), "duplicate candidate {c:?}");
+        }
+    }
+}

@@ -142,6 +142,9 @@ pub struct ServiceMetrics {
     /// per fused call plus `2 · nrows · sizeof(S)` per request (x in,
     /// y out) — the quantity request fusion amortizes.
     pub bytes_moved: AtomicU64,
+    /// Requests shed because the bounded queue was full
+    /// (`EhybError::Overloaded`) — recorded client-side at submit.
+    pub shed: AtomicU64,
 }
 
 impl Default for ServiceMetrics {
@@ -158,6 +161,7 @@ impl ServiceMetrics {
             spmv_latency: LatencyHistogram::new(),
             batch_width: WidthHistogram::new(),
             bytes_moved: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
         }
     }
 

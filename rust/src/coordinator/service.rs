@@ -12,6 +12,13 @@
 //! side), replies reuse that same allocation for the output, and the
 //! two batch buffers persist across drains — steady state does zero
 //! per-request allocation.
+//!
+//! The request queue is **bounded** (a `sync_channel` of depth
+//! `queue_bound`, default [`DEFAULT_QUEUE_BOUND`]): when producers
+//! outrun the engine, submissions beyond the bound are **shed** with a
+//! typed [`EhybError::Overloaded`] instead of growing an unbounded
+//! backlog — latency stays bounded and callers get an explicit signal
+//! to back off (counted in [`ServiceMetrics::shed`]).
 
 use super::metrics::ServiceMetrics;
 use crate::api::batch::{VecBatch, VecBatchMut};
@@ -20,6 +27,12 @@ use crate::sparse::scalar::Scalar;
 use crate::util::Timer;
 use std::sync::mpsc;
 use std::sync::Arc;
+
+/// Request-queue depth used by the convenience entry points
+/// ([`SpmvService::spawn`], `SpmvContext::serve`). Large enough that
+/// well-behaved workloads never shed, small enough to bound queueing
+/// latency; pick explicitly via `spawn_bounded` / `serve_bounded`.
+pub const DEFAULT_QUEUE_BOUND: usize = 1024;
 
 /// The batched kernel a service thread runs per drain:
 /// `ys.col(b) = A xs.col(b)`. Built inside the service thread (so it
@@ -33,27 +46,82 @@ enum Msg<S> {
 
 /// Handle to a running SpMV service. Clone-able; each clone can submit.
 pub struct SpmvClient<S> {
-    tx: mpsc::Sender<Msg<S>>,
+    tx: mpsc::SyncSender<Msg<S>>,
     nrows: usize,
+    queue_bound: usize,
+    metrics: Arc<ServiceMetrics>,
 }
 
 impl<S> Clone for SpmvClient<S> {
     fn clone(&self) -> Self {
-        Self { tx: self.tx.clone(), nrows: self.nrows }
+        Self {
+            tx: self.tx.clone(),
+            nrows: self.nrows,
+            queue_bound: self.queue_bound,
+            metrics: self.metrics.clone(),
+        }
     }
 }
 
 impl<S: Scalar> SpmvClient<S> {
     /// Synchronous SpMV round-trip through the service. Takes `x` by
     /// value — the allocation travels to the service and comes back as
-    /// the reply buffer, so the round-trip copies nothing.
+    /// the reply buffer, so the round-trip copies nothing. Sheds with
+    /// [`EhybError::Overloaded`] when the bounded queue is full.
     pub fn spmv(&self, x: Vec<S>) -> crate::Result<Vec<S>> {
         let rx = self.submit(x)?;
         rx.recv().map_err(|_| EhybError::ServiceStopped)
     }
 
     /// Fire-and-forget submit; returns the receiver for the result.
+    /// Non-blocking: a full request queue sheds the request with
+    /// [`EhybError::Overloaded`] (recorded in
+    /// [`ServiceMetrics::shed`]) — back off and retry, or route the
+    /// request to another replica. Use [`Self::try_submit`] to get the
+    /// input buffer back on shed (no reallocation per retry), or
+    /// [`Self::submit_blocking`] to wait for queue space instead.
     pub fn submit(&self, x: Vec<S>) -> crate::Result<mpsc::Receiver<Vec<S>>> {
+        self.try_submit(x).map_err(|(e, _)| e)
+    }
+
+    /// [`Self::submit`] that hands the input allocation back alongside
+    /// the error when the request is not accepted, so an overloaded
+    /// caller can retry without reallocating (the zero-copy story
+    /// holds across sheds).
+    pub fn try_submit(
+        &self,
+        x: Vec<S>,
+    ) -> std::result::Result<mpsc::Receiver<Vec<S>>, (EhybError, Vec<S>)> {
+        if x.len() != self.nrows {
+            let e = EhybError::DimensionMismatch {
+                what: "service request x",
+                expected: self.nrows,
+                got: x.len(),
+            };
+            return Err((e, x));
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        match self.tx.try_send(Msg::Spmv { x, reply: reply_tx }) {
+            Ok(()) => Ok(reply_rx),
+            Err(mpsc::TrySendError::Full(Msg::Spmv { x, .. })) => {
+                use std::sync::atomic::Ordering;
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err((EhybError::Overloaded { queue_depth: self.queue_bound }, x))
+            }
+            Err(mpsc::TrySendError::Disconnected(Msg::Spmv { x, .. })) => {
+                Err((EhybError::ServiceStopped, x))
+            }
+            // try_send returns back exactly the message we passed in.
+            Err(_) => unreachable!("submitted a Spmv message"),
+        }
+    }
+
+    /// Submit that *waits* for queue space instead of shedding — the
+    /// right entry point for client-side batching ([`Self::spmv_many`])
+    /// where the caller intends every request to run: backpressure
+    /// becomes blocking, not an error. Still fails with
+    /// [`EhybError::ServiceStopped`] if the service is gone.
+    pub fn submit_blocking(&self, x: Vec<S>) -> crate::Result<mpsc::Receiver<Vec<S>>> {
         if x.len() != self.nrows {
             return Err(EhybError::DimensionMismatch {
                 what: "service request x",
@@ -66,12 +134,20 @@ impl<S: Scalar> SpmvClient<S> {
         Ok(reply_rx)
     }
 
+    /// The configured request-queue bound (requests beyond it shed).
+    pub fn queue_bound(&self) -> usize {
+        self.queue_bound
+    }
+
     /// Multi-RHS round-trip: submit every vector first, then collect —
     /// the submissions queue together, so the service fuses them into
-    /// (at most a few) batched kernel calls.
+    /// (at most a few) batched kernel calls. Uses
+    /// [`Self::submit_blocking`]: a batch wider than the queue bound
+    /// waits for the service to drain rather than shedding its own
+    /// tail mid-flight.
     pub fn spmv_many(&self, xs: Vec<Vec<S>>) -> crate::Result<Vec<Vec<S>>> {
         let rxs: Vec<_> =
-            xs.into_iter().map(|x| self.submit(x)).collect::<crate::Result<Vec<_>>>()?;
+            xs.into_iter().map(|x| self.submit_blocking(x)).collect::<crate::Result<Vec<_>>>()?;
         rxs.into_iter().map(|rx| rx.recv().map_err(|_| EhybError::ServiceStopped)).collect()
     }
 
@@ -93,12 +169,29 @@ impl<S: Scalar> SpmvService<S> {
     /// SpMV kernel plus the format's device-memory bytes (for the
     /// bytes-moved metric). `max_batch` bounds how many pending
     /// requests one drain fuses. Requests carry square-system vectors
-    /// of length `nrows`.
+    /// of length `nrows`. The request queue is bounded at
+    /// [`DEFAULT_QUEUE_BOUND`]; see [`Self::spawn_bounded`].
     pub fn spawn<F>(make_engine: F, nrows: usize, max_batch: usize) -> crate::Result<Self>
     where
         F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
-        let (tx, rx) = mpsc::channel::<Msg<S>>();
+        Self::spawn_bounded(make_engine, nrows, max_batch, DEFAULT_QUEUE_BOUND)
+    }
+
+    /// [`Self::spawn`] with an explicit request-queue bound (clamped to
+    /// ≥ 1): at most `queue_bound` requests wait between drains;
+    /// further submissions shed with [`EhybError::Overloaded`].
+    pub fn spawn_bounded<F>(
+        make_engine: F,
+        nrows: usize,
+        max_batch: usize,
+        queue_bound: usize,
+    ) -> crate::Result<Self>
+    where
+        F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
+    {
+        let queue_bound = queue_bound.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Msg<S>>(queue_bound);
         let metrics = Arc::new(ServiceMetrics::new());
         let metrics_thread = metrics.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
@@ -151,7 +244,11 @@ impl<S: Scalar> SpmvService<S> {
             }
         })?;
         ready_rx.recv().map_err(|_| EhybError::ServiceStopped)??;
-        Ok(Self { client: SpmvClient { tx, nrows }, metrics, handle: Some(handle) })
+        Ok(Self {
+            client: SpmvClient { tx, nrows, queue_bound, metrics: metrics.clone() },
+            metrics,
+            handle: Some(handle),
+        })
     }
 
     pub fn client(&self) -> SpmvClient<S> {
@@ -368,6 +465,107 @@ mod tests {
             other => panic!("expected ServiceStopped, got {other:?}"),
         }
         assert!(matches!(client.submit(vec![0.0; 256]), Err(EhybError::ServiceStopped)));
+    }
+
+    #[test]
+    fn full_queue_sheds_with_overloaded() {
+        // Deterministic overload: the kernel signals entry and then
+        // blocks on a gate, so the test controls exactly when the
+        // single queue slot frees up.
+        let (ctx, _) = context();
+        let engine = ctx.engine_arc();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let svc: SpmvService<f64> = SpmvService::spawn_bounded(
+            move || {
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                    started_tx.send(()).unwrap();
+                    gate_rx.recv().unwrap();
+                    engine.spmv_batch(xs, ys)
+                });
+                Ok((kernel, fb))
+            },
+            256,
+            16,
+            1, // queue bound: one waiter
+        )
+        .unwrap();
+        let client = svc.client();
+        assert_eq!(client.queue_bound(), 1);
+        // r1 is popped by the service thread and blocks inside the
+        // kernel (wait for the signal so this is not racy)...
+        let rx1 = client.submit(vec![1.0; 256]).unwrap();
+        started_rx.recv().unwrap();
+        // ...r2 occupies the single queue slot...
+        let rx2 = client.submit(vec![2.0; 256]).unwrap();
+        // ...and r3 must shed with the typed error, handing the input
+        // allocation back for a reallocation-free retry.
+        match client.try_submit(vec![3.0; 256]) {
+            Err((EhybError::Overloaded { queue_depth: 1 }, x3)) => {
+                assert_eq!(x3.len(), 256);
+                assert!(x3.iter().all(|&v| v == 3.0), "shed must return the caller's buffer");
+            }
+            other => panic!("expected Overloaded, got {:?}", other.map(|_| ())),
+        }
+        match client.submit(vec![3.0; 256]) {
+            Err(EhybError::Overloaded { queue_depth: 1 }) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(svc.metrics.shed.load(Ordering::Relaxed), 2);
+        // Release the gate (once per drain: r1's batch, then r2's) and
+        // the accepted requests complete normally.
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        assert_eq!(rx1.recv().unwrap().len(), 256);
+        assert_eq!(rx2.recv().unwrap().len(), 256);
+        drop(gate_tx); // further drains (shutdown path) must not block
+    }
+
+    #[test]
+    fn spmv_many_wider_than_queue_bound_succeeds() {
+        // Client-side batching blocks on backpressure instead of
+        // shedding its own tail: 16 RHS through a queue bounded at 2
+        // must all complete correctly.
+        let (ctx, a) = context();
+        let engine = ctx.engine_arc();
+        let svc: SpmvService<f64> = SpmvService::spawn_bounded(
+            move || {
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+                Ok((kernel, fb))
+            },
+            256,
+            4,
+            2,
+        )
+        .unwrap();
+        let client = svc.client();
+        let xs: Vec<Vec<f64>> = (0..16)
+            .map(|t| (0..256).map(|i| ((i * 3 + t * 7) % 13) as f64 * 0.5 - 3.0).collect())
+            .collect();
+        let ys = client.spmv_many(xs.clone()).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 256];
+            a.spmv(x, &mut want);
+            for i in 0..256 {
+                assert!((y[i] - want[i]).abs() < 1e-12);
+            }
+        }
+        assert_eq!(svc.metrics.shed.load(Ordering::Relaxed), 0, "blocking path must not shed");
+    }
+
+    #[test]
+    fn default_bound_large_enough_for_serial_use() {
+        let (svc, a) = service();
+        let client = svc.client();
+        assert_eq!(client.queue_bound(), DEFAULT_QUEUE_BOUND);
+        let x: Vec<f64> = (0..256).map(|i| (i % 7) as f64).collect();
+        let y = client.spmv(x.clone()).unwrap();
+        let mut want = vec![0.0; 256];
+        a.spmv(&x, &mut want);
+        assert_eq!(y, want);
+        assert_eq!(svc.metrics.shed.load(Ordering::Relaxed), 0);
     }
 
     #[test]

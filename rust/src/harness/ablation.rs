@@ -1,7 +1,10 @@
 //! Ablations (DESIGN.md §7): isolate each design choice the paper
-//! motivates and measure its contribution on the simulator.
+//! motivates and measure its contribution on the simulator — plus the
+//! ISSUE 3 tuning ablation (default vs. heuristic vs. measured plan).
 
 use super::runner::ehyb_context;
+use crate::api::{EngineKind, SpmvContext};
+use crate::autotune::TuneLevel;
 use crate::gpu::{kernels, simulate, GpuDevice};
 use crate::partition::{PartitionConfig, PartitionMethod};
 use crate::preprocess::PreprocessConfig;
@@ -120,6 +123,51 @@ pub fn vecsize_sweep<S: Scalar>(
     Ok(rows)
 }
 
+/// ISSUE 3: the tuning ablation — the EHYB plan as configured
+/// (default), autotuned by the roofline model (heuristic), and
+/// autotuned by measured probes — each simulated on the same device.
+/// The variant label records the knobs the tuner landed on, so the
+/// report shows *what* changed, not just by how much.
+pub fn tuning_ablation<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    dev: &GpuDevice,
+) -> crate::Result<Vec<AblationRow>> {
+    let variants: [(&str, Option<TuneLevel>); 3] = [
+        ("default", None),
+        ("tuned-heuristic", Some(TuneLevel::Heuristic)),
+        ("tuned-measured", Some(TuneLevel::measured())),
+    ];
+    let mut rows = Vec::new();
+    for (name, level) in variants {
+        // Fresh search per variant: an ablation must not read cached
+        // plans (a measured entry would silently serve the heuristic
+        // row) nor write into the user's EHYB_TUNE_DIR cache.
+        let mut b = SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(base.clone())
+            .no_plan_cache();
+        if let Some(level) = level {
+            b = b.tune(level);
+        }
+        let ctx = b.build()?;
+        let plan = ctx.plan().expect("EHYB context carries a plan");
+        let r = simulate(&kernels::ehyb(&plan.matrix, dev, true, true), dev);
+        rows.push(AblationRow {
+            variant: format!(
+                "{name} (vec_size={}, h={}, cutoff={:?})",
+                plan.matrix.vec_size,
+                plan.matrix.slice_height,
+                ctx.config().ell_width_cutoff
+            ),
+            gflops: r.gflops,
+            er_fraction: plan.matrix.er_fraction(),
+            ell_fill: plan.matrix.ell_fill_ratio(),
+        });
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +216,18 @@ mod tests {
         let rows = vecsize_sweep(&m, &cfg, &dev, &[64, 128, 256, 512]).unwrap();
         assert!(rows.len() >= 3);
         assert!(rows.iter().all(|r| r.gflops > 0.0));
+    }
+
+    #[test]
+    fn tuning_ablation_has_three_variants() {
+        let (m, cfg, dev) = setup();
+        let rows = tuning_ablation(&m, &cfg, &dev).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].variant.starts_with("default"));
+        assert!(rows[1].variant.starts_with("tuned-heuristic"));
+        assert!(rows[2].variant.starts_with("tuned-measured"));
+        assert!(rows.iter().all(|r| r.gflops > 0.0));
+        // Every variant records the knobs it ran with.
+        assert!(rows.iter().all(|r| r.variant.contains("vec_size=")));
     }
 }

@@ -9,7 +9,8 @@
 //!   Figure 6 preprocessing decomposition.
 //! * [`ablation`] — DESIGN.md §7: explicit-cache on/off, u16/u32
 //!   columns, partitioner quality, descending-sort on/off, VecSize (K)
-//!   sweep.
+//!   sweep, plus the autotuning ablation (default vs heuristic vs
+//!   measured plan — ISSUE 3).
 //! * [`report`] — markdown / CSV emission.
 
 pub mod suite;

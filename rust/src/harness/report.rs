@@ -81,12 +81,12 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
     let _ = writeln!(s, "### {title}\n");
     let _ = writeln!(
         s,
-        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p99 (ms) |"
+        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p99 (ms) | shed |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|");
     let _ = writeln!(
         s,
-        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} |",
+        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {} |",
         m.requests.load(Ordering::Relaxed),
         m.batches.load(Ordering::Relaxed),
         m.batch_width.mean(),
@@ -94,6 +94,7 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
         m.bytes_moved.load(Ordering::Relaxed),
         1e3 * m.spmv_latency.mean_secs(),
         1e3 * m.spmv_latency.quantile_secs(0.99),
+        m.shed.load(Ordering::Relaxed),
     );
     let _ = write!(s, "\nbatch widths:");
     for i in 0..m.batch_width.num_buckets() {
@@ -162,9 +163,11 @@ mod tests {
         m.batch_width.record(4);
         m.batch_width.record(4);
         m.bytes_moved.fetch_add(1024, Ordering::Relaxed);
+        m.shed.fetch_add(2, Ordering::Relaxed);
         m.spmv_latency.record(0.002);
         let md = service_markdown("Service", &m);
         assert!(md.contains("| 12 | 3 | 4.00 | 4 | 1024 |"), "{md}");
+        assert!(md.contains("| 2 |\n"), "shed column missing: {md}");
         assert!(md.contains("batch widths: 4+:3"), "{md}");
     }
 

@@ -145,15 +145,29 @@ pub fn measure_prep_ratio_cpu<S: Scalar>(
 }
 
 /// Wall-clock benchmark of the CPU engines (used by the hotpath bench
-/// and the §Perf iteration log).
+/// and the §Perf iteration log). The sweep builds one [`SpmvContext`]
+/// per [`EngineKind`] — the crate's single engine-construction path
+/// (the old `spmv::registry` is retired).
 pub fn bench_cpu_engines<S: Scalar>(
     m: &Csr<S>,
     cfg: &PreprocessConfig,
 ) -> crate::Result<Vec<(String, f64)>> {
-    let (engines, _plan) = crate::spmv::registry::all_engines(m, cfg)?;
     let x = vec![S::ONE; m.nrows()];
     let mut out = Vec::new();
-    for e in &engines {
+    // One context at a time (each owns a matrix clone + the engine's
+    // format copy): building the whole `api::all_contexts` vector up
+    // front would hold |ALL| clones of a possibly-large CSR alive at
+    // once for no benefit here.
+    for kind in EngineKind::ALL {
+        // Plain dense-width ELL allocates nrows×max_row_nnz slots — on
+        // power-law matrices that dwarfs the matrix itself (the old
+        // registry sweep omitted plain ELL entirely). Skip it rather
+        // than abort the whole sweep.
+        if kind == EngineKind::Ell && crate::api::ell_padding_excessive(m) {
+            continue;
+        }
+        let ctx = SpmvContext::builder(m.clone()).engine(kind).config(cfg.clone()).build()?;
+        let e = ctx.engine();
         let mut y = vec![S::ZERO; e.nrows()];
         let secs = crate::util::timer::bench_secs(
             || e.spmv(&x, &mut y),
@@ -208,7 +222,27 @@ mod tests {
     fn cpu_engines_benchable() {
         let m = poisson3d::<f64>(6, 6, 6);
         let rows = bench_cpu_engines(&m, &cfg(64)).unwrap();
-        assert_eq!(rows.len(), 7);
+        // One row per concrete EngineKind (EHYB + seven baselines).
+        assert_eq!(rows.len(), EngineKind::ALL.len());
         assert!(rows.iter().all(|(_, g)| *g > 0.0));
+    }
+
+    #[test]
+    fn cpu_engines_skip_plain_ell_on_power_law_rows() {
+        use crate::sparse::coo::Coo;
+        // One near-dense row: dense-width ELL would allocate ~4.5M
+        // slots for 4.5k nonzeros; the sweep must skip it, not abort.
+        let n = 3000;
+        let mut coo = Coo::<f64>::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+        }
+        for j in 1..1500 {
+            coo.push(0, j, 0.5);
+        }
+        let rows = bench_cpu_engines(&coo.to_csr(), &cfg(96)).unwrap();
+        assert_eq!(rows.len(), EngineKind::ALL.len() - 1);
+        assert!(rows.iter().all(|(name, _)| name != "ell"));
+        assert!(rows.iter().any(|(name, _)| name == "sellp"), "sliced formats stay in");
     }
 }

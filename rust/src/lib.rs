@@ -33,7 +33,7 @@
 //! // runtime libs in this offline image; the same flow is executed by
 //! // rust/tests/integration.rs and rust/tests/api.rs.)
 //! use ehyb::sparse::gen::poisson2d;
-//! use ehyb::{BatchBuf, EngineKind, SpmvContext};
+//! use ehyb::{BatchBuf, EngineKind, SpmvContext, TuneLevel};
 //!
 //! let m = poisson2d::<f64>(32, 32); // 1024x1024 5-point stencil, CSR
 //! let n = m.nrows();
@@ -65,18 +65,42 @@
 //! }
 //!
 //! // The same handle spawns the request-fusing service and drives the
-//! // iterative solvers:
+//! // iterative solvers. The service queue is bounded: submissions past
+//! // the bound shed with `EhybError::Overloaded` instead of growing an
+//! // unbounded backlog (`serve_bounded` picks the bound explicitly).
 //! let svc = ctx.serve(16)?; // SpmvService; svc.client().spmv(x) round-trips
 //! let pre = ehyb::coordinator::Jacobi::new(ctx.matrix());
 //! let cfg = ehyb::coordinator::SolverConfig::default();
 //! let (sol, report) = ctx.solver().cg(&x, None, &pre, &cfg)?;
 //! assert_eq!(sol.len(), n);
 //! drop((svc, report));
+//!
+//! // OSKI-style autotuning: search the EHYB plan knobs (slice height,
+//! // partition size vs. the scratchpad budget, ELL/ER width cutoff).
+//! // Add `.plan_cache(dir)` (or set EHYB_TUNE_DIR) to persist the
+//! // winner — keyed by matrix fingerprint x device x dtype x search
+//! // scope — so a restarted process warm-starts with zero search.
+//! let m2 = poisson2d::<f64>(32, 32);
+//! let tuned = SpmvContext::builder(m2)
+//!     .engine(EngineKind::Auto)              // also searches engine kind
+//!     .tune(TuneLevel::measured())           // or TuneLevel::Heuristic
+//!     .build()?;
+//! let plan = tuned.tuned().expect("tuner-routed build");
+//! assert!(plan.score_secs <= plan.default_score_secs); // never worse
 //! # Ok::<(), ehyb::EhybError>(())
 //! ```
 //!
 //! ## Tuning
 //!
+//! * **Autotuner** — `SpmvContext::builder(m).tune(level)` searches the
+//!   EHYB plan space per matrix ([`autotune`]):
+//!   [`TuneLevel::Heuristic`] ranks candidates by the [`perfmodel`]
+//!   roofline bounds; [`TuneLevel::Measured`] microbenches the real
+//!   candidate engines under a wall-clock budget. A tuned plan is
+//!   adopted only if its score is no worse than the default plan's.
+//!   **`EHYB_TUNE_DIR`** (or `.plan_cache(dir)`) names the persistent
+//!   plan store — JSON, atomically written, keyed by structural
+//!   fingerprint × device × scalar type — so restarts skip the search.
 //! * **`EHYB_THREADS`** — worker-thread count for the partition-
 //!   parallel SpMV/SpMM hot paths (and the preprocessing partitioner).
 //!   Defaults to `min(cores, 16)`; resolved once and cached, override
@@ -99,8 +123,10 @@ pub mod runtime;
 pub mod coordinator;
 pub mod harness;
 pub mod api;
+pub mod autotune;
 
 pub use api::{BatchBuf, EhybError, EngineKind, SpmvContext, VecBatch, VecBatchMut};
+pub use autotune::{Fingerprint, PlanStore, TuneLevel, TunedPlan};
 
 /// Crate-wide result type over the typed [`EhybError`].
 pub type Result<T> = std::result::Result<T, EhybError>;

@@ -5,8 +5,9 @@
 //!   preprocess  run Algorithms 1-2, report partition/ER/fill/timings
 //!   spmv        one SpMV: CPU wallclock + simulated V100 + optional PJRT
 //!   solve       preconditioned CG/BiCGSTAB over the chosen engine
+//!   tune        OSKI-style plan search (+ optional persistent cache)
 //!   bench       regenerate paper tables/figures (see DESIGN.md §6)
-//!   ablation    DESIGN.md §7 ablations
+//!   ablation    DESIGN.md §7 ablations + the tuning ablation
 //!
 //! Matrix selection: `--gen poisson3d:24` style specs or `--mtx file.mtx`.
 
@@ -35,6 +36,7 @@ fn main() {
         "preprocess" => cmd_preprocess(&opts),
         "spmv" => cmd_spmv(&opts),
         "solve" => cmd_solve(&opts),
+        "tune" => cmd_tune(&opts),
         "bench" => cmd_bench(&opts),
         "ablation" => cmd_ablation(&opts),
         "--help" | "-h" | "help" => {
@@ -56,13 +58,15 @@ fn main() {
 fn usage() {
     eprintln!(
         "usage: ehyb <cmd> [--gen SPEC | --mtx FILE] [options]\n\
-         cmds: info | preprocess | spmv | solve | bench | ablation\n\
+         cmds: info | preprocess | spmv | solve | tune | bench | ablation\n\
          gen specs: poisson2d:NX[:NY] poisson3d:N[:NY:NZ] stencil27:N\n\
                     elasticity:N unstructured:N circuit:N kkt:N banded:N\n\
          options: --vec-size V  --dtype f32|f64  --pjrt  --artifacts DIR\n\
                   --precond none|jacobi|spai0  --solver cg|bicgstab\n\
                   --table 1|2  --fig 2|3|4|5|6  --scale tiny|small|full\n\
-                  --out DIR  --which cache|partitioner|sort|vecsize"
+                  --out DIR  --which cache|partitioner|sort|vecsize|tuning\n\
+                  --level heuristic|measured  --budget-ms N  --engine auto|ehyb|...\n\
+                  --cache DIR (tune; default $EHYB_TUNE_DIR)"
     );
 }
 
@@ -241,6 +245,103 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    use ehyb::autotune::{
+        config_key, device_key, tune_with_fingerprint, Fingerprint, PlanStore, TuneLevel,
+    };
+    let m = build_matrix(opts)?;
+    let cfg = preprocess_cfg(opts);
+    let level = match opts.get("level").map(String::as_str) {
+        Some("measured") => {
+            let ms = opts.get("budget-ms").and_then(|v| v.parse().ok()).unwrap_or(250u64);
+            TuneLevel::Measured { budget: std::time::Duration::from_millis(ms) }
+        }
+        Some("heuristic") | None => TuneLevel::Heuristic,
+        Some(other) => anyhow::bail!("unknown tune level {other}"),
+    };
+    let requested = match opts.get("engine") {
+        Some(name) => {
+            EngineKind::from_name(name).ok_or_else(|| anyhow::anyhow!("unknown engine {name}"))?
+        }
+        None => EngineKind::Auto,
+    };
+
+    let fp = Fingerprint::of(&m);
+    println!("fingerprint     : {}", fp.key());
+    println!(
+        "rows            : mean={:.2} max={:.0} sd={:.2}; diag-dominant {:.0}%",
+        fp.row_mean,
+        fp.row_max,
+        fp.row_stddev,
+        100.0 * fp.diag_dominant_fraction
+    );
+
+    // Mirror the facade's cache policy: an existing usable entry is
+    // reported, not clobbered (a default heuristic run must never
+    // overwrite a persisted measured winner for the same key).
+    let store = opts.get("cache").map(PlanStore::new).or_else(PlanStore::from_env);
+    if let Some(store) = &store {
+        if let Ok(Some(existing)) =
+            store.load(&fp.key(), &device_key(&cfg.device), "f64", requested.name())
+        {
+            if existing.usable_for(requested, level, &config_key(&cfg)) {
+                println!(
+                    "cache hit       : engine={} slice_height={} vec_size={:?} cutoff={:?} \
+                     ({} level; delete {} to re-tune)",
+                    existing.engine.name(),
+                    existing.slice_height,
+                    existing.vec_size,
+                    existing.ell_width_cutoff,
+                    existing.level,
+                    store
+                        .path_for(&existing.fingerprint, &existing.device, &existing.dtype, &existing.scope)
+                        .display()
+                );
+                return Ok(());
+            }
+        }
+    }
+
+    let out = tune_with_fingerprint(&m, &cfg, requested, level, Some(fp))?;
+    let p = &out.plan;
+    println!(
+        "tuned plan      : engine={} slice_height={} vec_size={:?} cutoff={:?}",
+        p.engine.name(),
+        p.slice_height,
+        p.vec_size,
+        p.ell_width_cutoff
+    );
+    println!(
+        "score ({})  : {:.3e}s vs default {:.3e}s ({:.1}% better)",
+        p.level,
+        p.score_secs,
+        p.default_score_secs,
+        100.0 * (1.0 - p.score_secs / p.default_score_secs.max(1e-300))
+    );
+    println!(
+        "search          : {} tried, {} skipped, {:.3}s",
+        out.candidates_tried, out.candidates_skipped, out.search_secs
+    );
+
+    if let Some(store) = store {
+        if out.searched() {
+            let path = store.save(p)?;
+            println!("persisted       : {}", path.display());
+            let back = store
+                .load(&p.fingerprint, &p.device, &p.dtype, &p.scope)?
+                .ok_or_else(|| anyhow::anyhow!("saved plan did not load back"))?;
+            anyhow::ensure!(back == *p, "plan-store round-trip mismatch");
+            println!("reload          : verified (round-trip identical)");
+        } else {
+            println!(
+                "not persisted   : budget too small to compare any candidate ({} shed on budget)",
+                out.budget_skipped
+            );
+        }
+    }
+    Ok(())
+}
+
 fn bench_runs<S: ehyb::runtime::XlaScalar>(
     specs: &[suite::MatrixSpec],
     dev: &GpuDevice,
@@ -383,6 +484,13 @@ fn cmd_ablation(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     if which == "vecsize" || which == "all" {
         let rows = ablation::vecsize_sweep(&m, &cfg, &dev, &[64, 128, 256, 512, 1024, 2048])?;
         println!("{}", report::ablation_markdown("VecSize (cache size) sweep", &rows));
+    }
+    if which == "tuning" || which == "all" {
+        let rows = ablation::tuning_ablation(&m, &cfg, &dev)?;
+        println!(
+            "{}",
+            report::ablation_markdown("Autotuning (default vs heuristic vs measured)", &rows)
+        );
     }
     Ok(())
 }

@@ -33,6 +33,14 @@ impl TrafficModel {
     pub fn roofline_gflops(&self, nnz: usize, dev: &GpuDevice) -> f64 {
         2.0 * nnz as f64 / (self.total() / dev.hbm_bw) / 1e9
     }
+
+    /// Idealized seconds per SpMV on `dev` (total bytes / HBM
+    /// bandwidth) — the scalar the autotuner ranks candidate plans by
+    /// (lower is better; same ordering as `roofline_gflops` at fixed
+    /// nnz).
+    pub fn predicted_secs(&self, dev: &GpuDevice) -> f64 {
+        self.total() / dev.hbm_bw
+    }
 }
 
 /// The paper's "theory up-boundary" for CSR-family formats: per nnz a
@@ -117,6 +125,18 @@ mod tests {
             plan.matrix.er_fraction(),
             plan.matrix.ell_fill_ratio()
         );
+    }
+
+    #[test]
+    fn predicted_secs_orders_like_gflops() {
+        let m = poisson2d::<f64>(32, 32);
+        let dev = GpuDevice::v100();
+        let csr = csr_bound(&m);
+        let ell = ell_bound(&m, 2.0);
+        // More bytes => more predicted seconds => fewer roofline GFLOPS.
+        assert!(ell.predicted_secs(&dev) > csr.predicted_secs(&dev));
+        assert!(ell.roofline_gflops(m.nnz(), &dev) < csr.roofline_gflops(m.nnz(), &dev));
+        assert!((csr.predicted_secs(&dev) - csr.total() / dev.hbm_bw).abs() < 1e-18);
     }
 
     #[test]

@@ -47,6 +47,14 @@ pub struct PreprocessConfig {
     /// Paper's descending-nnz in-partition sort (ablation §7.4 turns it
     /// off to measure slice-padding and divergence cost).
     pub sort_descending: bool,
+    /// ELL/ER width cutoff: a row keeps at most this many in-partition
+    /// entries in the sliced-ELL part; the excess spills into its ER
+    /// row (alongside any out-of-partition entries). Caps the slice
+    /// width a single heavy row can force on its 31 neighbours, trading
+    /// ELL padding for ER traffic — a knob the `autotune` tuner
+    /// searches. `None` (default) keeps the paper's membership-only
+    /// split and is bit-identical to the pre-knob pipeline.
+    pub ell_width_cutoff: Option<u32>,
 }
 
 impl Default for PreprocessConfig {
@@ -57,6 +65,7 @@ impl Default for PreprocessConfig {
             vec_size_override: None,
             partition: PartitionConfig::default(),
             sort_descending: true,
+            ell_width_cutoff: None,
         }
     }
 }
@@ -85,6 +94,9 @@ impl<S: Scalar> EhybPlan<S> {
         }
         let n = m.nrows();
         let h = cfg.slice_height;
+        if let Some(c) = cfg.ell_width_cutoff {
+            crate::ensure!(c >= 1, "ell_width_cutoff must be >= 1, got {c}");
+        }
 
         // --- Equations (1)-(2): partition count and cache size. ---
         let cache = match cfg.vec_size_override {
@@ -122,7 +134,15 @@ impl<S: Scalar> EhybPlan<S> {
 
         // --- Algorithm 1 lines 3-27 + Algorithm 2 (timed as "reorder"). ---
         let t = Timer::start();
-        let matrix = assemble(m, &partition.assignment, num_parts, vec_size, h, cfg.sort_descending);
+        let matrix = assemble(
+            m,
+            &partition.assignment,
+            num_parts,
+            vec_size,
+            h,
+            cfg.sort_descending,
+            cfg.ell_width_cutoff,
+        );
         let reorder_secs = t.elapsed_secs();
 
         debug_assert!(matrix.validate().is_ok(), "{:?}", matrix.validate());
@@ -136,6 +156,9 @@ impl<S: Scalar> EhybPlan<S> {
 }
 
 /// Algorithm 1 (counting, sorting, metadata) + Algorithm 2 (scatter).
+/// `ell_width_cutoff` caps per-row ELL entries: a row's first `cutoff`
+/// in-partition entries (in column order) stay in the sliced-ELL part,
+/// the rest spill into its ER row.
 fn assemble<S: Scalar>(
     m: &Csr<S>,
     assignment: &[u32],
@@ -143,6 +166,7 @@ fn assemble<S: Scalar>(
     vec_size: usize,
     h: usize,
     sort_descending: bool,
+    ell_width_cutoff: Option<u32>,
 ) -> EhybMatrix<S> {
     let n = m.nrows();
     let padded = num_parts * vec_size;
@@ -165,6 +189,17 @@ fn assemble<S: Scalar>(
                 ell_len[row] += 1;
             } else {
                 er_len[row] += 1;
+            }
+        }
+    }
+    // ELL/ER width cutoff: spill each row's in-partition excess into its
+    // ER row *before* sorting/width computation, so the layout below
+    // sees the clamped lengths.
+    if let Some(cut) = ell_width_cutoff {
+        for row in 0..n {
+            if ell_len[row] > cut {
+                er_len[row] += ell_len[row] - cut;
+                ell_len[row] = cut;
             }
         }
     }
@@ -254,7 +289,9 @@ fn assemble<S: Scalar>(
         let mut k2 = 0usize; // k2 = ER entry counter
         for (&c, &v) in cols.iter().zip(vals) {
             let nc = perm[c as usize];
-            if assignment[c as usize] as usize == p {
+            // In-partition entries beyond the clamped per-row ELL length
+            // (the width cutoff) fall through to the ER branch.
+            if assignment[c as usize] as usize == p && (k1 as u32) < ell_len[row] {
                 let idx = ell_base + k1 * h + lane;
                 ell_cols[idx] = (nc - part_base) as u16;
                 ell_vals[idx] = v;
@@ -438,5 +475,67 @@ mod tests {
         let m = poisson2d::<f64>(24, 24);
         let plan = EhybPlan::build(&m, &small_cfg(64)).unwrap();
         assert!(plan.matrix.ell_cols.iter().all(|&c| (c as usize) < 64));
+    }
+
+    #[test]
+    fn ell_width_cutoff_caps_slices_and_stays_correct() {
+        let m = circuit::<f64>(700, 4, 0.03, 9); // hub rows force wide slices
+        for cut in [1u32, 2, 3] {
+            let cfg = PreprocessConfig {
+                vec_size_override: Some(64),
+                ell_width_cutoff: Some(cut),
+                ..Default::default()
+            };
+            roundtrip(|| circuit::<f64>(700, 4, 0.03, 9), &cfg);
+            let plan = EhybPlan::build(&m, &cfg).unwrap();
+            assert!(
+                plan.matrix.slice_width.iter().all(|&w| w <= cut),
+                "cut={cut}: slice width {} exceeds cutoff",
+                plan.matrix.slice_width.iter().max().unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn ell_width_cutoff_none_is_bit_identical_to_default() {
+        let m = unstructured_mesh::<f64>(24, 24, 0.5, 3);
+        let a = EhybPlan::build(&m, &small_cfg(96)).unwrap();
+        let b = EhybPlan::build(
+            &m,
+            &PreprocessConfig { ell_width_cutoff: None, ..small_cfg(96) },
+        )
+        .unwrap();
+        assert_eq!(a.matrix, b.matrix);
+    }
+
+    #[test]
+    fn ell_width_cutoff_zero_rejected() {
+        let m = poisson2d::<f64>(8, 8);
+        let cfg = PreprocessConfig {
+            vec_size_override: Some(32),
+            ell_width_cutoff: Some(0),
+            ..Default::default()
+        };
+        assert!(EhybPlan::build(&m, &cfg).is_err());
+    }
+
+    #[test]
+    fn ell_width_cutoff_trades_fill_for_er() {
+        // Clamping heavy rows must not increase the padded-slot count
+        // and must move the excess into ER.
+        let m = circuit::<f64>(700, 4, 0.03, 9);
+        let base = EhybPlan::build(&m, &small_cfg(64)).unwrap();
+        let cut = EhybPlan::build(
+            &m,
+            &PreprocessConfig {
+                vec_size_override: Some(64),
+                ell_width_cutoff: Some(2),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(cut.matrix.ell_vals.len() <= base.matrix.ell_vals.len());
+        assert!(cut.matrix.er_nnz >= base.matrix.er_nnz);
+        assert_eq!(cut.matrix.nnz(), base.matrix.nnz());
     }
 }

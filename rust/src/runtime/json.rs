@@ -1,7 +1,9 @@
-//! Minimal JSON reader — just enough for `artifacts/manifest.json`
-//! (objects, arrays, strings, numbers, bools, null; UTF-8 passthrough;
-//! no escapes beyond \" \\ \/ \n \t). No serde in the offline
-//! dependency closure.
+//! Minimal JSON reader/writer — just enough for `artifacts/manifest.json`
+//! and the autotune plan store (objects, arrays, strings, numbers,
+//! bools, null; UTF-8 passthrough; no escapes beyond \" \\ \/ \n \t \r).
+//! No serde in the offline dependency closure. [`Json::dump`] emits
+//! compact, deterministic output (object keys are `BTreeMap`-ordered)
+//! that [`Json::parse`] round-trips.
 
 use std::collections::BTreeMap;
 
@@ -56,6 +58,77 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Serialize compactly. Deterministic (object keys in `BTreeMap`
+    /// order) and parseable back by [`Json::parse`]: numbers use Rust's
+    /// shortest round-trip `Display`, strings escape exactly the set the
+    /// parser understands. Non-finite numbers serialize as `null` (JSON
+    /// has no NaN/inf).
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out);
+        out
+    }
+
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    // Integral values print without an exponent/fraction
+                    // so `as_usize` consumers read them back exactly.
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write_into(out);
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Build a [`Json::Obj`] from `(key, value)` pairs — the writer-side
+/// convenience the plan store uses.
+pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
 struct Parser<'a> {
@@ -229,5 +302,43 @@ mod tests {
     fn empty_containers() {
         assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn dump_parse_roundtrip() {
+        let v = obj([
+            ("name", Json::Str("a \"b\"\n\\c".into())),
+            ("n", Json::Num(1024.0)),
+            ("score", Json::Num(3.25e-7)),
+            ("flag", Json::Bool(true)),
+            ("none", Json::Null),
+            ("arr", Json::Arr(vec![Json::Num(-1.0), Json::Num(0.5)])),
+        ]);
+        let text = v.dump();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+        // Integral numbers stay integral in the text form.
+        assert!(text.contains("\"n\":1024"), "{text}");
+    }
+
+    #[test]
+    fn dump_is_deterministic() {
+        let v = obj([("b", Json::Num(2.0)), ("a", Json::Num(1.0))]);
+        assert_eq!(v.dump(), "{\"a\":1,\"b\":2}");
+        assert_eq!(v.dump(), v.dump());
+    }
+
+    #[test]
+    fn dump_float_roundtrips_bits() {
+        for x in [0.1f64, 1.0 / 3.0, 2.5e-9, 123456.789] {
+            let text = Json::Num(x).dump();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{text}");
+        }
+    }
+
+    #[test]
+    fn dump_nonfinite_becomes_null() {
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
     }
 }

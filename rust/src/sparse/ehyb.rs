@@ -27,7 +27,12 @@ use super::scalar::Scalar;
 
 /// EHYB matrix in new (post-reorder) index space plus the permutation
 /// back to the original ordering.
-#[derive(Clone, Debug)]
+///
+/// `PartialEq` compares every stored array (values element-wise) — what
+/// the autotune plan-store round-trip test means by "byte-identical"
+/// modulo the usual `-0.0 == 0.0` float-equality caveat; pair it with a
+/// bit-level value check when that distinction matters.
+#[derive(Clone, Debug, PartialEq)]
 pub struct EhybMatrix<S: Scalar> {
     /// Original dimension (square matrices only — FEM systems).
     pub n: usize,

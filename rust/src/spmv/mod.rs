@@ -23,7 +23,9 @@ pub mod sellp;
 pub mod merge;
 pub mod csr5;
 pub mod ehyb_cpu;
-pub mod registry;
+// NOTE: the old `registry` module (duplicate engine-construction paths
+// for the harness sweep) is retired — build one `SpmvContext` per
+// `EngineKind` via `crate::api::all_contexts` instead.
 
 use crate::sparse::scalar::Scalar;
 pub use crate::api::batch::{VecBatch, VecBatchMut};

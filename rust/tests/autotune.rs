@@ -1,0 +1,359 @@
+//! Autotuner integration tests (ISSUE 3 acceptance criteria):
+//!
+//! 1. a tuned plan is only selected when its score is ≤ the default
+//!    plan's (asserted per level),
+//! 2. the plan cache round-trips byte-identically (save → load → build
+//!    rebuilds the exact `EhybMatrix`),
+//! 3. `TuneLevel::Measured` respects its time budget,
+//!
+//! plus the satellite property test that a tuned plan's SpMV results
+//! match the default plan's on every engine: bit-identical wherever
+//! tuning leaves the plan unchanged (all baseline kinds, and EHYB when
+//! the default knobs win); when the tuner adopts a *different* EHYB
+//! partitioning, per-row sums legitimately reassociate, so those cases
+//! assert bit-identity against a direct rebuild of the tuned
+//! configuration (tuning itself adds zero numerical deviation) plus
+//! tight agreement with the default plan.
+
+use ehyb::autotune::{config_key, device_key, tune, Fingerprint, PlanStore, TuneLevel, TunedPlan};
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::sparse::coo::Coo;
+use ehyb::sparse::csr::Csr;
+use ehyb::sparse::ehyb::EhybMatrix;
+use ehyb::sparse::gen::{poisson2d, unstructured_mesh};
+use ehyb::util::check::{assert_allclose, check_prop};
+use ehyb::util::Xoshiro256;
+use ehyb::{EngineKind, SpmvContext};
+use std::time::Duration;
+
+fn random_matrix(rng: &mut Xoshiro256) -> Csr<f64> {
+    let n = 16 + rng.next_below(300);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        if rng.next_f64() < 0.05 {
+            continue; // empty row
+        }
+        coo.push(i, i, rng.range_f64(1.0, 4.0));
+        let deg = rng.next_below(12);
+        for _ in 0..deg {
+            let j = if rng.next_f64() < 0.6 {
+                let span = 24.min(n);
+                (i + rng.next_below(span)).saturating_sub(span / 2).min(n - 1)
+            } else {
+                rng.next_below(n)
+            };
+            coo.push(i, j, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+fn random_x(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ehyb-autotune-test-{tag}-{}", std::process::id()))
+}
+
+/// "Byte-identical" for the plan-cache acceptance criterion: every
+/// structural array equal AND every stored value equal at the bit
+/// level (so even -0.0 vs 0.0 or NaN payloads would be caught).
+fn assert_byte_identical(a: &EhybMatrix<f64>, b: &EhybMatrix<f64>) {
+    assert_eq!(a, b, "structural/array mismatch");
+    assert!(
+        a.ell_vals.iter().zip(&b.ell_vals).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "ELL values differ at the bit level"
+    );
+    assert!(
+        a.er_vals.iter().zip(&b.er_vals).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "ER values differ at the bit level"
+    );
+}
+
+#[test]
+fn prop_tuned_plan_matches_default_results_on_every_engine() {
+    check_prop("tuned-matches-default", 0x7C11ED, 24, |rng| {
+        let m = random_matrix(rng);
+        let vec_size = 32 * (1 + rng.next_below(4));
+        let cfg = PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() };
+        let x = random_x(rng, m.ncols());
+        for kind in EngineKind::ALL {
+            let build = |tuned: bool, config: PreprocessConfig| {
+                // no_plan_cache: keep the property independent of any
+                // EHYB_TUNE_DIR set in the developer's environment.
+                let mut b =
+                    SpmvContext::builder(m.clone()).engine(kind).config(config).no_plan_cache();
+                if tuned {
+                    b = b.tune(TuneLevel::Heuristic);
+                }
+                b.build().map_err(|e| format!("{kind:?}: build: {e}"))
+            };
+            let ctx_d = build(false, cfg.clone())?;
+            let ctx_t = build(true, cfg.clone())?;
+            let y_d = ctx_d.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            let y_t = ctx_t.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            let plan_unchanged = ctx_t.config().vec_size_override == cfg.vec_size_override
+                && ctx_t.config().slice_height == cfg.slice_height
+                && ctx_t.config().ell_width_cutoff == cfg.ell_width_cutoff;
+            if kind != EngineKind::Ehyb || plan_unchanged {
+                // Identical plan => identical engine => bit-identical y.
+                if y_t != y_d {
+                    return Err(format!("{kind:?}: tuned != default bitwise"));
+                }
+            } else {
+                // Different EHYB partitioning: same math, reassociated
+                // sums. Tuning must add zero deviation beyond the plan
+                // change itself: bit-identical to a direct rebuild of
+                // the tuned configuration...
+                let ctx_r = build(false, ctx_t.config().clone())?;
+                let y_r = ctx_r.spmv_alloc(&x).map_err(|e| e.to_string())?;
+                if y_t != y_r {
+                    return Err("tuned != direct rebuild of tuned config (bitwise)".into());
+                }
+                // ...and numerically the same operator as the default.
+                assert_allclose(&y_t, &y_d, 1e-9, 1e-9)
+                    .map_err(|e| format!("tuned vs default: {e}"))?;
+            }
+            // Score guarantee holds on every tuned build.
+            let tp = ctx_t.tuned().expect("tuned build carries plan");
+            if tp.score_secs > tp.default_score_secs {
+                return Err(format!(
+                    "{kind:?}: tuned score {} > default {}",
+                    tp.score_secs, tp.default_score_secs
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tuned_score_never_worse_than_default_both_levels() {
+    let matrices: Vec<(&str, Csr<f64>)> = vec![
+        ("poisson", poisson2d::<f64>(24, 24)),
+        ("mesh", unstructured_mesh::<f64>(32, 32, 0.4, 5)),
+    ];
+    let cfg = PreprocessConfig { vec_size_override: Some(128), ..Default::default() };
+    for (name, m) in &matrices {
+        for level in [TuneLevel::Heuristic, TuneLevel::measured()] {
+            for requested in [EngineKind::Ehyb, EngineKind::Auto] {
+                let out = tune(m, &cfg, requested, level).unwrap();
+                assert!(
+                    out.plan.score_secs <= out.plan.default_score_secs,
+                    "{name}/{requested:?}/{level:?}: {} > {}",
+                    out.plan.score_secs,
+                    out.plan.default_score_secs
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn measured_respects_time_budget() {
+    let m = unstructured_mesh::<f64>(32, 32, 0.4, 7);
+    let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+    // Zero budget: only the default plan may be probed.
+    let out = tune(&m, &cfg, EngineKind::Auto, TuneLevel::Measured { budget: Duration::ZERO })
+        .unwrap();
+    assert_eq!(out.candidates_tried, 1, "zero budget must probe only the default");
+    assert!(out.candidates_skipped > 0);
+    assert_eq!(out.plan.score_secs, out.plan.default_score_secs);
+    // Through the facade: a zero-budget tuned build degenerates to the
+    // default plan (and stays correct).
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg)
+        .tune(TuneLevel::Measured { budget: Duration::ZERO })
+        .no_plan_cache()
+        .build()
+        .unwrap();
+    assert_eq!(ctx.config().vec_size_override, Some(64));
+    let x: Vec<f64> = (0..m.nrows()).map(|i| ((i * 3 + 1) % 11) as f64 * 0.5 - 2.0).collect();
+    assert_allclose(&ctx.spmv_alloc(&x).unwrap(), &m.spmv_f64_oracle(&x), 1e-10, 1e-10).unwrap();
+}
+
+#[test]
+fn plan_cache_roundtrip_builds_byte_identical_matrix() {
+    let dir = temp_dir("roundtrip");
+    std::fs::remove_dir_all(&dir).ok();
+    let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+    let cfg = PreprocessConfig { vec_size_override: Some(128), ..Default::default() };
+
+    // Cold build: search + persist.
+    let ctx1 = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    let tp = ctx1.tuned().unwrap().clone();
+
+    // The store round-trips the TunedPlan identically...
+    let store = PlanStore::new(&dir);
+    let loaded = store.load(&tp.fingerprint, &tp.device, &tp.dtype, &tp.scope).unwrap().unwrap();
+    assert_eq!(loaded, tp);
+
+    // ...a warm build adopts it without re-searching (same plan object)...
+    let ctx2 = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(ctx2.tuned().unwrap(), &tp);
+
+    // ...and both the warm context and a by-hand save→load→build
+    // rebuild produce a byte-identical EhybMatrix.
+    assert_byte_identical(&ctx1.plan().unwrap().matrix, &ctx2.plan().unwrap().matrix);
+    let rebuilt = EhybPlan::build(&m, &loaded.apply(&cfg)).unwrap();
+    assert_byte_identical(&ctx1.plan().unwrap().matrix, &rebuilt.matrix);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn plan_cache_hit_bypasses_search() {
+    let dir = temp_dir("hit");
+    std::fs::remove_dir_all(&dir).ok();
+    let m = poisson2d::<f64>(16, 16);
+    let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+    // Plant a valid plan the tuner would never produce (sentinel scores,
+    // "measured" tag on a heuristic request): if the build adopts it,
+    // it came from the cache, not from a fresh search.
+    let planted = TunedPlan {
+        engine: EngineKind::Ehyb,
+        slice_height: 32,
+        vec_size: Some(96),
+        ell_width_cutoff: None,
+        score_secs: 1.0,
+        default_score_secs: 1.0,
+        level: "measured".into(),
+        fingerprint: Fingerprint::of(&m).key(),
+        device: device_key(&cfg.device),
+        dtype: "f64".into(),
+        base_config: config_key(&cfg),
+        scope: "ehyb".into(),
+    };
+    PlanStore::new(&dir).save(&planted).unwrap();
+
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg)
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(ctx.tuned().unwrap(), &planted);
+    assert_eq!(ctx.config().vec_size_override, Some(96));
+    assert_eq!(ctx.plan().unwrap().matrix.vec_size, 96);
+    // The cached plan still computes the right operator.
+    let x: Vec<f64> = (0..256).map(|i| ((i * 7 + 3) % 13) as f64 * 0.5 - 3.0).collect();
+    assert_allclose(&ctx.spmv_alloc(&x).unwrap(), &m.spmv_f64_oracle(&x), 1e-10, 1e-10).unwrap();
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_hit_never_overrides_explicit_engine_level_or_config() {
+    let dir = temp_dir("compat");
+    std::fs::remove_dir_all(&dir).ok();
+    let m = poisson2d::<f64>(16, 16);
+    let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+    // Plant a baseline-winner plan and deliberately file it under the
+    // "ehyb" scope (a hand-copied / corrupted cache): even when the
+    // scoped lookup finds it, usable_for must reject it for an
+    // explicit EHYB request.
+    let planted = TunedPlan {
+        engine: EngineKind::CsrScalar,
+        slice_height: 32,
+        vec_size: Some(64),
+        ell_width_cutoff: None,
+        score_secs: 1.0,
+        default_score_secs: 1.0,
+        level: "heuristic".into(),
+        fingerprint: Fingerprint::of(&m).key(),
+        device: device_key(&cfg.device),
+        dtype: "f64".into(),
+        base_config: config_key(&cfg),
+        scope: "ehyb".into(),
+    };
+    PlanStore::new(&dir).save(&planted).unwrap();
+
+    // 1. Explicit EHYB request: the cached csr-scalar winner must not
+    //    override it — the build re-tunes and yields an EHYB context
+    //    (overwriting the entry with its own winner).
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(ctx.kind(), EngineKind::Ehyb);
+    assert!(ctx.plan().is_some());
+    assert_eq!(ctx.tuned().unwrap().engine, EngineKind::Ehyb);
+
+    // 2. Measured request: the (now heuristic, EHYB) entry must not
+    //    serve it — a fresh measured search runs and persists. Budget
+    //    generous enough to always compare candidates (a starved
+    //    search would deliberately not persist).
+    let measured = TuneLevel::Measured { budget: Duration::from_secs(10) };
+    let ctx2 = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .tune(measured)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(ctx2.tuned().unwrap().level, "measured");
+
+    // 3. Heuristic request after that: the measured entry supersedes
+    //    the heuristic model and is adopted as-is.
+    let ctx3 = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(ctx3.tuned().unwrap().level, "measured");
+    assert_eq!(ctx3.tuned(), ctx2.tuned());
+
+    // 4. A different base config (sort_descending off) must not reuse
+    //    the entry: the plan it would rebuild is not the one scored.
+    let cfg_off = PreprocessConfig { sort_descending: false, ..cfg.clone() };
+    let ctx4 = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg_off.clone())
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(ctx4.tuned().unwrap().base_config, config_key(&cfg_off));
+    assert_ne!(ctx4.tuned().unwrap().base_config, config_key(&cfg));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn auto_with_measured_tuning_end_to_end() {
+    let m = unstructured_mesh::<f64>(24, 24, 0.5, 3);
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Auto)
+        .config(PreprocessConfig { vec_size_override: Some(96), ..Default::default() })
+        .tune(TuneLevel::measured())
+        .no_plan_cache()
+        .build()
+        .unwrap();
+    assert_eq!(ctx.requested_kind(), EngineKind::Auto);
+    assert_ne!(ctx.kind(), EngineKind::Auto);
+    let tp = ctx.tuned().unwrap();
+    assert_eq!(tp.level, "measured");
+    assert!(tp.score_secs <= tp.default_score_secs);
+    let x: Vec<f64> = (0..m.nrows()).map(|i| ((i * 5 + 2) % 17) as f64 * 0.25 - 2.0).collect();
+    assert_allclose(&ctx.spmv_alloc(&x).unwrap(), &m.spmv_f64_oracle(&x), 1e-9, 1e-9).unwrap();
+}

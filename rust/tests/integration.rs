@@ -9,7 +9,6 @@ use ehyb::preprocess::{EhybPlan, PreprocessConfig};
 use ehyb::sparse::csr::Csr;
 use ehyb::sparse::gen;
 use ehyb::sparse::mmio;
-use ehyb::spmv::registry;
 use ehyb::spmv::SpmvEngine;
 use ehyb::util::check::assert_allclose;
 use ehyb::{EngineKind, SpmvContext};
@@ -32,11 +31,17 @@ fn full_pipeline_all_engines_agree_across_generators() {
     ];
     for (name, m) in matrices {
         let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
-        let (engines, plan) = registry::all_engines(&m, &cfg).unwrap();
-        plan.matrix.validate().unwrap();
+        // One context per engine kind — the single engine-construction
+        // path now that spmv::registry is retired.
+        let ctxs = ehyb::api::all_contexts(&m, &cfg).unwrap();
+        assert_eq!(ctxs.len(), EngineKind::ALL.len(), "{name}");
         let x = x_for(m.ncols());
         let oracle = m.spmv_f64_oracle(&x);
-        for e in &engines {
+        for ctx in &ctxs {
+            if let Some(plan) = ctx.plan() {
+                plan.matrix.validate().unwrap();
+            }
+            let e = ctx.engine();
             let mut y = vec![0.0; m.nrows()];
             e.spmv(&x, &mut y);
             assert_allclose(&y, &oracle, 1e-9, 1e-9)

@@ -4,11 +4,11 @@
 //! seed). Cases default to 64 per property; override with
 //! EHYB_PROPTEST_CASES.
 
+use ehyb::api::all_contexts;
 use ehyb::partition::{partition_graph, Graph, PartitionConfig, PartitionMethod};
 use ehyb::preprocess::{EhybPlan, PreprocessConfig};
 use ehyb::sparse::coo::Coo;
 use ehyb::sparse::csr::Csr;
-use ehyb::spmv::registry;
 use ehyb::spmv::SpmvEngine;
 use ehyb::util::check::{assert_allclose, check_prop, default_cases};
 use ehyb::util::Xoshiro256;
@@ -49,12 +49,14 @@ fn prop_all_engines_match_oracle() {
         let m = random_matrix(rng);
         let vec_size = 32 * (1 + rng.next_below(4));
         let cfg = PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() };
-        let (engines, plan) =
-            registry::all_engines(&m, &cfg).map_err(|e| format!("build: {e:#}"))?;
-        plan.matrix.validate().map_err(|e| format!("validate: {e:#}"))?;
+        let ctxs = all_contexts(&m, &cfg).map_err(|e| format!("build: {e:#}"))?;
         let x = random_x(rng, m.ncols());
         let oracle = m.spmv_f64_oracle(&x);
-        for e in &engines {
+        for ctx in &ctxs {
+            if let Some(plan) = ctx.plan() {
+                plan.matrix.validate().map_err(|e| format!("validate: {e:#}"))?;
+            }
+            let e = ctx.engine();
             let mut y = vec![0.0; m.nrows()];
             e.spmv(&x, &mut y);
             assert_allclose(&y, &oracle, 1e-9, 1e-9).map_err(|err| format!("{}: {err}", e.name()))?;
@@ -67,20 +69,20 @@ fn prop_all_engines_match_oracle() {
 fn prop_spmv_batch_matches_repeated_spmv_all_engines() {
     // Both batched entries — the borrowed-view spmv_batch and the
     // deprecated spmv_batch_vecs shim — must be element-wise identical
-    // to looping the single-vector kernel, for every engine in the
-    // registry (the default impl trivially; the EHYB blocked SpMM by
+    // to looping the single-vector kernel, for every engine kind
+    // (the default impl trivially; the EHYB blocked SpMM by
     // keeping per-row accumulation order).
     check_prop("spmv-batch-equals-repeated", 0xBA7C4, default_cases(), |rng| {
         let m = random_matrix(rng);
         let vec_size = 32 * (1 + rng.next_below(4));
         let cfg = PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() };
-        let (engines, _plan) =
-            registry::all_engines(&m, &cfg).map_err(|e| format!("build: {e:#}"))?;
+        let ctxs = all_contexts(&m, &cfg).map_err(|e| format!("build: {e:#}"))?;
         let bw = 1 + rng.next_below(6);
         let xs: Vec<Vec<f64>> = (0..bw).map(|_| random_x(rng, m.ncols())).collect();
         let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
         let xbatch = BatchBuf::from_cols(&xrefs).map_err(|e| e.to_string())?;
-        for e in &engines {
+        for ctx in &ctxs {
+            let e = ctx.engine();
             let mut ybatch = BatchBuf::<f64>::zeros(m.nrows(), bw);
             {
                 let mut yv = ybatch.view_mut();

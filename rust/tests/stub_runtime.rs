@@ -1,0 +1,36 @@
+//! Default-build (no `pjrt` feature) behaviour of the runtime stub —
+//! the path CI actually exercises: `PjrtRuntime::new` must fail with a
+//! typed, actionable error so callers fall back to the CPU engines,
+//! and the rest of the pipeline must keep working without any PJRT
+//! artifacts present. (The real-client integration tests live in
+//! `runtime_pjrt.rs`, compiled only with `--features pjrt`.)
+#![cfg(not(feature = "pjrt"))]
+
+use ehyb::runtime::PjrtRuntime;
+use ehyb::EhybError;
+
+#[test]
+fn stub_runtime_new_is_typed_runtime_error() {
+    match PjrtRuntime::new("/definitely-missing-artifacts") {
+        Err(EhybError::Runtime(msg)) => {
+            assert!(msg.contains("pjrt"), "error should name the missing feature: {msg}");
+        }
+        Ok(_) => panic!("stub PjrtRuntime::new must not succeed"),
+        Err(other) => panic!("expected EhybError::Runtime, got {other:?}"),
+    }
+}
+
+#[test]
+fn pipeline_works_without_pjrt() {
+    // The artifact-missing fallback: the full facade pipeline runs on
+    // the CPU engines with the stub compiled in.
+    use ehyb::sparse::gen::poisson2d;
+    let m = poisson2d::<f64>(12, 12);
+    let ctx = ehyb::SpmvContext::new(m.clone()).unwrap();
+    let x = vec![1.0; 144];
+    let y = ctx.spmv_alloc(&x).unwrap();
+    let oracle = m.spmv_f64_oracle(&x);
+    for (a, b) in y.iter().zip(&oracle) {
+        assert!((a - b).abs() < 1e-10);
+    }
+}
