@@ -65,7 +65,11 @@ fn main() -> anyhow::Result<()> {
     let store = PlanStore::new(&dir);
     let cache_file = store.path_for(&tp.fingerprint, &tp.device, &tp.dtype, &tp.scope);
     anyhow::ensure!(cache_file.exists(), "plan was not persisted at {}", cache_file.display());
-    println!("persisted   : {} ({} bytes)", cache_file.display(), std::fs::metadata(&cache_file)?.len());
+    println!(
+        "persisted   : {} ({} bytes)",
+        cache_file.display(),
+        std::fs::metadata(&cache_file)?.len()
+    );
 
     // 3. Reload: a fresh builder on the same cache dir must adopt the
     //    stored plan without searching, and agree exactly.
@@ -82,7 +86,9 @@ fn main() -> anyhow::Result<()> {
         ctx.plan().unwrap().matrix == ctx2.plan().unwrap().matrix,
         "cache round-trip did not rebuild a byte-identical EhybMatrix"
     );
-    println!("reload      : cache hit verified ({cold_secs:.3}s cold build -> {warm_secs:.3}s warm)");
+    println!(
+        "reload      : cache hit verified ({cold_secs:.3}s cold build -> {warm_secs:.3}s warm)"
+    );
 
     // Correctness of the tuned pipeline.
     let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.29).cos()).collect();

@@ -101,7 +101,11 @@ fn main() -> anyhow::Result<()> {
             "  {:>15}: {:7.2} GFLOPS{}",
             row.framework,
             row.gflops,
-            if row.framework == "ehyb" { String::new() } else { format!("  (EHYB is {speedup:.2}x)") }
+            if row.framework == "ehyb" {
+                String::new()
+            } else {
+                format!("  (EHYB is {speedup:.2}x)")
+            }
         );
     }
     Ok(())

@@ -1,0 +1,89 @@
+//! Row-sharded execution end to end (the CI shard gate runs exactly
+//! this).
+//!
+//! ```text
+//! cargo run --release --example sharded
+//! ```
+//!
+//! 1. Build one context unsharded and one sharded (`ShardSpec::Auto`,
+//!    cache-aware boundaries) and compare single-vector throughput.
+//! 2. Verify the numerical contract: bitwise identity on a row-local
+//!    engine, roundoff-equivalence on the per-shard-repartitioned EHYB
+//!    engine.
+//! 3. Serve a burst of requests through the sharded engine (one fused
+//!    batch per shard per drain) with a shed-rate-adaptive batch limit,
+//!    then print the per-shard and service metric tables.
+
+use ehyb::harness::report;
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::gen::unstructured_mesh;
+use ehyb::spmv::SpmvEngine;
+use ehyb::util::check::assert_allclose;
+use ehyb::util::timer::bench_secs;
+use ehyb::{EngineKind, ShardSpec, SpmvContext};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let m = unstructured_mesh::<f64>(96, 96, 0.5, 7);
+    let n = m.nrows();
+    let cfg = PreprocessConfig::default();
+    println!("matrix      : n={} nnz={}", n, m.nnz());
+
+    // 1. Unsharded vs sharded throughput on the same engine kind.
+    let base =
+        SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg.clone()).build()?;
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .shards(ShardSpec::Auto)
+        .build()?;
+    println!(
+        "shards      : {} (row ranges {:?} ...)",
+        ctx.shards(),
+        &ctx.shard_ranges().expect("sharded build")[..2.min(ctx.shards())]
+    );
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).sin()).collect();
+    let mut y = vec![0.0; n];
+    let secs_base = bench_secs(|| base.engine().spmv(&x, &mut y), 3, Duration::from_millis(150));
+    let secs_shard = bench_secs(|| ctx.engine().spmv(&x, &mut y), 3, Duration::from_millis(150));
+    println!(
+        "spmv        : unsharded {:.3} GFLOPS vs sharded {:.3} GFLOPS ({:.2}x)",
+        ehyb::spmv::gflops(m.nnz(), secs_base),
+        ehyb::spmv::gflops(m.nnz(), secs_shard),
+        secs_base / secs_shard
+    );
+
+    // 2. Numerical contract.
+    let oracle = m.spmv_f64_oracle(&x);
+    assert_allclose(&ctx.spmv_alloc(&x)?, &oracle, 1e-10, 1e-10).map_err(|e| anyhow::anyhow!(e))?;
+    let row_local = SpmvContext::builder(m.clone()).engine(EngineKind::CsrScalar).build()?;
+    let row_local_sharded = SpmvContext::builder(m.clone())
+        .engine(EngineKind::CsrScalar)
+        .shards(ShardSpec::Count(7))
+        .build()?;
+    anyhow::ensure!(
+        row_local.spmv_alloc(&x)? == row_local_sharded.spmv_alloc(&x)?,
+        "row-local engine must shard bit-identically"
+    );
+    println!("contract    : csr-scalar bitwise across shards; ehyb matches oracle");
+
+    // 3. Sharded serving with an adaptive fused-batch limit.
+    let svc = ctx.serve_adaptive(16, 64)?;
+    let client = svc.client();
+    let xs: Vec<Vec<f64>> = (0..48)
+        .map(|t| (0..n).map(|i| ((i * 3 + t * 13) % 23) as f64 * 0.25 - 2.5).collect())
+        .collect();
+    let ys = client.spmv_many(xs.clone())?;
+    for (xq, yq) in xs.iter().zip(&ys) {
+        let want = m.spmv_f64_oracle(xq);
+        assert_allclose(yq, &want, 1e-10, 1e-10).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    println!("{}", report::service_markdown("Sharded service", &svc.metrics));
+    println!(
+        "{}",
+        report::shard_markdown("Per-shard execution", ctx.sharded().expect("sharded build"))
+    );
+
+    println!("ok");
+    Ok(())
+}

@@ -26,7 +26,8 @@ fn main() {
     out += &report::ablation_markdown("§7.3 Partitioner quality", &rows);
     let rows = ablation::sort_ablation(&m, &cfg, &dev).unwrap();
     out += &report::ablation_markdown("§7.4 Descending-nnz reorder", &rows);
-    let rows = ablation::vecsize_sweep(&m, &cfg, &dev, &[64, 128, 256, 512, 1024, 2048, 4096]).unwrap();
+    let rows =
+        ablation::vecsize_sweep(&m, &cfg, &dev, &[64, 128, 256, 512, 1024, 2048, 4096]).unwrap();
     out += &report::ablation_markdown("§7.5 VecSize sweep (equations 1-2)", &rows);
 
     println!("{out}");

@@ -42,5 +42,8 @@ fn main() {
         tmin = tmin.min(r.total_x);
         tmax = tmax.max(r.total_x);
     }
-    println!("measured bands: partitioning {pmin:.0}-{pmax:.0}x, total {tmin:.0}-{tmax:.0}x (paper: 400-1500x / 500-2000x)");
+    println!(
+        "measured bands: partitioning {pmin:.0}-{pmax:.0}x, total {tmin:.0}-{tmax:.0}x \
+         (paper: 400-1500x / 500-2000x)"
+    );
 }

@@ -1,8 +1,16 @@
 //! Bench: L3 hot-path wall-clock — CPU engines on this host (the §Perf
 //! iteration target), the batch-width sweep for the blocked SpMM path,
-//! the `EHYB_THREADS` sweep for the partition-parallel walk, plus PJRT
-//! SpMV latency when artifacts exist. `cargo bench --bench hotpath`.
+//! the `EHYB_THREADS` sweep for the partition-parallel walk, the
+//! row-sharded engine sweep, plus PJRT SpMV latency when artifacts
+//! exist. `cargo bench --bench hotpath`.
+//!
+//! Flags (after `--`):
+//!   --smoke       CI-sized matrices + short reps (the bench-smoke job)
+//!   --out PATH    write the engine sweeps as deterministic JSON
+//!                 (`harness::report::bench_json`; defaults to
+//!                 `BENCH_ci.json` under --smoke)
 
+use ehyb::harness::report::{bench_json, BenchCase};
 use ehyb::harness::runner;
 use ehyb::preprocess::{EhybPlan, PreprocessConfig};
 use ehyb::spmv::SpmvEngine;
@@ -10,23 +18,78 @@ use ehyb::BatchBuf;
 use ehyb::sparse::gen::{poisson3d, unstructured_mesh};
 use ehyb::util::timer::bench_secs;
 use ehyb::util::par;
+use ehyb::{EngineKind, ShardSpec, SpmvContext};
 use std::time::Duration;
 
 fn main() {
-    let cases: Vec<(&str, ehyb::sparse::csr::Csr<f64>)> = vec![
-        ("poisson3d-44 (85k, stencil)", poisson3d(44, 44, 44)),
-        ("unstructured-300 (90k, irregular)", unstructured_mesh(300, 300, 0.5, 42)),
-    ];
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| smoke.then(|| "BENCH_ci.json".to_string()));
+
+    let cases: Vec<(&str, ehyb::sparse::csr::Csr<f64>)> = if smoke {
+        vec![
+            ("poisson3d-16 (4k, stencil)", poisson3d(16, 16, 16)),
+            ("unstructured-64 (4k, irregular)", unstructured_mesh(64, 64, 0.5, 42)),
+        ]
+    } else {
+        vec![
+            ("poisson3d-44 (85k, stencil)", poisson3d(44, 44, 44)),
+            ("unstructured-300 (90k, irregular)", unstructured_mesh(300, 300, 0.5, 42)),
+        ]
+    };
+    let (reps, rep_ms) = if smoke { (2, 20) } else { (5, 300) };
+    let mut json_cases: Vec<BenchCase> = Vec::new();
     for (label, m) in &cases {
         println!("== {label}: n={} nnz={} ==", m.nrows(), m.nnz());
         let cfg = PreprocessConfig::default();
+        let mut engine_rows: Vec<(String, f64)> = Vec::new();
         match runner::bench_cpu_engines(m, &cfg) {
             Ok(rows) => {
                 for (name, gflops) in rows {
                     println!("  {name:>15}: {gflops:7.3} GFLOPS (cpu wallclock)");
+                    engine_rows.push((name, gflops));
                 }
             }
             Err(e) => println!("  failed: {e:#}"),
+        }
+
+        // Row-sharded engine (ISSUE 4): unsharded vs one-shard-per-core
+        // fan-out of the same kind.
+        for kind in [EngineKind::Ehyb, EngineKind::CsrScalar] {
+            let threads = par::num_threads();
+            let ks = if threads > 1 { vec![1usize, threads] } else { vec![1usize] };
+            for k in ks {
+                if k == 1 && kind == EngineKind::CsrScalar {
+                    continue; // csr-scalar k=1 == the unsharded row above
+                }
+                let ctx = SpmvContext::builder(m.clone())
+                    .engine(kind)
+                    .config(cfg.clone())
+                    .shards(ShardSpec::Count(k))
+                    .build()
+                    .expect("sharded build");
+                let x = vec![1.0f64; m.ncols()];
+                let mut y = vec![0.0f64; m.nrows()];
+                let e = ctx.engine();
+                let secs = bench_secs(|| e.spmv(&x, &mut y), reps, Duration::from_millis(rep_ms));
+                let gf = ehyb::spmv::gflops(m.nnz(), secs);
+                let name = format!("sharded{k}-{}", kind.name());
+                println!("  {name:>15}: {gf:7.3} GFLOPS (K={k} row shards)");
+                engine_rows.push((name, gf));
+            }
+        }
+        json_cases.push(BenchCase {
+            matrix: label.split_whitespace().next().unwrap_or(label).to_string(),
+            n: m.nrows(),
+            nnz: m.nnz(),
+            engines: engine_rows,
+        });
+        if smoke {
+            continue; // smoke mode skips the long sweeps below
         }
         // Hot-loop detail: the EHYB engine's new-order path (the solver's
         // inner loop, no permutation overhead).
@@ -40,7 +103,8 @@ fn main() {
             5,
             Duration::from_millis(300),
         );
-        let secs = bench_secs(|| engine.spmv_new_order(&xp, &mut yp), 5, Duration::from_millis(300));
+        let secs =
+            bench_secs(|| engine.spmv_new_order(&xp, &mut yp), 5, Duration::from_millis(300));
         println!(
             "  ehyb hot loop lane-major (before): {:.3} ms = {:.3} GFLOPS",
             secs_lane * 1e3,
@@ -128,6 +192,16 @@ fn main() {
                 secs_seq / secs_fused
             );
         }
+    }
+
+    if let Some(path) = &out_path {
+        let label = if smoke { "ci-smoke" } else { "hotpath" };
+        let j = bench_json(label, &json_cases);
+        std::fs::write(path, j.dump()).expect("write bench JSON");
+        println!("wrote {path} ({} cases)", json_cases.len());
+    }
+    if smoke {
+        return; // CI smoke stops before the PJRT probe
     }
 
     // PJRT latency (bucketed shapes).

@@ -34,10 +34,8 @@ fn main() {
         }
     }
     let table = tables::speedup_table::<f32>(&runs);
-    println!(
-        "{}",
-        report::speedup_markdown("Table 1 — EHYB speedup, single precision (simulated V100)", &table)
-    );
+    let title1 = "Table 1 — EHYB speedup, single precision (simulated V100)";
+    println!("{}", report::speedup_markdown(title1, &table));
     let fig = tables::figure_series::<f32>(&runs);
     println!("Figure 2 summary:\n{}", report::figure_summary(&fig));
     std::fs::create_dir_all("bench_out").ok();

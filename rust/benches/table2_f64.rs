@@ -37,10 +37,8 @@ fn main() {
     let specs94 = suite::suite94(scale);
     let runs64 = sweep::<f64>(&specs94, &dev, "94/f64");
     let table = tables::speedup_table::<f64>(&runs64);
-    println!(
-        "{}",
-        report::speedup_markdown("Table 2 — EHYB speedup, double precision (simulated V100)", &table)
-    );
+    let title2 = "Table 2 — EHYB speedup, double precision (simulated V100)";
+    println!("{}", report::speedup_markdown(title2, &table));
     let fig4 = tables::figure_series::<f64>(&runs64);
     println!("Figure 4 summary:\n{}", report::figure_summary(&fig4));
     std::fs::write("bench_out/fig4_f64_94.csv", report::figure_csv(&fig4)).ok();

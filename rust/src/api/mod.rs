@@ -32,6 +32,7 @@ use crate::coordinator::precond::Preconditioner;
 use crate::coordinator::service::{self, BatchKernel, SpmvService};
 use crate::coordinator::solver::{self, SolveReport, SolverConfig};
 use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::shard::{ShardPlan, ShardSpec, ShardStrategy, ShardedEngine};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
 use crate::spmv::csr5::Csr5Like;
@@ -176,6 +177,8 @@ pub struct SpmvContextBuilder<S: Scalar> {
     tune: Option<TuneLevel>,
     cache_dir: Option<PathBuf>,
     cache_disabled: bool,
+    shards: Option<ShardSpec>,
+    shard_strategy: ShardStrategy,
 }
 
 impl<S: Scalar> SpmvContextBuilder<S> {
@@ -220,12 +223,48 @@ impl<S: Scalar> SpmvContextBuilder<S> {
         self
     }
 
+    /// Execute through a row-sharded engine: the matrix is split into
+    /// contiguous row shards ([`ShardSpec::Auto`] = one per worker
+    /// thread), one engine is prepared per shard, and every
+    /// `spmv`/`spmv_batch` fans out shard-parallel with each shard
+    /// writing its own disjoint row range of `y`. See [`crate::shard`]
+    /// for the per-kind bit-identity contract. Combined with
+    /// [`Self::tune`] on an EHYB build, **each shard tunes its diagonal
+    /// block independently** and the winners persist per shard
+    /// fingerprint in the plan cache ([`SpmvContext::tuned_shards`]).
+    pub fn shards(mut self, spec: ShardSpec) -> Self {
+        self.shards = Some(spec);
+        self
+    }
+
+    /// Where shard boundaries go (default
+    /// [`ShardStrategy::CacheAware`]). Only meaningful with
+    /// [`Self::shards`].
+    pub fn shard_strategy(mut self, strategy: ShardStrategy) -> Self {
+        self.shard_strategy = strategy;
+        self
+    }
+
     /// Run preprocessing / tuning (as requested) and prepare the engine.
     pub fn build(self) -> crate::Result<SpmvContext<S>> {
-        let SpmvContextBuilder { matrix, kind, mut config, tune, cache_dir, cache_disabled } = self;
+        let SpmvContextBuilder {
+            matrix,
+            kind,
+            mut config,
+            tune,
+            cache_dir,
+            cache_disabled,
+            shards,
+            shard_strategy,
+        } = self;
+        // The whole-matrix tuning arm consumes `cache_dir`; per-shard
+        // tuning below resolves its own store from the same setting.
+        let shard_cache_dir = cache_dir.clone();
         let mut tuned: Option<TunedPlan> = None;
         let (resolved, plan): (EngineKind, Option<EhybPlan<S>>) = match (kind, tune) {
-            (EngineKind::Ehyb, None) => (EngineKind::Ehyb, Some(EhybPlan::build(&matrix, &config)?)),
+            (EngineKind::Ehyb, None) => {
+                (EngineKind::Ehyb, Some(EhybPlan::build(&matrix, &config)?))
+            }
             (concrete, None) if concrete != EngineKind::Auto => (concrete, None),
             // Tuner-routed: explicit `.tune(..)` and/or `Auto`.
             (requested, tune_level) => {
@@ -312,6 +351,66 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                 }
             }
         };
+        // --- Row sharding (ISSUE 4 tentpole): split into contiguous
+        // row shards, prepare one engine per shard from the resolved
+        // kind and the final (possibly tuned) config, and preset the
+        // engine cell with the sharded fan-out engine. EHYB shards
+        // additionally tune their diagonal blocks independently when
+        // `.tune(..)` was requested, each keyed by its own block
+        // fingerprint in the plan cache.
+        let mut shard_plan: Option<ShardPlan> = None;
+        let mut shard_tuned: Vec<Option<TunedPlan>> = Vec::new();
+        let mut sharded: Option<Arc<ShardedEngine<S>>> = None;
+        if let Some(spec) = shards {
+            let k = spec.resolve(matrix.nrows());
+            let splan = ShardPlan::new(&matrix, k, shard_strategy);
+            let shard_overrides = match (resolved, tune) {
+                (EngineKind::Ehyb, Some(level)) if k > 1 => {
+                    let store = if cache_disabled {
+                        None
+                    } else {
+                        shard_cache_dir.map(PlanStore::new).or_else(PlanStore::from_env)
+                    };
+                    let mut overrides = Vec::with_capacity(splan.num_shards());
+                    for rg in splan.ranges() {
+                        let (block, _halo) = matrix.diag_block_split(rg.start, rg.end);
+                        if block.nnz() == 0 {
+                            // Pure-halo shard: nothing to tune.
+                            shard_tuned.push(None);
+                            overrides.push((config.clone(), None));
+                            continue;
+                        }
+                        let (tp, cfg2, bplan) =
+                            tune_shard_block(&block, &config, level, store.as_ref())?;
+                        shard_tuned.push(Some(tp));
+                        overrides.push((cfg2, bplan));
+                    }
+                    Some(overrides)
+                }
+                (EngineKind::Ehyb, Some(_)) => {
+                    // K = 1: the single shard IS the whole matrix — its
+                    // block fingerprint equals the whole-matrix
+                    // fingerprint, so a second per-shard search would
+                    // fight the whole-matrix entry over the same cache
+                    // file (their base-config keys differ, each lookup
+                    // would miss and clobber the other's write). Reuse
+                    // the whole-matrix winner and its already-built
+                    // plan instead of searching or preprocessing again.
+                    shard_tuned.push(tuned.clone());
+                    Some(vec![(config.clone(), plan.clone())])
+                }
+                _ => None,
+            };
+            let engine =
+                ShardedEngine::build(&matrix, resolved, &config, &splan, shard_overrides)?;
+            let arc = Arc::new(engine);
+            sharded = Some(arc.clone());
+            shard_plan = Some(splan);
+        }
+        let engine = OnceLock::new();
+        if let Some(arc) = &sharded {
+            let _ = engine.set(arc.clone() as Arc<dyn SpmvEngine<S>>);
+        }
         Ok(SpmvContext {
             matrix,
             config,
@@ -319,9 +418,55 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             requested: kind,
             plan,
             tuned,
-            engine: OnceLock::new(),
+            shard_plan,
+            shard_tuned,
+            sharded,
+            engine,
         })
     }
+}
+
+/// Per-shard OSKI tune of one EHYB diagonal block — the whole-matrix
+/// cache policy of [`SpmvContextBuilder::build`] applied per shard:
+/// honor a usable cached entry (verifying it still rebuilds), otherwise
+/// search fresh and persist only real search results. Every shard keys
+/// its own plan-cache entry by its block's structural fingerprint, so a
+/// restarted sharded server warm-starts all K searches. Returns the
+/// winning plan, the overlaid config, and the **already-built**
+/// [`EhybPlan`] (from the hit verification or the search itself), so
+/// the engine construction downstream never preprocesses the block a
+/// second time.
+#[allow(clippy::type_complexity)]
+fn tune_shard_block<S: Scalar>(
+    block: &Csr<S>,
+    base: &PreprocessConfig,
+    level: TuneLevel,
+    store: Option<&PlanStore>,
+) -> crate::Result<(TunedPlan, PreprocessConfig, Option<EhybPlan<S>>)> {
+    let fp = Fingerprint::of(block);
+    let device = autotune::device_key(&base.device);
+    let cfg_key = autotune::config_key(base);
+    let hit = store
+        .and_then(|s| s.load(&fp.key(), &device, S::NAME, EngineKind::Ehyb.name()).ok().flatten())
+        .filter(|tp| tp.usable_for(EngineKind::Ehyb, level, &cfg_key));
+    if let Some(tp) = hit {
+        let cfg = tp.apply(base);
+        // A stale entry that no longer rebuilds is a miss, not a build
+        // failure (same fallback the whole-matrix path takes); a good
+        // one hands its verification build straight to the engine.
+        if let Ok(bplan) = EhybPlan::build(block, &cfg) {
+            return Ok((tp, cfg, Some(bplan)));
+        }
+    }
+    let out =
+        autotune::tuner::tune_with_fingerprint(block, base, EngineKind::Ehyb, level, Some(fp))?;
+    if out.searched() {
+        if let Some(s) = store {
+            let _ = s.save(&out.plan);
+        }
+    }
+    let cfg = out.plan.apply(base);
+    Ok((out.plan, cfg, out.ehyb))
 }
 
 /// A prepared SpMV pipeline: matrix + (optional) EHYB plan + engine.
@@ -336,9 +481,19 @@ pub struct SpmvContext<S: Scalar> {
     /// Present iff the build was tuner-routed (`.tune(..)` or `Auto`):
     /// the winning plan with its score provenance.
     tuned: Option<TunedPlan>,
+    /// Present iff the build was sharded (`.shards(..)`): the row
+    /// ranges the engine fans out over.
+    shard_plan: Option<ShardPlan>,
+    /// Per-shard tuned plans (sharded EHYB builds with `.tune(..)`;
+    /// `None` entries are pure-halo shards with nothing to tune).
+    shard_tuned: Vec<Option<TunedPlan>>,
+    /// The concrete sharded engine (same object the engine cell holds)
+    /// — kept typed so per-shard stats stay reachable.
+    sharded: Option<Arc<ShardedEngine<S>>>,
     /// Constructed lazily on first execution: plan-only consumers (the
     /// harness reads partition/timing provenance off `plan()`) never
-    /// pay for the engine's own copy of the format.
+    /// pay for the engine's own copy of the format. Sharded builds
+    /// preset this cell at build time.
     engine: OnceLock<Arc<dyn SpmvEngine<S>>>,
 }
 
@@ -353,6 +508,8 @@ impl<S: Scalar> SpmvContext<S> {
             tune: None,
             cache_dir: None,
             cache_disabled: false,
+            shards: None,
+            shard_strategy: ShardStrategy::default(),
         }
     }
 
@@ -389,9 +546,34 @@ impl<S: Scalar> SpmvContext<S> {
     /// The tuner's winning plan + score provenance — present iff this
     /// context was built through the tuner (`.tune(..)` or
     /// [`EngineKind::Auto`]), whether searched fresh or loaded from the
-    /// plan cache.
+    /// plan cache. On sharded EHYB builds this is the **whole-matrix**
+    /// plan; the per-shard winners are [`Self::tuned_shards`].
     pub fn tuned(&self) -> Option<&TunedPlan> {
         self.tuned.as_ref()
+    }
+
+    /// Per-shard tuned plans, in shard order — non-empty iff this build
+    /// combined [`SpmvContextBuilder::shards`] with
+    /// [`SpmvContextBuilder::tune`] on an EHYB pipeline. A `None` entry
+    /// is a pure-halo shard (empty diagonal block, nothing to tune).
+    pub fn tuned_shards(&self) -> &[Option<TunedPlan>] {
+        &self.shard_tuned
+    }
+
+    /// Number of row shards this context executes with (1 = unsharded).
+    pub fn shards(&self) -> usize {
+        self.shard_plan.as_ref().map_or(1, ShardPlan::num_shards)
+    }
+
+    /// The sharded engine's row ranges, when this build was sharded.
+    pub fn shard_ranges(&self) -> Option<&[std::ops::Range<usize>]> {
+        self.shard_plan.as_ref().map(ShardPlan::ranges)
+    }
+
+    /// The concrete sharded engine (per-shard execution stats live
+    /// here), when this build was sharded.
+    pub fn sharded(&self) -> Option<&ShardedEngine<S>> {
+        self.sharded.as_deref()
     }
 
     fn engine_cell(&self) -> &Arc<dyn SpmvEngine<S>> {
@@ -446,7 +628,11 @@ impl<S: Scalar> SpmvContext<S> {
     /// Dimension-checked batched SpMV over borrowed contiguous views:
     /// `ys[b] = A xs[b]` for every column of the batch, through the
     /// engine's fused SpMM path when it has one.
-    pub fn spmv_batch(&self, xs: VecBatch<'_, S>, ys: &mut VecBatchMut<'_, S>) -> crate::Result<()> {
+    pub fn spmv_batch(
+        &self,
+        xs: VecBatch<'_, S>,
+        ys: &mut VecBatchMut<'_, S>,
+    ) -> crate::Result<()> {
         Self::check_dim("x batch rows", self.ncols(), xs.n())?;
         Self::check_dim("y batch rows", self.nrows(), ys.n())?;
         Self::check_dim("batch width", xs.width(), ys.width())?;
@@ -473,6 +659,29 @@ impl<S: Scalar> SpmvContext<S> {
         max_batch: usize,
         queue_bound: usize,
     ) -> crate::Result<SpmvService<S>> {
+        self.serve_inner(max_batch, queue_bound, false)
+    }
+
+    /// [`Self::serve_bounded`] with a **shed-rate-adaptive** fused-batch
+    /// limit: `max_batch` is the cap; the live limit halves when
+    /// submissions shed with [`EhybError::Overloaded`] and doubles back
+    /// while the queue drains idle. See
+    /// [`SpmvService::spawn_adaptive`]; the live limit is observable in
+    /// `ServiceMetrics::adaptive_max_batch`.
+    pub fn serve_adaptive(
+        &self,
+        max_batch: usize,
+        queue_bound: usize,
+    ) -> crate::Result<SpmvService<S>> {
+        self.serve_inner(max_batch, queue_bound, true)
+    }
+
+    fn serve_inner(
+        &self,
+        max_batch: usize,
+        queue_bound: usize,
+        adaptive: bool,
+    ) -> crate::Result<SpmvService<S>> {
         if self.nrows() != self.ncols() {
             return Err(EhybError::UnsupportedFormat(format!(
                 "SpMV service requires a square matrix, got {}x{}",
@@ -482,16 +691,16 @@ impl<S: Scalar> SpmvContext<S> {
         }
         let engine = self.engine_arc();
         let nrows = self.nrows();
-        SpmvService::spawn_bounded(
-            move || {
-                let fb = engine.format_bytes();
-                let kernel: BatchKernel<S> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
-                Ok((kernel, fb))
-            },
-            nrows,
-            max_batch,
-            queue_bound,
-        )
+        let make = move || {
+            let fb = engine.format_bytes();
+            let kernel: BatchKernel<S> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+            Ok((kernel, fb))
+        };
+        if adaptive {
+            SpmvService::spawn_adaptive(make, nrows, max_batch, queue_bound)
+        } else {
+            SpmvService::spawn_bounded(make, nrows, max_batch, queue_bound)
+        }
     }
 
     /// Iterative solvers running over this context's engine.
@@ -784,6 +993,106 @@ mod tests {
         assert!(ctx.plan().is_some());
         // Untuned builds carry no TunedPlan.
         assert!(ctx_for(EngineKind::Ehyb).tuned().is_none());
+    }
+
+    #[test]
+    fn sharded_context_matches_unsharded_bitwise_on_row_local_engine() {
+        let m = poisson2d::<f64>(16, 16);
+        let x: Vec<f64> = (0..256).map(|i| ((i * 11 + 5) % 19) as f64 * 0.25 - 2.0).collect();
+        let base = ctx_for(EngineKind::CsrScalar);
+        let y_ref = base.spmv_alloc(&x).unwrap();
+        for k in [1usize, 2, 7] {
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(EngineKind::CsrScalar)
+                .shards(ShardSpec::Count(k))
+                .build()
+                .unwrap();
+            assert_eq!(ctx.shards(), k);
+            assert_eq!(ctx.shard_ranges().unwrap().len(), k);
+            assert!(ctx.sharded().is_some());
+            let y = ctx.spmv_alloc(&x).unwrap();
+            assert_eq!(y, y_ref, "k={k}");
+        }
+        // Unsharded contexts report one shard and no sharded engine.
+        assert_eq!(base.shards(), 1);
+        assert!(base.sharded().is_none());
+        assert!(base.shard_ranges().is_none());
+    }
+
+    #[test]
+    fn sharded_ehyb_context_keeps_whole_matrix_plan() {
+        let m = poisson2d::<f64>(16, 16);
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .shards(ShardSpec::Count(3))
+            .build()
+            .unwrap();
+        // The whole-matrix plan survives for observability; execution
+        // goes through the sharded engine.
+        assert!(ctx.plan().is_some());
+        assert_eq!(ctx.engine().name(), "sharded");
+        assert_eq!(ctx.sharded().unwrap().num_shards(), 3);
+        let x = vec![1.0; 256];
+        let y = ctx.spmv_alloc(&x).unwrap();
+        let oracle = ctx.matrix().spmv_f64_oracle(&x);
+        assert_allclose(&y, &oracle, 1e-10, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn sharded_tuned_build_reports_per_shard_plans() {
+        let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .tune(crate::autotune::TuneLevel::Heuristic)
+            .no_plan_cache()
+            .shards(ShardSpec::Count(4))
+            .build()
+            .unwrap();
+        assert_eq!(ctx.tuned_shards().len(), 4);
+        for (i, tp) in ctx.tuned_shards().iter().enumerate() {
+            let tp = tp.as_ref().unwrap_or_else(|| panic!("shard {i} has a diagonal block"));
+            assert_eq!(tp.engine, EngineKind::Ehyb);
+            assert!(tp.score_secs <= tp.default_score_secs, "shard {i}");
+            assert_eq!(tp.scope, "ehyb");
+        }
+        // Untuned sharded builds carry no per-shard plans.
+        let m2 = poisson2d::<f64>(8, 8);
+        let ctx2 = SpmvContext::builder(m2).shards(ShardSpec::Count(2)).build().unwrap();
+        assert!(ctx2.tuned_shards().is_empty());
+    }
+
+    #[test]
+    fn single_shard_tuned_build_reuses_whole_matrix_plan() {
+        // K = 1: the shard block IS the matrix, so its fingerprint
+        // equals the whole-matrix fingerprint. The build must reuse the
+        // whole-matrix winner instead of running a second search that
+        // would fight over the same cache file (their base-config keys
+        // differ after the first tune applies its knobs).
+        let m = unstructured_mesh::<f64>(24, 24, 0.4, 3);
+        let dir = std::env::temp_dir()
+            .join(format!("ehyb-api-shard1-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .tune(crate::autotune::TuneLevel::Heuristic)
+            .plan_cache(&dir)
+            .shards(ShardSpec::Count(1))
+            .build()
+            .unwrap();
+        assert_eq!(ctx.shards(), 1);
+        assert_eq!(ctx.tuned_shards().len(), 1);
+        assert_eq!(ctx.tuned_shards()[0].as_ref(), ctx.tuned());
+        // Exactly one persisted entry: the whole-matrix plan.
+        let entries = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+            .count();
+        assert_eq!(entries, 1, "K=1 must not write a second, competing cache entry");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

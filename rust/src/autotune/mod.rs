@@ -18,6 +18,15 @@
 //! Callers normally reach all of this through the facade:
 //! `SpmvContext::builder(m).tune(level).plan_cache(dir).build()?` —
 //! see [`crate::api::SpmvContextBuilder::tune`].
+//!
+//! **Shard-aware tuning** (the ISSUE 3 follow-up, landed with the
+//! [`crate::shard`] layer): a sharded EHYB build
+//! (`.shards(..).tune(..)`) runs one search per shard over that
+//! shard's square diagonal block, and each winner persists under the
+//! *block's own* [`Fingerprint`] — so shard-count or boundary changes
+//! re-key naturally, identical shards (e.g. repeating stencil bands)
+//! share entries, and a restarted sharded server warm-starts all K
+//! searches from the store.
 
 pub mod fingerprint;
 pub mod store;

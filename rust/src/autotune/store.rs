@@ -137,7 +137,8 @@ mod tests {
     }
 
     fn temp_store(tag: &str) -> PlanStore {
-        PlanStore::new(std::env::temp_dir().join(format!("ehyb-store-{tag}-{}", std::process::id())))
+        let dir = std::env::temp_dir().join(format!("ehyb-store-{tag}-{}", std::process::id()));
+        PlanStore::new(dir)
     }
 
     #[test]

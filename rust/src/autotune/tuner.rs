@@ -171,13 +171,15 @@ impl TunedPlan {
         fn str_field(j: &Json, k: &str) -> crate::Result<String> {
             Ok(field(j, k)?
                 .as_str()
-                .ok_or_else(|| crate::EhybError::Parse(format!("tuned plan field {k:?} not a string")))?
+                .ok_or_else(|| {
+                    crate::EhybError::Parse(format!("tuned plan field {k:?} not a string"))
+                })?
                 .to_string())
         }
         fn num_field(j: &Json, k: &str) -> crate::Result<f64> {
-            field(j, k)?
-                .as_f64()
-                .ok_or_else(|| crate::EhybError::Parse(format!("tuned plan field {k:?} not a number")))
+            field(j, k)?.as_f64().ok_or_else(|| {
+                crate::EhybError::Parse(format!("tuned plan field {k:?} not a number"))
+            })
         }
         fn opt_usize(j: &Json, k: &str) -> crate::Result<Option<usize>> {
             match field(j, k)? {
@@ -732,8 +734,8 @@ mod tests {
         for i in 0..4 {
             coo.push(i, i, 1.0);
         }
-        let out = tune(&coo.to_csr(), &PreprocessConfig::default(), EngineKind::Auto, TuneLevel::Heuristic)
-            .unwrap();
+        let cfg = PreprocessConfig::default();
+        let out = tune(&coo.to_csr(), &cfg, EngineKind::Auto, TuneLevel::Heuristic).unwrap();
         assert_ne!(out.plan.engine, EngineKind::Ehyb);
         assert!(out.ehyb.is_none());
     }

@@ -136,7 +136,12 @@ pub struct ServiceMetrics {
     pub batches: AtomicU64,
     /// Kernel latency each request observed (the fused call's wall time).
     pub spmv_latency: LatencyHistogram,
-    /// Width of every fused kernel call.
+    /// Width of every fused kernel call. Invariant: only batches that
+    /// actually **executed** are recorded here — a shed request's width
+    /// never enters this histogram (sheds are counted in
+    /// [`Self::shed`] at submit time, before any width accounting), so
+    /// `batch_width.count() == batches` always holds. Pinned by
+    /// `service::tests::shed_requests_never_recorded_in_width_histogram`.
     pub batch_width: WidthHistogram,
     /// Estimated bytes streamed by the engine: the matrix format once
     /// per fused call plus `2 · nrows · sizeof(S)` per request (x in,
@@ -145,6 +150,11 @@ pub struct ServiceMetrics {
     /// Requests shed because the bounded queue was full
     /// (`EhybError::Overloaded`) — recorded client-side at submit.
     pub shed: AtomicU64,
+    /// Current fused-batch limit of an **adaptive** service
+    /// (`spawn_adaptive` / `serve_adaptive`): shrinks when submissions
+    /// shed, grows back while the queue drains idle. 0 = fixed-limit
+    /// service (the default `spawn`/`serve` paths never touch it).
+    pub adaptive_max_batch: AtomicU64,
 }
 
 impl Default for ServiceMetrics {
@@ -162,6 +172,7 @@ impl ServiceMetrics {
             batch_width: WidthHistogram::new(),
             bytes_moved: AtomicU64::new(0),
             shed: AtomicU64::new(0),
+            adaptive_max_batch: AtomicU64::new(0),
         }
     }
 
@@ -210,6 +221,14 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.mean_secs(), 0.0);
         assert_eq!(h.quantile_secs(0.9), 0.0);
+    }
+
+    #[test]
+    fn adaptive_gauge_defaults_to_fixed() {
+        // 0 marks a fixed-limit service; adaptive services overwrite it
+        // with their live limit.
+        let m = ServiceMetrics::new();
+        assert_eq!(m.adaptive_max_batch.load(Ordering::Relaxed), 0);
     }
 
     #[test]

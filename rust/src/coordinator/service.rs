@@ -19,6 +19,14 @@
 //! typed [`EhybError::Overloaded`] instead of growing an unbounded
 //! backlog — latency stays bounded and callers get an explicit signal
 //! to back off (counted in [`ServiceMetrics::shed`]).
+//!
+//! An **adaptive** service ([`SpmvService::spawn_adaptive`] /
+//! `SpmvContext::serve_adaptive`) additionally floats the fused-batch
+//! limit on the observed shed rate: sheds halve it (shorter kernel
+//! calls return replies — and queue slots — sooner under overload),
+//! idle drains double it back toward the cap (full fusion for
+//! well-behaved load). The live limit is published in
+//! [`ServiceMetrics::adaptive_max_batch`].
 
 use super::metrics::ServiceMetrics;
 use crate::api::batch::{VecBatch, VecBatchMut};
@@ -190,9 +198,50 @@ impl<S: Scalar> SpmvService<S> {
     where
         F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
+        Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, false)
+    }
+
+    /// [`Self::spawn_bounded`] with a **shed-rate-adaptive** fused-batch
+    /// limit: `max_batch` becomes the cap. When submissions shed
+    /// ([`EhybError::Overloaded`] observed since the last drain) the
+    /// limit halves — smaller fused batches return replies sooner, so a
+    /// saturated queue drains steadily instead of stalling behind one
+    /// wide kernel call; while the queue drains idle (a drain pulls
+    /// fewer requests than the limit) it doubles back toward the cap,
+    /// recovering full fusion for well-behaved load. The live limit is
+    /// visible in [`ServiceMetrics::adaptive_max_batch`].
+    pub fn spawn_adaptive<F>(
+        make_engine: F,
+        nrows: usize,
+        max_batch: usize,
+        queue_bound: usize,
+    ) -> crate::Result<Self>
+    where
+        F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
+    {
+        Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, true)
+    }
+
+    fn spawn_inner<F>(
+        make_engine: F,
+        nrows: usize,
+        max_batch: usize,
+        queue_bound: usize,
+        adaptive: bool,
+    ) -> crate::Result<Self>
+    where
+        F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
+    {
         let queue_bound = queue_bound.max(1);
         let (tx, rx) = mpsc::sync_channel::<Msg<S>>(queue_bound);
         let metrics = Arc::new(ServiceMetrics::new());
+        if adaptive {
+            // Publish the starting limit before the caller can observe
+            // the service (the thread only updates it per drain).
+            metrics
+                .adaptive_max_batch
+                .store(max_batch.max(1) as u64, std::sync::atomic::Ordering::Relaxed);
+        }
         let metrics_thread = metrics.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
         let handle = std::thread::Builder::new().name("spmv-service".into()).spawn(move || {
@@ -212,6 +261,11 @@ impl<S: Scalar> SpmvService<S> {
             let mut xbuf: Vec<S> = Vec::new();
             let mut ybuf: Vec<S> = Vec::new();
             let mut batch: Vec<(Vec<S>, mpsc::Sender<Vec<S>>)> = Vec::new();
+            // Adaptive mode: `limit` floats in [1, max_batch], halving
+            // when sheds were observed since the last drain and doubling
+            // back while the queue drains idle. Fixed mode never moves.
+            let mut limit = max_batch.max(1);
+            let mut last_shed = 0u64;
             loop {
                 // Block for the first request, then drain what's queued.
                 let mut shutdown = false;
@@ -219,7 +273,7 @@ impl<S: Scalar> SpmvService<S> {
                     Ok(Msg::Spmv { x, reply }) => batch.push((x, reply)),
                     Ok(Msg::Shutdown) | Err(_) => break,
                 }
-                while batch.len() < max_batch {
+                while batch.len() < limit {
                     match rx.try_recv() {
                         Ok(Msg::Spmv { x, reply }) => batch.push((x, reply)),
                         Ok(Msg::Shutdown) => {
@@ -228,6 +282,21 @@ impl<S: Scalar> SpmvService<S> {
                         }
                         Err(_) => break,
                     }
+                }
+                if adaptive {
+                    use std::sync::atomic::Ordering;
+                    let shed_now = metrics_thread.shed.load(Ordering::Relaxed);
+                    if shed_now > last_shed {
+                        // Producers are being shed: shorter fused calls
+                        // return replies (and free queue slots) sooner.
+                        limit = (limit / 2).max(1);
+                    } else if batch.len() < limit {
+                        // Queue drained dry below the limit: recover
+                        // fusion width for the next burst.
+                        limit = (limit * 2).min(max_batch.max(1));
+                    }
+                    last_shed = shed_now;
+                    metrics_thread.adaptive_max_batch.store(limit as u64, Ordering::Relaxed);
                 }
                 serve_fused(
                     &mut engine,
@@ -520,6 +589,139 @@ mod tests {
         assert_eq!(rx1.recv().unwrap().len(), 256);
         assert_eq!(rx2.recv().unwrap().len(), 256);
         drop(gate_tx); // further drains (shutdown path) must not block
+    }
+
+    #[test]
+    fn shed_requests_never_recorded_in_width_histogram() {
+        // ISSUE 4 satellite: shed accounting and the batch-width
+        // histogram must stay disjoint — a shed request's width is
+        // never recorded (widths are recorded only when a drained
+        // batch executes), so count(widths) == batches exactly.
+        let (ctx, _) = context();
+        let engine = ctx.engine_arc();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let svc: SpmvService<f64> = SpmvService::spawn_bounded(
+            move || {
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                    started_tx.send(()).unwrap();
+                    gate_rx.recv().unwrap();
+                    engine.spmv_batch(xs, ys)
+                });
+                Ok((kernel, fb))
+            },
+            256,
+            16,
+            1,
+        )
+        .unwrap();
+        let client = svc.client();
+        let rx1 = client.submit(vec![1.0; 256]).unwrap();
+        started_rx.recv().unwrap(); // r1 is inside the kernel
+        let rx2 = client.submit(vec![2.0; 256]).unwrap(); // occupies the slot
+        for _ in 0..3 {
+            assert!(matches!(client.submit(vec![3.0; 256]), Err(EhybError::Overloaded { .. })));
+        }
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        rx1.recv().unwrap();
+        rx2.recv().unwrap();
+        // Pinned counts: exactly 2 executed batches of width 1, 3 sheds.
+        assert_eq!(svc.metrics.shed.load(Ordering::Relaxed), 3);
+        assert_eq!(svc.metrics.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.metrics.batch_width.count(), 2, "width histogram counted a shed");
+        assert_eq!(svc.metrics.batch_width.max(), 1);
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn adaptive_limit_shrinks_on_shed_and_grows_when_idle() {
+        // Deterministic gate-driven schedule (same rig as
+        // full_queue_sheds): force a shed, watch the limit halve before
+        // the next drain, then watch idle drains double it back.
+        let (ctx, _) = context();
+        let engine = ctx.engine_arc();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let svc: SpmvService<f64> = SpmvService::spawn_adaptive(
+            move || {
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                    started_tx.send(()).unwrap();
+                    gate_rx.recv().unwrap();
+                    engine.spmv_batch(xs, ys)
+                });
+                Ok((kernel, fb))
+            },
+            256,
+            8, // cap
+            1, // queue bound: one waiter
+        )
+        .unwrap();
+        let client = svc.client();
+        assert_eq!(svc.metrics.adaptive_max_batch.load(Ordering::Relaxed), 8);
+        // r1 enters the kernel and blocks; r2 fills the queue slot; r3
+        // sheds.
+        let rx1 = client.submit(vec![1.0; 256]).unwrap();
+        started_rx.recv().unwrap();
+        let rx2 = client.submit(vec![2.0; 256]).unwrap();
+        assert!(matches!(client.submit(vec![3.0; 256]), Err(EhybError::Overloaded { .. })));
+        // Release r1; the service drains r2 and, having observed the
+        // shed, halves the limit before executing.
+        gate_tx.send(()).unwrap();
+        started_rx.recv().unwrap(); // r2's drain is past the adjustment
+        assert_eq!(svc.metrics.adaptive_max_batch.load(Ordering::Relaxed), 4);
+        gate_tx.send(()).unwrap();
+        rx1.recv().unwrap();
+        rx2.recv().unwrap();
+        // Idle traffic: each drain pulls one request (< limit) with no
+        // new sheds, so the limit doubles back to the cap.
+        let rx4 = client.submit(vec![4.0; 256]).unwrap();
+        started_rx.recv().unwrap();
+        assert_eq!(svc.metrics.adaptive_max_batch.load(Ordering::Relaxed), 8);
+        gate_tx.send(()).unwrap();
+        rx4.recv().unwrap();
+        drop(gate_tx);
+    }
+
+    #[test]
+    fn fixed_service_never_touches_adaptive_gauge() {
+        let (svc, _) = service();
+        let client = svc.client();
+        client.spmv(vec![1.0; 256]).unwrap();
+        assert_eq!(svc.metrics.adaptive_max_batch.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn adaptive_service_serves_correctly_under_load() {
+        let (ctx, a) = context();
+        let engine = ctx.engine_arc();
+        let svc: SpmvService<f64> = SpmvService::spawn_adaptive(
+            move || {
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+                Ok((kernel, fb))
+            },
+            256,
+            4,
+            2,
+        )
+        .unwrap();
+        let client = svc.client();
+        let xs: Vec<Vec<f64>> = (0..12)
+            .map(|t| (0..256).map(|i| ((i * 5 + t * 3) % 13) as f64 * 0.5 - 3.0).collect())
+            .collect();
+        let ys = client.spmv_many(xs.clone()).unwrap();
+        for (x, y) in xs.iter().zip(&ys) {
+            let mut want = vec![0.0; 256];
+            a.spmv(x, &mut want);
+            for i in 0..256 {
+                assert!((y[i] - want[i]).abs() < 1e-12);
+            }
+        }
+        let limit = svc.metrics.adaptive_max_batch.load(Ordering::Relaxed);
+        assert!((1..=4).contains(&limit), "live limit {limit} outside [1, cap]");
     }
 
     #[test]

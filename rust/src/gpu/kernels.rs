@@ -93,7 +93,13 @@ const PTR_BASE: u64 = 3 << 34;
 const AUX_BASE: u64 = 5 << 34;
 
 impl<'d> Ctx<'d> {
-    fn new(name: &'static str, nnz: usize, nrows: usize, dynamic: bool, dev: &'d GpuDevice) -> Self {
+    fn new(
+        name: &'static str,
+        nnz: usize,
+        nrows: usize,
+        dynamic: bool,
+        dev: &'d GpuDevice,
+    ) -> Self {
         Self {
             l2: L2Sim::new(dev.l2_bytes, dev.sector_bytes),
             dev,
@@ -439,8 +445,14 @@ pub fn ehyb<S: Scalar>(
     for s in 0..e.er_slice_width.len() {
         let base = e.er_slice_ptr[s] as usize;
         let w = e.er_slice_width[s] as usize;
-        ctx.stream_read(COL_BASE + (e.ell_cols.len() as u64 * col_bytes) + base as u64 * 4, (w * h) as u64 * 4);
-        ctx.stream_read(VAL_BASE + (e.ell_vals.len() as u64 * tau) + base as u64 * tau, (w * h) as u64 * tau);
+        ctx.stream_read(
+            COL_BASE + (e.ell_cols.len() as u64 * col_bytes) + base as u64 * 4,
+            (w * h) as u64 * 4,
+        );
+        ctx.stream_read(
+            VAL_BASE + (e.ell_vals.len() as u64 * tau) + base as u64 * tau,
+            (w * h) as u64 * tau,
+        );
         for k in 0..w {
             ctx.warp_gather_x(
                 &mut (0..h).map(|lane| {

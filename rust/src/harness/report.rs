@@ -1,10 +1,15 @@
 //! Report emission: markdown tables (for EXPERIMENTS.md) and CSV (for
-//! external plotting) from the harness aggregates, plus the service
-//! observability surface (batch-width / bytes-moved metrics).
+//! external plotting) from the harness aggregates, the service
+//! observability surface (batch-width / bytes-moved / shard metrics),
+//! and the machine-readable bench report (`BENCH_ci.json` in CI).
 
 use super::ablation::AblationRow;
 use super::tables::{Fig6Row, FigureSeries, SpeedupRow};
 use crate::coordinator::metrics::ServiceMetrics;
+use crate::runtime::json::{self, Json};
+use crate::shard::ShardedEngine;
+use crate::sparse::scalar::Scalar;
+use crate::spmv::SpmvEngine;
 use std::fmt::Write as _;
 
 /// Tables 1/2 as markdown (the paper's exact columns).
@@ -81,12 +86,13 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
     let _ = writeln!(s, "### {title}\n");
     let _ = writeln!(
         s,
-        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p99 (ms) | shed |"
+        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p99 (ms) | shed | batch limit |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|");
+    let limit = m.adaptive_max_batch.load(Ordering::Relaxed);
     let _ = writeln!(
         s,
-        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {} |",
+        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {} | {} |",
         m.requests.load(Ordering::Relaxed),
         m.batches.load(Ordering::Relaxed),
         m.batch_width.mean(),
@@ -95,6 +101,9 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
         1e3 * m.spmv_latency.mean_secs(),
         1e3 * m.spmv_latency.quantile_secs(0.99),
         m.shed.load(Ordering::Relaxed),
+        // 0 = fixed-limit service; adaptive services publish the live
+        // shed-rate-driven limit here.
+        if limit == 0 { "fixed".to_string() } else { limit.to_string() },
     );
     let _ = write!(s, "\nbatch widths:");
     for i in 0..m.batch_width.num_buckets() {
@@ -107,13 +116,81 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
     s
 }
 
+/// Per-shard execution metrics of a [`ShardedEngine`] as markdown —
+/// the sharded-service observability surface: row/nnz ownership per
+/// shard plus how many single-vector and fused-batch kernels each
+/// shard ran (one fused batch per shard per service drain).
+pub fn shard_markdown<S: Scalar>(title: &str, e: &ShardedEngine<S>) -> String {
+    use std::sync::atomic::Ordering;
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(s, "| shard | rows | nnz | nnz % | spmv calls | fused batches | lanes |");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|");
+    let total_nnz = e.nnz().max(1);
+    for (i, (st, rg)) in e.stats().iter().zip(e.ranges()).enumerate() {
+        let _ = writeln!(
+            s,
+            "| {} | {}..{} | {} | {:.1}% | {} | {} | {} |",
+            i,
+            rg.start,
+            rg.end,
+            st.nnz,
+            100.0 * st.nnz as f64 / total_nnz as f64,
+            st.spmv_calls.load(Ordering::Relaxed),
+            st.batch_calls.load(Ordering::Relaxed),
+            st.lanes.load(Ordering::Relaxed),
+        );
+    }
+    s
+}
+
+/// One matrix's engine sweep in the machine-readable bench report.
+#[derive(Clone, Debug)]
+pub struct BenchCase {
+    pub matrix: String,
+    pub n: usize,
+    pub nnz: usize,
+    /// `(engine name, GFLOPS)` rows, e.g. from
+    /// [`crate::harness::runner::bench_cpu_engines`].
+    pub engines: Vec<(String, f64)>,
+}
+
+/// The CI bench artifact (`BENCH_ci.json`): deterministic JSON via
+/// [`crate::runtime::json`] so the perf trajectory gets stable,
+/// diffable data points per commit.
+pub fn bench_json(label: &str, cases: &[BenchCase]) -> Json {
+    let cases = cases
+        .iter()
+        .map(|c| {
+            let engines = Json::Obj(
+                c.engines.iter().map(|(name, g)| (name.clone(), Json::Num(*g))).collect(),
+            );
+            json::obj([
+                ("matrix", Json::Str(c.matrix.clone())),
+                ("n", Json::Num(c.n as f64)),
+                ("nnz", Json::Num(c.nnz as f64)),
+                ("gflops", engines),
+            ])
+        })
+        .collect();
+    json::obj([
+        ("schema", Json::Str("ehyb-bench-v1".into())),
+        ("label", Json::Str(label.into())),
+        ("cases", Json::Arr(cases)),
+    ])
+}
+
 pub fn ablation_markdown(title: &str, rows: &[AblationRow]) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "### {title}\n");
     let _ = writeln!(s, "| variant | GFLOPS | ER fraction | ELL fill |");
     let _ = writeln!(s, "|---|---|---|---|");
     for r in rows {
-        let _ = writeln!(s, "| {} | {:.2} | {:.4} | {:.3} |", r.variant, r.gflops, r.er_fraction, r.ell_fill);
+        let _ = writeln!(
+            s,
+            "| {} | {:.2} | {:.4} | {:.3} |",
+            r.variant, r.gflops, r.er_fraction, r.ell_fill
+        );
     }
     s
 }
@@ -167,13 +244,66 @@ mod tests {
         m.spmv_latency.record(0.002);
         let md = service_markdown("Service", &m);
         assert!(md.contains("| 12 | 3 | 4.00 | 4 | 1024 |"), "{md}");
-        assert!(md.contains("| 2 |\n"), "shed column missing: {md}");
+        assert!(md.contains("| 2 | fixed |\n"), "shed/limit columns missing: {md}");
         assert!(md.contains("batch widths: 4+:3"), "{md}");
+        // An adaptive service publishes its live limit instead.
+        m.adaptive_max_batch.store(4, Ordering::Relaxed);
+        assert!(service_markdown("S", &m).contains("| 2 | 4 |\n"));
+    }
+
+    #[test]
+    fn shard_markdown_has_one_row_per_shard() {
+        use crate::shard::{ShardPlan, ShardStrategy, ShardedEngine};
+        let m = crate::sparse::gen::poisson2d::<f64>(12, 12);
+        let plan = ShardPlan::new(&m, 3, ShardStrategy::CacheAware);
+        let cfg = crate::preprocess::PreprocessConfig {
+            vec_size_override: Some(32),
+            ..Default::default()
+        };
+        let e = ShardedEngine::build(&m, crate::api::EngineKind::CsrScalar, &cfg, &plan, None)
+            .unwrap();
+        let x = vec![1.0; m.ncols()];
+        let mut y = vec![0.0; m.nrows()];
+        e.spmv(&x, &mut y);
+        let md = shard_markdown("Shards", &e);
+        assert_eq!(md.lines().filter(|l| l.starts_with("| ")).count(), 1 + 3, "{md}");
+        assert!(md.contains("| 0 | 0.."), "{md}");
+        // Every shard executed exactly one spmv call (lines 0..4 are
+        // title, blank, header, separator).
+        for line in md.lines().skip(4) {
+            assert!(line.contains("| 1 | 0 | 0 |"), "{md}");
+        }
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let cases = vec![BenchCase {
+            matrix: "poisson2d-16".into(),
+            n: 256,
+            nnz: 1216,
+            engines: vec![("ehyb".into(), 12.5), ("csr-scalar".into(), 8.25)],
+        }];
+        let j = bench_json("ci-smoke", &cases);
+        let text = j.dump();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(back.get("schema").and_then(Json::as_str), Some("ehyb-bench-v1"));
+        let case = &back.get("cases").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(case.get("nnz").and_then(Json::as_usize), Some(1216));
+        assert_eq!(
+            case.get("gflops").and_then(|g| g.get("ehyb")).and_then(Json::as_f64),
+            Some(12.5)
+        );
     }
 
     #[test]
     fn fig6_markdown_rows() {
-        let rows = vec![Fig6Row { matrix: "m".into(), partition_x: 700.0, reorder_x: 100.0, total_x: 800.0 }];
+        let rows = vec![Fig6Row {
+            matrix: "m".into(),
+            partition_x: 700.0,
+            reorder_x: 100.0,
+            total_x: 800.0,
+        }];
         let md = fig6_markdown(&rows);
         assert!(md.contains("| m | 700 | 100 | 800 |"));
     }

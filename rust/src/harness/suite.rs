@@ -65,7 +65,9 @@ impl MatrixSpec {
             Recipe::Poisson3d { d } => gen::poisson3d(d.0, d.1, d.2),
             Recipe::Stencil27 { d, seed } => gen::stencil27(d.0, d.1, d.2, *seed),
             Recipe::Elasticity { d, ndof, seed } => gen::elasticity3d(d.0, d.1, d.2, *ndof, *seed),
-            Recipe::Unstructured { d, extra, seed } => gen::unstructured_mesh(d.0, d.1, *extra, *seed),
+            Recipe::Unstructured { d, extra, seed } => {
+                gen::unstructured_mesh(d.0, d.1, *extra, *seed)
+            }
             Recipe::Circuit { n, deg, hubs, seed } => gen::circuit(*n, *deg, *hubs, *seed),
             Recipe::Kkt { nh, seed } => gen::kkt(*nh, *seed),
             Recipe::Banded { n, bw, fill, seed } => gen::banded(*n, *bw, *fill, *seed),
@@ -90,12 +92,32 @@ pub fn suite16(s: Scale) -> Vec<MatrixSpec> {
         mk("cant-like", "3D problem", Recipe::Stencil27 { d: d3(8, 29, 63), seed: 101 }),
         mk("consph-like", "3D problem", Recipe::Stencil27 { d: d3(9, 32, 69), seed: 102 }),
         mk("pwtk-like", "Structural", Recipe::Elasticity { d: d3(6, 20, 42), ndof: 3, seed: 103 }),
-        mk("shipsec5-like", "Structural", Recipe::Elasticity { d: d3(6, 19, 39), ndof: 3, seed: 104 }),
-        mk("bmwcra_1-like", "Structural", Recipe::Elasticity { d: d3(6, 18, 37), ndof: 3, seed: 105 }),
-        mk("crankseg_2-like", "Structural", Recipe::Elasticity { d: d3(5, 14, 28), ndof: 3, seed: 106 }),
+        mk("shipsec5-like", "Structural", Recipe::Elasticity {
+            d: d3(6, 19, 39),
+            ndof: 3,
+            seed: 104,
+        }),
+        mk("bmwcra_1-like", "Structural", Recipe::Elasticity {
+            d: d3(6, 18, 37),
+            ndof: 3,
+            seed: 105,
+        }),
+        mk("crankseg_2-like", "Structural", Recipe::Elasticity {
+            d: d3(5, 14, 28),
+            ndof: 3,
+            seed: 106,
+        }),
         mk("ldoor-like", "Structural", Recipe::Elasticity { d: d3(7, 22, 68), ndof: 3, seed: 107 }),
-        mk("audikw_1-like", "Structural", Recipe::Elasticity { d: d3(7, 21, 68), ndof: 3, seed: 108 }),
-        mk("boneS10-like", "Bio Engineering", Recipe::Elasticity { d: d3(7, 21, 67), ndof: 3, seed: 109 }),
+        mk("audikw_1-like", "Structural", Recipe::Elasticity {
+            d: d3(7, 21, 68),
+            ndof: 3,
+            seed: 108,
+        }),
+        mk("boneS10-like", "Bio Engineering", Recipe::Elasticity {
+            d: d3(7, 21, 67),
+            ndof: 3,
+            seed: 109,
+        }),
         mk("atmosmodj-like", "CFD", Recipe::Poisson3d { d: d3(11, 48, 108) }),
         mk("G3_circuit-like", "Circuit Simulation", Recipe::Circuit {
             n: s.dim(2_000, 60_000, 1_500_000),
@@ -110,8 +132,16 @@ pub fn suite16(s: Scale) -> Vec<MatrixSpec> {
             seed: 111,
         }),
         mk("nlpkkt80-like", "Optimization", Recipe::Kkt { nh: s.dim(7, 26, 56), seed: 112 }),
-        mk("F1-like", "Structural", Recipe::Unstructured { d: d2(40, 190, 585), extra: 0.8, seed: 113 }),
-        mk("offshore-like", "Electromagnetics", Recipe::Unstructured { d: d2(35, 165, 510), extra: 0.5, seed: 114 }),
+        mk("F1-like", "Structural", Recipe::Unstructured {
+            d: d2(40, 190, 585),
+            extra: 0.8,
+            seed: 113,
+        }),
+        mk("offshore-like", "Electromagnetics", Recipe::Unstructured {
+            d: d2(35, 165, 510),
+            extra: 0.5,
+            seed: 114,
+        }),
     ]
 }
 
@@ -146,7 +176,11 @@ pub fn suite94(s: Scale) -> Vec<MatrixSpec> {
     for i in 0..12 {
         let base = 6 + i % 5;
         let d = s.dim(base, base * 6, base * 9);
-        push(format!("fem3d_{i:02}"), "3D Problem", Recipe::Stencil27 { d: (d, d, d), seed: 300 + i as u64 });
+        push(
+            format!("fem3d_{i:02}"),
+            "3D Problem",
+            Recipe::Stencil27 { d: (d, d, d), seed: 300 + i as u64 },
+        );
     }
     // Electromagnetics / unstructured: 12.
     for i in 0..12 {
@@ -155,7 +189,11 @@ pub fn suite94(s: Scale) -> Vec<MatrixSpec> {
         push(
             format!("em_{i:02}"),
             "Electromagnetics",
-            Recipe::Unstructured { d: (d, d), extra: 0.4 + 0.1 * (i % 3) as f64, seed: 400 + i as u64 },
+            Recipe::Unstructured {
+                d: (d, d),
+                extra: 0.4 + 0.1 * (i % 3) as f64,
+                seed: 400 + i as u64,
+            },
         );
     }
     // Biomedical (elasticity-like with higher variance): 8.
@@ -170,11 +208,17 @@ pub fn suite94(s: Scale) -> Vec<MatrixSpec> {
     }
     // Circuit / power: 10.
     for i in 0..10 {
-        let nn = s.dim(1_500 + 500 * (i % 4), 150_000 + 50_000 * (i % 4), 1_000_000 + 400_000 * (i % 4));
+        let nn =
+            s.dim(1_500 + 500 * (i % 4), 150_000 + 50_000 * (i % 4), 1_000_000 + 400_000 * (i % 4));
         push(
             format!("circuit_{i:02}"),
             "Circuit Simulation",
-            Recipe::Circuit { n: nn, deg: 3 + i % 3, hubs: 0.001 * (1 + i % 4) as f64, seed: 600 + i as u64 },
+            Recipe::Circuit {
+                n: nn,
+                deg: 3 + i % 3,
+                hubs: 0.001 * (1 + i % 4) as f64,
+                seed: 600 + i as u64,
+            },
         );
     }
     // Optimization (KKT): 6.

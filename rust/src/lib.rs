@@ -87,6 +87,17 @@
 //!     .build()?;
 //! let plan = tuned.tuned().expect("tuner-routed build");
 //! assert!(plan.score_secs <= plan.default_score_secs); // never worse
+//!
+//! // Row-sharded execution: split the matrix into contiguous row
+//! // shards (Auto = one per worker thread), one prepared engine per
+//! // shard, every kernel fanning out shard-parallel with disjoint `y`
+//! // ranges. See `examples/sharded.rs` for the full tour (per-shard
+//! // tuning, per-shard metrics, sharded serving).
+//! let m3 = poisson2d::<f64>(32, 32);
+//! let ctx3 = SpmvContext::builder(m3).shards(ehyb::ShardSpec::Auto).build()?;
+//! assert!(ctx3.shards() >= 1);
+//! let y3 = ctx3.spmv_alloc(&x)?;
+//! assert_eq!(y3.len(), n);
 //! # Ok::<(), ehyb::EhybError>(())
 //! ```
 //!
@@ -111,12 +122,19 @@
 //!   service's request fusion / [`SpmvContext::solver`]'s `cg_many`)
 //!   whenever several vectors share one matrix: SpMV is memory-bound,
 //!   so batch width multiplies arithmetic intensity.
+//! * **Sharding** — `builder(m).shards(ShardSpec::Auto)` splits the
+//!   matrix into per-core row shards ([`shard`]): every kernel fans
+//!   out shard-parallel, each shard's format + x working set sized for
+//!   a private cache, and sharded EHYB builds tune + cache plans **per
+//!   shard**. Row-local engines stay bit-identical to the unsharded
+//!   kernel; see [`shard`] for the full contract.
 
 pub mod util;
 pub mod sparse;
 pub mod partition;
 pub mod preprocess;
 pub mod spmv;
+pub mod shard;
 pub mod gpu;
 pub mod perfmodel;
 pub mod runtime;
@@ -127,6 +145,7 @@ pub mod autotune;
 
 pub use api::{BatchBuf, EhybError, EngineKind, SpmvContext, VecBatch, VecBatchMut};
 pub use autotune::{Fingerprint, PlanStore, TuneLevel, TunedPlan};
+pub use shard::{ShardSpec, ShardStrategy, ShardedEngine};
 
 /// Crate-wide result type over the typed [`EhybError`].
 pub type Result<T> = std::result::Result<T, EhybError>;

@@ -17,7 +17,8 @@ use ehyb::harness::{report, runner, suite, tables};
 use ehyb::harness::suite::Scale;
 use ehyb::preprocess::PreprocessConfig;
 use ehyb::sparse::csr::Csr;
-use ehyb::{EngineKind, SpmvContext};
+use ehyb::spmv::SpmvEngine;
+use ehyb::{EngineKind, ShardSpec, SpmvContext};
 use ehyb::sparse::gen;
 use ehyb::sparse::mmio::read_matrix_market;
 use ehyb::sparse::stats::MatrixStats;
@@ -61,7 +62,7 @@ fn usage() {
          cmds: info | preprocess | spmv | solve | tune | bench | ablation\n\
          gen specs: poisson2d:NX[:NY] poisson3d:N[:NY:NZ] stencil27:N\n\
                     elasticity:N unstructured:N circuit:N kkt:N banded:N\n\
-         options: --vec-size V  --dtype f32|f64  --pjrt  --artifacts DIR\n\
+         options: --vec-size V  --shards K|auto  --dtype f32|f64  --pjrt  --artifacts DIR\n\
                   --precond none|jacobi|spai0  --solver cg|bicgstab\n\
                   --table 1|2  --fig 2|3|4|5|6  --scale tiny|small|full\n\
                   --out DIR  --which cache|partitioner|sort|vecsize|tuning\n\
@@ -119,13 +120,41 @@ fn preprocess_cfg(opts: &HashMap<String, String>) -> PreprocessConfig {
     cfg
 }
 
+/// `--shards K` / `--shards auto` → row-sharded execution spec.
+fn shard_spec(opts: &HashMap<String, String>) -> anyhow::Result<Option<ShardSpec>> {
+    match opts.get("shards").map(String::as_str) {
+        None => Ok(None),
+        Some("auto") | Some("true") => Ok(Some(ShardSpec::Auto)),
+        Some(v) => {
+            let k: usize = v.parse().map_err(|_| anyhow::anyhow!("bad --shards value {v}"))?;
+            Ok(Some(ShardSpec::Count(k)))
+        }
+    }
+}
+
+/// Apply `--shards` to a context builder.
+fn with_shards<S: ehyb::sparse::scalar::Scalar>(
+    b: ehyb::api::SpmvContextBuilder<S>,
+    opts: &HashMap<String, String>,
+) -> anyhow::Result<ehyb::api::SpmvContextBuilder<S>> {
+    Ok(match shard_spec(opts)? {
+        Some(spec) => b.shards(spec),
+        None => b,
+    })
+}
+
 fn cmd_info(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let m = build_matrix(opts)?;
     let s = MatrixStats::of(&m);
     println!("{}", s.oneline());
     println!(
         "row nnz: mean={:.2} median={:.1} sd={:.2} min={:.0} max={:.0}; empty rows={}",
-        s.row_nnz.mean, s.row_nnz.median, s.row_nnz.stddev, s.row_nnz.min, s.row_nnz.max, s.empty_rows
+        s.row_nnz.mean,
+        s.row_nnz.median,
+        s.row_nnz.stddev,
+        s.row_nnz.min,
+        s.row_nnz.max,
+        s.empty_rows
     );
     println!(
         "bandwidth={} mean|col-row|={:.1} structural symmetry={:.3}",
@@ -171,6 +200,31 @@ fn cmd_spmv(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         println!("  {name:>15}: {gflops:7.3} GFLOPS");
     }
 
+    if shard_spec(opts)?.is_some() {
+        let ctx = with_shards(
+            SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg.clone()),
+            opts,
+        )?
+        .build()?;
+        let x = vec![1.0f64; m.ncols()];
+        let mut y = vec![0.0f64; m.nrows()];
+        let e = ctx.engine();
+        let secs = ehyb::util::timer::bench_secs(
+            || e.spmv(&x, &mut y),
+            3,
+            std::time::Duration::from_millis(100),
+        );
+        println!(
+            "\nsharded ehyb ({} row shards): {:.3} GFLOPS",
+            ctx.shards(),
+            ehyb::spmv::gflops(m.nnz(), secs)
+        );
+        println!(
+            "{}",
+            report::shard_markdown("Per-shard execution", ctx.sharded().expect("sharded build"))
+        );
+    }
+
     println!("\nsimulated V100 (GPU cost model):");
     let run = runner::run_matrix("cli", "cli", &m, &cfg, &dev)?;
     for row in &run.rows {
@@ -207,7 +261,8 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         rtol: opts.get("rtol").and_then(|v| v.parse().ok()).unwrap_or(1e-8),
         track_history: true,
     };
-    let ctx = SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg).build()?;
+    let ctx =
+        with_shards(SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg), opts)?.build()?;
     let m = ctx.matrix();
     let h = ctx.solver();
 
@@ -294,7 +349,12 @@ fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
                     existing.ell_width_cutoff,
                     existing.level,
                     store
-                        .path_for(&existing.fingerprint, &existing.device, &existing.dtype, &existing.scope)
+                        .path_for(
+                            &existing.fingerprint,
+                            &existing.device,
+                            &existing.dtype,
+                            &existing.scope
+                        )
                         .display()
                 );
                 return Ok(());

@@ -31,7 +31,12 @@ pub struct PartitionConfig {
 
 impl Default for PartitionConfig {
     fn default() -> Self {
-        Self { method: PartitionMethod::Multilevel, refine_passes: 4, coarsen_factor: 8, seed: 0x9E3779B9 }
+        Self {
+            method: PartitionMethod::Multilevel,
+            refine_passes: 4,
+            coarsen_factor: 8,
+            seed: 0x9E3779B9,
+        }
     }
 }
 

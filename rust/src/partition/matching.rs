@@ -187,7 +187,8 @@ mod tests {
         let m = heavy_edge_matching(&g, 4, &mut rng);
         let lvl = contract(&g, &m);
         let coarse_part: Vec<u32> = (0..lvl.graph.nvtx()).map(|v| (v % 2) as u32).collect();
-        let fine_part: Vec<u32> = (0..g.nvtx()).map(|v| coarse_part[lvl.cmap[v] as usize]).collect();
+        let fine_part: Vec<u32> =
+            (0..g.nvtx()).map(|v| coarse_part[lvl.cmap[v] as usize]).collect();
         assert_eq!(lvl.graph.edgecut(&coarse_part), g.edgecut(&fine_part));
     }
 

@@ -118,7 +118,9 @@ pub fn rebalance(g: &Graph, part: &mut [u32], k: usize, cap: u64) {
                 }
             }
             if target.is_none() {
-                target = (0..k).filter(|&p| p != src && loads[p] + w as u64 <= cap).min_by_key(|&p| loads[p]);
+                target = (0..k)
+                    .filter(|&p| p != src && loads[p] + w as u64 <= cap)
+                    .min_by_key(|&p| loads[p]);
             }
             if let Some(t) = target {
                 loads[src] -= w as u64;

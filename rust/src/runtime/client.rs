@@ -230,7 +230,13 @@ impl<S: XlaScalar> CgPjrt<S> {
         let dinv = self.diag_inv.to_vec::<S>().expect("diag_inv literal readback");
         let z: Vec<S> = dinv.iter().zip(&r).map(|(&d, &ri)| d * ri).collect();
         let rz = crate::sparse::scalar::dot(&r, &z);
-        CgState { x: vec![<S as crate::sparse::scalar::Scalar>::ZERO; r.len()], r, p: z, rz, alpha_den: <S as crate::sparse::scalar::Scalar>::ZERO }
+        CgState {
+            x: vec![<S as crate::sparse::scalar::Scalar>::ZERO; r.len()],
+            r,
+            p: z,
+            rz,
+            alpha_den: <S as crate::sparse::scalar::Scalar>::ZERO,
+        }
     }
 
     /// Run one fused iteration on the device state.

@@ -170,7 +170,10 @@ impl<'a> Parser<'a> {
             self.i += 1;
         }
         let s = std::str::from_utf8(&self.b[start..self.i])?;
-        Ok(Json::Num(s.parse::<f64>().map_err(|e| crate::EhybError::Parse(format!("bad number {s:?}: {e}")))?))
+        let n = s
+            .parse::<f64>()
+            .map_err(|e| crate::EhybError::Parse(format!("bad number {s:?}: {e}")))?;
+        Ok(Json::Num(n))
     }
 
     fn string(&mut self) -> crate::Result<String> {

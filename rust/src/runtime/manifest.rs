@@ -24,8 +24,19 @@ impl BucketSpec {
     }
 
     /// Can a matrix with these EHYB stats run in this bucket?
-    pub fn fits(&self, num_parts: usize, vec_size: usize, max_width: usize, er_rows: usize, er_width: usize) -> bool {
-        num_parts <= self.p && vec_size <= self.r && max_width <= self.w && er_rows <= self.e && er_width <= self.we
+    pub fn fits(
+        &self,
+        num_parts: usize,
+        vec_size: usize,
+        max_width: usize,
+        er_rows: usize,
+        er_width: usize,
+    ) -> bool {
+        num_parts <= self.p
+            && vec_size <= self.r
+            && max_width <= self.w
+            && er_rows <= self.e
+            && er_width <= self.we
     }
 }
 
@@ -39,8 +50,9 @@ impl Manifest {
     pub fn load(dir: impl AsRef<Path>) -> crate::Result<Manifest> {
         let dir = dir.as_ref().to_path_buf();
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| crate::EhybError::Io(format!("read {path:?}: {e} (run `make artifacts` first)")))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            crate::EhybError::Io(format!("read {path:?}: {e} (run `make artifacts` first)"))
+        })?;
         Self::parse(&text, dir)
     }
 
@@ -59,7 +71,9 @@ impl Manifest {
                     .to_string())
             };
             let u = |k: &str| -> crate::Result<usize> {
-                b.get(k).and_then(|v| v.as_usize()).ok_or_else(|| crate::EhybError::Parse(format!("bucket missing {k}")))
+                b.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| crate::EhybError::Parse(format!("bucket missing {k}")))
             };
             buckets.push(BucketSpec {
                 kind: s("kind")?,

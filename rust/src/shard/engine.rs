@@ -1,0 +1,430 @@
+//! The sharded execution engine: K per-shard engines behind one
+//! [`SpmvEngine`], fanning `spmv`/`spmv_batch` out over
+//! [`crate::util::par`] with each shard writing a disjoint row range of
+//! `y` (race-free by construction — the output is split with
+//! `split_at_mut` before the fan-out).
+//!
+//! Per-shard engines are built through [`crate::api::build_engine`],
+//! the crate's single engine-construction path:
+//!
+//! * baseline kinds get the shard's row slice
+//!   ([`Csr::row_slice`] — rectangular, full column space, per-row
+//!   entry order preserved, so row-local engines stay bit-identical to
+//!   the unsharded engine);
+//! * [`EngineKind::Ehyb`] gets an [`EhybShard`]: the shard's **square
+//!   diagonal block** runs the full EHYB pipeline (partition → reorder
+//!   → explicitly-cached format, knobs tunable per shard), and the
+//!   **halo** remainder (columns outside the shard) runs as a CSR tail
+//!   accumulated on top — the shard-level mirror of EHYB's own
+//!   ELL/ER split.
+
+use super::ShardPlan;
+use crate::api::batch::{VecBatch, VecBatchMut};
+use crate::api::EngineKind;
+use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+use crate::spmv::SpmvEngine;
+use crate::util::par;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Per-shard execution counters — the observability surface behind
+/// [`crate::harness::report::shard_markdown`]'s per-shard columns.
+#[derive(Debug)]
+pub struct ShardStat {
+    /// Rows this shard owns.
+    pub rows: usize,
+    /// Nonzeros this shard owns (block + halo for EHYB shards).
+    pub nnz: usize,
+    /// Single-vector kernel executions.
+    pub spmv_calls: AtomicU64,
+    /// Batched kernel executions (fused calls, not lanes).
+    pub batch_calls: AtomicU64,
+    /// Total batch lanes (columns) processed by batched executions.
+    pub lanes: AtomicU64,
+}
+
+/// One shard: a contiguous row range and its prepared engine. The
+/// engine's `nrows` equals the range length and its `ncols` spans the
+/// full column space, so it consumes the whole `x` and produces exactly
+/// the shard's slice of `y`.
+struct Shard<S: Scalar> {
+    range: Range<usize>,
+    engine: Arc<dyn SpmvEngine<S>>,
+}
+
+/// A row-sharded [`SpmvEngine`]: presents the full matrix's shape while
+/// executing every kernel shard-parallel. See the module docs (and
+/// [`crate::shard`]) for the bit-identity contract per engine kind.
+pub struct ShardedEngine<S: Scalar> {
+    shards: Vec<Shard<S>>,
+    stats: Vec<ShardStat>,
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+}
+
+impl<S: Scalar> ShardedEngine<S> {
+    /// Build one engine per shard of `plan`. `kind` must be concrete
+    /// (the facade resolves `Auto` first). For [`EngineKind::Ehyb`],
+    /// `shard_overrides[i]` supplies a per-shard config (the tuned
+    /// knobs) and, when available, the block's already-built
+    /// [`EhybPlan`] so the tuner's (or a cache hit's) preprocessing
+    /// pass is reused instead of repeated.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn build(
+        m: &Csr<S>,
+        kind: EngineKind,
+        cfg: &PreprocessConfig,
+        plan: &ShardPlan,
+        shard_overrides: Option<Vec<(PreprocessConfig, Option<EhybPlan<S>>)>>,
+    ) -> crate::Result<ShardedEngine<S>> {
+        assert_ne!(kind, EngineKind::Auto, "Auto resolves before sharding");
+        if let Some(o) = &shard_overrides {
+            assert_eq!(o.len(), plan.num_shards(), "one override per shard");
+        }
+        let mut ov_iter = shard_overrides.map(Vec::into_iter);
+        let mut shards = Vec::with_capacity(plan.num_shards());
+        let mut stats = Vec::with_capacity(plan.num_shards());
+        for rg in plan.ranges() {
+            let engine: Arc<dyn SpmvEngine<S>> = if kind == EngineKind::Ehyb {
+                let (shard_cfg, prebuilt) = match ov_iter.as_mut().and_then(Iterator::next) {
+                    Some((c, p)) => (c, p),
+                    None => (cfg.clone(), None),
+                };
+                Arc::new(EhybShard::build(m, rg.clone(), &shard_cfg, prebuilt)?)
+            } else {
+                crate::api::build_engine(kind, &m.row_slice(rg.start, rg.end), None)
+            };
+            stats.push(ShardStat {
+                rows: rg.len(),
+                nnz: engine.nnz(),
+                spmv_calls: AtomicU64::new(0),
+                batch_calls: AtomicU64::new(0),
+                lanes: AtomicU64::new(0),
+            });
+            shards.push(Shard { range: rg.clone(), engine });
+        }
+        Ok(ShardedEngine { shards, stats, nrows: m.nrows(), ncols: m.ncols(), nnz: m.nnz() })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The row range each shard owns, in shard order.
+    pub fn ranges(&self) -> Vec<Range<usize>> {
+        self.shards.iter().map(|s| s.range.clone()).collect()
+    }
+
+    /// Per-shard execution counters, in shard order.
+    pub fn stats(&self) -> &[ShardStat] {
+        &self.stats
+    }
+
+    /// Split `y` into the per-shard disjoint row slices (shard order).
+    fn split_y<'y>(&self, mut y: &'y mut [S]) -> Vec<&'y mut [S]> {
+        let mut parts = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            let (head, tail) = y.split_at_mut(s.range.len());
+            parts.push(head);
+            y = tail;
+        }
+        debug_assert!(y.is_empty());
+        parts
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for ShardedEngine<S> {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let parts = self.split_y(y);
+        par::par_for_each(parts, |i, yslice| {
+            self.shards[i].engine.spmv(x, yslice);
+            self.stats[i].spmv_calls.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+
+    fn spmv_batch(&self, xs: VecBatch<'_, S>, ys: &mut VecBatchMut<'_, S>) {
+        assert_eq!(xs.width(), ys.width(), "batch inputs/outputs disagree");
+        assert_eq!(xs.n(), self.ncols);
+        assert_eq!(ys.n(), self.nrows);
+        let width = xs.width();
+        if width == 0 {
+            return;
+        }
+        // Each shard's output rows interleave across the batch columns,
+        // so the fused per-shard kernels run into per-shard contiguous
+        // scratch (one fused batch per shard) and the disjoint row
+        // segments are copied out afterwards.
+        let mut scratch: Vec<Vec<S>> =
+            self.shards.iter().map(|s| vec![S::ZERO; s.range.len() * width]).collect();
+        {
+            let items: Vec<(usize, &mut Vec<S>)> = scratch.iter_mut().enumerate().collect();
+            par::par_for_each(items, |_, (i, buf)| {
+                let rows = self.shards[i].range.len();
+                let mut yv = VecBatchMut::new(buf, rows).expect("contiguous shard scratch");
+                self.shards[i].engine.spmv_batch(xs, &mut yv);
+                self.stats[i].batch_calls.fetch_add(1, Ordering::Relaxed);
+                self.stats[i].lanes.fetch_add(width as u64, Ordering::Relaxed);
+            });
+        }
+        for (shard, buf) in self.shards.iter().zip(&scratch) {
+            let rows = shard.range.len();
+            for b in 0..width {
+                ys.col_mut(b)[shard.range.clone()].copy_from_slice(&buf[b * rows..(b + 1) * rows]);
+            }
+        }
+    }
+
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn format_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.engine.format_bytes()).sum()
+    }
+}
+
+/// One EHYB row shard: the square diagonal block behind the full EHYB
+/// pipeline plus the halo (out-of-shard columns) as a CSR tail. Per
+/// row, the block's explicitly-cached result accumulates first, then
+/// the halo entries in CSR order — the shard-level mirror of EHYB's
+/// own ELL-then-ER accumulation.
+pub struct EhybShard<S: Scalar> {
+    /// `None` when the diagonal block has no entries (then the shard is
+    /// pure halo and `y` starts from zero).
+    block: Option<Arc<dyn SpmvEngine<S>>>,
+    /// The preprocessing output of the diagonal block (partition
+    /// provenance, timings) — what per-shard tuning searched over.
+    block_plan: Option<EhybPlan<S>>,
+    halo: Csr<S>,
+    range: Range<usize>,
+    ncols: usize,
+    nnz: usize,
+}
+
+impl<S: Scalar> EhybShard<S> {
+    /// `prebuilt` is the block's already-built plan (from per-shard
+    /// tuning or a plan-cache hit) — when present, preprocessing is not
+    /// repeated here.
+    pub(crate) fn build(
+        m: &Csr<S>,
+        range: Range<usize>,
+        cfg: &PreprocessConfig,
+        prebuilt: Option<EhybPlan<S>>,
+    ) -> crate::Result<EhybShard<S>> {
+        let (block_csr, halo) = m.diag_block_split(range.start, range.end);
+        let nnz = block_csr.nnz() + halo.nnz();
+        let (block, block_plan) = if block_csr.nnz() > 0 {
+            let plan = match prebuilt {
+                Some(p) => p,
+                None => EhybPlan::build(&block_csr, cfg)?,
+            };
+            let engine = crate::api::build_engine(EngineKind::Ehyb, &block_csr, Some(&plan));
+            (Some(engine), Some(plan))
+        } else {
+            (None, None)
+        };
+        Ok(EhybShard { block, block_plan, halo, range, ncols: m.ncols(), nnz })
+    }
+
+    /// The diagonal block's preprocessing output, when the block is
+    /// non-empty.
+    pub fn block_plan(&self) -> Option<&EhybPlan<S>> {
+        self.block_plan.as_ref()
+    }
+
+    fn halo_accumulate(&self, x: &[S], y: &mut [S]) {
+        for i in 0..self.halo.nrows() {
+            let (cols, vals) = self.halo.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                y[i] = v.mul_add(x[c as usize], y[i]);
+            }
+        }
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for EhybShard<S> {
+    fn name(&self) -> &'static str {
+        "ehyb-shard"
+    }
+
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.range.len());
+        match &self.block {
+            Some(engine) => engine.spmv(&x[self.range.clone()], y),
+            None => y.fill(S::ZERO),
+        }
+        self.halo_accumulate(x, y);
+    }
+
+    fn spmv_batch(&self, xs: VecBatch<'_, S>, ys: &mut VecBatchMut<'_, S>) {
+        assert_eq!(xs.width(), ys.width(), "batch inputs/outputs disagree");
+        let rows = self.range.len();
+        let width = xs.width();
+        if width == 0 {
+            return;
+        }
+        match &self.block {
+            Some(engine) => {
+                // Stage the shard's x-slices contiguously so the block
+                // engine's fused SpMM path (EhybCpu streams its format
+                // once per register block) applies across the batch.
+                let mut xbuf = vec![S::ZERO; rows * width];
+                for b in 0..width {
+                    xbuf[b * rows..(b + 1) * rows]
+                        .copy_from_slice(&xs.col(b)[self.range.clone()]);
+                }
+                let xv = VecBatch::new(&xbuf, rows).expect("contiguous shard batch");
+                engine.spmv_batch(xv, ys);
+            }
+            None => {
+                for b in 0..width {
+                    ys.col_mut(b).fill(S::ZERO);
+                }
+            }
+        }
+        for b in 0..width {
+            self.halo_accumulate(xs.col(b), ys.col_mut(b));
+        }
+    }
+
+    fn nrows(&self) -> usize {
+        self.range.len()
+    }
+    fn ncols(&self) -> usize {
+        self.ncols
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn format_bytes(&self) -> usize {
+        let block = self.block.as_ref().map_or(0, |e| e.format_bytes());
+        block + self.halo.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::ShardStrategy;
+    use crate::sparse::gen::{poisson2d, unstructured_mesh};
+    use crate::util::check::assert_allclose;
+
+    fn cfg() -> PreprocessConfig {
+        PreprocessConfig { vec_size_override: Some(32), ..Default::default() }
+    }
+
+    fn sharded(m: &Csr<f64>, kind: EngineKind, k: usize) -> ShardedEngine<f64> {
+        let plan = ShardPlan::new(m, k, ShardStrategy::CacheAware);
+        ShardedEngine::build(m, kind, &cfg(), &plan, None).unwrap()
+    }
+
+    #[test]
+    fn sharded_csr_scalar_bitwise_matches_unsharded() {
+        let m = unstructured_mesh::<f64>(24, 24, 0.5, 9);
+        let full = crate::api::build_engine(EngineKind::CsrScalar, &m, None);
+        let x: Vec<f64> = (0..m.ncols()).map(|i| ((i * 7 + 1) % 13) as f64 * 0.5 - 3.0).collect();
+        let mut y_full = vec![0.0; m.nrows()];
+        full.spmv(&x, &mut y_full);
+        for k in [1usize, 2, 5, 16] {
+            let e = sharded(&m, EngineKind::CsrScalar, k);
+            assert_eq!(e.num_shards(), k);
+            let mut y = vec![0.0; m.nrows()];
+            e.spmv(&x, &mut y);
+            assert_eq!(y, y_full, "k={k}");
+            assert!(e.stats().iter().all(|s| s.spmv_calls.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn sharded_ehyb_matches_oracle_and_is_deterministic() {
+        let m = unstructured_mesh::<f64>(32, 32, 0.4, 11);
+        let x: Vec<f64> = (0..m.ncols()).map(|i| ((i * 3 + 2) % 17) as f64 * 0.25 - 2.0).collect();
+        let oracle = m.spmv_f64_oracle(&x);
+        for k in [1usize, 3, 8] {
+            let e1 = sharded(&m, EngineKind::Ehyb, k);
+            let e2 = sharded(&m, EngineKind::Ehyb, k);
+            let mut y1 = vec![0.0; m.nrows()];
+            let mut y2 = vec![0.0; m.nrows()];
+            e1.spmv(&x, &mut y1);
+            e2.spmv(&x, &mut y2);
+            assert_eq!(y1, y2, "k={k}: sharded EHYB must be deterministic");
+            assert_allclose(&y1, &oracle, 1e-10, 1e-10).unwrap();
+            assert_eq!(e1.nnz(), m.nnz());
+            assert!(e1.format_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn sharded_batch_bitwise_matches_repeated_spmv() {
+        let m = poisson2d::<f64>(18, 18);
+        for kind in [EngineKind::Ehyb, EngineKind::CsrScalar, EngineKind::SellP] {
+            let e = sharded(&m, kind, 4);
+            let width = 3;
+            let mut xs = crate::api::BatchBuf::<f64>::zeros(m.ncols(), width);
+            for b in 0..width {
+                for i in 0..m.ncols() {
+                    xs.col_mut(b)[i] = ((i * 5 + b * 7 + 1) % 11) as f64 * 0.5 - 2.5;
+                }
+            }
+            let mut ys = crate::api::BatchBuf::<f64>::zeros(m.nrows(), width);
+            {
+                let mut yv = ys.view_mut();
+                e.spmv_batch(xs.view(), &mut yv);
+            }
+            for b in 0..width {
+                let mut y1 = vec![0.0; m.nrows()];
+                e.spmv(xs.col(b), &mut y1);
+                assert_eq!(ys.col(b), &y1[..], "{kind:?} lane {b}");
+            }
+            let lanes: u64 = e.stats().iter().map(|s| s.lanes.load(Ordering::Relaxed)).sum();
+            assert_eq!(lanes, (width * e.num_shards()) as u64);
+        }
+    }
+
+    #[test]
+    fn ehyb_shard_with_empty_block_is_pure_halo() {
+        use crate::sparse::coo::Coo;
+        // Rows 0..2 have entries only in columns >= 2: the diagonal
+        // block of shard 0..2 is empty and everything is halo.
+        let mut coo = Coo::<f64>::new(4, 4);
+        coo.push(0, 2, 1.0);
+        coo.push(0, 3, 2.0);
+        coo.push(1, 3, 3.0);
+        coo.push(2, 2, 4.0);
+        coo.push(3, 3, 5.0);
+        let m = coo.to_csr();
+        let shard = EhybShard::build(&m, 0..2, &cfg(), None).unwrap();
+        assert!(shard.block_plan().is_none());
+        assert_eq!(shard.nnz(), 3);
+        let x = [1.0, 10.0, 100.0, 1000.0];
+        let mut y = [7.0, 7.0]; // stale values must be overwritten
+        shard.spmv(&x, &mut y);
+        assert_eq!(y, [100.0 + 2000.0, 3000.0]);
+    }
+
+    #[test]
+    fn shard_stats_shape() {
+        let m = poisson2d::<f64>(16, 16);
+        let e = sharded(&m, EngineKind::Hyb, 4);
+        assert_eq!(e.stats().len(), 4);
+        assert_eq!(e.stats().iter().map(|s| s.rows).sum::<usize>(), m.nrows());
+        assert_eq!(e.stats().iter().map(|s| s.nnz).sum::<usize>(), m.nnz());
+        assert_eq!(e.ranges().len(), 4);
+    }
+}

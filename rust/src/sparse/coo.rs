@@ -147,8 +147,8 @@ mod tests {
         // [[1, 0, 2],
         //  [0, 3, 0],
         //  [4, 0, 5]]
-        Coo::from_triplets(3, 3, vec![(0, 0, 1.0), (2, 2, 5.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0)])
-            .unwrap()
+        let t = vec![(0, 0, 1.0), (2, 2, 5.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0)];
+        Coo::from_triplets(3, 3, t).unwrap()
     }
 
     #[test]

@@ -197,6 +197,75 @@ impl<S: Scalar> Csr<S> {
         coo.to_csr()
     }
 
+    /// Extract rows `lo..hi` as a standalone (generally rectangular)
+    /// CSR over the **same column space**: row `i` of the slice is row
+    /// `lo + i` of `self`, entries in identical order. The building
+    /// block of the row-sharding layer ([`crate::shard`]) — because the
+    /// entry order within every row is preserved, any engine whose
+    /// per-row accumulation depends only on that row's entries computes
+    /// bit-identical results on the slice.
+    pub fn row_slice(&self, lo: usize, hi: usize) -> Csr<S> {
+        assert!(lo <= hi && hi <= self.nrows, "bad row slice {lo}..{hi} of {}", self.nrows);
+        let base = self.row_ptr[lo];
+        let end = self.row_ptr[hi] as usize;
+        let row_ptr: Vec<u32> = self.row_ptr[lo..=hi].iter().map(|&p| p - base).collect();
+        Csr {
+            nrows: hi - lo,
+            ncols: self.ncols,
+            row_ptr,
+            col_idx: self.col_idx[base as usize..end].to_vec(),
+            vals: self.vals[base as usize..end].to_vec(),
+        }
+    }
+
+    /// Split rows `lo..hi` into the **square diagonal block** (entries
+    /// whose column also falls in `lo..hi`, columns rebased to the
+    /// block) and the **halo remainder** (entries whose column lies
+    /// outside, kept in the full column space). Within every row the
+    /// relative entry order of each part is preserved. This is the
+    /// shard-level analogue of EHYB's in-partition / out-of-partition
+    /// split: the block's x-slice is the shard's hot working set, the
+    /// halo is its uncached remainder.
+    pub fn diag_block_split(&self, lo: usize, hi: usize) -> (Csr<S>, Csr<S>) {
+        assert!(lo <= hi && hi <= self.nrows, "bad row range {lo}..{hi} of {}", self.nrows);
+        let rows = hi - lo;
+        let mut block_ptr = vec![0u32; rows + 1];
+        let mut block_cols = Vec::new();
+        let mut block_vals = Vec::new();
+        let mut halo_ptr = vec![0u32; rows + 1];
+        let mut halo_cols = Vec::new();
+        let mut halo_vals = Vec::new();
+        for r in 0..rows {
+            let (cols, vals) = self.row(lo + r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                if (lo..hi).contains(&(c as usize)) {
+                    block_cols.push(c - lo as u32);
+                    block_vals.push(v);
+                } else {
+                    halo_cols.push(c);
+                    halo_vals.push(v);
+                }
+            }
+            block_ptr[r + 1] = block_cols.len() as u32;
+            halo_ptr[r + 1] = halo_cols.len() as u32;
+        }
+        let block = Csr {
+            nrows: rows,
+            ncols: rows,
+            row_ptr: block_ptr,
+            col_idx: block_cols,
+            vals: block_vals,
+        };
+        let halo = Csr {
+            nrows: rows,
+            ncols: self.ncols,
+            row_ptr: halo_ptr,
+            col_idx: halo_cols,
+            vals: halo_vals,
+        };
+        (block, halo)
+    }
+
     /// Memory footprint in bytes (index + value arrays) — input to the
     /// traffic models.
     pub fn bytes(&self) -> usize {
@@ -223,16 +292,17 @@ mod tests {
         // [[1, 0, 2],
         //  [0, 3, 0],
         //  [4, 0, 5]]
-        Coo::from_triplets(3, 3, vec![(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)])
-            .unwrap()
-            .to_csr()
+        let t = vec![(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0), (2, 0, 4.0), (2, 2, 5.0)];
+        Coo::from_triplets(3, 3, t).unwrap().to_csr()
     }
 
     #[test]
     fn construction_validates() {
         assert!(Csr::<f64>::new(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_ok());
-        assert!(Csr::<f64>::new(2, 2, vec![0, 3, 2], vec![0, 1], vec![1.0, 2.0]).is_err()); // non-monotone
-        assert!(Csr::<f64>::new(2, 2, vec![0, 1, 2], vec![0, 5], vec![1.0, 2.0]).is_err()); // col oob
+        // Non-monotone row_ptr.
+        assert!(Csr::<f64>::new(2, 2, vec![0, 3, 2], vec![0, 1], vec![1.0, 2.0]).is_err());
+        // Column out of bounds.
+        assert!(Csr::<f64>::new(2, 2, vec![0, 1, 2], vec![0, 5], vec![1.0, 2.0]).is_err());
         assert!(Csr::<f64>::new(2, 2, vec![0, 1], vec![0], vec![1.0]).is_err()); // row_ptr len
     }
 
@@ -338,5 +408,63 @@ mod tests {
     fn bytes_accounting() {
         let m = sample();
         assert_eq!(m.bytes(), 4 * 4 + 5 * 4 + 5 * 8);
+    }
+
+    #[test]
+    fn row_slice_preserves_rows_and_order() {
+        let m = sample();
+        let s = m.row_slice(1, 3);
+        assert_eq!(s.nrows(), 2);
+        assert_eq!(s.ncols(), 3);
+        assert_eq!(s.nnz(), 3);
+        let (cols, vals) = s.row(1); // row 2 of the original
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[4.0, 5.0]);
+        // Degenerate slices.
+        assert_eq!(m.row_slice(0, 0).nnz(), 0);
+        assert_eq!(m.row_slice(0, 3).nnz(), m.nnz());
+    }
+
+    #[test]
+    fn row_slices_reassemble_spmv() {
+        let m = sample();
+        let x = [1.0, 2.0, 3.0];
+        let mut y_full = [0.0; 3];
+        m.spmv(&x, &mut y_full);
+        let mut y = Vec::new();
+        for (lo, hi) in [(0usize, 2usize), (2, 3)] {
+            let s = m.row_slice(lo, hi);
+            let mut part = vec![0.0; hi - lo];
+            s.spmv(&x, &mut part);
+            y.extend(part);
+        }
+        assert_eq!(y, y_full);
+    }
+
+    #[test]
+    fn diag_block_split_partitions_entries() {
+        let m = sample();
+        let (block, halo) = m.diag_block_split(0, 2);
+        // Rows 0..2: entries (0,0) (0,2) (1,1); cols < 2 stay in block.
+        assert_eq!(block.nrows(), 2);
+        assert_eq!(block.ncols(), 2);
+        assert_eq!(block.nnz(), 2); // (0,0) and (1,1)
+        assert_eq!(halo.nnz(), 1); // (0,2)
+        assert_eq!(halo.ncols(), 3);
+        // block + halo reassemble the slice's SpMV.
+        let x = [1.0, 2.0, 3.0];
+        let mut yb = [0.0; 2];
+        block.spmv(&x[0..2], &mut yb);
+        let mut yh = [0.0; 2];
+        halo.spmv(&x, &mut yh);
+        let mut y_full = [0.0; 3];
+        m.spmv(&x, &mut y_full);
+        for i in 0..2 {
+            assert!((yb[i] + yh[i] - y_full[i]).abs() < 1e-15);
+        }
+        // Full-range split has an empty halo.
+        let (b2, h2) = m.diag_block_split(0, 3);
+        assert_eq!(b2.nnz(), m.nnz());
+        assert_eq!(h2.nnz(), 0);
     }
 }

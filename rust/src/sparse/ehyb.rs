@@ -165,7 +165,9 @@ impl<S: Scalar> EhybMatrix<S> {
         ensure!(self.er_cols.iter().all(|&c| (c as usize) < self.padded_rows()), "ER col bound");
         ensure!(self.y_idx_er.len() >= self.er_rows, "yIdxER length");
         ensure!(
-            self.y_idx_er[..self.er_rows].iter().all(|&r| (r as usize) < self.n + (self.padded_rows() - self.n)),
+            self.y_idx_er[..self.er_rows]
+                .iter()
+                .all(|&r| (r as usize) < self.n + (self.padded_rows() - self.n)),
             "yIdxER bound"
         );
         // Injectivity: one ER slot per distinct output row. The parallel

@@ -213,7 +213,8 @@ pub fn unstructured_mesh<S: Scalar>(nx: usize, ny: usize, avg_extra: f64, seed: 
                 let dy = rng.next_below(7) as i64 - 3;
                 let (xx, yy) = (x as i64 + dx, y as i64 + dy);
                 if xx >= 0 && yy >= 0 && xx < nx as i64 && yy < ny as i64 {
-                    coo.push(i, idx(xx as usize, yy as usize), S::from_f64(0.05 * rng.next_gaussian()));
+                    let noise = S::from_f64(0.05 * rng.next_gaussian());
+                    coo.push(i, idx(xx as usize, yy as usize), noise);
                 }
             }
         }

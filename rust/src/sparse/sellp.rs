@@ -105,7 +105,10 @@ impl<S: Scalar> SellP<S> {
     }
 
     pub fn bytes(&self) -> usize {
-        self.slice_ptr.len() * 4 + self.slice_width.len() * 4 + self.cols.len() * 4 + self.vals.len() * S::BYTES
+        self.slice_ptr.len() * 4
+            + self.slice_width.len() * 4
+            + self.cols.len() * 4
+            + self.vals.len() * S::BYTES
     }
 }
 

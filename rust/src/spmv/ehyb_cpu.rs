@@ -450,9 +450,8 @@ impl<S: Scalar> EhybCpu<S> {
                     let mut idx = base + lane;
                     for _ in 0..w {
                         acc = unsafe {
-                            m.ell_vals
-                                .get_unchecked(idx)
-                                .mul_add(*cached.get_unchecked(*m.ell_cols.get_unchecked(idx) as usize), acc)
+                            let xc = *cached.get_unchecked(*m.ell_cols.get_unchecked(idx) as usize);
+                            m.ell_vals.get_unchecked(idx).mul_add(xc, acc)
                         };
                         idx += h;
                     }

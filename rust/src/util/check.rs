@@ -31,14 +31,22 @@ where
 /// Assert two float slices match to a relative-or-absolute tolerance.
 /// SpMV accumulation order differs between engines, so exact equality is
 /// wrong; this mirrors `numpy.testing.assert_allclose` semantics.
-pub fn assert_allclose(actual: &[f64], expected: &[f64], rtol: f64, atol: f64) -> Result<(), String> {
+pub fn assert_allclose(
+    actual: &[f64],
+    expected: &[f64],
+    rtol: f64,
+    atol: f64,
+) -> Result<(), String> {
     if actual.len() != expected.len() {
         return Err(format!("length mismatch: {} vs {}", actual.len(), expected.len()));
     }
     for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
         let tol = atol + rtol * e.abs();
         if (a - e).abs() > tol {
-            return Err(format!("index {i}: actual={a} expected={e} (|diff|={} > tol={tol})", (a - e).abs()));
+            return Err(format!(
+                "index {i}: actual={a} expected={e} (|diff|={} > tol={tol})",
+                (a - e).abs()
+            ));
         }
     }
     Ok(())

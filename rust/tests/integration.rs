@@ -51,6 +51,38 @@ fn full_pipeline_all_engines_agree_across_generators() {
 }
 
 #[test]
+fn full_pipeline_sharded_across_generators() {
+    // The row-sharded engine through the same generator sweep: every
+    // kind's sharded context must agree with the oracle (the bitwise
+    // sharded-vs-unsharded contract itself is pinned in tests/shard.rs).
+    let matrices: Vec<(&str, Csr<f64>)> = vec![
+        ("poisson2d", gen::poisson2d(23, 19)),
+        ("circuit", gen::circuit(600, 4, 0.03, 9)),
+        ("banded", gen::banded(500, 9, 0.5, 13)),
+    ];
+    for (name, m) in matrices {
+        let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+        let x = x_for(m.ncols());
+        let oracle = m.spmv_f64_oracle(&x);
+        for kind in EngineKind::ALL {
+            if kind == EngineKind::Ell && m.max_row_nnz() * m.nrows() > 16 * m.nnz() {
+                continue; // same padding guard the engine sweeps apply
+            }
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg.clone())
+                .shards(ehyb::ShardSpec::Count(4))
+                .build()
+                .unwrap_or_else(|e| panic!("{name}/{kind:?}: {e:#}"));
+            assert_eq!(ctx.shards(), 4, "{name}/{kind:?}");
+            let y = ctx.spmv_alloc(&x).unwrap();
+            assert_allclose(&y, &oracle, 1e-9, 1e-9)
+                .unwrap_or_else(|err| panic!("{name}/{kind:?}: {err}"));
+        }
+    }
+}
+
+#[test]
 fn mmio_roundtrip_through_full_pipeline() {
     let m = gen::unstructured_mesh::<f64>(16, 16, 0.4, 21);
     let dir = std::env::temp_dir().join("ehyb_integration");

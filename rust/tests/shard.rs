@@ -1,0 +1,328 @@
+//! Sharding gate (ISSUE 4 acceptance): the row-sharded engine against
+//! the unsharded one, for every `EngineKind` and K ∈ {1, 2, 7,
+//! num_threads}, plus the per-shard plan-cache round-trip and the
+//! solver/service layers running unchanged on a sharded context.
+//!
+//! Numerical contract under test (see `ehyb::shard` docs): for every
+//! engine whose per-row accumulation depends only on that row's entries
+//! — csr-scalar, csr-vector, ell, hyb, sellp, csr5 — sharded output is
+//! **bitwise identical** to the unsharded engine at every K. The two
+//! engines that re-derive a global data-dependent layout (`merge`'s
+//! team grid, `ehyb`'s per-shard repartitioning) are bitwise identical
+//! at K = 1, bitwise deterministic at every K, and match the unsharded
+//! engine to roundoff.
+
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::coo::Coo;
+use ehyb::sparse::csr::Csr;
+use ehyb::util::check::{assert_allclose, check_prop, default_cases};
+use ehyb::util::{par, Xoshiro256};
+use ehyb::{BatchBuf, EngineKind, ShardSpec, ShardStrategy, SpmvContext, TuneLevel};
+
+/// Engines whose sharded execution must be bit-identical to the
+/// unsharded engine at every K (row-local per-row accumulation).
+const ROW_LOCAL: [EngineKind; 6] = [
+    EngineKind::CsrScalar,
+    EngineKind::CsrVector,
+    EngineKind::Ell,
+    EngineKind::Hyb,
+    EngineKind::SellP,
+    EngineKind::Csr5,
+];
+
+/// Engines that re-derive a global layout per shard: bitwise at K = 1,
+/// deterministic + allclose at K > 1.
+const GLOBAL_LAYOUT: [EngineKind; 2] = [EngineKind::Ehyb, EngineKind::Merge];
+
+fn shard_counts() -> Vec<usize> {
+    let mut ks = vec![1usize, 2, 7];
+    let t = par::num_threads();
+    if !ks.contains(&t) {
+        ks.push(t);
+    }
+    ks
+}
+
+fn random_matrix(rng: &mut Xoshiro256) -> Csr<f64> {
+    let n = 32 + rng.next_below(300);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, rng.range_f64(1.0, 4.0));
+        let deg = rng.next_below(10);
+        for _ in 0..deg {
+            let j = if rng.next_f64() < 0.6 {
+                let span = 24.min(n);
+                (i + rng.next_below(span)).saturating_sub(span / 2).min(n - 1)
+            } else {
+                rng.next_below(n)
+            };
+            coo.push(i, j, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+fn random_x(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+}
+
+fn cfg(vec_size: usize) -> PreprocessConfig {
+    PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() }
+}
+
+fn sharded_ctx(
+    m: &Csr<f64>,
+    kind: EngineKind,
+    k: usize,
+    strategy: ShardStrategy,
+    vec_size: usize,
+) -> SpmvContext<f64> {
+    SpmvContext::builder(m.clone())
+        .engine(kind)
+        .config(cfg(vec_size))
+        .shards(ShardSpec::Count(k))
+        .shard_strategy(strategy)
+        .build()
+        .unwrap_or_else(|e| panic!("{kind:?} k={k}: build failed: {e:#}"))
+}
+
+#[test]
+fn prop_sharded_bitwise_identical_on_row_local_engines() {
+    check_prop("sharded-bitwise-row-local", 0x54A8D1, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let vec_size = 32 * (1 + rng.next_below(3));
+        let x = random_x(rng, m.ncols());
+        for kind in ROW_LOCAL {
+            let base = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg(vec_size))
+                .build()
+                .map_err(|e| format!("{kind:?}: unsharded build: {e:#}"))?;
+            let y_ref = base.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            for strategy in [ShardStrategy::NnzBalanced, ShardStrategy::CacheAware] {
+                for &k in &shard_counts() {
+                    let ctx = sharded_ctx(&m, kind, k, strategy, vec_size);
+                    let y = ctx.spmv_alloc(&x).map_err(|e| e.to_string())?;
+                    if y != y_ref {
+                        return Err(format!(
+                            "{kind:?} k={k} {strategy:?}: sharded != unsharded bitwise \
+                             (n={}, shards={})",
+                            m.nrows(),
+                            ctx.shards()
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_global_layout_engines_k1_bitwise_all_k_allclose() {
+    check_prop("sharded-global-layout", 0x54A8D2, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let vec_size = 32 * (1 + rng.next_below(3));
+        let x = random_x(rng, m.ncols());
+        for kind in GLOBAL_LAYOUT {
+            let base = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg(vec_size))
+                .build()
+                .map_err(|e| format!("{kind:?}: unsharded build: {e:#}"))?;
+            let y_ref = base.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            // K = 1: one shard IS the whole matrix — the same layout is
+            // derived, so even these engines must match bitwise.
+            let one = sharded_ctx(&m, kind, 1, ShardStrategy::CacheAware, vec_size);
+            let y1 = one.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            if y1 != y_ref {
+                return Err(format!("{kind:?} k=1: sharded != unsharded bitwise"));
+            }
+            for &k in &shard_counts() {
+                let ctx = sharded_ctx(&m, kind, k, ShardStrategy::CacheAware, vec_size);
+                let y = ctx.spmv_alloc(&x).map_err(|e| e.to_string())?;
+                assert_allclose(&y, &y_ref, 1e-9, 1e-9)
+                    .map_err(|e| format!("{kind:?} k={k}: {e}"))?;
+                // Re-deriving the shard layouts is deterministic.
+                let again = sharded_ctx(&m, kind, k, ShardStrategy::CacheAware, vec_size);
+                let y2 = again.spmv_alloc(&x).map_err(|e| e.to_string())?;
+                if y != y2 {
+                    return Err(format!("{kind:?} k={k}: sharded build not deterministic"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sharded_batch_bitwise_matches_repeated_sharded_spmv() {
+    check_prop("sharded-batch-equals-repeated", 0x54A8D3, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let vec_size = 32 * (1 + rng.next_below(3));
+        let bw = 1 + rng.next_below(5);
+        let xs: Vec<Vec<f64>> = (0..bw).map(|_| random_x(rng, m.ncols())).collect();
+        let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let xbatch = BatchBuf::from_cols(&xrefs).map_err(|e| e.to_string())?;
+        let k = 2 + rng.next_below(6);
+        for kind in ROW_LOCAL.iter().chain(GLOBAL_LAYOUT.iter()) {
+            let ctx = sharded_ctx(&m, *kind, k, ShardStrategy::CacheAware, vec_size);
+            let mut ys = BatchBuf::<f64>::zeros(m.nrows(), bw);
+            {
+                let mut yv = ys.view_mut();
+                ctx.spmv_batch(xbatch.view(), &mut yv).map_err(|e| e.to_string())?;
+            }
+            for (b, x) in xs.iter().enumerate() {
+                let y1 = ctx.spmv_alloc(x).map_err(|e| e.to_string())?;
+                if y1[..] != *ys.col(b) {
+                    return Err(format!("{kind:?} k={k}: batch lane {b} != sharded spmv"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_shard_plans_persist_and_reload_through_the_store() {
+    // Sharded EHYB + tune + plan cache: each shard persists its own
+    // entry keyed by its diagonal block's fingerprint, and a rebuild
+    // pointing at the same cache warm-starts every shard with the
+    // identical plan (bitwise-identical execution).
+    let m = ehyb::sparse::gen::unstructured_mesh::<f64>(40, 40, 0.4, 17);
+    let dir = std::env::temp_dir().join(format!("ehyb-shard-store-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let k = 4;
+    let build = || {
+        SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(cfg(64))
+            .tune(TuneLevel::Heuristic)
+            .plan_cache(&dir)
+            .shards(ShardSpec::Count(k))
+            .build()
+            .unwrap()
+    };
+    let cold = build();
+    assert_eq!(cold.tuned_shards().len(), k);
+    let cold_plans: Vec<_> = cold.tuned_shards().to_vec();
+    for tp in cold_plans.iter() {
+        let tp = tp.as_ref().expect("mesh shards have diagonal entries");
+        assert_eq!(tp.scope, "ehyb");
+        assert!(tp.score_secs <= tp.default_score_secs);
+    }
+    // One cache file per shard fingerprint (all distinct blocks), plus
+    // the whole-matrix entry the builder's own tuning arm persists.
+    let entries: Vec<_> = std::fs::read_dir(&dir)
+        .expect("cache dir created")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+        .collect();
+    assert_eq!(entries.len(), k + 1, "one persisted plan per shard + the whole-matrix plan");
+    // Warm rebuild: same plans come back from the store...
+    let warm = build();
+    assert_eq!(warm.tuned_shards(), &cold_plans[..]);
+    // ...and execution is bitwise identical between cold and warm.
+    let x: Vec<f64> = (0..m.ncols()).map(|i| ((i * 13 + 3) % 23) as f64 * 0.25 - 2.5).collect();
+    assert_eq!(cold.spmv_alloc(&x).unwrap(), warm.spmv_alloc(&x).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cg_runs_unchanged_on_sharded_engine() {
+    // The solver layer is engine-agnostic: on a row-local engine kind,
+    // CG over the sharded context follows the exact same trajectory
+    // (bitwise) as over the unsharded one.
+    let m = ehyb::sparse::gen::poisson2d::<f64>(24, 24);
+    let n = m.nrows();
+    let b: Vec<f64> = (0..n).map(|i| ((i * 7 + 5) % 17) as f64 / 17.0 - 0.5).collect();
+    let pre = ehyb::coordinator::Jacobi::new(&m);
+    let scfg = ehyb::coordinator::SolverConfig::default();
+    let base = SpmvContext::builder(m.clone()).engine(EngineKind::CsrScalar).build().unwrap();
+    let (x_ref, rep_ref) = base.solver().cg(&b, None, &pre, &scfg).unwrap();
+    assert!(rep_ref.converged);
+    let ctx = sharded_ctx(&m, EngineKind::CsrScalar, 5, ShardStrategy::CacheAware, 64);
+    let (x, rep) = ctx.solver().cg(&b, None, &pre, &scfg).unwrap();
+    assert!(rep.converged);
+    assert_eq!(rep.iters, rep_ref.iters);
+    assert_eq!(x, x_ref, "sharded CG trajectory must be bitwise identical");
+    // And the sharded EHYB engine still solves (roundoff-equivalent).
+    let ehyb_ctx = sharded_ctx(&m, EngineKind::Ehyb, 3, ShardStrategy::CacheAware, 64);
+    let (xe, repe) = ehyb_ctx.solver().cg(&b, None, &pre, &scfg).unwrap();
+    assert!(repe.converged);
+    let mut ax = vec![0.0; n];
+    m.spmv(&xe, &mut ax);
+    assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
+}
+
+#[test]
+fn cg_many_fuses_on_sharded_engine() {
+    let m = ehyb::sparse::gen::poisson2d::<f64>(20, 20);
+    let n = m.nrows();
+    let bs: Vec<Vec<f64>> = (0..3)
+        .map(|t| (0..n).map(|i| ((i * 3 + t * 11 + 1) % 19) as f64 / 19.0 - 0.5).collect())
+        .collect();
+    let pre = ehyb::coordinator::Jacobi::new(&m);
+    let scfg = ehyb::coordinator::SolverConfig::default();
+    let ctx = sharded_ctx(&m, EngineKind::Ehyb, 4, ShardStrategy::CacheAware, 64);
+    let sols = ctx.solver().cg_many(&bs, &pre, &scfg).unwrap();
+    assert_eq!(sols.len(), 3);
+    for (b, (x, rep)) in bs.iter().zip(&sols) {
+        assert!(rep.converged, "{rep:?}");
+        let mut ax = vec![0.0; n];
+        m.spmv(x, &mut ax);
+        assert_allclose(&ax, b, 1e-6, 1e-6).unwrap();
+    }
+    // The sharded engine saw fused batches: every shard's lane counter
+    // advanced by the batch width per iteration.
+    let stats = ctx.sharded().unwrap().stats();
+    assert!(stats.iter().all(|s| s.lanes.load(std::sync::atomic::Ordering::Relaxed) > 0));
+}
+
+#[test]
+fn service_drains_one_fused_batch_per_shard() {
+    let m = ehyb::sparse::gen::poisson2d::<f64>(16, 16);
+    let ctx = sharded_ctx(&m, EngineKind::Ehyb, 4, ShardStrategy::CacheAware, 64);
+    let svc = ctx.serve(8).unwrap();
+    let client = svc.client();
+    let xs: Vec<Vec<f64>> = (0..6)
+        .map(|t| (0..256).map(|i| ((i * 5 + t * 7) % 11) as f64 * 0.5 - 2.0).collect())
+        .collect();
+    let ys = client.spmv_many(xs.clone()).unwrap();
+    for (x, y) in xs.iter().zip(&ys) {
+        let mut want = vec![0.0; 256];
+        m.spmv(x, &mut want);
+        assert_allclose(y, &want, 1e-10, 1e-10).unwrap();
+    }
+    drop(svc);
+    // Each service drain ran exactly one fused batch per shard: shard
+    // batch counters equal the service's fused-batch count (plus the
+    // single-vector path count staying zero).
+    let batches: Vec<u64> = ctx
+        .sharded()
+        .unwrap()
+        .stats()
+        .iter()
+        .map(|s| s.batch_calls.load(std::sync::atomic::Ordering::Relaxed))
+        .collect();
+    assert!(batches.iter().all(|&b| b == batches[0] && b > 0), "{batches:?}");
+}
+
+#[test]
+fn auto_resolution_composes_with_sharding() {
+    // Auto resolves the kind on the whole matrix, then the winner is
+    // sharded; the context reports both the resolution and the shards.
+    let m = ehyb::sparse::gen::unstructured_mesh::<f64>(48, 48, 0.3, 1);
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Auto)
+        .config(cfg(512))
+        .shards(ShardSpec::Count(3))
+        .build()
+        .unwrap();
+    assert_eq!(ctx.requested_kind(), EngineKind::Auto);
+    assert_ne!(ctx.kind(), EngineKind::Auto);
+    assert_eq!(ctx.shards(), 3);
+    let x = vec![1.0; m.ncols()];
+    let y = ctx.spmv_alloc(&x).unwrap();
+    assert_allclose(&y, &m.spmv_f64_oracle(&x), 1e-9, 1e-9).unwrap();
+}
