@@ -82,6 +82,34 @@ fn main() {
                 engine_rows.push((name, gf));
             }
         }
+        // Reorder on/off sweep (ISSUE 5): the same EHYB pipeline with a
+        // locality-aware global ordering applied ahead of it. Captured
+        // in BENCH_ci.json so the perf trajectory tracks the reorder
+        // win per commit.
+        for (tag, spec) in [
+            ("off", ehyb::ReorderSpec::None),
+            ("rcm", ehyb::ReorderSpec::Rcm),
+            ("partrank", ehyb::ReorderSpec::PartitionRank { k: 0 }),
+        ] {
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(EngineKind::Ehyb)
+                .config(cfg.clone())
+                .reorder(spec)
+                .build()
+                .expect("reordered build");
+            let x = vec![1.0f64; m.ncols()];
+            let mut y = vec![0.0f64; m.nrows()];
+            let e = ctx.engine();
+            let secs = bench_secs(|| e.spmv(&x, &mut y), reps, Duration::from_millis(rep_ms));
+            let gf = ehyb::spmv::gflops(m.nnz(), secs);
+            let name = format!("ehyb-reorder-{tag}");
+            let band = ctx.reordering().map_or_else(
+                || "natural".to_string(),
+                |r| format!("bandwidth {} -> {}", r.before.bandwidth, r.after.bandwidth),
+            );
+            println!("  {name:>20}: {gf:7.3} GFLOPS ({band})");
+            engine_rows.push((name, gf));
+        }
         json_cases.push(BenchCase {
             matrix: label.split_whitespace().next().unwrap_or(label).to_string(),
             n: m.nrows(),

@@ -32,6 +32,7 @@ use crate::coordinator::precond::Preconditioner;
 use crate::coordinator::service::{self, BatchKernel, SpmvService};
 use crate::coordinator::solver::{self, SolveReport, SolverConfig};
 use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::reorder::{ReorderSpec, ReorderedEngine, Reordering};
 use crate::shard::{ShardPlan, ShardSpec, ShardStrategy, ShardedEngine};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
@@ -179,6 +180,7 @@ pub struct SpmvContextBuilder<S: Scalar> {
     cache_disabled: bool,
     shards: Option<ShardSpec>,
     shard_strategy: ShardStrategy,
+    reorder: Option<ReorderSpec>,
 }
 
 impl<S: Scalar> SpmvContextBuilder<S> {
@@ -245,6 +247,23 @@ impl<S: Scalar> SpmvContextBuilder<S> {
         self
     }
 
+    /// Apply a global locality-aware row/column reordering
+    /// ([`crate::reorder`]) **ahead of** the whole pipeline: tuning
+    /// fingerprints, shard boundaries, and the EHYB partitioner all see
+    /// the permuted matrix (so [`ShardStrategy::CacheAware`] has real
+    /// locality to find), while user-facing vectors stay in original
+    /// index space — the built engine is wrapped in a
+    /// [`ReorderedEngine`] adapter that permutes `x` in and `y` out
+    /// through pooled scratch, and `cg`/`cg_many`/`serve` run unchanged
+    /// on top. [`ReorderSpec::Auto`] picks the ordering by scored
+    /// footprint reduction; a resolution to the identity executes with
+    /// zero overhead. Requires a square matrix (except
+    /// [`ReorderSpec::None`], which is a no-op).
+    pub fn reorder(mut self, spec: ReorderSpec) -> Self {
+        self.reorder = Some(spec);
+        self
+    }
+
     /// Run preprocessing / tuning (as requested) and prepare the engine.
     pub fn build(self) -> crate::Result<SpmvContext<S>> {
         let SpmvContextBuilder {
@@ -256,14 +275,60 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             cache_disabled,
             shards,
             shard_strategy,
+            reorder,
         } = self;
+        // --- Global reordering (ISSUE 5 tentpole): resolved FIRST so
+        // everything downstream — tuning fingerprints, shard
+        // boundaries, the EHYB partitioner — sees the permuted
+        // structure. `exec` is the matrix the engines run on; `matrix`
+        // stays the user-facing original.
+        let mut reordering: Option<Arc<Reordering>> = None;
+        let mut exec_matrix: Option<Csr<S>> = None;
+        if let Some(spec) = reorder {
+            if spec != ReorderSpec::None {
+                if matrix.nrows() != matrix.ncols() || matrix.nrows() == 0 {
+                    return Err(EhybError::UnsupportedFormat(format!(
+                        "reordering requires a non-empty square matrix, got {}x{}",
+                        matrix.nrows(),
+                        matrix.ncols()
+                    )));
+                }
+                let r = Reordering::compute(&matrix, spec)?;
+                if !r.is_identity() {
+                    exec_matrix = Some(r.apply(&matrix));
+                }
+                reordering = Some(Arc::new(r));
+            }
+        }
+        let exec: &Csr<S> = exec_matrix.as_ref().unwrap_or(&matrix);
+        // Stamped into tuned plans (and checked on cache hits): the
+        // fingerprint already keys on the reordered structure, the tag
+        // records which ordering produced it.
+        let reorder_tag =
+            reordering.as_ref().map_or_else(|| "none".to_string(), |r| r.resolved.clone());
+        let shard_k = shards.map(|s| s.resolve(exec.nrows()));
         // The whole-matrix tuning arm consumes `cache_dir`; per-shard
         // tuning below resolves its own store from the same setting.
         let shard_cache_dir = cache_dir.clone();
         let mut tuned: Option<TunedPlan> = None;
         let (resolved, plan): (EngineKind, Option<EhybPlan<S>>) = match (kind, tune) {
+            (EngineKind::Ehyb, None) if shard_k.is_some_and(|k| k >= 2) => {
+                // ISSUE 5 satellite: a sharded EHYB build never
+                // executes the whole-matrix plan — every shard runs its
+                // own diagonal-block pipeline below, so a K ≥ 2 build
+                // runs exactly K block pipelines, not K + 1. Keep the
+                // validation the skipped plan build would have done.
+                if exec.nrows() != exec.ncols() || exec.nrows() == 0 {
+                    return Err(EhybError::UnsupportedFormat(format!(
+                        "EHYB requires a square matrix, got {}x{}",
+                        exec.nrows(),
+                        exec.ncols()
+                    )));
+                }
+                (EngineKind::Ehyb, None)
+            }
             (EngineKind::Ehyb, None) => {
-                (EngineKind::Ehyb, Some(EhybPlan::build(&matrix, &config)?))
+                (EngineKind::Ehyb, Some(EhybPlan::build(exec, &config)?))
             }
             (concrete, None) if concrete != EngineKind::Auto => (concrete, None),
             // Tuner-routed: explicit `.tune(..)` and/or `Auto`.
@@ -283,23 +348,28 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                 };
                 // The fingerprint is a full O(nnz) hash pass — compute
                 // it once, only when a store can use it, and hand it on
-                // to the tuner so the search does not re-hash.
-                let fp = store.as_ref().map(|_| Fingerprint::of(&matrix));
+                // to the tuner so the search does not re-hash. It is
+                // computed on the REORDERED structure, so differently-
+                // ordered builds of one matrix key separate entries and
+                // cached winners survive restarts per ordering.
+                let fp = store.as_ref().map(|_| Fingerprint::of(exec));
                 let device = autotune::device_key(&config.device);
                 let cfg_key = autotune::config_key(&config);
                 // A damaged cache entry (Err) is treated as a miss, and
                 // a hit is honored only when it fits this build: the
                 // entry for this search scope (so Auto and EHYB-only
                 // winners never clobber each other), same (or Auto)
-                // engine request, compatible tune level, and an exactly
-                // matching base config — see `TunedPlan::usable_for`.
+                // engine request, compatible tune level, an exactly
+                // matching base config (`TunedPlan::usable_for`), and
+                // the same resolved reordering provenance.
                 let hit = store
                     .as_ref()
                     .zip(fp.as_ref())
                     .and_then(|(s, fp)| {
                         s.load(&fp.key(), &device, S::NAME, requested.name()).ok().flatten()
                     })
-                    .filter(|tp| tp.usable_for(requested, level, &cfg_key));
+                    .filter(|tp| tp.usable_for(requested, level, &cfg_key))
+                    .filter(|tp| tp.reorder == reorder_tag);
                 // Adopt the cached plan — unless rebuilding it fails
                 // (stale entry for a matrix/config drift the keys did
                 // not capture), in which case fall through to a fresh
@@ -307,7 +377,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                 let adopted = hit.and_then(|tp| {
                     let cfg2 = tp.apply(&config);
                     if tp.engine == EngineKind::Ehyb {
-                        EhybPlan::build(&matrix, &cfg2).ok().map(|p| (tp, cfg2, Some(p)))
+                        EhybPlan::build(exec, &cfg2).ok().map(|p| (tp, cfg2, Some(p)))
                     } else {
                         Some((tp, cfg2, None))
                     }
@@ -320,17 +390,20 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                         (engine, plan)
                     }
                     None => {
-                        let out = if explicit {
+                        let mut out = if explicit {
                             autotune::tuner::tune_with_fingerprint(
-                                &matrix, &config, requested, level, fp,
+                                exec, &config, requested, level, fp,
                             )?
                         } else {
                             // Implicit `Auto` (no `.tune(..)`): engine
                             // choice only — one preprocessing pass,
                             // like the pre-tuner roofline comparison.
                             // The knob search stays opt-in.
-                            autotune::tuner::choose_engine(&matrix, &config, level, fp)?
+                            autotune::tuner::choose_engine(exec, &config, level, fp)?
                         };
+                        // Stamp the ordering that produced this search
+                        // before anything persists or reports it.
+                        out.plan.reorder = reorder_tag.clone();
                         // Persist only real search results: implicit
                         // Auto's light engine choice and budget-starved
                         // measured runs (`!searched()`) must not occupy
@@ -361,9 +434,17 @@ impl<S: Scalar> SpmvContextBuilder<S> {
         let mut shard_plan: Option<ShardPlan> = None;
         let mut shard_tuned: Vec<Option<TunedPlan>> = Vec::new();
         let mut sharded: Option<Arc<ShardedEngine<S>>> = None;
+        let mut reorder_cut: Option<(usize, usize)> = None;
         if let Some(spec) = shards {
-            let k = spec.resolve(matrix.nrows());
-            let splan = ShardPlan::new(&matrix, k, shard_strategy);
+            let k = spec.resolve(exec.nrows());
+            let splan = ShardPlan::new(exec, k, shard_strategy);
+            if exec_matrix.is_some() {
+                // Report the boundary traffic the reordering removed:
+                // the same strategy planned on the natural order vs the
+                // permuted order this build actually executes.
+                let natural = ShardPlan::new(&matrix, k, shard_strategy);
+                reorder_cut = Some((natural.cut_nnz(&matrix), splan.cut_nnz(exec)));
+            }
             let shard_overrides = match (resolved, tune) {
                 (EngineKind::Ehyb, Some(level)) if k > 1 => {
                     let store = if cache_disabled {
@@ -373,15 +454,20 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                     };
                     let mut overrides = Vec::with_capacity(splan.num_shards());
                     for rg in splan.ranges() {
-                        let (block, _halo) = matrix.diag_block_split(rg.start, rg.end);
+                        let (block, _halo) = exec.diag_block_split(rg.start, rg.end);
                         if block.nnz() == 0 {
                             // Pure-halo shard: nothing to tune.
                             shard_tuned.push(None);
                             overrides.push((config.clone(), None));
                             continue;
                         }
-                        let (tp, cfg2, bplan) =
-                            tune_shard_block(&block, &config, level, store.as_ref())?;
+                        let (tp, cfg2, bplan) = tune_shard_block(
+                            &block,
+                            &config,
+                            level,
+                            store.as_ref(),
+                            &reorder_tag,
+                        )?;
                         shard_tuned.push(Some(tp));
                         overrides.push((cfg2, bplan));
                     }
@@ -399,17 +485,23 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                     shard_tuned.push(tuned.clone());
                     Some(vec![(config.clone(), plan.clone())])
                 }
+                (EngineKind::Ehyb, None) if plan.is_some() => {
+                    // K = 1 untuned: the whole-matrix plan exists (the
+                    // K ≥ 2 arm above skipped it) — hand it to the
+                    // single shard instead of preprocessing twice.
+                    Some(vec![(config.clone(), plan.clone())])
+                }
                 _ => None,
             };
-            let engine =
-                ShardedEngine::build(&matrix, resolved, &config, &splan, shard_overrides)?;
+            let engine = ShardedEngine::build(exec, resolved, &config, &splan, shard_overrides)?;
             let arc = Arc::new(engine);
             sharded = Some(arc.clone());
             shard_plan = Some(splan);
         }
         let engine = OnceLock::new();
         if let Some(arc) = &sharded {
-            let _ = engine.set(arc.clone() as Arc<dyn SpmvEngine<S>>);
+            let inner = arc.clone() as Arc<dyn SpmvEngine<S>>;
+            let _ = engine.set(wrap_reordered(inner, &reordering, exec_matrix.is_some()));
         }
         Ok(SpmvContext {
             matrix,
@@ -418,6 +510,9 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             requested: kind,
             plan,
             tuned,
+            reordering,
+            exec_matrix,
+            reorder_cut,
             shard_plan,
             shard_tuned,
             sharded,
@@ -442,13 +537,15 @@ fn tune_shard_block<S: Scalar>(
     base: &PreprocessConfig,
     level: TuneLevel,
     store: Option<&PlanStore>,
+    reorder_tag: &str,
 ) -> crate::Result<(TunedPlan, PreprocessConfig, Option<EhybPlan<S>>)> {
     let fp = Fingerprint::of(block);
     let device = autotune::device_key(&base.device);
     let cfg_key = autotune::config_key(base);
     let hit = store
         .and_then(|s| s.load(&fp.key(), &device, S::NAME, EngineKind::Ehyb.name()).ok().flatten())
-        .filter(|tp| tp.usable_for(EngineKind::Ehyb, level, &cfg_key));
+        .filter(|tp| tp.usable_for(EngineKind::Ehyb, level, &cfg_key))
+        .filter(|tp| tp.reorder == reorder_tag);
     if let Some(tp) = hit {
         let cfg = tp.apply(base);
         // A stale entry that no longer rebuilds is a miss, not a build
@@ -458,8 +555,11 @@ fn tune_shard_block<S: Scalar>(
             return Ok((tp, cfg, Some(bplan)));
         }
     }
-    let out =
+    let mut out =
         autotune::tuner::tune_with_fingerprint(block, base, EngineKind::Ehyb, level, Some(fp))?;
+    // The block is a block of the already-reordered matrix; record the
+    // ordering provenance just like the whole-matrix entry does.
+    out.plan.reorder = reorder_tag.to_string();
     if out.searched() {
         if let Some(s) = store {
             let _ = s.save(&out.plan);
@@ -467,6 +567,19 @@ fn tune_shard_block<S: Scalar>(
     }
     let cfg = out.plan.apply(base);
     Ok((out.plan, cfg, out.ehyb))
+}
+
+/// Wrap `inner` in the reorder boundary adapter when this build runs on
+/// a (non-identity) permuted matrix.
+fn wrap_reordered<S: Scalar>(
+    inner: Arc<dyn SpmvEngine<S>>,
+    reordering: &Option<Arc<Reordering>>,
+    permuted: bool,
+) -> Arc<dyn SpmvEngine<S>> {
+    match reordering {
+        Some(r) if permuted => Arc::new(ReorderedEngine::new(inner, r.clone())),
+        _ => inner,
+    }
 }
 
 /// A prepared SpMV pipeline: matrix + (optional) EHYB plan + engine.
@@ -481,6 +594,16 @@ pub struct SpmvContext<S: Scalar> {
     /// Present iff the build was tuner-routed (`.tune(..)` or `Auto`):
     /// the winning plan with its score provenance.
     tuned: Option<TunedPlan>,
+    /// Present iff `.reorder(..)` requested anything but `None`: the
+    /// computed ordering with before/after quality metrics.
+    reordering: Option<Arc<Reordering>>,
+    /// The permuted matrix the engines execute on — present iff the
+    /// resolved reordering is non-identity (`matrix` stays in the
+    /// user-facing original order).
+    exec_matrix: Option<Csr<S>>,
+    /// `(before, after)` cross-shard `cut_nnz` under the shard
+    /// strategy, when reordering and sharding combined.
+    reorder_cut: Option<(usize, usize)>,
     /// Present iff the build was sharded (`.shards(..)`): the row
     /// ranges the engine fans out over.
     shard_plan: Option<ShardPlan>,
@@ -510,6 +633,7 @@ impl<S: Scalar> SpmvContext<S> {
             cache_disabled: false,
             shards: None,
             shard_strategy: ShardStrategy::default(),
+            reorder: None,
         }
     }
 
@@ -536,9 +660,14 @@ impl<S: Scalar> SpmvContext<S> {
         &self.config
     }
 
-    /// The EHYB preprocessing output (present iff the resolved engine is
-    /// [`EngineKind::Ehyb`]) — partition provenance, cache plan, and the
-    /// Figure 6 timings live here.
+    /// The EHYB preprocessing output — partition provenance, cache
+    /// plan, and the Figure 6 timings. Present iff the resolved engine
+    /// is [`EngineKind::Ehyb`] **and** the build actually ran the
+    /// whole-matrix pipeline: an untuned build sharded into K ≥ 2 skips
+    /// it (each shard runs its own diagonal-block pipeline — see
+    /// [`crate::shard::ShardStat::block_prep`]), so this is `None`
+    /// there. Built from the reordered matrix when `.reorder(..)` is
+    /// active.
     pub fn plan(&self) -> Option<&EhybPlan<S>> {
         self.plan.as_ref()
     }
@@ -576,8 +705,34 @@ impl<S: Scalar> SpmvContext<S> {
         self.sharded.as_deref()
     }
 
+    /// The global reordering this context was built with — present iff
+    /// [`SpmvContextBuilder::reorder`] requested anything but
+    /// [`ReorderSpec::None`]. `resolved` records what actually ran; an
+    /// identity resolution executes with zero overhead (no adapter).
+    pub fn reordering(&self) -> Option<&Reordering> {
+        self.reordering.as_deref()
+    }
+
+    /// The permuted matrix the engines execute on, when the resolved
+    /// reordering is non-identity. [`Self::matrix`] stays in original
+    /// index space, as do all `spmv`/solver/service vectors.
+    pub fn reordered_matrix(&self) -> Option<&Csr<S>> {
+        self.exec_matrix.as_ref()
+    }
+
+    /// Cross-shard entries (`cut_nnz`) before → after reordering, when
+    /// this build combined `.reorder(..)` with `.shards(..)`: the same
+    /// shard strategy planned on the natural vs the permuted order.
+    pub fn reorder_cut_nnz(&self) -> Option<(usize, usize)> {
+        self.reorder_cut
+    }
+
     fn engine_cell(&self) -> &Arc<dyn SpmvEngine<S>> {
-        self.engine.get_or_init(|| build_engine(self.kind, &self.matrix, self.plan.as_ref()))
+        self.engine.get_or_init(|| {
+            let exec = self.exec_matrix.as_ref().unwrap_or(&self.matrix);
+            let inner = build_engine(self.kind, exec, self.plan.as_ref());
+            wrap_reordered(inner, &self.reordering, self.exec_matrix.is_some())
+        })
     }
 
     /// The prepared engine (built on first use, then cached).
@@ -1020,7 +1175,11 @@ mod tests {
     }
 
     #[test]
-    fn sharded_ehyb_context_keeps_whole_matrix_plan() {
+    fn sharded_ehyb_skips_the_never_executed_whole_matrix_plan() {
+        // ISSUE 5 satellite: at K >= 2 the whole-matrix plan would
+        // never execute (every shard runs its own diagonal-block
+        // pipeline), so the build must run exactly K block pipelines —
+        // not K + 1 — which the per-shard preprocessing timings prove.
         let m = poisson2d::<f64>(16, 16);
         let ctx = SpmvContext::builder(m)
             .engine(EngineKind::Ehyb)
@@ -1028,15 +1187,25 @@ mod tests {
             .shards(ShardSpec::Count(3))
             .build()
             .unwrap();
-        // The whole-matrix plan survives for observability; execution
-        // goes through the sharded engine.
-        assert!(ctx.plan().is_some());
+        assert!(ctx.plan().is_none(), "K=3 must not pay for a whole-matrix plan");
+        let stats = ctx.sharded().unwrap().stats();
+        assert_eq!(stats.iter().filter(|s| s.block_prep.is_some()).count(), 3);
         assert_eq!(ctx.engine().name(), "sharded");
         assert_eq!(ctx.sharded().unwrap().num_shards(), 3);
         let x = vec![1.0; 256];
         let y = ctx.spmv_alloc(&x).unwrap();
         let oracle = ctx.matrix().spmv_f64_oracle(&x);
         assert_allclose(&y, &oracle, 1e-10, 1e-10).unwrap();
+        // K = 1 is the whole matrix: the plan exists and is handed to
+        // the single shard (one pipeline run, not two).
+        let ctx1 = SpmvContext::builder(poisson2d::<f64>(16, 16))
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .shards(ShardSpec::Count(1))
+            .build()
+            .unwrap();
+        assert!(ctx1.plan().is_some());
+        assert!(ctx1.sharded().unwrap().stats()[0].block_prep.is_some());
     }
 
     #[test]

@@ -133,6 +133,7 @@ mod tests {
             dtype: "f64".into(),
             base_config: "sd1-Multilevel-r4-c8-s9e3779b9".into(),
             scope: "ehyb".into(),
+            reorder: "none".into(),
         }
     }
 

@@ -95,6 +95,16 @@ pub struct TunedPlan {
     /// EHYB-only tune can never clobber the entry an `Auto` search
     /// established (and vice versa).
     pub scope: String,
+    /// Resolved [`crate::reorder::ReorderSpec`] tag of the global
+    /// ordering the tuned matrix was permuted with ("none" when
+    /// untouched). The fingerprint is computed on the *reordered*
+    /// structure, so differently-ordered builds already key separate
+    /// store entries; this records which ordering produced the entry
+    /// and lets the facade refuse a hit whose ordering provenance
+    /// disagrees with the current build. The tuner itself always emits
+    /// "none" — the facade (which owns the reordering) stamps the tag
+    /// before persisting. Entries written before 0.5 load as "none".
+    pub reorder: String,
 }
 
 /// Overlay the three tuned knobs onto a base config — THE single code
@@ -144,6 +154,7 @@ impl TunedPlan {
             ("dtype", Json::Str(self.dtype.clone())),
             ("base_config", Json::Str(self.base_config.clone())),
             ("scope", Json::Str(self.scope.clone())),
+            ("reorder", Json::Str(self.reorder.clone())),
         ])
     }
 
@@ -207,6 +218,17 @@ impl TunedPlan {
             dtype: str_field(j, "dtype")?,
             base_config: str_field(j, "base_config")?,
             scope: str_field(j, "scope")?,
+            // Absent in pre-0.5 entries: they were tuned without any
+            // reordering, which is exactly what "none" records.
+            reorder: match j.get("reorder") {
+                None => "none".to_string(),
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| {
+                        crate::EhybError::Parse("tuned plan field \"reorder\" not a string".into())
+                    })?
+                    .to_string(),
+            },
         };
         // Range-validate before anything downstream trusts the knobs: a
         // corrupted / hand-edited cache entry must surface as an error
@@ -490,6 +512,7 @@ fn search<S: Scalar>(
             dtype: S::NAME.to_string(),
             base_config: super::config_key(base),
             scope: requested.name().to_string(),
+            reorder: "none".to_string(),
         },
         ehyb: best.ehyb,
         candidates_tried: tried,
@@ -807,6 +830,7 @@ mod tests {
             dtype: "f64".into(),
             base_config: "sd1-Multilevel-r4-c8-s9e3779b9".into(),
             scope: "ehyb".into(),
+            reorder: "none".into(),
         }
     }
 
@@ -819,6 +843,27 @@ mod tests {
         let plan2 = TunedPlan { vec_size: None, ell_width_cutoff: None, ..plan };
         let back2 = TunedPlan::from_json(&Json::parse(&plan2.to_json().dump()).unwrap()).unwrap();
         assert_eq!(back2, plan2);
+        // A stamped reorder tag survives the round trip.
+        let plan3 = TunedPlan { reorder: "rcm".into(), ..sample_plan() };
+        let back3 = TunedPlan::from_json(&Json::parse(&plan3.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back3.reorder, "rcm");
+    }
+
+    #[test]
+    fn pre_reorder_entries_load_as_none() {
+        // 0.4-era cache entries have no "reorder" field; they must load
+        // (as "none"), not rot into parse errors.
+        let mut j = sample_plan().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("reorder");
+        }
+        let back = TunedPlan::from_json(&j).unwrap();
+        assert_eq!(back.reorder, "none");
+        // But a present non-string value is a parse error.
+        if let Json::Obj(m) = &mut j {
+            m.insert("reorder".into(), Json::Num(3.0));
+        }
+        assert!(TunedPlan::from_json(&j).is_err());
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! observability surface (batch-width / bytes-moved / shard metrics),
 //! and the machine-readable bench report (`BENCH_ci.json` in CI).
 
-use super::ablation::AblationRow;
+use super::ablation::{AblationRow, ReorderRow};
 use super::tables::{Fig6Row, FigureSeries, SpeedupRow};
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::runtime::json::{self, Json};
@@ -180,6 +180,27 @@ pub fn bench_json(label: &str, cases: &[BenchCase]) -> Json {
     ])
 }
 
+/// The reorder ablation as markdown: per-spec locality metrics
+/// (bandwidth / profile / windowed distinct-column footprint), the
+/// cache-aware cross-shard cut, and simulated EHYB throughput.
+pub fn reorder_markdown(title: &str, rows: &[ReorderRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(
+        s,
+        "| ordering | bandwidth | profile | window footprint | cut nnz | GFLOPS | ER fraction |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {:.1} | {} | {:.2} | {:.4} |",
+            r.spec, r.bandwidth, r.profile, r.footprint, r.cut_nnz, r.gflops, r.er_fraction
+        );
+    }
+    s
+}
+
 pub fn ablation_markdown(title: &str, rows: &[AblationRow]) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "### {title}\n");
@@ -273,6 +294,33 @@ mod tests {
         for line in md.lines().skip(4) {
             assert!(line.contains("| 1 | 0 | 0 |"), "{md}");
         }
+    }
+
+    #[test]
+    fn reorder_markdown_has_one_row_per_spec() {
+        let rows = vec![
+            ReorderRow {
+                spec: "none".into(),
+                bandwidth: 900,
+                profile: 120_000,
+                footprint: 812.5,
+                cut_nnz: 4200,
+                gflops: 55.0,
+                er_fraction: 0.04,
+            },
+            ReorderRow {
+                spec: "rcm".into(),
+                bandwidth: 41,
+                profile: 9_100,
+                footprint: 310.0,
+                cut_nnz: 240,
+                gflops: 61.2,
+                er_fraction: 0.03,
+            },
+        ];
+        let md = reorder_markdown("Reorder", &rows);
+        assert!(md.contains("| none | 900 | 120000 | 812.5 | 4200 | 55.00 | 0.0400 |"), "{md}");
+        assert!(md.contains("| rcm | 41 |"), "{md}");
     }
 
     #[test]

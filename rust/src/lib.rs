@@ -98,6 +98,19 @@
 //! assert!(ctx3.shards() >= 1);
 //! let y3 = ctx3.spmv_alloc(&x)?;
 //! assert_eq!(y3.len(), n);
+//!
+//! // Global reordering: apply a locality-aware symmetric row/column
+//! // ordering (RCM, partition-rank, or Auto = scored footprint
+//! // reduction) AHEAD of the pipeline, so shard boundaries, the EHYB
+//! // partitioner, and tuning fingerprints all see the improved
+//! // locality. User-facing vectors stay in original index space.
+//! let m4 = poisson2d::<f64>(32, 32);
+//! let ctx4 = SpmvContext::builder(m4)
+//!     .reorder(ehyb::ReorderSpec::Auto)
+//!     .shards(ehyb::ShardSpec::Auto)
+//!     .build()?;
+//! let y4 = ctx4.spmv_alloc(&x)?; // same index space as x
+//! assert_eq!(y4.len(), n);
 //! # Ok::<(), ehyb::EhybError>(())
 //! ```
 //!
@@ -128,10 +141,18 @@
 //!   a private cache, and sharded EHYB builds tune + cache plans **per
 //!   shard**. Row-local engines stay bit-identical to the unsharded
 //!   kernel; see [`shard`] for the full contract.
+//! * **Reordering** — `builder(m).reorder(ReorderSpec::Rcm)` (or
+//!   `PartitionRank`/`Auto`) permutes the matrix symmetrically before
+//!   anything else runs ([`reorder`]), shrinking bandwidth, the
+//!   windowed cache footprint, and the cache-aware cross-shard cut.
+//!   Row-local engines stay bit-identical (the permute preserves
+//!   per-row entry order); tuned plans key on the reordered
+//!   fingerprint, so cached winners survive restarts per ordering.
 
 pub mod util;
 pub mod sparse;
 pub mod partition;
+pub mod reorder;
 pub mod preprocess;
 pub mod spmv;
 pub mod shard;
@@ -145,6 +166,7 @@ pub mod autotune;
 
 pub use api::{BatchBuf, EhybError, EngineKind, SpmvContext, VecBatch, VecBatchMut};
 pub use autotune::{Fingerprint, PlanStore, TuneLevel, TunedPlan};
+pub use reorder::{ReorderQuality, ReorderSpec, Reordering};
 pub use shard::{ShardSpec, ShardStrategy, ShardedEngine};
 
 /// Crate-wide result type over the typed [`EhybError`].

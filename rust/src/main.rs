@@ -18,7 +18,7 @@ use ehyb::harness::suite::Scale;
 use ehyb::preprocess::PreprocessConfig;
 use ehyb::sparse::csr::Csr;
 use ehyb::spmv::SpmvEngine;
-use ehyb::{EngineKind, ShardSpec, SpmvContext};
+use ehyb::{EngineKind, ReorderSpec, ShardSpec, SpmvContext};
 use ehyb::sparse::gen;
 use ehyb::sparse::mmio::read_matrix_market;
 use ehyb::sparse::stats::MatrixStats;
@@ -62,10 +62,11 @@ fn usage() {
          cmds: info | preprocess | spmv | solve | tune | bench | ablation\n\
          gen specs: poisson2d:NX[:NY] poisson3d:N[:NY:NZ] stencil27:N\n\
                     elasticity:N unstructured:N circuit:N kkt:N banded:N\n\
-         options: --vec-size V  --shards K|auto  --dtype f32|f64  --pjrt  --artifacts DIR\n\
+         options: --vec-size V  --shards K|auto  --reorder none|degree|rcm|partrank[:K]|auto\n\
+                  --dtype f32|f64  --pjrt  --artifacts DIR\n\
                   --precond none|jacobi|spai0  --solver cg|bicgstab\n\
                   --table 1|2  --fig 2|3|4|5|6  --scale tiny|small|full\n\
-                  --out DIR  --which cache|partitioner|sort|vecsize|tuning\n\
+                  --out DIR  --which cache|partitioner|sort|vecsize|tuning|reorder\n\
                   --level heuristic|measured  --budget-ms N  --engine auto|ehyb|...\n\
                   --cache DIR (tune; default $EHYB_TUNE_DIR)"
     );
@@ -143,6 +144,48 @@ fn with_shards<S: ehyb::sparse::scalar::Scalar>(
     })
 }
 
+/// `--reorder none|degree|rcm|partrank[:K]|auto` → global ordering spec.
+fn reorder_spec(opts: &HashMap<String, String>) -> anyhow::Result<Option<ReorderSpec>> {
+    match opts.get("reorder").map(String::as_str) {
+        None => Ok(None),
+        Some(v) => Ok(Some(
+            ReorderSpec::from_name(v)
+                .ok_or_else(|| anyhow::anyhow!("bad --reorder value {v}"))?,
+        )),
+    }
+}
+
+/// Apply `--reorder` to a context builder.
+fn with_reorder<S: ehyb::sparse::scalar::Scalar>(
+    b: ehyb::api::SpmvContextBuilder<S>,
+    opts: &HashMap<String, String>,
+) -> anyhow::Result<ehyb::api::SpmvContextBuilder<S>> {
+    Ok(match reorder_spec(opts)? {
+        Some(spec) => b.reorder(spec),
+        None => b,
+    })
+}
+
+/// One-line before→after summary of a context's reordering.
+fn print_reorder_summary<S: ehyb::sparse::scalar::Scalar>(ctx: &SpmvContext<S>) {
+    if let Some(r) = ctx.reordering() {
+        println!(
+            "reorder     : {} (bandwidth {} -> {}, profile {} -> {}, window footprint \
+             {:.1} -> {:.1})",
+            r.resolved,
+            r.before.bandwidth,
+            r.after.bandwidth,
+            r.before.profile,
+            r.after.profile,
+            r.before.window_footprint,
+            r.after.window_footprint
+        );
+        if let Some((before, after)) = ctx.reorder_cut_nnz() {
+            println!("shard cut   : {before} -> {after} cross-shard entries");
+        }
+    }
+}
+
 fn cmd_info(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let m = build_matrix(opts)?;
     let s = MatrixStats::of(&m);
@@ -200,12 +243,10 @@ fn cmd_spmv(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         println!("  {name:>15}: {gflops:7.3} GFLOPS");
     }
 
-    if shard_spec(opts)?.is_some() {
-        let ctx = with_shards(
-            SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg.clone()),
-            opts,
-        )?
-        .build()?;
+    if shard_spec(opts)?.is_some() || reorder_spec(opts)?.is_some() {
+        let b = SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg.clone());
+        let ctx = with_reorder(with_shards(b, opts)?, opts)?.build()?;
+        print_reorder_summary(&ctx);
         let x = vec![1.0f64; m.ncols()];
         let mut y = vec![0.0f64; m.nrows()];
         let e = ctx.engine();
@@ -215,14 +256,14 @@ fn cmd_spmv(opts: &HashMap<String, String>) -> anyhow::Result<()> {
             std::time::Duration::from_millis(100),
         );
         println!(
-            "\nsharded ehyb ({} row shards): {:.3} GFLOPS",
+            "\nehyb ({} row shards, reorder {}): {:.3} GFLOPS",
             ctx.shards(),
+            ctx.reordering().map_or("none", |r| r.resolved.as_str()),
             ehyb::spmv::gflops(m.nnz(), secs)
         );
-        println!(
-            "{}",
-            report::shard_markdown("Per-shard execution", ctx.sharded().expect("sharded build"))
-        );
+        if let Some(sharded) = ctx.sharded() {
+            println!("{}", report::shard_markdown("Per-shard execution", sharded));
+        }
     }
 
     println!("\nsimulated V100 (GPU cost model):");
@@ -261,8 +302,9 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         rtol: opts.get("rtol").and_then(|v| v.parse().ok()).unwrap_or(1e-8),
         track_history: true,
     };
-    let ctx =
-        with_shards(SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg), opts)?.build()?;
+    let b = with_shards(SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg), opts)?;
+    let ctx = with_reorder(b, opts)?.build()?;
+    print_reorder_summary(&ctx);
     let m = ctx.matrix();
     let h = ctx.solver();
 
@@ -288,7 +330,14 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         report.spmv_count,
         report.wall_secs
     );
-    let prep = ctx.plan().expect("EHYB context carries a plan").timings.total_secs();
+    // A K >= 2 sharded EHYB build skips the never-executed whole-matrix
+    // plan; its preprocessing cost is the sum of the K block pipelines.
+    let prep = match ctx.plan() {
+        Some(p) => p.timings.total_secs(),
+        None => ctx.sharded().map_or(0.0, |e| {
+            e.stats().iter().filter_map(|s| s.block_prep.map(|t| t.total_secs())).sum()
+        }),
+    };
     let per_spmv = report.wall_secs / report.spmv_count.max(1) as f64;
     println!(
         "preprocessing {:.3}s = {:.0}x one SpMV; amortized over {} SpMVs: {:.1}% overhead",
@@ -321,6 +370,26 @@ fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         None => EngineKind::Auto,
     };
 
+    // --reorder: tune the permuted structure (exactly what the facade
+    // executes), stamping the resolved tag into the plan's provenance.
+    let (m, reorder_tag) = match reorder_spec(opts)? {
+        Some(spec) if spec != ReorderSpec::None => {
+            let r = ehyb::Reordering::compute(&m, spec)?;
+            println!(
+                "reorder         : {} (bandwidth {} -> {}, window footprint {:.1} -> {:.1})",
+                r.resolved,
+                r.before.bandwidth,
+                r.after.bandwidth,
+                r.before.window_footprint,
+                r.after.window_footprint
+            );
+            let tag = r.resolved.clone();
+            let pm = if r.is_identity() { m } else { r.apply(&m) };
+            (pm, tag)
+        }
+        _ => (m, "none".to_string()),
+    };
+
     let fp = Fingerprint::of(&m);
     println!("fingerprint     : {}", fp.key());
     println!(
@@ -339,7 +408,9 @@ fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         if let Ok(Some(existing)) =
             store.load(&fp.key(), &device_key(&cfg.device), "f64", requested.name())
         {
-            if existing.usable_for(requested, level, &config_key(&cfg)) {
+            if existing.usable_for(requested, level, &config_key(&cfg))
+                && existing.reorder == reorder_tag
+            {
                 println!(
                     "cache hit       : engine={} slice_height={} vec_size={:?} cutoff={:?} \
                      ({} level; delete {} to re-tune)",
@@ -362,7 +433,8 @@ fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         }
     }
 
-    let out = tune_with_fingerprint(&m, &cfg, requested, level, Some(fp))?;
+    let mut out = tune_with_fingerprint(&m, &cfg, requested, level, Some(fp))?;
+    out.plan.reorder = reorder_tag;
     let p = &out.plan;
     println!(
         "tuned plan      : engine={} slice_height={} vec_size={:?} cutoff={:?}",
@@ -550,6 +622,17 @@ fn cmd_ablation(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         println!(
             "{}",
             report::ablation_markdown("Autotuning (default vs heuristic vs measured)", &rows)
+        );
+    }
+    if which == "reorder" || which == "all" {
+        let k = opts.get("shards").and_then(|v| v.parse().ok()).unwrap_or(8);
+        let rows = ablation::reorder_ablation(&m, &cfg, &dev, k)?;
+        println!(
+            "{}",
+            report::reorder_markdown(
+                &format!("Global reordering (cut at K={k} cache-aware shards)"),
+                &rows
+            )
         );
     }
     Ok(())

@@ -1,0 +1,191 @@
+//! The reorder boundary adapter: an engine built on the **permuted**
+//! matrix presented in **original** index space. User-facing vectors
+//! never see the permutation — `x` is permuted in and `y` permuted out
+//! through pooled scratch ([`crate::util::pool::VecPool`]), so `cg` /
+//! `cg_many` / the request-fusing service run unchanged on top.
+//!
+//! Per output row the inner engine computes exactly the permuted
+//! matrix's row chain, and [`Csr::permute_symmetric_stable`] preserved
+//! each row's entry order — so for row-local engine kinds the adapter's
+//! output is bit-identical to the unreordered engine's (proptested in
+//! `rust/tests/reorder.rs`).
+//!
+//! [`Csr::permute_symmetric_stable`]: crate::sparse::csr::Csr::permute_symmetric_stable
+
+use super::Reordering;
+use crate::api::batch::{VecBatch, VecBatchMut};
+use crate::sparse::scalar::Scalar;
+use crate::spmv::SpmvEngine;
+use crate::util::pool::VecPool;
+use std::sync::Arc;
+
+/// [`SpmvEngine`] adapter around an engine prepared on the permuted
+/// matrix: `spmv`/`spmv_batch` accept and produce vectors in original
+/// index space. Built by the facade when
+/// [`crate::api::SpmvContextBuilder::reorder`] resolved to a
+/// non-identity ordering.
+pub struct ReorderedEngine<S: Scalar> {
+    inner: Arc<dyn SpmvEngine<S>>,
+    r: Arc<Reordering>,
+    /// Permuted-vector scratch (x side and y side share the pool).
+    pool: VecPool<S>,
+}
+
+impl<S: Scalar> ReorderedEngine<S> {
+    /// Wrap `inner` (prepared on `r.apply(matrix)`) so callers keep
+    /// original index space. `inner` must be square with `r.len()`
+    /// rows.
+    pub fn new(inner: Arc<dyn SpmvEngine<S>>, r: Arc<Reordering>) -> ReorderedEngine<S> {
+        assert_eq!(inner.nrows(), r.len(), "inner engine does not match the reordering");
+        assert_eq!(inner.ncols(), r.len(), "reordered engines are square");
+        // 2 buffers per in-flight spmv, 2 per batch; 8 tolerates a few
+        // concurrent callers before reuse starts missing.
+        ReorderedEngine { inner, r, pool: VecPool::new(8) }
+    }
+
+    /// The wrapped engine (runs in permuted index space).
+    pub fn inner(&self) -> &Arc<dyn SpmvEngine<S>> {
+        &self.inner
+    }
+
+    /// The ordering this adapter translates through.
+    pub fn reordering(&self) -> &Reordering {
+        &self.r
+    }
+
+    /// Scratch-pool misses (allocations/growth) — flat across repeated
+    /// same-shape calls.
+    pub fn scratch_misses(&self) -> u64 {
+        self.pool.misses()
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for ReorderedEngine<S> {
+    fn name(&self) -> &'static str {
+        "reordered"
+    }
+
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        let n = self.r.len();
+        assert_eq!(x.len(), n);
+        assert_eq!(y.len(), n);
+        let perm = &self.r.perm;
+        let mut xp = self.pool.take(n, S::ZERO);
+        let mut yp = self.pool.take(n, S::ZERO);
+        for (old, &v) in x.iter().enumerate() {
+            xp[perm[old] as usize] = v;
+        }
+        self.inner.spmv(&xp, &mut yp);
+        for (old, out) in y.iter_mut().enumerate() {
+            *out = yp[perm[old] as usize];
+        }
+        self.pool.put(xp);
+        self.pool.put(yp);
+    }
+
+    fn spmv_batch(&self, xs: VecBatch<'_, S>, ys: &mut VecBatchMut<'_, S>) {
+        assert_eq!(xs.width(), ys.width(), "batch inputs/outputs disagree");
+        let n = self.r.len();
+        assert_eq!(xs.n(), n);
+        assert_eq!(ys.n(), n);
+        let width = xs.width();
+        if width == 0 {
+            return;
+        }
+        let perm = &self.r.perm;
+        let mut xp = self.pool.take(n * width, S::ZERO);
+        let mut yp = self.pool.take(n * width, S::ZERO);
+        for b in 0..width {
+            let (src, dst) = (xs.col(b), &mut xp[b * n..(b + 1) * n]);
+            for (old, &v) in src.iter().enumerate() {
+                dst[perm[old] as usize] = v;
+            }
+        }
+        {
+            let xv = VecBatch::new(&xp, n).expect("contiguous reorder scratch");
+            let mut yv = VecBatchMut::new(&mut yp, n).expect("contiguous reorder scratch");
+            self.inner.spmv_batch(xv, &mut yv);
+        }
+        for b in 0..width {
+            let (src, dst) = (&yp[b * n..(b + 1) * n], ys.col_mut(b));
+            for (old, out) in dst.iter_mut().enumerate() {
+                *out = src[perm[old] as usize];
+            }
+        }
+        self.pool.put(xp);
+        self.pool.put(yp);
+    }
+
+    fn nrows(&self) -> usize {
+        self.inner.nrows()
+    }
+    fn ncols(&self) -> usize {
+        self.inner.ncols()
+    }
+    fn nnz(&self) -> usize {
+        self.inner.nnz()
+    }
+    fn format_bytes(&self) -> usize {
+        // The permutation pair rides along with the format.
+        self.inner.format_bytes() + 2 * 4 * self.r.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{build_engine, BatchBuf, EngineKind};
+    use crate::reorder::ReorderSpec;
+    use crate::sparse::gen::unstructured_mesh;
+
+    #[test]
+    fn adapter_is_bitwise_for_a_row_local_engine() {
+        let m = unstructured_mesh::<f64>(20, 20, 0.5, 13);
+        let r = Arc::new(Reordering::compute(&m, ReorderSpec::Rcm).unwrap());
+        let pm = r.apply(&m);
+        let plain = build_engine::<f64>(EngineKind::CsrScalar, &m, None);
+        let wrapped =
+            ReorderedEngine::new(build_engine::<f64>(EngineKind::CsrScalar, &pm, None), r);
+        let n = m.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 13) as f64 * 0.5 - 3.0).collect();
+        let mut y0 = vec![0.0; n];
+        let mut y1 = vec![0.0; n];
+        plain.spmv(&x, &mut y0);
+        wrapped.spmv(&x, &mut y1);
+        assert_eq!(y0, y1, "stable permute + adapter must be bitwise for row-local engines");
+        // Batch path matches repeated single calls bitwise.
+        let mut xs = BatchBuf::<f64>::zeros(n, 3);
+        for b in 0..3 {
+            for i in 0..n {
+                xs.col_mut(b)[i] = ((i * 5 + b * 11 + 1) % 17) as f64 * 0.25 - 2.0;
+            }
+        }
+        let mut ys = BatchBuf::<f64>::zeros(n, 3);
+        {
+            let mut yv = ys.view_mut();
+            wrapped.spmv_batch(xs.view(), &mut yv);
+        }
+        for b in 0..3 {
+            let mut y1 = vec![0.0; n];
+            wrapped.spmv(xs.col(b), &mut y1);
+            assert_eq!(ys.col(b), &y1[..], "lane {b}");
+        }
+    }
+
+    #[test]
+    fn scratch_pool_reaches_steady_state() {
+        let m = unstructured_mesh::<f64>(16, 16, 0.4, 3);
+        let r = Arc::new(Reordering::compute(&m, ReorderSpec::Rcm).unwrap());
+        let pm = r.apply(&m);
+        let e = ReorderedEngine::new(build_engine::<f64>(EngineKind::CsrScalar, &pm, None), r);
+        let n = m.nrows();
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        e.spmv(&x, &mut y);
+        let after_first = e.scratch_misses();
+        for _ in 0..16 {
+            e.spmv(&x, &mut y);
+        }
+        assert_eq!(e.scratch_misses(), after_first, "steady-state spmv must not allocate");
+    }
+}

@@ -1,0 +1,642 @@
+//! Global matrix reordering (ISSUE 5 tentpole): locality-aware
+//! symmetric row/column permutations applied **ahead of** the whole
+//! pipeline, so everything downstream — the cache-aware shard
+//! boundaries, the EHYB partitioner, the autotuner's fingerprint — sees
+//! a matrix whose hot entries already sit near the diagonal.
+//!
+//! Akbudak, Kayaaslan & Aykanat ("Hypergraph-Partitioning-Based Models
+//! and Methods for Exploiting Cache Locality in SpMV") show that a
+//! locality-aware symmetric ordering shrinks the cache footprint of
+//! exactly the SpMV access pattern EHYB explicitly caches; the OSKI
+//! line of work puts reordering *inside* the tuning search rather than
+//! hard-coding it. Both ideas land here:
+//!
+//! * [`ReorderSpec`] — the orderings: `None` (natural), `DegreeSort`
+//!   (descending nnz/row), `Rcm` (reverse Cuthill–McKee over the
+//!   symmetrized structure, component-safe), `PartitionRank` (rows
+//!   ranked by a k-way [`crate::partition`] assignment whose parts are
+//!   themselves Cuthill–McKee-ordered on the quotient graph, so
+//!   strongly-coupled parts get adjacent ranks), and `Auto` (pick by
+//!   scored footprint reduction).
+//! * [`Reordering`] — a computed permutation (`perm[old] = new` + its
+//!   inverse) with quality metrics **before and after**
+//!   ([`ReorderQuality`]): bandwidth (max `|i − j|` over entries),
+//!   profile (summed per-row index span), and the average
+//!   distinct-column footprint per [`FOOTPRINT_WINDOW`]-row window —
+//!   the cache-working-set proxy `Auto` scores.
+//! * [`ReorderedEngine`](engine::ReorderedEngine) — the
+//!   [`crate::spmv::SpmvEngine`] adapter the facade wraps around the
+//!   built engine: user-facing vectors stay in original index space,
+//!   the permutation happens through pooled scratch at the boundary.
+//!
+//! The permuted matrix is produced by
+//! [`Csr::permute_symmetric_stable`], which preserves each row's entry
+//! order — so every row-local engine computes **bit-identical** per-row
+//! FMA chains with reordering on (proptested in
+//! `rust/tests/reorder.rs`); the global-layout engines (`ehyb`,
+//! `merge`) re-derive their layouts and agree to roundoff.
+//!
+//! Callers normally reach this through the facade:
+//! `SpmvContext::builder(m).reorder(ReorderSpec::Rcm).build()?` — see
+//! [`crate::api::SpmvContextBuilder::reorder`].
+
+pub mod engine;
+
+pub use engine::ReorderedEngine;
+
+use crate::partition::{partition_graph, Graph, PartitionConfig};
+use crate::sparse::csr::Csr;
+use crate::sparse::scalar::Scalar;
+use std::collections::{BTreeMap, VecDeque};
+
+/// Which global row/column ordering to apply ahead of the pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReorderSpec {
+    /// Keep the natural order (identity permutation).
+    None,
+    /// Rows by descending nnz (ties by index) — groups heavy rows, a
+    /// cheap baseline for the ELL-family formats.
+    DegreeSort,
+    /// Reverse Cuthill–McKee over the symmetrized structure graph:
+    /// BFS from a pseudo-peripheral start per component, neighbours by
+    /// ascending degree, whole order reversed. The classic
+    /// bandwidth/profile minimizer.
+    Rcm,
+    /// Rank rows by a k-way graph partition ([`crate::partition`]),
+    /// with the parts Cuthill–McKee-ordered on the partition quotient
+    /// graph so strongly-coupled parts receive adjacent ranks.
+    /// `k = 0` picks a size-derived default.
+    PartitionRank { k: usize },
+    /// Compute every candidate ordering and keep the one with the
+    /// lowest windowed-footprint score (ties by profile); falls back to
+    /// the identity when nothing improves on it.
+    Auto,
+}
+
+impl ReorderSpec {
+    /// Stable lowercase tag ("none", "degree", "rcm", "partrank{k}",
+    /// "auto") — used by CLI flags, reports, and (in resolved form) the
+    /// plan-store provenance. Inverse of [`ReorderSpec::from_name`]
+    /// modulo `PartitionRank`'s embedded k.
+    pub fn tag(&self) -> String {
+        match self {
+            ReorderSpec::None => "none".into(),
+            ReorderSpec::DegreeSort => "degree".into(),
+            ReorderSpec::Rcm => "rcm".into(),
+            ReorderSpec::PartitionRank { k } => format!("partrank{k}"),
+            ReorderSpec::Auto => "auto".into(),
+        }
+    }
+
+    /// Parse a CLI/report tag: `none | degree | rcm | auto |
+    /// partrank[:K]` (`partrank` alone = size-derived k).
+    pub fn from_name(name: &str) -> Option<ReorderSpec> {
+        Some(match name {
+            "none" => ReorderSpec::None,
+            "degree" => ReorderSpec::DegreeSort,
+            "rcm" => ReorderSpec::Rcm,
+            "auto" => ReorderSpec::Auto,
+            other => {
+                let rest = other.strip_prefix("partrank")?;
+                let k = match rest.strip_prefix(':').unwrap_or(rest) {
+                    "" => 0,
+                    digits => digits.parse().ok()?,
+                };
+                ReorderSpec::PartitionRank { k }
+            }
+        })
+    }
+}
+
+/// Rows per window of the distinct-column footprint metric: roughly the
+/// scale of one explicitly-cached x-slice, so the metric tracks how
+/// many distinct x entries a cached partition's worth of rows touches.
+pub const FOOTPRINT_WINDOW: usize = 256;
+
+/// Locality metrics of one ordering of one matrix — lower is better on
+/// every axis.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReorderQuality {
+    /// `max |i − j|` over stored entries (in the measured order).
+    pub bandwidth: usize,
+    /// Σ over rows of (max index − min index) touched by the row
+    /// (row's own index included) — the envelope/profile measure.
+    pub profile: u64,
+    /// Average number of distinct columns referenced per
+    /// [`FOOTPRINT_WINDOW`]-row window — the cache-footprint proxy
+    /// [`ReorderSpec::Auto`] minimizes.
+    pub window_footprint: f64,
+}
+
+impl ReorderQuality {
+    /// Metrics of the natural (identity) order.
+    pub fn of<S: Scalar>(m: &Csr<S>) -> ReorderQuality {
+        let identity: Vec<u32> = (0..m.nrows() as u32).collect();
+        quality_under(m, &identity)
+    }
+}
+
+/// Metrics of `m` under `perm` (`perm[old] = new`) without
+/// materializing the permuted matrix.
+fn quality_under<S: Scalar>(m: &Csr<S>, perm: &[u32]) -> ReorderQuality {
+    let n = m.nrows();
+    debug_assert_eq!(perm.len(), n);
+    let mut bandwidth = 0usize;
+    let mut profile = 0u64;
+    for i in 0..n {
+        let (cols, _) = m.row(i);
+        let ni = perm[i] as usize;
+        let (mut lo, mut hi) = (ni, ni);
+        for &c in cols {
+            let nc = perm[c as usize] as usize;
+            lo = lo.min(nc);
+            hi = hi.max(nc);
+            bandwidth = bandwidth.max(ni.abs_diff(nc));
+        }
+        profile += (hi - lo) as u64;
+    }
+    // Distinct columns per window of consecutive *new* rows: walk the
+    // new order via the inverse permutation, stamping each column with
+    // the window id that last touched it.
+    let mut iperm = vec![0u32; n];
+    for (old, &new) in perm.iter().enumerate() {
+        iperm[new as usize] = old as u32;
+    }
+    let mut last_seen = vec![u64::MAX; n];
+    let mut windows = 0u64;
+    let mut distinct_total = 0u64;
+    for w0 in (0..n).step_by(FOOTPRINT_WINDOW) {
+        let wid = windows;
+        windows += 1;
+        for r in w0..(w0 + FOOTPRINT_WINDOW).min(n) {
+            let (cols, _) = m.row(iperm[r] as usize);
+            for &c in cols {
+                let nc = perm[c as usize] as usize;
+                if last_seen[nc] != wid {
+                    last_seen[nc] = wid;
+                    distinct_total += 1;
+                }
+            }
+        }
+    }
+    ReorderQuality {
+        bandwidth,
+        profile,
+        window_footprint: distinct_total as f64 / windows.max(1) as f64,
+    }
+}
+
+/// A computed global ordering: the permutation pair plus before/after
+/// quality metrics. Produced by [`Reordering::compute`], applied with
+/// [`Reordering::apply`] (order-preserving symmetric permute), and
+/// carried by the facade for reporting
+/// ([`crate::api::SpmvContext::reordering`]).
+#[derive(Clone, Debug)]
+pub struct Reordering {
+    /// The spec this reordering was requested as (may be `Auto`).
+    pub spec: ReorderSpec,
+    /// The concrete ordering that was chosen, as a stable tag
+    /// ("none", "degree", "rcm", "partrank8"). For `Auto` this is the
+    /// footprint-score winner; recorded in persisted tuned plans so
+    /// cache entries key on what actually ran. **Normalized to
+    /// "none" whenever the computed permutation is the identity** —
+    /// the executed structure (and its fingerprint) is the natural
+    /// one, so the provenance tag must say so, or identity-resolving
+    /// reordered builds and plain builds would share one plan-store
+    /// file while rejecting each other's entries.
+    pub resolved: String,
+    /// `perm[old] = new` — a bijection over the rows.
+    pub perm: Vec<u32>,
+    /// `iperm[new] = old`.
+    pub iperm: Vec<u32>,
+    /// Metrics of the natural order.
+    pub before: ReorderQuality,
+    /// Metrics under [`Self::perm`].
+    pub after: ReorderQuality,
+}
+
+impl Reordering {
+    /// Compute the ordering `spec` requests for the square matrix `m`.
+    /// `Auto` scores every candidate by windowed footprint (ties by
+    /// profile) and keeps the winner — the identity included, so it
+    /// never adopts an ordering that measures worse than natural.
+    pub fn compute<S: Scalar>(m: &Csr<S>, spec: ReorderSpec) -> crate::Result<Reordering> {
+        crate::ensure!(
+            m.nrows() == m.ncols() && m.nrows() > 0,
+            "reordering requires a non-empty square matrix, got {}x{}",
+            m.nrows(),
+            m.ncols()
+        );
+        // One natural-order metrics pass, shared by every candidate an
+        // `Auto` search scores (it is a full O(nnz + n) walk).
+        let before = ReorderQuality::of(m);
+        Self::compute_inner(m, spec, before)
+    }
+
+    fn compute_inner<S: Scalar>(
+        m: &Csr<S>,
+        spec: ReorderSpec,
+        before: ReorderQuality,
+    ) -> crate::Result<Reordering> {
+        let n = m.nrows();
+        if spec == ReorderSpec::Auto {
+            let mut best = Self::compute_inner(m, ReorderSpec::None, before)?;
+            for cand in
+                [ReorderSpec::DegreeSort, ReorderSpec::Rcm, ReorderSpec::PartitionRank { k: 0 }]
+            {
+                let r = Self::compute_inner(m, cand, before)?;
+                let better = r.after.window_footprint < best.after.window_footprint
+                    || (r.after.window_footprint == best.after.window_footprint
+                        && r.after.profile < best.after.profile);
+                if better {
+                    best = r;
+                }
+            }
+            return Ok(Reordering { spec, ..best });
+        }
+        let (order, resolved): (Vec<u32>, String) = match spec {
+            ReorderSpec::None => ((0..n as u32).collect(), spec.tag()),
+            ReorderSpec::DegreeSort => {
+                let mut rows: Vec<u32> = (0..n as u32).collect();
+                rows.sort_by_key(|&r| (std::cmp::Reverse(m.row_nnz(r as usize)), r));
+                (rows, spec.tag())
+            }
+            ReorderSpec::Rcm => (rcm_order(&Graph::from_matrix_structure(m)), spec.tag()),
+            ReorderSpec::PartitionRank { k } => {
+                let (order, k) = partition_rank_order(m, k);
+                (order, format!("partrank{k}"))
+            }
+            ReorderSpec::Auto => unreachable!("handled above"),
+        };
+        debug_assert_eq!(order.len(), n);
+        let mut perm = vec![0u32; n];
+        for (new, &old) in order.iter().enumerate() {
+            perm[old as usize] = new as u32;
+        }
+        let identity = perm.iter().enumerate().all(|(old, &new)| old == new as usize);
+        // See the `resolved` field doc: an identity outcome IS the
+        // natural order, whatever spec produced it.
+        let resolved = if identity { ReorderSpec::None.tag() } else { resolved };
+        let after = if identity { before } else { quality_under(m, &perm) };
+        Ok(Reordering { spec, resolved, perm, iperm: order, before, after })
+    }
+
+    /// Whether this is the identity permutation (nothing to apply).
+    pub fn is_identity(&self) -> bool {
+        self.perm.iter().enumerate().all(|(old, &new)| old == new as usize)
+    }
+
+    /// The permuted matrix `P A Pᵀ`, with each row's entry order
+    /// preserved ([`Csr::permute_symmetric_stable`]) so row-local
+    /// engines stay bit-identical.
+    pub fn apply<S: Scalar>(&self, m: &Csr<S>) -> Csr<S> {
+        m.permute_symmetric_stable(&self.perm)
+    }
+
+    /// Rows this reordering covers.
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+}
+
+/// Cuthill–McKee order (new → old) with the reverse applied, over the
+/// symmetrized structure graph. Component-safe: each connected
+/// component (isolated vertices included) is swept from its own
+/// pseudo-peripheral start; component starts are scanned from one
+/// degree-sorted list so n isolated vertices cost O(n log n), not
+/// O(n²).
+fn rcm_order(g: &Graph) -> Vec<u32> {
+    let n = g.nvtx();
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut visited = vec![false; n];
+    let mut seen = vec![0u64; n];
+    let mut epoch = 0u64;
+    let mut by_degree: Vec<u32> = (0..n as u32).collect();
+    by_degree.sort_by_key(|&v| (g.degree(v as usize), v));
+    let mut cursor = 0usize;
+    let mut q: VecDeque<usize> = VecDeque::new();
+    let mut nbrs: Vec<usize> = Vec::new();
+    while order.len() < n {
+        while visited[by_degree[cursor] as usize] {
+            cursor += 1;
+        }
+        // Pseudo-peripheral start: two farthest-vertex sweeps from the
+        // component's min-degree vertex (George–Liu style).
+        let mut start = by_degree[cursor] as usize;
+        for _ in 0..2 {
+            epoch += 1;
+            start = farthest_min_degree(g, start, &visited, &mut seen, epoch);
+        }
+        visited[start] = true;
+        q.push_back(start);
+        while let Some(v) = q.pop_front() {
+            order.push(v as u32);
+            nbrs.clear();
+            nbrs.extend(g.neighbors(v).map(|(u, _)| u).filter(|&u| !visited[u]));
+            nbrs.sort_by_key(|&u| (g.degree(u), u));
+            for &u in &nbrs {
+                visited[u] = true;
+                q.push_back(u);
+            }
+        }
+    }
+    order.reverse(); // the R in RCM
+    order
+}
+
+/// Min-degree vertex of the farthest BFS level from `start`, restricted
+/// to unvisited vertices (the current component). `seen`/`epoch` are a
+/// stamp array so repeated sweeps share one allocation.
+fn farthest_min_degree(
+    g: &Graph,
+    start: usize,
+    visited: &[bool],
+    seen: &mut [u64],
+    epoch: u64,
+) -> usize {
+    seen[start] = epoch;
+    let mut level = vec![start];
+    let mut best = start;
+    while !level.is_empty() {
+        best = *level.iter().min_by_key(|&&v| (g.degree(v), v)).expect("non-empty level");
+        let mut next = Vec::new();
+        for &v in &level {
+            for (u, _) in g.neighbors(v) {
+                if !visited[u] && seen[u] != epoch {
+                    seen[u] = epoch;
+                    next.push(u);
+                }
+            }
+        }
+        level = next;
+    }
+    best
+}
+
+/// Partition-rank order (new → old): rows grouped by a k-way partition
+/// of the structure graph, parts ranked by Cuthill–McKee on the
+/// quotient graph (so parts that exchange many entries sit at adjacent
+/// ranks and their cross entries stay near the diagonal), rows stable
+/// by original index within each part. Returns the order and the
+/// resolved k.
+fn partition_rank_order<S: Scalar>(m: &Csr<S>, k: usize) -> (Vec<u32>, usize) {
+    let n = m.nrows();
+    let k = if k == 0 { (n / 256).clamp(2, 1024).min(n.max(1)) } else { k.clamp(1, n.max(1)) };
+    if k <= 1 {
+        return ((0..n as u32).collect(), 1);
+    }
+    let g = Graph::from_matrix_structure(m);
+    // Loose capacity: reordering wants locality, not tight balance.
+    let cap = (n.div_ceil(k) + n.div_ceil(4 * k) + 1) as u64;
+    let part = partition_graph(&g, k, cap, &PartitionConfig::default());
+    // Quotient adjacency (BTreeMap for deterministic iteration).
+    let mut adj: Vec<BTreeMap<u32, u64>> = vec![BTreeMap::new(); k];
+    for i in 0..n {
+        let (cols, _) = m.row(i);
+        let a = part.assignment[i];
+        for &c in cols {
+            let b = part.assignment[c as usize];
+            if a != b {
+                *adj[a as usize].entry(b).or_insert(0) += 1;
+                *adj[b as usize].entry(a).or_insert(0) += 1;
+            }
+        }
+    }
+    let rank = quotient_cm(&adj);
+    let mut rows: Vec<u32> = (0..n as u32).collect();
+    rows.sort_by_key(|&r| (rank[part.assignment[r as usize] as usize], r));
+    (rows, k)
+}
+
+/// Weighted Cuthill–McKee over the quotient graph: part → rank. FIFO
+/// BFS per component from the min-degree part; a part's unvisited
+/// neighbours are enqueued by **descending coupling weight** (cross
+/// entries shared with it, ties by ascending degree then id), so the
+/// parts that exchange the most entries receive the closest ranks —
+/// the property the row ordering then inherits.
+fn quotient_cm(adj: &[BTreeMap<u32, u64>]) -> Vec<u32> {
+    let k = adj.len();
+    let mut rank = vec![u32::MAX; k];
+    let mut next = 0u32;
+    let mut by_deg: Vec<u32> = (0..k as u32).collect();
+    by_deg.sort_by_key(|&p| (adj[p as usize].len(), p));
+    let mut cursor = 0usize;
+    let mut q: VecDeque<usize> = VecDeque::new();
+    while (next as usize) < k {
+        while rank[by_deg[cursor] as usize] != u32::MAX {
+            cursor += 1;
+        }
+        let s = by_deg[cursor] as usize;
+        rank[s] = next;
+        next += 1;
+        q.push_back(s);
+        while let Some(p) = q.pop_front() {
+            let mut nb: Vec<(u64, u32)> = adj[p]
+                .iter()
+                .filter(|&(&b, _)| rank[b as usize] == u32::MAX)
+                .map(|(&b, &w)| (w, b))
+                .collect();
+            nb.sort_by_key(|&(w, b)| (std::cmp::Reverse(w), adj[b as usize].len(), b));
+            for (_, b) in nb {
+                rank[b as usize] = next;
+                next += 1;
+                q.push_back(b as usize);
+            }
+        }
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::gen::{banded, poisson2d, unstructured_mesh};
+    use crate::util::Xoshiro256;
+
+    /// A banded matrix hidden behind a random symmetric relabeling —
+    /// the "locality exists but the natural order lost it" case every
+    /// locality-aware ordering must recover.
+    fn scrambled_banded(n: usize, bw: usize, seed: u64) -> Csr<f64> {
+        let m = banded::<f64>(n, bw, 0.7, seed);
+        let mut shuffle: Vec<u32> = (0..n as u32).collect();
+        Xoshiro256::new(seed ^ 0xD1CE).shuffle(&mut shuffle);
+        m.permute_symmetric_stable(&shuffle)
+    }
+
+    fn assert_bijection(perm: &[u32]) {
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            assert!((p as usize) < perm.len(), "perm target {p} out of range");
+            assert!(!seen[p as usize], "perm target {p} duplicated");
+            seen[p as usize] = true;
+        }
+    }
+
+    #[test]
+    fn every_spec_yields_a_bijection() {
+        let m = unstructured_mesh::<f64>(20, 20, 0.5, 7);
+        for spec in [
+            ReorderSpec::None,
+            ReorderSpec::DegreeSort,
+            ReorderSpec::Rcm,
+            ReorderSpec::PartitionRank { k: 0 },
+            ReorderSpec::PartitionRank { k: 7 },
+            ReorderSpec::Auto,
+        ] {
+            let r = Reordering::compute(&m, spec).unwrap();
+            assert_bijection(&r.perm);
+            for (new, &old) in r.iperm.iter().enumerate() {
+                assert_eq!(r.perm[old as usize] as usize, new, "{spec:?}: iperm mismatch");
+            }
+            assert_eq!(r.spec, spec);
+        }
+    }
+
+    #[test]
+    fn rcm_recovers_band_from_scrambled_matrix() {
+        let m = scrambled_banded(1200, 6, 3);
+        let r = Reordering::compute(&m, ReorderSpec::Rcm).unwrap();
+        assert!(
+            r.after.bandwidth * 4 < r.before.bandwidth,
+            "rcm bandwidth {} vs natural {}",
+            r.after.bandwidth,
+            r.before.bandwidth
+        );
+        assert!(r.after.profile < r.before.profile);
+        assert!(r.after.window_footprint < r.before.window_footprint);
+    }
+
+    #[test]
+    fn partition_rank_improves_locality_on_hidden_mesh() {
+        // The unstructured generator hides spatial locality behind
+        // random labels; partition-rank must pull it back together.
+        let m = unstructured_mesh::<f64>(40, 40, 0.3, 11);
+        let r = Reordering::compute(&m, ReorderSpec::PartitionRank { k: 0 }).unwrap();
+        assert!(r.resolved.starts_with("partrank"));
+        assert!(
+            r.after.bandwidth < r.before.bandwidth,
+            "partrank bandwidth {} vs natural {}",
+            r.after.bandwidth,
+            r.before.bandwidth
+        );
+        assert!(r.after.window_footprint < r.before.window_footprint);
+    }
+
+    #[test]
+    fn rcm_handles_disconnected_graphs_and_isolated_rows() {
+        // Two blocks plus isolated diagonal-only rows: still a
+        // bijection, every component swept.
+        let mut coo = Coo::<f64>::new(20, 20);
+        for i in 0..20 {
+            coo.push(i, i, 2.0);
+        }
+        for i in 0..5usize {
+            // chain 0-1-2-3-4
+            if i + 1 < 5 {
+                coo.push(i, i + 1, -1.0);
+                coo.push(i + 1, i, -1.0);
+            }
+        }
+        for i in 8..12usize {
+            // chain 8..12
+            if i + 1 < 12 {
+                coo.push(i, i + 1, -1.0);
+                coo.push(i + 1, i, -1.0);
+            }
+        }
+        let m = coo.to_csr();
+        let r = Reordering::compute(&m, ReorderSpec::Rcm).unwrap();
+        assert_bijection(&r.perm);
+        assert_eq!(r.len(), 20);
+    }
+
+    #[test]
+    fn auto_never_scores_worse_than_natural() {
+        for m in [poisson2d::<f64>(24, 24), scrambled_banded(800, 5, 9)] {
+            let r = Reordering::compute(&m, ReorderSpec::Auto).unwrap();
+            assert!(r.after.window_footprint <= r.before.window_footprint);
+            assert_eq!(r.spec, ReorderSpec::Auto);
+            assert_ne!(r.resolved, "auto", "Auto must record the resolved ordering");
+        }
+        // On a scrambled banded matrix something locality-aware must win.
+        let r = Reordering::compute(&scrambled_banded(800, 5, 9), ReorderSpec::Auto).unwrap();
+        assert!(r.resolved == "rcm" || r.resolved.starts_with("partrank"), "{}", r.resolved);
+    }
+
+    #[test]
+    fn identity_outcomes_normalize_their_resolved_tag_to_none() {
+        // Rows already in descending-nnz order: DegreeSort computes the
+        // identity. The resolved tag must say "none" — the executed
+        // structure (and its tuning fingerprint) IS the natural one, so
+        // a reordered and a plain build of this matrix must share plan
+        // provenance instead of clobbering one store file forever.
+        let mut coo = Coo::<f64>::new(4, 4);
+        for i in 0..4usize {
+            for j in 0..(4 - i) {
+                coo.push(i, j, 1.0 + i as f64);
+            }
+        }
+        let m = coo.to_csr();
+        assert!((0..3).all(|i| m.row_nnz(i) >= m.row_nnz(i + 1)), "rows must start sorted");
+        let r = Reordering::compute(&m, ReorderSpec::DegreeSort).unwrap();
+        assert!(r.is_identity());
+        assert_eq!(r.resolved, "none");
+        assert_eq!(r.spec, ReorderSpec::DegreeSort);
+        assert_eq!(r.before, r.after);
+    }
+
+    #[test]
+    fn none_is_identity_with_equal_metrics() {
+        let m = poisson2d::<f64>(10, 10);
+        let r = Reordering::compute(&m, ReorderSpec::None).unwrap();
+        assert!(r.is_identity());
+        assert_eq!(r.before, r.after);
+        assert_eq!(r.before, ReorderQuality::of(&m));
+    }
+
+    #[test]
+    fn quality_matches_materialized_permutation() {
+        // quality_under(m, perm) must equal ReorderQuality::of(P A Pt).
+        let m = unstructured_mesh::<f64>(16, 16, 0.5, 5);
+        let r = Reordering::compute(&m, ReorderSpec::Rcm).unwrap();
+        let pm = r.apply(&m);
+        let direct = ReorderQuality::of(&pm);
+        assert_eq!(r.after.bandwidth, direct.bandwidth);
+        assert_eq!(r.after.profile, direct.profile);
+        assert!((r.after.window_footprint - direct.window_footprint).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spec_tags_roundtrip() {
+        for (spec, tag) in [
+            (ReorderSpec::None, "none"),
+            (ReorderSpec::DegreeSort, "degree"),
+            (ReorderSpec::Rcm, "rcm"),
+            (ReorderSpec::Auto, "auto"),
+            (ReorderSpec::PartitionRank { k: 8 }, "partrank8"),
+        ] {
+            assert_eq!(spec.tag(), tag);
+            assert_eq!(ReorderSpec::from_name(tag), Some(spec));
+        }
+        assert_eq!(
+            ReorderSpec::from_name("partrank:16"),
+            Some(ReorderSpec::PartitionRank { k: 16 })
+        );
+        assert_eq!(
+            ReorderSpec::from_name("partrank"),
+            Some(ReorderSpec::PartitionRank { k: 0 })
+        );
+        assert_eq!(ReorderSpec::from_name("zorder"), None);
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let m = Coo::<f64>::new(3, 4).to_csr();
+        assert!(Reordering::compute(&m, ReorderSpec::Rcm).is_err());
+    }
+}

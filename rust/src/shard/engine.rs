@@ -21,11 +21,12 @@
 use super::ShardPlan;
 use crate::api::batch::{VecBatch, VecBatchMut};
 use crate::api::EngineKind;
-use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::preprocess::{EhybPlan, PreprocessConfig, PreprocessTimings};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
 use crate::spmv::SpmvEngine;
 use crate::util::par;
+use crate::util::pool::VecPool;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -38,6 +39,12 @@ pub struct ShardStat {
     pub rows: usize,
     /// Nonzeros this shard owns (block + halo for EHYB shards).
     pub nnz: usize,
+    /// Preprocessing timings of this shard's EHYB diagonal-block
+    /// pipeline (`None` for baseline kinds and pure-halo shards) — the
+    /// per-shard provenance that proves a `.shards(Count(k≥2))` EHYB
+    /// build ran exactly k block pipelines and no redundant
+    /// whole-matrix one (ISSUE 5 satellite).
+    pub block_prep: Option<PreprocessTimings>,
     /// Single-vector kernel executions.
     pub spmv_calls: AtomicU64,
     /// Batched kernel executions (fused calls, not lanes).
@@ -64,6 +71,12 @@ pub struct ShardedEngine<S: Scalar> {
     nrows: usize,
     ncols: usize,
     nnz: usize,
+    /// Batch output staging, pooled **per shard** (shard sizes differ,
+    /// so one shared LIFO pool would hand size-mismatched buffers back
+    /// and regrow forever) — steady-state `spmv_batch` calls allocate
+    /// nothing (ISSUE 5 satellite; the EhybCpu pop/push discipline
+    /// applied to the fan-out).
+    scratch: Vec<VecPool<S>>,
 }
 
 impl<S: Scalar> ShardedEngine<S> {
@@ -89,25 +102,38 @@ impl<S: Scalar> ShardedEngine<S> {
         let mut shards = Vec::with_capacity(plan.num_shards());
         let mut stats = Vec::with_capacity(plan.num_shards());
         for rg in plan.ranges() {
+            let mut block_prep = None;
             let engine: Arc<dyn SpmvEngine<S>> = if kind == EngineKind::Ehyb {
                 let (shard_cfg, prebuilt) = match ov_iter.as_mut().and_then(Iterator::next) {
                     Some((c, p)) => (c, p),
                     None => (cfg.clone(), None),
                 };
-                Arc::new(EhybShard::build(m, rg.clone(), &shard_cfg, prebuilt)?)
+                let shard = EhybShard::build(m, rg.clone(), &shard_cfg, prebuilt)?;
+                block_prep = shard.block_plan().map(|p| p.timings);
+                Arc::new(shard)
             } else {
                 crate::api::build_engine(kind, &m.row_slice(rg.start, rg.end), None)
             };
             stats.push(ShardStat {
                 rows: rg.len(),
                 nnz: engine.nnz(),
+                block_prep,
                 spmv_calls: AtomicU64::new(0),
                 batch_calls: AtomicU64::new(0),
                 lanes: AtomicU64::new(0),
             });
             shards.push(Shard { range: rg.clone(), engine });
         }
-        Ok(ShardedEngine { shards, stats, nrows: m.nrows(), ncols: m.ncols(), nnz: m.nnz() })
+        Ok(ShardedEngine {
+            shards,
+            stats,
+            nrows: m.nrows(),
+            ncols: m.ncols(),
+            nnz: m.nnz(),
+            // Two retained buffers per shard tolerate a pair of
+            // concurrent batch callers before reuse starts missing.
+            scratch: (0..plan.num_shards()).map(|_| VecPool::new(2)).collect(),
+        })
     }
 
     pub fn num_shards(&self) -> usize {
@@ -122,6 +148,14 @@ impl<S: Scalar> ShardedEngine<S> {
     /// Per-shard execution counters, in shard order.
     pub fn stats(&self) -> &[ShardStat] {
         &self.stats
+    }
+
+    /// Batch-scratch pool misses (allocations or growth). Flat across
+    /// repeated same-width `spmv_batch` calls — the zero
+    /// steady-state-allocation invariant pinned by
+    /// `rust/tests/reorder.rs`.
+    pub fn scratch_misses(&self) -> u64 {
+        self.scratch.iter().map(VecPool::misses).sum()
     }
 
     /// Split `y` into the per-shard disjoint row slices (shard order).
@@ -163,9 +197,15 @@ impl<S: Scalar> SpmvEngine<S> for ShardedEngine<S> {
         // Each shard's output rows interleave across the batch columns,
         // so the fused per-shard kernels run into per-shard contiguous
         // scratch (one fused batch per shard) and the disjoint row
-        // segments are copied out afterwards.
-        let mut scratch: Vec<Vec<S>> =
-            self.shards.iter().map(|s| vec![S::ZERO; s.range.len() * width]).collect();
+        // segments are copied out afterwards. The buffers are pooled
+        // (pop/push, like EhybCpu's scratch): every engine fully
+        // overwrites its staging rows, so stale contents are fine.
+        let mut scratch: Vec<Vec<S>> = self
+            .shards
+            .iter()
+            .zip(&self.scratch)
+            .map(|(s, pool)| pool.take(s.range.len() * width, S::ZERO))
+            .collect();
         {
             let items: Vec<(usize, &mut Vec<S>)> = scratch.iter_mut().enumerate().collect();
             par::par_for_each(items, |_, (i, buf)| {
@@ -181,6 +221,9 @@ impl<S: Scalar> SpmvEngine<S> for ShardedEngine<S> {
             for b in 0..width {
                 ys.col_mut(b)[shard.range.clone()].copy_from_slice(&buf[b * rows..(b + 1) * rows]);
             }
+        }
+        for (pool, buf) in self.scratch.iter().zip(scratch) {
+            pool.put(buf);
         }
     }
 
@@ -214,6 +257,9 @@ pub struct EhybShard<S: Scalar> {
     range: Range<usize>,
     ncols: usize,
     nnz: usize,
+    /// Pooled staging for the batch path's contiguous x-slices
+    /// (pop/push; steady-state batch calls allocate nothing).
+    xpool: VecPool<S>,
 }
 
 impl<S: Scalar> EhybShard<S> {
@@ -238,7 +284,21 @@ impl<S: Scalar> EhybShard<S> {
         } else {
             (None, None)
         };
-        Ok(EhybShard { block, block_plan, halo, range, ncols: m.ncols(), nnz })
+        Ok(EhybShard {
+            block,
+            block_plan,
+            halo,
+            range,
+            ncols: m.ncols(),
+            nnz,
+            xpool: VecPool::new(2),
+        })
+    }
+
+    /// x-staging pool misses (allocations or growth) — flat across
+    /// repeated same-width batch calls.
+    pub fn scratch_misses(&self) -> u64 {
+        self.xpool.misses()
     }
 
     /// The diagonal block's preprocessing output, when the block is
@@ -284,13 +344,18 @@ impl<S: Scalar> SpmvEngine<S> for EhybShard<S> {
                 // Stage the shard's x-slices contiguously so the block
                 // engine's fused SpMM path (EhybCpu streams its format
                 // once per register block) applies across the batch.
-                let mut xbuf = vec![S::ZERO; rows * width];
+                // Pooled + fully overwritten below, so stale contents
+                // are fine.
+                let mut xbuf = self.xpool.take(rows * width, S::ZERO);
                 for b in 0..width {
                     xbuf[b * rows..(b + 1) * rows]
                         .copy_from_slice(&xs.col(b)[self.range.clone()]);
                 }
-                let xv = VecBatch::new(&xbuf, rows).expect("contiguous shard batch");
-                engine.spmv_batch(xv, ys);
+                {
+                    let xv = VecBatch::new(&xbuf, rows).expect("contiguous shard batch");
+                    engine.spmv_batch(xv, ys);
+                }
+                self.xpool.put(xbuf);
             }
             None => {
                 for b in 0..width {
@@ -416,6 +481,77 @@ mod tests {
         let mut y = [7.0, 7.0]; // stale values must be overwritten
         shard.spmv(&x, &mut y);
         assert_eq!(y, [100.0 + 2000.0, 3000.0]);
+    }
+
+    #[test]
+    fn batch_scratch_pools_reach_steady_state() {
+        // ISSUE 5 satellite: after the first fused batch, repeated
+        // batch calls must not allocate — neither the sharded fan-out's
+        // staging buffers nor the EHYB shards' x-slice staging.
+        let m = poisson2d::<f64>(16, 16);
+        for kind in [EngineKind::Ehyb, EngineKind::CsrScalar] {
+            let e = sharded(&m, kind, 3);
+            let width = 4;
+            let mut xs = crate::api::BatchBuf::<f64>::zeros(m.ncols(), width);
+            for b in 0..width {
+                for i in 0..m.ncols() {
+                    xs.col_mut(b)[i] = ((i * 3 + b * 5 + 1) % 13) as f64 * 0.5 - 3.0;
+                }
+            }
+            let mut ys = crate::api::BatchBuf::<f64>::zeros(m.nrows(), width);
+            {
+                let mut yv = ys.view_mut();
+                e.spmv_batch(xs.view(), &mut yv);
+            }
+            let after_first = e.scratch_misses();
+            assert!(after_first > 0, "{kind:?}: first call must populate the pools");
+            for _ in 0..8 {
+                let mut yv = ys.view_mut();
+                e.spmv_batch(xs.view(), &mut yv);
+            }
+            assert_eq!(
+                e.scratch_misses(),
+                after_first,
+                "{kind:?}: steady-state batch calls must not allocate"
+            );
+        }
+    }
+
+    #[test]
+    fn ehyb_shard_x_staging_is_pooled() {
+        let m = poisson2d::<f64>(12, 12);
+        let shard = EhybShard::build(&m, 24..96, &cfg(), None).unwrap();
+        let width = 3;
+        let mut xs = crate::api::BatchBuf::<f64>::zeros(m.ncols(), width);
+        for b in 0..width {
+            for i in 0..m.ncols() {
+                xs.col_mut(b)[i] = ((i + b * 7) % 11) as f64 * 0.25 - 1.0;
+            }
+        }
+        let mut ys = crate::api::BatchBuf::<f64>::zeros(shard.nrows(), width);
+        {
+            let mut yv = ys.view_mut();
+            shard.spmv_batch(xs.view(), &mut yv);
+        }
+        let after_first = shard.scratch_misses();
+        for _ in 0..8 {
+            let mut yv = ys.view_mut();
+            shard.spmv_batch(xs.view(), &mut yv);
+        }
+        assert_eq!(shard.scratch_misses(), after_first);
+    }
+
+    #[test]
+    fn ehyb_shards_record_block_preprocessing_timings() {
+        let m = unstructured_mesh::<f64>(24, 24, 0.4, 7);
+        let e = sharded(&m, EngineKind::Ehyb, 4);
+        // Every shard with a non-empty diagonal block carries its own
+        // pipeline timings; baseline shards never do.
+        let with_prep = e.stats().iter().filter(|s| s.block_prep.is_some()).count();
+        assert_eq!(with_prep, 4, "each EHYB shard runs its own block pipeline");
+        assert!(e.stats().iter().all(|s| s.block_prep.map_or(true, |t| t.reorder_secs > 0.0)));
+        let base = sharded(&m, EngineKind::Hyb, 4);
+        assert!(base.stats().iter().all(|s| s.block_prep.is_none()));
     }
 
     #[test]

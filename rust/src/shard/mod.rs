@@ -15,9 +15,11 @@
 //!   cache-aware refinement that nudges each boundary to the nearby row
 //!   minimizing boundary-crossing entries (the same edge-cut objective
 //!   [`crate::partition`] optimizes, restricted to contiguous splits —
-//!   pair it with a locality-improving row ordering such as
-//!   [`crate::sparse::csr::Csr::permute_symmetric`] over a partition-
-//!   derived ordering for the full effect).
+//!   pair it with a locality-improving global ordering via
+//!   [`crate::api::SpmvContextBuilder::reorder`] ([`crate::reorder`])
+//!   so the contiguous boundaries have real locality to find; the
+//!   facade reports the cut before/after through
+//!   [`crate::api::SpmvContext::reorder_cut_nnz`]).
 //! * [`engine::ShardedEngine`] — the [`crate::spmv::SpmvEngine`]
 //!   implementation that owns the per-shard engines (each built through
 //!   [`crate::api`]'s single engine-construction path) and the

@@ -197,6 +197,43 @@ impl<S: Scalar> Csr<S> {
         coo.to_csr()
     }
 
+    /// Symmetric permutation `B = P A Pᵀ` (`perm[old] = new`, a
+    /// bijection) that preserves the **within-row entry order** of `A`:
+    /// row `perm[i]` of `B` holds row `i`'s entries in their original
+    /// relative order with columns mapped through `perm` — so `B`'s
+    /// columns are generally *unsorted* within a row. Every row-local
+    /// SpMV engine accumulates a row in stored-entry order, so an
+    /// engine built on `B` runs bit-identical per-row FMA chains to one
+    /// built on `A` (with `x`/`y` permuted accordingly) — the contract
+    /// the [`crate::reorder`] round-trip tests pin.
+    /// [`Csr::permute_symmetric`] (COO round-trip) re-sorts columns and
+    /// stays for callers that need canonical order.
+    pub fn permute_symmetric_stable(&self, perm: &[u32]) -> Csr<S> {
+        assert_eq!(perm.len(), self.nrows);
+        assert_eq!(self.nrows, self.ncols, "symmetric permutation requires square");
+        let n = self.nrows;
+        let mut iperm = vec![u32::MAX; n];
+        for (old, &new) in perm.iter().enumerate() {
+            debug_assert!(
+                iperm[new as usize] == u32::MAX,
+                "perm is not a bijection: new index {new} assigned twice"
+            );
+            iperm[new as usize] = old as u32;
+        }
+        let mut row_ptr = vec![0u32; n + 1];
+        for new in 0..n {
+            row_ptr[new + 1] = row_ptr[new] + self.row_nnz(iperm[new] as usize) as u32;
+        }
+        let mut col_idx = Vec::with_capacity(self.nnz());
+        let mut vals = Vec::with_capacity(self.nnz());
+        for &old in &iperm {
+            let (cols, vs) = self.row(old as usize);
+            col_idx.extend(cols.iter().map(|&c| perm[c as usize]));
+            vals.extend_from_slice(vs);
+        }
+        Csr { nrows: n, ncols: n, row_ptr, col_idx, vals }
+    }
+
     /// Extract rows `lo..hi` as a standalone (generally rectangular)
     /// CSR over the **same column space**: row `i` of the slice is row
     /// `lo + i` of `self`, entries in identical order. The building
@@ -383,6 +420,37 @@ mod tests {
         for i in 0..3 {
             assert!((yp[perm[i] as usize] - y[i]).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn permute_symmetric_stable_preserves_row_entry_order() {
+        let m = sample();
+        let perm = [2u32, 0, 1]; // old->new
+        let p = m.permute_symmetric_stable(&perm);
+        // Old row 2 ([4 at col 0, 5 at col 2]) lands at new row 1 with
+        // its entries in the ORIGINAL order, columns mapped: col 0 -> 2,
+        // col 2 -> 1 (unsorted — that is the point).
+        let (cols, vals) = p.row(1);
+        assert_eq!(cols, &[2, 1]);
+        assert_eq!(vals, &[4.0, 5.0]);
+        // Same linear operator as the sorted permute.
+        let x = [1.0, 2.0, 3.0];
+        let mut xp = [0.0; 3];
+        for i in 0..3 {
+            xp[perm[i] as usize] = x[i];
+        }
+        let mut y = [0.0; 3];
+        m.spmv(&x, &mut y);
+        let mut yp = [0.0; 3];
+        p.spmv(&xp, &mut yp);
+        for i in 0..3 {
+            assert_eq!(yp[perm[i] as usize], y[i], "stable permute must be exact");
+        }
+        // Identity permutation reproduces the matrix verbatim.
+        let id = m.permute_symmetric_stable(&[0, 1, 2]);
+        assert_eq!(id.row_ptr, m.row_ptr);
+        assert_eq!(id.col_idx, m.col_idx);
+        assert_eq!(id.vals, m.vals);
     }
 
     #[test]

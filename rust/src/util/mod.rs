@@ -7,6 +7,7 @@ pub mod timer;
 pub mod stats;
 pub mod par;
 pub mod check;
+pub mod pool;
 
 pub use prng::Xoshiro256;
 pub use timer::Timer;

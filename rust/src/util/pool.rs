@@ -1,0 +1,112 @@
+//! Pop/push buffer pool for hot-path scratch vectors — the allocation
+//! discipline `spmv::ehyb_cpu` established (allocation in the hot loop
+//! costs ~10 % on paper-scale matrices), factored out so the sharded
+//! fan-out and the reorder adapter reuse it instead of allocating per
+//! call.
+//!
+//! Contract: [`VecPool::take`] hands back a buffer of exactly the
+//! requested length with **unspecified contents** (a reused buffer of
+//! the same length is returned as-is); callers must fully overwrite
+//! before reading. [`VecPool::put`] returns a buffer for reuse, keeping
+//! at most `bound` buffers alive so bursty concurrency cannot pin
+//! unbounded memory.
+//!
+//! [`VecPool::misses`] counts every `take` that had to allocate or grow
+//! a buffer — the observable the zero-steady-state-allocation tests
+//! pin: after warm-up, repeated calls with non-growing sizes must not
+//! move the counter.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A bounded pop/push pool of `Vec<T>` scratch buffers.
+pub struct VecPool<T> {
+    free: Mutex<Vec<Vec<T>>>,
+    /// Maximum buffers retained by [`Self::put`].
+    bound: usize,
+    /// `take` calls that allocated or grew (capacity miss).
+    misses: AtomicU64,
+}
+
+impl<T: Copy> VecPool<T> {
+    /// An empty pool retaining at most `bound` buffers.
+    pub fn new(bound: usize) -> Self {
+        Self { free: Mutex::new(Vec::new()), bound: bound.max(1), misses: AtomicU64::new(0) }
+    }
+
+    /// Pop (or allocate) a buffer of exactly `len` elements. Contents
+    /// are unspecified unless the buffer had to grow, in which case the
+    /// whole buffer is `fill`-initialized; callers must overwrite
+    /// whatever they read either way.
+    pub fn take(&self, len: usize, fill: T) -> Vec<T> {
+        let mut v = self.free.lock().unwrap().pop().unwrap_or_default();
+        if v.capacity() < len {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        if v.len() != len {
+            v.clear();
+            v.resize(len, fill);
+        }
+        v
+    }
+
+    /// Return a buffer for reuse (dropped if the pool is full).
+    pub fn put(&self, v: Vec<T>) {
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.bound {
+            free.push(v);
+        }
+    }
+
+    /// Number of `take` calls that had to allocate or grow a buffer.
+    /// Flat across repeated same-shape calls = zero steady-state
+    /// allocation growth (single caller; concurrent callers beyond
+    /// `bound` in-flight buffers can still miss).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_take_put_never_misses_again() {
+        let pool: VecPool<f64> = VecPool::new(4);
+        let v = pool.take(128, 0.0);
+        assert_eq!(v.len(), 128);
+        assert_eq!(pool.misses(), 1);
+        pool.put(v);
+        for _ in 0..10 {
+            let v = pool.take(128, 0.0);
+            pool.put(v);
+        }
+        assert_eq!(pool.misses(), 1, "same-size reuse must not allocate");
+        // Shrinking reuses capacity; growing past it is a miss.
+        let v = pool.take(64, 0.0);
+        pool.put(v);
+        assert_eq!(pool.misses(), 1);
+        let v = pool.take(256, 0.0);
+        pool.put(v);
+        assert_eq!(pool.misses(), 2);
+        // And the grown buffer then serves both sizes.
+        for len in [256usize, 128, 256] {
+            let v = pool.take(len, 0.0);
+            assert_eq!(v.len(), len);
+            pool.put(v);
+        }
+        assert_eq!(pool.misses(), 2);
+    }
+
+    #[test]
+    fn bound_caps_retained_buffers() {
+        let pool: VecPool<f64> = VecPool::new(2);
+        let bufs: Vec<_> = (0..4).map(|_| pool.take(8, 0.0)).collect();
+        assert_eq!(pool.misses(), 4);
+        for b in bufs {
+            pool.put(b);
+        }
+        assert_eq!(pool.free.lock().unwrap().len(), 2, "bound must cap retention");
+    }
+}

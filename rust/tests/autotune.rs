@@ -237,6 +237,7 @@ fn plan_cache_hit_bypasses_search() {
         dtype: "f64".into(),
         base_config: config_key(&cfg),
         scope: "ehyb".into(),
+        reorder: "none".into(),
     };
     PlanStore::new(&dir).save(&planted).unwrap();
 
@@ -280,6 +281,7 @@ fn cache_hit_never_overrides_explicit_engine_level_or_config() {
         dtype: "f64".into(),
         base_config: config_key(&cfg),
         scope: "ehyb".into(),
+        reorder: "none".into(),
     };
     PlanStore::new(&dir).save(&planted).unwrap();
 

@@ -1,0 +1,446 @@
+//! Reordering gate (ISSUE 5 acceptance): every `ReorderSpec` against
+//! every engine kind through the facade, the RCM permutation contract
+//! on disconnected graphs, reorder × shards × tune composition, the
+//! bandwidth/cut acceptance criterion on banded/FEM-like generators,
+//! and the pooled-scratch steady-state invariant.
+//!
+//! Numerical contract under test (see `ehyb::reorder` docs): the
+//! permuted matrix preserves each row's entry order
+//! (`Csr::permute_symmetric_stable`) and the adapter permutes `x` in /
+//! `y` out — so for every row-local engine kind (csr-scalar,
+//! csr-vector, ell, hyb, sellp, csr5) the reordered result is
+//! **bitwise identical** to the unsharded, unreordered engine. The two
+//! global-layout engines (`ehyb`, `merge`) re-derive their layouts on
+//! the permuted structure (that is the point — the partitioner sees
+//! the improved locality) and agree to 1e-9.
+
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::shard::{ShardPlan, ShardStrategy};
+use ehyb::sparse::coo::Coo;
+use ehyb::sparse::csr::Csr;
+use ehyb::sparse::gen::{banded, unstructured_mesh};
+use ehyb::util::check::{assert_allclose, check_prop, default_cases};
+use ehyb::util::Xoshiro256;
+use ehyb::{
+    BatchBuf, EngineKind, ReorderSpec, Reordering, ShardSpec, SpmvContext, TuneLevel,
+};
+
+const ROW_LOCAL: [EngineKind; 6] = [
+    EngineKind::CsrScalar,
+    EngineKind::CsrVector,
+    EngineKind::Ell,
+    EngineKind::Hyb,
+    EngineKind::SellP,
+    EngineKind::Csr5,
+];
+
+const GLOBAL_LAYOUT: [EngineKind; 2] = [EngineKind::Ehyb, EngineKind::Merge];
+
+const SPECS: [ReorderSpec; 5] = [
+    ReorderSpec::None,
+    ReorderSpec::DegreeSort,
+    ReorderSpec::Rcm,
+    ReorderSpec::PartitionRank { k: 0 },
+    ReorderSpec::Auto,
+];
+
+fn cfg(vec_size: usize) -> PreprocessConfig {
+    PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() }
+}
+
+fn random_matrix(rng: &mut Xoshiro256) -> Csr<f64> {
+    let n = 32 + rng.next_below(220);
+    let mut coo = Coo::new(n, n);
+    for i in 0..n {
+        coo.push(i, i, rng.range_f64(1.0, 4.0));
+        let deg = rng.next_below(9);
+        for _ in 0..deg {
+            let j = if rng.next_f64() < 0.6 {
+                let span = 24.min(n);
+                (i + rng.next_below(span)).saturating_sub(span / 2).min(n - 1)
+            } else {
+                rng.next_below(n)
+            };
+            coo.push(i, j, rng.range_f64(-1.0, 1.0));
+        }
+    }
+    coo.to_csr()
+}
+
+fn random_x(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect()
+}
+
+/// A banded matrix hidden behind a random relabeling.
+fn scrambled_banded(n: usize, bw: usize, seed: u64) -> Csr<f64> {
+    let m = banded::<f64>(n, bw, 0.7, seed);
+    let mut shuffle: Vec<u32> = (0..n as u32).collect();
+    Xoshiro256::new(seed ^ 0xD1CE).shuffle(&mut shuffle);
+    m.permute_symmetric_stable(&shuffle)
+}
+
+#[test]
+fn prop_every_spec_roundtrips_exactly_on_every_engine() {
+    check_prop("reorder-roundtrip", 0x5E08D1, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let vec_size = 32 * (1 + rng.next_below(3));
+        let x = random_x(rng, m.ncols());
+        // One spec per case keeps the sweep tractable; the seed walk
+        // covers all of them many times over.
+        let spec = SPECS[rng.next_below(SPECS.len())];
+        for kind in ROW_LOCAL {
+            let base = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg(vec_size))
+                .build()
+                .map_err(|e| format!("{kind:?}: base build: {e:#}"))?;
+            let y_ref = base.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg(vec_size))
+                .reorder(spec)
+                .build()
+                .map_err(|e| format!("{kind:?} {spec:?}: build: {e:#}"))?;
+            let y = ctx.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            if y != y_ref {
+                return Err(format!(
+                    "{kind:?} {spec:?}: reordered != plain bitwise (n={}, resolved={:?})",
+                    m.nrows(),
+                    ctx.reordering().map(|r| r.resolved.clone())
+                ));
+            }
+        }
+        for kind in GLOBAL_LAYOUT {
+            let base = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg(vec_size))
+                .build()
+                .map_err(|e| format!("{kind:?}: base build: {e:#}"))?;
+            let y_ref = base.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg(vec_size))
+                .reorder(spec)
+                .build()
+                .map_err(|e| format!("{kind:?} {spec:?}: build: {e:#}"))?;
+            let y = ctx.spmv_alloc(&x).map_err(|e| e.to_string())?;
+            assert_allclose(&y, &y_ref, 1e-9, 1e-9)
+                .map_err(|e| format!("{kind:?} {spec:?}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reordered_batch_bitwise_matches_repeated_spmv() {
+    check_prop("reorder-batch-equals-repeated", 0x5E08D2, default_cases(), |rng| {
+        let m = random_matrix(rng);
+        let vec_size = 32 * (1 + rng.next_below(3));
+        let bw = 1 + rng.next_below(5);
+        let xs: Vec<Vec<f64>> = (0..bw).map(|_| random_x(rng, m.ncols())).collect();
+        let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+        let xbatch = BatchBuf::from_cols(&xrefs).map_err(|e| e.to_string())?;
+        let spec = SPECS[rng.next_below(SPECS.len())];
+        for kind in [EngineKind::CsrScalar, EngineKind::Ehyb, EngineKind::SellP] {
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg(vec_size))
+                .reorder(spec)
+                .build()
+                .map_err(|e| format!("{kind:?} {spec:?}: build: {e:#}"))?;
+            let mut ys = BatchBuf::<f64>::zeros(m.nrows(), bw);
+            {
+                let mut yv = ys.view_mut();
+                ctx.spmv_batch(xbatch.view(), &mut yv).map_err(|e| e.to_string())?;
+            }
+            for (b, x) in xs.iter().enumerate() {
+                let y1 = ctx.spmv_alloc(x).map_err(|e| e.to_string())?;
+                if y1[..] != *ys.col(b) {
+                    return Err(format!("{kind:?} {spec:?}: batch lane {b} != spmv"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rcm_is_a_bijection_on_disconnected_graphs() {
+    check_prop("rcm-bijection-disconnected", 0x5E08D3, default_cases(), |rng| {
+        // Random block-diagonal structure: several disjoint chains or
+        // cliques plus isolated diagonal-only rows — RCM must visit
+        // every component and still emit a bijection.
+        let blocks = 1 + rng.next_below(5);
+        let isolated = rng.next_below(8);
+        let mut sizes: Vec<usize> = (0..blocks).map(|_| 2 + rng.next_below(24)).collect();
+        sizes.push(isolated);
+        let n: usize = sizes.iter().sum();
+        let mut coo = Coo::<f64>::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, 2.0 + rng.next_f64());
+        }
+        let mut base = 0usize;
+        for &sz in &sizes[..blocks] {
+            for i in 0..sz {
+                // chain within the block, occasional extra edge
+                if i + 1 < sz {
+                    coo.push(base + i, base + i + 1, -1.0);
+                    coo.push(base + i + 1, base + i, -1.0);
+                }
+                if sz > 3 && rng.next_f64() < 0.3 {
+                    let j = rng.next_below(sz);
+                    coo.push(base + i, base + j, -0.5);
+                }
+            }
+            base += sz;
+        }
+        let m = coo.to_csr();
+        let r = Reordering::compute(&m, ReorderSpec::Rcm).map_err(|e| e.to_string())?;
+        let mut seen = vec![false; n];
+        for &p in &r.perm {
+            if p as usize >= n || seen[p as usize] {
+                return Err(format!("perm not a bijection at target {p} (n={n})"));
+            }
+            seen[p as usize] = true;
+        }
+        // And the permuted pipeline still computes the same operator.
+        let x = random_x(rng, n);
+        let base_ctx = SpmvContext::builder(m.clone())
+            .engine(EngineKind::CsrScalar)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::CsrScalar)
+            .reorder(ReorderSpec::Rcm)
+            .build()
+            .map_err(|e| e.to_string())?;
+        if ctx.spmv_alloc(&x).map_err(|e| e.to_string())?
+            != base_ctx.spmv_alloc(&x).map_err(|e| e.to_string())?
+        {
+            return Err("rcm round-trip not bitwise on disconnected graph".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn reorder_shards_tune_compose_without_double_permuting() {
+    let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+    let x: Vec<f64> = (0..m.ncols()).map(|i| ((i * 7 + 3) % 19) as f64 * 0.25 - 2.0).collect();
+    let oracle = m.spmv_f64_oracle(&x);
+    // Row-local kind: reorder × shards must still be bitwise equal to
+    // the plain engine — any double permutation (adapter + a second
+    // permute somewhere downstream) would scramble the result.
+    let plain = SpmvContext::builder(m.clone()).engine(EngineKind::CsrScalar).build().unwrap();
+    let y_ref = plain.spmv_alloc(&x).unwrap();
+    for k in [1usize, 3] {
+        let ctx = SpmvContext::builder(m.clone())
+            .engine(EngineKind::CsrScalar)
+            .reorder(ReorderSpec::Rcm)
+            .shards(ShardSpec::Count(k))
+            .build()
+            .unwrap();
+        assert_eq!(ctx.spmv_alloc(&x).unwrap(), y_ref, "k={k}");
+        assert_eq!(ctx.shards(), k);
+    }
+    // Full stack: reorder × shards × tune on EHYB, still the same
+    // operator (1e-9; shards re-derive layouts) and the tuned plans
+    // carry the reorder provenance.
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg(64))
+        .reorder(ReorderSpec::Rcm)
+        .shards(ShardSpec::Count(3))
+        .tune(TuneLevel::Heuristic)
+        .no_plan_cache()
+        .build()
+        .unwrap();
+    assert_allclose(&ctx.spmv_alloc(&x).unwrap(), &oracle, 1e-9, 1e-9).unwrap();
+    let r = ctx.reordering().expect("reordered build");
+    assert_eq!(r.resolved, "rcm");
+    assert_eq!(ctx.tuned().unwrap().reorder, "rcm");
+    for tp in ctx.tuned_shards().iter().flatten() {
+        assert_eq!(tp.reorder, "rcm", "per-shard plans record the ordering");
+    }
+    // The solver runs unchanged on a reordered context (bitwise CG
+    // trajectory on the row-local kind).
+    let b: Vec<f64> = (0..m.nrows()).map(|i| ((i * 11 + 5) % 23) as f64 / 23.0 - 0.5).collect();
+    let pre = ehyb::coordinator::Jacobi::new(&m);
+    let scfg = ehyb::coordinator::SolverConfig::default();
+    let reordered = SpmvContext::builder(m.clone())
+        .engine(EngineKind::CsrScalar)
+        .reorder(ReorderSpec::Rcm)
+        .build()
+        .unwrap();
+    let (sol_ref, rep_ref) = plain.solver().cg(&b, None, &pre, &scfg).unwrap();
+    let (sol, rep) = reordered.solver().cg(&b, None, &pre, &scfg).unwrap();
+    assert!(rep.converged && rep_ref.converged);
+    assert_eq!(sol, sol_ref, "CG trajectory must be bitwise identical under reordering");
+}
+
+#[test]
+fn acceptance_rcm_and_partrank_reduce_bandwidth_and_cache_aware_cut() {
+    // ISSUE 5 acceptance: on the banded (scrambled) and FEM-like
+    // generator matrices, Rcm and PartitionRank each reduce the
+    // measured bandwidth AND the CacheAware cut_nnz versus None.
+    let k = 8;
+    for (name, m) in [
+        ("scrambled-banded", scrambled_banded(2000, 8, 3)),
+        ("unstructured-mesh", unstructured_mesh::<f64>(40, 40, 0.4, 7)),
+    ] {
+        let none = Reordering::compute(&m, ReorderSpec::None).unwrap();
+        let cut_none = ShardPlan::new(&m, k, ShardStrategy::CacheAware).cut_nnz(&m);
+        for spec in [ReorderSpec::Rcm, ReorderSpec::PartitionRank { k: 0 }] {
+            let r = Reordering::compute(&m, spec).unwrap();
+            assert!(
+                r.after.bandwidth < none.after.bandwidth,
+                "{name} {spec:?}: bandwidth {} !< {}",
+                r.after.bandwidth,
+                none.after.bandwidth
+            );
+            let pm = r.apply(&m);
+            let cut = ShardPlan::new(&pm, k, ShardStrategy::CacheAware).cut_nnz(&pm);
+            assert!(
+                cut < cut_none,
+                "{name} {spec:?}: cache-aware cut {cut} !< natural {cut_none}"
+            );
+            // The facade reports the same before/after pair.
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(EngineKind::CsrScalar)
+                .reorder(spec)
+                .shards(ShardSpec::Count(k))
+                .build()
+                .unwrap();
+            let (before, after) = ctx.reorder_cut_nnz().expect("reorder × shards");
+            assert_eq!(before, cut_none, "{name} {spec:?}");
+            assert_eq!(after, cut, "{name} {spec:?}");
+            assert!(after < before, "{name} {spec:?}");
+        }
+    }
+}
+
+#[test]
+fn sharded_batch_scratch_stays_allocation_free_in_steady_state() {
+    // ISSUE 5 satellite through the public facade: repeated fused
+    // batches on a sharded context must stop allocating after warm-up
+    // (ShardedEngine staging pools + EhybShard x-staging pools).
+    let m = unstructured_mesh::<f64>(24, 24, 0.4, 9);
+    for kind in [EngineKind::Ehyb, EngineKind::CsrScalar] {
+        let ctx = SpmvContext::builder(m.clone())
+            .engine(kind)
+            .config(cfg(64))
+            .shards(ShardSpec::Count(3))
+            .build()
+            .unwrap();
+        let width = 4;
+        let mut xs = BatchBuf::<f64>::zeros(m.ncols(), width);
+        for b in 0..width {
+            for i in 0..m.ncols() {
+                xs.col_mut(b)[i] = ((i * 3 + b * 7 + 1) % 13) as f64 * 0.5 - 3.0;
+            }
+        }
+        let mut ys = BatchBuf::<f64>::zeros(m.nrows(), width);
+        {
+            let mut yv = ys.view_mut();
+            ctx.spmv_batch(xs.view(), &mut yv).unwrap();
+        }
+        let sharded = ctx.sharded().unwrap();
+        let after_first = sharded.scratch_misses();
+        assert!(after_first > 0, "{kind:?}: first call populates the pools");
+        for _ in 0..10 {
+            let mut yv = ys.view_mut();
+            ctx.spmv_batch(xs.view(), &mut yv).unwrap();
+        }
+        assert_eq!(
+            sharded.scratch_misses(),
+            after_first,
+            "{kind:?}: steady-state batches must not allocate"
+        );
+    }
+}
+
+#[test]
+fn sharded_untuned_ehyb_runs_k_block_pipelines_not_k_plus_one() {
+    // ISSUE 5 satellite: at K >= 2 the whole-matrix EhybPlan is never
+    // executed, so it must not be built — the per-shard preprocessing
+    // timings are the proof (K pipelines ran, and ctx.plan() carries
+    // no K+1-th).
+    let m = unstructured_mesh::<f64>(24, 24, 0.4, 3);
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg(64))
+        .shards(ShardSpec::Count(4))
+        .build()
+        .unwrap();
+    assert!(ctx.plan().is_none(), "whole-matrix plan must be skipped at K >= 2");
+    let preps: Vec<_> =
+        ctx.sharded().unwrap().stats().iter().filter_map(|s| s.block_prep).collect();
+    assert_eq!(preps.len(), 4, "exactly K block pipelines ran");
+    assert!(preps.iter().all(|t| t.reorder_secs > 0.0));
+    // And the context still executes correctly.
+    let x = vec![1.0; m.ncols()];
+    assert_allclose(&ctx.spmv_alloc(&x).unwrap(), &m.spmv_f64_oracle(&x), 1e-9, 1e-9).unwrap();
+}
+
+#[test]
+fn reordered_tuned_plans_key_the_store_on_the_reordered_structure() {
+    let m = unstructured_mesh::<f64>(32, 32, 0.4, 13);
+    let dir = std::env::temp_dir().join(format!("ehyb-reorder-store-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let build = |spec: Option<ReorderSpec>| {
+        let mut b = SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(cfg(64))
+            .tune(TuneLevel::Heuristic)
+            .plan_cache(&dir);
+        if let Some(spec) = spec {
+            b = b.reorder(spec);
+        }
+        b.build().unwrap()
+    };
+    let entries = || {
+        std::fs::read_dir(&dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+                    .count()
+            })
+            .unwrap_or(0)
+    };
+    // Cold reordered build persists one entry under the REORDERED
+    // fingerprint...
+    let cold = build(Some(ReorderSpec::Rcm));
+    assert_eq!(cold.tuned().unwrap().reorder, "rcm");
+    assert_eq!(entries(), 1);
+    // ...a warm rebuild adopts it (same winner, bitwise execution)...
+    let warm = build(Some(ReorderSpec::Rcm));
+    assert_eq!(warm.tuned(), cold.tuned());
+    assert_eq!(entries(), 1, "warm start must not write a second entry");
+    let x: Vec<f64> = (0..m.ncols()).map(|i| ((i * 13 + 3) % 23) as f64 * 0.25 - 2.5).collect();
+    assert_eq!(cold.spmv_alloc(&x).unwrap(), warm.spmv_alloc(&x).unwrap());
+    // ...and an unreordered build keys a DIFFERENT entry (reordered
+    // winners survive restarts without colliding with natural-order
+    // winners of the same matrix).
+    let natural = build(None);
+    assert_eq!(natural.tuned().unwrap().reorder, "none");
+    assert_eq!(entries(), 2, "natural-order entry must not collide with the reordered one");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reorder_rejects_non_square_with_typed_error() {
+    let m = Coo::<f64>::new(3, 4).to_csr();
+    match SpmvContext::builder(m).engine(EngineKind::CsrScalar).reorder(ReorderSpec::Rcm).build()
+    {
+        Err(ehyb::EhybError::UnsupportedFormat(_)) => {}
+        other => panic!("expected UnsupportedFormat, got {:?}", other.err()),
+    }
+    // ReorderSpec::None is a no-op and must keep working on any shape.
+    let m = Coo::<f64>::new(3, 4).to_csr();
+    let ctx = SpmvContext::builder(m)
+        .engine(EngineKind::CsrScalar)
+        .reorder(ReorderSpec::None)
+        .build()
+        .unwrap();
+    assert!(ctx.reordering().is_none());
+}
