@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let pre = Jacobi::new(ctx.matrix());
-    let scfg = SolverConfig { max_iters: 600, rtol: 1e-8, track_history: true };
+    let scfg = SolverConfig { max_iters: 600, rtol: 1e-8, ..Default::default() };
 
     // --- Solve 1: full three-layer stack over PJRT. ---
     let pjrt_report = match ehyb::runtime::PjrtRuntime::new("artifacts") {
@@ -59,7 +59,7 @@ fn main() -> anyhow::Result<()> {
                 rep.iters,
                 rep.wall_secs,
                 1e3 * rep.wall_secs / rep.spmv_count as f64,
-                rep.converged
+                rep.converged()
             );
             Some(rep)
         }
@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
         cpu_rep.iters,
         cpu_rep.wall_secs,
         1e3 * cpu_rep.wall_secs / cpu_rep.spmv_count as f64,
-        cpu_rep.converged
+        cpu_rep.converged()
     );
 
     // --- Solve 3: through the batched SpMV service (leader/worker),
@@ -123,7 +123,7 @@ fn main() -> anyhow::Result<()> {
     let many = ctx.solver().cg_many(&bs, &pre, &scfg)?;
     for (i, (xm, rep)) in many.iter().enumerate() {
         verify(&a, xm, &bs[i]);
-        println!("[MANY] rhs {i}: {} iters, converged={}", rep.iters, rep.converged);
+        println!("[MANY] rhs {i}: {} iters, converged={}", rep.iters, rep.converged());
     }
 
     // --- §6 amortization accounting. ---

@@ -36,6 +36,22 @@ pub enum EhybError {
     Overloaded {
         queue_depth: usize,
     },
+    /// The engine panicked while executing a fused batch. The service
+    /// quarantines the engine (every request in the poisoned batch gets
+    /// this error) and respawns a fresh one via its factory — the
+    /// service itself keeps serving. The payload is the panic message.
+    EngineFault(String),
+    /// The request's deadline expired before the service drained it;
+    /// the request was dropped without occupying kernel width.
+    DeadlineExceeded,
+    /// A non-finite (NaN/Inf) value was rejected by an input guard
+    /// (`GuardLevel::Reject` on the facade).
+    NonFinite {
+        /// Which argument held the value ("x", "batch column 3", ...).
+        what: &'static str,
+        /// Index of the first offending element.
+        index: usize,
+    },
     /// Backend/runtime failure (PJRT client, missing artifacts).
     Runtime(String),
     /// Filesystem / OS error, with context.
@@ -58,6 +74,15 @@ impl fmt::Display for EhybError {
             EhybError::ServiceStopped => write!(f, "SpMV service stopped"),
             EhybError::Overloaded { queue_depth } => {
                 write!(f, "SpMV service overloaded: request queue full at depth {queue_depth}")
+            }
+            EhybError::EngineFault(msg) => {
+                write!(f, "engine fault: batch quarantined after panic: {msg}")
+            }
+            EhybError::DeadlineExceeded => {
+                write!(f, "deadline exceeded before the request was served")
+            }
+            EhybError::NonFinite { what, index } => {
+                write!(f, "non-finite value in {what} at index {index}")
             }
             EhybError::Runtime(msg) => write!(f, "runtime error: {msg}"),
             EhybError::Io(msg) => write!(f, "I/O error: {msg}"),
@@ -127,6 +152,11 @@ mod tests {
         assert!(e.to_string().contains("overloaded") && e.to_string().contains("64"));
         assert!(EhybError::PartitionFailed("cap".into()).to_string().contains("cap"));
         assert!(EhybError::UnsupportedFormat("array".into()).to_string().contains("array"));
+        let e = EhybError::EngineFault("index 4 out of bounds".into());
+        assert!(e.to_string().contains("engine fault") && e.to_string().contains("index 4"));
+        assert!(EhybError::DeadlineExceeded.to_string().contains("deadline"));
+        let e = EhybError::NonFinite { what: "x", index: 7 };
+        assert!(e.to_string().contains("non-finite") && e.to_string().contains('7'));
     }
 
     #[test]

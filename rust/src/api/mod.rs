@@ -28,10 +28,11 @@ pub use batch::{BatchBuf, VecBatch, VecBatchMut};
 pub use error::EhybError;
 
 use crate::autotune::{self, Fingerprint, PlanStore, TuneLevel, TunedPlan};
-use crate::coordinator::precond::Preconditioner;
+use crate::coordinator::precond::{Jacobi, Preconditioner};
 use crate::coordinator::service::{self, BatchKernel, SpmvService};
-use crate::coordinator::solver::{self, SolveReport, SolverConfig};
+use crate::coordinator::solver::{self, SolveReport, SolveStatus, SolverConfig};
 use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::resilience::{GuardLevel, Health, HealthReport};
 use crate::reorder::{ReorderSpec, ReorderedEngine, Reordering};
 use crate::shard::{ShardPlan, ShardSpec, ShardStrategy, ShardedEngine};
 use crate::sparse::csr::Csr;
@@ -181,6 +182,8 @@ pub struct SpmvContextBuilder<S: Scalar> {
     shards: Option<ShardSpec>,
     shard_strategy: ShardStrategy,
     reorder: Option<ReorderSpec>,
+    fallback: bool,
+    guard: GuardLevel,
 }
 
 impl<S: Scalar> SpmvContextBuilder<S> {
@@ -264,6 +267,30 @@ impl<S: Scalar> SpmvContextBuilder<S> {
         self
     }
 
+    /// Degraded-mode operation (default off): an EHYB (or tuner-routed)
+    /// build that fails downgrades to the [`EngineKind::CsrVector`]
+    /// baseline instead of failing the build, and a solve that ends in
+    /// [`SolveStatus::Breakdown`] / [`SolveStatus::Diverged`] is retried
+    /// once from scratch with Jacobi-preconditioned BiCGSTAB. Every
+    /// downgrade is counted and logged in [`SpmvContext::health`] — the
+    /// context never degrades silently. Sharded (K ≥ 2) EHYB builds stay
+    /// strict: their validation errors are configuration mistakes, not
+    /// runtime conditions to absorb.
+    pub fn fallback(mut self, enabled: bool) -> Self {
+        self.fallback = enabled;
+        self
+    }
+
+    /// Non-finite input/output policy (default [`GuardLevel::Off`] —
+    /// zero hot-path cost). [`GuardLevel::Reject`] turns a NaN/Inf in
+    /// `x` into a typed [`EhybError::NonFinite`] before the engine
+    /// runs; [`GuardLevel::Monitor`] records non-finite engine outputs
+    /// in [`SpmvContext::health`] without changing any return value.
+    pub fn guard(mut self, level: GuardLevel) -> Self {
+        self.guard = level;
+        self
+    }
+
     /// Run preprocessing / tuning (as requested) and prepare the engine.
     pub fn build(self) -> crate::Result<SpmvContext<S>> {
         let SpmvContextBuilder {
@@ -276,7 +303,13 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             shards,
             shard_strategy,
             reorder,
+            fallback,
+            guard,
         } = self;
+        // Degradation ledger — shared with the solver handle so a
+        // fallback build and a restarted solve report through one
+        // `ctx.health()` snapshot.
+        let health = Arc::new(Health::default());
         // --- Global reordering (ISSUE 5 tentpole): resolved FIRST so
         // everything downstream — tuning fingerprints, shard
         // boundaries, the EHYB partitioner — sees the permuted
@@ -327,9 +360,20 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                 }
                 (EngineKind::Ehyb, None)
             }
-            (EngineKind::Ehyb, None) => {
-                (EngineKind::Ehyb, Some(EhybPlan::build(exec, &config)?))
-            }
+            (EngineKind::Ehyb, None) => match EhybPlan::build(exec, &config) {
+                Ok(p) => (EngineKind::Ehyb, Some(p)),
+                Err(e) if fallback => {
+                    // Degraded mode: the requested pipeline could not be
+                    // built; serve the always-buildable csr-vector
+                    // baseline and record the downgrade instead of
+                    // failing the build.
+                    health.record_engine_fallback(format!(
+                        "ehyb plan build failed ({e}); csr-vector serving"
+                    ));
+                    (EngineKind::CsrVector, None)
+                }
+                Err(e) => return Err(e),
+            },
             (concrete, None) if concrete != EngineKind::Auto => (concrete, None),
             // Tuner-routed: explicit `.tune(..)` and/or `Auto`.
             (requested, tune_level) => {
@@ -390,36 +434,52 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                         (engine, plan)
                     }
                     None => {
-                        let mut out = if explicit {
+                        let searched = if explicit {
                             autotune::tuner::tune_with_fingerprint(
                                 exec, &config, requested, level, fp,
-                            )?
+                            )
                         } else {
                             // Implicit `Auto` (no `.tune(..)`): engine
                             // choice only — one preprocessing pass,
                             // like the pre-tuner roofline comparison.
                             // The knob search stays opt-in.
-                            autotune::tuner::choose_engine(exec, &config, level, fp)?
+                            autotune::tuner::choose_engine(exec, &config, level, fp)
                         };
-                        // Stamp the ordering that produced this search
-                        // before anything persists or reports it.
-                        out.plan.reorder = reorder_tag.clone();
-                        // Persist only real search results: implicit
-                        // Auto's light engine choice and budget-starved
-                        // measured runs (`!searched()`) must not occupy
-                        // the entry a full `.tune(..)` search would
-                        // fill. Best-effort: an unwritable cache dir
-                        // must not fail the build.
-                        if explicit && out.searched() {
-                            if let Some(store) = &store {
-                                let _ = store.save(&out.plan);
+                        match searched {
+                            Err(e) if fallback => {
+                                // Degraded mode for tuner-routed builds:
+                                // a failed search/preprocess downgrades
+                                // to the untuned csr-vector baseline.
+                                health.record_engine_fallback(format!(
+                                    "tuned build failed ({e}); csr-vector serving"
+                                ));
+                                (EngineKind::CsrVector, None)
+                            }
+                            Err(e) => return Err(e),
+                            Ok(mut out) => {
+                                // Stamp the ordering that produced this
+                                // search before anything persists or
+                                // reports it.
+                                out.plan.reorder = reorder_tag.clone();
+                                // Persist only real search results:
+                                // implicit Auto's light engine choice
+                                // and budget-starved measured runs
+                                // (`!searched()`) must not occupy the
+                                // entry a full `.tune(..)` search would
+                                // fill. Best-effort: an unwritable cache
+                                // dir must not fail the build.
+                                if explicit && out.searched() {
+                                    if let Some(store) = &store {
+                                        let _ = store.save(&out.plan);
+                                    }
+                                }
+                                config = out.plan.apply(&config);
+                                let engine = out.plan.engine;
+                                let plan = out.ehyb;
+                                tuned = Some(out.plan);
+                                (engine, plan)
                             }
                         }
-                        config = out.plan.apply(&config);
-                        let engine = out.plan.engine;
-                        let plan = out.ehyb;
-                        tuned = Some(out.plan);
-                        (engine, plan)
                     }
                 }
             }
@@ -517,6 +577,9 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             shard_tuned,
             sharded,
             engine,
+            fallback,
+            guard,
+            health,
         })
     }
 }
@@ -618,6 +681,22 @@ pub struct SpmvContext<S: Scalar> {
     /// pay for the engine's own copy of the format. Sharded builds
     /// preset this cell at build time.
     engine: OnceLock<Arc<dyn SpmvEngine<S>>>,
+    /// Degraded-mode operation requested at build time
+    /// ([`SpmvContextBuilder::fallback`]): build failures downgrade to
+    /// a baseline engine, broken solves restart once.
+    fallback: bool,
+    /// Non-finite input/output policy
+    /// ([`SpmvContextBuilder::guard`]).
+    guard: GuardLevel,
+    /// Degradation ledger: every fallback, restart, and guarded
+    /// non-finite value lands here (snapshot via
+    /// [`SpmvContext::health`]).
+    health: Arc<Health>,
+}
+
+/// Index of the first non-finite (NaN/Inf) element, if any.
+fn first_nonfinite<S: Scalar>(v: &[S]) -> Option<usize> {
+    v.iter().position(|s| !s.to_f64().is_finite())
 }
 
 impl<S: Scalar> SpmvContext<S> {
@@ -634,6 +713,8 @@ impl<S: Scalar> SpmvContext<S> {
             shards: None,
             shard_strategy: ShardStrategy::default(),
             reorder: None,
+            fallback: false,
+            guard: GuardLevel::Off,
         }
     }
 
@@ -727,6 +808,27 @@ impl<S: Scalar> SpmvContext<S> {
         self.reorder_cut
     }
 
+    /// Degradation snapshot: engine fallbacks, solver restarts, and
+    /// guarded non-finite values, with a capped event log. A freshly
+    /// built context that got exactly what it asked for reports
+    /// [`HealthReport::healthy`]; a build that downgraded under
+    /// [`SpmvContextBuilder::fallback`] reports
+    /// [`HealthReport::degraded`] — compare [`Self::kind`] against
+    /// [`Self::requested_kind`] for what is actually serving.
+    pub fn health(&self) -> HealthReport {
+        self.health.report()
+    }
+
+    /// The non-finite guard policy this context executes with.
+    pub fn guard(&self) -> GuardLevel {
+        self.guard
+    }
+
+    /// Whether degraded-mode fallback was requested at build time.
+    pub fn fallback_enabled(&self) -> bool {
+        self.fallback
+    }
+
     fn engine_cell(&self) -> &Arc<dyn SpmvEngine<S>> {
         self.engine.get_or_init(|| {
             let exec = self.exec_matrix.as_ref().unwrap_or(&self.matrix);
@@ -765,11 +867,26 @@ impl<S: Scalar> SpmvContext<S> {
         Ok(())
     }
 
-    /// One dimension-checked SpMV: `y = A x`.
+    /// One dimension-checked SpMV: `y = A x`. Under
+    /// [`GuardLevel::Reject`] a non-finite `x` is a typed
+    /// [`EhybError::NonFinite`] before the engine runs; under
+    /// [`GuardLevel::Monitor`] (or `Reject`) a non-finite result is
+    /// recorded in [`Self::health`].
     pub fn spmv(&self, x: &[S], y: &mut [S]) -> crate::Result<()> {
         Self::check_dim("x", self.ncols(), x.len())?;
         Self::check_dim("y", self.nrows(), y.len())?;
+        if self.guard.rejects() {
+            if let Some(index) = first_nonfinite(x) {
+                self.health.record_rejected_input(format!("spmv x[{index}]"));
+                return Err(EhybError::NonFinite { what: "x", index });
+            }
+        }
         self.engine().spmv(x, y);
+        if self.guard.monitors() {
+            if let Some(index) = first_nonfinite(y) {
+                self.health.record_nonfinite_output(format!("spmv y[{index}]"));
+            }
+        }
         Ok(())
     }
 
@@ -791,7 +908,22 @@ impl<S: Scalar> SpmvContext<S> {
         Self::check_dim("x batch rows", self.ncols(), xs.n())?;
         Self::check_dim("y batch rows", self.nrows(), ys.n())?;
         Self::check_dim("batch width", xs.width(), ys.width())?;
+        if self.guard.rejects() {
+            if let Some(index) = first_nonfinite(xs.as_slice()) {
+                self.health.record_rejected_input(format!(
+                    "spmv_batch column {} row {}",
+                    index / xs.n().max(1),
+                    index % xs.n().max(1)
+                ));
+                return Err(EhybError::NonFinite { what: "batch x", index });
+            }
+        }
         self.engine().spmv_batch(xs, ys);
+        if self.guard.monitors() {
+            if let Some(index) = first_nonfinite(ys.as_batch().as_slice()) {
+                self.health.record_nonfinite_output(format!("spmv_batch y[{index}]"));
+            }
+        }
         Ok(())
     }
 
@@ -846,7 +978,11 @@ impl<S: Scalar> SpmvContext<S> {
         }
         let engine = self.engine_arc();
         let nrows = self.nrows();
+        // The factory is `FnMut`: the service re-invokes it to respawn
+        // after a panicked batch, so each call hands out its own clone
+        // of the shared engine handle.
         let make = move || {
+            let engine = engine.clone();
             let fb = engine.format_bytes();
             let kernel: BatchKernel<S> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
             Ok((kernel, fb))
@@ -904,7 +1040,8 @@ impl<S: Scalar> SolverHandle<'_, S> {
             }
         };
         let engine = self.ctx.engine();
-        Ok(solver::cg(|x, y| engine.spmv(x, y), b, x0, precond, cfg))
+        let out = solver::cg(|x, y| engine.spmv(x, y), b, x0, precond, cfg);
+        Ok(self.restart_if_broken(out, b, cfg))
     }
 
     /// Preconditioned BiCGSTAB; `x0 = None` starts from zero.
@@ -929,7 +1066,45 @@ impl<S: Scalar> SolverHandle<'_, S> {
             }
         };
         let engine = self.ctx.engine();
-        Ok(solver::bicgstab(|x, y| engine.spmv(x, y), b, x0, precond, cfg))
+        let out = solver::bicgstab(|x, y| engine.spmv(x, y), b, x0, precond, cfg);
+        Ok(self.restart_if_broken(out, b, cfg))
+    }
+
+    /// Degraded-mode solve recovery: when the context was built with
+    /// [`SpmvContextBuilder::fallback`] and a solve ended in
+    /// [`SolveStatus::Breakdown`] or [`SolveStatus::Diverged`], retry
+    /// **once** from scratch with Jacobi-preconditioned BiCGSTAB (the
+    /// most breakdown-tolerant solver/preconditioner pair in the crate
+    /// — it also handles the nonsymmetric systems CG diverges on). The
+    /// restart starts from zero rather than the broken iterate, and
+    /// runs with the divergence monitor off: it is the last resort, and
+    /// BiCGSTAB's non-monotone residual would trip a tight window
+    /// immediately. Whatever status the restart ends with is final; the
+    /// attempt is recorded in [`SpmvContext::health`] either way.
+    fn restart_if_broken(
+        &self,
+        out: (Vec<S>, SolveReport),
+        b: &[S],
+        cfg: &SolverConfig,
+    ) -> (Vec<S>, SolveReport) {
+        let (x, rep) = out;
+        if !self.ctx.fallback
+            || !matches!(rep.status, SolveStatus::Breakdown | SolveStatus::Diverged)
+        {
+            return (x, rep);
+        }
+        self.ctx.health.record_solver_restart(format!(
+            "{} {} at iter {}; jacobi-bicgstab restart",
+            rep.solver,
+            rep.status.name(),
+            rep.iters
+        ));
+        let pre = Jacobi::new(self.ctx.matrix());
+        let mut rcfg = cfg.clone();
+        rcfg.divergence_window = 0;
+        let x0 = vec![S::ZERO; b.len()];
+        let engine = self.ctx.engine();
+        solver::bicgstab(|v, y| engine.spmv(v, y), b, &x0, &pre, &rcfg)
     }
 
     /// Multi-RHS preconditioned CG: every iteration's SpMVs fuse into
@@ -1271,7 +1446,7 @@ mod tests {
         let b: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 23) as f64 / 23.0 - 0.5).collect();
         let pre = Jacobi::new(ctx.matrix());
         let (x, rep) = ctx.solver().cg(&b, None, &pre, &SolverConfig::default()).unwrap();
-        assert!(rep.converged, "{rep:?}");
+        assert!(rep.converged(), "{rep:?}");
         let mut ax = vec![0.0; n];
         ctx.matrix().spmv(&x, &mut ax);
         assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
@@ -1280,5 +1455,186 @@ mod tests {
             ctx.solver().cg(&b[..n - 1], None, &pre, &SolverConfig::default()),
             Err(EhybError::DimensionMismatch { .. })
         ));
+    }
+
+    #[test]
+    fn fallback_downgrades_failed_ehyb_build_and_records_it() {
+        use crate::sparse::coo::Coo;
+        // A non-square matrix fails the EHYB plan build; with
+        // `.fallback(true)` the context serves csr-vector instead and
+        // the downgrade is on the health record.
+        let mut coo = Coo::<f64>::new(3, 4);
+        for i in 0..3 {
+            coo.push(i, i, 2.0);
+        }
+        coo.push(0, 3, 1.0);
+        let ctx = SpmvContext::builder(coo.to_csr())
+            .engine(EngineKind::Ehyb)
+            .fallback(true)
+            .build()
+            .unwrap();
+        assert_eq!(ctx.kind(), EngineKind::CsrVector);
+        assert_eq!(ctx.requested_kind(), EngineKind::Ehyb);
+        assert!(ctx.fallback_enabled());
+        let h = ctx.health();
+        assert!(h.degraded() && !h.healthy());
+        assert_eq!(h.engine_fallbacks, 1);
+        assert!(h.events[0].contains("csr-vector"), "{:?}", h.events);
+        // The degraded context actually serves.
+        let y = ctx.spmv_alloc(&[1.0; 4]).unwrap();
+        assert_eq!(y, vec![3.0, 2.0, 2.0]);
+        // Tuner-routed builds take the same downgrade: explicit EHYB
+        // tuning on a non-square matrix is a search error, absorbed
+        // into the baseline under fallback.
+        let mut coo2 = Coo::<f64>::new(3, 4);
+        for i in 0..3 {
+            coo2.push(i, i, 2.0);
+        }
+        let tuned = SpmvContext::builder(coo2.to_csr())
+            .engine(EngineKind::Ehyb)
+            .tune(TuneLevel::Heuristic)
+            .no_plan_cache()
+            .fallback(true)
+            .build()
+            .unwrap();
+        assert_eq!(tuned.kind(), EngineKind::CsrVector);
+        assert!(tuned.tuned().is_none());
+        assert_eq!(tuned.health().engine_fallbacks, 1);
+    }
+
+    #[test]
+    fn default_context_is_healthy_and_unguarded() {
+        let ctx = ctx_for(EngineKind::Ehyb);
+        assert!(ctx.health().healthy());
+        assert!(!ctx.fallback_enabled());
+        assert_eq!(ctx.guard(), crate::resilience::GuardLevel::Off);
+        // Off-guard contexts pass NaN straight through (pre-0.6
+        // behavior): no error, nothing recorded.
+        let mut x = vec![1.0; ctx.ncols()];
+        x[5] = f64::NAN;
+        let y = ctx.spmv_alloc(&x).unwrap();
+        assert!(y.iter().any(|v| v.is_nan()));
+        assert!(ctx.health().healthy());
+    }
+
+    #[test]
+    fn reject_guard_returns_typed_nonfinite() {
+        let m = poisson2d::<f64>(16, 16);
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .guard(crate::resilience::GuardLevel::Reject)
+            .build()
+            .unwrap();
+        let mut x = vec![1.0; ctx.ncols()];
+        x[3] = f64::INFINITY;
+        match ctx.spmv_alloc(&x) {
+            Err(EhybError::NonFinite { what: "x", index: 3 }) => {}
+            other => panic!("expected NonFinite at 3, got {other:?}"),
+        }
+        assert_eq!(ctx.health().rejected_inputs, 1);
+        // Finite inputs serve normally under the same guard.
+        x[3] = 1.0;
+        let y = ctx.spmv_alloc(&x).unwrap();
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert_eq!(ctx.health().rejected_inputs, 1);
+        // Batched entry point rejects too, with the flat index.
+        let n = ctx.nrows();
+        let mut xs = vec![0.5; 2 * n];
+        xs[n + 7] = f64::NAN;
+        let mut ys = vec![0.0; 2 * n];
+        let xb = VecBatch::new(&xs, n).unwrap();
+        let mut yb = VecBatchMut::new(&mut ys, n).unwrap();
+        match ctx.spmv_batch(xb, &mut yb) {
+            Err(EhybError::NonFinite { what: "batch x", index }) => assert_eq!(index, n + 7),
+            other => panic!("expected batch NonFinite, got {other:?}"),
+        }
+        assert_eq!(ctx.health().rejected_inputs, 2);
+    }
+
+    #[test]
+    fn monitor_guard_records_nonfinite_output_without_failing() {
+        let m = poisson2d::<f64>(16, 16);
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::CsrVector)
+            .guard(crate::resilience::GuardLevel::Monitor)
+            .build()
+            .unwrap();
+        // Monitor never rejects inputs: the NaN flows through the
+        // engine, the poisoned output is recorded, the call succeeds.
+        let mut x = vec![1.0; ctx.ncols()];
+        x[0] = f64::NAN;
+        let y = ctx.spmv_alloc(&x).unwrap();
+        assert!(y.iter().any(|v| v.is_nan()));
+        let h = ctx.health();
+        assert_eq!(h.rejected_inputs, 0);
+        assert!(h.nonfinite_outputs >= 1);
+        assert!(!h.healthy() && !h.degraded());
+    }
+
+    #[test]
+    fn solver_restart_on_breakdown_is_recorded() {
+        use crate::coordinator::precond::Identity;
+        use crate::sparse::coo::Coo;
+        // The zero matrix breaks CG down at iteration 1 (p·Ap = 0).
+        // With fallback the handle records one Jacobi-BiCGSTAB restart;
+        // the restart breaks down too (same singular operator), and
+        // that status is final — one restart, never a loop.
+        let a = Coo::<f64>::new(4, 4).to_csr();
+        let b = vec![1.0, 0.0, 0.0, 0.0];
+        let ctx = SpmvContext::builder(a.clone())
+            .engine(EngineKind::CsrVector)
+            .fallback(true)
+            .build()
+            .unwrap();
+        let (_, rep) =
+            ctx.solver().cg(&b, None, &Identity, &SolverConfig::default()).unwrap();
+        assert_eq!(rep.solver, "bicgstab", "restart ran");
+        assert!(!rep.converged());
+        assert_eq!(ctx.health().solver_restarts, 1);
+        assert!(ctx.health().events[0].contains("breakdown"), "{:?}", ctx.health().events);
+        // Strict contexts (default) return the broken report untouched.
+        let strict =
+            SpmvContext::builder(a).engine(EngineKind::CsrVector).build().unwrap();
+        let (_, rep) =
+            strict.solver().cg(&b, None, &Identity, &SolverConfig::default()).unwrap();
+        assert_eq!(rep.solver, "cg");
+        assert_eq!(rep.status, SolveStatus::Breakdown);
+        assert_eq!(strict.health().solver_restarts, 0);
+    }
+
+    #[test]
+    fn solver_restart_recovers_diverging_nonsymmetric_system() {
+        use crate::coordinator::precond::Identity;
+        use crate::sparse::coo::Coo;
+        // The Jordan block A = [[1, 2], [0, 1]] is nonsingular but
+        // nonsymmetric: with b = (0, 1), CG's residual grows 2 → √80,
+        // so a one-iteration divergence window fires at iteration 2.
+        // The BiCGSTAB restart solves the same system exactly (its
+        // first stabilization step lands on x = (-2, 1)).
+        let mut coo = Coo::<f64>::new(2, 2);
+        coo.push(0, 0, 1.0);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 1, 1.0);
+        let a = coo.to_csr();
+        let b = vec![0.0, 1.0];
+        let ctx = SpmvContext::builder(a.clone())
+            .engine(EngineKind::CsrVector)
+            .fallback(true)
+            .build()
+            .unwrap();
+        let cfg = SolverConfig { divergence_window: 1, ..Default::default() };
+        let (x, rep) = ctx.solver().cg(&b, None, &Identity, &cfg).unwrap();
+        assert_eq!(ctx.health().solver_restarts, 1);
+        assert!(ctx.health().events[0].contains("diverged"), "{:?}", ctx.health().events);
+        assert_eq!(rep.solver, "bicgstab");
+        assert!(rep.converged(), "{rep:?}");
+        assert_allclose(&x, &[-2.0, 1.0], 1e-10, 1e-10).unwrap();
+        // Without the window the same config never restarts: CG just
+        // burns its budget (default behavior is untouched).
+        let strict = SpmvContext::builder(a).engine(EngineKind::CsrVector).build().unwrap();
+        let (_, rep) = strict.solver().cg(&b, None, &Identity, &cfg).unwrap();
+        assert_eq!(rep.status, SolveStatus::Diverged);
+        assert_eq!(strict.health().solver_restarts, 0);
     }
 }

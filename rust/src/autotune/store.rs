@@ -15,11 +15,20 @@
 //! identity. Whether a retrieved plan actually *fits* a given build
 //! (engine kind, tune level, base config) is the facade's decision via
 //! [`TunedPlan::usable_for`].
+//!
+//! A *damaged* entry — torn JSON, out-of-range knobs, a mislabeled key
+//! — is **quarantined** on load: atomically renamed to `<name>.bad`
+//! (preserved for postmortem) and counted in
+//! [`PlanStore::quarantines`], so the key reads as a cold miss from
+//! then on and the next successful tune re-occupies it. Plain I/O read
+//! errors are *not* quarantined: an unreadable disk says nothing about
+//! the entry itself.
 
 use super::tuner::TunedPlan;
 use crate::runtime::json::Json;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Per-process sequence for temp-file names: two threads saving the
 /// same key concurrently must not share a temp file, or one could
@@ -29,15 +38,33 @@ static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 /// Environment variable naming the default plan-cache directory.
 pub const ENV_DIR: &str = "EHYB_TUNE_DIR";
 
-/// A plan-cache directory handle.
+/// A plan-cache directory handle. Clones share the quarantine counter.
 #[derive(Clone, Debug)]
 pub struct PlanStore {
     dir: PathBuf,
+    quarantined: Arc<AtomicU64>,
 }
 
 impl PlanStore {
     pub fn new(dir: impl Into<PathBuf>) -> Self {
-        Self { dir: dir.into() }
+        Self { dir: dir.into(), quarantined: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Damaged entries this handle (and its clones) moved aside.
+    pub fn quarantines(&self) -> u64 {
+        self.quarantined.load(Ordering::Relaxed)
+    }
+
+    /// Move a damaged entry to `<name>.bad` — atomic within the
+    /// directory, best-effort (a failed quarantine must not escalate a
+    /// cache miss into anything worse). Counted only when the rename
+    /// actually happened.
+    fn quarantine(&self, path: &Path) {
+        let mut bad = path.as_os_str().to_owned();
+        bad.push(".bad");
+        if std::fs::rename(path, &bad).is_ok() {
+            self.quarantined.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Store at the `EHYB_TUNE_DIR` directory, if the variable is set
@@ -60,9 +87,12 @@ impl PlanStore {
     }
 
     /// Load the cached plan for a key. `Ok(None)` = no entry (cold
-    /// cache); `Err` = an entry exists but cannot be used (unreadable /
-    /// malformed / mislabeled) — callers that prefer to re-tune on a
-    /// damaged cache can treat `Err` as a miss.
+    /// cache); `Err` = an entry exists but cannot be used — callers
+    /// that prefer to re-tune on a damaged cache can treat `Err` as a
+    /// miss. A malformed or mislabeled entry is additionally
+    /// [quarantined](Self::quarantines) to `<name>.bad`, so only the
+    /// first reader pays for the damage; an I/O read error is returned
+    /// as-is (the entry may be fine).
     pub fn load(
         &self,
         fingerprint: &str,
@@ -76,19 +106,28 @@ impl PlanStore {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
             Err(e) => return Err(crate::EhybError::Io(format!("{}: {e}", path.display()))),
         };
-        let plan = TunedPlan::from_json(&Json::parse(&text)?)?;
-        crate::ensure!(
-            plan.fingerprint == fingerprint
-                && plan.device == device
-                && plan.dtype == dtype
-                && plan.scope == scope,
-            "plan cache entry {} is keyed for ({}, {}, {}, {})",
-            path.display(),
-            plan.fingerprint,
-            plan.device,
-            plan.dtype,
-            plan.scope
-        );
+        let plan = match Json::parse(&text).and_then(|j| TunedPlan::from_json(&j)) {
+            Ok(plan) => plan,
+            Err(e) => {
+                self.quarantine(&path);
+                return Err(e);
+            }
+        };
+        if !(plan.fingerprint == fingerprint
+            && plan.device == device
+            && plan.dtype == dtype
+            && plan.scope == scope)
+        {
+            self.quarantine(&path);
+            return Err(crate::EhybError::Parse(format!(
+                "plan cache entry {} is keyed for ({}, {}, {}, {})",
+                path.display(),
+                plan.fingerprint,
+                plan.device,
+                plan.dtype,
+                plan.scope
+            )));
+        }
         Ok(Some(plan))
     }
 
@@ -172,6 +211,37 @@ mod tests {
         std::fs::create_dir_all(store.dir()).unwrap();
         std::fs::write(store.path_for("k", "d", "f64", "auto"), "{not json").unwrap();
         assert!(store.load("k", "d", "f64", "auto").is_err());
+        // ...and the damage is quarantined: the key is a cold miss now.
+        assert_eq!(store.quarantines(), 1);
+        assert!(store.load("k", "d", "f64", "auto").unwrap().is_none());
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn torn_entry_is_quarantined_and_next_save_recovers() {
+        let store = temp_store("torn");
+        let p = plan();
+        let path = store.save(&p).unwrap();
+        // Tear the entry mid-JSON — what a crashed writer without the
+        // temp-file + rename protocol would have left behind.
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        assert!(store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).is_err());
+        assert_eq!(store.quarantines(), 1);
+        // The torn file moved aside: same key is a plain miss, the .bad
+        // artifact is preserved for postmortem, nothing re-quarantines.
+        assert!(store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).unwrap().is_none());
+        assert_eq!(store.quarantines(), 1);
+        let bads = std::fs::read_dir(store.dir())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().to_string_lossy().ends_with(".bad"))
+            .count();
+        assert_eq!(bads, 1);
+        // A fresh save re-occupies the key and round-trips.
+        store.save(&p).unwrap();
+        let back = store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).unwrap().unwrap();
+        assert_eq!(back, p);
         std::fs::remove_dir_all(store.dir()).ok();
     }
 

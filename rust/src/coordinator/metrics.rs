@@ -155,6 +155,18 @@ pub struct ServiceMetrics {
     /// shed, grows back while the queue drains idle. 0 = fixed-limit
     /// service (the default `spawn`/`serve` paths never touch it).
     pub adaptive_max_batch: AtomicU64,
+    /// Fused batches quarantined because the engine panicked mid-call
+    /// (every request in the batch got `EhybError::EngineFault`). One
+    /// increment per poisoned *batch*, not per request.
+    pub faults: AtomicU64,
+    /// Engines respawned via the service's factory after a fault.
+    /// Steady state: `respawns == faults`; a lag means the factory
+    /// failed and the service exited.
+    pub respawns: AtomicU64,
+    /// Requests dropped at drain time because their deadline had
+    /// already expired (`EhybError::DeadlineExceeded`) — they never
+    /// occupied kernel width.
+    pub deadline_misses: AtomicU64,
 }
 
 impl Default for ServiceMetrics {
@@ -173,6 +185,9 @@ impl ServiceMetrics {
             bytes_moved: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             adaptive_max_batch: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
         }
     }
 
@@ -229,6 +244,14 @@ mod tests {
         // with their live limit.
         let m = ServiceMetrics::new();
         assert_eq!(m.adaptive_max_batch.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fault_counters_start_at_zero() {
+        let m = ServiceMetrics::new();
+        assert_eq!(m.faults.load(Ordering::Relaxed), 0);
+        assert_eq!(m.respawns.load(Ordering::Relaxed), 0);
+        assert_eq!(m.deadline_misses.load(Ordering::Relaxed), 0);
     }
 
     #[test]

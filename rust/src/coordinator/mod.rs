@@ -23,4 +23,6 @@ pub mod service;
 pub mod metrics;
 
 pub use precond::{Jacobi, Preconditioner, Spai0};
-pub use solver::{bicgstab, cg, cg_many, SolveReport, SolverConfig};
+pub use solver::{
+    bicgstab, cg, cg_many, DivergenceMonitor, SolveReport, SolveStatus, SolverConfig,
+};

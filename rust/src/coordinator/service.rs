@@ -27,14 +27,33 @@
 //! idle drains double it back toward the cap (full fusion for
 //! well-behaved load). The live limit is published in
 //! [`ServiceMetrics::adaptive_max_batch`].
+//!
+//! # Resilience contract
+//!
+//! The drain loop is **panic-isolated**: each fused kernel call runs
+//! under `catch_unwind`, so an engine panic maps to a typed
+//! [`EhybError::EngineFault`] reply for exactly the requests in the
+//! poisoned batch — it is the *engine* that is quarantined (dropped
+//! and respawned via the `make_engine` factory), never the service.
+//! Requests may carry an optional **deadline** checked at drain time:
+//! an expired request replies [`EhybError::DeadlineExceeded`] without
+//! occupying kernel width. [`SpmvClient::spmv_with_retry`] layers
+//! bounded exponential backoff (deterministic
+//! [`crate::util::prng`]-seeded jitter) over transient faults —
+//! `Overloaded` and `EngineFault` — and never retries permanent
+//! errors. Faults, respawns, and deadline misses are counted in
+//! [`ServiceMetrics`].
 
 use super::metrics::ServiceMetrics;
 use crate::api::batch::{VecBatch, VecBatchMut};
 use crate::api::error::EhybError;
+use crate::resilience::RetryPolicy;
 use crate::sparse::scalar::Scalar;
+use crate::util::prng::Xoshiro256;
 use crate::util::Timer;
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Request-queue depth used by the convenience entry points
 /// ([`SpmvService::spawn`], `SpmvContext::serve`). Large enough that
@@ -47,9 +66,21 @@ pub const DEFAULT_QUEUE_BOUND: usize = 1024;
 /// may close over `!Send` PJRT state).
 pub type BatchKernel<S> = Box<dyn FnMut(VecBatch<'_, S>, &mut VecBatchMut<'_, S>)>;
 
+/// Receiver side of one in-flight request. The service replies with
+/// the result vector or a typed serving error
+/// ([`EhybError::EngineFault`], [`EhybError::DeadlineExceeded`]).
+pub type ReplyReceiver<S> = mpsc::Receiver<crate::Result<Vec<S>>>;
+
 enum Msg<S> {
-    Spmv { x: Vec<S>, reply: mpsc::Sender<Vec<S>> },
+    Spmv { x: Vec<S>, deadline: Option<Instant>, reply: mpsc::Sender<crate::Result<Vec<S>>> },
     Shutdown,
+}
+
+/// One drained request awaiting execution.
+struct Request<S> {
+    x: Vec<S>,
+    deadline: Option<Instant>,
+    reply: mpsc::Sender<crate::Result<Vec<S>>>,
 }
 
 /// Handle to a running SpMV service. Clone-able; each clone can submit.
@@ -75,10 +106,62 @@ impl<S: Scalar> SpmvClient<S> {
     /// Synchronous SpMV round-trip through the service. Takes `x` by
     /// value — the allocation travels to the service and comes back as
     /// the reply buffer, so the round-trip copies nothing. Sheds with
-    /// [`EhybError::Overloaded`] when the bounded queue is full.
+    /// [`EhybError::Overloaded`] when the bounded queue is full; a
+    /// quarantined batch surfaces as [`EhybError::EngineFault`].
     pub fn spmv(&self, x: Vec<S>) -> crate::Result<Vec<S>> {
         let rx = self.submit(x)?;
-        rx.recv().map_err(|_| EhybError::ServiceStopped)
+        rx.recv().unwrap_or(Err(EhybError::ServiceStopped))
+    }
+
+    /// [`Self::spmv`] with a drain-time deadline: if the service has
+    /// not *started* serving the request by `deadline`, it is dropped
+    /// with [`EhybError::DeadlineExceeded`] instead of occupying
+    /// kernel width (counted in [`ServiceMetrics::deadline_misses`]).
+    pub fn spmv_deadline(&self, x: Vec<S>, deadline: Instant) -> crate::Result<Vec<S>> {
+        let rx = self.submit_with_deadline(x, Some(deadline))?;
+        rx.recv().unwrap_or(Err(EhybError::ServiceStopped))
+    }
+
+    /// [`Self::spmv`] with bounded retry/backoff: transient failures
+    /// ([`EhybError::Overloaded`] backpressure and
+    /// [`EhybError::EngineFault`] quarantines) sleep a deterministic
+    /// jittered exponential backoff and retry, up to
+    /// `policy.max_attempts`; permanent errors (dimension mismatch,
+    /// parse/validation, [`EhybError::ServiceStopped`]) return
+    /// immediately. Costs one defensive clone of `x` per attempt that
+    /// still has retries left: an accepted request consumes its
+    /// allocation and a quarantined batch cannot hand it back (a shed
+    /// does — the clone is dropped and the returned buffer reused).
+    pub fn spmv_with_retry(&self, x: Vec<S>, policy: &RetryPolicy) -> crate::Result<Vec<S>> {
+        let attempts = policy.max_attempts.max(1);
+        let mut rng = Xoshiro256::new(policy.seed);
+        let mut x = x;
+        for attempt in 0..attempts {
+            let last = attempt + 1 == attempts;
+            let backup = if last { None } else { Some(x.clone()) };
+            let err = match self.try_submit_inner(x, None) {
+                Ok(rx) => match rx.recv().unwrap_or(Err(EhybError::ServiceStopped)) {
+                    Ok(y) => return Ok(y),
+                    Err(e) => e,
+                },
+                Err((e, buffer_back)) => {
+                    if !last && policy.retries(&e) {
+                        // The request was never accepted, so the shed
+                        // handed our buffer back: retry with it.
+                        x = buffer_back;
+                        std::thread::sleep(policy.delay(attempt, &mut rng));
+                        continue;
+                    }
+                    return Err(e);
+                }
+            };
+            if last || !policy.retries(&err) {
+                return Err(err);
+            }
+            x = backup.expect("retries remain");
+            std::thread::sleep(policy.delay(attempt, &mut rng));
+        }
+        unreachable!("the final attempt returns")
     }
 
     /// Fire-and-forget submit; returns the receiver for the result.
@@ -88,8 +171,18 @@ impl<S: Scalar> SpmvClient<S> {
     /// request to another replica. Use [`Self::try_submit`] to get the
     /// input buffer back on shed (no reallocation per retry), or
     /// [`Self::submit_blocking`] to wait for queue space instead.
-    pub fn submit(&self, x: Vec<S>) -> crate::Result<mpsc::Receiver<Vec<S>>> {
-        self.try_submit(x).map_err(|(e, _)| e)
+    pub fn submit(&self, x: Vec<S>) -> crate::Result<ReplyReceiver<S>> {
+        self.try_submit_inner(x, None).map_err(|(e, _)| e)
+    }
+
+    /// [`Self::submit`] with an optional drain-time deadline (see
+    /// [`Self::spmv_deadline`]).
+    pub fn submit_with_deadline(
+        &self,
+        x: Vec<S>,
+        deadline: Option<Instant>,
+    ) -> crate::Result<ReplyReceiver<S>> {
+        self.try_submit_inner(x, deadline).map_err(|(e, _)| e)
     }
 
     /// [`Self::submit`] that hands the input allocation back alongside
@@ -99,7 +192,15 @@ impl<S: Scalar> SpmvClient<S> {
     pub fn try_submit(
         &self,
         x: Vec<S>,
-    ) -> std::result::Result<mpsc::Receiver<Vec<S>>, (EhybError, Vec<S>)> {
+    ) -> std::result::Result<ReplyReceiver<S>, (EhybError, Vec<S>)> {
+        self.try_submit_inner(x, None)
+    }
+
+    fn try_submit_inner(
+        &self,
+        x: Vec<S>,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<ReplyReceiver<S>, (EhybError, Vec<S>)> {
         if x.len() != self.nrows {
             let e = EhybError::DimensionMismatch {
                 what: "service request x",
@@ -109,7 +210,7 @@ impl<S: Scalar> SpmvClient<S> {
             return Err((e, x));
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        match self.tx.try_send(Msg::Spmv { x, reply: reply_tx }) {
+        match self.tx.try_send(Msg::Spmv { x, deadline, reply: reply_tx }) {
             Ok(()) => Ok(reply_rx),
             Err(mpsc::TrySendError::Full(Msg::Spmv { x, .. })) => {
                 use std::sync::atomic::Ordering;
@@ -129,7 +230,7 @@ impl<S: Scalar> SpmvClient<S> {
     /// where the caller intends every request to run: backpressure
     /// becomes blocking, not an error. Still fails with
     /// [`EhybError::ServiceStopped`] if the service is gone.
-    pub fn submit_blocking(&self, x: Vec<S>) -> crate::Result<mpsc::Receiver<Vec<S>>> {
+    pub fn submit_blocking(&self, x: Vec<S>) -> crate::Result<ReplyReceiver<S>> {
         if x.len() != self.nrows {
             return Err(EhybError::DimensionMismatch {
                 what: "service request x",
@@ -138,7 +239,9 @@ impl<S: Scalar> SpmvClient<S> {
             });
         }
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send(Msg::Spmv { x, reply: reply_tx }).map_err(|_| EhybError::ServiceStopped)?;
+        self.tx
+            .send(Msg::Spmv { x, deadline: None, reply: reply_tx })
+            .map_err(|_| EhybError::ServiceStopped)?;
         Ok(reply_rx)
     }
 
@@ -156,7 +259,7 @@ impl<S: Scalar> SpmvClient<S> {
     pub fn spmv_many(&self, xs: Vec<Vec<S>>) -> crate::Result<Vec<Vec<S>>> {
         let rxs: Vec<_> =
             xs.into_iter().map(|x| self.submit_blocking(x)).collect::<crate::Result<Vec<_>>>()?;
-        rxs.into_iter().map(|rx| rx.recv().map_err(|_| EhybError::ServiceStopped)).collect()
+        rxs.into_iter().map(|rx| rx.recv().unwrap_or(Err(EhybError::ServiceStopped))).collect()
     }
 
     pub fn nrows(&self) -> usize {
@@ -175,13 +278,15 @@ impl<S: Scalar> SpmvService<S> {
     /// Spawn the service thread. `make_engine` runs *inside* the thread
     /// (so it may construct `!Send` PJRT state) and returns the batched
     /// SpMV kernel plus the format's device-memory bytes (for the
-    /// bytes-moved metric). `max_batch` bounds how many pending
-    /// requests one drain fuses. Requests carry square-system vectors
-    /// of length `nrows`. The request queue is bounded at
-    /// [`DEFAULT_QUEUE_BOUND`]; see [`Self::spawn_bounded`].
+    /// bytes-moved metric). It must be re-callable (`FnMut`): after an
+    /// engine panic the service quarantines the broken kernel and calls
+    /// the factory again to respawn a fresh one. `max_batch` bounds how
+    /// many pending requests one drain fuses. Requests carry
+    /// square-system vectors of length `nrows`. The request queue is
+    /// bounded at [`DEFAULT_QUEUE_BOUND`]; see [`Self::spawn_bounded`].
     pub fn spawn<F>(make_engine: F, nrows: usize, max_batch: usize) -> crate::Result<Self>
     where
-        F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
+        F: FnMut() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
         Self::spawn_bounded(make_engine, nrows, max_batch, DEFAULT_QUEUE_BOUND)
     }
@@ -196,7 +301,7 @@ impl<S: Scalar> SpmvService<S> {
         queue_bound: usize,
     ) -> crate::Result<Self>
     where
-        F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
+        F: FnMut() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
         Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, false)
     }
@@ -217,20 +322,20 @@ impl<S: Scalar> SpmvService<S> {
         queue_bound: usize,
     ) -> crate::Result<Self>
     where
-        F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
+        F: FnMut() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
         Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, true)
     }
 
     fn spawn_inner<F>(
-        make_engine: F,
+        mut make_engine: F,
         nrows: usize,
         max_batch: usize,
         queue_bound: usize,
         adaptive: bool,
     ) -> crate::Result<Self>
     where
-        F: FnOnce() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
+        F: FnMut() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
         let queue_bound = queue_bound.max(1);
         let (tx, rx) = mpsc::sync_channel::<Msg<S>>(queue_bound);
@@ -245,7 +350,8 @@ impl<S: Scalar> SpmvService<S> {
         let metrics_thread = metrics.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
         let handle = std::thread::Builder::new().name("spmv-service".into()).spawn(move || {
-            let (mut engine, format_bytes) = match make_engine() {
+            use std::sync::atomic::Ordering;
+            let (mut engine, mut format_bytes) = match make_engine() {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok(()));
                     e
@@ -260,7 +366,7 @@ impl<S: Scalar> SpmvService<S> {
             // by every drain.
             let mut xbuf: Vec<S> = Vec::new();
             let mut ybuf: Vec<S> = Vec::new();
-            let mut batch: Vec<(Vec<S>, mpsc::Sender<Vec<S>>)> = Vec::new();
+            let mut batch: Vec<Request<S>> = Vec::new();
             // Adaptive mode: `limit` floats in [1, max_batch], halving
             // when sheds were observed since the last drain and doubling
             // back while the queue drains idle. Fixed mode never moves.
@@ -270,12 +376,16 @@ impl<S: Scalar> SpmvService<S> {
                 // Block for the first request, then drain what's queued.
                 let mut shutdown = false;
                 match rx.recv() {
-                    Ok(Msg::Spmv { x, reply }) => batch.push((x, reply)),
+                    Ok(Msg::Spmv { x, deadline, reply }) => {
+                        batch.push(Request { x, deadline, reply })
+                    }
                     Ok(Msg::Shutdown) | Err(_) => break,
                 }
                 while batch.len() < limit {
                     match rx.try_recv() {
-                        Ok(Msg::Spmv { x, reply }) => batch.push((x, reply)),
+                        Ok(Msg::Spmv { x, deadline, reply }) => {
+                            batch.push(Request { x, deadline, reply })
+                        }
                         Ok(Msg::Shutdown) => {
                             shutdown = true;
                             break;
@@ -284,7 +394,6 @@ impl<S: Scalar> SpmvService<S> {
                     }
                 }
                 if adaptive {
-                    use std::sync::atomic::Ordering;
                     let shed_now = metrics_thread.shed.load(Ordering::Relaxed);
                     if shed_now > last_shed {
                         // Producers are being shed: shorter fused calls
@@ -298,7 +407,20 @@ impl<S: Scalar> SpmvService<S> {
                     last_shed = shed_now;
                     metrics_thread.adaptive_max_batch.store(limit as u64, Ordering::Relaxed);
                 }
-                serve_fused(
+                // Deadline triage: expired requests reply with a typed
+                // error *before* staging, so they never occupy kernel
+                // width (their batch slots go to live requests).
+                let now = Instant::now();
+                batch.retain(|req| {
+                    if req.deadline.is_some_and(|d| d <= now) {
+                        metrics_thread.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.reply.send(Err(EhybError::DeadlineExceeded));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                let ok = serve_fused(
                     &mut engine,
                     &mut batch,
                     &mut xbuf,
@@ -307,6 +429,23 @@ impl<S: Scalar> SpmvService<S> {
                     &metrics_thread,
                     format_bytes,
                 );
+                if !ok {
+                    // The engine panicked: the poisoned batch was
+                    // answered with EngineFault. Quarantine the engine
+                    // (drop it) and respawn a fresh one via the
+                    // factory. If the factory itself fails, the service
+                    // exits — in-flight and future requests observe
+                    // ServiceStopped (dropped reply senders / a
+                    // disconnected queue), never a hang.
+                    match make_engine() {
+                        Ok((e, fb)) => {
+                            engine = e;
+                            format_bytes = fb;
+                            metrics_thread.respawns.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => break,
+                    }
+                }
                 if shutdown {
                     break;
                 }
@@ -325,20 +464,33 @@ impl<S: Scalar> SpmvService<S> {
     }
 }
 
+/// Extract a human-readable message from a caught panic payload.
+fn panic_detail(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "engine panicked (non-string payload)".into()
+    }
+}
+
 /// Execute one drained batch as a single fused kernel call over the
-/// persistent contiguous buffers and reply.
+/// persistent contiguous buffers and reply. Returns `false` when the
+/// kernel panicked (the batch was answered with
+/// [`EhybError::EngineFault`] and the caller must respawn the engine).
 fn serve_fused<S: Scalar>(
     engine: &mut BatchKernel<S>,
-    batch: &mut Vec<(Vec<S>, mpsc::Sender<Vec<S>>)>,
+    batch: &mut Vec<Request<S>>,
     xbuf: &mut Vec<S>,
     ybuf: &mut Vec<S>,
     nrows: usize,
     metrics: &ServiceMetrics,
     format_bytes: usize,
-) {
+) -> bool {
     use std::sync::atomic::Ordering;
     if batch.is_empty() {
-        return;
+        return true;
     }
     let bw = batch.len();
     if xbuf.len() < bw * nrows {
@@ -347,15 +499,34 @@ fn serve_fused<S: Scalar>(
     }
     // Stage the requests into ONE contiguous input batch (lengths were
     // validated at submit time).
-    for (b, (x, _)) in batch.iter().enumerate() {
-        xbuf[b * nrows..(b + 1) * nrows].copy_from_slice(x);
+    for (b, req) in batch.iter().enumerate() {
+        xbuf[b * nrows..(b + 1) * nrows].copy_from_slice(&req.x);
     }
     let t = Timer::start();
-    {
+    let caught = {
         let xs = VecBatch::new(&xbuf[..bw * nrows], nrows).expect("contiguous request batch");
         let mut ys =
             VecBatchMut::new(&mut ybuf[..bw * nrows], nrows).expect("contiguous reply batch");
-        engine(xs, &mut ys);
+        // AssertUnwindSafe is justified here, not assumed: the kernel
+        // computes row-local outputs over immutable `&[S]` column
+        // views, so the only state it can leave inconsistent on unwind
+        // is (a) the kernel's own captures — discarded below, the
+        // engine is respawned and never reused after a panic — and
+        // (b) `ybuf`, which every SpMV engine fully rewrites for the
+        // columns of the *next* drain before any byte of it is read
+        // (replies only copy columns the current call produced).
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine(xs, &mut ys))).err()
+    };
+    if let Some(payload) = caught {
+        let detail = panic_detail(payload);
+        metrics.faults.fetch_add(1, Ordering::Relaxed);
+        // Exactly the requests fused into this batch are poisoned:
+        // each gets the typed fault (no latency/width accounting — the
+        // batch never executed).
+        for req in batch.drain(..) {
+            let _ = req.reply.send(Err(EhybError::EngineFault(detail.clone())));
+        }
+        return false;
     }
     let secs = t.elapsed_secs();
     metrics.requests.fetch_add(bw as u64, Ordering::Relaxed);
@@ -364,14 +535,15 @@ fn serve_fused<S: Scalar>(
     metrics
         .bytes_moved
         .fetch_add((format_bytes + bw * 2 * nrows * S::BYTES) as u64, Ordering::Relaxed);
-    for (i, (x, reply)) in batch.drain(..).enumerate() {
+    for (i, req) in batch.drain(..).enumerate() {
         metrics.spmv_latency.record(secs);
         // Reply reuses the request's own x allocation (buffer
         // recycling — zero per-request allocation in steady state).
-        let mut out = x;
+        let mut out = req.x;
         out.copy_from_slice(&ybuf[i * nrows..(i + 1) * nrows]);
-        let _ = reply.send(out);
+        let _ = req.reply.send(Ok(out));
     }
+    true
 }
 
 impl<S> Drop for SpmvService<S> {
@@ -390,6 +562,7 @@ mod tests {
     use crate::preprocess::PreprocessConfig;
     use crate::sparse::gen::poisson2d;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
 
     fn context() -> (SpmvContext<f64>, crate::sparse::csr::Csr<f64>) {
         let a = poisson2d::<f64>(16, 16);
@@ -404,6 +577,40 @@ mod tests {
     fn service() -> (SpmvService<f64>, crate::sparse::csr::Csr<f64>) {
         let (ctx, a) = context();
         (ctx.serve(8).unwrap(), a)
+    }
+
+    /// Gate-driven service used by the deterministic scheduling tests:
+    /// the kernel signals entry and then blocks on a gate, so the test
+    /// controls exactly when each drain completes. Builds one engine
+    /// (the gate receiver is not cloneable, so a respawn would panic
+    /// the factory — none of these tests inject faults).
+    fn gated_service(
+        max_batch: usize,
+        queue_bound: usize,
+        adaptive: bool,
+    ) -> (SpmvService<f64>, mpsc::Receiver<()>, mpsc::Sender<()>) {
+        let (ctx, _) = context();
+        let engine = ctx.engine_arc();
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let mut rig = Some((started_tx, gate_rx));
+        let make = move || {
+            let engine = engine.clone();
+            let fb = engine.format_bytes();
+            let (stx, grx) = rig.take().expect("gated rig builds one engine");
+            let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                stx.send(()).unwrap();
+                grx.recv().unwrap();
+                engine.spmv_batch(xs, ys)
+            });
+            Ok((kernel, fb))
+        };
+        let svc = if adaptive {
+            SpmvService::spawn_adaptive(make, 256, max_batch, queue_bound).unwrap()
+        } else {
+            SpmvService::spawn_bounded(make, 256, max_batch, queue_bound).unwrap()
+        };
+        (svc, started_rx, gate_tx)
     }
 
     #[test]
@@ -452,8 +659,8 @@ mod tests {
         let client = svc.client();
         let rx1 = client.submit(vec![1.0; 256]).unwrap();
         let rx2 = client.submit(vec![2.0; 256]).unwrap();
-        let y1 = rx1.recv().unwrap();
-        let y2 = rx2.recv().unwrap();
+        let y1 = rx1.recv().unwrap().unwrap();
+        let y2 = rx2.recv().unwrap().unwrap();
         for i in 0..256 {
             assert!((y2[i] - 2.0 * y1[i]).abs() < 1e-9); // linearity
         }
@@ -470,10 +677,12 @@ mod tests {
         let engine = ctx.engine_arc();
         let svc: SpmvService<f64> = SpmvService::spawn(
             move || {
+                let engine = engine.clone();
+                let calls_engine = calls_engine.clone();
                 let fb = engine.format_bytes();
                 let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
                     calls_engine.fetch_add(1, Ordering::Relaxed);
-                    std::thread::sleep(std::time::Duration::from_millis(25));
+                    std::thread::sleep(Duration::from_millis(25));
                     engine.spmv_batch(xs, ys)
                 });
                 Ok((kernel, fb))
@@ -487,7 +696,7 @@ mod tests {
         let rxs: Vec<_> =
             (0..n_req).map(|t| client.submit(vec![1.0 + t as f64; 256]).unwrap()).collect();
         for rx in rxs {
-            let y = rx.recv().unwrap();
+            let y = rx.recv().unwrap().unwrap();
             assert_eq!(y.len(), 256);
             assert!(y.iter().all(|v| v.is_finite()));
         }
@@ -541,25 +750,7 @@ mod tests {
         // Deterministic overload: the kernel signals entry and then
         // blocks on a gate, so the test controls exactly when the
         // single queue slot frees up.
-        let (ctx, _) = context();
-        let engine = ctx.engine_arc();
-        let (started_tx, started_rx) = mpsc::channel::<()>();
-        let (gate_tx, gate_rx) = mpsc::channel::<()>();
-        let svc: SpmvService<f64> = SpmvService::spawn_bounded(
-            move || {
-                let fb = engine.format_bytes();
-                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
-                    started_tx.send(()).unwrap();
-                    gate_rx.recv().unwrap();
-                    engine.spmv_batch(xs, ys)
-                });
-                Ok((kernel, fb))
-            },
-            256,
-            16,
-            1, // queue bound: one waiter
-        )
-        .unwrap();
+        let (svc, started_rx, gate_tx) = gated_service(16, 1, false);
         let client = svc.client();
         assert_eq!(client.queue_bound(), 1);
         // r1 is popped by the service thread and blocks inside the
@@ -586,8 +777,8 @@ mod tests {
         // the accepted requests complete normally.
         gate_tx.send(()).unwrap();
         gate_tx.send(()).unwrap();
-        assert_eq!(rx1.recv().unwrap().len(), 256);
-        assert_eq!(rx2.recv().unwrap().len(), 256);
+        assert_eq!(rx1.recv().unwrap().unwrap().len(), 256);
+        assert_eq!(rx2.recv().unwrap().unwrap().len(), 256);
         drop(gate_tx); // further drains (shutdown path) must not block
     }
 
@@ -597,25 +788,7 @@ mod tests {
         // histogram must stay disjoint — a shed request's width is
         // never recorded (widths are recorded only when a drained
         // batch executes), so count(widths) == batches exactly.
-        let (ctx, _) = context();
-        let engine = ctx.engine_arc();
-        let (started_tx, started_rx) = mpsc::channel::<()>();
-        let (gate_tx, gate_rx) = mpsc::channel::<()>();
-        let svc: SpmvService<f64> = SpmvService::spawn_bounded(
-            move || {
-                let fb = engine.format_bytes();
-                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
-                    started_tx.send(()).unwrap();
-                    gate_rx.recv().unwrap();
-                    engine.spmv_batch(xs, ys)
-                });
-                Ok((kernel, fb))
-            },
-            256,
-            16,
-            1,
-        )
-        .unwrap();
+        let (svc, started_rx, gate_tx) = gated_service(16, 1, false);
         let client = svc.client();
         let rx1 = client.submit(vec![1.0; 256]).unwrap();
         started_rx.recv().unwrap(); // r1 is inside the kernel
@@ -625,8 +798,8 @@ mod tests {
         }
         gate_tx.send(()).unwrap();
         gate_tx.send(()).unwrap();
-        rx1.recv().unwrap();
-        rx2.recv().unwrap();
+        rx1.recv().unwrap().unwrap();
+        rx2.recv().unwrap().unwrap();
         // Pinned counts: exactly 2 executed batches of width 1, 3 sheds.
         assert_eq!(svc.metrics.shed.load(Ordering::Relaxed), 3);
         assert_eq!(svc.metrics.batches.load(Ordering::Relaxed), 2);
@@ -640,25 +813,7 @@ mod tests {
         // Deterministic gate-driven schedule (same rig as
         // full_queue_sheds): force a shed, watch the limit halve before
         // the next drain, then watch idle drains double it back.
-        let (ctx, _) = context();
-        let engine = ctx.engine_arc();
-        let (started_tx, started_rx) = mpsc::channel::<()>();
-        let (gate_tx, gate_rx) = mpsc::channel::<()>();
-        let svc: SpmvService<f64> = SpmvService::spawn_adaptive(
-            move || {
-                let fb = engine.format_bytes();
-                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
-                    started_tx.send(()).unwrap();
-                    gate_rx.recv().unwrap();
-                    engine.spmv_batch(xs, ys)
-                });
-                Ok((kernel, fb))
-            },
-            256,
-            8, // cap
-            1, // queue bound: one waiter
-        )
-        .unwrap();
+        let (svc, started_rx, gate_tx) = gated_service(8, 1, true);
         let client = svc.client();
         assert_eq!(svc.metrics.adaptive_max_batch.load(Ordering::Relaxed), 8);
         // r1 enters the kernel and blocks; r2 fills the queue slot; r3
@@ -673,15 +828,15 @@ mod tests {
         started_rx.recv().unwrap(); // r2's drain is past the adjustment
         assert_eq!(svc.metrics.adaptive_max_batch.load(Ordering::Relaxed), 4);
         gate_tx.send(()).unwrap();
-        rx1.recv().unwrap();
-        rx2.recv().unwrap();
+        rx1.recv().unwrap().unwrap();
+        rx2.recv().unwrap().unwrap();
         // Idle traffic: each drain pulls one request (< limit) with no
         // new sheds, so the limit doubles back to the cap.
         let rx4 = client.submit(vec![4.0; 256]).unwrap();
         started_rx.recv().unwrap();
         assert_eq!(svc.metrics.adaptive_max_batch.load(Ordering::Relaxed), 8);
         gate_tx.send(()).unwrap();
-        rx4.recv().unwrap();
+        rx4.recv().unwrap().unwrap();
         drop(gate_tx);
     }
 
@@ -699,6 +854,7 @@ mod tests {
         let engine = ctx.engine_arc();
         let svc: SpmvService<f64> = SpmvService::spawn_adaptive(
             move || {
+                let engine = engine.clone();
                 let fb = engine.format_bytes();
                 let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
                 Ok((kernel, fb))
@@ -733,6 +889,7 @@ mod tests {
         let engine = ctx.engine_arc();
         let svc: SpmvService<f64> = SpmvService::spawn_bounded(
             move || {
+                let engine = engine.clone();
                 let fb = engine.format_bytes();
                 let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
                 Ok((kernel, fb))
@@ -780,5 +937,176 @@ mod tests {
             1,
         );
         assert!(r.is_err());
+    }
+
+    /// Service whose kernel panics on exactly the `panic_on`-th kernel
+    /// call (counted across respawns — the counter is shared), serving
+    /// the 256-row Poisson context.
+    fn faulting_service(panic_on: usize) -> (SpmvService<f64>, crate::sparse::csr::Csr<f64>) {
+        let (ctx, a) = context();
+        let engine = ctx.engine_arc();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let svc = SpmvService::spawn(
+            move || {
+                let engine = engine.clone();
+                let calls = calls.clone();
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                    let call = calls.fetch_add(1, Ordering::Relaxed) + 1;
+                    if call == panic_on {
+                        panic!("injected engine fault on kernel call {call}");
+                    }
+                    engine.spmv_batch(xs, ys)
+                });
+                Ok((kernel, fb))
+            },
+            256,
+            8,
+        )
+        .unwrap();
+        (svc, a)
+    }
+
+    #[test]
+    fn engine_panic_is_typed_fault_and_service_keeps_serving() {
+        // The ISSUE 6 satellite contract: a worker panic loses only the
+        // poisoned batch — a request submitted after the fault
+        // round-trips successfully and respawns == 1.
+        let (svc, a) = faulting_service(2);
+        let client = svc.client();
+        let x: Vec<f64> = (0..256).map(|i| ((i % 13) as f64) * 0.25 - 1.0).collect();
+        // Call 1 executes normally.
+        assert!(client.spmv(x.clone()).is_ok());
+        // Call 2 panics inside the kernel: the request gets the typed
+        // fault (the panic never escapes the service).
+        match client.spmv(x.clone()) {
+            Err(EhybError::EngineFault(msg)) => {
+                assert!(msg.contains("injected engine fault"), "{msg}");
+            }
+            other => panic!("expected EngineFault, got {other:?}"),
+        }
+        // Call 3 runs on the respawned engine and is correct.
+        let y = client.spmv(x.clone()).unwrap();
+        let mut want = vec![0.0; 256];
+        a.spmv(&x, &mut want);
+        for i in 0..256 {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+        assert_eq!(svc.metrics.faults.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
+        // The poisoned batch never entered the execution accounting.
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.metrics.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.metrics.batch_width.count(), 2);
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_without_kernel_width() {
+        let (svc, started_rx, gate_tx) = gated_service(8, 4, false);
+        let client = svc.client();
+        // r1 blocks inside the kernel; r2 (already expired) queues
+        // behind it.
+        let rx1 = client.submit(vec![1.0; 256]).unwrap();
+        started_rx.recv().unwrap();
+        let rx2 = client
+            .submit_with_deadline(vec![2.0; 256], Some(Instant::now() - Duration::from_millis(1)))
+            .unwrap();
+        gate_tx.send(()).unwrap(); // r1 completes
+        assert_eq!(rx1.recv().unwrap().unwrap().len(), 256);
+        // r2's drain triages it out before staging: typed error, no
+        // kernel call (the gate is NOT released again), no width.
+        match rx2.recv().unwrap() {
+            Err(EhybError::DeadlineExceeded) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(svc.metrics.deadline_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.batch_width.count(), 1);
+        // A fresh request with a generous deadline still round-trips.
+        let rx3 = client
+            .submit_with_deadline(vec![3.0; 256], Some(Instant::now() + Duration::from_secs(60)))
+            .unwrap();
+        started_rx.recv().unwrap();
+        gate_tx.send(()).unwrap();
+        assert_eq!(rx3.recv().unwrap().unwrap().len(), 256);
+        assert_eq!(svc.metrics.deadline_misses.load(Ordering::Relaxed), 1);
+        drop(gate_tx);
+    }
+
+    #[test]
+    fn retry_recovers_from_engine_fault() {
+        // First kernel call panics; the retry lands on the respawned
+        // engine and succeeds — recovery inside the policy budget with
+        // no caller-visible fault.
+        let (svc, a) = faulting_service(1);
+        let client = svc.client();
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::ZERO,
+            max_delay: Duration::ZERO,
+            seed: 7,
+        };
+        let x: Vec<f64> = (0..256).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let y = client.spmv_with_retry(x.clone(), &policy).unwrap();
+        let mut want = vec![0.0; 256];
+        a.spmv(&x, &mut want);
+        for i in 0..256 {
+            assert!((y[i] - want[i]).abs() < 1e-12);
+        }
+        assert_eq!(svc.metrics.faults.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn retry_budget_exhausts_with_typed_fault() {
+        // Every kernel call panics: the policy's budget runs out and
+        // the last typed fault surfaces (no infinite retry, no hang).
+        let (ctx, _) = context();
+        let engine = ctx.engine_arc();
+        let svc: SpmvService<f64> = SpmvService::spawn(
+            move || {
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> =
+                    Box::new(move |_xs, _ys| panic!("injected: always faulting"));
+                Ok((kernel, fb))
+            },
+            256,
+            8,
+        )
+        .unwrap();
+        let client = svc.client();
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            base_delay: Duration::ZERO,
+            max_delay: Duration::ZERO,
+            seed: 7,
+        };
+        match client.spmv_with_retry(vec![1.0; 256], &policy) {
+            Err(EhybError::EngineFault(_)) => {}
+            other => panic!("expected EngineFault, got {other:?}"),
+        }
+        assert_eq!(svc.metrics.faults.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn retry_never_retries_permanent_errors() {
+        let (svc, _) = service();
+        let client = svc.client();
+        // A dimension error with a pathological backoff: if the policy
+        // retried it, this test would sleep ~20 s. It must return
+        // immediately instead.
+        let policy = RetryPolicy {
+            max_attempts: 5,
+            base_delay: Duration::from_secs(5),
+            max_delay: Duration::from_secs(5),
+            seed: 1,
+        };
+        let t0 = Instant::now();
+        match client.spmv_with_retry(vec![1.0; 3], &policy) {
+            Err(EhybError::DimensionMismatch { expected: 256, got: 3, .. }) => {}
+            other => panic!("expected DimensionMismatch, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(1), "permanent error must not back off");
     }
 }

@@ -15,11 +15,42 @@ pub struct SolverConfig {
     pub rtol: f64,
     /// Record ‖r‖ every iteration (the fem_solver example logs this).
     pub track_history: bool,
+    /// Declare [`SolveStatus::Diverged`] after this many *consecutive*
+    /// iterations with a growing relative residual. 0 (the default)
+    /// disables the check — existing trajectories are untouched; the
+    /// monitor only ever stops iterations that were already failing.
+    pub divergence_window: usize,
 }
 
 impl Default for SolverConfig {
     fn default() -> Self {
-        Self { max_iters: 1000, rtol: 1e-8, track_history: true }
+        Self { max_iters: 1000, rtol: 1e-8, track_history: true, divergence_window: 0 }
+    }
+}
+
+/// How a solve ended. Replaces the old bare `converged: bool`: a
+/// breakdown (a Krylov denominator collapsed — the method cannot
+/// continue) and a divergence (the residual grew
+/// [`SolverConfig::divergence_window`] iterations in a row) are
+/// distinct, actionable failures, and `MaxIters` means "ran out of
+/// budget while still making progress".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveStatus {
+    Converged,
+    MaxIters,
+    Breakdown,
+    Diverged,
+}
+
+impl SolveStatus {
+    /// Stable lowercase label for tables and CLI output.
+    pub fn name(self) -> &'static str {
+        match self {
+            SolveStatus::Converged => "converged",
+            SolveStatus::MaxIters => "max-iters",
+            SolveStatus::Breakdown => "breakdown",
+            SolveStatus::Diverged => "diverged",
+        }
     }
 }
 
@@ -27,11 +58,50 @@ impl Default for SolverConfig {
 pub struct SolveReport {
     pub solver: &'static str,
     pub iters: usize,
-    pub converged: bool,
+    pub status: SolveStatus,
     pub final_rel_residual: f64,
     pub spmv_count: usize,
     pub wall_secs: f64,
     pub history: Vec<f64>,
+}
+
+impl SolveReport {
+    /// Derived accessor over [`Self::status`] (the pre-0.6 boolean).
+    pub fn converged(&self) -> bool {
+        matches!(self.status, SolveStatus::Converged)
+    }
+}
+
+/// Tracks consecutive residual growth; fires when the run reaches the
+/// configured window. `window == 0` disables it (never fires), so the
+/// default config observes nothing and changes no trajectory.
+pub struct DivergenceMonitor {
+    window: usize,
+    prev: f64,
+    run: usize,
+}
+
+impl DivergenceMonitor {
+    pub fn new(window: usize) -> Self {
+        Self { window, prev: f64::INFINITY, run: 0 }
+    }
+
+    /// Feed one relative residual; true when it has grown `window`
+    /// consecutive iterations (NaN counts as growth — a poisoned
+    /// iterate never compares greater, but it is certainly not
+    /// progress).
+    pub fn observe(&mut self, rel_residual: f64) -> bool {
+        if self.window == 0 {
+            return false;
+        }
+        if rel_residual > self.prev || rel_residual.is_nan() {
+            self.run += 1;
+        } else {
+            self.run = 0;
+        }
+        self.prev = rel_residual;
+        self.run >= self.window
+    }
 }
 
 /// Outcome of one PCG update.
@@ -39,6 +109,7 @@ enum StepOutcome {
     Continue,
     Converged,
     Breakdown,
+    Diverged,
 }
 
 /// One preconditioned-CG update given `ap = A p` — the shared iteration
@@ -57,6 +128,7 @@ fn cg_step<S: Scalar>(
     rtol: f64,
     track_history: bool,
     history: &mut Vec<f64>,
+    monitor: &mut DivergenceMonitor,
 ) -> StepOutcome {
     let n = x.len();
     let den = dot(p, ap).to_f64();
@@ -72,6 +144,9 @@ fn cg_step<S: Scalar>(
     }
     if rn < rtol {
         return StepOutcome::Converged;
+    }
+    if monitor.observe(rn) {
+        return StepOutcome::Diverged;
     }
     precond.apply(r, z);
     let rz_new = dot(r, z);
@@ -112,8 +187,9 @@ pub fn cg<S: Scalar>(
     let mut rz = dot(&r, &z);
     let mut spmv_count = 1usize;
     let mut history = Vec::new();
-    let mut converged = false;
+    let mut status = SolveStatus::MaxIters;
     let mut iters = 0usize;
+    let mut monitor = DivergenceMonitor::new(cfg.divergence_window);
 
     for k in 0..cfg.max_iters {
         iters = k + 1;
@@ -132,13 +208,21 @@ pub fn cg<S: Scalar>(
             cfg.rtol,
             cfg.track_history,
             &mut history,
+            &mut monitor,
         ) {
             StepOutcome::Continue => {}
             StepOutcome::Converged => {
-                converged = true;
+                status = SolveStatus::Converged;
                 break;
             }
-            StepOutcome::Breakdown => break,
+            StepOutcome::Breakdown => {
+                status = SolveStatus::Breakdown;
+                break;
+            }
+            StepOutcome::Diverged => {
+                status = SolveStatus::Diverged;
+                break;
+            }
         }
     }
     let final_rel_residual = norm2(&r).to_f64() / bnorm;
@@ -147,7 +231,7 @@ pub fn cg<S: Scalar>(
         SolveReport {
             solver: "cg",
             iters,
-            converged,
+            status,
             final_rel_residual,
             spmv_count,
             wall_secs: timer.elapsed_secs(),
@@ -197,10 +281,11 @@ pub fn cg_many<S: Scalar>(
         rz: S,
         bnorm: f64,
         active: bool,
-        converged: bool,
+        status: SolveStatus,
         iters: usize,
         spmv_count: usize,
         history: Vec<f64>,
+        monitor: DivergenceMonitor,
     }
 
     // Persistent contiguous batch storage for the fused calls: inputs
@@ -234,10 +319,11 @@ pub fn cg_many<S: Scalar>(
                 rz,
                 bnorm: norm2(&bs[i]).to_f64().max(1e-300),
                 active: true,
-                converged: false,
+                status: SolveStatus::MaxIters,
                 iters: 0,
                 spmv_count: 1,
                 history: Vec::new(),
+                monitor: DivergenceMonitor::new(cfg.divergence_window),
             }
         })
         .collect();
@@ -277,13 +363,21 @@ pub fn cg_many<S: Scalar>(
                 cfg.rtol,
                 cfg.track_history,
                 &mut s.history,
+                &mut s.monitor,
             ) {
                 StepOutcome::Continue => {}
                 StepOutcome::Converged => {
-                    s.converged = true;
+                    s.status = SolveStatus::Converged;
                     s.active = false;
                 }
-                StepOutcome::Breakdown => s.active = false,
+                StepOutcome::Breakdown => {
+                    s.status = SolveStatus::Breakdown;
+                    s.active = false;
+                }
+                StepOutcome::Diverged => {
+                    s.status = SolveStatus::Diverged;
+                    s.active = false;
+                }
             }
         }
     }
@@ -296,7 +390,7 @@ pub fn cg_many<S: Scalar>(
                 SolveReport {
                     solver: "cg-many",
                     iters: s.iters,
-                    converged: s.converged,
+                    status: s.status,
                     final_rel_residual,
                     spmv_count: s.spmv_count,
                     wall_secs: timer.elapsed_secs(),
@@ -333,8 +427,9 @@ pub fn bicgstab<S: Scalar>(
     let mut p = vec![S::ZERO; n];
     let mut spmv_count = 1usize;
     let mut history = Vec::new();
-    let mut converged = false;
+    let mut status = SolveStatus::MaxIters;
     let mut iters = 0usize;
+    let mut monitor = DivergenceMonitor::new(cfg.divergence_window);
     let mut phat = vec![S::ZERO; n];
     let mut shat = vec![S::ZERO; n];
     let mut s = vec![S::ZERO; n];
@@ -344,6 +439,7 @@ pub fn bicgstab<S: Scalar>(
         iters = k + 1;
         let rho_new = dot(&r0, &r);
         if rho_new.to_f64().abs() < 1e-300 {
+            status = SolveStatus::Breakdown;
             break;
         }
         if k == 0 {
@@ -362,6 +458,7 @@ pub fn bicgstab<S: Scalar>(
         spmv_count += 1;
         let den = dot(&r0, &v).to_f64();
         if den.abs() < 1e-300 {
+            status = SolveStatus::Breakdown;
             break;
         }
         alpha = S::from_f64(rho.to_f64() / den);
@@ -374,7 +471,7 @@ pub fn bicgstab<S: Scalar>(
             if cfg.track_history {
                 history.push(snorm);
             }
-            converged = true;
+            status = SolveStatus::Converged;
             r.copy_from_slice(&s);
             break;
         }
@@ -383,6 +480,7 @@ pub fn bicgstab<S: Scalar>(
         spmv_count += 1;
         let tt = dot(&t, &t).to_f64();
         if tt < 1e-300 {
+            status = SolveStatus::Breakdown;
             break;
         }
         omega = S::from_f64(dot(&t, &s).to_f64() / tt);
@@ -395,10 +493,15 @@ pub fn bicgstab<S: Scalar>(
             history.push(rn);
         }
         if rn < cfg.rtol {
-            converged = true;
+            status = SolveStatus::Converged;
+            break;
+        }
+        if monitor.observe(rn) {
+            status = SolveStatus::Diverged;
             break;
         }
         if omega.to_f64().abs() < 1e-300 {
+            status = SolveStatus::Breakdown;
             break;
         }
     }
@@ -408,7 +511,7 @@ pub fn bicgstab<S: Scalar>(
         SolveReport {
             solver: "bicgstab",
             iters,
-            converged,
+            status,
             final_rel_residual,
             spmv_count,
             wall_secs: timer.elapsed_secs(),
@@ -442,7 +545,8 @@ mod tests {
         let b = rhs(400);
         let pre = Jacobi::new(&a);
         let (x, rep) = cg(|v, y| a.spmv(v, y), &b, &vec![0.0; 400], &pre, &SolverConfig::default());
-        assert!(rep.converged, "{rep:?}");
+        assert!(rep.converged(), "{rep:?}");
+        assert_eq!(rep.status, SolveStatus::Converged);
         assert!(residual(&a, &x, &b) < 1e-7);
         assert!(rep.history.len() == rep.iters);
     }
@@ -479,7 +583,7 @@ mod tests {
         let pre = Spai0::new(&a);
         let (x, rep) =
             bicgstab(|v, y| a.spmv(v, y), &b, &vec![0.0; n], &pre, &SolverConfig::default());
-        assert!(rep.converged, "{rep:?}");
+        assert!(rep.converged(), "{rep:?}");
         assert!(residual(&a, &x, &b) < 1e-7);
     }
 
@@ -501,7 +605,7 @@ mod tests {
         let cfg = SolverConfig::default();
         let (x1, r1) = cg(|v, y| a.spmv(v, y), &b, &vec![0.0; n], &pre, &cfg);
         let (x2, r2) = cg(|v, y| engine.spmv(v, y), &b, &vec![0.0; n], &pre, &cfg);
-        assert!(r1.converged && r2.converged);
+        assert!(r1.converged() && r2.converged());
         // Same Krylov trajectory up to rounding: same iteration count ±1.
         assert!((r1.iters as i64 - r2.iters as i64).abs() <= 1, "{} vs {}", r1.iters, r2.iters);
         let diff: f64 =
@@ -549,7 +653,7 @@ mod tests {
         assert_eq!(many.len(), 3);
         for (i, (x, rep)) in many.iter().enumerate() {
             let (x1, rep1) = cg(|v, y: &mut [f64]| engine.spmv(v, y), &bs[i], &x0s[i], &pre, &cfg);
-            assert!(rep.converged && rep1.converged, "system {i}: {rep:?} vs {rep1:?}");
+            assert!(rep.converged() && rep1.converged(), "system {i}: {rep:?} vs {rep1:?}");
             assert_eq!(rep.iters, rep1.iters, "system {i} diverged from standalone CG");
             assert_eq!(x, &x1, "system {i} solution differs");
             assert_eq!(rep.history, rep1.history, "system {i} residual history differs");
@@ -580,7 +684,7 @@ mod tests {
             &SolverConfig::default(),
         );
         for (i, (x, rep)) in res.iter().enumerate() {
-            assert!(rep.converged, "system {i}: {rep:?}");
+            assert!(rep.converged(), "system {i}: {rep:?}");
             assert!(residual(&a, x, &bs[i]) < 1e-7, "system {i}");
         }
     }
@@ -601,5 +705,132 @@ mod tests {
         let (x, rep) = cg(|v, y| a.spmv(v, y), &b, &vec![0.0; 64], &pre, &SolverConfig::default());
         assert!(rep.final_rel_residual < 1e-8);
         assert!(x.iter().all(|&v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn status_names_are_stable() {
+        assert_eq!(SolveStatus::Converged.name(), "converged");
+        assert_eq!(SolveStatus::MaxIters.name(), "max-iters");
+        assert_eq!(SolveStatus::Breakdown.name(), "breakdown");
+        assert_eq!(SolveStatus::Diverged.name(), "diverged");
+    }
+
+    #[test]
+    fn out_of_budget_reports_max_iters() {
+        let a = poisson2d::<f64>(20, 20);
+        let b = rhs(400);
+        let pre = Identity;
+        let cfg = SolverConfig { max_iters: 2, ..Default::default() };
+        let (_, rep) = cg(|v, y| a.spmv(v, y), &b, &vec![0.0; 400], &pre, &cfg);
+        assert_eq!(rep.status, SolveStatus::MaxIters);
+        assert!(!rep.converged());
+        assert_eq!(rep.iters, 2);
+    }
+
+    #[test]
+    fn zero_operator_reports_breakdown() {
+        // A ≡ 0 collapses the first CG denominator: p·Ap = 0.
+        let b = vec![1.0f64; 8];
+        let (_, rep) =
+            cg(|_v, y: &mut [f64]| y.fill(0.0), &b, &vec![0.0; 8], &Identity, &SolverConfig::default());
+        assert_eq!(rep.status, SolveStatus::Breakdown);
+        assert!(!rep.converged());
+        assert_eq!(rep.iters, 1);
+        // BiCGSTAB breaks down on the same operator (r0·v = 0).
+        let (_, rep) = bicgstab(
+            |_v, y: &mut [f64]| y.fill(0.0),
+            &b,
+            &vec![0.0; 8],
+            &Identity,
+            &SolverConfig::default(),
+        );
+        assert_eq!(rep.status, SolveStatus::Breakdown);
+    }
+
+    #[test]
+    fn growing_residual_reports_diverged_within_window() {
+        // Nonsymmetric circulant operator A = I + P (P = cyclic down
+        // shift): CG's assumptions are violated and the residual grows
+        // every iteration (hand trace: ‖r‖ = 1 after iter 1, √3 after
+        // iter 2), so window = 1 must fire at iteration 2.
+        let n = 8;
+        let spmv = |x: &[f64], y: &mut [f64]| {
+            for i in 0..n {
+                y[i] = x[i] + x[(i + n - 1) % n];
+            }
+        };
+        let mut b = vec![0.0f64; n];
+        b[0] = 1.0;
+        let cfg = SolverConfig { divergence_window: 1, ..Default::default() };
+        let (_, rep) = cg(spmv, &b, &vec![0.0; n], &Identity, &cfg);
+        assert_eq!(rep.status, SolveStatus::Diverged, "{rep:?}");
+        assert_eq!(rep.iters, 2);
+        assert!(!rep.converged());
+        // With the monitor disabled (the default window = 0), the same
+        // solve never reports divergence and keeps iterating past the
+        // point where the window would have fired — trajectories
+        // without an opt-in window are untouched.
+        let cfg0 = SolverConfig { max_iters: 50, ..Default::default() };
+        let (_, rep0) = cg(spmv, &b, &vec![0.0; n], &Identity, &cfg0);
+        assert_ne!(rep0.status, SolveStatus::Diverged);
+        assert!(rep0.iters > 2);
+    }
+
+    #[test]
+    fn divergence_monitor_requires_consecutive_growth() {
+        let mut m = DivergenceMonitor::new(2);
+        assert!(!m.observe(1.0)); // first sample never fires
+        assert!(!m.observe(2.0)); // run = 1
+        assert!(!m.observe(1.5)); // shrank: run resets
+        assert!(!m.observe(2.0)); // run = 1
+        assert!(m.observe(3.0)); // run = 2 → fire
+        // NaN counts as growth.
+        let mut m = DivergenceMonitor::new(1);
+        assert!(!m.observe(1.0));
+        assert!(m.observe(f64::NAN));
+        // Window 0 never fires.
+        let mut m = DivergenceMonitor::new(0);
+        assert!(!m.observe(1.0));
+        assert!(!m.observe(f64::INFINITY));
+    }
+
+    #[test]
+    fn cg_many_reports_per_system_status() {
+        // One well-posed system converges while its batch-mate hits the
+        // iteration budget: statuses are tracked per system.
+        let a = poisson2d::<f64>(16, 16);
+        let n = a.nrows();
+        let bs = vec![rhs(n), rhs(n)];
+        let x0s = vec![vec![0.0; n]; 2];
+        let pre = Jacobi::new(&a);
+        let cfg = SolverConfig { max_iters: 3, ..Default::default() };
+        let res = cg_many(
+            |xs, ys| {
+                for bcol in 0..xs.width() {
+                    a.spmv(xs.col(bcol), ys.col_mut(bcol));
+                }
+            },
+            &bs,
+            &x0s,
+            &pre,
+            &cfg,
+        );
+        for (_, rep) in &res {
+            assert_eq!(rep.status, SolveStatus::MaxIters, "{rep:?}");
+        }
+        let res = cg_many(
+            |xs, ys| {
+                for bcol in 0..xs.width() {
+                    a.spmv(xs.col(bcol), ys.col_mut(bcol));
+                }
+            },
+            &bs,
+            &x0s,
+            &pre,
+            &SolverConfig::default(),
+        );
+        for (_, rep) in &res {
+            assert_eq!(rep.status, SolveStatus::Converged, "{rep:?}");
+        }
     }
 }

@@ -86,13 +86,13 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
     let _ = writeln!(s, "### {title}\n");
     let _ = writeln!(
         s,
-        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p99 (ms) | shed | batch limit |"
+        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p99 (ms) | shed | faults | respawns | deadline misses | batch limit |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|---|");
     let limit = m.adaptive_max_batch.load(Ordering::Relaxed);
     let _ = writeln!(
         s,
-        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {} | {} |",
+        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {} | {} | {} | {} | {} |",
         m.requests.load(Ordering::Relaxed),
         m.batches.load(Ordering::Relaxed),
         m.batch_width.mean(),
@@ -101,6 +101,9 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
         1e3 * m.spmv_latency.mean_secs(),
         1e3 * m.spmv_latency.quantile_secs(0.99),
         m.shed.load(Ordering::Relaxed),
+        m.faults.load(Ordering::Relaxed),
+        m.respawns.load(Ordering::Relaxed),
+        m.deadline_misses.load(Ordering::Relaxed),
         // 0 = fixed-limit service; adaptive services publish the live
         // shed-rate-driven limit here.
         if limit == 0 { "fixed".to_string() } else { limit.to_string() },
@@ -113,6 +116,58 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
         }
     }
     let _ = writeln!(s);
+    s
+}
+
+/// A context's degradation ledger as markdown: the counters from
+/// [`crate::resilience::HealthReport`] plus the (capped) event log —
+/// the operator-facing view of `ctx.health()`.
+pub fn health_markdown(title: &str, h: &crate::resilience::HealthReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(
+        s,
+        "| status | engine fallbacks | solver restarts | non-finite outputs | rejected inputs |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|");
+    let status = if h.healthy() {
+        "healthy"
+    } else if h.degraded() {
+        "degraded"
+    } else {
+        "recovering"
+    };
+    let _ = writeln!(
+        s,
+        "| {} | {} | {} | {} | {} |",
+        status, h.engine_fallbacks, h.solver_restarts, h.nonfinite_outputs, h.rejected_inputs
+    );
+    if !h.events.is_empty() {
+        let _ = writeln!(s);
+        for ev in &h.events {
+            let _ = writeln!(s, "- {ev}");
+        }
+    }
+    s
+}
+
+/// Solve outcomes as markdown — one row per labelled
+/// [`crate::coordinator::SolveReport`], with the typed
+/// [`crate::coordinator::SolveStatus`] spelled out (converged is no
+/// longer a bare boolean: breakdown and divergence are distinct,
+/// actionable outcomes).
+pub fn solve_markdown(title: &str, rows: &[super::tables::SolveRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(s, "| case | solver | status | iters | rel residual | spmv calls |");
+    let _ = writeln!(s, "|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {:.3e} | {} |",
+            r.label, r.solver, r.status, r.iters, r.rel_residual, r.spmv_count
+        );
+    }
     s
 }
 
@@ -265,11 +320,59 @@ mod tests {
         m.spmv_latency.record(0.002);
         let md = service_markdown("Service", &m);
         assert!(md.contains("| 12 | 3 | 4.00 | 4 | 1024 |"), "{md}");
-        assert!(md.contains("| 2 | fixed |\n"), "shed/limit columns missing: {md}");
+        assert!(md.contains("| 2 | 0 | 0 | 0 | fixed |\n"), "shed/fault/limit columns: {md}");
         assert!(md.contains("batch widths: 4+:3"), "{md}");
         // An adaptive service publishes its live limit instead.
         m.adaptive_max_batch.store(4, Ordering::Relaxed);
-        assert!(service_markdown("S", &m).contains("| 2 | 4 |\n"));
+        assert!(service_markdown("S", &m).contains("| 2 | 0 | 0 | 0 | 4 |\n"));
+        // Resilience counters land in their own columns.
+        m.faults.fetch_add(1, Ordering::Relaxed);
+        m.respawns.fetch_add(1, Ordering::Relaxed);
+        m.deadline_misses.fetch_add(5, Ordering::Relaxed);
+        assert!(service_markdown("S", &m).contains("| 2 | 1 | 1 | 5 | 4 |\n"));
+    }
+
+    #[test]
+    fn health_markdown_shows_status_and_events() {
+        use crate::resilience::Health;
+        let h = Health::default();
+        let md = health_markdown("Health", &h.report());
+        assert!(md.contains("| healthy | 0 | 0 | 0 | 0 |"), "{md}");
+        h.record_engine_fallback("ehyb plan failed; csr-vector serving");
+        h.record_rejected_input("x[3] is NaN");
+        let md = health_markdown("Health", &h.report());
+        assert!(md.contains("| degraded | 1 | 0 | 0 | 1 |"), "{md}");
+        assert!(md.contains("- engine fallback: ehyb plan failed"), "{md}");
+        // Guarded-but-not-downgraded contexts are "recovering".
+        let h2 = Health::default();
+        h2.record_solver_restart("cg breakdown at iter 2");
+        assert!(health_markdown("H", &h2.report()).contains("| recovering | 0 | 1 | 0 | 0 |"));
+    }
+
+    #[test]
+    fn solve_markdown_spells_out_status() {
+        use crate::harness::tables::SolveRow;
+        let rows = vec![
+            SolveRow {
+                label: "poisson2d-64 + ehyb".into(),
+                solver: "cg",
+                status: "converged",
+                iters: 41,
+                rel_residual: 3.2e-9,
+                spmv_count: 42,
+            },
+            SolveRow {
+                label: "zero-diag".into(),
+                solver: "bicgstab",
+                status: "breakdown",
+                iters: 1,
+                rel_residual: 1.0,
+                spmv_count: 2,
+            },
+        ];
+        let md = solve_markdown("Solves", &rows);
+        assert!(md.contains("| poisson2d-64 + ehyb | cg | converged | 41 | 3.200e-9 | 42 |"), "{md}");
+        assert!(md.contains("| zero-diag | bicgstab | breakdown | 1 |"), "{md}");
     }
 
     #[test]

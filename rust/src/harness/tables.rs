@@ -70,6 +70,36 @@ pub fn figure_series<S: Scalar>(runs: &[MatrixRun]) -> FigureSeries {
     }
 }
 
+/// One row of the solve-outcome table: a labelled
+/// [`crate::coordinator::SolveReport`] with its typed status spelled
+/// out (rendered by `harness::report::solve_markdown`).
+#[derive(Clone, Debug)]
+pub struct SolveRow {
+    /// Case label, e.g. "poisson2d-64 + ehyb".
+    pub label: String,
+    pub solver: &'static str,
+    /// [`crate::coordinator::SolveStatus::name`] of the outcome.
+    pub status: &'static str,
+    pub iters: usize,
+    pub rel_residual: f64,
+    pub spmv_count: usize,
+}
+
+/// Flatten labelled reports into table rows.
+pub fn solve_rows(items: &[(&str, &crate::coordinator::SolveReport)]) -> Vec<SolveRow> {
+    items
+        .iter()
+        .map(|(label, rep)| SolveRow {
+            label: (*label).to_string(),
+            solver: rep.solver,
+            status: rep.status.name(),
+            iters: rep.iters,
+            rel_residual: rep.final_rel_residual,
+            spmv_count: rep.spmv_count,
+        })
+        .collect()
+}
+
 /// Figure 6 data point: preprocessing phases in units of one SpMV.
 #[derive(Clone, Debug)]
 pub struct Fig6Row {
@@ -108,6 +138,25 @@ mod tests {
             run_matrix("a", "CFD", &poisson3d::<f64>(8, 8, 8), &cfg, &dev).unwrap(),
             run_matrix("b", "3D", &stencil27::<f64>(7, 7, 7, 1), &cfg, &dev).unwrap(),
         ]
+    }
+
+    #[test]
+    fn solve_rows_carry_status_names() {
+        use crate::coordinator::{cg, Jacobi, SolverConfig};
+        let a = crate::sparse::gen::poisson2d::<f64>(12, 12);
+        let n = a.nrows();
+        let b: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 11) as f64 - 5.0).collect();
+        let pre = Jacobi::new(&a);
+        let (_, good) = cg(|v, y| a.spmv(v, y), &b, &vec![0.0; n], &pre, &SolverConfig::default());
+        let cfg = SolverConfig { max_iters: 1, ..Default::default() };
+        let (_, capped) = cg(|v, y| a.spmv(v, y), &b, &vec![0.0; n], &pre, &cfg);
+        let rows = solve_rows(&[("poisson + jacobi", &good), ("capped", &capped)]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].status, "converged");
+        assert_eq!(rows[0].solver, "cg");
+        assert_eq!(rows[1].status, "max-iters");
+        assert_eq!(rows[1].iters, 1);
+        assert!(rows[0].rel_residual < 1e-8);
     }
 
     #[test]

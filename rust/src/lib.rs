@@ -148,6 +148,63 @@
 //!   Row-local engines stay bit-identical (the permute preserves
 //!   per-row entry order); tuned plans key on the reordered
 //!   fingerprint, so cached winners survive restarts per ordering.
+//!
+//! ## Robustness
+//!
+//! The [`resilience`] layer hardens the serving path end to end; every
+//! piece is opt-in and the defaults are bit-identical to 0.5:
+//!
+//! ```no_run
+//! # // (no_run: same PJRT rpath caveat as the quickstart; the flow is
+//! # // executed by rust/tests/resilience.rs.)
+//! use ehyb::sparse::gen::poisson2d;
+//! use ehyb::{EngineKind, GuardLevel, RetryPolicy, SpmvContext};
+//!
+//! let m = poisson2d::<f64>(32, 32);
+//! let n = m.nrows();
+//!
+//! // Degraded mode + ingress guards: a failed EHYB build downgrades to
+//! // the csr-vector baseline instead of failing (recorded, never
+//! // silent), and non-finite inputs are rejected with a typed error
+//! // before they can poison an iterate.
+//! let ctx = SpmvContext::builder(m)
+//!     .engine(EngineKind::Ehyb)
+//!     .fallback(true)
+//!     .guard(GuardLevel::Reject)
+//!     .build()?;
+//! assert!(ctx.health().healthy()); // no downgrade was needed here
+//!
+//! // Panic-isolated serving with deadlines and retry: an engine panic
+//! // poisons exactly one fused batch (every request in it gets
+//! // `EhybError::EngineFault`), the engine is respawned, and the
+//! // service keeps serving — `svc.metrics.faults` / `respawns` /
+//! // `deadline_misses` count it all.
+//! let svc = ctx.serve(16)?;
+//! let client = svc.client();
+//! let x: Vec<f64> = (0..n).map(|i| (i % 7) as f64).collect();
+//! let policy = RetryPolicy::default(); // bounded backoff, seeded jitter
+//! let y = client.spmv_with_retry(x, &policy)?;
+//! assert_eq!(y.len(), n);
+//!
+//! // A solve that breaks down or diverges restarts once with
+//! // Jacobi-preconditioned BiCGSTAB (counted in ctx.health()).
+//! let pre = ehyb::coordinator::Jacobi::new(ctx.matrix());
+//! let cfg = ehyb::coordinator::SolverConfig {
+//!     divergence_window: 3, // declare divergence after 3 growing iters
+//!     ..Default::default()
+//! };
+//! let b = vec![1.0; n];
+//! let (sol, report) = ctx.solver().cg(&b, None, &pre, &cfg)?;
+//! assert!(report.converged()); // report.status is the typed outcome
+//! drop((svc, sol));
+//! # Ok::<(), ehyb::EhybError>(())
+//! ```
+//!
+//! The deterministic chaos harness ([`resilience::FaultPlan`] +
+//! `cargo run -- chaos --seed 7`, `rust/tests/resilience.rs`) injects
+//! engine panics, queue saturation, torn plan-cache entries, and NaN
+//! inputs, and asserts every fault maps to a typed error or a recorded
+//! recovery — never a hang or a wrong answer.
 
 pub mod util;
 pub mod sparse;
@@ -163,10 +220,12 @@ pub mod coordinator;
 pub mod harness;
 pub mod api;
 pub mod autotune;
+pub mod resilience;
 
 pub use api::{BatchBuf, EhybError, EngineKind, SpmvContext, VecBatch, VecBatchMut};
 pub use autotune::{Fingerprint, PlanStore, TuneLevel, TunedPlan};
 pub use reorder::{ReorderQuality, ReorderSpec, Reordering};
+pub use resilience::{FaultInjector, FaultPlan, GuardLevel, HealthReport, RetryPolicy};
 pub use shard::{ShardSpec, ShardStrategy, ShardedEngine};
 
 /// Crate-wide result type over the typed [`EhybError`].

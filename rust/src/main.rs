@@ -8,6 +8,7 @@
 //!   tune        OSKI-style plan search (+ optional persistent cache)
 //!   bench       regenerate paper tables/figures (see DESIGN.md §6)
 //!   ablation    DESIGN.md §7 ablations + the tuning ablation
+//!   chaos       seeded fault-injection drills over the resilience layer
 //!
 //! Matrix selection: `--gen poisson3d:24` style specs or `--mtx file.mtx`.
 
@@ -40,6 +41,7 @@ fn main() {
         "tune" => cmd_tune(&opts),
         "bench" => cmd_bench(&opts),
         "ablation" => cmd_ablation(&opts),
+        "chaos" => cmd_chaos(&opts),
         "--help" | "-h" | "help" => {
             usage();
             Ok(())
@@ -59,7 +61,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "usage: ehyb <cmd> [--gen SPEC | --mtx FILE] [options]\n\
-         cmds: info | preprocess | spmv | solve | tune | bench | ablation\n\
+         cmds: info | preprocess | spmv | solve | tune | bench | ablation | chaos\n\
          gen specs: poisson2d:NX[:NY] poisson3d:N[:NY:NZ] stencil27:N\n\
                     elasticity:N unstructured:N circuit:N kkt:N banded:N\n\
          options: --vec-size V  --shards K|auto  --reorder none|degree|rcm|partrank[:K]|auto\n\
@@ -68,7 +70,7 @@ fn usage() {
                   --table 1|2  --fig 2|3|4|5|6  --scale tiny|small|full\n\
                   --out DIR  --which cache|partitioner|sort|vecsize|tuning|reorder\n\
                   --level heuristic|measured  --budget-ms N  --engine auto|ehyb|...\n\
-                  --cache DIR (tune; default $EHYB_TUNE_DIR)"
+                  --cache DIR (tune; default $EHYB_TUNE_DIR)  --seed N (chaos)"
     );
 }
 
@@ -300,10 +302,11 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     let scfg = SolverConfig {
         max_iters: opts.get("max-iters").and_then(|v| v.parse().ok()).unwrap_or(2000),
         rtol: opts.get("rtol").and_then(|v| v.parse().ok()).unwrap_or(1e-8),
-        track_history: true,
+        divergence_window: opts.get("divergence-window").and_then(|v| v.parse().ok()).unwrap_or(0),
+        ..Default::default()
     };
-    let b = with_shards(SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg), opts)?;
-    let ctx = with_reorder(b, opts)?.build()?;
+    let bld = with_shards(SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg), opts)?;
+    let ctx = with_reorder(bld, opts)?.build()?;
     print_reorder_summary(&ctx);
     let m = ctx.matrix();
     let h = ctx.solver();
@@ -321,11 +324,11 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         (s, _) => anyhow::bail!("unknown solver {s}"),
     };
     println!(
-        "{} + {}: {} iters, converged={}, final rel residual {:.3e}, {} SpMVs, {:.3}s",
+        "{} + {}: {} iters, status={}, final rel residual {:.3e}, {} SpMVs, {:.3}s",
         report.solver,
         pre_name,
         report.iters,
-        report.converged,
+        report.status.name(),
         report.final_rel_residual,
         report.spmv_count,
         report.wall_secs
@@ -635,5 +638,256 @@ fn cmd_ablation(opts: &HashMap<String, String>) -> anyhow::Result<()> {
             )
         );
     }
+    Ok(())
+}
+
+/// `chaos --seed N`: run the deterministic fault-injection drills end
+/// to end and exit nonzero if any resilience contract is violated. The
+/// same seed drives `rust/tests/resilience.rs`, so a failure here
+/// reproduces there bit-for-bit.
+fn cmd_chaos(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    use ehyb::autotune::{tune_with_fingerprint, PlanStore, TuneLevel};
+    use ehyb::coordinator::service::{BatchKernel, SpmvService};
+    use ehyb::resilience::{FaultInjector, FaultPlan, RetryPolicy};
+    use ehyb::runtime::json::Json;
+    use ehyb::sparse::coo::Coo;
+    use ehyb::util::check::assert_allclose;
+    use ehyb::{EhybError, GuardLevel};
+    use std::sync::atomic::Ordering;
+    use std::time::{Duration, Instant};
+
+    let seed = opts.get("seed").and_then(|v| v.parse().ok()).unwrap_or(7u64);
+    let plan = FaultPlan::from_seed(seed);
+    println!("fault plan (seed {seed}): {}", plan.to_json().dump());
+    let back = FaultPlan::from_json(&Json::parse(&plan.to_json().dump())?)?;
+    anyhow::ensure!(back == plan, "fault plan JSON round-trip drifted");
+
+    let m = build_matrix(opts)?;
+    let cfg = preprocess_cfg(opts);
+    let n = m.nrows();
+    anyhow::ensure!(n == m.ncols(), "chaos drills need a square matrix");
+    let ctx =
+        SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg.clone()).build()?;
+    let x: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) * 0.25 - 1.5).collect();
+    let want = m.spmv_f64_oracle(&x);
+    let allclose =
+        |y: &[f64]| assert_allclose(y, &want, 1e-9, 1e-9).map_err(|e| anyhow::anyhow!(e));
+
+    // Drill 1: panic isolation. The injector panics inside the kernel
+    // on the plan's scheduled call; exactly that request gets the typed
+    // fault, the engine respawns, and the next request is correct.
+    let inj = FaultInjector::new(plan.clone());
+    let panic_on = plan.panic_on_call.unwrap_or(1);
+    let engine = ctx.engine_arc();
+    let inj_kernel = inj.clone();
+    let svc: SpmvService<f64> = SpmvService::spawn(
+        move || {
+            let engine = engine.clone();
+            let fb = engine.format_bytes();
+            let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+            Ok((inj_kernel.wrap_kernel(kernel), fb))
+        },
+        n,
+        8,
+    )?;
+    let client = svc.client();
+    for _ in 1..panic_on {
+        allclose(&client.spmv(x.clone())?)?;
+    }
+    match client.spmv(x.clone()) {
+        Err(EhybError::EngineFault(msg)) => {
+            println!("drill 1: kernel call {panic_on} -> typed EngineFault ({msg})");
+        }
+        other => anyhow::bail!("drill 1: expected EngineFault, got {other:?}"),
+    }
+    allclose(&client.spmv(x.clone())?)?;
+    anyhow::ensure!(svc.metrics.faults.load(Ordering::Relaxed) == 1, "drill 1: fault not counted");
+    anyhow::ensure!(svc.metrics.respawns.load(Ordering::Relaxed) == 1, "drill 1: no respawn");
+    println!("drill 1: engine respawned; post-fault SpMV matches the oracle");
+
+    // Drill 2: an already-expired deadline is triaged out with a typed
+    // error at drain time, without occupying kernel width.
+    match client.spmv_deadline(x.clone(), Instant::now() - Duration::from_millis(5)) {
+        Err(EhybError::DeadlineExceeded) => {
+            println!("drill 2: expired deadline -> typed DeadlineExceeded");
+        }
+        other => anyhow::bail!("drill 2: expected DeadlineExceeded, got {other:?}"),
+    }
+    anyhow::ensure!(
+        svc.metrics.deadline_misses.load(Ordering::Relaxed) == 1,
+        "drill 2: miss not counted"
+    );
+
+    // Drill 3: bounded retry/backoff recovers an injected fault on the
+    // first kernel call — the caller never observes it.
+    let inj_retry = FaultInjector::new(FaultPlan { panic_on_call: Some(1), ..plan.clone() });
+    let engine = ctx.engine_arc();
+    let svc2: SpmvService<f64> = SpmvService::spawn(
+        move || {
+            let engine = engine.clone();
+            let fb = engine.format_bytes();
+            let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+            Ok((inj_retry.wrap_kernel(kernel), fb))
+        },
+        n,
+        8,
+    )?;
+    let policy = RetryPolicy {
+        max_attempts: 3,
+        base_delay: Duration::from_micros(200),
+        max_delay: Duration::from_millis(2),
+        seed,
+    };
+    allclose(&svc2.client().spmv_with_retry(x.clone(), &policy)?)?;
+    anyhow::ensure!(
+        svc2.metrics.faults.load(Ordering::Relaxed) == 1
+            && svc2.metrics.respawns.load(Ordering::Relaxed) == 1,
+        "drill 3: retry path did not record exactly one fault + respawn"
+    );
+    println!("drill 3: retry recovered the injected fault (1 fault, 1 respawn, 0 caller errors)");
+
+    // Drill 4: queue saturation. A gate holds the kernel open on a
+    // depth-1 queue; the plan's whole flood sheds with typed
+    // backpressure, and the accepted requests still complete correctly.
+    let engine = ctx.engine_arc();
+    let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+    let mut rig = Some((started_tx, gate_rx));
+    let svc3: SpmvService<f64> = SpmvService::spawn_bounded(
+        move || {
+            let engine = engine.clone();
+            let fb = engine.format_bytes();
+            let (stx, grx) = rig.take().expect("gated rig builds one engine");
+            let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                stx.send(()).ok();
+                grx.recv().ok();
+                engine.spmv_batch(xs, ys)
+            });
+            Ok((kernel, fb))
+        },
+        n,
+        8,
+        1,
+    )?;
+    let c3 = svc3.client();
+    let rx1 = c3.submit(x.clone())?;
+    started_rx.recv()?;
+    let rx2 = c3.submit(x.clone())?;
+    let mut shed = 0u64;
+    for _ in 0..plan.saturate_requests {
+        if let Err((EhybError::Overloaded { .. }, _)) = c3.try_submit(x.clone()) {
+            shed += 1;
+        }
+    }
+    anyhow::ensure!(
+        shed == plan.saturate_requests,
+        "drill 4: only {shed}/{} flood requests shed",
+        plan.saturate_requests
+    );
+    gate_tx.send(()).ok();
+    gate_tx.send(()).ok();
+    allclose(&rx1.recv()??)?;
+    allclose(&rx2.recv()??)?;
+    drop(gate_tx);
+    println!("drill 4: {shed} flood requests shed with typed Overloaded; accepted ones correct");
+
+    // Drill 5: NaN poisoning. Reject guard returns a typed error naming
+    // the poisoned index; Monitor records the non-finite output.
+    let nan_call = plan.nan_on_call.unwrap_or(1);
+    let inj_nan = FaultInjector::new(FaultPlan { nan_on_call: Some(nan_call), ..plan.clone() });
+    let mut xp = x.clone();
+    let idx = inj_nan.poison(nan_call, &mut xp).expect("poison fires on its scheduled call");
+    let rctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .guard(GuardLevel::Reject)
+        .build()?;
+    match rctx.spmv_alloc(&xp) {
+        Err(EhybError::NonFinite { what: "x", index }) if index == idx => {
+            println!("drill 5: NaN planted at x[{idx}] -> typed NonFinite (Reject guard)");
+        }
+        other => anyhow::bail!("drill 5: expected NonFinite at {idx}, got {other:?}"),
+    }
+    anyhow::ensure!(rctx.health().rejected_inputs == 1, "drill 5: rejection not recorded");
+    let mctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::CsrVector)
+        .config(cfg.clone())
+        .guard(GuardLevel::Monitor)
+        .build()?;
+    let y = mctx.spmv_alloc(&xp)?;
+    anyhow::ensure!(y.iter().any(|v| v.is_nan()), "drill 5: NaN should propagate under Monitor");
+    anyhow::ensure!(mctx.health().nonfinite_outputs >= 1, "drill 5: output NaN not recorded");
+    println!("drill 5: Monitor guard recorded the non-finite output without failing the call");
+
+    // Drill 6: a torn plan-cache entry is quarantined to `.bad` and a
+    // fresh tune re-occupies the key.
+    let dir = std::env::temp_dir().join(format!("ehyb-chaos-{seed}-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = PlanStore::new(&dir);
+    let out = tune_with_fingerprint(&m, &cfg, EngineKind::Ehyb, TuneLevel::Heuristic, None)?;
+    let p = out.plan;
+    let path = store.save(&p)?;
+    anyhow::ensure!(inj.tear_file(&path)?, "drill 6: plan schedules no tear");
+    anyhow::ensure!(
+        store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).is_err(),
+        "drill 6: torn entry must fail to load"
+    );
+    anyhow::ensure!(store.quarantines() == 1, "drill 6: tear not quarantined");
+    anyhow::ensure!(
+        store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope)?.is_none(),
+        "drill 6: quarantined key must read as a cold miss"
+    );
+    store.save(&p)?;
+    anyhow::ensure!(
+        store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope)?.is_some(),
+        "drill 6: fresh save must re-occupy the key"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    println!("drill 6: torn plan-cache entry quarantined to .bad; fresh save re-occupied the key");
+
+    // Drill 7: degraded-mode fallback. EHYB cannot build on a
+    // non-square matrix; with fallback on, csr-vector serves instead
+    // (recorded), and the degraded engine still computes correctly.
+    let mut coo = Coo::<f64>::new(3, 4);
+    coo.push(0, 0, 1.0);
+    coo.push(0, 3, 2.0);
+    coo.push(1, 1, 2.0);
+    coo.push(2, 2, 2.0);
+    let fctx =
+        SpmvContext::builder(coo.to_csr()).engine(EngineKind::Ehyb).fallback(true).build()?;
+    anyhow::ensure!(
+        fctx.kind() == EngineKind::CsrVector && fctx.health().degraded(),
+        "drill 7: fallback did not downgrade to csr-vector"
+    );
+    anyhow::ensure!(
+        fctx.spmv_alloc(&[1.0; 4])? == vec![3.0, 2.0, 2.0],
+        "drill 7: degraded engine computed a wrong answer"
+    );
+    println!("drill 7: failed EHYB build degraded to csr-vector (recorded in health)");
+
+    // Drill 8: solver restart. CG diverges on a Jordan block; the
+    // fallback restarts once as Jacobi-preconditioned BiCGSTAB, which
+    // converges exactly to x = (-2, 1).
+    let mut coo = Coo::<f64>::new(2, 2);
+    coo.push(0, 0, 1.0);
+    coo.push(0, 1, 2.0);
+    coo.push(1, 1, 1.0);
+    let sctx =
+        SpmvContext::builder(coo.to_csr()).engine(EngineKind::CsrVector).fallback(true).build()?;
+    let scfg = SolverConfig { divergence_window: 1, ..Default::default() };
+    let (sol, rep) =
+        sctx.solver().cg(&[0.0, 1.0], None, &ehyb::coordinator::precond::Identity, &scfg)?;
+    anyhow::ensure!(
+        rep.converged() && rep.solver == "bicgstab",
+        "drill 8: restart did not converge: {rep:?}"
+    );
+    assert_allclose(&sol, &[-2.0, 1.0], 1e-10, 1e-10).map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(sctx.health().solver_restarts == 1, "drill 8: restart not recorded");
+    println!("drill 8: diverging CG restarted once as jacobi-bicgstab and converged");
+
+    println!();
+    println!("{}", report::service_markdown("Chaos service (drills 1-2)", &svc.metrics));
+    println!("{}", report::health_markdown("Degraded context health (drill 7)", &fctx.health()));
+    println!("chaos: all drills passed (seed {seed})");
     Ok(())
 }

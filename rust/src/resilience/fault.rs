@@ -1,0 +1,232 @@
+//! Deterministic fault injection: a seeded [`FaultPlan`] describes
+//! *which* faults to inject (engine panic on the Nth kernel call, NaN
+//! poisoning of the Nth input, a torn plan-cache entry, queue
+//! saturation depth) and a [`FaultInjector`] carries the shared call
+//! counter that triggers them. The same seed always produces the same
+//! plan and the same fault schedule, so the chaos suite and the `chaos`
+//! CLI subcommand are bit-reproducible.
+
+use crate::coordinator::service::BatchKernel;
+use crate::runtime::json::{obj, Json};
+use crate::sparse::scalar::Scalar;
+use crate::util::prng::Xoshiro256;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A seeded, JSON-serializable fault schedule. Call indices are
+/// 1-based ("panic on the 2nd kernel call"); `None` disables that
+/// fault class.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed the plan was derived from (also seeds any jitter consumers
+    /// that want to correlate with the plan).
+    pub seed: u64,
+    /// Kernel call (1-based) that panics inside the engine.
+    pub panic_on_call: Option<u64>,
+    /// Input-preparation call (1-based) whose `x` gets one NaN planted.
+    pub nan_on_call: Option<u64>,
+    /// Truncate a plan-cache entry to this many bytes (torn write).
+    pub torn_cache_bytes: Option<u64>,
+    /// How many requests the saturation drill floods at a depth-1
+    /// queue (≥ 2 guarantees at least one shed).
+    pub saturate_requests: u64,
+}
+
+impl FaultPlan {
+    /// Derive every fault deterministically from `seed`.
+    pub fn from_seed(seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        Self {
+            seed,
+            panic_on_call: Some(1 + rng.next_below(4) as u64),
+            nan_on_call: Some(1 + rng.next_below(4) as u64),
+            torn_cache_bytes: Some(1 + rng.next_below(24) as u64),
+            saturate_requests: 2 + rng.next_below(6) as u64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<u64>| match v {
+            Some(n) => Json::Num(n as f64),
+            None => Json::Null,
+        };
+        obj([
+            ("seed", Json::Num(self.seed as f64)),
+            ("panic_on_call", opt(self.panic_on_call)),
+            ("nan_on_call", opt(self.nan_on_call)),
+            ("torn_cache_bytes", opt(self.torn_cache_bytes)),
+            ("saturate_requests", Json::Num(self.saturate_requests as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let num = |key: &str| -> crate::Result<u64> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .map(|n| n as u64)
+                .ok_or_else(|| crate::EhybError::Parse(format!("fault plan: missing {key}")))
+        };
+        let opt = |key: &str| -> crate::Result<Option<u64>> {
+            match j.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => v
+                    .as_f64()
+                    .map(|n| Some(n as u64))
+                    .ok_or_else(|| crate::EhybError::Parse(format!("fault plan: bad {key}"))),
+            }
+        };
+        Ok(Self {
+            seed: num("seed")?,
+            panic_on_call: opt("panic_on_call")?,
+            nan_on_call: opt("nan_on_call")?,
+            torn_cache_bytes: opt("torn_cache_bytes")?,
+            saturate_requests: num("saturate_requests")?,
+        })
+    }
+}
+
+/// Shared trigger state for one [`FaultPlan`]: a call counter the test
+/// rig advances once per kernel call (or per prepared input). Cheap to
+/// clone — clones share the counter.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    calls: Arc<AtomicU64>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self { plan, calls: Arc::new(AtomicU64::new(0)) }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Advance the shared counter; returns the 1-based index of this
+    /// call.
+    pub fn next_call(&self) -> u64 {
+        self.calls.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Calls observed so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Whether call number `call` is scheduled to panic.
+    pub fn should_panic(&self, call: u64) -> bool {
+        self.plan.panic_on_call == Some(call)
+    }
+
+    /// Plant one NaN in `x` if call number `call` is scheduled for NaN
+    /// poisoning; the poisoned index is derived from the seed so it is
+    /// reproducible. Returns the poisoned index.
+    pub fn poison<S: Scalar>(&self, call: u64, x: &mut [S]) -> Option<usize> {
+        if self.plan.nan_on_call != Some(call) || x.is_empty() {
+            return None;
+        }
+        let idx = Xoshiro256::new(self.plan.seed ^ call).next_below(x.len());
+        x[idx] = S::from_f64(f64::NAN);
+        Some(idx)
+    }
+
+    /// Wrap a batched kernel so the scheduled call panics (the panic
+    /// fires *inside* the kernel, where the service's isolation must
+    /// catch it). All other calls pass straight through.
+    pub fn wrap_kernel<S: Scalar>(&self, mut inner: BatchKernel<S>) -> BatchKernel<S> {
+        let inj = self.clone();
+        Box::new(move |xs, ys| {
+            let call = inj.next_call();
+            if inj.should_panic(call) {
+                panic!("injected engine fault on kernel call {call}");
+            }
+            inner(xs, ys)
+        })
+    }
+
+    /// Tear a plan-cache entry (or any file): truncate it to the plan's
+    /// `torn_cache_bytes`, simulating a write interrupted mid-file.
+    /// Returns `Ok(false)` when the plan does not schedule tearing.
+    pub fn tear_file(&self, path: &Path) -> crate::Result<bool> {
+        let Some(keep) = self.plan.torn_cache_bytes else {
+            return Ok(false);
+        };
+        let bytes = std::fs::read(path)
+            .map_err(|e| crate::EhybError::Io(format!("{}: {e}", path.display())))?;
+        let keep = (keep as usize).min(bytes.len().saturating_sub(1));
+        std::fs::write(path, &bytes[..keep])
+            .map_err(|e| crate::EhybError::Io(format!("{}: {e}", path.display())))?;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_seed_is_deterministic() {
+        assert_eq!(FaultPlan::from_seed(7), FaultPlan::from_seed(7));
+        assert_ne!(FaultPlan::from_seed(7), FaultPlan::from_seed(8));
+        let p = FaultPlan::from_seed(7);
+        assert!(p.saturate_requests >= 2);
+        assert!(p.panic_on_call.unwrap() >= 1);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let p = FaultPlan::from_seed(42);
+        let back = FaultPlan::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, p);
+        // None fields survive as JSON null.
+        let p = FaultPlan { panic_on_call: None, ..p };
+        let back = FaultPlan::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        let j = Json::parse(r#"{"seed": 1}"#).unwrap();
+        assert!(matches!(FaultPlan::from_json(&j), Err(crate::EhybError::Parse(_))));
+    }
+
+    #[test]
+    fn injector_counter_is_shared_across_clones() {
+        let inj = FaultInjector::new(FaultPlan::from_seed(3));
+        let other = inj.clone();
+        assert_eq!(inj.next_call(), 1);
+        assert_eq!(other.next_call(), 2);
+        assert_eq!(inj.calls(), 2);
+    }
+
+    #[test]
+    fn poison_hits_only_the_scheduled_call() {
+        let plan = FaultPlan { nan_on_call: Some(2), ..FaultPlan::from_seed(5) };
+        let inj = FaultInjector::new(plan);
+        let mut x = vec![1.0f64; 16];
+        assert_eq!(inj.poison(1, &mut x), None);
+        assert!(x.iter().all(|v| v.is_finite()));
+        let idx = inj.poison(2, &mut x).unwrap();
+        assert!(x[idx].is_nan());
+        assert_eq!(x.iter().filter(|v| v.is_nan()).count(), 1);
+        // Reproducible index.
+        let mut x2 = vec![1.0f64; 16];
+        assert_eq!(inj.poison(2, &mut x2), Some(idx));
+    }
+
+    #[test]
+    fn tear_file_truncates() {
+        let dir = std::env::temp_dir().join(format!("ehyb-tear-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("entry.json");
+        std::fs::write(&path, "0123456789abcdef").unwrap();
+        let plan = FaultPlan { torn_cache_bytes: Some(4), ..FaultPlan::from_seed(1) };
+        assert!(FaultInjector::new(plan).tear_file(&path).unwrap());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "0123");
+        let no_tear = FaultPlan { torn_cache_bytes: None, ..FaultPlan::from_seed(1) };
+        assert!(!FaultInjector::new(no_tear).tear_file(&path).unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

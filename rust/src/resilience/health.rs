@@ -1,0 +1,143 @@
+//! Degradation bookkeeping for a `SpmvContext`: every downgrade the
+//! facade performs on the caller's behalf (EHYB build failure → csr-
+//! vector engine, solver breakdown → preconditioned restart, guarded
+//! non-finite values) is counted here and surfaced by `ctx.health()` —
+//! a context never degrades silently.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared, thread-safe degradation counters. Lives behind an `Arc` in
+/// the context; snapshot it with [`Health::report`].
+#[derive(Debug, Default)]
+pub struct Health {
+    engine_fallbacks: AtomicU64,
+    solver_restarts: AtomicU64,
+    nonfinite_outputs: AtomicU64,
+    rejected_inputs: AtomicU64,
+    /// Human-readable event log (one line per degradation), capped so a
+    /// long-running degraded service cannot grow without bound.
+    events: Mutex<Vec<String>>,
+}
+
+/// Cap on recorded event lines; counters keep counting past it.
+const MAX_EVENTS: usize = 64;
+
+impl Health {
+    fn push_event(&self, line: String) {
+        if let Ok(mut ev) = self.events.lock() {
+            if ev.len() < MAX_EVENTS {
+                ev.push(line);
+            }
+        }
+    }
+
+    /// The requested engine could not be built; a baseline serves
+    /// instead.
+    pub fn record_engine_fallback(&self, detail: impl Into<String>) {
+        self.engine_fallbacks.fetch_add(1, Ordering::Relaxed);
+        self.push_event(format!("engine fallback: {}", detail.into()));
+    }
+
+    /// A broken-down/diverged solve was restarted with a diagonal-
+    /// preconditioned BiCGSTAB.
+    pub fn record_solver_restart(&self, detail: impl Into<String>) {
+        self.solver_restarts.fetch_add(1, Ordering::Relaxed);
+        self.push_event(format!("solver restart: {}", detail.into()));
+    }
+
+    /// An output guard observed a non-finite engine result.
+    pub fn record_nonfinite_output(&self, detail: impl Into<String>) {
+        self.nonfinite_outputs.fetch_add(1, Ordering::Relaxed);
+        self.push_event(format!("non-finite output: {}", detail.into()));
+    }
+
+    /// An input guard rejected a non-finite request.
+    pub fn record_rejected_input(&self, detail: impl Into<String>) {
+        self.rejected_inputs.fetch_add(1, Ordering::Relaxed);
+        self.push_event(format!("rejected input: {}", detail.into()));
+    }
+
+    /// Consistent snapshot of the counters and event log.
+    pub fn report(&self) -> HealthReport {
+        HealthReport {
+            engine_fallbacks: self.engine_fallbacks.load(Ordering::Relaxed),
+            solver_restarts: self.solver_restarts.load(Ordering::Relaxed),
+            nonfinite_outputs: self.nonfinite_outputs.load(Ordering::Relaxed),
+            rejected_inputs: self.rejected_inputs.load(Ordering::Relaxed),
+            events: self.events.lock().map(|ev| ev.clone()).unwrap_or_default(),
+        }
+    }
+}
+
+/// Point-in-time snapshot of a context's [`Health`].
+#[derive(Clone, Debug, Default)]
+pub struct HealthReport {
+    /// EHYB build failures downgraded to a baseline engine.
+    pub engine_fallbacks: u64,
+    /// Broken-down solves retried with a preconditioned restart.
+    pub solver_restarts: u64,
+    /// Non-finite engine outputs observed by a guard.
+    pub nonfinite_outputs: u64,
+    /// Non-finite inputs rejected by a guard.
+    pub rejected_inputs: u64,
+    /// One line per degradation, oldest first (capped).
+    pub events: Vec<String>,
+}
+
+impl HealthReport {
+    /// True when nothing was ever degraded, restarted, or guarded out.
+    pub fn healthy(&self) -> bool {
+        self.engine_fallbacks == 0
+            && self.solver_restarts == 0
+            && self.nonfinite_outputs == 0
+            && self.rejected_inputs == 0
+    }
+
+    /// True when the context is serving a different engine than
+    /// requested.
+    pub fn degraded(&self) -> bool {
+        self.engine_fallbacks > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_health_is_healthy() {
+        let h = Health::default();
+        let rep = h.report();
+        assert!(rep.healthy() && !rep.degraded());
+        assert!(rep.events.is_empty());
+    }
+
+    #[test]
+    fn records_show_up_in_report() {
+        let h = Health::default();
+        h.record_engine_fallback("ehyb plan failed; csr-vector serving");
+        h.record_solver_restart("cg breakdown at iter 3");
+        h.record_nonfinite_output("spmv y[2]");
+        h.record_rejected_input("x[7] is NaN");
+        let rep = h.report();
+        assert!(!rep.healthy() && rep.degraded());
+        assert_eq!(
+            (rep.engine_fallbacks, rep.solver_restarts, rep.nonfinite_outputs, rep.rejected_inputs),
+            (1, 1, 1, 1)
+        );
+        assert_eq!(rep.events.len(), 4);
+        assert!(rep.events[0].contains("csr-vector"));
+    }
+
+    #[test]
+    fn event_log_is_capped_but_counters_keep_counting() {
+        let h = Health::default();
+        for i in 0..(MAX_EVENTS + 10) {
+            h.record_nonfinite_output(format!("y[{i}]"));
+        }
+        let rep = h.report();
+        assert_eq!(rep.events.len(), MAX_EVENTS);
+        assert_eq!(rep.nonfinite_outputs, (MAX_EVENTS + 10) as u64);
+    }
+}

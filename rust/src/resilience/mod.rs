@@ -1,0 +1,81 @@
+//! Single-node resilience layer: the ingress contract the distributed
+//! serving tier inherits per replica. Four cooperating pieces:
+//!
+//! - **Panic isolation** lives in [`crate::coordinator::service`]: a
+//!   fused batch that panics maps to [`crate::EhybError::EngineFault`]
+//!   for exactly the requests in that batch, the engine is respawned,
+//!   and the service keeps serving.
+//! - **Deadlines + retry** — requests may carry a drain-time deadline
+//!   ([`crate::EhybError::DeadlineExceeded`] without occupying kernel
+//!   width), and [`RetryPolicy`] drives
+//!   `SpmvClient::spmv_with_retry`: bounded exponential backoff with
+//!   deterministic [`crate::util::prng`]-seeded jitter, retrying only
+//!   transient faults (`Overloaded` / `EngineFault`).
+//! - **Degraded mode** — `SpmvContext::builder().fallback(true)`
+//!   downgrades EHYB build failures to the csr-vector engine and
+//!   retries broken-down solves once with a Jacobi-preconditioned
+//!   BiCGSTAB; every downgrade is recorded in [`Health`], surfaced by
+//!   `ctx.health()`. [`GuardLevel`] adds optional non-finite input
+//!   rejection / output monitoring.
+//! - **Deterministic fault injection** — [`FaultPlan`] /
+//!   [`FaultInjector`] seed reproducible engine panics, NaN inputs,
+//!   torn plan-cache entries, and queue saturation for the chaos suite
+//!   (`rust/tests/resilience.rs`) and the `chaos` CLI subcommand.
+//!
+//! Every injected fault must map to a typed error or a recorded
+//! recovery — never a hang, an escaping panic, or a silently wrong `y`.
+
+pub mod fault;
+pub mod health;
+pub mod retry;
+
+pub use fault::{FaultInjector, FaultPlan};
+pub use health::{Health, HealthReport};
+pub use retry::RetryPolicy;
+
+/// Non-finite input/output policy of a `SpmvContext`.
+///
+/// `Off` adds zero cost to the hot path (no scans); `Monitor` scans
+/// engine *outputs* and records non-finite results in [`Health`]
+/// without changing any return value; `Reject` additionally scans
+/// *inputs* before executing and returns
+/// [`crate::EhybError::NonFinite`] — the strictest contract, for
+/// ingress boundaries where one NaN would silently poison every
+/// downstream iterate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GuardLevel {
+    /// No scanning (the default; identical to pre-0.6 behavior).
+    #[default]
+    Off,
+    /// Scan outputs; record non-finite results in [`Health`].
+    Monitor,
+    /// Reject non-finite inputs with a typed error (also monitors
+    /// outputs).
+    Reject,
+}
+
+impl GuardLevel {
+    /// Whether outputs should be scanned after the engine runs.
+    pub fn monitors(self) -> bool {
+        !matches!(self, GuardLevel::Off)
+    }
+
+    /// Whether inputs should be scanned (and rejected) before the
+    /// engine runs.
+    pub fn rejects(self) -> bool {
+        matches!(self, GuardLevel::Reject)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_levels_nest() {
+        assert!(!GuardLevel::Off.monitors() && !GuardLevel::Off.rejects());
+        assert!(GuardLevel::Monitor.monitors() && !GuardLevel::Monitor.rejects());
+        assert!(GuardLevel::Reject.monitors() && GuardLevel::Reject.rejects());
+        assert_eq!(GuardLevel::default(), GuardLevel::Off);
+    }
+}

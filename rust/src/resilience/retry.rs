@@ -1,0 +1,120 @@
+//! Bounded exponential backoff with deterministic jitter for the
+//! service client. The policy decides *which* errors are worth
+//! retrying: only transient serving faults (`Overloaded` backpressure
+//! and `EngineFault` quarantines) — never dimension, parse, or
+//! validation errors, which no amount of retrying can fix.
+
+use crate::api::error::EhybError;
+use crate::util::prng::Xoshiro256;
+use std::time::Duration;
+
+/// Retry schedule for `SpmvClient::spmv_with_retry`: attempt `k`
+/// (0-based) sleeps `min(base_delay · 2ᵏ, max_delay)` scaled by a
+/// deterministic jitter factor in `[0.5, 1.0)` drawn from a
+/// [`Xoshiro256`] seeded with [`Self::seed`] — reproducible backoff
+/// traces for the chaos suite, no thundering herd in production.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (≥ 1; clamped at use).
+    pub max_attempts: usize,
+    /// Backoff base: the sleep after the first failed attempt.
+    pub base_delay: Duration,
+    /// Cap on any single sleep.
+    pub max_delay: Duration,
+    /// Seed of the jitter PRNG.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(100),
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Whether `e` is transient and worth retrying under this policy.
+    pub fn retries(&self, e: &EhybError) -> bool {
+        matches!(e, EhybError::Overloaded { .. } | EhybError::EngineFault(_))
+    }
+
+    /// Jittered sleep before retrying after failed attempt `attempt`
+    /// (0-based). Pass the policy's own PRNG so successive delays walk
+    /// the deterministic jitter sequence.
+    pub fn delay(&self, attempt: usize, rng: &mut Xoshiro256) -> Duration {
+        let exp = 1u32 << attempt.min(20) as u32;
+        let raw = self.base_delay.saturating_mul(exp).min(self.max_delay);
+        raw.mul_f64(rng.range_f64(0.5, 1.0))
+    }
+
+    /// Worst-case total sleep across all retries (the budget a caller
+    /// is signing up for).
+    pub fn max_total_delay(&self) -> Duration {
+        let mut total = Duration::ZERO;
+        for attempt in 0..self.max_attempts.saturating_sub(1) {
+            let exp = 1u32 << attempt.min(20) as u32;
+            total += self.base_delay.saturating_mul(exp).min(self.max_delay);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retries_only_transient_errors() {
+        let p = RetryPolicy::default();
+        assert!(p.retries(&EhybError::Overloaded { queue_depth: 4 }));
+        assert!(p.retries(&EhybError::EngineFault("boom".into())));
+        assert!(!p.retries(&EhybError::DimensionMismatch { what: "x", expected: 4, got: 3 }));
+        assert!(!p.retries(&EhybError::Parse("bad".into())));
+        assert!(!p.retries(&EhybError::ServiceStopped));
+        assert!(!p.retries(&EhybError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn delays_grow_exponentially_and_cap() {
+        let p = RetryPolicy {
+            max_attempts: 8,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(45),
+            seed: 1,
+        };
+        let mut rng = Xoshiro256::new(p.seed);
+        let d0 = p.delay(0, &mut rng);
+        let d3 = p.delay(3, &mut rng);
+        // Jitter is in [0.5, 1.0): attempt 0 ∈ [5, 10) ms, attempt 3
+        // capped at 45 ms then jittered into [22.5, 45) ms.
+        assert!(d0 >= Duration::from_micros(4990) && d0 < Duration::from_millis(10), "{d0:?}");
+        assert!(d3 >= Duration::from_micros(22490) && d3 < Duration::from_millis(45), "{d3:?}");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_per_seed() {
+        let p = RetryPolicy::default();
+        let mut a = Xoshiro256::new(p.seed);
+        let mut b = Xoshiro256::new(p.seed);
+        for attempt in 0..5 {
+            assert_eq!(p.delay(attempt, &mut a), p.delay(attempt, &mut b));
+        }
+    }
+
+    #[test]
+    fn max_total_delay_bounds_the_schedule() {
+        let p = RetryPolicy {
+            max_attempts: 4,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(25),
+            seed: 0,
+        };
+        // Sleeps: 10 + 20 + 25 (capped) = 55 ms before jitter (jitter
+        // only shrinks them).
+        assert_eq!(p.max_total_delay(), Duration::from_millis(55));
+    }
+}

@@ -23,15 +23,25 @@ enum Symmetry {
 }
 
 /// Read a Matrix Market coordinate file into COO (symmetric storage is
-/// expanded; duplicates merged).
+/// expanded). Malformed input — unparseable tokens, non-finite values,
+/// out-of-range indices, duplicate coordinates (including symmetric
+/// mirrors) — is a typed [`crate::EhybError::Parse`] carrying the
+/// 1-based line number, so a corrupt corpus file names its own bad line
+/// instead of poisoning the matrix.
 pub fn read_matrix_market<S: Scalar, P: AsRef<Path>>(path: P) -> crate::Result<Coo<S>> {
     let file = std::fs::File::open(path.as_ref())
         .map_err(|e| crate::EhybError::Io(format!("open {:?}: {e}", path.as_ref())))?;
     read_matrix_market_from(BufReader::new(file))
 }
 
+/// Typed, line-numbered entry rejection.
+fn entry_err(lineno: usize, what: impl std::fmt::Display) -> crate::EhybError {
+    crate::EhybError::Parse(format!("line {lineno}: {what}"))
+}
+
 /// Read from any buffered reader (unit-testable without files).
 pub fn read_matrix_market_from<S: Scalar, R: BufRead>(mut r: R) -> crate::Result<Coo<S>> {
+    let mut lineno = 1usize;
     let mut header = String::new();
     r.read_line(&mut header)?;
     let h: Vec<&str> = header.trim().split_whitespace().collect();
@@ -67,6 +77,7 @@ pub fn read_matrix_market_from<S: Scalar, R: BufRead>(mut r: R) -> crate::Result
     loop {
         line.clear();
         crate::ensure!(r.read_line(&mut line)? > 0, "EOF before size line");
+        lineno += 1;
         let t = line.trim();
         if !t.is_empty() && !t.starts_with('%') {
             break;
@@ -77,56 +88,80 @@ pub fn read_matrix_market_from<S: Scalar, R: BufRead>(mut r: R) -> crate::Result
         .split_whitespace()
         .map(|t| t.parse::<usize>())
         .collect::<Result<_, _>>()
-        .map_err(|e| crate::EhybError::Parse(format!("bad size line {line:?}: {e}")))?;
-    crate::ensure!(dims.len() == 3, "size line must have 3 fields");
+        .map_err(|e| entry_err(lineno, format!("bad size line {:?}: {e}", line.trim())))?;
+    if dims.len() != 3 {
+        return Err(entry_err(lineno, "size line must have 3 fields"));
+    }
     let (nrows, ncols, nnz) = (dims[0], dims[1], dims[2]);
 
     let mut coo = Coo::with_capacity(nrows, ncols, nnz * 2);
+    // Every coordinate this file may occupy, symmetric mirrors
+    // included: a duplicate would silently double a value under the old
+    // sum-duplicates policy, so it is rejected with its line number.
+    let mut occupied = std::collections::HashSet::with_capacity(nnz * 2);
     let mut seen = 0usize;
     loop {
         line.clear();
         if r.read_line(&mut line)? == 0 {
             break;
         }
+        lineno += 1;
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
         let mut it = t.split_whitespace();
-        let i: usize =
-            it.next().ok_or_else(|| crate::EhybError::Parse("missing row".into()))?.parse()?;
-        let j: usize =
-            it.next().ok_or_else(|| crate::EhybError::Parse("missing col".into()))?.parse()?;
+        let i: usize = it
+            .next()
+            .ok_or_else(|| entry_err(lineno, "missing row index"))?
+            .parse()
+            .map_err(|e| entry_err(lineno, format!("bad row index: {e}")))?;
+        let j: usize = it
+            .next()
+            .ok_or_else(|| entry_err(lineno, "missing column index"))?
+            .parse()
+            .map_err(|e| entry_err(lineno, format!("bad column index: {e}")))?;
         let v = match field {
             Field::Pattern => S::ONE,
             _ => {
-                let tok = it.next().ok_or_else(|| crate::EhybError::Parse("missing value".into()))?;
-                S::from_f64(tok.parse::<f64>()?)
+                let tok =
+                    it.next().ok_or_else(|| entry_err(lineno, "missing value"))?;
+                let f: f64 = tok
+                    .parse()
+                    .map_err(|e| entry_err(lineno, format!("bad value {tok:?}: {e}")))?;
+                if !f.is_finite() {
+                    return Err(entry_err(
+                        lineno,
+                        format!("non-finite value {f} at ({i},{j})"),
+                    ));
+                }
+                S::from_f64(f)
             }
         };
-        crate::ensure!(
-            i >= 1 && i <= nrows && j >= 1 && j <= ncols,
-            "entry ({i},{j}) out of range"
-        );
+        if !(i >= 1 && i <= nrows && j >= 1 && j <= ncols) {
+            return Err(entry_err(
+                lineno,
+                format!("entry ({i},{j}) outside {nrows}x{ncols}"),
+            ));
+        }
         let (r0, c0) = (i - 1, j - 1);
+        if !occupied.insert((r0, c0)) {
+            return Err(entry_err(lineno, format!("duplicate entry ({i},{j})")));
+        }
         coo.push(r0, c0, v);
-        match symmetry {
-            Symmetry::General => {}
-            Symmetry::Symmetric => {
-                if r0 != c0 {
-                    coo.push(c0, r0, v);
-                }
+        if symmetry != Symmetry::General && r0 != c0 {
+            if !occupied.insert((c0, r0)) {
+                return Err(entry_err(
+                    lineno,
+                    format!("duplicate entry ({i},{j}): mirror ({j},{i}) already present"),
+                ));
             }
-            Symmetry::SkewSymmetric => {
-                if r0 != c0 {
-                    coo.push(c0, r0, -v);
-                }
-            }
+            let mv = if symmetry == Symmetry::Symmetric { v } else { -v };
+            coo.push(c0, r0, mv);
         }
         seen += 1;
     }
     crate::ensure!(seen == nnz, "expected {nnz} entries, read {seen}");
-    coo.sum_duplicates();
     Ok(coo)
 }
 
@@ -208,6 +243,61 @@ mod tests {
     fn rejects_out_of_range() {
         let txt = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
         assert!(read_matrix_market_from::<f64, _>(Cursor::new(txt)).is_err());
+    }
+
+    fn parse_error_of(txt: &str) -> String {
+        match read_matrix_market_from::<f64, _>(Cursor::new(txt)) {
+            Err(crate::EhybError::Parse(msg)) => msg,
+            other => panic!("expected EhybError::Parse, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_nonfinite_value_with_line_number() {
+        // "inf" and "NaN" both parse as f64 — the finiteness check has
+        // to catch them explicitly, naming the offending line.
+        let txt = "%%MatrixMarket matrix coordinate real general\n3 3 2\n1 1 1.0\n2 2 inf\n";
+        let msg = parse_error_of(txt);
+        assert!(msg.contains("line 4") && msg.contains("non-finite"), "{msg}");
+        let txt = "%%MatrixMarket matrix coordinate real general\n3 3 1\n1 1 NaN\n";
+        let msg = parse_error_of(txt);
+        assert!(msg.contains("line 3") && msg.contains("non-finite"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_unparseable_tokens_with_line_number() {
+        let txt = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 x 1.0\n";
+        let msg = parse_error_of(txt);
+        assert!(msg.contains("line 3") && msg.contains("column index"), "{msg}");
+        let txt = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 abc\n";
+        let msg = parse_error_of(txt);
+        assert!(msg.contains("line 3") && msg.contains("\"abc\""), "{msg}");
+        let txt = "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1\n";
+        let msg = parse_error_of(txt);
+        assert!(msg.contains("line 3") && msg.contains("missing value"), "{msg}");
+    }
+
+    #[test]
+    fn out_of_range_error_names_its_line() {
+        let txt = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n1 5 2.0\n";
+        let msg = parse_error_of(txt);
+        assert!(msg.contains("line 4") && msg.contains("(1,5)"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_duplicate_entries_with_line_number() {
+        let txt = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n1 1 2.0\n";
+        let msg = parse_error_of(txt);
+        assert!(msg.contains("line 4") && msg.contains("duplicate"), "{msg}");
+    }
+
+    #[test]
+    fn rejects_symmetric_mirror_collision() {
+        // A symmetric file carrying both triangles: the second entry
+        // collides with the first one's expanded mirror.
+        let txt = "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n2 1 1.0\n1 2 2.0\n";
+        let msg = parse_error_of(txt);
+        assert!(msg.contains("line 4") && msg.contains("duplicate"), "{msg}");
     }
 
     #[test]

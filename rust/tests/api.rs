@@ -99,13 +99,13 @@ fn solver_and_service_agree_with_direct_engine() {
     let b: Vec<f64> = (0..n).map(|i| ((i % 11) as f64) / 11.0 - 0.5).collect();
     let pre = Jacobi::new(&a);
     let (x, rep) = ctx.solver().cg(&b, None, &pre, &SolverConfig::default()).unwrap();
-    assert!(rep.converged);
+    assert!(rep.converged());
     let mut ax = vec![0.0; n];
     a.spmv(&x, &mut ax);
     assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
     // bicgstab path too (works on SPD systems as well).
     let (x2, rep2) = ctx.solver().bicgstab(&b, None, &pre, &SolverConfig::default()).unwrap();
-    assert!(rep2.converged);
+    assert!(rep2.converged());
     let mut ax2 = vec![0.0; n];
     a.spmv(&x2, &mut ax2);
     assert_allclose(&ax2, &b, 1e-6, 1e-6).unwrap();

@@ -113,7 +113,7 @@ fn solvers_match_across_engines() {
     let scfg = SolverConfig::default();
     let (x1, r1) = cg(|v, y: &mut [f64]| a.spmv(v, y), &b, &vec![0.0; n], &pre, &scfg);
     let (x2, r2) = cg(|v, y: &mut [f64]| ehyb_engine.spmv(v, y), &b, &vec![0.0; n], &pre, &scfg);
-    assert!(r1.converged && r2.converged);
+    assert!(r1.converged() && r2.converged());
     assert_allclose(&x1, &x2, 1e-6, 1e-8).unwrap();
 }
 
@@ -133,7 +133,7 @@ fn bicgstab_spai_on_nonsymmetric_through_ehyb() {
         &pre,
         &SolverConfig { max_iters: 3000, ..Default::default() },
     );
-    assert!(rep.converged, "{rep:?}");
+    assert!(rep.converged(), "{rep:?}");
     let mut ax = vec![0.0; n];
     a.spmv(&x, &mut ax);
     assert_allclose(&ax, &b, 1e-6, 1e-7).unwrap();
@@ -159,7 +159,7 @@ fn service_solver_roundtrip() {
         &pre,
         &SolverConfig::default(),
     );
-    assert!(rep.converged);
+    assert!(rep.converged());
     let mut ax = vec![0.0; n];
     a.spmv(&x, &mut ax);
     // rtol-1e-8 solve: entries of b that are exactly 0 need a real atol.
@@ -192,7 +192,7 @@ fn context_facade_full_pipeline() {
     let many = ctx.solver().cg_many(&bs, &pre, &cfg).unwrap();
     assert_eq!(many.len(), 3);
     for (i, (xm, rep)) in many.iter().enumerate() {
-        assert!(rep.converged, "system {i}: {rep:?}");
+        assert!(rep.converged(), "system {i}: {rep:?}");
         let (x1, rep1) = ctx.solver().cg(&bs[i], None, &pre, &cfg).unwrap();
         assert_eq!(rep.iters, rep1.iters, "system {i}");
         assert_eq!(xm, &x1, "system {i}");

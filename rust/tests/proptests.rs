@@ -403,6 +403,53 @@ fn prop_l2_sim_sanity() {
 }
 
 #[test]
+fn prop_nan_fault_is_typed_or_propagated_never_panic() {
+    // ISSUE 6 satellite: a NaN planted by the deterministic fault
+    // injector must either be rejected with a typed NonFinite naming
+    // the poisoned index (Reject guard) or complete without panicking
+    // (default, unguarded) — on every engine kind.
+    use ehyb::{FaultInjector, FaultPlan, GuardLevel};
+    check_prop("nan-fault-typed-all-engines", 0xFA5EED, 12, |rng| {
+        let m = random_matrix(rng);
+        let n = m.nrows();
+        let vec_size = 32 * (1 + rng.next_below(4));
+        let cfg = PreprocessConfig { vec_size_override: Some(vec_size), ..Default::default() };
+        let plan = FaultPlan { nan_on_call: Some(1), ..FaultPlan::from_seed(rng.next_u64()) };
+        let inj = FaultInjector::new(plan);
+        let mut x = random_x(rng, n);
+        let idx = inj.poison(1, &mut x).ok_or("empty x")?;
+        for kind in EngineKind::ALL {
+            let rctx = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg.clone())
+                .guard(GuardLevel::Reject)
+                .build()
+                .map_err(|e| format!("{kind:?}: build: {e}"))?;
+            let mut y = vec![0.0; n];
+            match rctx.spmv(&x, &mut y) {
+                Err(EhybError::NonFinite { what: "x", index }) if index == idx => {}
+                other => {
+                    return Err(format!("{kind:?}: expected NonFinite at {idx}, got {other:?}"));
+                }
+            }
+            if rctx.health().rejected_inputs != 1 {
+                return Err(format!("{kind:?}: rejection not recorded in health"));
+            }
+            // Unguarded: the poisoned SpMV still completes (NaN may
+            // propagate into y, but never a panic or a hang).
+            let ctx = SpmvContext::builder(m.clone())
+                .engine(kind)
+                .config(cfg.clone())
+                .build()
+                .map_err(|e| format!("{kind:?}: build: {e}"))?;
+            let mut y = vec![0.0; n];
+            ctx.spmv(&x, &mut y).map_err(|e| format!("{kind:?}: unguarded spmv: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_solver_solves_spd() {
     check_prop("cg-solves-spd", 0x50D, 12, |rng| {
         // Random SPD: symmetrize values (A+Aᵀ)/2, then make it strictly
@@ -427,7 +474,7 @@ fn prop_solver_solves_spd() {
             &pre,
             &ehyb::coordinator::SolverConfig { max_iters: 4000, ..Default::default() },
         );
-        if !rep.converged {
+        if !rep.converged() {
             return Err(format!("CG failed: {rep:?}"));
         }
         let mut ax = vec![0.0; n];

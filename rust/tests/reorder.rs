@@ -274,7 +274,7 @@ fn reorder_shards_tune_compose_without_double_permuting() {
         .unwrap();
     let (sol_ref, rep_ref) = plain.solver().cg(&b, None, &pre, &scfg).unwrap();
     let (sol, rep) = reordered.solver().cg(&b, None, &pre, &scfg).unwrap();
-    assert!(rep.converged && rep_ref.converged);
+    assert!(rep.converged() && rep_ref.converged());
     assert_eq!(sol, sol_ref, "CG trajectory must be bitwise identical under reordering");
 }
 

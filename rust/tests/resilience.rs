@@ -1,0 +1,319 @@
+//! Deterministic chaos suite for the resilience layer (ISSUE 6): a
+//! seeded [`FaultPlan`] schedules engine panics, NaN-poisoned inputs,
+//! torn plan-cache entries, and queue saturation, and every injected
+//! fault must map to a typed `EhybError` or a recorded recovery —
+//! never a hang, a process abort, or a silently wrong answer. The CLI
+//! twin of this suite is `cargo run -- chaos --seed 7`.
+
+use ehyb::autotune::{tune_with_fingerprint, PlanStore};
+use ehyb::coordinator::service::{BatchKernel, SpmvService};
+use ehyb::coordinator::SolverConfig;
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::runtime::json::Json;
+use ehyb::sparse::coo::Coo;
+use ehyb::sparse::gen::poisson2d;
+use ehyb::util::check::assert_allclose;
+use ehyb::{
+    EhybError, EngineKind, FaultInjector, FaultPlan, GuardLevel, RetryPolicy, SpmvContext,
+    TuneLevel,
+};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// The suite's canonical seed — the same one the CI gate passes to the
+/// `chaos` subcommand, so a failure reproduces identically in both.
+const SEED: u64 = 7;
+
+fn context() -> SpmvContext<f64> {
+    let m = poisson2d::<f64>(16, 16);
+    SpmvContext::builder(m)
+        .engine(EngineKind::Ehyb)
+        .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+        .build()
+        .unwrap()
+}
+
+/// Service whose kernel is wrapped by a [`FaultInjector`]: the plan's
+/// scheduled call panics inside the engine, everything else passes
+/// through to the real EHYB kernel.
+fn faulting_service(ctx: &SpmvContext<f64>, plan: FaultPlan) -> (SpmvService<f64>, FaultInjector) {
+    let inj = FaultInjector::new(plan);
+    let engine = ctx.engine_arc();
+    let inj_kernel = inj.clone();
+    let svc = SpmvService::spawn(
+        move || {
+            let engine = engine.clone();
+            let fb = engine.format_bytes();
+            let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+            Ok((inj_kernel.wrap_kernel(kernel), fb))
+        },
+        ctx.nrows(),
+        8,
+    )
+    .unwrap();
+    (svc, inj)
+}
+
+fn probe_x(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i % 13) as f64) * 0.25 - 1.5).collect()
+}
+
+#[test]
+fn fault_plan_is_seed_deterministic_and_json_round_trips() {
+    let plan = FaultPlan::from_seed(SEED);
+    assert_eq!(plan, FaultPlan::from_seed(SEED), "same seed must give the same schedule");
+    assert_ne!(plan, FaultPlan::from_seed(SEED + 1));
+    let text = plan.to_json().dump();
+    let back = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, plan, "JSON round-trip drifted: {text}");
+    // Disabled fault classes survive the round-trip as JSON null.
+    let partial = FaultPlan { nan_on_call: None, torn_cache_bytes: None, ..plan };
+    let back = FaultPlan::from_json(&Json::parse(&partial.to_json().dump()).unwrap()).unwrap();
+    assert_eq!(back, partial);
+}
+
+#[test]
+fn scheduled_engine_panic_poisons_one_batch_and_service_recovers() {
+    let ctx = context();
+    let plan = FaultPlan::from_seed(SEED);
+    let panic_on = plan.panic_on_call.expect("from_seed schedules a panic");
+    let (svc, inj) = faulting_service(&ctx, plan);
+    let client = svc.client();
+    let x = probe_x(ctx.nrows());
+    let want = ctx.matrix().spmv_f64_oracle(&x);
+    // Every call before the scheduled one serves correctly.
+    for call in 1..panic_on {
+        let y = client.spmv(x.clone()).unwrap_or_else(|e| panic!("call {call} failed: {e}"));
+        assert_allclose(&y, &want, 1e-12, 1e-12).unwrap();
+    }
+    // The scheduled call panics inside the kernel: exactly this request
+    // gets the typed fault — the panic never crosses the service
+    // boundary and the process never aborts.
+    match client.spmv(x.clone()) {
+        Err(EhybError::EngineFault(msg)) => {
+            assert!(msg.contains("injected engine fault"), "{msg}");
+        }
+        other => panic!("expected EngineFault on call {panic_on}, got {other:?}"),
+    }
+    // The respawned engine serves the very next request correctly.
+    let y = client.spmv(x.clone()).unwrap();
+    assert_allclose(&y, &want, 1e-12, 1e-12).unwrap();
+    assert_eq!(svc.metrics.faults.load(Ordering::Relaxed), 1);
+    assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
+    // The injector counted every kernel call, poisoned or not.
+    assert_eq!(inj.calls(), panic_on + 1);
+    // Poisoned batches never enter the execution accounting.
+    assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), panic_on);
+}
+
+#[test]
+fn retry_policy_recovers_the_injected_fault_within_budget() {
+    let ctx = context();
+    // Panic on the first kernel call: the retry lands on the respawned
+    // engine and the caller never observes the fault.
+    let plan = FaultPlan { panic_on_call: Some(1), ..FaultPlan::from_seed(SEED) };
+    let (svc, _inj) = faulting_service(&ctx, plan);
+    let policy = RetryPolicy {
+        max_attempts: 3,
+        base_delay: Duration::from_micros(200),
+        max_delay: Duration::from_millis(2),
+        seed: SEED,
+    };
+    let x = probe_x(ctx.nrows());
+    let y = svc.client().spmv_with_retry(x.clone(), &policy).unwrap();
+    assert_allclose(&y, &ctx.matrix().spmv_f64_oracle(&x), 1e-12, 1e-12).unwrap();
+    assert_eq!(svc.metrics.faults.load(Ordering::Relaxed), 1);
+    assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn expired_deadline_is_typed_and_never_occupies_kernel_width() {
+    let ctx = context();
+    let svc = ctx.serve(8).unwrap();
+    let client = svc.client();
+    let x = probe_x(ctx.nrows());
+    // Already expired at submit time: whenever the drain happens, the
+    // triage fires — deterministic without any gate.
+    match client.spmv_deadline(x.clone(), Instant::now() - Duration::from_millis(5)) {
+        Err(EhybError::DeadlineExceeded) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(svc.metrics.deadline_misses.load(Ordering::Relaxed), 1);
+    // A live request on the same service still round-trips.
+    let y = client.spmv_deadline(x.clone(), Instant::now() + Duration::from_secs(60)).unwrap();
+    assert_allclose(&y, &ctx.matrix().spmv_f64_oracle(&x), 1e-12, 1e-12).unwrap();
+    assert_eq!(svc.metrics.deadline_misses.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn saturation_sheds_exactly_the_flood_beyond_the_bound() {
+    // Gate-driven depth-1 queue: r1 blocks inside the kernel, r2 holds
+    // the only slot, and the plan's whole flood sheds with the typed
+    // backpressure error — each shed handing its buffer back.
+    let ctx = context();
+    let n = ctx.nrows();
+    let plan = FaultPlan::from_seed(SEED);
+    let engine = ctx.engine_arc();
+    let (started_tx, started_rx) = mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let mut rig = Some((started_tx, gate_rx));
+    let svc: SpmvService<f64> = SpmvService::spawn_bounded(
+        move || {
+            let engine = engine.clone();
+            let fb = engine.format_bytes();
+            let (stx, grx) = rig.take().expect("gated rig builds one engine");
+            let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                stx.send(()).unwrap();
+                grx.recv().unwrap();
+                engine.spmv_batch(xs, ys)
+            });
+            Ok((kernel, fb))
+        },
+        n,
+        8,
+        1,
+    )
+    .unwrap();
+    let client = svc.client();
+    let rx1 = client.submit(probe_x(n)).unwrap();
+    started_rx.recv().unwrap(); // r1 is inside the kernel
+    let rx2 = client.submit(probe_x(n)).unwrap(); // occupies the slot
+    for i in 0..plan.saturate_requests {
+        match client.try_submit(probe_x(n)) {
+            Err((EhybError::Overloaded { queue_depth: 1 }, x)) => assert_eq!(x.len(), n),
+            other => panic!("flood request {i}: expected Overloaded, got {:?}", other.map(|_| ())),
+        }
+    }
+    assert_eq!(svc.metrics.shed.load(Ordering::Relaxed), plan.saturate_requests);
+    // Release the two accepted drains; both complete correctly.
+    gate_tx.send(()).unwrap();
+    gate_tx.send(()).unwrap();
+    let want = ctx.matrix().spmv_f64_oracle(&probe_x(n));
+    assert_allclose(&rx1.recv().unwrap().unwrap(), &want, 1e-12, 1e-12).unwrap();
+    assert_allclose(&rx2.recv().unwrap().unwrap(), &want, 1e-12, 1e-12).unwrap();
+    // Sheds never enter the width histogram.
+    assert_eq!(svc.metrics.batch_width.count(), svc.metrics.batches.load(Ordering::Relaxed));
+    drop(gate_tx);
+}
+
+#[test]
+fn nan_poisoned_input_is_rejected_or_monitored_never_silent() {
+    let m = poisson2d::<f64>(16, 16);
+    let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+    let plan = FaultPlan::from_seed(SEED);
+    let call = plan.nan_on_call.expect("from_seed schedules a NaN");
+    let inj = FaultInjector::new(plan);
+    let mut x = probe_x(256);
+    let idx = inj.poison(call, &mut x).expect("poison fires on its scheduled call");
+    assert!(x[idx].is_nan());
+
+    // Reject guard: the typed error names the poisoned index and the
+    // rejection is recorded — the NaN never reaches the engine.
+    let rctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .guard(GuardLevel::Reject)
+        .build()
+        .unwrap();
+    match rctx.spmv_alloc(&x) {
+        Err(EhybError::NonFinite { what: "x", index }) => assert_eq!(index, idx),
+        other => panic!("expected NonFinite at {idx}, got {other:?}"),
+    }
+    assert_eq!(rctx.health().rejected_inputs, 1);
+
+    // Monitor guard: the call proceeds but the non-finite output is
+    // recorded — degraded data is visible, not silent.
+    let mctx = SpmvContext::builder(m)
+        .engine(EngineKind::CsrVector)
+        .config(cfg)
+        .guard(GuardLevel::Monitor)
+        .build()
+        .unwrap();
+    let y = mctx.spmv_alloc(&x).unwrap();
+    assert!(y.iter().any(|v| v.is_nan()), "NaN input must propagate under Monitor");
+    let h = mctx.health();
+    assert!(h.nonfinite_outputs >= 1);
+    assert!(!h.healthy() && !h.degraded());
+}
+
+#[test]
+fn torn_plan_cache_entry_is_quarantined_and_retuning_recovers() {
+    let m = poisson2d::<f64>(16, 16);
+    let cfg = PreprocessConfig { vec_size_override: Some(64), ..Default::default() };
+    let dir = std::env::temp_dir().join(format!("ehyb-chaos-store-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = PlanStore::new(&dir);
+    // A real tuned plan, persisted atomically...
+    let out = tune_with_fingerprint(&m, &cfg, EngineKind::Ehyb, TuneLevel::Heuristic, None).unwrap();
+    let p = out.plan;
+    let path = store.save(&p).unwrap();
+    // ...then torn mid-file by the injector (a crashed writer without
+    // the temp-file + rename protocol).
+    let inj = FaultInjector::new(FaultPlan::from_seed(SEED));
+    assert!(inj.tear_file(&path).unwrap(), "from_seed schedules a tear");
+    assert!(store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).is_err());
+    assert_eq!(store.quarantines(), 1);
+    // The damage is moved aside: the key reads as a cold miss and a
+    // fresh tune re-occupies it.
+    assert!(store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).unwrap().is_none());
+    assert_eq!(store.quarantines(), 1);
+    store.save(&p).unwrap();
+    let back = store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).unwrap().unwrap();
+    assert_eq!(back, p);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn failed_ehyb_build_degrades_to_baseline_and_is_recorded() {
+    // EHYB preprocessing needs a square matrix; with fallback enabled
+    // the build downgrades to csr-vector instead of failing — recorded
+    // in health, and the degraded engine still computes correctly.
+    let mut coo = Coo::<f64>::new(3, 4);
+    coo.push(0, 0, 1.0);
+    coo.push(0, 3, 2.0);
+    coo.push(1, 1, 2.0);
+    coo.push(2, 2, 2.0);
+    let ctx = SpmvContext::builder(coo.to_csr())
+        .engine(EngineKind::Ehyb)
+        .fallback(true)
+        .build()
+        .unwrap();
+    assert_eq!(ctx.kind(), EngineKind::CsrVector);
+    assert_eq!(ctx.requested_kind(), EngineKind::Ehyb);
+    let h = ctx.health();
+    assert!(h.degraded());
+    assert_eq!(h.engine_fallbacks, 1);
+    assert_eq!(ctx.spmv_alloc(&[1.0; 4]).unwrap(), vec![3.0, 2.0, 2.0]);
+    // Strict (default) contexts keep failing loudly.
+    let mut coo = Coo::<f64>::new(3, 4);
+    coo.push(0, 0, 1.0);
+    assert!(SpmvContext::builder(coo.to_csr()).engine(EngineKind::Ehyb).build().is_err());
+}
+
+#[test]
+fn diverging_solve_restarts_once_and_recovers() {
+    // Jordan block [[1, 2], [0, 1]] with b = (0, 1): CG on this
+    // nonsymmetric system diverges (residual grows immediately), the
+    // fallback restart runs Jacobi-preconditioned BiCGSTAB, which
+    // converges exactly to x = (-2, 1).
+    let mut coo = Coo::<f64>::new(2, 2);
+    coo.push(0, 0, 1.0);
+    coo.push(0, 1, 2.0);
+    coo.push(1, 1, 1.0);
+    let ctx = SpmvContext::builder(coo.to_csr())
+        .engine(EngineKind::CsrVector)
+        .fallback(true)
+        .build()
+        .unwrap();
+    let cfg = SolverConfig { divergence_window: 1, ..Default::default() };
+    let b = [0.0, 1.0];
+    let (x, rep) =
+        ctx.solver().cg(&b, None, &ehyb::coordinator::precond::Identity, &cfg).unwrap();
+    assert!(rep.converged(), "restart must converge: {rep:?}");
+    assert_eq!(rep.solver, "bicgstab");
+    assert_allclose(&x, &[-2.0, 1.0], 1e-10, 1e-10).unwrap();
+    let h = ctx.health();
+    assert_eq!(h.solver_restarts, 1);
+    assert!(h.events.iter().any(|e| e.contains("diverged")), "{:?}", h.events);
+}

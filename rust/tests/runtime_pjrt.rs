@@ -174,7 +174,7 @@ fn pjrt_cg_solver_end_to_end() {
         &pre,
         &ehyb::coordinator::SolverConfig::default(),
     );
-    assert!(rep.converged, "{rep:?}");
+    assert!(rep.converged(), "{rep:?}");
     let mut ax = vec![0.0; n];
     m.spmv(&x, &mut ax);
     assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();

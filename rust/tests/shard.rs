@@ -240,16 +240,16 @@ fn cg_runs_unchanged_on_sharded_engine() {
     let scfg = ehyb::coordinator::SolverConfig::default();
     let base = SpmvContext::builder(m.clone()).engine(EngineKind::CsrScalar).build().unwrap();
     let (x_ref, rep_ref) = base.solver().cg(&b, None, &pre, &scfg).unwrap();
-    assert!(rep_ref.converged);
+    assert!(rep_ref.converged());
     let ctx = sharded_ctx(&m, EngineKind::CsrScalar, 5, ShardStrategy::CacheAware, 64);
     let (x, rep) = ctx.solver().cg(&b, None, &pre, &scfg).unwrap();
-    assert!(rep.converged);
+    assert!(rep.converged());
     assert_eq!(rep.iters, rep_ref.iters);
     assert_eq!(x, x_ref, "sharded CG trajectory must be bitwise identical");
     // And the sharded EHYB engine still solves (roundoff-equivalent).
     let ehyb_ctx = sharded_ctx(&m, EngineKind::Ehyb, 3, ShardStrategy::CacheAware, 64);
     let (xe, repe) = ehyb_ctx.solver().cg(&b, None, &pre, &scfg).unwrap();
-    assert!(repe.converged);
+    assert!(repe.converged());
     let mut ax = vec![0.0; n];
     m.spmv(&xe, &mut ax);
     assert_allclose(&ax, &b, 1e-6, 1e-6).unwrap();
@@ -268,7 +268,7 @@ fn cg_many_fuses_on_sharded_engine() {
     let sols = ctx.solver().cg_many(&bs, &pre, &scfg).unwrap();
     assert_eq!(sols.len(), 3);
     for (b, (x, rep)) in bs.iter().zip(&sols) {
-        assert!(rep.converged, "{rep:?}");
+        assert!(rep.converged(), "{rep:?}");
         let mut ax = vec![0.0; n];
         m.spmv(x, &mut ax);
         assert_allclose(&ax, b, 1e-6, 1e-6).unwrap();

@@ -21,6 +21,36 @@ fn stub_runtime_new_is_typed_runtime_error() {
 }
 
 #[test]
+fn stub_runtime_fault_inside_service_is_engine_fault_not_panic() {
+    // ISSUE 6 satellite: a deployment that unwraps the stub runtime on
+    // the serving path panics *inside* the kernel — the service must
+    // map that to a typed EngineFault reply (and respawn), never let
+    // the panic cross the service boundary or abort the process.
+    use ehyb::coordinator::service::{BatchKernel, SpmvService};
+    use std::sync::atomic::Ordering;
+    let svc: SpmvService<f64> = SpmvService::spawn(
+        || {
+            let kernel: BatchKernel<f64> = Box::new(|_xs, _ys| {
+                let _ = PjrtRuntime::new("/definitely-missing-artifacts").unwrap();
+            });
+            Ok((kernel, 0))
+        },
+        8,
+        4,
+    )
+    .unwrap();
+    let client = svc.client();
+    match client.spmv(vec![1.0; 8]) {
+        Err(EhybError::EngineFault(msg)) => {
+            assert!(msg.contains("pjrt"), "fault should carry the stub's message: {msg}");
+        }
+        other => panic!("expected EngineFault, got {other:?}"),
+    }
+    assert_eq!(svc.metrics.faults.load(Ordering::Relaxed), 1);
+    assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 1);
+}
+
+#[test]
 fn pipeline_works_without_pjrt() {
     // The artifact-missing fallback: the full facade pipeline runs on
     // the CPU engines with the stub compiled in.
