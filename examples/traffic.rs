@@ -1,0 +1,98 @@
+//! Storage-traffic simulation end to end (the CI traffic gate runs
+//! exactly this).
+//!
+//! ```text
+//! cargo run --release --example traffic
+//! ```
+//!
+//! 1. Replay every engine's prepared plan over a FEM-like mesh and
+//!    print the per-engine traffic table: simulated DRAM/L2/shm bytes,
+//!    L2 hit rate, x-reuse factor, hit-aware predicted time next to
+//!    measured CPU GFLOPS.
+//! 2. Assert the ISSUE 7 headline: EHYB's explicit cache moves no more
+//!    x DRAM bytes than the CSR gather walk, and its shared-memory
+//!    level actually serves traffic.
+//! 3. Replay a 4-way row sharding and print the attributable halo
+//!    (cross-shard x) DRAM bytes.
+//! 4. Run the oracle-vs-measured validation on two matrices and print
+//!    the agreement table.
+
+use ehyb::gpu::GpuDevice;
+use ehyb::harness::ablation::traffic_ablation;
+use ehyb::harness::report;
+use ehyb::harness::traffic_validation;
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::shard::{ShardPlan, ShardStrategy};
+use ehyb::sparse::gen::{poisson2d, unstructured_mesh};
+use ehyb::traffic::{baseline_traffic, ehyb_traffic, shard_traffic};
+use ehyb::EngineKind;
+
+fn main() -> anyhow::Result<()> {
+    let dev = GpuDevice::v100();
+    let cfg = PreprocessConfig { vec_size_override: Some(256), ..Default::default() };
+    let m = unstructured_mesh::<f64>(56, 56, 0.4, 7);
+
+    // 1. Per-engine replay table (simulated bytes next to measured
+    // GFLOPS — the same table `ehyb ablation --which traffic` emits).
+    let rows = traffic_ablation(&m, &cfg, &dev)?;
+    println!(
+        "{}",
+        report::traffic_markdown("unstructured-mesh (3.1k) — simulated storage traffic", &rows)
+    );
+
+    // 2. The paper's §3.1 claim as a byte count: the explicit cache
+    // fetches each x slice once, so EHYB must not move more x DRAM
+    // bytes than the CSR gather walk re-fetching through L2.
+    let plan = EhybPlan::build(&m, &cfg)?;
+    let e = ehyb_traffic(&plan.matrix, &dev);
+    let c = baseline_traffic(EngineKind::CsrVector, &m, &dev);
+    anyhow::ensure!(e.shm.read_bytes > 0, "EHYB ELL gathers must be shm-served");
+    anyhow::ensure!(
+        e.x.dram_bytes <= c.x.dram_bytes,
+        "ehyb x DRAM {} exceeds csr-vector x DRAM {}",
+        e.x.dram_bytes,
+        c.x.dram_bytes
+    );
+    println!(
+        "x DRAM      : ehyb {} B (reuse {:.2}) vs csr-vector {} B (reuse {:.2})",
+        e.x.dram_bytes,
+        e.x.reuse_factor(),
+        c.x.dram_bytes,
+        c.x.reuse_factor()
+    );
+    println!(
+        "predicted   : ehyb {:.2} us vs csr-vector {:.2} us (hit-aware replay)",
+        1e6 * e.predicted_secs,
+        1e6 * c.predicted_secs
+    );
+
+    // 3. Shard replay: halo gathers are attributable bytes, not a proxy.
+    let sm = poisson2d::<f64>(64, 64);
+    let splan = ShardPlan::new(&sm, 4, ShardStrategy::NnzBalanced);
+    let st = shard_traffic(&sm, &splan, &dev);
+    anyhow::ensure!(st.shards.len() == 4);
+    anyhow::ensure!(st.halo_dram_bytes > 0, "5-point stencil must cross shard boundaries");
+    println!(
+        "shards      : 4 x csr replay, total DRAM {} B, halo x DRAM {} B, halo nnz {:?}",
+        st.total_dram_bytes(),
+        st.halo_dram_bytes,
+        st.halo_nnz
+    );
+    println!("shard bound : {:.2} us (slowest shard)", 1e6 * st.predicted_secs());
+
+    // 4. Oracle-vs-measured validation (the `bench --validate` mode).
+    let mut vrows = Vec::new();
+    for (name, vm) in [
+        ("poisson2d-48", poisson2d::<f64>(48, 48)),
+        ("mesh-40", unstructured_mesh::<f64>(40, 40, 0.5, 3)),
+    ] {
+        vrows.push(traffic_validation(name, &vm, &PreprocessConfig::default())?);
+    }
+    println!(
+        "{}",
+        report::traffic_validation_markdown("Traffic oracle vs measured winner", &vrows)
+    );
+
+    println!("ok");
+    Ok(())
+}

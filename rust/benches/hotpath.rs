@@ -110,6 +110,26 @@ fn main() {
             println!("  {name:>20}: {gf:7.3} GFLOPS ({band})");
             engine_rows.push((name, gf));
         }
+        // Predicted-vs-measured (ISSUE 7): the replayed traffic
+        // simulator's hit-aware GFLOPS land in BENCH_ci.json next to
+        // the measured rows, so prediction drift is visible per commit.
+        if smoke {
+            let dev = ehyb::gpu::GpuDevice::v100();
+            for kind in [EngineKind::Ehyb, EngineKind::CsrVector] {
+                let report = if kind == EngineKind::Ehyb {
+                    let plan = EhybPlan::build(m, &cfg).expect("ehyb plan");
+                    ehyb::traffic::ehyb_traffic(&plan.matrix, &dev)
+                } else {
+                    ehyb::traffic::baseline_traffic(kind, m, &dev)
+                };
+                let name = format!("traffic-predicted-{}", kind.name());
+                println!(
+                    "  {name:>22}: {:7.3} GFLOPS (simulated V100 replay)",
+                    report.gflops()
+                );
+                engine_rows.push((name, report.gflops()));
+            }
+        }
         json_cases.push(BenchCase {
             matrix: label.split_whitespace().next().unwrap_or(label).to_string(),
             n: m.nrows(),

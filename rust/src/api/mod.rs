@@ -16,10 +16,12 @@
 //!
 //! [`EngineKind::Auto`] and [`SpmvContextBuilder::tune`] route through
 //! the [`crate::autotune`] tuner: the plan knobs (and for `Auto` the
-//! engine kind itself) are searched per matrix — roofline-scored at
-//! [`TuneLevel::Heuristic`], microbenched at [`TuneLevel::Measured`] —
-//! and the winner can persist in a [`PlanStore`] so a restarted process
-//! warm-starts with zero search.
+//! engine kind itself) are searched per matrix — scored at
+//! [`TuneLevel::Heuristic`] by the configured [`ScoreOracle`] (the
+//! replayed [`crate::traffic`] simulation by default, roofline bounds
+//! via [`SpmvContextBuilder::score_oracle`]), microbenched at
+//! [`TuneLevel::Measured`] — and the winner can persist in a
+//! [`PlanStore`] so a restarted process warm-starts with zero search.
 
 pub mod batch;
 pub mod error;
@@ -27,7 +29,7 @@ pub mod error;
 pub use batch::{BatchBuf, VecBatch, VecBatchMut};
 pub use error::EhybError;
 
-use crate::autotune::{self, Fingerprint, PlanStore, TuneLevel, TunedPlan};
+use crate::autotune::{self, Fingerprint, PlanStore, ScoreOracle, TuneLevel, TunedPlan};
 use crate::coordinator::precond::{Jacobi, Preconditioner};
 use crate::coordinator::service::{self, BatchKernel, SpmvService};
 use crate::coordinator::solver::{self, SolveReport, SolveStatus, SolverConfig};
@@ -52,9 +54,10 @@ use std::sync::{Arc, OnceLock};
 /// Which prepared engine a [`SpmvContext`] should carry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
-    /// Choose via the [`crate::autotune`] tuner (heuristic roofline
-    /// scoring unless [`SpmvContextBuilder::tune`] asked for measured
-    /// probes): EHYB when its plan wins, else the best baseline.
+    /// Choose via the [`crate::autotune`] tuner (heuristic scoring
+    /// through the builder's [`ScoreOracle`] unless
+    /// [`SpmvContextBuilder::tune`] asked for measured probes): EHYB
+    /// when its plan wins, else the best baseline.
     Auto,
     /// The paper's explicitly-cached hybrid engine (requires a square
     /// matrix; runs Algorithms 1–2 at build time).
@@ -184,6 +187,7 @@ pub struct SpmvContextBuilder<S: Scalar> {
     reorder: Option<ReorderSpec>,
     fallback: bool,
     guard: GuardLevel,
+    oracle: ScoreOracle,
 }
 
 impl<S: Scalar> SpmvContextBuilder<S> {
@@ -207,6 +211,17 @@ impl<S: Scalar> SpmvContextBuilder<S> {
     /// warm-start later builds with zero search.
     pub fn tune(mut self, level: TuneLevel) -> Self {
         self.tune = Some(level);
+        self
+    }
+
+    /// How [`TuneLevel::Heuristic`] searches score candidates (default
+    /// [`ScoreOracle::Traffic`] — the replayed [`crate::traffic`]
+    /// storage simulation). [`ScoreOracle::Roofline`] restores the
+    /// pre-0.7 closed-form [`crate::perfmodel`] bounds. Ignored by
+    /// measured-level tuning, which times real engines; cached
+    /// heuristic plans only hit when their recorded oracle matches.
+    pub fn score_oracle(mut self, oracle: ScoreOracle) -> Self {
+        self.oracle = oracle;
         self
     }
 
@@ -305,6 +320,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             reorder,
             fallback,
             guard,
+            oracle,
         } = self;
         // Degradation ledger — shared with the solver handle so a
         // fallback build and a restarted solve report through one
@@ -412,7 +428,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                     .and_then(|(s, fp)| {
                         s.load(&fp.key(), &device, S::NAME, requested.name()).ok().flatten()
                     })
-                    .filter(|tp| tp.usable_for(requested, level, &cfg_key))
+                    .filter(|tp| tp.usable_for(requested, level, oracle, &cfg_key))
                     .filter(|tp| tp.reorder == reorder_tag);
                 // Adopt the cached plan — unless rebuilding it fails
                 // (stale entry for a matrix/config drift the keys did
@@ -435,15 +451,15 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                     }
                     None => {
                         let searched = if explicit {
-                            autotune::tuner::tune_with_fingerprint(
-                                exec, &config, requested, level, fp,
+                            autotune::tuner::tune_scored(
+                                exec, &config, requested, level, oracle, fp,
                             )
                         } else {
                             // Implicit `Auto` (no `.tune(..)`): engine
                             // choice only — one preprocessing pass,
-                            // like the pre-tuner roofline comparison.
+                            // like the pre-tuner engine comparison.
                             // The knob search stays opt-in.
-                            autotune::tuner::choose_engine(exec, &config, level, fp)
+                            autotune::tuner::choose_engine(exec, &config, level, oracle, fp)
                         };
                         match searched {
                             Err(e) if fallback => {
@@ -525,6 +541,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                             &block,
                             &config,
                             level,
+                            oracle,
                             store.as_ref(),
                             &reorder_tag,
                         )?;
@@ -599,6 +616,7 @@ fn tune_shard_block<S: Scalar>(
     block: &Csr<S>,
     base: &PreprocessConfig,
     level: TuneLevel,
+    oracle: ScoreOracle,
     store: Option<&PlanStore>,
     reorder_tag: &str,
 ) -> crate::Result<(TunedPlan, PreprocessConfig, Option<EhybPlan<S>>)> {
@@ -607,7 +625,7 @@ fn tune_shard_block<S: Scalar>(
     let cfg_key = autotune::config_key(base);
     let hit = store
         .and_then(|s| s.load(&fp.key(), &device, S::NAME, EngineKind::Ehyb.name()).ok().flatten())
-        .filter(|tp| tp.usable_for(EngineKind::Ehyb, level, &cfg_key))
+        .filter(|tp| tp.usable_for(EngineKind::Ehyb, level, oracle, &cfg_key))
         .filter(|tp| tp.reorder == reorder_tag);
     if let Some(tp) = hit {
         let cfg = tp.apply(base);
@@ -619,7 +637,7 @@ fn tune_shard_block<S: Scalar>(
         }
     }
     let mut out =
-        autotune::tuner::tune_with_fingerprint(block, base, EngineKind::Ehyb, level, Some(fp))?;
+        autotune::tuner::tune_scored(block, base, EngineKind::Ehyb, level, oracle, Some(fp))?;
     // The block is a block of the already-reordered matrix; record the
     // ordering provenance just like the whole-matrix entry does.
     out.plan.reorder = reorder_tag.to_string();
@@ -715,6 +733,7 @@ impl<S: Scalar> SpmvContext<S> {
             reorder: None,
             fallback: false,
             guard: GuardLevel::Off,
+            oracle: ScoreOracle::default(),
         }
     }
 

@@ -9,8 +9,10 @@
 //!   partition count vs. the shared-memory budget from
 //!   [`crate::preprocess::cache_size::cache_plan`], the ELL/ER width
 //!   cutoff, and the engine kind) at two [`TuneLevel`]s: `Heuristic`
-//!   scored by the [`crate::perfmodel`] roofline bounds, `Measured`
-//!   timing budget-capped probes of the real candidate engines.
+//!   scored by a [`ScoreOracle`] — replayed [`crate::traffic`]
+//!   simulation by default, [`crate::perfmodel`] roofline bounds on
+//!   request — and `Measured` timing budget-capped probes of the real
+//!   candidate engines across `spmv`/`spmv_batch` widths.
 //! * [`store`] — the persistent plan cache: JSON via
 //!   [`crate::runtime::json`], atomic writes, keyed by
 //!   fingerprint × device × scalar type.
@@ -34,7 +36,10 @@ pub mod tuner;
 
 pub use fingerprint::Fingerprint;
 pub use store::PlanStore;
-pub use tuner::{choose_engine, tune, tune_with_fingerprint, TuneLevel, TuneOutcome, TunedPlan};
+pub use tuner::{
+    choose_engine, tune, tune_scored, tune_with_fingerprint, ScoreOracle, TuneLevel, TuneOutcome,
+    TunedPlan,
+};
 
 use crate::preprocess::cache_size::DeviceParams;
 use crate::preprocess::PreprocessConfig;

@@ -173,6 +173,8 @@ mod tests {
             base_config: "sd1-Multilevel-r4-c8-s9e3779b9".into(),
             scope: "ehyb".into(),
             reorder: "none".into(),
+            oracle: "roofline".into(),
+            probe_width: 0,
         }
     }
 

@@ -4,17 +4,24 @@
 //!
 //! Two search modes:
 //!
-//! * [`TuneLevel::Heuristic`] — score = the [`crate::perfmodel`]
-//!   roofline-predicted seconds per SpMV (total idealized bytes /
-//!   HBM bandwidth). Free of wall-clock noise; no kernel runs.
+//! * [`TuneLevel::Heuristic`] — score = model-predicted seconds per
+//!   SpMV from the configured [`ScoreOracle`]: the replayed
+//!   storage-traffic simulation ([`crate::traffic`], the default — it
+//!   sees x reuse, L2 capacity, and the explicit cache) or the
+//!   [`crate::perfmodel`] roofline bounds (`ScoreOracle::Roofline`,
+//!   the pre-0.7 behaviour). Free of wall-clock noise; no kernel runs.
 //! * [`TuneLevel::Measured`] — score = measured seconds per SpMV of a
-//!   real microbench probe of each candidate engine, capped by a time
-//!   **budget**: the default plan is always measured, further
-//!   candidates are probed only while the budget has room.
+//!   real microbench probe of each candidate engine — the best
+//!   per-vector time across `spmv_batch` widths B ∈ {1, 4, 8}, since
+//!   service workloads are batched; the winning width is recorded in
+//!   [`TunedPlan::probe_width`] — capped by a time **budget**: the
+//!   default plan is always measured, further candidates are probed
+//!   only while the budget has room.
 //!
 //! Selection guarantee (ISSUE 3 acceptance): the default plan is the
-//! first scored candidate and is replaced only by a *strictly lower*
-//! score, so the tuned plan's score is never worse than the default's.
+//! first scored candidate (under the same oracle and the same probe
+//! widths) and is replaced only by a *strictly lower* score, so the
+//! tuned plan's score is never worse than the default's.
 
 use super::fingerprint::Fingerprint;
 use crate::api::EngineKind;
@@ -52,6 +59,40 @@ impl TuneLevel {
         match self {
             TuneLevel::Heuristic => "heuristic",
             TuneLevel::Measured { .. } => "measured",
+        }
+    }
+}
+
+/// What [`TuneLevel::Heuristic`] scores candidates with. (`Measured`
+/// probes wall clock and ignores this.)
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScoreOracle {
+    /// Replay the candidate plan through the storage-traffic simulator
+    /// ([`crate::traffic`]): per-level byte counters with hits
+    /// credited. Sees the explicit x-cache, u16 columns, L2 capacity.
+    #[default]
+    Traffic,
+    /// The 0.6 static roofline bounds ([`crate::perfmodel`]):
+    /// compulsory bytes / HBM bandwidth. Cheaper (O(1) per candidate
+    /// once the plan is built) but blind to reuse.
+    Roofline,
+}
+
+impl ScoreOracle {
+    /// Tag stored in persisted plans ("traffic" / "roofline").
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ScoreOracle::Traffic => "traffic",
+            ScoreOracle::Roofline => "roofline",
+        }
+    }
+
+    /// Inverse of [`ScoreOracle::tag`] (CLI `--oracle` parsing).
+    pub fn from_name(s: &str) -> Option<ScoreOracle> {
+        match s {
+            "traffic" => Some(ScoreOracle::Traffic),
+            "roofline" => Some(ScoreOracle::Roofline),
+            _ => None,
         }
     }
 }
@@ -105,6 +146,20 @@ pub struct TunedPlan {
     /// "none" — the facade (which owns the reordering) stamps the tag
     /// before persisting. Entries written before 0.5 load as "none".
     pub reorder: String,
+    /// [`ScoreOracle::tag`] the search was configured with ("traffic" |
+    /// "roofline") — meaningful provenance for heuristic plans (their
+    /// `score_secs` is that model's prediction); measured plans record
+    /// the knob too but their scores are wall clock. A heuristic cache
+    /// hit is honored only when the oracles match, so switching oracle
+    /// re-scores instead of silently reusing the other model's ranking.
+    /// Entries written before 0.7 load as "roofline" — that is what
+    /// scored them.
+    pub oracle: String,
+    /// `Measured` probes `spmv_batch` widths {1, 4, 8}; this is the
+    /// width whose per-vector time won (1 = single-vector spmv).
+    /// 0 for heuristic plans (nothing was probed). Pre-0.7 measured
+    /// entries load as 1 — they only ever probed B = 1.
+    pub probe_width: u32,
 }
 
 /// Overlay the three tuned knobs onto a base config — THE single code
@@ -155,6 +210,8 @@ impl TunedPlan {
             ("base_config", Json::Str(self.base_config.clone())),
             ("scope", Json::Str(self.scope.clone())),
             ("reorder", Json::Str(self.reorder.clone())),
+            ("oracle", Json::Str(self.oracle.clone())),
+            ("probe_width", Json::Num(self.probe_width as f64)),
         ])
     }
 
@@ -166,13 +223,26 @@ impl TunedPlan {
     /// * a measured plan serves both levels (it supersedes the
     ///   heuristic model), a heuristic plan never serves a measured
     ///   request — so `Measured` always gets real probes;
+    /// * a heuristic plan serves a heuristic request only when it was
+    ///   scored by the same [`ScoreOracle`] — a roofline-era entry
+    ///   must not masquerade as a traffic-simulated ranking (measured
+    ///   plans supersede either oracle);
     /// * the base config (seed knobs included) must match exactly —
     ///   otherwise the cached search started from a different default
     ///   plan and its scores do not describe this build.
-    pub fn usable_for(&self, requested: EngineKind, level: TuneLevel, config_key: &str) -> bool {
+    pub fn usable_for(
+        &self,
+        requested: EngineKind,
+        level: TuneLevel,
+        oracle: ScoreOracle,
+        config_key: &str,
+    ) -> bool {
         let kind_ok = requested == EngineKind::Auto || self.engine == requested;
         let level_ok = self.level == level.tag() || self.level == "measured";
-        kind_ok && level_ok && self.base_config == config_key
+        let oracle_ok = self.level == "measured"
+            || level.tag() != "heuristic"
+            || self.oracle == oracle.tag();
+        kind_ok && level_ok && oracle_ok && self.base_config == config_key
     }
 
     pub fn from_json(j: &Json) -> crate::Result<TunedPlan> {
@@ -229,6 +299,28 @@ impl TunedPlan {
                     })?
                     .to_string(),
             },
+            // Absent in pre-0.7 entries: the roofline model scored
+            // every heuristic plan back then.
+            oracle: match j.get("oracle") {
+                None => "roofline".to_string(),
+                Some(v) => v
+                    .as_str()
+                    .ok_or_else(|| {
+                        crate::EhybError::Parse("tuned plan field \"oracle\" not a string".into())
+                    })?
+                    .to_string(),
+            },
+            // Absent in pre-0.7 entries: measured searches only probed
+            // the single-vector path (B = 1); heuristic plans probe
+            // nothing (0).
+            probe_width: match j.get("probe_width") {
+                None => u32::from(
+                    j.get("level").and_then(|v| v.as_str()).unwrap_or_default() == "measured",
+                ),
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    crate::EhybError::Parse("tuned plan field \"probe_width\" not a number".into())
+                })? as u32,
+            },
         };
         // Range-validate before anything downstream trusts the knobs: a
         // corrupted / hand-edited cache entry must surface as an error
@@ -258,6 +350,11 @@ impl TunedPlan {
             plan.level == "heuristic" || plan.level == "measured",
             "tuned plan has unknown level {:?}",
             plan.level
+        );
+        crate::ensure!(
+            ScoreOracle::from_name(&plan.oracle).is_some(),
+            "tuned plan has unknown oracle {:?}",
+            plan.oracle
         );
         Ok(plan)
     }
@@ -330,6 +427,9 @@ struct Scored<S: Scalar> {
     cand: Candidate,
     score: f64,
     ehyb: Option<EhybPlan<S>>,
+    /// Winning `spmv_batch` probe width (0 when nothing was probed,
+    /// i.e. heuristic scoring).
+    width: u32,
 }
 
 /// Search the plan space for `m` under `base`, honoring `requested`:
@@ -353,7 +453,9 @@ pub fn tune<S: Scalar>(
 /// [`tune`] with an optionally precomputed [`Fingerprint`]: the facade
 /// already hashes the matrix for its plan-cache lookup, and the
 /// structural hash is a full O(nnz) pass — recomputing it here would
-/// double that cost on every cached-capable build.
+/// double that cost on every cached-capable build. Scores heuristic
+/// candidates with the default oracle ([`ScoreOracle::Traffic`]); use
+/// [`tune_scored`] to pick explicitly.
 pub fn tune_with_fingerprint<S: Scalar>(
     m: &Csr<S>,
     base: &PreprocessConfig,
@@ -361,7 +463,21 @@ pub fn tune_with_fingerprint<S: Scalar>(
     level: TuneLevel,
     fingerprint: Option<Fingerprint>,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, requested, level, fingerprint, true)
+    search(m, base, requested, level, ScoreOracle::default(), fingerprint, true)
+}
+
+/// [`tune_with_fingerprint`] with an explicit heuristic
+/// [`ScoreOracle`] — what the facade's
+/// [`crate::api::SpmvContextBuilder::score_oracle`] knob routes to.
+pub fn tune_scored<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    requested: EngineKind,
+    level: TuneLevel,
+    oracle: ScoreOracle,
+    fingerprint: Option<Fingerprint>,
+) -> crate::Result<TuneOutcome<S>> {
+    search(m, base, requested, level, oracle, fingerprint, true)
 }
 
 /// Engine choice only — what implicit [`EngineKind::Auto`] (no
@@ -377,9 +493,10 @@ pub fn choose_engine<S: Scalar>(
     m: &Csr<S>,
     base: &PreprocessConfig,
     level: TuneLevel,
+    oracle: ScoreOracle,
     fingerprint: Option<Fingerprint>,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, EngineKind::Auto, level, fingerprint, false)
+    search(m, base, EngineKind::Auto, level, oracle, fingerprint, false)
 }
 
 fn search<S: Scalar>(
@@ -387,6 +504,7 @@ fn search<S: Scalar>(
     base: &PreprocessConfig,
     requested: EngineKind,
     level: TuneLevel,
+    oracle: ScoreOracle,
     fingerprint: Option<Fingerprint>,
     knob_variants: bool,
 ) -> crate::Result<TuneOutcome<S>> {
@@ -410,10 +528,11 @@ fn search<S: Scalar>(
         .as_ref()
         .map(|f| f.key())
         .unwrap_or_else(|| format!("unhashed-n{}-nnz{}", m.nrows(), m.nnz()));
-    // Roofline device for heuristic scoring: bounds are byte ratios, so
-    // any bandwidth-bound device ranks candidates identically; V100 is
-    // the paper's reference part (same convention the pre-tuner
-    // `EngineKind::Auto` used).
+    // Target device for heuristic scoring: the traffic oracle replays
+    // against this part's L2/shm/sector geometry; under the roofline
+    // oracle the bounds are byte ratios and any bandwidth-bound device
+    // ranks candidates identically. V100 is the paper's reference part
+    // (same convention the pre-tuner `EngineKind::Auto` used).
     let dev = GpuDevice::v100();
 
     let default_cand = match requested {
@@ -458,13 +577,13 @@ fn search<S: Scalar>(
     // `Auto`, where an infeasible EHYB default (partition failure, bad
     // override) falls back to the CSR-scalar baseline, matching the
     // pre-tuner `Auto` behaviour.
-    let mut best = match score_candidate::<S>(m, base, &default_cand, level, &dev) {
+    let mut best = match score_candidate::<S>(m, base, &default_cand, level, oracle, &dev) {
         Ok(s) => s,
         Err(_) if requested == EngineKind::Auto && default_cand.engine == EngineKind::Ehyb => {
             cands.retain(|c| c.engine != EngineKind::Ehyb);
             let fallback = Candidate::baseline(EngineKind::CsrScalar, base);
             cands.retain(|c| *c != fallback);
-            score_candidate::<S>(m, base, &fallback, level, &dev)?
+            score_candidate::<S>(m, base, &fallback, level, oracle, &dev)?
         }
         Err(e) => return Err(e),
     };
@@ -484,7 +603,7 @@ fn search<S: Scalar>(
                 continue;
             }
         }
-        match score_candidate::<S>(m, base, c, level, &dev) {
+        match score_candidate::<S>(m, base, c, level, oracle, &dev) {
             Ok(s) => {
                 tried += 1;
                 if s.score < best.score {
@@ -513,6 +632,8 @@ fn search<S: Scalar>(
             base_config: super::config_key(base),
             scope: requested.name().to_string(),
             reorder: "none".to_string(),
+            oracle: oracle.tag().to_string(),
+            probe_width: best.width,
         },
         ehyb: best.ehyb,
         candidates_tried: tried,
@@ -595,28 +716,41 @@ fn score_candidate<S: Scalar>(
     base: &PreprocessConfig,
     cand: &Candidate,
     level: TuneLevel,
+    oracle: ScoreOracle,
     dev: &GpuDevice,
 ) -> crate::Result<Scored<S>> {
     if cand.engine == EngineKind::Ehyb {
         let cfg = cand.config(base);
         let plan = EhybPlan::build(m, &cfg)?;
-        let score = match level {
-            TuneLevel::Heuristic => perfmodel::ehyb_bound(&plan.matrix).predicted_secs(dev),
+        let (score, width) = match level {
+            TuneLevel::Heuristic => match oracle {
+                ScoreOracle::Traffic => {
+                    (crate::traffic::ehyb_traffic(&plan.matrix, dev).predicted_secs, 0)
+                }
+                ScoreOracle::Roofline => {
+                    (perfmodel::ehyb_bound(&plan.matrix).predicted_secs(dev), 0)
+                }
+            },
             TuneLevel::Measured { .. } => {
                 let engine = crate::api::build_engine(EngineKind::Ehyb, m, Some(&plan));
                 measure_spmv(engine.as_ref(), m)
             }
         };
-        Ok(Scored { cand: cand.clone(), score, ehyb: Some(plan) })
+        Ok(Scored { cand: cand.clone(), score, ehyb: Some(plan), width })
     } else {
-        let score = match level {
-            TuneLevel::Heuristic => baseline_predicted_secs(cand.engine, m, dev),
+        let (score, width) = match level {
+            TuneLevel::Heuristic => match oracle {
+                ScoreOracle::Traffic => {
+                    (crate::traffic::baseline_traffic(cand.engine, m, dev).predicted_secs, 0)
+                }
+                ScoreOracle::Roofline => (baseline_predicted_secs(cand.engine, m, dev), 0),
+            },
             TuneLevel::Measured { .. } => {
                 let engine = crate::api::build_engine(cand.engine, m, None);
                 measure_spmv(engine.as_ref(), m)
             }
         };
-        Ok(Scored { cand: cand.clone(), score, ehyb: None })
+        Ok(Scored { cand: cand.clone(), score, ehyb: None, width })
     }
 }
 
@@ -633,9 +767,7 @@ fn baseline_predicted_secs<S: Scalar>(kind: EngineKind, m: &Csr<S>, dev: &GpuDev
                 if nnz == 0 { 1.0 } else { (m.max_row_nnz() * m.nrows()) as f64 / nnz as f64 };
             perfmodel::ell_bound(m, fill.max(1.0)).predicted_secs(dev)
         }
-        EngineKind::SellP => {
-            perfmodel::ell_bound(m, sellp_fill(m, 32)).predicted_secs(dev)
-        }
+        EngineKind::SellP => perfmodel::ell_bound(m, sellp_fill(m, 32)).predicted_secs(dev),
         _ => perfmodel::csr_bound(m).predicted_secs(dev),
     }
 }
@@ -659,12 +791,41 @@ fn sellp_fill<S: Scalar>(m: &Csr<S>, h: usize) -> f64 {
     (slots as f64 / nnz as f64).max(1.0)
 }
 
-/// Deterministic-input microbench probe: mean seconds per `spmv` call.
-fn measure_spmv<S: Scalar>(engine: &dyn SpmvEngine<S>, m: &Csr<S>) -> f64 {
-    let x: Vec<S> =
-        (0..m.ncols()).map(|i| S::from_f64(((i * 13 + 7) % 17) as f64 * 0.25 - 2.0)).collect();
+/// Batch widths a `Measured` probe sweeps: the single-vector path plus
+/// the blocked-SpMM widths service workloads actually run at.
+const PROBE_WIDTHS: [usize; 3] = [1, 4, 8];
+
+/// Deterministic-input microbench probe: best per-vector seconds across
+/// the [`PROBE_WIDTHS`] `spmv_batch` sweep (`t_batch / B` — SpMV is
+/// memory-bound, so a wider block amortizes the matrix stream). Returns
+/// `(secs_per_vector, winning_width)`.
+fn measure_spmv<S: Scalar>(engine: &dyn SpmvEngine<S>, m: &Csr<S>) -> (f64, u32) {
+    let xval = |i: usize, b: usize| S::from_f64(((i * 13 + b * 7 + 7) % 17) as f64 * 0.25 - 2.0);
+    let x: Vec<S> = (0..m.ncols()).map(|i| xval(i, 0)).collect();
     let mut y = vec![S::ZERO; m.nrows()];
-    bench_secs(|| engine.spmv(&x, &mut y), 3, Duration::from_millis(2))
+    let mut best = (bench_secs(|| engine.spmv(&x, &mut y), 3, Duration::from_millis(2)), 1u32);
+    for &bw in PROBE_WIDTHS.iter().filter(|&&bw| bw > 1) {
+        let mut xs = crate::api::BatchBuf::<S>::zeros(m.ncols(), bw);
+        for b in 0..bw {
+            for i in 0..m.ncols() {
+                xs.col_mut(b)[i] = xval(i, b);
+            }
+        }
+        let mut ys = crate::api::BatchBuf::<S>::zeros(m.nrows(), bw);
+        let secs = bench_secs(
+            || {
+                let mut ysv = ys.view_mut();
+                engine.spmv_batch(xs.view(), &mut ysv)
+            },
+            3,
+            Duration::from_millis(2),
+        );
+        let per_vec = secs / bw as f64;
+        if per_vec < best.0 {
+            best = (per_vec, bw as u32);
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -704,6 +865,43 @@ mod tests {
         assert!(out.plan.score_secs <= out.plan.default_score_secs);
         assert_eq!(out.plan.level, "measured");
         assert!(out.ehyb.is_some());
+        // Satellite (ISSUE 7): the batch-width sweep ran and recorded
+        // which width won.
+        assert!(
+            PROBE_WIDTHS.contains(&(out.plan.probe_width as usize)),
+            "probe_width {} not in {PROBE_WIDTHS:?}",
+            out.plan.probe_width
+        );
+    }
+
+    #[test]
+    fn heuristic_oracles_both_never_worse_and_stamp_provenance() {
+        let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+        for oracle in [ScoreOracle::Traffic, ScoreOracle::Roofline] {
+            let out = tune_scored(
+                &m,
+                &cfg(128),
+                EngineKind::Auto,
+                TuneLevel::Heuristic,
+                oracle,
+                None,
+            )
+            .unwrap();
+            assert!(out.plan.score_secs <= out.plan.default_score_secs, "{oracle:?}");
+            assert_eq!(out.plan.oracle, oracle.tag());
+            assert_eq!(out.plan.probe_width, 0, "heuristic probes nothing");
+        }
+    }
+
+    #[test]
+    fn traffic_oracle_is_the_default_and_deterministic() {
+        let m = poisson2d::<f64>(24, 24);
+        let a = tune(&m, &cfg(128), EngineKind::Ehyb, TuneLevel::Heuristic).unwrap();
+        assert_eq!(a.plan.oracle, "traffic");
+        let b = tune(&m, &cfg(128), EngineKind::Ehyb, TuneLevel::Heuristic).unwrap();
+        // The replayed simulation is deterministic: identical scores,
+        // identical winner, bit for bit.
+        assert_eq!(a.plan, b.plan);
     }
 
     #[test]
@@ -791,7 +989,9 @@ mod tests {
     #[test]
     fn choose_engine_scores_only_the_base_ehyb_plan() {
         let m = poisson2d::<f64>(16, 16);
-        let out = choose_engine(&m, &cfg(64), TuneLevel::Heuristic, None).unwrap();
+        let out =
+            choose_engine(&m, &cfg(64), TuneLevel::Heuristic, ScoreOracle::default(), None)
+                .unwrap();
         assert_ne!(out.plan.engine, EngineKind::Auto);
         // No knob variants: an EHYB winner is the base plan itself.
         if out.plan.engine == EngineKind::Ehyb {
@@ -831,6 +1031,8 @@ mod tests {
             base_config: "sd1-Multilevel-r4-c8-s9e3779b9".into(),
             scope: "ehyb".into(),
             reorder: "none".into(),
+            oracle: "roofline".into(),
+            probe_width: 0,
         }
     }
 
@@ -864,6 +1066,34 @@ mod tests {
             m.insert("reorder".into(), Json::Num(3.0));
         }
         assert!(TunedPlan::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn pre_traffic_entries_load_as_roofline() {
+        // 0.6-era cache entries carry neither "oracle" nor
+        // "probe_width": a heuristic entry was roofline-scored, a
+        // measured one only ever probed B = 1.
+        let mut j = sample_plan().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("oracle");
+            m.remove("probe_width");
+        }
+        let back = TunedPlan::from_json(&j).unwrap();
+        assert_eq!(back.oracle, "roofline");
+        assert_eq!(back.probe_width, 0, "heuristic entries probed nothing");
+        let mut jm = TunedPlan { level: "measured".into(), ..sample_plan() }.to_json();
+        if let Json::Obj(m) = &mut jm {
+            m.remove("oracle");
+            m.remove("probe_width");
+        }
+        let backm = TunedPlan::from_json(&jm).unwrap();
+        assert_eq!(backm.probe_width, 1, "pre-0.7 measured entries probed only B=1");
+        // Unknown oracle values are rejected like unknown levels.
+        let mut jb = sample_plan().to_json();
+        if let Json::Obj(m) = &mut jb {
+            m.insert("oracle".into(), Json::Str("crystal-ball".into()));
+        }
+        assert!(TunedPlan::from_json(&jb).is_err());
     }
 
     #[test]
@@ -907,22 +1137,33 @@ mod tests {
     }
 
     #[test]
-    fn usable_for_honors_kind_level_and_config() {
-        let heuristic = sample_plan();
+    fn usable_for_honors_kind_level_oracle_and_config() {
+        let rl = ScoreOracle::Roofline;
+        let tr = ScoreOracle::Traffic;
+        let heuristic = sample_plan(); // oracle: "roofline"
         let key = heuristic.base_config.clone();
         // Kind: explicit requests are never overridden; Auto takes any.
-        assert!(heuristic.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, &key));
-        assert!(heuristic.usable_for(EngineKind::Auto, TuneLevel::Heuristic, &key));
+        assert!(heuristic.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, rl, &key));
+        assert!(heuristic.usable_for(EngineKind::Auto, TuneLevel::Heuristic, rl, &key));
         let baseline = TunedPlan { engine: EngineKind::CsrScalar, ..sample_plan() };
-        assert!(!baseline.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, &key));
-        assert!(baseline.usable_for(EngineKind::Auto, TuneLevel::Heuristic, &key));
+        assert!(!baseline.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, rl, &key));
+        assert!(baseline.usable_for(EngineKind::Auto, TuneLevel::Heuristic, rl, &key));
         // Level: measured supersedes heuristic, never the reverse.
-        assert!(!heuristic.usable_for(EngineKind::Ehyb, TuneLevel::measured(), &key));
+        assert!(!heuristic.usable_for(EngineKind::Ehyb, TuneLevel::measured(), rl, &key));
         let measured = TunedPlan { level: "measured".into(), ..sample_plan() };
-        assert!(measured.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, &key));
-        assert!(measured.usable_for(EngineKind::Ehyb, TuneLevel::measured(), &key));
+        assert!(measured.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, rl, &key));
+        assert!(measured.usable_for(EngineKind::Ehyb, TuneLevel::measured(), rl, &key));
+        // Oracle: a roofline-scored heuristic entry must not serve a
+        // traffic-oracle heuristic request (and vice versa) — the
+        // scores are different models' predictions. Measured entries
+        // supersede either oracle.
+        assert!(!heuristic.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, tr, &key));
+        let traffic_plan = TunedPlan { oracle: "traffic".into(), ..sample_plan() };
+        assert!(traffic_plan.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, tr, &key));
+        assert!(!traffic_plan.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, rl, &key));
+        assert!(measured.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, tr, &key));
         // Base config must match exactly.
-        assert!(!heuristic.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, "sd0-other"));
+        assert!(!heuristic.usable_for(EngineKind::Ehyb, TuneLevel::Heuristic, rl, "sd0-other"));
     }
 
     #[test]

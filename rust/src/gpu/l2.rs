@@ -3,7 +3,9 @@
 //! probes it, so streaming data evicts x lines exactly as on hardware
 //! (the effect that motivates EHYB's explicit cache, paper §3.1).
 
-/// 16-way set-associative, LRU-by-counter within the set.
+/// Set-associative, LRU-by-counter within the set. `new` gives the
+/// V100-like 16-way default; `with_ways` picks any associativity (the
+/// traffic simulator sweeps it when modeling other devices).
 pub struct L2Sim {
     ways: usize,
     sets: usize,
@@ -18,8 +20,16 @@ pub struct L2Sim {
 
 impl L2Sim {
     pub fn new(capacity_bytes: usize, sector_bytes: usize) -> Self {
-        let ways = 16usize;
-        let sectors = (capacity_bytes / sector_bytes).max(ways);
+        Self::with_ways(capacity_bytes, sector_bytes, 16)
+    }
+
+    /// Build a cache of `capacity_bytes` with configurable associativity.
+    /// `ways == 1` is direct-mapped; `ways >= sectors` degenerates to
+    /// fully associative. Set count rounds up to a power of two so the
+    /// set hash stays a mask.
+    pub fn with_ways(capacity_bytes: usize, sector_bytes: usize, ways: usize) -> Self {
+        let ways = ways.max(1);
+        let sectors = (capacity_bytes / sector_bytes.max(1)).max(ways);
         let sets = (sectors / ways).next_power_of_two();
         Self {
             ways,
@@ -30,6 +40,16 @@ impl L2Sim {
             hits: 0,
             misses: 0,
         }
+    }
+
+    /// Associativity this cache was built with.
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    /// Total sector probes so far (`hits + misses`).
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
     }
 
     /// Probe sector `sec`; returns true on hit. Misses fill with LRU
@@ -60,11 +80,17 @@ impl L2Sim {
         false
     }
 
-    /// Probe every sector covering `[addr, addr+len)`; returns
-    /// (hits, misses).
+    /// Probe every sector overlapping `[addr, addr+len)`; returns
+    /// (hits, misses). Partial leading/trailing sectors count as full
+    /// sector transactions (hardware moves whole sectors), and a
+    /// zero-length range touches nothing — it used to probe a phantom
+    /// sector at `addr`, skewing counters for empty streams.
     pub fn access_range(&mut self, addr: u64, len: u64, sector_bytes: u64) -> (u64, u64) {
+        if len == 0 {
+            return (0, 0);
+        }
         let first = addr / sector_bytes;
-        let last = (addr + len.max(1) - 1) / sector_bytes;
+        let last = (addr + len - 1) / sector_bytes;
         let (mut h, mut m) = (0, 0);
         for s in first..=last {
             if self.access(s) {
@@ -96,6 +122,7 @@ mod tests {
         assert!(l2.access(42));
         assert_eq!(l2.hits, 1);
         assert_eq!(l2.misses, 1);
+        assert_eq!(l2.accesses(), 2);
     }
 
     #[test]
@@ -121,12 +148,74 @@ mod tests {
     }
 
     #[test]
+    fn default_is_16_way() {
+        let l2 = L2Sim::new(1 << 20, 32);
+        assert_eq!(l2.ways(), 16);
+    }
+
+    #[test]
+    fn two_way_eviction_hand_trace() {
+        // 2 sets x 2 ways = 4 sectors total (128 B, 32 B sectors).
+        // Sector -> set is (sec ^ (sec >> 17)) & 1, i.e. parity for
+        // small ids: even sectors land in set 0, odd in set 1.
+        let mut l2 = L2Sim::with_ways(128, 32, 2);
+        assert_eq!(l2.ways(), 2);
+        assert!(!l2.access(0)); // set 0: [0, -]
+        assert!(!l2.access(2)); // set 0: [0, 2]
+        assert!(l2.access(0)); // hit; 2 is now LRU
+        assert!(!l2.access(4)); // evicts 2 -> set 0: [0, 4]
+        assert!(!l2.access(2), "2 was the LRU victim and must miss");
+        assert!(l2.access(4), "4 is younger than 0 and must survive");
+        assert!(!l2.access(0), "0 was evicted by the re-fill of 2");
+        // The odd set was never touched by any of the above.
+        assert!(!l2.access(1)); // set 1: [1, -]
+        assert!(l2.access(1));
+        assert_eq!(l2.accesses(), l2.hits + l2.misses);
+    }
+
+    #[test]
+    fn direct_mapped_conflicts() {
+        // ways=1: two sectors hashing to the same set always conflict.
+        let mut l2 = L2Sim::with_ways(64, 32, 1);
+        // sets = 2; sectors 0 and 2 both land in set 0.
+        assert!(!l2.access(0));
+        assert!(!l2.access(2)); // evicts 0
+        assert!(!l2.access(0)); // evicts 2
+        assert!(!l2.access(2));
+        assert_eq!(l2.hits, 0);
+        assert_eq!(l2.misses, 4);
+    }
+
+    #[test]
     fn access_range_counts_sectors() {
         let mut l2 = L2Sim::new(1 << 20, 32);
         let (h, m) = l2.access_range(0, 64, 32); // sectors 0,1
         assert_eq!((h, m), (0, 2));
         let (h, m) = l2.access_range(16, 32, 32); // sectors 0,1 again
         assert_eq!((h, m), (2, 0));
+    }
+
+    #[test]
+    fn access_range_partial_sectors_hand_trace() {
+        let mut l2 = L2Sim::new(1 << 20, 32);
+        // [30, 34): 4 bytes straddling the sector 0/1 boundary — both
+        // partial sectors count as full transactions.
+        let (h, m) = l2.access_range(30, 4, 32);
+        assert_eq!((h, m), (0, 2));
+        // [95, 96): 1 byte entirely inside sector 2.
+        let (h, m) = l2.access_range(95, 1, 32);
+        assert_eq!((h, m), (0, 1));
+        // [64, 96): exactly sector 2 again — no phantom sector 3.
+        let (h, m) = l2.access_range(64, 32, 32);
+        assert_eq!((h, m), (1, 0));
+    }
+
+    #[test]
+    fn access_range_zero_len_touches_nothing() {
+        let mut l2 = L2Sim::new(1 << 20, 32);
+        let (h, m) = l2.access_range(128, 0, 32);
+        assert_eq!((h, m), (0, 0));
+        assert_eq!(l2.accesses(), 0);
     }
 
     #[test]

@@ -181,6 +181,9 @@ pub struct ReorderRow {
     pub bandwidth: usize,
     pub profile: u64,
     pub footprint: f64,
+    /// Simulated x DRAM bytes of a CSR walk under the ordering — the
+    /// [`crate::traffic`] score `Auto` ranks by since 0.7.
+    pub x_dram_bytes: u64,
     /// `ShardStrategy::CacheAware` cross-shard entries at the sweep's
     /// shard count, measured on the reordered matrix.
     pub cut_nnz: usize,
@@ -233,9 +236,75 @@ pub fn reorder_ablation<S: Scalar>(
             bandwidth: r.after.bandwidth,
             profile: r.after.profile,
             footprint: r.after.window_footprint,
+            x_dram_bytes: r.after.x_dram_bytes,
             cut_nnz: cut,
             gflops: sim.gflops,
             er_fraction: plan.matrix.er_fraction(),
+        });
+    }
+    Ok(rows)
+}
+
+/// One engine's simulated storage traffic next to its measured CPU
+/// throughput — the ISSUE 7 traffic ablation row.
+#[derive(Clone, Debug)]
+pub struct TrafficRow {
+    pub engine: String,
+    /// Simulated DRAM bytes (reads + writes) per SpMV.
+    pub dram_bytes: u64,
+    /// Simulated L2 bytes (reads + writes) per SpMV.
+    pub l2_bytes: u64,
+    /// Simulated shared-memory bytes served per SpMV (0 for engines
+    /// with no explicit cache).
+    pub shm_bytes: u64,
+    /// Simulated L2 sector hit rate.
+    pub l2_hit_rate: f64,
+    /// Average times each touched x sector was requested (≥ 1).
+    pub x_reuse: f64,
+    /// Hit-aware predicted SpMV seconds from the replay.
+    pub predicted_secs: f64,
+    /// Wall-clock CPU GFLOPS of the real engine on this host — the
+    /// measured column the predicted ranking is validated against.
+    pub measured_gflops: f64,
+}
+
+/// ISSUE 7: the traffic ablation — replay every concrete engine's
+/// storage traffic through the [`crate::traffic`] simulator and set the
+/// per-level byte counters, hit rates, and x-reuse next to the measured
+/// CPU throughput of the same engine. Plain dense-width ELL is skipped
+/// on padding-hostile matrices (same rule as the engine sweeps).
+pub fn traffic_ablation<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    dev: &GpuDevice,
+) -> crate::Result<Vec<TrafficRow>> {
+    let x = vec![S::ONE; m.nrows()];
+    let mut rows = Vec::new();
+    for kind in EngineKind::ALL {
+        if kind == EngineKind::Ell && crate::api::ell_padding_excessive(m) {
+            continue;
+        }
+        let ctx = SpmvContext::builder(m.clone()).engine(kind).config(base.clone()).build()?;
+        let report = match ctx.plan() {
+            Some(plan) => crate::traffic::ehyb_traffic(&plan.matrix, dev),
+            None => crate::traffic::baseline_traffic(kind, m, dev),
+        };
+        let e = ctx.engine();
+        let mut y = vec![S::ZERO; e.nrows()];
+        let secs = crate::util::timer::bench_secs(
+            || e.spmv(&x, &mut y),
+            3,
+            std::time::Duration::from_millis(30),
+        );
+        rows.push(TrafficRow {
+            engine: kind.name().to_string(),
+            dram_bytes: report.dram.total_bytes(),
+            l2_bytes: report.l2.total_bytes(),
+            shm_bytes: report.shm.total_bytes(),
+            l2_hit_rate: report.l2.hit_rate(),
+            x_reuse: report.x.reuse_factor(),
+            predicted_secs: report.predicted_secs,
+            measured_gflops: crate::spmv::gflops(e.nnz(), secs),
         });
     }
     Ok(rows)
@@ -324,6 +393,26 @@ mod tests {
         }
         assert!(get("auto->").footprint <= none.footprint);
         assert!(rows.iter().all(|r| r.gflops > 0.0));
+    }
+
+    #[test]
+    fn traffic_ablation_covers_every_engine() {
+        let (m, cfg, dev) = setup();
+        let rows = traffic_ablation(&m, &cfg, &dev).unwrap();
+        assert_eq!(rows.len(), EngineKind::ALL.len());
+        let get = |name: &str| {
+            rows.iter().find(|r| r.engine == name).unwrap_or_else(|| panic!("missing {name}"))
+        };
+        // Only the explicitly-cached engine serves bytes out of shm.
+        assert!(get("ehyb").shm_bytes > 0);
+        assert_eq!(get("csr-vector").shm_bytes, 0);
+        for r in &rows {
+            assert!(r.predicted_secs > 0.0, "{}: no predicted time", r.engine);
+            assert!(r.measured_gflops > 0.0, "{}: no measured rate", r.engine);
+            assert!(r.dram_bytes > 0 && r.l2_bytes > 0, "{}: empty traffic", r.engine);
+            assert!(r.x_reuse >= 1.0, "{}: reuse factor below 1", r.engine);
+            assert!((0.0..=1.0).contains(&r.l2_hit_rate), "{}", r.engine);
+        }
     }
 
     #[test]

@@ -9,9 +9,14 @@
 //!   Figure 6 preprocessing decomposition.
 //! * [`ablation`] — DESIGN.md §7: explicit-cache on/off, u16/u32
 //!   columns, partitioner quality, descending-sort on/off, VecSize (K)
-//!   sweep, plus the autotuning ablation (default vs heuristic vs
-//!   measured plan — ISSUE 3).
+//!   sweep, the autotuning ablation (default vs heuristic vs measured
+//!   plan — ISSUE 3), and the simulated-traffic ablation (per-engine
+//!   per-level bytes next to measured throughput — ISSUE 7).
 //! * [`report`] — markdown / CSV emission.
+//!
+//! The [`runner::traffic_validation`] mode (ISSUE 7) checks the
+//! [`crate::traffic`] oracle's engine ranking against the
+//! measured-probe winner per matrix.
 
 pub mod suite;
 pub mod runner;
@@ -19,5 +24,5 @@ pub mod tables;
 pub mod ablation;
 pub mod report;
 
-pub use runner::{run_matrix, FrameworkRow, MatrixRun};
+pub use runner::{run_matrix, traffic_validation, FrameworkRow, MatrixRun, ValidationRow};
 pub use suite::{suite16, suite94, MatrixSpec, Scale};

@@ -3,7 +3,8 @@
 //! observability surface (batch-width / bytes-moved / shard metrics),
 //! and the machine-readable bench report (`BENCH_ci.json` in CI).
 
-use super::ablation::{AblationRow, ReorderRow};
+use super::ablation::{AblationRow, ReorderRow, TrafficRow};
+use super::runner::ValidationRow;
 use super::tables::{Fig6Row, FigureSeries, SpeedupRow};
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::runtime::json::{self, Json};
@@ -236,23 +237,89 @@ pub fn bench_json(label: &str, cases: &[BenchCase]) -> Json {
 }
 
 /// The reorder ablation as markdown: per-spec locality metrics
-/// (bandwidth / profile / windowed distinct-column footprint), the
-/// cache-aware cross-shard cut, and simulated EHYB throughput.
+/// (bandwidth / profile / windowed distinct-column footprint /
+/// simulated x DRAM bytes), the cache-aware cross-shard cut, and
+/// simulated EHYB throughput.
 pub fn reorder_markdown(title: &str, rows: &[ReorderRow]) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "### {title}\n");
     let _ = writeln!(
         s,
-        "| ordering | bandwidth | profile | window footprint | cut nnz | GFLOPS | ER fraction |"
+        "| ordering | bandwidth | profile | window footprint | x DRAM bytes | cut nnz | GFLOPS | ER fraction |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|");
     for r in rows {
         let _ = writeln!(
             s,
-            "| {} | {} | {} | {:.1} | {} | {:.2} | {:.4} |",
-            r.spec, r.bandwidth, r.profile, r.footprint, r.cut_nnz, r.gflops, r.er_fraction
+            "| {} | {} | {} | {:.1} | {} | {} | {:.2} | {:.4} |",
+            r.spec,
+            r.bandwidth,
+            r.profile,
+            r.footprint,
+            r.x_dram_bytes,
+            r.cut_nnz,
+            r.gflops,
+            r.er_fraction
         );
     }
+    s
+}
+
+/// The traffic ablation as markdown: one row per engine with the
+/// simulated per-level byte counters, L2 hit rate, x reuse factor, the
+/// replay's predicted SpMV time, and the measured CPU throughput it is
+/// validated against.
+pub fn traffic_markdown(title: &str, rows: &[TrafficRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(
+        s,
+        "| engine | DRAM bytes | L2 bytes | shm bytes | L2 hit rate | x reuse | predicted us | measured GFLOPS |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {:.3} | {:.2} | {:.2} | {:.2} |",
+            r.engine,
+            r.dram_bytes,
+            r.l2_bytes,
+            r.shm_bytes,
+            r.l2_hit_rate,
+            r.x_reuse,
+            1e6 * r.predicted_secs,
+            r.measured_gflops
+        );
+    }
+    s
+}
+
+/// The oracle-validation sweep as markdown: per matrix, the engine the
+/// traffic-scored search picked vs the measured-probe winner, the
+/// measured throughput of each, and the agreement verdict — plus a
+/// trailing majority line.
+pub fn traffic_validation_markdown(title: &str, rows: &[ValidationRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(
+        s,
+        "| matrix | simulated pick | measured pick | sim-pick GFLOPS | measured-pick GFLOPS | agree |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {:.2} | {:.2} | {} |",
+            r.matrix,
+            r.simulated_pick,
+            r.measured_pick,
+            r.sim_pick_gflops,
+            r.measured_pick_gflops,
+            if r.agree { "yes" } else { "no" }
+        );
+    }
+    let agreed = rows.iter().filter(|r| r.agree).count();
+    let _ = writeln!(s, "\nagreement: {agreed}/{} cases", rows.len());
     s
 }
 
@@ -407,6 +474,7 @@ mod tests {
                 bandwidth: 900,
                 profile: 120_000,
                 footprint: 812.5,
+                x_dram_bytes: 65_536,
                 cut_nnz: 4200,
                 gflops: 55.0,
                 er_fraction: 0.04,
@@ -416,14 +484,64 @@ mod tests {
                 bandwidth: 41,
                 profile: 9_100,
                 footprint: 310.0,
+                x_dram_bytes: 32_768,
                 cut_nnz: 240,
                 gflops: 61.2,
                 er_fraction: 0.03,
             },
         ];
         let md = reorder_markdown("Reorder", &rows);
-        assert!(md.contains("| none | 900 | 120000 | 812.5 | 4200 | 55.00 | 0.0400 |"), "{md}");
+        assert!(
+            md.contains("| none | 900 | 120000 | 812.5 | 65536 | 4200 | 55.00 | 0.0400 |"),
+            "{md}"
+        );
         assert!(md.contains("| rcm | 41 |"), "{md}");
+    }
+
+    #[test]
+    fn traffic_markdown_rows_and_units() {
+        let rows = vec![TrafficRow {
+            engine: "ehyb".into(),
+            dram_bytes: 150_000,
+            l2_bytes: 220_000,
+            shm_bytes: 96_000,
+            l2_hit_rate: 0.8125,
+            x_reuse: 3.5,
+            predicted_secs: 12.5e-6,
+            measured_gflops: 9.75,
+        }];
+        let md = traffic_markdown("Traffic", &rows);
+        assert!(
+            md.contains("| ehyb | 150000 | 220000 | 96000 | 0.813 | 3.50 | 12.50 | 9.75 |"),
+            "{md}"
+        );
+        assert!(md.contains("predicted us"), "{md}");
+    }
+
+    #[test]
+    fn traffic_validation_markdown_counts_agreement() {
+        let rows = vec![
+            ValidationRow {
+                matrix: "fem-a".into(),
+                simulated_pick: "ehyb".into(),
+                measured_pick: "ehyb".into(),
+                sim_pick_gflops: 10.0,
+                measured_pick_gflops: 10.0,
+                agree: true,
+            },
+            ValidationRow {
+                matrix: "fem-b".into(),
+                simulated_pick: "sellp".into(),
+                measured_pick: "csr-vector".into(),
+                sim_pick_gflops: 6.0,
+                measured_pick_gflops: 9.0,
+                agree: false,
+            },
+        ];
+        let md = traffic_validation_markdown("Validation", &rows);
+        assert!(md.contains("| fem-a | ehyb | ehyb | 10.00 | 10.00 | yes |"), "{md}");
+        assert!(md.contains("| fem-b | sellp | csr-vector | 6.00 | 9.00 | no |"), "{md}");
+        assert!(md.contains("agreement: 1/2 cases"), "{md}");
     }
 
     #[test]

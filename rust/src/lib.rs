@@ -148,6 +148,15 @@
 //!   Row-local engines stay bit-identical (the permute preserves
 //!   per-row entry order); tuned plans key on the reordered
 //!   fingerprint, so cached winners survive restarts per ordering.
+//! * **Traffic model** — [`traffic`] replays a prepared plan (EHYB
+//!   partitions with their explicit x-slice cache, the baseline walks,
+//!   shard halos) through a modeled shm/L2/DRAM hierarchy, producing
+//!   per-level byte counters, x-reuse statistics, and a hit-aware
+//!   `predicted_secs`. It is the **default `TuneLevel::Heuristic`
+//!   oracle** (`.score_oracle(ScoreOracle::Roofline)` restores the
+//!   0.6 static bounds) and the score behind [`ReorderSpec::Auto`];
+//!   `cargo run --example traffic` prints the per-level tables and
+//!   `ablation --which traffic` the per-engine comparison.
 //!
 //! ## Robustness
 //!
@@ -215,6 +224,7 @@ pub mod spmv;
 pub mod shard;
 pub mod gpu;
 pub mod perfmodel;
+pub mod traffic;
 pub mod runtime;
 pub mod coordinator;
 pub mod harness;
@@ -223,10 +233,11 @@ pub mod autotune;
 pub mod resilience;
 
 pub use api::{BatchBuf, EhybError, EngineKind, SpmvContext, VecBatch, VecBatchMut};
-pub use autotune::{Fingerprint, PlanStore, TuneLevel, TunedPlan};
+pub use autotune::{Fingerprint, PlanStore, ScoreOracle, TuneLevel, TunedPlan};
 pub use reorder::{ReorderQuality, ReorderSpec, Reordering};
 pub use resilience::{FaultInjector, FaultPlan, GuardLevel, HealthReport, RetryPolicy};
 pub use shard::{ShardSpec, ShardStrategy, ShardedEngine};
+pub use traffic::{LevelTraffic, ShardTraffic, TrafficReport, XReuse};
 
 /// Crate-wide result type over the typed [`EhybError`].
 pub type Result<T> = std::result::Result<T, EhybError>;

@@ -68,8 +68,10 @@ fn usage() {
                   --dtype f32|f64  --pjrt  --artifacts DIR\n\
                   --precond none|jacobi|spai0  --solver cg|bicgstab\n\
                   --table 1|2  --fig 2|3|4|5|6  --scale tiny|small|full\n\
-                  --out DIR  --which cache|partitioner|sort|vecsize|tuning|reorder\n\
-                  --level heuristic|measured  --budget-ms N  --engine auto|ehyb|...\n\
+                  --validate (bench: simulated-vs-measured engine ranking)\n\
+                  --out DIR  --which cache|partitioner|sort|vecsize|tuning|reorder|traffic\n\
+                  --level heuristic|measured  --oracle traffic|roofline  --budget-ms N\n\
+                  --engine auto|ehyb|...\n\
                   --cache DIR (tune; default $EHYB_TUNE_DIR)  --seed N (chaos)"
     );
 }
@@ -354,7 +356,7 @@ fn cmd_solve(opts: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     use ehyb::autotune::{
-        config_key, device_key, tune_with_fingerprint, Fingerprint, PlanStore, TuneLevel,
+        config_key, device_key, tune_scored, Fingerprint, PlanStore, ScoreOracle, TuneLevel,
     };
     let m = build_matrix(opts)?;
     let cfg = preprocess_cfg(opts);
@@ -365,6 +367,11 @@ fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         Some("heuristic") | None => TuneLevel::Heuristic,
         Some(other) => anyhow::bail!("unknown tune level {other}"),
+    };
+    let oracle = match opts.get("oracle").map(String::as_str) {
+        None => ScoreOracle::default(),
+        Some(name) => ScoreOracle::from_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown score oracle {name}"))?,
     };
     let requested = match opts.get("engine") {
         Some(name) => {
@@ -411,7 +418,7 @@ fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         if let Ok(Some(existing)) =
             store.load(&fp.key(), &device_key(&cfg.device), "f64", requested.name())
         {
-            if existing.usable_for(requested, level, &config_key(&cfg))
+            if existing.usable_for(requested, level, oracle, &config_key(&cfg))
                 && existing.reorder == reorder_tag
             {
                 println!(
@@ -436,7 +443,7 @@ fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         }
     }
 
-    let mut out = tune_with_fingerprint(&m, &cfg, requested, level, Some(fp))?;
+    let mut out = tune_scored(&m, &cfg, requested, level, oracle, Some(fp))?;
     out.plan.reorder = reorder_tag;
     let p = &out.plan;
     println!(
@@ -453,6 +460,11 @@ fn cmd_tune(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         p.default_score_secs,
         100.0 * (1.0 - p.score_secs / p.default_score_secs.max(1e-300))
     );
+    if p.level == "measured" {
+        println!("probe width     : best at batch width {}", p.probe_width);
+    } else {
+        println!("oracle          : {} (heuristic scoring)", p.oracle);
+    }
     println!(
         "search          : {} tried, {} skipped, {:.3}s",
         out.candidates_tried, out.candidates_skipped, out.search_secs
@@ -526,6 +538,39 @@ fn cmd_bench(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         }
         Ok(())
     };
+
+    // ISSUE 7 validation mode: does the traffic oracle's engine
+    // ranking agree with wall-clock measured winners, per matrix?
+    if opts.contains_key("validate") {
+        let specs = suite::suite16(scale);
+        let mut rows = Vec::new();
+        for (i, spec) in specs.iter().enumerate() {
+            let m = spec.build();
+            match runner::traffic_validation(&spec.name, &m, &PreprocessConfig::default()) {
+                Ok(row) => {
+                    eprintln!(
+                        "[{}/{}] {}: sim={} measured={} agree={}",
+                        i + 1,
+                        specs.len(),
+                        spec.name,
+                        row.simulated_pick,
+                        row.measured_pick,
+                        row.agree
+                    );
+                    rows.push(row);
+                }
+                Err(e) => eprintln!("[{}/{}] {} FAILED: {e:#}", i + 1, specs.len(), spec.name),
+            }
+        }
+        emit(
+            "traffic_validation.md",
+            &report::traffic_validation_markdown(
+                "Traffic oracle vs measured winner (16-matrix suite)",
+                &rows,
+            ),
+        )?;
+        return Ok(());
+    }
 
     if let Some(t) = opts.get("table") {
         let specs = suite::suite94(scale);
@@ -625,6 +670,13 @@ fn cmd_ablation(opts: &HashMap<String, String>) -> anyhow::Result<()> {
         println!(
             "{}",
             report::ablation_markdown("Autotuning (default vs heuristic vs measured)", &rows)
+        );
+    }
+    if which == "traffic" || which == "all" {
+        let rows = ablation::traffic_ablation(&m, &cfg, &dev)?;
+        println!(
+            "{}",
+            report::traffic_markdown("Simulated storage traffic (per engine)", &rows)
         );
     }
     if which == "reorder" || which == "all" {

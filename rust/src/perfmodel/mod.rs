@@ -29,6 +29,15 @@ impl TrafficModel {
         self.matrix_bytes + self.x_bytes + self.y_bytes
     }
 
+    /// The compulsory-traffic floor in whole bytes: what a kernel must
+    /// move even with perfect caching. The replayed simulator
+    /// ([`crate::traffic`]) can only sit at or above this (sector
+    /// rounding, conflict and capacity misses) — the conservation
+    /// proptests in `tests/traffic.rs` gate exactly that inequality.
+    pub fn compulsory_bytes(&self) -> u64 {
+        self.total() as u64
+    }
+
     /// Roofline GFLOPS on `dev` for `nnz` nonzeros.
     pub fn roofline_gflops(&self, nnz: usize, dev: &GpuDevice) -> f64 {
         2.0 * nnz as f64 / (self.total() / dev.hbm_bw) / 1e9

@@ -21,9 +21,13 @@
 //! * [`Reordering`] — a computed permutation (`perm[old] = new` + its
 //!   inverse) with quality metrics **before and after**
 //!   ([`ReorderQuality`]): bandwidth (max `|i − j|` over entries),
-//!   profile (summed per-row index span), and the average
-//!   distinct-column footprint per [`FOOTPRINT_WINDOW`]-row window —
-//!   the cache-working-set proxy `Auto` scores.
+//!   profile (summed per-row index span), the average distinct-column
+//!   footprint per [`FOOTPRINT_WINDOW`]-row window, and — since 0.7 —
+//!   the **simulated x DRAM bytes** of a CSR walk under the ordering
+//!   ([`crate::traffic::x_traffic_under`] on the reference
+//!   [`GpuDevice::v100`] model), which is what `Auto` now ranks by:
+//!   unlike the windowed proxy it sees sector granularity, L2
+//!   capacity, and the eviction pressure of the matrix streams.
 //! * [`ReorderedEngine`](engine::ReorderedEngine) — the
 //!   [`crate::spmv::SpmvEngine`] adapter the facade wraps around the
 //!   built engine: user-facing vectors stay in original index space,
@@ -44,6 +48,7 @@ pub mod engine;
 
 pub use engine::ReorderedEngine;
 
+use crate::gpu::device::GpuDevice;
 use crate::partition::{partition_graph, Graph, PartitionConfig};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
@@ -68,8 +73,10 @@ pub enum ReorderSpec {
     /// `k = 0` picks a size-derived default.
     PartitionRank { k: usize },
     /// Compute every candidate ordering and keep the one with the
-    /// lowest windowed-footprint score (ties by profile); falls back to
-    /// the identity when nothing improves on it.
+    /// lowest **simulated x DRAM traffic**
+    /// ([`ReorderQuality::x_dram_bytes`], replayed through
+    /// [`crate::traffic`]; ties by windowed footprint, then profile);
+    /// falls back to the identity when nothing improves on it.
     Auto,
 }
 
@@ -123,9 +130,15 @@ pub struct ReorderQuality {
     /// (row's own index included) — the envelope/profile measure.
     pub profile: u64,
     /// Average number of distinct columns referenced per
-    /// [`FOOTPRINT_WINDOW`]-row window — the cache-footprint proxy
-    /// [`ReorderSpec::Auto`] minimizes.
+    /// [`FOOTPRINT_WINDOW`]-row window — the static cache-footprint
+    /// proxy (what pre-0.7 `Auto` minimized; kept for reporting and
+    /// tie-breaking).
     pub window_footprint: f64,
+    /// Simulated x-vector DRAM bytes of one CSR SpMV walk under this
+    /// ordering, replayed through the [`crate::traffic`] storage model
+    /// on the reference [`GpuDevice::v100`] — the score
+    /// [`ReorderSpec::Auto`] minimizes since 0.7.
+    pub x_dram_bytes: u64,
 }
 
 impl ReorderQuality {
@@ -179,10 +192,18 @@ fn quality_under<S: Scalar>(m: &Csr<S>, perm: &[u32]) -> ReorderQuality {
             }
         }
     }
+    // Replay one CSR SpMV under this ordering through the storage
+    // simulator and keep the x-stream DRAM bytes — `iperm` is exactly
+    // the new → old order `x_traffic_under` wants. Scored on the
+    // canonical V100 model so the metric (like the others) is a
+    // property of the ordering alone, not of the build's device config.
+    let order: Vec<usize> = iperm.iter().map(|&v| v as usize).collect();
+    let x_dram_bytes = crate::traffic::x_traffic_under(m, &order, &GpuDevice::v100());
     ReorderQuality {
         bandwidth,
         profile,
         window_footprint: distinct_total as f64 / windows.max(1) as f64,
+        x_dram_bytes,
     }
 }
 
@@ -217,9 +238,10 @@ pub struct Reordering {
 
 impl Reordering {
     /// Compute the ordering `spec` requests for the square matrix `m`.
-    /// `Auto` scores every candidate by windowed footprint (ties by
-    /// profile) and keeps the winner — the identity included, so it
-    /// never adopts an ordering that measures worse than natural.
+    /// `Auto` scores every candidate by simulated x DRAM traffic (ties
+    /// by windowed footprint, then profile) and keeps the winner — the
+    /// identity included, so it never adopts an ordering that
+    /// simulates worse than natural.
     pub fn compute<S: Scalar>(m: &Csr<S>, spec: ReorderSpec) -> crate::Result<Reordering> {
         crate::ensure!(
             m.nrows() == m.ncols() && m.nrows() > 0,
@@ -245,9 +267,15 @@ impl Reordering {
                 [ReorderSpec::DegreeSort, ReorderSpec::Rcm, ReorderSpec::PartitionRank { k: 0 }]
             {
                 let r = Self::compute_inner(m, cand, before)?;
-                let better = r.after.window_footprint < best.after.window_footprint
-                    || (r.after.window_footprint == best.after.window_footprint
-                        && r.after.profile < best.after.profile);
+                let better = (
+                    r.after.x_dram_bytes,
+                    r.after.window_footprint,
+                    r.after.profile,
+                ) < (
+                    best.after.x_dram_bytes,
+                    best.after.window_footprint,
+                    best.after.profile,
+                );
                 if better {
                     best = r;
                 }
@@ -559,7 +587,13 @@ mod tests {
     fn auto_never_scores_worse_than_natural() {
         for m in [poisson2d::<f64>(24, 24), scrambled_banded(800, 5, 9)] {
             let r = Reordering::compute(&m, ReorderSpec::Auto).unwrap();
-            assert!(r.after.window_footprint <= r.before.window_footprint);
+            // Primary score: simulated x DRAM traffic; the tie-breaks
+            // mean the windowed proxy can never regress either.
+            assert!(r.after.x_dram_bytes <= r.before.x_dram_bytes);
+            assert!(
+                r.after.x_dram_bytes < r.before.x_dram_bytes
+                    || r.after.window_footprint <= r.before.window_footprint
+            );
             assert_eq!(r.spec, ReorderSpec::Auto);
             assert_ne!(r.resolved, "auto", "Auto must record the resolved ordering");
         }
@@ -609,6 +643,11 @@ mod tests {
         assert_eq!(r.after.bandwidth, direct.bandwidth);
         assert_eq!(r.after.profile, direct.profile);
         assert!((r.after.window_footprint - direct.window_footprint).abs() < 1e-12);
+        // The replayed permutation walk and the materialized permuted
+        // matrix issue the same address stream (stable permute
+        // preserves per-row entry order), so the simulated x traffic
+        // matches exactly.
+        assert_eq!(r.after.x_dram_bytes, direct.x_dram_bytes);
     }
 
     #[test]

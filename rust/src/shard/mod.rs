@@ -144,6 +144,32 @@ impl ShardPlan {
         }
         cut
     }
+
+    /// Per-shard count of entries whose column falls outside the
+    /// shard's own row range — the halo gathers each shard pays for
+    /// (columns beyond the square part never cross a row boundary and
+    /// are not counted, matching [`ShardPlan::cut_nnz`]'s convention).
+    /// The per-shard breakdown [`crate::traffic::shard_traffic`] prices
+    /// in bytes.
+    pub fn halo_nnz<S: Scalar>(&self, m: &Csr<S>) -> Vec<usize> {
+        self.ranges
+            .iter()
+            .map(|rg| {
+                let mut halo = 0usize;
+                for i in rg.clone() {
+                    let (cols, _) = m.row(i);
+                    halo += cols
+                        .iter()
+                        .filter(|&&c| {
+                            let c = c as usize;
+                            c < m.nrows() && !rg.contains(&c)
+                        })
+                        .count();
+                }
+                halo
+            })
+            .collect()
+    }
 }
 
 /// `k + 1` boundary rows with (near-)equal nnz per shard and at least

@@ -238,6 +238,8 @@ fn plan_cache_hit_bypasses_search() {
         base_config: config_key(&cfg),
         scope: "ehyb".into(),
         reorder: "none".into(),
+        oracle: "roofline".into(),
+        probe_width: 1,
     };
     PlanStore::new(&dir).save(&planted).unwrap();
 
@@ -282,6 +284,8 @@ fn cache_hit_never_overrides_explicit_engine_level_or_config() {
         base_config: config_key(&cfg),
         scope: "ehyb".into(),
         reorder: "none".into(),
+        oracle: "traffic".into(),
+        probe_width: 0,
     };
     PlanStore::new(&dir).save(&planted).unwrap();
 
