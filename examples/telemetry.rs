@@ -1,0 +1,86 @@
+//! A tour of the unified telemetry subsystem (the CI telemetry gate
+//! runs exactly this).
+//!
+//! ```text
+//! cargo run --release --example telemetry
+//! ```
+//!
+//! 1. Build a sharded EHYB context under a **fake-clock**
+//!    [`Telemetry`] handle: every stage of the build pipeline
+//!    (`reorder`, `tune`, `shard.build`, the derived `ehyb.partition` /
+//!    `ehyb.assemble` spans) lands in one deterministic span tree.
+//! 2. Serve a few requests and run a CG solve; every request gets a
+//!    trace ID at submit, and per-shard kernel spans plus solver
+//!    iteration events record into the same handle.
+//! 3. Snapshot once, then render that single snapshot four ways:
+//!    markdown tables, the span tree, Prometheus text exposition, and
+//!    deterministic JSON — and replay one request's whole story with
+//!    [`TelemetrySnapshot::describe_trace`].
+
+use ehyb::harness::report;
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::sparse::gen;
+use ehyb::{EngineKind, ShardSpec, SpmvContext, Telemetry};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Build under a fake clock: timestamps are logical ticks, so two
+    //    runs produce byte-identical span trees.
+    let m = gen::poisson2d::<f64>(24, 24);
+    let n = m.nrows();
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+        .shards(ShardSpec::Count(2))
+        .telemetry(Telemetry::with_fake_clock())
+        .build()?;
+    println!("matrix      : n={} nnz={} shards={}", n, m.nnz(), ctx.shards());
+
+    // 2. Serve a few round-trips (each drains as a fused batch with
+    //    per-shard kernel spans), then solve.
+    {
+        let svc = ctx.serve(8)?;
+        let client = svc.client();
+        for t in 0..3 {
+            let x: Vec<f64> = (0..n).map(|i| ((i * 5 + t * 3) % 11) as f64 * 0.5 - 2.0).collect();
+            let y = client.spmv(x.clone())?;
+            anyhow::ensure!(y.len() == n, "bad reply length");
+        }
+    }
+    let b: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) * 0.5 + 0.25).collect();
+    let precond = ehyb::coordinator::Jacobi::new(ctx.matrix());
+    let (_, rep) =
+        ctx.solver().cg(&b, None, &precond, &ehyb::coordinator::SolverConfig::default())?;
+    anyhow::ensure!(rep.converged(), "CG should converge on poisson2d");
+    println!("solve       : {} {} after {} iters", rep.solver, rep.status.name(), rep.iters);
+
+    // 3. One snapshot, four views.
+    let snap = ctx.telemetry_snapshot();
+    println!();
+    println!("{}", report::telemetry_markdown("Telemetry tour", &snap));
+
+    println!("--- prometheus ---");
+    print!("{}", snap.to_prometheus());
+    println!();
+
+    let json = snap.to_json().dump();
+    println!("--- json ({} bytes) ---", json.len());
+
+    // Determinism: a frozen registry exports byte-identically.
+    let again = ctx.telemetry_snapshot();
+    anyhow::ensure!(again.to_json().dump() == json, "frozen JSON export drifted");
+    anyhow::ensure!(
+        again.to_prometheus() == snap.to_prometheus(),
+        "frozen Prometheus export drifted"
+    );
+    println!("determinism : both exporters byte-identical across two snapshots");
+
+    // Replay one served request's story from the same snapshot.
+    let traces = snap.known_traces();
+    anyhow::ensure!(!traces.is_empty(), "workload minted no traces");
+    println!();
+    println!("--- trace {} ---", traces[0]);
+    print!("{}", snap.describe_trace(traces[0]));
+
+    println!("ok");
+    Ok(())
+}

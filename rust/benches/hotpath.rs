@@ -244,7 +244,31 @@ fn main() {
 
     if let Some(path) = &out_path {
         let label = if smoke { "ci-smoke" } else { "hotpath" };
-        let j = bench_json(label, &json_cases);
+        let mut j = bench_json(label, &json_cases);
+        if smoke {
+            // Attach a deterministic telemetry snapshot (ISSUE 8): a
+            // fake-clock instrumented build + served round-trips on the
+            // first smoke matrix, exported under the "telemetry" key so
+            // the per-commit BENCH_ci.json artifact also carries the
+            // pipeline's span/metric decomposition.
+            let m = cases[0].1.clone();
+            let ctx = SpmvContext::builder(m)
+                .engine(EngineKind::Ehyb)
+                .telemetry(ehyb::Telemetry::with_fake_clock())
+                .build()
+                .expect("telemetry smoke build");
+            let svc = ctx.serve(4).expect("telemetry smoke serve");
+            let client = svc.client();
+            for t in 0..3usize {
+                let x: Vec<f64> =
+                    (0..ctx.nrows()).map(|i| ((i * 3 + t * 7) % 13) as f64 * 0.5 - 3.0).collect();
+                client.spmv(x).expect("telemetry smoke round trip");
+            }
+            drop(svc);
+            if let ehyb::runtime::json::Json::Obj(map) = &mut j {
+                map.insert("telemetry".to_string(), ctx.telemetry_snapshot().to_json());
+            }
+        }
         std::fs::write(path, j.dump()).expect("write bench JSON");
         println!("wrote {path} ({} cases)", json_cases.len());
     }

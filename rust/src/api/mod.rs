@@ -36,6 +36,7 @@ use crate::coordinator::solver::{self, SolveReport, SolveStatus, SolverConfig};
 use crate::preprocess::{EhybPlan, PreprocessConfig};
 use crate::resilience::{GuardLevel, Health, HealthReport};
 use crate::reorder::{ReorderSpec, ReorderedEngine, Reordering};
+use crate::telemetry::{metrics::labeled, Telemetry, TelemetrySnapshot, TraceHealthEvent, TraceId};
 use crate::shard::{ShardPlan, ShardSpec, ShardStrategy, ShardedEngine};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
@@ -188,6 +189,7 @@ pub struct SpmvContextBuilder<S: Scalar> {
     fallback: bool,
     guard: GuardLevel,
     oracle: ScoreOracle,
+    telemetry: Option<Telemetry>,
 }
 
 impl<S: Scalar> SpmvContextBuilder<S> {
@@ -306,6 +308,18 @@ impl<S: Scalar> SpmvContextBuilder<S> {
         self
     }
 
+    /// Record build-time spans, request traces, and metrics into this
+    /// [`Telemetry`] handle (default: a fresh wall-clock handle). Pass
+    /// [`Telemetry::with_fake_clock`] for deterministic, tick-counted
+    /// timelines in tests and goldens; pass one shared handle to
+    /// several builds to land them in a single snapshot. Everything the
+    /// context and its service/solvers record is retrievable via
+    /// [`SpmvContext::telemetry_snapshot`].
+    pub fn telemetry(mut self, tel: Telemetry) -> Self {
+        self.telemetry = Some(tel);
+        self
+    }
+
     /// Run preprocessing / tuning (as requested) and prepare the engine.
     pub fn build(self) -> crate::Result<SpmvContext<S>> {
         let SpmvContextBuilder {
@@ -321,11 +335,18 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             fallback,
             guard,
             oracle,
+            telemetry,
         } = self;
         // Degradation ledger — shared with the solver handle so a
         // fallback build and a restarted solve report through one
         // `ctx.health()` snapshot.
         let health = Arc::new(Health::default());
+        // One telemetry handle for the whole pipeline: build spans
+        // here, request traces in the service, kernel spans inside the
+        // sharded engine. RAII guards close the spans on the error
+        // paths too.
+        let tel = telemetry.unwrap_or_else(Telemetry::new);
+        let build_span = tel.span("build");
         // --- Global reordering (ISSUE 5 tentpole): resolved FIRST so
         // everything downstream — tuning fingerprints, shard
         // boundaries, the EHYB partitioner — sees the permuted
@@ -342,6 +363,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                         matrix.ncols()
                     )));
                 }
+                let _g = tel.span("reorder");
                 let r = Reordering::compute(&matrix, spec)?;
                 if !r.is_identity() {
                     exec_matrix = Some(r.apply(&matrix));
@@ -450,17 +472,21 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                         (engine, plan)
                     }
                     None => {
+                        let tune_span = tel.span("tune");
                         let searched = if explicit {
-                            autotune::tuner::tune_scored(
-                                exec, &config, requested, level, oracle, fp,
+                            autotune::tuner::tune_scored_traced(
+                                exec, &config, requested, level, oracle, fp, &tel,
                             )
                         } else {
                             // Implicit `Auto` (no `.tune(..)`): engine
                             // choice only — one preprocessing pass,
                             // like the pre-tuner engine comparison.
                             // The knob search stays opt-in.
-                            autotune::tuner::choose_engine(exec, &config, level, oracle, fp)
+                            autotune::tuner::choose_engine_traced(
+                                exec, &config, level, oracle, fp, &tel,
+                            )
                         };
+                        drop(tune_span);
                         match searched {
                             Err(e) if fallback => {
                                 // Degraded mode for tuner-routed builds:
@@ -500,6 +526,16 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                 }
             }
         };
+        // Partition/assemble phase timings from the whole-matrix plan,
+        // surfaced as derived spans (`derived_span` backdates the wall
+        // interval; under a fake clock each is one tick) and as build
+        // gauges in the registry.
+        if let Some(p) = &plan {
+            tel.derived_span("ehyb.partition", TraceId::NONE, p.timings.partition_secs);
+            tel.derived_span("ehyb.assemble", TraceId::NONE, p.timings.reorder_secs);
+            tel.registry().set_gauge("build.partition_secs", p.timings.partition_secs);
+            tel.registry().set_gauge("build.assemble_secs", p.timings.reorder_secs);
+        }
         // --- Row sharding (ISSUE 4 tentpole): split into contiguous
         // row shards, prepare one engine per shard from the resolved
         // kind and the final (possibly tuned) config, and preset the
@@ -512,6 +548,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
         let mut sharded: Option<Arc<ShardedEngine<S>>> = None;
         let mut reorder_cut: Option<(usize, usize)> = None;
         if let Some(spec) = shards {
+            let _shard_span = tel.span("shard.build");
             let k = spec.resolve(exec.nrows());
             let splan = ShardPlan::new(exec, k, shard_strategy);
             if exec_matrix.is_some() {
@@ -572,6 +609,9 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             };
             let engine = ShardedEngine::build(exec, resolved, &config, &splan, shard_overrides)?;
             let arc = Arc::new(engine);
+            // Per-shard `shard.kernel(i=K)` spans from inside the
+            // fan-out land on the same handle as everything else.
+            arc.set_telemetry(tel.clone());
             sharded = Some(arc.clone());
             shard_plan = Some(splan);
         }
@@ -580,6 +620,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             let inner = arc.clone() as Arc<dyn SpmvEngine<S>>;
             let _ = engine.set(wrap_reordered(inner, &reordering, exec_matrix.is_some()));
         }
+        drop(build_span);
         Ok(SpmvContext {
             matrix,
             config,
@@ -597,6 +638,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             fallback,
             guard,
             health,
+            tel,
         })
     }
 }
@@ -710,6 +752,12 @@ pub struct SpmvContext<S: Scalar> {
     /// non-finite value lands here (snapshot via
     /// [`SpmvContext::health`]).
     health: Arc<Health>,
+    /// Telemetry handle shared by every layer this context drives:
+    /// build spans were recorded into it at build time; the service
+    /// ([`SpmvContext::serve`]), the sharded engine, and the solver
+    /// handle all record into the same registry/rings. Snapshot via
+    /// [`SpmvContext::telemetry_snapshot`].
+    tel: Telemetry,
 }
 
 /// Index of the first non-finite (NaN/Inf) element, if any.
@@ -734,6 +782,7 @@ impl<S: Scalar> SpmvContext<S> {
             fallback: false,
             guard: GuardLevel::Off,
             oracle: ScoreOracle::default(),
+            telemetry: None,
         }
     }
 
@@ -848,8 +897,43 @@ impl<S: Scalar> SpmvContext<S> {
         self.fallback
     }
 
+    /// The telemetry handle every layer of this context records into —
+    /// hand it to dashboards, or to other builds that should share one
+    /// timeline.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    /// Freeze everything recorded so far into one
+    /// [`TelemetrySnapshot`]: build/serve/tune spans, request events,
+    /// metric registry, attached service blocks — plus, refreshed at
+    /// snapshot time, the sharded engine's per-shard block-prep gauges
+    /// (`shard.block_prep_secs{shard="K"}`), its scratch-pool miss
+    /// gauge, and the [`Health`] event log folded in as trace-tagged
+    /// `health_events`.
+    pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
+        if let Some(sh) = &self.sharded {
+            for (i, st) in sh.stats().iter().enumerate() {
+                if let Some(t) = &st.block_prep {
+                    let name = labeled("shard.block_prep_secs", &[("shard", &i.to_string())]);
+                    self.tel.registry().set_gauge(&name, t.total_secs());
+                }
+            }
+            self.tel.registry().set_gauge("shard.scratch_misses", sh.scratch_misses() as f64);
+        }
+        let mut snap = self.tel.snapshot();
+        snap.health_events = self
+            .health
+            .events_traced()
+            .into_iter()
+            .map(|(detail, trace)| TraceHealthEvent { trace, detail })
+            .collect();
+        snap
+    }
+
     fn engine_cell(&self) -> &Arc<dyn SpmvEngine<S>> {
         self.engine.get_or_init(|| {
+            let _g = self.tel.span("engine.build");
             let exec = self.exec_matrix.as_ref().unwrap_or(&self.matrix);
             let inner = build_engine(self.kind, exec, self.plan.as_ref());
             wrap_reordered(inner, &self.reordering, self.exec_matrix.is_some())
@@ -1006,11 +1090,17 @@ impl<S: Scalar> SpmvContext<S> {
             let kernel: BatchKernel<S> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
             Ok((kernel, fb))
         };
-        if adaptive {
-            SpmvService::spawn_adaptive(make, nrows, max_batch, queue_bound)
-        } else {
-            SpmvService::spawn_bounded(make, nrows, max_batch, queue_bound)
-        }
+        // The service records into this context's handle: submit/shed/
+        // reply events, queue-wait and batch spans, and its metrics
+        // block, all in the same snapshot as the build spans.
+        SpmvService::spawn_with_telemetry(
+            make,
+            nrows,
+            max_batch,
+            queue_bound,
+            adaptive,
+            self.tel.clone(),
+        )
     }
 
     /// Iterative solvers running over this context's engine.
@@ -1059,8 +1149,13 @@ impl<S: Scalar> SolverHandle<'_, S> {
             }
         };
         let engine = self.ctx.engine();
+        let trace = self.ctx.tel.mint_trace();
+        let span = self.ctx.tel.span_traced("solve.cg", trace);
         let out = solver::cg(|x, y| engine.spmv(x, y), b, x0, precond, cfg);
-        Ok(self.restart_if_broken(out, b, cfg))
+        let out = self.restart_if_broken(out, b, cfg, trace);
+        drop(span);
+        self.emit_solve_events(trace, &out.1);
+        Ok(out)
     }
 
     /// Preconditioned BiCGSTAB; `x0 = None` starts from zero.
@@ -1085,8 +1180,13 @@ impl<S: Scalar> SolverHandle<'_, S> {
             }
         };
         let engine = self.ctx.engine();
+        let trace = self.ctx.tel.mint_trace();
+        let span = self.ctx.tel.span_traced("solve.bicgstab", trace);
         let out = solver::bicgstab(|x, y| engine.spmv(x, y), b, x0, precond, cfg);
-        Ok(self.restart_if_broken(out, b, cfg))
+        let out = self.restart_if_broken(out, b, cfg, trace);
+        drop(span);
+        self.emit_solve_events(trace, &out.1);
+        Ok(out)
     }
 
     /// Degraded-mode solve recovery: when the context was built with
@@ -1105,6 +1205,7 @@ impl<S: Scalar> SolverHandle<'_, S> {
         out: (Vec<S>, SolveReport),
         b: &[S],
         cfg: &SolverConfig,
+        trace: TraceId,
     ) -> (Vec<S>, SolveReport) {
         let (x, rep) = out;
         if !self.ctx.fallback
@@ -1112,18 +1213,40 @@ impl<S: Scalar> SolverHandle<'_, S> {
         {
             return (x, rep);
         }
-        self.ctx.health.record_solver_restart(format!(
+        let detail = format!(
             "{} {} at iter {}; jacobi-bicgstab restart",
             rep.solver,
             rep.status.name(),
             rep.iters
-        ));
+        );
+        // Tag the health ledger AND the trace's event stream, so the
+        // restart shows up both in `ctx.health()` and in
+        // `describe_trace` for this solve.
+        self.ctx.health.record_solver_restart_traced(&detail, trace);
+        self.ctx.tel.event("solver-restart", trace, detail);
         let pre = Jacobi::new(self.ctx.matrix());
         let mut rcfg = cfg.clone();
         rcfg.divergence_window = 0;
         let x0 = vec![S::ZERO; b.len()];
         let engine = self.ctx.engine();
         solver::bicgstab(|v, y| engine.spmv(v, y), b, &x0, &pre, &rcfg)
+    }
+
+    /// Replay the final report's residual history as per-iteration
+    /// trace events (plus one closing summary event), so
+    /// `describe_trace` on a solve's trace shows its convergence
+    /// story. Post-hoc: the solver core stays telemetry-free.
+    fn emit_solve_events(&self, trace: TraceId, rep: &SolveReport) {
+        for (i, r) in rep.history.iter().enumerate() {
+            self.ctx
+                .tel
+                .event("solver-iter", trace, format!("iter={} rel_residual={r:.3e}", i + 1));
+        }
+        self.ctx.tel.event(
+            "solver-done",
+            trace,
+            format!("{} {} after {} iters", rep.solver, rep.status.name(), rep.iters),
+        );
     }
 
     /// Multi-RHS preconditioned CG: every iteration's SpMVs fuse into
@@ -1140,6 +1263,7 @@ impl<S: Scalar> SolverHandle<'_, S> {
         }
         let x0s = vec![vec![S::ZERO; n]; bs.len()];
         let engine = self.ctx.engine();
+        let _span = self.ctx.tel.span(format!("solve.cg_many(w={})", bs.len()));
         Ok(solver::cg_many(|xs, ys| engine.spmv_batch(xs, ys), bs, &x0s, precond, cfg))
     }
 }
@@ -1655,5 +1779,80 @@ mod tests {
         let (_, rep) = strict.solver().cg(&b, None, &Identity, &cfg).unwrap();
         assert_eq!(rep.status, SolveStatus::Diverged);
         assert_eq!(strict.health().solver_restarts, 0);
+    }
+
+    #[test]
+    fn telemetry_snapshot_covers_build_shards_and_solves() {
+        let m = poisson2d::<f64>(16, 16);
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .shards(ShardSpec::Count(2))
+            .telemetry(crate::telemetry::Telemetry::with_fake_clock())
+            .build()
+            .unwrap();
+        let n = ctx.nrows();
+        let xs = BatchBuf::<f64>::zeros(n, 2);
+        let mut ys = BatchBuf::<f64>::zeros(n, 2);
+        let mut ysv = ys.view_mut();
+        ctx.spmv_batch(xs.view(), &mut ysv).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| ((i * 13 + 5) % 17) as f64 / 17.0 + 0.1).collect();
+        let pre = Jacobi::new(ctx.matrix());
+        let (_, rep) = ctx.solver().cg(&b, None, &pre, &SolverConfig::default()).unwrap();
+        assert!(rep.converged(), "{rep:?}");
+        let snap = ctx.telemetry_snapshot();
+        // Build-side spans: `shard.build` nests under the `build` root,
+        // and the fused batch recorded one kernel span per shard.
+        let build = snap.spans.iter().find(|s| s.name == "build").expect("build span");
+        let sb = snap.spans.iter().find(|s| s.name == "shard.build").expect("shard.build");
+        assert_eq!(sb.parent, build.id);
+        let kernels =
+            snap.spans.iter().filter(|s| s.name.starts_with("shard.kernel(i=")).count();
+        assert_eq!(kernels, 2);
+        // Satellite: per-shard block-prep and scratch-miss gauges are
+        // refreshed into the registry at snapshot time.
+        assert!(snap.gauges.contains_key("shard.block_prep_secs{shard=\"0\"}"));
+        assert!(snap.gauges.contains_key("shard.block_prep_secs{shard=\"1\"}"));
+        assert!(snap.gauges.contains_key("shard.scratch_misses"));
+        // The solve minted its own trace: a traced span, one
+        // `solver-iter` event per residual-history entry, one summary.
+        let solve = snap.spans.iter().find(|s| s.name == "solve.cg").expect("solve span");
+        assert_ne!(solve.trace, 0);
+        let iters = snap
+            .events
+            .iter()
+            .filter(|e| e.trace == solve.trace && e.kind == "solver-iter")
+            .count();
+        assert_eq!(iters, rep.history.len());
+        assert!(snap.events.iter().any(|e| e.trace == solve.trace && e.kind == "solver-done"));
+    }
+
+    #[test]
+    fn solver_restart_emits_traced_health_and_trace_events() {
+        use crate::coordinator::precond::Identity;
+        use crate::sparse::coo::Coo;
+        let a = Coo::<f64>::new(4, 4).to_csr();
+        let b = vec![1.0, 0.0, 0.0, 0.0];
+        let ctx = SpmvContext::builder(a)
+            .engine(EngineKind::CsrVector)
+            .fallback(true)
+            .telemetry(crate::telemetry::Telemetry::with_fake_clock())
+            .build()
+            .unwrap();
+        let (_, rep) = ctx.solver().cg(&b, None, &Identity, &SolverConfig::default()).unwrap();
+        assert_eq!(rep.solver, "bicgstab");
+        let snap = ctx.telemetry_snapshot();
+        let solve = snap.spans.iter().find(|s| s.name == "solve.cg").unwrap();
+        let restart = snap
+            .events
+            .iter()
+            .find(|e| e.kind == "solver-restart")
+            .expect("restart event recorded");
+        assert_eq!(restart.trace, solve.trace);
+        // The health ledger's event carries the same trace tag, and the
+        // snapshot folds it into `health_events`.
+        assert_eq!(snap.health_events.len(), 1);
+        assert_eq!(snap.health_events[0].trace, solve.trace);
+        assert!(snap.health_events[0].detail.contains("solver restart"));
     }
 }

@@ -33,6 +33,7 @@ use crate::runtime::json::{self, Json};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
 use crate::spmv::SpmvEngine;
+use crate::telemetry::Telemetry;
 use crate::util::timer::bench_secs;
 use crate::util::Timer;
 use std::time::Duration;
@@ -463,7 +464,7 @@ pub fn tune_with_fingerprint<S: Scalar>(
     level: TuneLevel,
     fingerprint: Option<Fingerprint>,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, requested, level, ScoreOracle::default(), fingerprint, true)
+    search(m, base, requested, level, ScoreOracle::default(), fingerprint, true, None)
 }
 
 /// [`tune_with_fingerprint`] with an explicit heuristic
@@ -477,7 +478,23 @@ pub fn tune_scored<S: Scalar>(
     oracle: ScoreOracle,
     fingerprint: Option<Fingerprint>,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, requested, level, oracle, fingerprint, true)
+    search(m, base, requested, level, oracle, fingerprint, true, None)
+}
+
+/// [`tune_scored`] recording one `tune.candidate(…)` span per scored
+/// candidate into `tel` (what `SpmvContext::build` runs under its
+/// `tune` span, so the search's per-candidate cost shows up in the
+/// build-side span tree).
+pub fn tune_scored_traced<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    requested: EngineKind,
+    level: TuneLevel,
+    oracle: ScoreOracle,
+    fingerprint: Option<Fingerprint>,
+    tel: &Telemetry,
+) -> crate::Result<TuneOutcome<S>> {
+    search(m, base, requested, level, oracle, fingerprint, true, Some(tel))
 }
 
 /// Engine choice only — what implicit [`EngineKind::Auto`] (no
@@ -496,9 +513,24 @@ pub fn choose_engine<S: Scalar>(
     oracle: ScoreOracle,
     fingerprint: Option<Fingerprint>,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, EngineKind::Auto, level, oracle, fingerprint, false)
+    search(m, base, EngineKind::Auto, level, oracle, fingerprint, false, None)
 }
 
+/// [`choose_engine`] with per-candidate `tune.candidate(…)` spans
+/// recorded into `tel` (the implicit-`Auto` path of an instrumented
+/// build).
+pub fn choose_engine_traced<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    level: TuneLevel,
+    oracle: ScoreOracle,
+    fingerprint: Option<Fingerprint>,
+    tel: &Telemetry,
+) -> crate::Result<TuneOutcome<S>> {
+    search(m, base, EngineKind::Auto, level, oracle, fingerprint, false, Some(tel))
+}
+
+#[allow(clippy::too_many_arguments)]
 fn search<S: Scalar>(
     m: &Csr<S>,
     base: &PreprocessConfig,
@@ -507,6 +539,7 @@ fn search<S: Scalar>(
     oracle: ScoreOracle,
     fingerprint: Option<Fingerprint>,
     knob_variants: bool,
+    tel: Option<&Telemetry>,
 ) -> crate::Result<TuneOutcome<S>> {
     let t0 = Timer::start();
     let square = m.nrows() == m.ncols() && m.nrows() > 0;
@@ -577,15 +610,19 @@ fn search<S: Scalar>(
     // `Auto`, where an infeasible EHYB default (partition failure, bad
     // override) falls back to the CSR-scalar baseline, matching the
     // pre-tuner `Auto` behaviour.
-    let mut best = match score_candidate::<S>(m, base, &default_cand, level, oracle, &dev) {
-        Ok(s) => s,
-        Err(_) if requested == EngineKind::Auto && default_cand.engine == EngineKind::Ehyb => {
-            cands.retain(|c| c.engine != EngineKind::Ehyb);
-            let fallback = Candidate::baseline(EngineKind::CsrScalar, base);
-            cands.retain(|c| *c != fallback);
-            score_candidate::<S>(m, base, &fallback, level, oracle, &dev)?
+    let mut best = {
+        let _span =
+            tel.map(|t| t.span(format!("tune.candidate(i=0,{:?})", default_cand.engine)));
+        match score_candidate::<S>(m, base, &default_cand, level, oracle, &dev) {
+            Ok(s) => s,
+            Err(_) if requested == EngineKind::Auto && default_cand.engine == EngineKind::Ehyb => {
+                cands.retain(|c| c.engine != EngineKind::Ehyb);
+                let fallback = Candidate::baseline(EngineKind::CsrScalar, base);
+                cands.retain(|c| *c != fallback);
+                score_candidate::<S>(m, base, &fallback, level, oracle, &dev)?
+            }
+            Err(e) => return Err(e),
         }
-        Err(e) => return Err(e),
     };
     let default_score = best.score;
     let mut tried = 1usize;
@@ -595,7 +632,7 @@ fn search<S: Scalar>(
         TuneLevel::Measured { budget } => Some(budget),
         TuneLevel::Heuristic => None,
     };
-    for c in &cands {
+    for (i, c) in cands.iter().enumerate() {
         if let Some(b) = budget {
             if t0.elapsed() >= b {
                 skipped += 1;
@@ -603,6 +640,7 @@ fn search<S: Scalar>(
                 continue;
             }
         }
+        let _span = tel.map(|t| t.span(format!("tune.candidate(i={},{:?})", i + 1, c.engine)));
         match score_candidate::<S>(m, base, c, level, oracle, &dev) {
             Ok(s) => {
                 tried += 1;
@@ -984,6 +1022,37 @@ mod tests {
             baseline_predicted_secs(EngineKind::SellP, &m, &dev)
                 < baseline_predicted_secs(EngineKind::Ell, &m, &dev)
         );
+    }
+
+    #[test]
+    fn traced_tune_records_one_span_per_scored_candidate() {
+        let m = poisson2d::<f64>(16, 16);
+        let tel = Telemetry::with_fake_clock();
+        let out = tune_scored_traced(
+            &m,
+            &cfg(64),
+            EngineKind::Ehyb,
+            TuneLevel::Heuristic,
+            ScoreOracle::default(),
+            None,
+            &tel,
+        )
+        .unwrap();
+        let snap = tel.snapshot();
+        let cand_spans: Vec<_> =
+            snap.spans.iter().filter(|s| s.name.starts_with("tune.candidate(")).collect();
+        // Every scored candidate left a span (skipped ones may appear
+        // too — a span opens before scoring can fail), starting with
+        // the always-scored default at i=0.
+        assert!(cand_spans.len() >= out.candidates_tried);
+        assert!(cand_spans.iter().any(|s| s.name.starts_with("tune.candidate(i=0,")));
+        for s in &cand_spans {
+            assert!(s.end_nanos > s.start_nanos);
+        }
+        // The untraced entry point records nothing.
+        let tel2 = Telemetry::with_fake_clock();
+        tune(&m, &cfg(64), EngineKind::Ehyb, TuneLevel::Heuristic).unwrap();
+        assert!(tel2.snapshot().spans.is_empty());
     }
 
     #[test]

@@ -1,280 +1,35 @@
-//! Service metrics: request counters, a fixed-bucket latency histogram
-//! (log-spaced), a fused-batch-width histogram, and a bytes-moved
-//! counter — all lock-free on the hot path. Rendered by
-//! [`crate::harness::report::service_markdown`].
+//! Deprecated location of the service metric types.
+//!
+//! 0.8 promoted [`LatencyHistogram`], [`WidthHistogram`], and
+//! [`ServiceMetrics`] into [`crate::telemetry`] so every subsystem —
+//! not just the service — publishes into one registry namespace. These
+//! aliases keep 0.7 call sites compiling; migrate imports to
+//! `ehyb::telemetry::*` (see MIGRATION.md 0.7 → 0.8).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+#[deprecated(since = "0.8.0", note = "moved to `ehyb::telemetry::LatencyHistogram`")]
+pub type LatencyHistogram = crate::telemetry::LatencyHistogram;
 
-/// Log-spaced latency histogram from 1 µs to ~1 s (30 buckets, ×2 each).
-pub struct LatencyHistogram {
-    buckets: Vec<AtomicU64>,
-    count: AtomicU64,
-    sum_nanos: AtomicU64,
-}
+#[deprecated(since = "0.8.0", note = "moved to `ehyb::telemetry::WidthHistogram`")]
+pub type WidthHistogram = crate::telemetry::WidthHistogram;
 
-impl Default for LatencyHistogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl LatencyHistogram {
-    pub fn new() -> Self {
-        Self {
-            buckets: (0..30).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum_nanos: AtomicU64::new(0),
-        }
-    }
-
-    #[inline]
-    pub fn record(&self, secs: f64) {
-        let nanos = (secs * 1e9) as u64;
-        let us = nanos / 1000;
-        let idx = if us == 0 { 0 } else { (63 - us.leading_zeros() as usize).min(29) };
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    pub fn mean_secs(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            return 0.0;
-        }
-        self.sum_nanos.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
-    }
-
-    /// Approximate quantile from the histogram (upper bucket edge).
-    pub fn quantile_secs(&self, q: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return (1u64 << (i + 1)) as f64 * 1e-6; // bucket upper edge in µs
-            }
-        }
-        (1u64 << 30) as f64 * 1e-6
-    }
-}
-
-/// Power-of-two histogram of fused-batch widths: bucket `i` counts
-/// widths in `[2^i, 2^(i+1))`, the last bucket absorbs the overflow.
-/// Makes the request-fusion win (mean width > 1) observable.
-pub struct WidthHistogram {
-    buckets: Vec<AtomicU64>,
-    count: AtomicU64,
-    sum: AtomicU64,
-    max: AtomicU64,
-}
-
-impl Default for WidthHistogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl WidthHistogram {
-    pub fn new() -> Self {
-        Self {
-            buckets: (0..16).map(|_| AtomicU64::new(0)).collect(),
-            count: AtomicU64::new(0),
-            sum: AtomicU64::new(0),
-            max: AtomicU64::new(0),
-        }
-    }
-
-    #[inline]
-    pub fn record(&self, width: usize) {
-        let w = width.max(1) as u64;
-        let idx = (63 - w.leading_zeros() as usize).min(self.buckets.len() - 1);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum.fetch_add(w, Ordering::Relaxed);
-        self.max.fetch_max(w, Ordering::Relaxed);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count.load(Ordering::Relaxed)
-    }
-
-    /// Mean recorded width (0 when empty).
-    pub fn mean(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            return 0.0;
-        }
-        self.sum.load(Ordering::Relaxed) as f64 / c as f64
-    }
-
-    pub fn max(&self) -> u64 {
-        self.max.load(Ordering::Relaxed)
-    }
-
-    pub fn num_buckets(&self) -> usize {
-        self.buckets.len()
-    }
-
-    /// Count in bucket `i` (widths in `[2^i, 2^(i+1))`).
-    pub fn bucket(&self, i: usize) -> u64 {
-        self.buckets[i].load(Ordering::Relaxed)
-    }
-}
-
-/// Service-level counters.
-pub struct ServiceMetrics {
-    pub requests: AtomicU64,
-    pub batches: AtomicU64,
-    /// Kernel latency each request observed (the fused call's wall time).
-    pub spmv_latency: LatencyHistogram,
-    /// Width of every fused kernel call. Invariant: only batches that
-    /// actually **executed** are recorded here — a shed request's width
-    /// never enters this histogram (sheds are counted in
-    /// [`Self::shed`] at submit time, before any width accounting), so
-    /// `batch_width.count() == batches` always holds. Pinned by
-    /// `service::tests::shed_requests_never_recorded_in_width_histogram`.
-    pub batch_width: WidthHistogram,
-    /// Estimated bytes streamed by the engine: the matrix format once
-    /// per fused call plus `2 · nrows · sizeof(S)` per request (x in,
-    /// y out) — the quantity request fusion amortizes.
-    pub bytes_moved: AtomicU64,
-    /// Requests shed because the bounded queue was full
-    /// (`EhybError::Overloaded`) — recorded client-side at submit.
-    pub shed: AtomicU64,
-    /// Current fused-batch limit of an **adaptive** service
-    /// (`spawn_adaptive` / `serve_adaptive`): shrinks when submissions
-    /// shed, grows back while the queue drains idle. 0 = fixed-limit
-    /// service (the default `spawn`/`serve` paths never touch it).
-    pub adaptive_max_batch: AtomicU64,
-    /// Fused batches quarantined because the engine panicked mid-call
-    /// (every request in the batch got `EhybError::EngineFault`). One
-    /// increment per poisoned *batch*, not per request.
-    pub faults: AtomicU64,
-    /// Engines respawned via the service's factory after a fault.
-    /// Steady state: `respawns == faults`; a lag means the factory
-    /// failed and the service exited.
-    pub respawns: AtomicU64,
-    /// Requests dropped at drain time because their deadline had
-    /// already expired (`EhybError::DeadlineExceeded`) — they never
-    /// occupied kernel width.
-    pub deadline_misses: AtomicU64,
-}
-
-impl Default for ServiceMetrics {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl ServiceMetrics {
-    pub fn new() -> Self {
-        Self {
-            requests: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            spmv_latency: LatencyHistogram::new(),
-            batch_width: WidthHistogram::new(),
-            bytes_moved: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
-            adaptive_max_batch: AtomicU64::new(0),
-            faults: AtomicU64::new(0),
-            respawns: AtomicU64::new(0),
-            deadline_misses: AtomicU64::new(0),
-        }
-    }
-
-    pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed);
-        if b == 0 {
-            return 0.0;
-        }
-        self.requests.load(Ordering::Relaxed) as f64 / b as f64
-    }
-}
+#[deprecated(since = "0.8.0", note = "moved to `ehyb::telemetry::ServiceMetrics`")]
+pub type ServiceMetrics = crate::telemetry::ServiceMetrics;
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    // The deprecated aliases must keep resolving to the moved types
+    // (same layout, same inherent methods) for 0.7 call sites.
+    #![allow(deprecated)]
 
     #[test]
-    fn histogram_records_and_means() {
-        let h = LatencyHistogram::new();
-        h.record(0.001);
-        h.record(0.003);
-        assert_eq!(h.count(), 2);
-        assert!((h.mean_secs() - 0.002).abs() < 1e-6);
-    }
-
-    #[test]
-    fn quantiles_ordered() {
-        let h = LatencyHistogram::new();
-        for i in 1..=100 {
-            h.record(i as f64 * 1e-5);
-        }
-        assert!(h.quantile_secs(0.5) <= h.quantile_secs(0.99));
-        assert!(h.quantile_secs(0.99) > 1e-4);
-    }
-
-    #[test]
-    fn batch_size_accounting() {
-        let m = ServiceMetrics::new();
-        m.requests.fetch_add(10, Ordering::Relaxed);
-        m.batches.fetch_add(4, Ordering::Relaxed);
-        assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
-    }
-
-    #[test]
-    fn empty_histogram_safe() {
-        let h = LatencyHistogram::new();
-        assert_eq!(h.mean_secs(), 0.0);
-        assert_eq!(h.quantile_secs(0.9), 0.0);
-    }
-
-    #[test]
-    fn adaptive_gauge_defaults_to_fixed() {
-        // 0 marks a fixed-limit service; adaptive services overwrite it
-        // with their live limit.
-        let m = ServiceMetrics::new();
-        assert_eq!(m.adaptive_max_batch.load(Ordering::Relaxed), 0);
-    }
-
-    #[test]
-    fn fault_counters_start_at_zero() {
-        let m = ServiceMetrics::new();
-        assert_eq!(m.faults.load(Ordering::Relaxed), 0);
-        assert_eq!(m.respawns.load(Ordering::Relaxed), 0);
-        assert_eq!(m.deadline_misses.load(Ordering::Relaxed), 0);
-    }
-
-    #[test]
-    fn width_histogram_buckets_and_stats() {
-        let h = WidthHistogram::new();
-        for w in [1usize, 1, 2, 3, 8, 16] {
-            h.record(w);
-        }
-        assert_eq!(h.count(), 6);
-        assert_eq!(h.max(), 16);
-        assert!((h.mean() - 31.0 / 6.0).abs() < 1e-12);
-        assert_eq!(h.bucket(0), 2); // widths 1
-        assert_eq!(h.bucket(1), 2); // widths 2..3
-        assert_eq!(h.bucket(3), 1); // width 8
-        assert_eq!(h.bucket(4), 1); // width 16
-    }
-
-    #[test]
-    fn width_histogram_empty_and_overflow() {
-        let h = WidthHistogram::new();
-        assert_eq!(h.mean(), 0.0);
-        assert_eq!(h.max(), 0);
-        h.record(1 << 20); // overflow clamps into the last bucket
-        assert_eq!(h.bucket(h.num_buckets() - 1), 1);
+    fn aliases_resolve_to_telemetry_types() {
+        let h = super::LatencyHistogram::new();
+        h.record(1e-3);
+        assert_eq!(h.count(), 1);
+        let m = super::ServiceMetrics::new();
+        assert_eq!(m.mean_batch_size(), 0.0);
+        let w: super::WidthHistogram = crate::telemetry::WidthHistogram::new();
+        w.record(4);
+        assert_eq!(w.max(), 4);
     }
 }

@@ -14,8 +14,9 @@
 //!   PJRT runtime, serving requests over channels; a drained request
 //!   batch executes as one fused `spmv_batch` call with recycled
 //!   output buffers.
-//! * [`metrics`] — counters, latency and batch-width histograms, and
-//!   the bytes-moved estimate for the service.
+//! * [`metrics`] — deprecated aliases of the service metric types,
+//!   which moved to [`crate::telemetry`] in 0.8 (one registry
+//!   namespace for every subsystem).
 
 pub mod solver;
 pub mod precond;

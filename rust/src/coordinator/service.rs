@@ -44,11 +44,11 @@
 //! errors. Faults, respawns, and deadline misses are counted in
 //! [`ServiceMetrics`].
 
-use super::metrics::ServiceMetrics;
 use crate::api::batch::{VecBatch, VecBatchMut};
 use crate::api::error::EhybError;
 use crate::resilience::RetryPolicy;
 use crate::sparse::scalar::Scalar;
+use crate::telemetry::{ServiceMetrics, Telemetry, TraceId};
 use crate::util::prng::Xoshiro256;
 use crate::util::Timer;
 use std::sync::mpsc;
@@ -72,7 +72,13 @@ pub type BatchKernel<S> = Box<dyn FnMut(VecBatch<'_, S>, &mut VecBatchMut<'_, S>
 pub type ReplyReceiver<S> = mpsc::Receiver<crate::Result<Vec<S>>>;
 
 enum Msg<S> {
-    Spmv { x: Vec<S>, deadline: Option<Instant>, reply: mpsc::Sender<crate::Result<Vec<S>>> },
+    Spmv {
+        x: Vec<S>,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<crate::Result<Vec<S>>>,
+        trace: u64,
+        enq_nanos: u64,
+    },
     Shutdown,
 }
 
@@ -81,6 +87,8 @@ struct Request<S> {
     x: Vec<S>,
     deadline: Option<Instant>,
     reply: mpsc::Sender<crate::Result<Vec<S>>>,
+    trace: u64,
+    enq_nanos: u64,
 }
 
 /// Handle to a running SpMV service. Clone-able; each clone can submit.
@@ -89,6 +97,7 @@ pub struct SpmvClient<S> {
     nrows: usize,
     queue_bound: usize,
     metrics: Arc<ServiceMetrics>,
+    tel: Telemetry,
 }
 
 impl<S> Clone for SpmvClient<S> {
@@ -98,6 +107,7 @@ impl<S> Clone for SpmvClient<S> {
             nrows: self.nrows,
             queue_bound: self.queue_bound,
             metrics: self.metrics.clone(),
+            tel: self.tel.clone(),
         }
     }
 }
@@ -136,15 +146,30 @@ impl<S: Scalar> SpmvClient<S> {
         let attempts = policy.max_attempts.max(1);
         let mut rng = Xoshiro256::new(policy.seed);
         let mut x = x;
+        // Each attempt is its own trace (so every trace keeps exactly
+        // one terminal event); a `retry` event on the new trace links
+        // back to the attempt it replaces via `prev=<trace>`.
+        let mut prev_trace = TraceId::NONE;
+        let link = |trace: TraceId, attempt: usize, prev: TraceId| {
+            if attempt > 0 && !trace.is_none() {
+                self.tel.event("retry", trace, format!("attempt={} prev={}", attempt + 1, prev.0));
+            }
+        };
         for attempt in 0..attempts {
             let last = attempt + 1 == attempts;
             let backup = if last { None } else { Some(x.clone()) };
-            let err = match self.try_submit_inner(x, None) {
-                Ok(rx) => match rx.recv().unwrap_or(Err(EhybError::ServiceStopped)) {
-                    Ok(y) => return Ok(y),
-                    Err(e) => e,
-                },
-                Err((e, buffer_back)) => {
+            let err = match self.try_submit_traced(x, None) {
+                Ok((rx, trace)) => {
+                    link(trace, attempt, prev_trace);
+                    prev_trace = trace;
+                    match rx.recv().unwrap_or(Err(EhybError::ServiceStopped)) {
+                        Ok(y) => return Ok(y),
+                        Err(e) => e,
+                    }
+                }
+                Err((e, buffer_back, trace)) => {
+                    link(trace, attempt, prev_trace);
+                    prev_trace = trace;
                     if !last && policy.retries(&e) {
                         // The request was never accepted, so the shed
                         // handed our buffer back: retry with it.
@@ -201,24 +226,50 @@ impl<S: Scalar> SpmvClient<S> {
         x: Vec<S>,
         deadline: Option<Instant>,
     ) -> std::result::Result<ReplyReceiver<S>, (EhybError, Vec<S>)> {
+        self.try_submit_traced(x, deadline).map(|(rx, _)| rx).map_err(|(e, x, _)| (e, x))
+    }
+
+    /// The traced submit every entry point funnels through: mints the
+    /// request's [`TraceId`], records the `submit` event, and — when
+    /// the request is *not* accepted — records its terminal event
+    /// (`shed` on backpressure, `fault` on a stopped service) so every
+    /// minted trace reaches exactly one terminal.
+    fn try_submit_traced(
+        &self,
+        x: Vec<S>,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<(ReplyReceiver<S>, TraceId), (EhybError, Vec<S>, TraceId)> {
         if x.len() != self.nrows {
             let e = EhybError::DimensionMismatch {
                 what: "service request x",
                 expected: self.nrows,
                 got: x.len(),
             };
-            return Err((e, x));
+            // Rejected before a trace exists: a validation error is the
+            // caller's bug, not a request in flight.
+            return Err((e, x, TraceId::NONE));
         }
+        let trace = self.tel.mint_trace();
+        let enq_nanos = self.tel.now_nanos();
+        self.tel.event(
+            "submit",
+            trace,
+            if deadline.is_some() { "queued (deadline)" } else { "queued" },
+        );
         let (reply_tx, reply_rx) = mpsc::channel();
-        match self.tx.try_send(Msg::Spmv { x, deadline, reply: reply_tx }) {
-            Ok(()) => Ok(reply_rx),
+        let msg =
+            Msg::Spmv { x, deadline, reply: reply_tx, trace: trace.0, enq_nanos };
+        match self.tx.try_send(msg) {
+            Ok(()) => Ok((reply_rx, trace)),
             Err(mpsc::TrySendError::Full(Msg::Spmv { x, .. })) => {
                 use std::sync::atomic::Ordering;
                 self.metrics.shed.fetch_add(1, Ordering::Relaxed);
-                Err((EhybError::Overloaded { queue_depth: self.queue_bound }, x))
+                self.tel.event("shed", trace, format!("queue full (depth={})", self.queue_bound));
+                Err((EhybError::Overloaded { queue_depth: self.queue_bound }, x, trace))
             }
             Err(mpsc::TrySendError::Disconnected(Msg::Spmv { x, .. })) => {
-                Err((EhybError::ServiceStopped, x))
+                self.tel.event("fault", trace, "service stopped");
+                Err((EhybError::ServiceStopped, x, trace))
             }
             // try_send returns back exactly the message we passed in.
             Err(_) => unreachable!("submitted a Spmv message"),
@@ -238,10 +289,16 @@ impl<S: Scalar> SpmvClient<S> {
                 got: x.len(),
             });
         }
+        let trace = self.tel.mint_trace();
+        let enq_nanos = self.tel.now_nanos();
+        self.tel.event("submit", trace, "queued (blocking)");
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
-            .send(Msg::Spmv { x, deadline: None, reply: reply_tx })
-            .map_err(|_| EhybError::ServiceStopped)?;
+            .send(Msg::Spmv { x, deadline: None, reply: reply_tx, trace: trace.0, enq_nanos })
+            .map_err(|_| {
+                self.tel.event("fault", trace, "service stopped");
+                EhybError::ServiceStopped
+            })?;
         Ok(reply_rx)
     }
 
@@ -264,6 +321,12 @@ impl<S: Scalar> SpmvClient<S> {
 
     pub fn nrows(&self) -> usize {
         self.nrows
+    }
+
+    /// The [`Telemetry`] handle this client records submit / shed /
+    /// retry events and trace IDs into.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
     }
 }
 
@@ -303,7 +366,7 @@ impl<S: Scalar> SpmvService<S> {
     where
         F: FnMut() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
-        Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, false)
+        Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, false, Telemetry::new())
     }
 
     /// [`Self::spawn_bounded`] with a **shed-rate-adaptive** fused-batch
@@ -324,7 +387,28 @@ impl<S: Scalar> SpmvService<S> {
     where
         F: FnMut() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
     {
-        Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, true)
+        Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, true, Telemetry::new())
+    }
+
+    /// [`Self::spawn_bounded`] / [`Self::spawn_adaptive`] recording
+    /// into a caller-supplied [`Telemetry`] handle instead of a fresh
+    /// one — the entry point `SpmvContext::serve*` uses so the whole
+    /// pipeline (build spans, service traces, engine-internal kernel
+    /// spans) lands in one snapshot. The service's
+    /// [`ServiceMetrics`] block is attached to the handle at spawn
+    /// (folded into snapshots as `service.*{svc="<idx>"}`).
+    pub fn spawn_with_telemetry<F>(
+        make_engine: F,
+        nrows: usize,
+        max_batch: usize,
+        queue_bound: usize,
+        adaptive: bool,
+        telemetry: Telemetry,
+    ) -> crate::Result<Self>
+    where
+        F: FnMut() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
+    {
+        Self::spawn_inner(make_engine, nrows, max_batch, queue_bound, adaptive, telemetry)
     }
 
     fn spawn_inner<F>(
@@ -333,6 +417,7 @@ impl<S: Scalar> SpmvService<S> {
         max_batch: usize,
         queue_bound: usize,
         adaptive: bool,
+        tel: Telemetry,
     ) -> crate::Result<Self>
     where
         F: FnMut() -> crate::Result<(BatchKernel<S>, usize)> + Send + 'static,
@@ -340,6 +425,7 @@ impl<S: Scalar> SpmvService<S> {
         let queue_bound = queue_bound.max(1);
         let (tx, rx) = mpsc::sync_channel::<Msg<S>>(queue_bound);
         let metrics = Arc::new(ServiceMetrics::new());
+        tel.attach_service(metrics.clone());
         if adaptive {
             // Publish the starting limit before the caller can observe
             // the service (the thread only updates it per drain).
@@ -348,6 +434,7 @@ impl<S: Scalar> SpmvService<S> {
                 .store(max_batch.max(1) as u64, std::sync::atomic::Ordering::Relaxed);
         }
         let metrics_thread = metrics.clone();
+        let tel_thread = tel.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
         let handle = std::thread::Builder::new().name("spmv-service".into()).spawn(move || {
             use std::sync::atomic::Ordering;
@@ -376,15 +463,15 @@ impl<S: Scalar> SpmvService<S> {
                 // Block for the first request, then drain what's queued.
                 let mut shutdown = false;
                 match rx.recv() {
-                    Ok(Msg::Spmv { x, deadline, reply }) => {
-                        batch.push(Request { x, deadline, reply })
+                    Ok(Msg::Spmv { x, deadline, reply, trace, enq_nanos }) => {
+                        batch.push(Request { x, deadline, reply, trace, enq_nanos })
                     }
                     Ok(Msg::Shutdown) | Err(_) => break,
                 }
                 while batch.len() < limit {
                     match rx.try_recv() {
-                        Ok(Msg::Spmv { x, deadline, reply }) => {
-                            batch.push(Request { x, deadline, reply })
+                        Ok(Msg::Spmv { x, deadline, reply, trace, enq_nanos }) => {
+                            batch.push(Request { x, deadline, reply, trace, enq_nanos })
                         }
                         Ok(Msg::Shutdown) => {
                             shutdown = true;
@@ -414,6 +501,11 @@ impl<S: Scalar> SpmvService<S> {
                 batch.retain(|req| {
                     if req.deadline.is_some_and(|d| d <= now) {
                         metrics_thread.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                        tel_thread.event(
+                            "deadline",
+                            TraceId(req.trace),
+                            "expired before drain, dropped from batch",
+                        );
                         let _ = req.reply.send(Err(EhybError::DeadlineExceeded));
                         false
                     } else {
@@ -428,6 +520,7 @@ impl<S: Scalar> SpmvService<S> {
                     nrows,
                     &metrics_thread,
                     format_bytes,
+                    &tel_thread,
                 );
                 if !ok {
                     // The engine panicked: the poisoned batch was
@@ -442,6 +535,11 @@ impl<S: Scalar> SpmvService<S> {
                             engine = e;
                             format_bytes = fb;
                             metrics_thread.respawns.fetch_add(1, Ordering::Relaxed);
+                            tel_thread.event(
+                                "respawn",
+                                TraceId::NONE,
+                                "engine quarantined after fault, fresh engine spawned",
+                            );
                         }
                         Err(_) => break,
                     }
@@ -453,7 +551,7 @@ impl<S: Scalar> SpmvService<S> {
         })?;
         ready_rx.recv().map_err(|_| EhybError::ServiceStopped)??;
         Ok(Self {
-            client: SpmvClient { tx, nrows, queue_bound, metrics: metrics.clone() },
+            client: SpmvClient { tx, nrows, queue_bound, metrics: metrics.clone(), tel },
             metrics,
             handle: Some(handle),
         })
@@ -479,6 +577,14 @@ fn panic_detail(payload: Box<dyn std::any::Any + Send>) -> String {
 /// persistent contiguous buffers and reply. Returns `false` when the
 /// kernel panicked (the batch was answered with
 /// [`EhybError::EngineFault`] and the caller must respawn the engine).
+///
+/// Telemetry: the drain is one `serve.batch(w=N)` span; every fused
+/// request contributes a `queue.wait` child stretching from its submit
+/// timestamp to the drain, the fused call itself is a `kernel` child
+/// (engine-internal per-shard spans attach under it via the implicit
+/// current-parent), and each request's terminal event (`reply` or
+/// `fault`) is recorded as it is answered.
+#[allow(clippy::too_many_arguments)]
 fn serve_fused<S: Scalar>(
     engine: &mut BatchKernel<S>,
     batch: &mut Vec<Request<S>>,
@@ -487,12 +593,24 @@ fn serve_fused<S: Scalar>(
     nrows: usize,
     metrics: &ServiceMetrics,
     format_bytes: usize,
+    tel: &Telemetry,
 ) -> bool {
     use std::sync::atomic::Ordering;
     if batch.is_empty() {
         return true;
     }
     let bw = batch.len();
+    let batch_span = tel.span(format!("serve.batch(w={bw})"));
+    let drained_nanos = tel.now_nanos();
+    for req in batch.iter() {
+        tel.record_span(
+            "queue.wait",
+            batch_span.id(),
+            TraceId(req.trace),
+            req.enq_nanos,
+            drained_nanos,
+        );
+    }
     if xbuf.len() < bw * nrows {
         xbuf.resize(bw * nrows, S::ZERO);
         ybuf.resize(bw * nrows, S::ZERO);
@@ -515,7 +633,11 @@ fn serve_fused<S: Scalar>(
         // (b) `ybuf`, which every SpMV engine fully rewrites for the
         // columns of the *next* drain before any byte of it is read
         // (replies only copy columns the current call produced).
-        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine(xs, &mut ys))).err()
+        let kernel_span = tel.span("kernel");
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine(xs, &mut ys))).err();
+        drop(kernel_span);
+        caught
     };
     if let Some(payload) = caught {
         let detail = panic_detail(payload);
@@ -524,6 +646,7 @@ fn serve_fused<S: Scalar>(
         // each gets the typed fault (no latency/width accounting — the
         // batch never executed).
         for req in batch.drain(..) {
+            tel.event("fault", TraceId(req.trace), format!("engine panic: {detail}"));
             let _ = req.reply.send(Err(EhybError::EngineFault(detail.clone())));
         }
         return false;
@@ -537,6 +660,7 @@ fn serve_fused<S: Scalar>(
         .fetch_add((format_bytes + bw * 2 * nrows * S::BYTES) as u64, Ordering::Relaxed);
     for (i, req) in batch.drain(..).enumerate() {
         metrics.spmv_latency.record(secs);
+        tel.event("reply", TraceId(req.trace), format!("served in batch width={bw}"));
         // Reply reuses the request's own x allocation (buffer
         // recycling — zero per-request allocation in steady state).
         let mut out = req.x;
@@ -1087,6 +1211,108 @@ mod tests {
         }
         assert_eq!(svc.metrics.faults.load(Ordering::Relaxed), 2);
         assert_eq!(svc.metrics.respawns.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn every_request_trace_reaches_exactly_one_terminal_event() {
+        use crate::telemetry::{snapshot::TERMINAL_KINDS, Telemetry};
+        let (ctx, _) = context();
+        let engine = ctx.engine_arc();
+        let tel = Telemetry::with_fake_clock();
+        let svc: SpmvService<f64> = SpmvService::spawn_with_telemetry(
+            move || {
+                let engine = engine.clone();
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+                Ok((kernel, fb))
+            },
+            256,
+            8,
+            4,
+            false,
+            tel.clone(),
+        )
+        .unwrap();
+        let client = svc.client();
+        // Served requests terminate with `reply`...
+        for t in 0..3 {
+            client.spmv(vec![1.0 + t as f64; 256]).unwrap();
+        }
+        // ...an expired deadline terminates with `deadline`...
+        let rx = client
+            .submit_with_deadline(vec![5.0; 256], Some(Instant::now() - Duration::from_millis(1)))
+            .unwrap();
+        let _ = rx.recv().unwrap();
+        drop(svc); // join the service thread so every event is recorded
+        let snap = tel.snapshot();
+        let traces = snap.known_traces();
+        assert_eq!(traces.len(), 4);
+        for tr in traces {
+            assert_eq!(snap.terminal_event_count(tr), 1, "trace {tr}");
+        }
+        // Terminal kinds observed: 3 replies + 1 deadline.
+        let count = |k: &str| snap.events.iter().filter(|e| e.kind == k).count();
+        assert_eq!(count("reply"), 3);
+        assert_eq!(count("deadline"), 1);
+        assert!(TERMINAL_KINDS.contains(&"deadline"));
+        // The batch subtree is reconstructible from any served trace.
+        let story = snap.describe_trace(1);
+        assert!(story.contains("queue.wait"), "{story}");
+        assert!(story.contains("serve.batch"), "{story}");
+        assert!(story.contains("kernel"), "{story}");
+    }
+
+    #[test]
+    fn retried_attempts_are_linked_traces() {
+        use crate::telemetry::Telemetry;
+        let (ctx, _) = context();
+        let engine = ctx.engine_arc();
+        let tel = Telemetry::with_fake_clock();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls_k = calls.clone();
+        let svc: SpmvService<f64> = SpmvService::spawn_with_telemetry(
+            move || {
+                let engine = engine.clone();
+                let calls_k = calls_k.clone();
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                    if calls_k.fetch_add(1, Ordering::Relaxed) == 0 {
+                        panic!("injected first-call fault");
+                    }
+                    engine.spmv_batch(xs, ys)
+                });
+                Ok((kernel, fb))
+            },
+            256,
+            8,
+            4,
+            false,
+            tel.clone(),
+        )
+        .unwrap();
+        let client = svc.client();
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::ZERO,
+            max_delay: Duration::ZERO,
+            seed: 7,
+        };
+        client.spmv_with_retry(vec![1.0; 256], &policy).unwrap();
+        drop(svc);
+        let snap = tel.snapshot();
+        // Attempt 1 (trace 1) faulted; attempt 2 (trace 2) replied and
+        // carries the linking `retry` event naming its predecessor.
+        assert_eq!(snap.terminal_event_count(1), 1);
+        assert_eq!(snap.terminal_event_count(2), 1);
+        let retry = snap.events.iter().find(|e| e.kind == "retry").expect("retry event");
+        assert_eq!(retry.trace, 2);
+        assert!(retry.detail.contains("attempt=2"), "{}", retry.detail);
+        assert!(retry.detail.contains("prev=1"), "{}", retry.detail);
+        // The faulted attempt's story names its successor.
+        let story = snap.describe_trace(1);
+        assert!(story.contains("retried as trace 2"), "{story}");
+        // Respawn left its mark as an untraced event.
+        assert!(snap.events.iter().any(|e| e.kind == "respawn"));
     }
 
     #[test]

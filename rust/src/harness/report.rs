@@ -6,8 +6,8 @@
 use super::ablation::{AblationRow, ReorderRow, TrafficRow};
 use super::runner::ValidationRow;
 use super::tables::{Fig6Row, FigureSeries, SpeedupRow};
-use crate::coordinator::metrics::ServiceMetrics;
 use crate::runtime::json::{self, Json};
+use crate::telemetry::{ServiceMetrics, TelemetrySnapshot};
 use crate::shard::ShardedEngine;
 use crate::sparse::scalar::Scalar;
 use crate::spmv::SpmvEngine;
@@ -87,19 +87,20 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
     let _ = writeln!(s, "### {title}\n");
     let _ = writeln!(
         s,
-        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p99 (ms) | shed | faults | respawns | deadline misses | batch limit |"
+        "| requests | fused batches | mean width | max width | bytes moved | mean latency (ms) | p50 (ms) | p99 (ms) | shed | faults | respawns | deadline misses | batch limit |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|---|---|---|---|---|");
     let limit = m.adaptive_max_batch.load(Ordering::Relaxed);
     let _ = writeln!(
         s,
-        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {} | {} | {} | {} | {} |",
+        "| {} | {} | {:.2} | {} | {} | {:.3} | {:.3} | {:.3} | {} | {} | {} | {} | {} |",
         m.requests.load(Ordering::Relaxed),
         m.batches.load(Ordering::Relaxed),
         m.batch_width.mean(),
         m.batch_width.max(),
         m.bytes_moved.load(Ordering::Relaxed),
         1e3 * m.spmv_latency.mean_secs(),
+        1e3 * m.spmv_latency.quantile_secs(0.5),
         1e3 * m.spmv_latency.quantile_secs(0.99),
         m.shed.load(Ordering::Relaxed),
         m.faults.load(Ordering::Relaxed),
@@ -117,6 +118,72 @@ pub fn service_markdown(title: &str, m: &ServiceMetrics) -> String {
         }
     }
     let _ = writeln!(s);
+    s
+}
+
+/// A frozen [`TelemetrySnapshot`] as markdown: the metric tables
+/// (counters, gauges, histograms with p50/p99), the span tree, and the
+/// trace-tagged health events — the operator-facing rendering of
+/// `ctx.telemetry_snapshot()` (also what the `stats` CLI subcommand
+/// prints).
+pub fn telemetry_markdown(title: &str, snap: &TelemetrySnapshot) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    if !snap.counters.is_empty() {
+        let _ = writeln!(s, "| counter | value |");
+        let _ = writeln!(s, "|---|---|");
+        for (k, v) in &snap.counters {
+            let _ = writeln!(s, "| {k} | {v} |");
+        }
+        let _ = writeln!(s);
+    }
+    if !snap.gauges.is_empty() {
+        let _ = writeln!(s, "| gauge | value |");
+        let _ = writeln!(s, "|---|---|");
+        for (k, v) in &snap.gauges {
+            let _ = writeln!(s, "| {k} | {v:.6} |");
+        }
+        let _ = writeln!(s);
+    }
+    if !snap.histograms.is_empty() {
+        let _ =
+            writeln!(s, "| histogram | count | mean (ms) | p50 (ms) | p99 (ms) | max (ms) |");
+        let _ = writeln!(s, "|---|---|---|---|---|---|");
+        for (k, h) in &snap.histograms {
+            let _ = writeln!(
+                s,
+                "| {k} | {} | {:.3} | {:.3} | {:.3} | {:.3} |",
+                h.count,
+                1e3 * h.mean_secs,
+                1e3 * h.p50_secs,
+                1e3 * h.p99_secs,
+                1e3 * h.max_secs
+            );
+        }
+        let _ = writeln!(s);
+    }
+    let _ = writeln!(
+        s,
+        "{} spans ({} dropped), {} events ({} dropped), {} traces\n",
+        snap.spans.len(),
+        snap.spans_dropped,
+        snap.events.len(),
+        snap.events_dropped,
+        snap.known_traces().len()
+    );
+    if !snap.spans.is_empty() {
+        let _ = writeln!(s, "```\n{}```", snap.span_tree());
+    }
+    if !snap.health_events.is_empty() {
+        let _ = writeln!(s, "\nhealth events:");
+        for ev in &snap.health_events {
+            if ev.trace == 0 {
+                let _ = writeln!(s, "- {}", ev.detail);
+            } else {
+                let _ = writeln!(s, "- [trace {}] {}", ev.trace, ev.detail);
+            }
+        }
+    }
     s
 }
 
@@ -389,6 +456,10 @@ mod tests {
         assert!(md.contains("| 12 | 3 | 4.00 | 4 | 1024 |"), "{md}");
         assert!(md.contains("| 2 | 0 | 0 | 0 | fixed |\n"), "shed/fault/limit columns: {md}");
         assert!(md.contains("batch widths: 4+:3"), "{md}");
+        // Satellite (ISSUE 8): the latency profile has explicit p50 and
+        // p99 columns; with one 2ms sample both quantiles are exact.
+        assert!(md.contains("| p50 (ms) | p99 (ms) |"), "{md}");
+        assert!(md.contains("| 2.000 | 2.000 | 2.000 |"), "{md}");
         // An adaptive service publishes its live limit instead.
         m.adaptive_max_batch.store(4, Ordering::Relaxed);
         assert!(service_markdown("S", &m).contains("| 2 | 0 | 0 | 0 | 4 |\n"));
@@ -397,6 +468,35 @@ mod tests {
         m.respawns.fetch_add(1, Ordering::Relaxed);
         m.deadline_misses.fetch_add(5, Ordering::Relaxed);
         assert!(service_markdown("S", &m).contains("| 2 | 1 | 1 | 5 | 4 |\n"));
+    }
+
+    #[test]
+    fn telemetry_markdown_renders_metrics_spans_and_health() {
+        use crate::telemetry::Telemetry;
+        let tel = Telemetry::with_fake_clock();
+        tel.registry().incr("requests.total");
+        tel.registry().set_gauge("shard.scratch_misses", 3.0);
+        tel.histogram("queue.wait_secs").record(0.004);
+        let outer = tel.span("build");
+        drop(tel.span("reorder"));
+        drop(outer);
+        let mut snap = tel.snapshot();
+        snap.health_events.push(crate::telemetry::TraceHealthEvent {
+            trace: 7,
+            detail: "solver restart: cg breakdown".into(),
+        });
+        snap.health_events
+            .push(crate::telemetry::TraceHealthEvent { trace: 0, detail: "untraced".into() });
+        let md = telemetry_markdown("Telemetry", &snap);
+        assert!(md.contains("| requests.total | 1 |"), "{md}");
+        assert!(md.contains("| shard.scratch_misses | 3.000000 |"), "{md}");
+        assert!(md.contains("| queue.wait_secs | 1 | 4.000 | 4.000 | 4.000 | 4.000 |"), "{md}");
+        assert!(md.contains("2 spans (0 dropped)"), "{md}");
+        // The tree is fenced and indented: reorder nests under build.
+        assert!(md.contains("```\nbuild"), "{md}");
+        assert!(md.contains("\n  reorder"), "{md}");
+        assert!(md.contains("- [trace 7] solver restart: cg breakdown"), "{md}");
+        assert!(md.contains("- untraced\n"), "{md}");
     }
 
     #[test]

@@ -214,6 +214,26 @@
 //! engine panics, queue saturation, torn plan-cache entries, and NaN
 //! inputs, and asserts every fault maps to a typed error or a recorded
 //! recovery — never a hang or a wrong answer.
+//!
+//! ## Observability
+//!
+//! One [`Telemetry`] handle per context records the whole pipeline
+//! ([`telemetry`]): build-side spans (`reorder` → `ehyb.partition` →
+//! `ehyb.assemble` → per-candidate `tune` → `shard.build` →
+//! `engine.build`), serve-side spans (`serve.batch` → `queue.wait` →
+//! `kernel` → per-shard `shard.kernel`), a per-request [`TraceId`]
+//! minted at submit and carried through retries, sheds, deadlines,
+//! faults, and solver iterations to exactly one terminal event, and a
+//! metric registry folding in service counters, per-shard gauges, and
+//! log-spaced latency histograms. Snapshot it all at once with
+//! [`SpmvContext::telemetry_snapshot`]; export deterministically as
+//! JSON or Prometheus text ([`TelemetrySnapshot::to_json`] /
+//! [`TelemetrySnapshot::to_prometheus`]), or render
+//! `harness::report::telemetry_markdown`. `cargo run -- stats --seed 7`
+//! prints a seeded snapshot; `cargo run -- trace --seed 7` replays one
+//! request's full story from its trace ID. Tests pass
+//! [`Telemetry::with_fake_clock`] for bit-for-bit reproducible span
+//! trees.
 
 pub mod util;
 pub mod sparse;
@@ -231,12 +251,14 @@ pub mod harness;
 pub mod api;
 pub mod autotune;
 pub mod resilience;
+pub mod telemetry;
 
 pub use api::{BatchBuf, EhybError, EngineKind, SpmvContext, VecBatch, VecBatchMut};
 pub use autotune::{Fingerprint, PlanStore, ScoreOracle, TuneLevel, TunedPlan};
 pub use reorder::{ReorderQuality, ReorderSpec, Reordering};
 pub use resilience::{FaultInjector, FaultPlan, GuardLevel, HealthReport, RetryPolicy};
 pub use shard::{ShardSpec, ShardStrategy, ShardedEngine};
+pub use telemetry::{MetricRegistry, Telemetry, TelemetrySnapshot, TraceId};
 pub use traffic::{LevelTraffic, ShardTraffic, TrafficReport, XReuse};
 
 /// Crate-wide result type over the typed [`EhybError`].

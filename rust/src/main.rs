@@ -9,6 +9,8 @@
 //!   bench       regenerate paper tables/figures (see DESIGN.md §6)
 //!   ablation    DESIGN.md §7 ablations + the tuning ablation
 //!   chaos       seeded fault-injection drills over the resilience layer
+//!   stats       seeded fake-clock workload -> full telemetry snapshot
+//!   trace       replay one request's story from its trace ID
 //!
 //! Matrix selection: `--gen poisson3d:24` style specs or `--mtx file.mtx`.
 
@@ -42,6 +44,8 @@ fn main() {
         "bench" => cmd_bench(&opts),
         "ablation" => cmd_ablation(&opts),
         "chaos" => cmd_chaos(&opts),
+        "stats" => cmd_stats(&opts),
+        "trace" => cmd_trace(&opts),
         "--help" | "-h" | "help" => {
             usage();
             Ok(())
@@ -62,6 +66,7 @@ fn usage() {
     eprintln!(
         "usage: ehyb <cmd> [--gen SPEC | --mtx FILE] [options]\n\
          cmds: info | preprocess | spmv | solve | tune | bench | ablation | chaos\n\
+         \x20     | stats | trace\n\
          gen specs: poisson2d:NX[:NY] poisson3d:N[:NY:NZ] stencil27:N\n\
                     elasticity:N unstructured:N circuit:N kkt:N banded:N\n\
          options: --vec-size V  --shards K|auto  --reorder none|degree|rcm|partrank[:K]|auto\n\
@@ -72,7 +77,8 @@ fn usage() {
                   --out DIR  --which cache|partitioner|sort|vecsize|tuning|reorder|traffic\n\
                   --level heuristic|measured  --oracle traffic|roofline  --budget-ms N\n\
                   --engine auto|ehyb|...\n\
-                  --cache DIR (tune; default $EHYB_TUNE_DIR)  --seed N (chaos)"
+                  --cache DIR (tune; default $EHYB_TUNE_DIR)  --seed N (chaos/stats/trace)\n\
+                  --format md|json|prom (stats)  --trace N (trace; default: retried request)"
     );
 }
 
@@ -941,5 +947,136 @@ fn cmd_chaos(opts: &HashMap<String, String>) -> anyhow::Result<()> {
     println!("{}", report::service_markdown("Chaos service (drills 1-2)", &svc.metrics));
     println!("{}", report::health_markdown("Degraded context health (drill 7)", &fctx.health()));
     println!("chaos: all drills passed (seed {seed})");
+    Ok(())
+}
+
+/// The seeded, fake-clock workload behind `stats` and `trace`: one
+/// sharded EHYB build, a few served round-trips (plus one expired
+/// deadline and one injected-fault request recovered by retry), and a
+/// CG solve — every layer records into one [`ehyb::Telemetry`] handle.
+/// The fake clock ticks once per observation and every round-trip is
+/// serial, so two runs with the same seed produce identical snapshots.
+fn telemetry_workload(seed: u64) -> anyhow::Result<ehyb::TelemetrySnapshot> {
+    use ehyb::coordinator::service::{BatchKernel, SpmvService};
+    use ehyb::resilience::{FaultInjector, FaultPlan, RetryPolicy};
+    use ehyb::telemetry::Telemetry;
+    use std::time::{Duration, Instant};
+
+    let m = gen::poisson2d::<f64>(16, 16);
+    let n = m.nrows();
+    let ctx = SpmvContext::builder(m)
+        .engine(EngineKind::Ehyb)
+        .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+        .shards(ShardSpec::Count(2))
+        .telemetry(Telemetry::with_fake_clock())
+        .build()?;
+
+    // A handful of serial round-trips (each one drains as a width-1
+    // fused batch), plus one already-expired deadline triaged at drain.
+    {
+        let svc = ctx.serve(8)?;
+        let client = svc.client();
+        for r in 0..3u64 {
+            let x: Vec<f64> = (0..n)
+                .map(|i| ((i as u64).wrapping_mul(seed.wrapping_add(r)) % 17) as f64 * 0.25 - 2.0)
+                .collect();
+            let y = client.spmv(x)?;
+            anyhow::ensure!(y.len() == n, "served reply has wrong length");
+        }
+        let expired = Instant::now() - Duration::from_millis(5);
+        match client.spmv_deadline(vec![1.0; n], expired) {
+            Err(ehyb::EhybError::DeadlineExceeded) => {}
+            other => anyhow::bail!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+
+    // An injected engine panic on the first kernel call: attempt 1 ends
+    // in a fault terminal event, the engine respawns, and the retry's
+    // fresh trace links back via its `retry` event.
+    {
+        let inj = FaultInjector::new(FaultPlan {
+            panic_on_call: Some(1),
+            nan_on_call: None,
+            ..FaultPlan::from_seed(seed)
+        });
+        let engine = ctx.engine_arc();
+        let svc: SpmvService<f64> = SpmvService::spawn_with_telemetry(
+            move || {
+                let engine = engine.clone();
+                let fb = engine.format_bytes();
+                let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+                Ok((inj.wrap_kernel(kernel), fb))
+            },
+            n,
+            8,
+            64,
+            false,
+            ctx.telemetry().clone(),
+        )?;
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_micros(50),
+            max_delay: Duration::from_micros(400),
+            seed,
+        };
+        let x: Vec<f64> = (0..n).map(|i| ((i % 13) as f64) * 0.25 - 1.5).collect();
+        let y = svc.client().spmv_with_retry(x, &policy)?;
+        anyhow::ensure!(y.len() == n, "retried reply has wrong length");
+    }
+
+    // One solve: a traced `solve.cg` span with per-iteration residual
+    // events.
+    let b: Vec<f64> = (0..n).map(|i| ((i as u64 % (seed % 5 + 3)) as f64) * 0.5 + 0.25).collect();
+    let (_, rep) = ctx.solver().cg(&b, None, &Jacobi::new(ctx.matrix()), &SolverConfig::default())?;
+    anyhow::ensure!(rep.converged(), "seeded solve should converge: {rep:?}");
+
+    Ok(ctx.telemetry_snapshot())
+}
+
+/// `stats --seed N [--format md|json|prom]`: run the seeded workload
+/// and print the full telemetry snapshot — markdown tables + span tree
+/// by default, or either deterministic export format.
+fn cmd_stats(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let seed = opts.get("seed").and_then(|v| v.parse().ok()).unwrap_or(7u64);
+    let snap = telemetry_workload(seed)?;
+    match opts.get("format").map(String::as_str).unwrap_or("md") {
+        "md" => println!(
+            "{}",
+            report::telemetry_markdown(&format!("Telemetry (seed {seed})"), &snap)
+        ),
+        "json" => println!("{}", snap.to_json().dump()),
+        "prom" => print!("{}", snap.to_prometheus()),
+        other => anyhow::bail!("unknown --format {other} (md|json|prom)"),
+    }
+    Ok(())
+}
+
+/// `trace --seed N [--trace ID]`: run the seeded workload and replay
+/// one request's whole story — submit, queue wait, the fused batch it
+/// rode in (width + per-shard kernel spans), retry links, and its
+/// terminal event — from a single snapshot. Defaults to the retried
+/// request (the most eventful trace in the workload).
+fn cmd_trace(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    let seed = opts.get("seed").and_then(|v| v.parse().ok()).unwrap_or(7u64);
+    let snap = telemetry_workload(seed)?;
+    let known = snap.known_traces();
+    anyhow::ensure!(!known.is_empty(), "workload recorded no traces");
+    let trace = match opts.get("trace") {
+        Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad --trace value {v}"))?,
+        // The retry's fresh trace tells the richest story: its `retry`
+        // event links back to the faulted first attempt.
+        None => snap
+            .events
+            .iter()
+            .find(|e| e.kind == "retry")
+            .map(|e| e.trace)
+            .unwrap_or(known[0]),
+    };
+    anyhow::ensure!(
+        known.contains(&trace),
+        "trace {trace} not in this snapshot (known: {known:?})"
+    );
+    println!("known traces: {known:?}\n");
+    print!("{}", snap.describe_trace(trace));
     Ok(())
 }

@@ -4,6 +4,7 @@
 //! non-finite values) is counted here and surfaced by `ctx.health()` —
 //! a context never degrades silently.
 
+use crate::telemetry::TraceId;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -15,19 +16,21 @@ pub struct Health {
     solver_restarts: AtomicU64,
     nonfinite_outputs: AtomicU64,
     rejected_inputs: AtomicU64,
-    /// Human-readable event log (one line per degradation), capped so a
-    /// long-running degraded service cannot grow without bound.
-    events: Mutex<Vec<String>>,
+    /// Human-readable event log (one line per degradation, tagged with
+    /// the request trace that triggered it — 0 when none was in
+    /// scope), capped so a long-running degraded service cannot grow
+    /// without bound.
+    events: Mutex<Vec<(String, u64)>>,
 }
 
 /// Cap on recorded event lines; counters keep counting past it.
 const MAX_EVENTS: usize = 64;
 
 impl Health {
-    fn push_event(&self, line: String) {
+    fn push_event(&self, line: String, trace: TraceId) {
         if let Ok(mut ev) = self.events.lock() {
             if ev.len() < MAX_EVENTS {
-                ev.push(line);
+                ev.push((line, trace.0));
             }
         }
     }
@@ -35,27 +38,54 @@ impl Health {
     /// The requested engine could not be built; a baseline serves
     /// instead.
     pub fn record_engine_fallback(&self, detail: impl Into<String>) {
+        self.record_engine_fallback_traced(detail, TraceId::NONE);
+    }
+
+    /// [`Self::record_engine_fallback`] tagged with the in-scope trace.
+    pub fn record_engine_fallback_traced(&self, detail: impl Into<String>, trace: TraceId) {
         self.engine_fallbacks.fetch_add(1, Ordering::Relaxed);
-        self.push_event(format!("engine fallback: {}", detail.into()));
+        self.push_event(format!("engine fallback: {}", detail.into()), trace);
     }
 
     /// A broken-down/diverged solve was restarted with a diagonal-
     /// preconditioned BiCGSTAB.
     pub fn record_solver_restart(&self, detail: impl Into<String>) {
+        self.record_solver_restart_traced(detail, TraceId::NONE);
+    }
+
+    /// [`Self::record_solver_restart`] tagged with the solve's trace.
+    pub fn record_solver_restart_traced(&self, detail: impl Into<String>, trace: TraceId) {
         self.solver_restarts.fetch_add(1, Ordering::Relaxed);
-        self.push_event(format!("solver restart: {}", detail.into()));
+        self.push_event(format!("solver restart: {}", detail.into()), trace);
     }
 
     /// An output guard observed a non-finite engine result.
     pub fn record_nonfinite_output(&self, detail: impl Into<String>) {
+        self.record_nonfinite_output_traced(detail, TraceId::NONE);
+    }
+
+    /// [`Self::record_nonfinite_output`] tagged with the request trace.
+    pub fn record_nonfinite_output_traced(&self, detail: impl Into<String>, trace: TraceId) {
         self.nonfinite_outputs.fetch_add(1, Ordering::Relaxed);
-        self.push_event(format!("non-finite output: {}", detail.into()));
+        self.push_event(format!("non-finite output: {}", detail.into()), trace);
     }
 
     /// An input guard rejected a non-finite request.
     pub fn record_rejected_input(&self, detail: impl Into<String>) {
+        self.record_rejected_input_traced(detail, TraceId::NONE);
+    }
+
+    /// [`Self::record_rejected_input`] tagged with the request trace.
+    pub fn record_rejected_input_traced(&self, detail: impl Into<String>, trace: TraceId) {
         self.rejected_inputs.fetch_add(1, Ordering::Relaxed);
-        self.push_event(format!("rejected input: {}", detail.into()));
+        self.push_event(format!("rejected input: {}", detail.into()), trace);
+    }
+
+    /// The event log with trace tags, oldest first — what
+    /// `SpmvContext::telemetry_snapshot` folds into the telemetry
+    /// snapshot's `health` section.
+    pub fn events_traced(&self) -> Vec<(String, u64)> {
+        self.events.lock().map(|ev| ev.clone()).unwrap_or_default()
     }
 
     /// Consistent snapshot of the counters and event log.
@@ -65,7 +95,11 @@ impl Health {
             solver_restarts: self.solver_restarts.load(Ordering::Relaxed),
             nonfinite_outputs: self.nonfinite_outputs.load(Ordering::Relaxed),
             rejected_inputs: self.rejected_inputs.load(Ordering::Relaxed),
-            events: self.events.lock().map(|ev| ev.clone()).unwrap_or_default(),
+            events: self
+                .events
+                .lock()
+                .map(|ev| ev.iter().map(|(line, _)| line.clone()).collect())
+                .unwrap_or_default(),
         }
     }
 }
@@ -139,5 +173,22 @@ mod tests {
         let rep = h.report();
         assert_eq!(rep.events.len(), MAX_EVENTS);
         assert_eq!(rep.nonfinite_outputs, (MAX_EVENTS + 10) as u64);
+    }
+
+    #[test]
+    fn traced_records_tag_events_and_untraced_records_tag_zero() {
+        let h = Health::default();
+        h.record_solver_restart_traced("cg breakdown at iter 3", TraceId(42));
+        h.record_engine_fallback("no trace in scope");
+        let traced = h.events_traced();
+        assert_eq!(traced.len(), 2);
+        assert_eq!(traced[0].1, 42);
+        assert!(traced[0].0.contains("solver restart"));
+        assert_eq!(traced[1].1, 0);
+        // The plain report is unchanged by the tagging: same lines,
+        // same order, no trace noise in the strings.
+        let rep = h.report();
+        assert_eq!(rep.events, vec![traced[0].0.clone(), traced[1].0.clone()]);
+        assert!(!rep.events[0].contains("42"));
     }
 }

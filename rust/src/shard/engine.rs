@@ -25,11 +25,12 @@ use crate::preprocess::{EhybPlan, PreprocessConfig, PreprocessTimings};
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
 use crate::spmv::SpmvEngine;
+use crate::telemetry::{Telemetry, TraceId};
 use crate::util::par;
 use crate::util::pool::VecPool;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Per-shard execution counters — the observability surface behind
 /// [`crate::harness::report::shard_markdown`]'s per-shard columns.
@@ -77,6 +78,13 @@ pub struct ShardedEngine<S: Scalar> {
     /// nothing (ISSUE 5 satellite; the EhybCpu pop/push discipline
     /// applied to the fan-out).
     scratch: Vec<VecPool<S>>,
+    /// Set once by the context ([`Self::set_telemetry`]); when present,
+    /// every fused batch call records one `shard.kernel(i=K)` span per
+    /// shard, parented under whatever span is open on the handle at
+    /// call time (the service's `kernel` span) — so per-shard kernel
+    /// timing lands inside the request's batch subtree without the
+    /// service knowing about shards.
+    tel: OnceLock<Telemetry>,
 }
 
 impl<S: Scalar> ShardedEngine<S> {
@@ -133,7 +141,14 @@ impl<S: Scalar> ShardedEngine<S> {
             // Two retained buffers per shard tolerate a pair of
             // concurrent batch callers before reuse starts missing.
             scratch: (0..plan.num_shards()).map(|_| VecPool::new(2)).collect(),
+            tel: OnceLock::new(),
         })
+    }
+
+    /// Attach the context's [`Telemetry`] handle (first call wins) so
+    /// fused batch executions record per-shard kernel spans.
+    pub fn set_telemetry(&self, tel: Telemetry) {
+        let _ = self.tel.set(tel);
     }
 
     pub fn num_shards(&self) -> usize {
@@ -207,11 +222,20 @@ impl<S: Scalar> SpmvEngine<S> for ShardedEngine<S> {
             .map(|(s, pool)| pool.take(s.range.len() * width, S::ZERO))
             .collect();
         {
+            // Capture the enclosing span (the service's `kernel`) once,
+            // before the fan-out: the per-shard spans all attach there
+            // regardless of which worker thread runs them.
+            let parent = self.tel.get().map(|t| (t, t.current_parent()));
             let items: Vec<(usize, &mut Vec<S>)> = scratch.iter_mut().enumerate().collect();
             par::par_for_each(items, |_, (i, buf)| {
                 let rows = self.shards[i].range.len();
+                let start = parent.map(|(t, _)| t.now_nanos());
                 let mut yv = VecBatchMut::new(buf, rows).expect("contiguous shard scratch");
                 self.shards[i].engine.spmv_batch(xs, &mut yv);
+                if let (Some((t, p)), Some(s)) = (parent, start) {
+                    let end = t.now_nanos();
+                    t.record_span(format!("shard.kernel(i={i})"), p, TraceId::NONE, s, end);
+                }
                 self.stats[i].batch_calls.fetch_add(1, Ordering::Relaxed);
                 self.stats[i].lanes.fetch_add(width as u64, Ordering::Relaxed);
             });
@@ -552,6 +576,37 @@ mod tests {
         assert!(e.stats().iter().all(|s| s.block_prep.map_or(true, |t| t.reorder_secs > 0.0)));
         let base = sharded(&m, EngineKind::Hyb, 4);
         assert!(base.stats().iter().all(|s| s.block_prep.is_none()));
+    }
+
+    #[test]
+    fn batch_records_per_shard_kernel_spans_under_open_parent() {
+        let m = poisson2d::<f64>(16, 16);
+        let e = sharded(&m, EngineKind::Ehyb, 3);
+        let tel = Telemetry::with_fake_clock();
+        e.set_telemetry(tel.clone());
+        let width = 2;
+        let xs = crate::api::BatchBuf::<f64>::zeros(m.ncols(), width);
+        let mut ys = crate::api::BatchBuf::<f64>::zeros(m.nrows(), width);
+        {
+            let _kernel = tel.span("kernel");
+            let mut yv = ys.view_mut();
+            e.spmv_batch(xs.view(), &mut yv);
+        }
+        let snap = tel.snapshot();
+        let kernel = snap.spans.iter().find(|s| s.name == "kernel").unwrap();
+        let shard_spans: Vec<_> =
+            snap.spans.iter().filter(|s| s.name.starts_with("shard.kernel")).collect();
+        assert_eq!(shard_spans.len(), 3);
+        for s in &shard_spans {
+            assert_eq!(s.parent, kernel.id, "{} must nest under the kernel span", s.name);
+            assert!(s.end_nanos > s.start_nanos);
+        }
+        // A second telemetry attach is ignored (first wins), and an
+        // un-attached engine records nothing.
+        e.set_telemetry(Telemetry::with_fake_clock());
+        let e2 = sharded(&m, EngineKind::Ehyb, 2);
+        let mut yv = ys.view_mut();
+        e2.spmv_batch(xs.view(), &mut yv);
     }
 
     #[test]

@@ -1,0 +1,554 @@
+//! The shared metric types and the lock-cheap registry.
+//!
+//! [`LatencyHistogram`] / [`WidthHistogram`] / [`ServiceMetrics`] moved
+//! here from `coordinator::metrics` in 0.8 (deprecated re-exports
+//! remain) so the service, the sharded engine, the tuner, and the
+//! harness all publish into one namespace. Registration takes a short
+//! mutex once and hands back an `Arc`; the hot path afterwards is pure
+//! relaxed atomics.
+
+use super::lock;
+use super::snapshot::HistogramSnapshot;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic named counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-writer-wins named gauge (an `f64` stored as bits — timings,
+/// limits, ratios).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Compose a metric name with sorted `key="value"` labels —
+/// `name{k1="a",k2="b"}`. The exporters split on `{` and pass the
+/// label block through verbatim, so sorting here is what makes the
+/// Prometheus exposition's label order stable.
+pub fn labeled(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut ls: Vec<(&str, &str)> = labels.to_vec();
+    ls.sort_by(|a, b| a.0.cmp(b.0));
+    let body =
+        ls.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect::<Vec<_>>().join(",");
+    format!("{name}{{{body}}}")
+}
+
+/// Named counters, gauges, and latency histograms. `BTreeMap` keying
+/// gives every snapshot (and thus both exporters) a deterministic
+/// iteration order for free.
+#[derive(Default)]
+pub struct MetricRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<LatencyHistogram>>>,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-register: the first caller creates the metric, later
+    /// callers share it.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        lock(&self.counters).entry(name.to_string()).or_insert_with(Arc::default).clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        lock(&self.gauges).entry(name.to_string()).or_insert_with(Arc::default).clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<LatencyHistogram> {
+        lock(&self.histograms)
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(LatencyHistogram::new()))
+            .clone()
+    }
+
+    /// One-shot increment for call sites that don't keep the handle.
+    pub fn incr(&self, name: &str) {
+        self.counter(name).incr();
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        self.counter(name).add(n);
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauge(name).set(v);
+    }
+
+    /// Value maps for a snapshot (deterministically ordered).
+    #[allow(clippy::type_complexity)]
+    pub fn snapshot_maps(
+        &self,
+    ) -> (BTreeMap<String, u64>, BTreeMap<String, f64>, BTreeMap<String, HistogramSnapshot>) {
+        let counters =
+            lock(&self.counters).iter().map(|(k, v)| (k.clone(), v.get())).collect();
+        let gauges = lock(&self.gauges).iter().map(|(k, v)| (k.clone(), v.get())).collect();
+        let histograms =
+            lock(&self.histograms).iter().map(|(k, v)| (k.clone(), v.snapshot())).collect();
+        (counters, gauges, histograms)
+    }
+}
+
+/// Log-spaced latency histogram from 1 µs to ~1 s (30 buckets, ×2
+/// each), with per-bucket observed min/max so quantiles interpolate
+/// within the recorded range instead of reporting the upper bucket
+/// edge (which overstated p50/p99 by up to 2× at log-spaced widths).
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    /// Smallest recorded nanos per bucket (`u64::MAX` = empty).
+    bucket_min: Vec<AtomicU64>,
+    /// Largest recorded nanos per bucket (0 = empty).
+    bucket_max: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..30).map(|_| AtomicU64::new(0)).collect(),
+            bucket_min: (0..30).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            bucket_max: (0..30).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, secs: f64) {
+        let nanos = (secs * 1e9) as u64;
+        let us = nanos / 1000;
+        let idx = if us == 0 { 0 } else { (63 - us.leading_zeros() as usize).min(29) };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.bucket_min[idx].fetch_min(nanos, Ordering::Relaxed);
+        self.bucket_max[idx].fetch_max(nanos, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / c as f64 / 1e9
+    }
+
+    /// Total recorded seconds (the Prometheus `_sum`).
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Smallest recorded value in seconds (0 when empty).
+    pub fn min_secs(&self) -> f64 {
+        for m in &self.bucket_min {
+            let v = m.load(Ordering::Relaxed);
+            if v != u64::MAX {
+                return v as f64 * 1e-9;
+            }
+        }
+        0.0
+    }
+
+    /// Largest recorded value in seconds (0 when empty).
+    pub fn max_secs(&self) -> f64 {
+        for m in self.bucket_max.iter().rev() {
+            let v = m.load(Ordering::Relaxed);
+            if v != 0 {
+                return v as f64 * 1e-9;
+            }
+        }
+        0.0
+    }
+
+    /// Histogram quantile, interpolated by rank between the target
+    /// bucket's observed min and max — the reported value is always
+    /// clamped to the recorded range (a histogram of identical samples
+    /// reports exactly that sample at every q). Monotone in `q`:
+    /// bucket ranges are disjoint and ordered, and the within-bucket
+    /// interpolation is monotone in rank.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if acc + c >= target {
+                let lo = self.bucket_min[i].load(Ordering::Relaxed);
+                let hi = self.bucket_max[i].load(Ordering::Relaxed).max(lo);
+                let pos = if c <= 1 {
+                    0.0
+                } else {
+                    (target - acc - 1) as f64 / (c - 1) as f64
+                };
+                return (lo as f64 + pos * (hi - lo) as f64) * 1e-9;
+            }
+            acc += c;
+        }
+        // Counters are updated relaxed; a racing record can leave the
+        // per-bucket sum momentarily behind `count`. Report the
+        // observed max rather than inventing a value.
+        self.max_secs()
+    }
+
+    /// Point-in-time summary for the exporters.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            sum_secs: self.sum_secs(),
+            mean_secs: self.mean_secs(),
+            p50_secs: self.quantile_secs(0.5),
+            p99_secs: self.quantile_secs(0.99),
+            min_secs: self.min_secs(),
+            max_secs: self.max_secs(),
+        }
+    }
+}
+
+/// Power-of-two histogram of fused-batch widths: bucket `i` counts
+/// widths in `[2^i, 2^(i+1))`, the last bucket absorbs the overflow.
+/// Makes the request-fusion win (mean width > 1) observable.
+pub struct WidthHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for WidthHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WidthHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..16).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, width: usize) {
+        let w = width.max(1) as u64;
+        let idx = (63 - w.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(w, Ordering::Relaxed);
+        self.max.fetch_max(w, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean recorded width (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Count in bucket `i` (widths in `[2^i, 2^(i+1))`).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+}
+
+/// Service-level counters.
+pub struct ServiceMetrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Kernel latency each request observed (the fused call's wall time).
+    pub spmv_latency: LatencyHistogram,
+    /// Width of every fused kernel call. Invariant: only batches that
+    /// actually **executed** are recorded here — a shed request's width
+    /// never enters this histogram (sheds are counted in
+    /// [`Self::shed`] at submit time, before any width accounting), so
+    /// `batch_width.count() == batches` always holds. Pinned by
+    /// `service::tests::shed_requests_never_recorded_in_width_histogram`.
+    pub batch_width: WidthHistogram,
+    /// Estimated bytes streamed by the engine: the matrix format once
+    /// per fused call plus `2 · nrows · sizeof(S)` per request (x in,
+    /// y out) — the quantity request fusion amortizes.
+    pub bytes_moved: AtomicU64,
+    /// Requests shed because the bounded queue was full
+    /// (`EhybError::Overloaded`) — recorded client-side at submit.
+    pub shed: AtomicU64,
+    /// Current fused-batch limit of an **adaptive** service
+    /// (`spawn_adaptive` / `serve_adaptive`): shrinks when submissions
+    /// shed, grows back while the queue drains idle. 0 = fixed-limit
+    /// service (the default `spawn`/`serve` paths never touch it).
+    pub adaptive_max_batch: AtomicU64,
+    /// Fused batches quarantined because the engine panicked mid-call
+    /// (every request in the batch got `EhybError::EngineFault`). One
+    /// increment per poisoned *batch*, not per request.
+    pub faults: AtomicU64,
+    /// Engines respawned via the service's factory after a fault.
+    /// Steady state: `respawns == faults`; a lag means the factory
+    /// failed and the service exited.
+    pub respawns: AtomicU64,
+    /// Requests dropped at drain time because their deadline had
+    /// already expired (`EhybError::DeadlineExceeded`) — they never
+    /// occupied kernel width.
+    pub deadline_misses: AtomicU64,
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            spmv_latency: LatencyHistogram::new(),
+            batch_width: WidthHistogram::new(),
+            bytes_moved: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            adaptive_max_batch: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_means() {
+        let h = LatencyHistogram::new();
+        h.record(0.001);
+        h.record(0.003);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_secs() - 0.002).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantiles_ordered() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert!(h.quantile_secs(0.5) <= h.quantile_secs(0.99));
+        assert!(h.quantile_secs(0.99) > 1e-4);
+    }
+
+    #[test]
+    fn quantile_clamps_to_observed_range() {
+        // The pre-0.8 histogram reported the upper bucket edge: 100
+        // identical 3 µs samples gave p50 = p99 = 4 µs. Interpolating
+        // between the bucket's observed min/max must report exactly
+        // the recorded value instead.
+        let h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record(3e-6);
+        }
+        assert!((h.quantile_secs(0.5) - 3e-6).abs() < 1e-12);
+        assert!((h.quantile_secs(0.99) - 3e-6).abs() < 1e-12);
+        assert!((h.max_secs() - 3e-6).abs() < 1e-12);
+        assert!((h.min_secs() - 3e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // 2 µs and 3.9 µs share one log bucket ([2, 4) µs): p0 must
+        // report the low end, p100 the high end, and everything stays
+        // inside the observed range.
+        let h = LatencyHistogram::new();
+        h.record(2e-6);
+        h.record(3.9e-6);
+        let lo = h.quantile_secs(0.0);
+        let hi = h.quantile_secs(1.0);
+        assert!((lo - 2e-6).abs() < 1e-12, "{lo}");
+        assert!((hi - 3.9e-6).abs() < 1e-12, "{hi}");
+        let mid = h.quantile_secs(0.6);
+        assert!(mid >= lo && mid <= hi);
+    }
+
+    #[test]
+    fn quantile_never_exceeds_observed_max() {
+        let h = LatencyHistogram::new();
+        for v in [1e-6, 5e-6, 17e-6, 130e-6] {
+            h.record(v);
+        }
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let v = h.quantile_secs(q);
+            assert!(v >= 1e-6 - 1e-12 && v <= 130e-6 + 1e-12, "q={q} v={v}");
+        }
+    }
+
+    #[test]
+    fn batch_size_accounting() {
+        let m = ServiceMetrics::new();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.batches.fetch_add(4, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean_secs(), 0.0);
+        assert_eq!(h.quantile_secs(0.9), 0.0);
+        assert_eq!(h.min_secs(), 0.0);
+        assert_eq!(h.max_secs(), 0.0);
+    }
+
+    #[test]
+    fn adaptive_gauge_defaults_to_fixed() {
+        // 0 marks a fixed-limit service; adaptive services overwrite it
+        // with their live limit.
+        let m = ServiceMetrics::new();
+        assert_eq!(m.adaptive_max_batch.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fault_counters_start_at_zero() {
+        let m = ServiceMetrics::new();
+        assert_eq!(m.faults.load(Ordering::Relaxed), 0);
+        assert_eq!(m.respawns.load(Ordering::Relaxed), 0);
+        assert_eq!(m.deadline_misses.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn width_histogram_buckets_and_stats() {
+        let h = WidthHistogram::new();
+        for w in [1usize, 1, 2, 3, 8, 16] {
+            h.record(w);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.max(), 16);
+        assert!((h.mean() - 31.0 / 6.0).abs() < 1e-12);
+        assert_eq!(h.bucket(0), 2); // widths 1
+        assert_eq!(h.bucket(1), 2); // widths 2..3
+        assert_eq!(h.bucket(3), 1); // width 8
+        assert_eq!(h.bucket(4), 1); // width 16
+    }
+
+    #[test]
+    fn width_histogram_empty_and_overflow() {
+        let h = WidthHistogram::new();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0);
+        h.record(1 << 20); // overflow clamps into the last bucket
+        assert_eq!(h.bucket(h.num_buckets() - 1), 1);
+    }
+
+    #[test]
+    fn registry_shares_and_orders_metrics() {
+        let r = MetricRegistry::new();
+        r.counter("b.count").add(2);
+        r.counter("a.count").incr();
+        r.counter("b.count").incr(); // same metric as the first handle
+        r.set_gauge("g.v", 1.5);
+        r.histogram("h.lat").record(1e-4);
+        let (c, g, h) = r.snapshot_maps();
+        assert_eq!(c.keys().cloned().collect::<Vec<_>>(), vec!["a.count", "b.count"]);
+        assert_eq!(c["b.count"], 3);
+        assert_eq!(c["a.count"], 1);
+        assert!((g["g.v"] - 1.5).abs() < 1e-12);
+        assert_eq!(h["h.lat"].count, 1);
+    }
+
+    #[test]
+    fn labeled_names_sort_keys() {
+        assert_eq!(labeled("m", &[]), "m");
+        assert_eq!(
+            labeled("shard.kernel", &[("shard", "3"), ("engine", "ehyb")]),
+            "shard.kernel{engine=\"ehyb\",shard=\"3\"}"
+        );
+    }
+
+    #[test]
+    fn gauge_round_trips_f64() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0.0);
+        g.set(-2.75);
+        assert_eq!(g.get(), -2.75);
+    }
+}

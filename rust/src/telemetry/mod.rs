@@ -1,0 +1,399 @@
+//! Crate-wide instrumentation: one [`Telemetry`] handle per
+//! [`crate::api::SpmvContext`] carrying a lock-cheap [`MetricRegistry`]
+//! (named counters / gauges / the log-spaced histograms every subsystem
+//! shares), structured [`span::SpanRecord`] trees with monotonic
+//! timing over the whole pipeline (build: reorder → tune per-candidate
+//! → EHYB partition/assemble → shard build → engine build; serve:
+//! submit → queue wait → drain → fused kernel per shard → reply), and
+//! per-request **trace IDs** minted at submit and carried through
+//! deadline triage, retries, shed/fault/respawn events, and solver
+//! iterations — so one ID reconstructs a request's whole story.
+//!
+//! Everything lands in bounded ring buffers and is exported off one
+//! [`snapshot::TelemetrySnapshot`]: deterministic JSON (via
+//! [`crate::runtime::json::Json::dump`]) and Prometheus text
+//! exposition, both byte-identical across two snapshots of a frozen
+//! registry.
+//!
+//! Determinism in CI: [`Telemetry::with_fake_clock`] swaps the wall
+//! clock for a logical tick counter that advances by one nanosecond
+//! per observation, so a seeded single-threaded run produces the same
+//! span tree bit-for-bit every time (the same convention the
+//! `FaultPlan` chaos drills use for reproducibility).
+
+pub mod metrics;
+pub mod snapshot;
+pub mod span;
+
+pub use metrics::{
+    labeled, Counter, Gauge, LatencyHistogram, MetricRegistry, ServiceMetrics, WidthHistogram,
+};
+pub use snapshot::{HistogramSnapshot, TelemetrySnapshot, TraceHealthEvent};
+pub use span::{EventRecord, SpanGuard, SpanRecord};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Poison-tolerant lock: a panic on the serving path (already isolated
+/// by `catch_unwind`) must never make telemetry unrecordable.
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-request trace identifier. `0` is reserved for "no trace"
+/// ([`TraceId::NONE`]); real IDs are minted sequentially from 1 by
+/// [`Telemetry::mint_trace`], so within one context a trace ID is
+/// deterministic under a seeded workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TraceId(pub u64);
+
+impl TraceId {
+    /// "No trace in scope" — untraced spans and events carry this.
+    pub const NONE: TraceId = TraceId(0);
+
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl std::fmt::Display for TraceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// Monotonic nanosecond clock behind every span/event timestamp.
+///
+/// * **Wall** mode reads `Instant::elapsed` since the handle was
+///   created.
+/// * **Fake** mode (tests, goldens, the `trace` CLI) is a logical
+///   counter: every observation ticks it forward by exactly 1 ns, so
+///   timestamps are distinct, strictly increasing in call order, and
+///   bit-for-bit reproducible for a deterministic call sequence.
+pub struct Clock {
+    start: Instant,
+    fake: Option<AtomicU64>,
+}
+
+impl Clock {
+    pub fn wall() -> Self {
+        Clock { start: Instant::now(), fake: None }
+    }
+
+    pub fn fake() -> Self {
+        Clock { start: Instant::now(), fake: Some(AtomicU64::new(0)) }
+    }
+
+    pub fn is_fake(&self) -> bool {
+        self.fake.is_some()
+    }
+
+    /// Current time in nanoseconds. Fake mode ticks by 1 per call.
+    pub fn now_nanos(&self) -> u64 {
+        match &self.fake {
+            Some(t) => t.fetch_add(1, Ordering::Relaxed) + 1,
+            None => self.start.elapsed().as_nanos() as u64,
+        }
+    }
+
+    /// Advance a fake clock by `n` extra nanoseconds (no-op in wall
+    /// mode — wall time advances itself).
+    pub fn advance_nanos(&self, n: u64) {
+        if let Some(t) = &self.fake {
+            t.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+}
+
+struct Inner {
+    clock: Clock,
+    registry: MetricRegistry,
+    spans: span::SpanRing,
+    events: span::EventRing,
+    /// Next span id (spans are numbered from 1; 0 = "root / no parent").
+    next_span: AtomicU64,
+    /// Next trace id (from 1; 0 = [`TraceId::NONE`]).
+    next_trace: AtomicU64,
+    /// Innermost open [`SpanGuard`]'s id — the implicit parent for new
+    /// guards and for engine-internal spans (per-shard kernels) that
+    /// cannot see the guard that encloses their call. Last-writer-wins
+    /// across threads; the deterministic goldens run single-threaded.
+    current: AtomicU64,
+    /// Service metric blocks attached by [`Telemetry::attach_service`];
+    /// snapshots fold them into the registry namespace as
+    /// `service.*{svc="i"}`.
+    services: Mutex<Vec<Arc<ServiceMetrics>>>,
+}
+
+/// The per-context instrumentation handle. Cheap to clone (one `Arc`);
+/// every recording path is either a plain atomic (counters, gauges,
+/// histograms) or a short bounded-ring mutex push (spans, events).
+#[derive(Clone)]
+pub struct Telemetry {
+    inner: Arc<Inner>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Default bounded-ring capacities: spans and events are evidence, not
+/// an unbounded log — a long-running service keeps the most recent
+/// window and counts what it evicted.
+const SPAN_CAP: usize = 4096;
+const EVENT_CAP: usize = 8192;
+
+impl Telemetry {
+    /// Wall-clock telemetry with the default ring capacities.
+    pub fn new() -> Self {
+        Self::with_clock(Clock::wall())
+    }
+
+    /// Deterministic tick-clock telemetry (tests / goldens / seeded
+    /// CLI dumps).
+    pub fn with_fake_clock() -> Self {
+        Self::with_clock(Clock::fake())
+    }
+
+    pub fn with_clock(clock: Clock) -> Self {
+        Self::with_clock_and_capacity(clock, SPAN_CAP, EVENT_CAP)
+    }
+
+    pub fn with_clock_and_capacity(clock: Clock, span_cap: usize, event_cap: usize) -> Self {
+        Telemetry {
+            inner: Arc::new(Inner {
+                clock,
+                registry: MetricRegistry::new(),
+                spans: span::SpanRing::new(span_cap.max(1)),
+                events: span::EventRing::new(event_cap.max(1)),
+                next_span: AtomicU64::new(1),
+                next_trace: AtomicU64::new(1),
+                current: AtomicU64::new(0),
+                services: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    pub fn registry(&self) -> &MetricRegistry {
+        &self.inner.registry
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.inner.clock
+    }
+
+    /// Shorthand for [`Clock::now_nanos`].
+    pub fn now_nanos(&self) -> u64 {
+        self.inner.clock.now_nanos()
+    }
+
+    /// Get-or-register a named counter (see [`MetricRegistry::counter`]).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.inner.registry.counter(name)
+    }
+
+    /// Get-or-register a named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.inner.registry.gauge(name)
+    }
+
+    /// Get-or-register a named latency histogram.
+    pub fn histogram(&self, name: &str) -> Arc<LatencyHistogram> {
+        self.inner.registry.histogram(name)
+    }
+
+    /// Mint the next sequential trace ID (1, 2, 3, … per handle).
+    pub fn mint_trace(&self) -> TraceId {
+        TraceId(self.inner.next_trace.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Innermost open guard's span id (0 when none) — the parent an
+    /// engine-internal span should attach to.
+    pub fn current_parent(&self) -> u64 {
+        self.inner.current.load(Ordering::Relaxed)
+    }
+
+    /// Open an untraced span parented under the innermost open guard.
+    pub fn span(&self, name: impl Into<String>) -> SpanGuard {
+        self.span_traced(name, TraceId::NONE)
+    }
+
+    /// Open a span carrying `trace`, parented under the innermost open
+    /// guard on this handle.
+    pub fn span_traced(&self, name: impl Into<String>, trace: TraceId) -> SpanGuard {
+        let id = self.inner.next_span.fetch_add(1, Ordering::Relaxed);
+        let start = self.now_nanos();
+        let parent = self.inner.current.swap(id, Ordering::Relaxed);
+        SpanGuard::new(self.clone(), id, parent, trace, name.into(), start)
+    }
+
+    pub(crate) fn close_span(&self, rec: SpanRecord, restore_parent: u64) {
+        self.inner.current.store(restore_parent, Ordering::Relaxed);
+        self.inner.spans.push(rec);
+    }
+
+    /// Record an already-timed span with explicit parent/timestamps
+    /// (queue-wait spans start at submit time on another thread).
+    pub fn record_span(
+        &self,
+        name: impl Into<String>,
+        parent: u64,
+        trace: TraceId,
+        start_nanos: u64,
+        end_nanos: u64,
+    ) {
+        let id = self.inner.next_span.fetch_add(1, Ordering::Relaxed);
+        self.inner.spans.push(SpanRecord {
+            id,
+            parent,
+            trace: trace.0,
+            name: name.into(),
+            start_nanos,
+            end_nanos: end_nanos.max(start_nanos),
+        });
+    }
+
+    /// Record a span whose duration was measured by a wall timer in a
+    /// layer that is not telemetry-aware (e.g. the preprocessing
+    /// phase decomposition in [`crate::preprocess::PreprocessTimings`]):
+    /// in wall mode the span ends now and extends `wall_secs` back; in
+    /// fake mode it is a 1-tick span at the current logical time, so
+    /// goldens stay bit-for-bit reproducible.
+    pub fn derived_span(&self, name: impl Into<String>, trace: TraceId, wall_secs: f64) {
+        let parent = self.current_parent();
+        if self.inner.clock.is_fake() {
+            let start = self.now_nanos();
+            let end = self.now_nanos();
+            self.record_span(name, parent, trace, start, end);
+        } else {
+            let end = self.now_nanos();
+            let dur = (wall_secs.max(0.0) * 1e9) as u64;
+            self.record_span(name, parent, trace, end.saturating_sub(dur), end);
+        }
+    }
+
+    /// Record a point event (`kind` ∈ submit / reply / shed / deadline
+    /// / fault / respawn / retry / solver-iter / …) optionally tagged
+    /// with the trace it belongs to.
+    pub fn event(&self, kind: &str, trace: TraceId, detail: impl Into<String>) {
+        let nanos = self.now_nanos();
+        self.inner.events.push(EventRecord {
+            nanos,
+            trace: trace.0,
+            kind: kind.to_string(),
+            detail: detail.into(),
+        });
+    }
+
+    /// Fold a service's metric block into this handle's snapshots as
+    /// `service.*{svc="<index>"}`. Returns the instance index.
+    pub fn attach_service(&self, metrics: Arc<ServiceMetrics>) -> usize {
+        let mut svcs = lock(&self.inner.services);
+        svcs.push(metrics);
+        svcs.len() - 1
+    }
+
+    /// Consistent point-in-time snapshot of everything this handle has
+    /// recorded. Snapshotting never observes the clock, so two
+    /// snapshots of a frozen registry are byte-identical through both
+    /// exporters.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let (mut counters, mut gauges, mut histograms) = self.inner.registry.snapshot_maps();
+        for (i, svc) in lock(&self.inner.services).iter().enumerate() {
+            snapshot::fold_service(&mut counters, &mut gauges, &mut histograms, svc, i);
+        }
+        let (spans, spans_dropped) = self.inner.spans.snapshot();
+        let (events, events_dropped) = self.inner.events.snapshot();
+        TelemetrySnapshot {
+            counters,
+            gauges,
+            histograms,
+            spans,
+            spans_dropped,
+            events,
+            events_dropped,
+            health_events: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fake_clock_ticks_monotonically() {
+        let c = Clock::fake();
+        assert!(c.is_fake());
+        assert_eq!(c.now_nanos(), 1);
+        assert_eq!(c.now_nanos(), 2);
+        c.advance_nanos(10);
+        assert_eq!(c.now_nanos(), 13);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = Clock::wall();
+        let a = c.now_nanos();
+        let b = c.now_nanos();
+        assert!(b >= a);
+        c.advance_nanos(5); // no-op, must not panic
+    }
+
+    #[test]
+    fn trace_ids_are_sequential_from_one() {
+        let t = Telemetry::with_fake_clock();
+        assert_eq!(t.mint_trace(), TraceId(1));
+        assert_eq!(t.mint_trace(), TraceId(2));
+        assert!(TraceId::NONE.is_none());
+        assert!(!TraceId(1).is_none());
+    }
+
+    #[test]
+    fn guards_nest_and_restore_parent() {
+        let t = Telemetry::with_fake_clock();
+        {
+            let root = t.span("root");
+            assert_eq!(t.current_parent(), root.id());
+            {
+                let child = t.span("child");
+                assert_eq!(t.current_parent(), child.id());
+            }
+            assert_eq!(t.current_parent(), root.id());
+        }
+        assert_eq!(t.current_parent(), 0);
+        let snap = t.snapshot();
+        assert_eq!(snap.spans.len(), 2);
+        let root = snap.spans.iter().find(|s| s.name == "root").unwrap();
+        let child = snap.spans.iter().find(|s| s.name == "child").unwrap();
+        assert_eq!(root.parent, 0);
+        assert_eq!(child.parent, root.id);
+        // Strict containment under the tick clock.
+        assert!(root.start_nanos < child.start_nanos);
+        assert!(child.end_nanos < root.end_nanos);
+    }
+
+    #[test]
+    fn derived_span_is_one_tick_under_fake_clock() {
+        let t = Telemetry::with_fake_clock();
+        t.derived_span("ehyb.partition", TraceId::NONE, 123.456);
+        let snap = t.snapshot();
+        assert_eq!(snap.spans.len(), 1);
+        assert_eq!(snap.spans[0].end_nanos - snap.spans[0].start_nanos, 1);
+    }
+
+    #[test]
+    fn events_carry_traces() {
+        let t = Telemetry::with_fake_clock();
+        let tr = t.mint_trace();
+        t.event("reply", tr, "ok");
+        t.event("note", TraceId::NONE, "untraced");
+        let snap = t.snapshot();
+        assert_eq!(snap.events.len(), 2);
+        assert_eq!(snap.events[0].trace, tr.0);
+        assert_eq!(snap.events[1].trace, 0);
+    }
+}

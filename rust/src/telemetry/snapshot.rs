@@ -1,0 +1,474 @@
+//! One snapshot type, two exporters.
+//!
+//! [`TelemetrySnapshot`] is the frozen view everything renders from:
+//! deterministic JSON (via [`crate::runtime::json::Json::dump`] —
+//! `BTreeMap`-ordered keys, shortest-round-trip numbers, diffable in
+//! CI) and Prometheus text exposition (`# HELP`/`# TYPE`, stable
+//! label order). Two snapshots of the same frozen registry export
+//! byte-identically through both — snapshotting never reads the clock
+//! and never stamps a "generated at".
+
+use super::metrics::ServiceMetrics;
+use super::span::{EventRecord, SpanRecord};
+use crate::runtime::json::{self, Json};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::Ordering;
+
+/// Point-in-time summary of one [`super::LatencyHistogram`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_secs: f64,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+/// A [`crate::resilience::Health`] event surfaced through the
+/// telemetry snapshot, tagged with the trace that caused it (0 when no
+/// trace was in scope).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceHealthEvent {
+    pub trace: u64,
+    pub detail: String,
+}
+
+/// Everything a [`super::Telemetry`] handle recorded, frozen.
+/// `health_events` is filled by the context
+/// ([`crate::api::SpmvContext::telemetry_snapshot`]) — the handle
+/// itself does not know about [`crate::resilience::Health`].
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+    /// Sorted by `(start_nanos, id)` — parents precede children.
+    pub spans: Vec<SpanRecord>,
+    pub spans_dropped: u64,
+    /// In recording order.
+    pub events: Vec<EventRecord>,
+    pub events_dropped: u64,
+    pub health_events: Vec<TraceHealthEvent>,
+}
+
+/// Event kinds that end a request's story — a submitted trace reaches
+/// exactly one of these.
+pub const TERMINAL_KINDS: [&str; 4] = ["reply", "shed", "deadline", "fault"];
+
+/// Fold one attached service's metric block into the snapshot maps as
+/// `service.*{svc="<idx>"}`.
+pub(crate) fn fold_service(
+    counters: &mut BTreeMap<String, u64>,
+    gauges: &mut BTreeMap<String, f64>,
+    histograms: &mut BTreeMap<String, HistogramSnapshot>,
+    svc: &ServiceMetrics,
+    idx: usize,
+) {
+    let i = idx.to_string();
+    let name = |base: &str| super::metrics::labeled(base, &[("svc", &i)]);
+    let load = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+    counters.insert(name("service.requests"), load(&svc.requests));
+    counters.insert(name("service.batches"), load(&svc.batches));
+    counters.insert(name("service.shed"), load(&svc.shed));
+    counters.insert(name("service.faults"), load(&svc.faults));
+    counters.insert(name("service.respawns"), load(&svc.respawns));
+    counters.insert(name("service.deadline_misses"), load(&svc.deadline_misses));
+    counters.insert(name("service.bytes_moved"), load(&svc.bytes_moved));
+    gauges.insert(name("service.batch_width_mean"), svc.batch_width.mean());
+    gauges.insert(name("service.batch_width_max"), svc.batch_width.max() as f64);
+    gauges.insert(name("service.mean_batch_size"), svc.mean_batch_size());
+    gauges.insert(name("service.adaptive_max_batch"), load(&svc.adaptive_max_batch) as f64);
+    histograms.insert(name("service.spmv_latency"), svc.spmv_latency.snapshot());
+}
+
+impl TelemetrySnapshot {
+    /// Deterministic JSON document (`schema: "ehyb-telemetry-v1"`).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+        );
+        let gauges =
+            Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect());
+        let histograms = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        json::obj([
+                            ("count", Json::Num(h.count as f64)),
+                            ("sum_secs", Json::Num(h.sum_secs)),
+                            ("mean_secs", Json::Num(h.mean_secs)),
+                            ("p50_secs", Json::Num(h.p50_secs)),
+                            ("p99_secs", Json::Num(h.p99_secs)),
+                            ("min_secs", Json::Num(h.min_secs)),
+                            ("max_secs", Json::Num(h.max_secs)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let spans = Json::Arr(
+            self.spans
+                .iter()
+                .map(|s| {
+                    json::obj([
+                        ("id", Json::Num(s.id as f64)),
+                        ("parent", Json::Num(s.parent as f64)),
+                        ("trace", Json::Num(s.trace as f64)),
+                        ("name", Json::Str(s.name.clone())),
+                        ("start_nanos", Json::Num(s.start_nanos as f64)),
+                        ("end_nanos", Json::Num(s.end_nanos as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let events = Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    json::obj([
+                        ("nanos", Json::Num(e.nanos as f64)),
+                        ("trace", Json::Num(e.trace as f64)),
+                        ("kind", Json::Str(e.kind.clone())),
+                        ("detail", Json::Str(e.detail.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        let health = Json::Arr(
+            self.health_events
+                .iter()
+                .map(|h| {
+                    json::obj([
+                        ("trace", Json::Num(h.trace as f64)),
+                        ("detail", Json::Str(h.detail.clone())),
+                    ])
+                })
+                .collect(),
+        );
+        json::obj([
+            ("schema", Json::Str("ehyb-telemetry-v1".into())),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+            ("spans", spans),
+            ("spans_dropped", Json::Num(self.spans_dropped as f64)),
+            ("events", events),
+            ("events_dropped", Json::Num(self.events_dropped as f64)),
+            ("health", health),
+        ])
+    }
+
+    /// Prometheus text exposition. Metric names are `ehyb_`-prefixed
+    /// and sanitized (`.`/`-` → `_`); label blocks pass through in the
+    /// sorted order [`super::metrics::labeled`] composed them in;
+    /// `# HELP`/`# TYPE` are emitted once per metric name; histograms
+    /// export as summaries (`{quantile=…}` + `_sum` + `_count`).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut seen_type: BTreeSet<String> = BTreeSet::new();
+        for (full, v) in &self.counters {
+            let (base, labels) = split_labels(full);
+            let name = sanitize(base);
+            header(&mut out, &mut seen_type, &name, "counter", base);
+            out.push_str(&format!("{name}{labels} {v}\n"));
+        }
+        for (full, v) in &self.gauges {
+            let (base, labels) = split_labels(full);
+            let name = sanitize(base);
+            header(&mut out, &mut seen_type, &name, "gauge", base);
+            out.push_str(&format!("{name}{labels} {v}\n"));
+        }
+        for (full, h) in &self.histograms {
+            let (base, labels) = split_labels(full);
+            let name = sanitize(base);
+            header(&mut out, &mut seen_type, &name, "summary", base);
+            for (q, v) in [("0.5", h.p50_secs), ("0.99", h.p99_secs)] {
+                let ql = merge_label(labels, &format!("quantile=\"{q}\""));
+                out.push_str(&format!("{name}{ql} {v}\n"));
+            }
+            out.push_str(&format!("{name}_sum{labels} {}\n", h.sum_secs));
+            out.push_str(&format!("{name}_count{labels} {}\n", h.count));
+        }
+        out
+    }
+
+    /// How many terminal events (reply / shed / deadline / fault) this
+    /// trace reached — the proptested invariant is exactly one per
+    /// submitted request.
+    pub fn terminal_event_count(&self, trace: u64) -> usize {
+        self.events
+            .iter()
+            .filter(|e| e.trace == trace && TERMINAL_KINDS.contains(&e.kind.as_str()))
+            .count()
+    }
+
+    /// Render the whole span forest with indentation (children under
+    /// parents, ordered by start time).
+    pub fn span_tree(&self) -> String {
+        let mut children: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+        let ids: BTreeSet<u64> = self.spans.iter().map(|s| s.id).collect();
+        let mut roots: Vec<&SpanRecord> = Vec::new();
+        for s in &self.spans {
+            if s.parent != 0 && ids.contains(&s.parent) {
+                children.entry(s.parent).or_default().push(s);
+            } else {
+                roots.push(s);
+            }
+        }
+        let mut out = String::new();
+        for r in roots {
+            render(&mut out, r, &children, 0);
+        }
+        out
+    }
+
+    /// Reconstruct one request's whole story from this snapshot: its
+    /// events in time order, retry links to other attempts, the spans
+    /// that carry its trace plus the enclosing batch subtree (queue
+    /// wait, batch width, per-shard kernel spans), and the
+    /// [`crate::resilience::Health`] events it triggered.
+    pub fn describe_trace(&self, trace: u64) -> String {
+        let mut out = format!("# trace {trace}\n");
+        let mut evs: Vec<&EventRecord> =
+            self.events.iter().filter(|e| e.trace == trace).collect();
+        evs.sort_by_key(|e| e.nanos);
+        out.push_str("\n## events\n");
+        if evs.is_empty() {
+            out.push_str("(no events recorded for this trace)\n");
+        }
+        for e in &evs {
+            out.push_str(&format!("- t={}ns {}: {}\n", e.nanos, e.kind, e.detail));
+        }
+        // Retry links in both directions: this attempt retried as a
+        // later trace, or this trace is itself a retry of an earlier
+        // one (the `retry` event is tagged with the *new* trace and
+        // names its predecessor in the detail).
+        let prev_tag = format!("prev={trace}");
+        for e in self.events.iter().filter(|e| e.kind == "retry") {
+            if e.detail.contains(&prev_tag) {
+                out.push_str(&format!("- retried as trace {} ({})\n", e.trace, e.detail));
+            }
+        }
+        let spans = self.trace_spans(trace);
+        out.push_str("\n## spans\n");
+        if spans.is_empty() {
+            out.push_str("(no spans recorded for this trace)\n");
+        }
+        for s in &spans {
+            let tag = if s.trace == trace { " <-- this trace" } else { "" };
+            out.push_str(&format!(
+                "- [{}..{}ns] {} (id={} parent={}){}\n",
+                s.start_nanos, s.end_nanos, s.name, s.id, s.parent, tag
+            ));
+        }
+        let health: Vec<&TraceHealthEvent> =
+            self.health_events.iter().filter(|h| h.trace == trace).collect();
+        if !health.is_empty() {
+            out.push_str("\n## health events\n");
+            for h in health {
+                out.push_str(&format!("- {}\n", h.detail));
+            }
+        }
+        out
+    }
+
+    /// Spans carrying `trace` plus the full subtree of every enclosing
+    /// batch span (so the per-shard kernel spans of the fused call the
+    /// request rode in are part of its story).
+    fn trace_spans(&self, trace: u64) -> Vec<&SpanRecord> {
+        let mut include: BTreeSet<u64> = BTreeSet::new();
+        let mut frontier: Vec<u64> = Vec::new();
+        for s in &self.spans {
+            if s.trace == trace {
+                include.insert(s.id);
+                if s.parent != 0 {
+                    frontier.push(s.parent);
+                }
+            }
+        }
+        let mut children: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+        for s in &self.spans {
+            children.entry(s.parent).or_default().push(s.id);
+        }
+        // Enclosing spans and all their descendants.
+        while let Some(id) = frontier.pop() {
+            if !include.insert(id) {
+                continue;
+            }
+            if let Some(kids) = children.get(&id) {
+                frontier.extend(kids.iter().copied());
+            }
+        }
+        self.spans.iter().filter(|s| include.contains(&s.id)).collect()
+    }
+
+    /// Traces that appear anywhere in this snapshot (events or spans),
+    /// ascending.
+    pub fn known_traces(&self) -> Vec<u64> {
+        let mut set: BTreeSet<u64> = BTreeSet::new();
+        for e in &self.events {
+            if e.trace != 0 {
+                set.insert(e.trace);
+            }
+        }
+        for s in &self.spans {
+            if s.trace != 0 {
+                set.insert(s.trace);
+            }
+        }
+        set.into_iter().collect()
+    }
+}
+
+fn render(
+    out: &mut String,
+    s: &SpanRecord,
+    children: &BTreeMap<u64, Vec<&SpanRecord>>,
+    depth: usize,
+) {
+    let indent = "  ".repeat(depth);
+    let trace = if s.trace != 0 { format!(" trace={}", s.trace) } else { String::new() };
+    out.push_str(&format!(
+        "{indent}{} [{}..{}ns]{}\n",
+        s.name, s.start_nanos, s.end_nanos, trace
+    ));
+    if let Some(kids) = children.get(&s.id) {
+        for k in kids {
+            render(out, k, children, depth + 1);
+        }
+    }
+}
+
+/// `name{a="1"}` → `("name", "{a=\"1\"}")`; plain names get `""`.
+fn split_labels(full: &str) -> (&str, &str) {
+    match full.find('{') {
+        Some(i) => (&full[..i], &full[i..]),
+        None => (full, ""),
+    }
+}
+
+/// Splice one more label into an existing (possibly empty) label block,
+/// keeping it last so ordering stays stable.
+fn merge_label(labels: &str, extra: &str) -> String {
+    if labels.is_empty() {
+        format!("{{{extra}}}")
+    } else {
+        format!("{},{extra}}}", &labels[..labels.len() - 1])
+    }
+}
+
+/// Prometheus metric name: `ehyb_` prefix, non-`[a-zA-Z0-9_:]` → `_`.
+fn sanitize(base: &str) -> String {
+    let mut s = String::with_capacity(base.len() + 5);
+    s.push_str("ehyb_");
+    for c in base.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            s.push(c);
+        } else {
+            s.push('_');
+        }
+    }
+    s
+}
+
+fn header(out: &mut String, seen: &mut BTreeSet<String>, name: &str, ty: &str, base: &str) {
+    if seen.insert(name.to_string()) {
+        out.push_str(&format!("# HELP {name} ehyb {ty} \"{base}\".\n"));
+        out.push_str(&format!("# TYPE {name} {ty}\n"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Telemetry, TraceId};
+    use super::*;
+
+    fn sample() -> TelemetrySnapshot {
+        let t = Telemetry::with_fake_clock();
+        t.counter("build.engines").add(2);
+        t.counter(&super::super::metrics::labeled("shard.kernel_calls", &[("shard", "0")]))
+            .incr();
+        t.gauge("build.partition_secs").set(0.25);
+        t.histogram("serve.latency").record(2e-6);
+        let tr = t.mint_trace();
+        {
+            let batch = t.span("serve.batch(w=1)");
+            t.record_span("queue.wait", batch.id(), tr, 1, 3);
+            let _k = batch.child("kernel");
+        }
+        t.event("reply", tr, "ok");
+        t.snapshot()
+    }
+
+    #[test]
+    fn exporters_are_frozen_registry_stable() {
+        let snap = sample();
+        assert_eq!(snap.to_json().dump(), snap.to_json().dump());
+        assert_eq!(snap.to_prometheus(), snap.to_prometheus());
+        // And a second snapshot of the same (now idle) registry
+        // renders the same bytes — snapshotting mutates nothing.
+        let snap2 = sample();
+        assert_eq!(snap.counters, snap2.counters);
+    }
+
+    #[test]
+    fn prometheus_shape() {
+        let p = sample().to_prometheus();
+        assert!(p.contains("# TYPE ehyb_build_engines counter\n"));
+        assert!(p.contains("ehyb_build_engines 2\n"));
+        assert!(p.contains("ehyb_shard_kernel_calls{shard=\"0\"} 1\n"));
+        assert!(p.contains("# TYPE ehyb_build_partition_secs gauge\n"));
+        assert!(p.contains("# TYPE ehyb_serve_latency summary\n"));
+        assert!(p.contains("ehyb_serve_latency{quantile=\"0.5\"}"));
+        assert!(p.contains("ehyb_serve_latency_count 1\n"));
+        // One TYPE line per metric name.
+        let types: Vec<&str> =
+            p.lines().filter(|l| l.starts_with("# TYPE ehyb_serve_latency ")).collect();
+        assert_eq!(types.len(), 1);
+    }
+
+    #[test]
+    fn json_is_deterministic_and_typed() {
+        let j = sample().to_json();
+        let dump = j.dump();
+        assert!(dump.contains("\"schema\":\"ehyb-telemetry-v1\""));
+        assert!(dump.contains("\"counters\""));
+        let reparsed = crate::runtime::json::Json::parse(&dump).expect("round trip");
+        assert_eq!(reparsed.dump(), dump);
+    }
+
+    #[test]
+    fn trace_story_includes_batch_subtree_and_terminal() {
+        let snap = sample();
+        assert_eq!(snap.known_traces(), vec![1]);
+        assert_eq!(snap.terminal_event_count(1), 1);
+        let story = snap.describe_trace(1);
+        assert!(story.contains("reply"), "{story}");
+        assert!(story.contains("queue.wait"), "{story}");
+        // Sibling kernel span of the enclosing batch is pulled in.
+        assert!(story.contains("kernel"), "{story}");
+        assert!(story.contains("serve.batch(w=1)"), "{story}");
+    }
+
+    #[test]
+    fn span_tree_indents_children() {
+        let tree = sample().span_tree();
+        let batch_line = tree.lines().position(|l| l.starts_with("serve.batch")).unwrap();
+        let kernel_line = tree.lines().position(|l| l.contains("kernel")).unwrap();
+        assert!(kernel_line > batch_line);
+        assert!(tree.lines().nth(kernel_line).unwrap().starts_with("  "));
+    }
+
+    #[test]
+    fn merge_label_splices_last() {
+        assert_eq!(merge_label("", "quantile=\"0.5\""), "{quantile=\"0.5\"}");
+        assert_eq!(
+            merge_label("{svc=\"0\"}", "quantile=\"0.5\""),
+            "{svc=\"0\",quantile=\"0.5\"}"
+        );
+    }
+}

@@ -1,0 +1,235 @@
+//! Structured spans and point events, recorded into bounded rings.
+//!
+//! A span is one timed region with a parent link (0 = root) and an
+//! optional trace tag; the tree is reconstructed from the flat records
+//! at snapshot time. Completed spans land in insertion (= completion)
+//! order; snapshots re-sort by `(start_nanos, id)` so parents precede
+//! their children in the exported list.
+
+use super::{lock, Telemetry, TraceId};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// One completed span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Sequential id (from 1) on the owning [`Telemetry`] handle.
+    pub id: u64,
+    /// Parent span id; 0 = root.
+    pub parent: u64,
+    /// Trace tag ([`TraceId`]); 0 = untraced.
+    pub trace: u64,
+    pub name: String,
+    pub start_nanos: u64,
+    pub end_nanos: u64,
+}
+
+impl SpanRecord {
+    pub fn duration_nanos(&self) -> u64 {
+        self.end_nanos - self.start_nanos
+    }
+}
+
+/// One point event (submit / reply / shed / deadline / fault / retry /
+/// respawn / solver-iter / health / …).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EventRecord {
+    pub nanos: u64,
+    /// Trace tag; 0 = untraced.
+    pub trace: u64,
+    pub kind: String,
+    pub detail: String,
+}
+
+/// Bounded FIFO ring: pushing past capacity evicts the oldest record
+/// and counts it, so a long-running service keeps the newest window.
+struct Ring<T> {
+    cap: usize,
+    inner: Mutex<(VecDeque<T>, u64)>,
+}
+
+impl<T: Clone> Ring<T> {
+    fn new(cap: usize) -> Self {
+        Ring { cap, inner: Mutex::new((VecDeque::new(), 0)) }
+    }
+
+    fn push(&self, item: T) {
+        let mut g = lock(&self.inner);
+        if g.0.len() == self.cap {
+            g.0.pop_front();
+            g.1 += 1;
+        }
+        g.0.push_back(item);
+    }
+
+    fn snapshot(&self) -> (Vec<T>, u64) {
+        let g = lock(&self.inner);
+        (g.0.iter().cloned().collect(), g.1)
+    }
+}
+
+pub(crate) struct SpanRing(Ring<SpanRecord>);
+
+impl SpanRing {
+    pub(crate) fn new(cap: usize) -> Self {
+        SpanRing(Ring::new(cap))
+    }
+
+    pub(crate) fn push(&self, rec: SpanRecord) {
+        self.0.push(rec);
+    }
+
+    /// `(records sorted by (start, id), evicted count)`.
+    pub(crate) fn snapshot(&self) -> (Vec<SpanRecord>, u64) {
+        let (mut v, dropped) = self.0.snapshot();
+        v.sort_by_key(|s| (s.start_nanos, s.id));
+        (v, dropped)
+    }
+}
+
+pub(crate) struct EventRing(Ring<EventRecord>);
+
+impl EventRing {
+    pub(crate) fn new(cap: usize) -> Self {
+        EventRing(Ring::new(cap))
+    }
+
+    pub(crate) fn push(&self, rec: EventRecord) {
+        self.0.push(rec);
+    }
+
+    /// `(records in recording order, evicted count)`.
+    pub(crate) fn snapshot(&self) -> (Vec<EventRecord>, u64) {
+        self.0.snapshot()
+    }
+}
+
+/// RAII guard for an open span: created by [`Telemetry::span`] /
+/// [`Telemetry::span_traced`], records on drop (or explicit
+/// [`SpanGuard::finish`]) and restores the handle's implicit parent.
+/// Guards are expected to close LIFO (natural scoping); an out-of-order
+/// close only skews later parent inference, never loses a record.
+pub struct SpanGuard {
+    tel: Telemetry,
+    id: u64,
+    parent: u64,
+    trace: TraceId,
+    name: String,
+    start: u64,
+    finished: bool,
+}
+
+impl SpanGuard {
+    pub(crate) fn new(
+        tel: Telemetry,
+        id: u64,
+        parent: u64,
+        trace: TraceId,
+        name: String,
+        start: u64,
+    ) -> Self {
+        SpanGuard { tel, id, parent, trace, name, start, finished: false }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn trace(&self) -> TraceId {
+        self.trace
+    }
+
+    /// Open a child span inheriting this guard's trace tag. (Any span
+    /// opened while this guard is innermost is parented here anyway;
+    /// `child` just also propagates the trace.)
+    pub fn child(&self, name: impl Into<String>) -> SpanGuard {
+        self.tel.span_traced(name, self.trace)
+    }
+
+    /// Close now instead of at end of scope.
+    pub fn finish(mut self) {
+        self.close();
+    }
+
+    fn close(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        let end = self.tel.now_nanos();
+        self.tel.close_span(
+            SpanRecord {
+                id: self.id,
+                parent: self.parent,
+                trace: self.trace.0,
+                name: std::mem::take(&mut self.name),
+                start_nanos: self.start,
+                end_nanos: end.max(self.start),
+            },
+            self.parent,
+        );
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts() {
+        let r = SpanRing::new(2);
+        for i in 1..=3u64 {
+            r.push(SpanRecord {
+                id: i,
+                parent: 0,
+                trace: 0,
+                name: format!("s{i}"),
+                start_nanos: i,
+                end_nanos: i + 1,
+            });
+        }
+        let (v, dropped) = r.snapshot();
+        assert_eq!(dropped, 1);
+        assert_eq!(v.iter().map(|s| s.id).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn snapshot_sorts_by_start_then_id() {
+        let r = SpanRing::new(8);
+        // Completion order: child first (guards close inside-out), but
+        // the parent started earlier and must sort first.
+        r.push(SpanRecord {
+            id: 2,
+            parent: 1,
+            trace: 0,
+            name: "child".into(),
+            start_nanos: 5,
+            end_nanos: 6,
+        });
+        r.push(SpanRecord {
+            id: 1,
+            parent: 0,
+            trace: 0,
+            name: "parent".into(),
+            start_nanos: 1,
+            end_nanos: 9,
+        });
+        let (v, _) = r.snapshot();
+        assert_eq!(v[0].name, "parent");
+        assert_eq!(v[1].name, "child");
+    }
+
+    #[test]
+    fn finish_records_once() {
+        let t = Telemetry::with_fake_clock();
+        let g = t.span("once");
+        g.finish();
+        assert_eq!(t.snapshot().spans.len(), 1);
+    }
+}

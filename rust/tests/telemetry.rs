@@ -1,0 +1,419 @@
+//! Integration gates for the unified telemetry subsystem (PR 8).
+//!
+//! Everything here runs under [`Telemetry::with_fake_clock`]: the
+//! logical tick clock makes span timestamps bit-for-bit reproducible
+//! for a deterministic call sequence, so these tests can pin exact
+//! span trees (goldens), assert the proptest-style terminal-event
+//! invariant across seeded chaos workloads, and check that both
+//! exporters are byte-identical across snapshots of a frozen registry.
+
+use ehyb::coordinator::service::{BatchKernel, SpmvService};
+use ehyb::coordinator::{Jacobi, SolverConfig};
+use ehyb::resilience::{FaultInjector, FaultPlan, RetryPolicy};
+use ehyb::sparse::gen;
+use ehyb::telemetry::snapshot::TERMINAL_KINDS;
+use ehyb::{EngineKind, ShardSpec, SpmvContext, Telemetry, TelemetrySnapshot};
+use std::time::{Duration, Instant};
+
+/// Deterministic split-mix step for the proptest-style loops.
+fn lcg(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+fn seeded_x(n: usize, salt: u64) -> Vec<f64> {
+    (0..n)
+        .map(|i| ((i as u64).wrapping_mul(salt.wrapping_add(3)) % 17) as f64 * 0.25 - 2.0)
+        .collect()
+}
+
+/// One seeded build + serve on a fake clock. Unsharded: the sharded
+/// engine records its per-shard spans from worker threads, whose clock
+/// interleaving is not deterministic — byte goldens stay on the serial
+/// path, the sharded story is asserted structurally below.
+fn build_and_serve(seed: u64) -> SpmvContext<f64> {
+    let m = gen::poisson2d::<f64>(8, 8);
+    let n = m.nrows();
+    let ctx = SpmvContext::builder(m)
+        .engine(EngineKind::Ehyb)
+        .telemetry(Telemetry::with_fake_clock())
+        .build()
+        .expect("seeded build");
+    let svc = ctx.serve(4).expect("serve");
+    let client = svc.client();
+    for r in 0..3u64 {
+        let y = client.spmv(seeded_x(n, seed.wrapping_add(r))).expect("round trip");
+        assert_eq!(y.len(), n);
+    }
+    drop(svc);
+    ctx
+}
+
+/// Hand-computed golden: under the fake clock every observation ticks
+/// the logical time by exactly 1 ns, so the rendered tree is knowable
+/// in advance — this pins the render format *and* the tick discipline.
+#[test]
+fn hand_built_span_tree_matches_exact_golden() {
+    let t = Telemetry::with_fake_clock();
+    let tr = t.mint_trace();
+    {
+        let b = t.span("serve.batch(w=2)"); // id=1, start=tick 1
+        let drained = t.now_nanos(); // tick 2
+        t.record_span("queue.wait", b.id(), tr, 0, drained);
+        let _k = b.child("kernel"); // id=3, start=tick 3; drop -> end=4
+    } // batch drop -> end=5
+    let golden = "serve.batch(w=2) [1..5ns]\n  queue.wait [0..2ns] trace=1\n  kernel [3..4ns]\n";
+    assert_eq!(t.snapshot().span_tree(), golden);
+}
+
+/// Two identical seeded build+serve runs render the same span tree,
+/// byte for byte, and agree on every structural landmark of the
+/// pipeline decomposition.
+#[test]
+fn seeded_build_and_serve_span_tree_is_reproducible() {
+    let a = build_and_serve(7).telemetry_snapshot();
+    let b = build_and_serve(7).telemetry_snapshot();
+    let tree = a.span_tree();
+    assert_eq!(tree, b.span_tree(), "fake-clock span tree must be run-to-run identical");
+    assert_eq!(a.known_traces(), b.known_traces());
+
+    // Build side: the root `build` span contains the derived EHYB
+    // phase spans; the engine builds lazily at first serve use.
+    assert!(tree.starts_with("build ["), "root must be the build span:\n{tree}");
+    assert!(tree.contains("\n  ehyb.partition ["), "{tree}");
+    assert!(tree.contains("\n  ehyb.assemble ["), "{tree}");
+    assert!(tree.contains("\nengine.build ["), "{tree}");
+
+    // Serve side: serial round-trips drain as width-1 batches, each
+    // with a trace-tagged queue-wait child and a fused-kernel child.
+    assert!(tree.contains("\nserve.batch(w=1) ["), "{tree}");
+    assert!(tree.contains("\n  queue.wait ["), "{tree}");
+    assert!(tree.contains("] trace=1\n"), "{tree}");
+    assert!(tree.contains("\n  kernel ["), "{tree}");
+
+    // A different seed still produces the same *shape* (the seed only
+    // changes request payloads, never the instrumentation sequence).
+    assert_eq!(tree, build_and_serve(8).telemetry_snapshot().span_tree());
+}
+
+/// Collect the traces that were actually submitted to a service (the
+/// `submit` event is recorded before queue admission decides between
+/// reply / shed / deadline / fault).
+fn submitted_traces(snap: &TelemetrySnapshot) -> Vec<u64> {
+    let mut v: Vec<u64> =
+        snap.events.iter().filter(|e| e.kind == "submit").map(|e| e.trace).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Proptest-style invariant: across seeded workloads that exercise
+/// every admission outcome — served replies, expired deadlines, shed
+/// floods, injected engine faults with retry — every submitted
+/// request's trace ID appears in **exactly one** terminal event.
+#[test]
+fn every_submitted_trace_reaches_exactly_one_terminal_event() {
+    for seed in 1..=4u64 {
+        let mut rng = seed;
+        let m = gen::poisson2d::<f64>(8, 8);
+        let n = m.nrows();
+        let ctx = SpmvContext::builder(m)
+            .engine(EngineKind::Ehyb)
+            .telemetry(Telemetry::with_fake_clock())
+            .build()
+            .expect("build");
+
+        // Scenario A: a few served round-trips plus one pre-expired
+        // deadline triaged out at drain time.
+        {
+            let svc = ctx.serve(4).expect("serve");
+            let client = svc.client();
+            for r in 0..(1 + lcg(&mut rng) % 3) {
+                client.spmv(seeded_x(n, r)).expect("round trip");
+            }
+            let expired = Instant::now() - Duration::from_millis(5);
+            assert!(matches!(
+                client.spmv_deadline(seeded_x(n, 9), expired),
+                Err(ehyb::EhybError::DeadlineExceeded)
+            ));
+        }
+
+        // Scenario B: injected engine panic on the first kernel call;
+        // bounded retry recovers it (fault terminal + linked retry
+        // trace reaching a reply terminal).
+        {
+            let inj = FaultInjector::new(FaultPlan {
+                panic_on_call: Some(1),
+                nan_on_call: None,
+                ..FaultPlan::from_seed(seed)
+            });
+            let engine = ctx.engine_arc();
+            let svc: SpmvService<f64> = SpmvService::spawn_with_telemetry(
+                move || {
+                    let engine = engine.clone();
+                    let fb = engine.format_bytes();
+                    let kernel: BatchKernel<f64> =
+                        Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+                    Ok((inj.wrap_kernel(kernel), fb))
+                },
+                n,
+                4,
+                64,
+                false,
+                ctx.telemetry().clone(),
+            )
+            .expect("spawn");
+            let policy = RetryPolicy {
+                max_attempts: 3,
+                base_delay: Duration::from_micros(50),
+                max_delay: Duration::from_micros(400),
+                seed,
+            };
+            svc.client().spmv_with_retry(seeded_x(n, 11), &policy).expect("retry recovers");
+        }
+
+        // Scenario C: shed. A gate holds the kernel open on a depth-2
+        // queue; once it is full every further submission sheds.
+        {
+            let engine = ctx.engine_arc();
+            let (started_tx, started_rx) = std::sync::mpsc::channel::<()>();
+            let (gate_tx, gate_rx) = std::sync::mpsc::channel::<()>();
+            let mut rig = Some((started_tx, gate_rx));
+            let svc: SpmvService<f64> = SpmvService::spawn_with_telemetry(
+                move || {
+                    let engine = engine.clone();
+                    let fb = engine.format_bytes();
+                    let (stx, grx) = rig.take().expect("gated rig builds one engine");
+                    let kernel: BatchKernel<f64> = Box::new(move |xs, ys| {
+                        stx.send(()).ok();
+                        grx.recv().ok();
+                        engine.spmv_batch(xs, ys)
+                    });
+                    Ok((kernel, fb))
+                },
+                n,
+                4,
+                2,
+                false,
+                ctx.telemetry().clone(),
+            )
+            .expect("spawn gated");
+            let client = svc.client();
+            let first = client.submit(seeded_x(n, 1)).expect("first request admitted");
+            started_rx.recv().expect("kernel reached the gate");
+            let mut queued = Vec::new();
+            let mut shed = 0u32;
+            for s in 0..4 {
+                match client.try_submit(seeded_x(n, 20 + s)) {
+                    Ok(rx) => queued.push(rx),
+                    Err((ehyb::EhybError::Overloaded { .. }, _)) => shed += 1,
+                    Err((e, _)) => panic!("unexpected admission error: {e:?}"),
+                }
+            }
+            assert_eq!(queued.len(), 2, "queue bound is 2");
+            assert_eq!(shed, 2, "overflow must shed");
+            drop(gate_tx); // release the kernel; queued work drains
+            first.recv().expect("service alive").expect("gated reply");
+            for rx in queued {
+                rx.recv().expect("service alive").expect("queued reply");
+            }
+        }
+
+        let snap = ctx.telemetry_snapshot();
+        let submitted = submitted_traces(&snap);
+        assert!(submitted.len() >= 8, "seed {seed}: expected a full workload");
+        for tr in &submitted {
+            assert_eq!(
+                snap.terminal_event_count(*tr),
+                1,
+                "seed {seed}: trace {tr} must reach exactly one terminal event"
+            );
+        }
+        // Every admission outcome is represented.
+        for kind in TERMINAL_KINDS {
+            assert!(
+                snap.events.iter().any(|e| e.kind == kind),
+                "seed {seed}: workload should produce a {kind} event"
+            );
+        }
+        // And no terminal event names a trace that was never submitted.
+        for e in snap.events.iter().filter(|e| TERMINAL_KINDS.contains(&e.kind.as_str())) {
+            assert!(
+                submitted.binary_search(&e.trace).is_ok(),
+                "seed {seed}: terminal {} for unsubmitted trace {}",
+                e.kind,
+                e.trace
+            );
+        }
+    }
+}
+
+/// Exporter contract: Prometheus text exposition lints clean (every
+/// sample under exactly one `# TYPE` header, names sanitized, values
+/// parse) and both exporters are byte-identical across two snapshots
+/// of a frozen registry.
+#[test]
+fn exporters_lint_and_freeze_byte_identically() {
+    let ctx = build_and_serve(7);
+    let snap = ctx.telemetry_snapshot();
+    let again = ctx.telemetry_snapshot();
+    assert_eq!(
+        snap.to_json().dump(),
+        again.to_json().dump(),
+        "frozen registry must export identical JSON"
+    );
+    assert_eq!(
+        snap.to_prometheus(),
+        again.to_prometheus(),
+        "frozen registry must export identical Prometheus text"
+    );
+
+    // JSON round-trips through the crate's own parser.
+    let dump = snap.to_json().dump();
+    let reparsed = ehyb::runtime::json::Json::parse(&dump).expect("self-parse");
+    assert_eq!(reparsed.dump(), dump);
+
+    // Prometheus lint.
+    let prom = snap.to_prometheus();
+    let mut types = std::collections::BTreeSet::new();
+    for line in prom.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let name = rest.split(' ').next().unwrap();
+            assert!(types.insert(name.to_string()), "duplicate # TYPE for {name}");
+        }
+    }
+    assert!(!types.is_empty(), "exposition should declare metric types");
+    for line in prom.lines().filter(|l| !l.starts_with('#')) {
+        let name_end = line.find(['{', ' ']).unwrap_or_else(|| panic!("malformed: {line}"));
+        let sample = &line[..name_end];
+        assert!(sample.starts_with("ehyb_"), "unprefixed metric: {line}");
+        assert!(
+            sample.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "unsanitized metric name: {line}"
+        );
+        // Summary `_sum` / `_count` series belong to their base metric.
+        let base = if types.contains(sample) {
+            sample
+        } else {
+            sample
+                .strip_suffix("_sum")
+                .or_else(|| sample.strip_suffix("_count"))
+                .unwrap_or(sample)
+        };
+        assert!(types.contains(base), "sample without # TYPE header: {line}");
+        let value = line.rsplit(' ').next().unwrap();
+        value.parse::<f64>().unwrap_or_else(|_| panic!("unparseable sample value: {line}"));
+    }
+
+    // The serve workload landed in the folded service namespace.
+    assert!(prom.contains("ehyb_service_requests{svc=\"0\"} 3\n"), "{prom}");
+}
+
+/// Acceptance path: one trace ID reconstructs a request's whole story
+/// — submit, queue wait, the fused batch with its per-shard kernel
+/// spans, the retry link from the faulted first attempt, and the
+/// terminal reply — from a single snapshot of a sharded context.
+#[test]
+fn one_trace_id_reconstructs_the_whole_request_story() {
+    let m = gen::poisson2d::<f64>(8, 8);
+    let n = m.nrows();
+    let ctx = SpmvContext::builder(m)
+        .engine(EngineKind::Ehyb)
+        .shards(ShardSpec::Count(2))
+        .telemetry(Telemetry::with_fake_clock())
+        .build()
+        .expect("sharded build");
+
+    let inj = FaultInjector::new(FaultPlan {
+        panic_on_call: Some(1),
+        nan_on_call: None,
+        ..FaultPlan::from_seed(7)
+    });
+    let engine = ctx.engine_arc();
+    let svc: SpmvService<f64> = SpmvService::spawn_with_telemetry(
+        move || {
+            let engine = engine.clone();
+            let fb = engine.format_bytes();
+            let kernel: BatchKernel<f64> = Box::new(move |xs, ys| engine.spmv_batch(xs, ys));
+            Ok((inj.wrap_kernel(kernel), fb))
+        },
+        n,
+        4,
+        64,
+        false,
+        ctx.telemetry().clone(),
+    )
+    .expect("spawn");
+    let policy = RetryPolicy {
+        max_attempts: 3,
+        base_delay: Duration::from_micros(50),
+        max_delay: Duration::from_micros(400),
+        seed: 7,
+    };
+    svc.client().spmv_with_retry(seeded_x(n, 5), &policy).expect("retry recovers");
+    drop(svc);
+
+    let snap = ctx.telemetry_snapshot();
+    let retry = snap.events.iter().find(|e| e.kind == "retry").expect("retry event");
+    let faulted = snap
+        .events
+        .iter()
+        .find(|e| e.kind == "fault")
+        .expect("first attempt faults")
+        .trace;
+    assert!(retry.detail.contains(&format!("prev={faulted}")), "{}", retry.detail);
+    assert_eq!(snap.terminal_event_count(faulted), 1, "fault is the first attempt's terminal");
+    assert_eq!(snap.terminal_event_count(retry.trace), 1, "reply is the retry's terminal");
+
+    // The retried attempt's story, from one snapshot, one ID.
+    let story = snap.describe_trace(retry.trace);
+    assert!(story.contains("submit:"), "{story}");
+    assert!(story.contains("retry: attempt=2"), "{story}");
+    assert!(story.contains("reply: served in batch width=1"), "{story}");
+    assert!(story.contains("queue.wait"), "{story}");
+    assert!(story.contains("serve.batch(w=1)"), "{story}");
+    assert!(story.contains("kernel"), "{story}");
+    assert!(story.contains("shard.kernel(i=0)"), "{story}");
+    assert!(story.contains("shard.kernel(i=1)"), "{story}");
+
+    // The faulted attempt's story names its successor.
+    let prior = snap.describe_trace(faulted);
+    assert!(prior.contains(&format!("retried as trace {}", retry.trace)), "{prior}");
+    assert!(prior.contains("fault: engine panic"), "{prior}");
+}
+
+/// The solver path feeds the same snapshot: a traced `solve.cg` span
+/// with one `solver-iter` event per recorded residual and a
+/// `solver-done` summary, all under the same trace.
+#[test]
+fn solver_iterations_are_traced_into_the_snapshot() {
+    let m = gen::poisson2d::<f64>(8, 8);
+    let n = m.nrows();
+    let ctx = SpmvContext::builder(m)
+        .engine(EngineKind::Ehyb)
+        .telemetry(Telemetry::with_fake_clock())
+        .build()
+        .expect("build");
+    let b: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) * 0.5 + 0.25).collect();
+    let precond = Jacobi::new(ctx.matrix());
+    let (_, rep) =
+        ctx.solver().cg(&b, None, &precond, &SolverConfig::default()).expect("solve");
+    assert!(rep.converged());
+
+    let snap = ctx.telemetry_snapshot();
+    let span = snap.spans.iter().find(|s| s.name == "solve.cg").expect("solve span");
+    assert_ne!(span.trace, 0, "solves are traced");
+    let iters =
+        snap.events.iter().filter(|e| e.kind == "solver-iter" && e.trace == span.trace).count();
+    assert_eq!(iters, rep.history.len(), "one solver-iter event per recorded residual");
+    let done = snap
+        .events
+        .iter()
+        .find(|e| e.kind == "solver-done" && e.trace == span.trace)
+        .expect("solver-done");
+    assert!(done.detail.contains("cg converged"), "{}", done.detail);
+    // The solve story renders from the same ID space.
+    let story = snap.describe_trace(span.trace);
+    assert!(story.contains("solve.cg"), "{story}");
+    assert!(story.contains("solver-done"), "{story}");
+}
