@@ -130,6 +130,88 @@ fn main() {
                 engine_rows.push((name, report.gflops()));
             }
         }
+        // Scalar-vs-SIMD twins (ISSUE 9): both legs of every rewritten
+        // kernel timed in one process, whichever leg the `simd` feature
+        // routes the plain entry points to. scripts/bench_check.py
+        // hard-fails the bench-smoke job if the EHYB simd rows trail
+        // their scalar twins.
+        {
+            let dur = Duration::from_millis(rep_ms);
+            let plan = EhybPlan::build(m, &cfg).expect("ehyb plan");
+            let engine = ehyb::spmv::ehyb_cpu::EhybCpu::new(&plan);
+            let padded = plan.matrix.padded_rows();
+            let nnz = plan.matrix.nnz();
+            let xp = vec![1.0f64; padded];
+            let mut yp = vec![0.0f64; padded];
+            let secs = bench_secs(|| engine.spmv_new_order_scalar(&xp, &mut yp), reps, dur);
+            let gf_s = ehyb::spmv::gflops(nnz, secs);
+            let secs = bench_secs(|| engine.spmv_new_order_simd(&xp, &mut yp), reps, dur);
+            let gf_v = ehyb::spmv::gflops(nnz, secs);
+            println!("  ehyb-ellwalk scalar {gf_s:7.3} vs simd {gf_v:7.3} GFLOPS");
+            engine_rows.push(("ehyb-ellwalk-scalar".to_string(), gf_s));
+            engine_rows.push(("ehyb-ellwalk-simd".to_string(), gf_v));
+            // Register-blocked SpMM, 4 vectors wide.
+            let xs: Vec<Vec<f64>> = (0..4)
+                .map(|t| {
+                    (0..padded).map(|i| ((i * 5 + t * 11 + 1) % 17) as f64 * 0.25 - 2.0).collect()
+                })
+                .collect();
+            let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+            let mut ys: Vec<Vec<f64>> = (0..4).map(|_| vec![0.0f64; padded]).collect();
+            for simd in [false, true] {
+                let secs = bench_secs(
+                    || {
+                        let mut yrefs: Vec<&mut [f64]> =
+                            ys.iter_mut().map(|v| v.as_mut_slice()).collect();
+                        engine.spmm_new_order_with(&xrefs, &mut yrefs, simd);
+                    },
+                    reps,
+                    dur,
+                );
+                let gf = 2.0 * (nnz * 4) as f64 / secs / 1e9;
+                let name = format!("ehyb-spmm4-{}", if simd { "simd" } else { "scalar" });
+                println!("  {name:>20}: {gf:7.3} GFLOPS");
+                engine_rows.push((name, gf));
+            }
+            // Baseline-engine twins via their explicit legs.
+            let x = vec![1.0f64; m.ncols()];
+            let mut y = vec![0.0f64; m.nrows()];
+            let sell = ehyb::spmv::sellp::SellPEngine::new(m);
+            let elle = ehyb::spmv::ell::EllEngine::new(m);
+            let hybe = ehyb::spmv::hyb::HybEngine::new(m);
+            let alg1 = ehyb::spmv::csr_vector::CsrVector::new(m);
+            let c5 = ehyb::spmv::csr5::Csr5Like::new(m);
+            let nnz_m = m.nnz();
+            let mut run = |name: &str, rows: &mut Vec<(String, f64)>, f: &mut dyn FnMut()| {
+                let secs = bench_secs(|| f(), reps, dur);
+                let gf = ehyb::spmv::gflops(nnz_m, secs);
+                println!("  {name:>20}: {gf:7.3} GFLOPS");
+                rows.push((name.to_string(), gf));
+            };
+            run("sellp-scalar", &mut engine_rows, &mut || sell.spmv_scalar(&x, &mut y));
+            run("sellp-simd", &mut engine_rows, &mut || sell.spmv_simd(&x, &mut y));
+            run("ell-scalar", &mut engine_rows, &mut || elle.spmv_scalar(&x, &mut y));
+            run("ell-simd", &mut engine_rows, &mut || elle.spmv_simd(&x, &mut y));
+            run("hyb-scalar", &mut engine_rows, &mut || hybe.spmv_scalar(&x, &mut y));
+            run("hyb-simd", &mut engine_rows, &mut || hybe.spmv_simd(&x, &mut y));
+            run("alg1-scalar", &mut engine_rows, &mut || alg1.spmv_scalar(&x, &mut y));
+            run("alg1-simd", &mut engine_rows, &mut || alg1.spmv_simd(&x, &mut y));
+            run("csr5-scalar", &mut engine_rows, &mut || c5.spmv_scalar(&x, &mut y));
+            run("csr5-simd", &mut engine_rows, &mut || c5.spmv_simd(&x, &mut y));
+            // Gather-fusion on/off: the 0.9 single-gather-per-side
+            // adapter vs the 0.8 two-pass permute route, same kernel.
+            use std::sync::Arc;
+            let r =
+                Arc::new(ehyb::Reordering::compute(m, ehyb::ReorderSpec::Rcm).expect("rcm"));
+            let pm = r.apply(m);
+            let rplan = EhybPlan::build(&pm, &cfg).expect("reordered plan");
+            let inner: Arc<dyn SpmvEngine<f64>> =
+                Arc::new(ehyb::spmv::ehyb_cpu::EhybCpu::new(&rplan));
+            let fused = ehyb::reorder::ReorderedEngine::new(inner.clone(), r.clone());
+            let two = ehyb::reorder::ReorderedEngine::with_fusion(inner, r, false);
+            run("ehyb-rcm-fused", &mut engine_rows, &mut || fused.spmv(&x, &mut y));
+            run("ehyb-rcm-twopass", &mut engine_rows, &mut || two.spmv(&x, &mut y));
+        }
         json_cases.push(BenchCase {
             matrix: label.split_whitespace().next().unwrap_or(label).to_string(),
             n: m.nrows(),

@@ -116,6 +116,21 @@
 //!
 //! ## Tuning
 //!
+//! * **SIMD (`simd` feature, on by default)** — the hot kernels (EHYB
+//!   ELL walk + ER tail, register-blocked SpMM, SELL-P, ELL, HYB's
+//!   ELL part, the csr-vector warp model, CSR5) run lane-packed legs
+//!   built on [`util::lanes::Pack`], a stable-Rust fixed-width pack
+//!   LLVM auto-vectorizes; compile with `-C target-cpu=native` so fma
+//!   lowers to hardware and the packed legs pay off. Lane-parallel
+//!   kernels stay **bitwise identical** to the scalar reference walks
+//!   for finite inputs (per-row fused chains are preserved); CSR5's
+//!   two-phase leg matches to ~1e-9. `--no-default-features` restores
+//!   scalar dispatch; both legs always compile and are callable
+//!   explicitly (`*_scalar` / `*_simd`). Reordered EHYB contexts also
+//!   **fuse** the adapter's x/y permutes with EHYB's internal
+//!   permutation into one gather per side ([`spmv::PermutedSpmv`]) —
+//!   bitwise identical to the two-pass route, minus two full vector
+//!   passes per SpMV.
 //! * **Autotuner** — `SpmvContext::builder(m).tune(level)` searches the
 //!   EHYB plan space per matrix ([`autotune`]):
 //!   [`TuneLevel::Heuristic`] ranks candidates by the [`perfmodel`]

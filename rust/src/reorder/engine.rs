@@ -10,14 +10,42 @@
 //! output is bit-identical to the unreordered engine's (proptested in
 //! `rust/tests/reorder.rs`).
 //!
+//! **Gather fusion** (0.9): when the inner engine exposes its own
+//! internal permutation through [`PermutedSpmv`] (EHYB permutes every
+//! vector into its partitioned new order), the adapter composes both
+//! permutations into precomputed index maps at construction, so a call
+//! performs **one** gather into kernel order and **one** gather out —
+//! instead of the 0.8 two-pass route (adapter permute + engine-internal
+//! permute, an intermediate n-vector per side). The kernel input values
+//! and the kernel itself are unchanged, so fusion is bit-identical to
+//! the two-pass path ([`ReorderedEngine::with_fusion`] keeps the 0.8
+//! route callable; `rust/tests/reorder.rs` pins the equivalence).
+//!
 //! [`Csr::permute_symmetric_stable`]: crate::sparse::csr::Csr::permute_symmetric_stable
 
 use super::Reordering;
 use crate::api::batch::{VecBatch, VecBatchMut};
 use crate::sparse::scalar::Scalar;
-use crate::spmv::SpmvEngine;
+use crate::spmv::{PermutedSpmv, SpmvEngine};
 use crate::util::pool::VecPool;
 use std::sync::Arc;
+
+/// Padding marker in [`FusedMaps::in_map`]: kernel slots that feed from
+/// no original x entry (EHYB's padded rows) load zero.
+const FUSE_PAD: u32 = u32::MAX;
+
+/// Composed permutation maps for the fused path. With `r` the outer
+/// reordering (`perm[old] = mid`) and `k` the engine's internal
+/// permutation (`perm[mid] = q`, padded):
+/// `in_map[q] = r.iperm[k.iperm[q]]` and `out_map[old] = k.perm[r.perm[old]]`.
+struct FusedMaps {
+    /// Original x index feeding kernel slot `q` (or [`FUSE_PAD`]).
+    in_map: Vec<u32>,
+    /// Kernel slot holding the result for original row `old`.
+    out_map: Vec<u32>,
+    /// Kernel-order vector length (`inner.permuted_kernel().padded_len()`).
+    padded: usize,
+}
 
 /// [`SpmvEngine`] adapter around an engine prepared on the permuted
 /// matrix: `spmv`/`spmv_batch` accept and produce vectors in original
@@ -29,18 +57,60 @@ pub struct ReorderedEngine<S: Scalar> {
     r: Arc<Reordering>,
     /// Permuted-vector scratch (x side and y side share the pool).
     pool: VecPool<S>,
+    /// Composed gather maps — `Some` iff fusion was requested and the
+    /// inner engine exposes a [`PermutedSpmv`] kernel.
+    fused: Option<FusedMaps>,
 }
 
 impl<S: Scalar> ReorderedEngine<S> {
     /// Wrap `inner` (prepared on `r.apply(matrix)`) so callers keep
     /// original index space. `inner` must be square with `r.len()`
-    /// rows.
+    /// rows. Permute fusion engages automatically when the inner
+    /// engine exposes its internal permutation.
     pub fn new(inner: Arc<dyn SpmvEngine<S>>, r: Arc<Reordering>) -> ReorderedEngine<S> {
+        Self::with_fusion(inner, r, true)
+    }
+
+    /// [`Self::new`] with an explicit fusion switch. `fuse = false`
+    /// forces the 0.8 two-pass route (adapter gather + engine-internal
+    /// permute) — kept callable so the fused path can be tested and
+    /// benched against its bitwise-equal baseline.
+    pub fn with_fusion(
+        inner: Arc<dyn SpmvEngine<S>>,
+        r: Arc<Reordering>,
+        fuse: bool,
+    ) -> ReorderedEngine<S> {
         assert_eq!(inner.nrows(), r.len(), "inner engine does not match the reordering");
         assert_eq!(inner.ncols(), r.len(), "reordered engines are square");
+        let fused = if fuse { Self::compose_maps(inner.as_ref(), &r) } else { None };
         // 2 buffers per in-flight spmv, 2 per batch; 8 tolerates a few
         // concurrent callers before reuse starts missing.
-        ReorderedEngine { inner, r, pool: VecPool::new(8) }
+        ReorderedEngine { inner, r, pool: VecPool::new(8), fused }
+    }
+
+    /// Compose the outer reordering with the engine's internal
+    /// permutation into one gather map per side. Returns `None` (two-
+    /// pass fallback) when the engine has no permuted kernel or its
+    /// permutation shape is inconsistent.
+    fn compose_maps(inner: &dyn SpmvEngine<S>, r: &Reordering) -> Option<FusedMaps> {
+        let k = inner.permuted_kernel()?;
+        let n = r.len();
+        let padded = k.padded_len();
+        let (kperm, kiperm) = (k.inner_perm(), k.inner_iperm());
+        if kperm.len() != n || kiperm.len() != padded || padded < n {
+            return None;
+        }
+        let mut in_map = vec![FUSE_PAD; padded];
+        for (q, &mid) in kiperm.iter().enumerate() {
+            if (mid as usize) < n {
+                in_map[q] = r.iperm[mid as usize];
+            }
+        }
+        let out_map: Vec<u32> = (0..n).map(|old| kperm[r.perm[old] as usize]).collect();
+        // The maps are total over their domains by construction; the
+        // gathers below index with them unchecked-free (plain indexing
+        // panics on a malformed engine permutation, as permute_in did).
+        Some(FusedMaps { in_map, out_map, padded })
     }
 
     /// The wrapped engine (runs in permuted index space).
@@ -51,6 +121,11 @@ impl<S: Scalar> ReorderedEngine<S> {
     /// The ordering this adapter translates through.
     pub fn reordering(&self) -> &Reordering {
         &self.r
+    }
+
+    /// True when calls run the fused single-gather path.
+    pub fn is_fused(&self) -> bool {
+        self.fused.is_some()
     }
 
     /// Scratch-pool misses (allocations/growth) — flat across repeated
@@ -69,6 +144,24 @@ impl<S: Scalar> SpmvEngine<S> for ReorderedEngine<S> {
         let n = self.r.len();
         assert_eq!(x.len(), n);
         assert_eq!(y.len(), n);
+        if let Some(f) = &self.fused {
+            // One gather per side straight between original index
+            // space and the kernel's padded order — no intermediate
+            // mid-order vector.
+            let k = self.inner.permuted_kernel().expect("fused maps imply a permuted kernel");
+            let mut xq = self.pool.take(f.padded, S::ZERO);
+            let mut yq = self.pool.take(f.padded, S::ZERO);
+            for (slot, &src) in xq.iter_mut().zip(&f.in_map) {
+                *slot = if src == FUSE_PAD { S::ZERO } else { x[src as usize] };
+            }
+            k.spmv_permuted(&xq, &mut yq);
+            for (out, &q) in y.iter_mut().zip(&f.out_map) {
+                *out = yq[q as usize];
+            }
+            self.pool.put(xq);
+            self.pool.put(yq);
+            return;
+        }
         let perm = &self.r.perm;
         let mut xp = self.pool.take(n, S::ZERO);
         let mut yp = self.pool.take(n, S::ZERO);
@@ -90,6 +183,33 @@ impl<S: Scalar> SpmvEngine<S> for ReorderedEngine<S> {
         assert_eq!(ys.n(), n);
         let width = xs.width();
         if width == 0 {
+            return;
+        }
+        if let Some(f) = &self.fused {
+            let k = self.inner.permuted_kernel().expect("fused maps imply a permuted kernel");
+            let padded = f.padded;
+            let mut xq = self.pool.take(padded * width, S::ZERO);
+            let mut yq = self.pool.take(padded * width, S::ZERO);
+            for b in 0..width {
+                let src = xs.col(b);
+                let dst = &mut xq[b * padded..(b + 1) * padded];
+                for (slot, &m) in dst.iter_mut().zip(&f.in_map) {
+                    *slot = if m == FUSE_PAD { S::ZERO } else { src[m as usize] };
+                }
+            }
+            {
+                let xcols: Vec<&[S]> = xq.chunks(padded).collect();
+                let mut ycols: Vec<&mut [S]> = yq.chunks_mut(padded).collect();
+                k.spmv_batch_permuted(&xcols, &mut ycols);
+            }
+            for b in 0..width {
+                let src = &yq[b * padded..(b + 1) * padded];
+                for (out, &q) in ys.col_mut(b).iter_mut().zip(&f.out_map) {
+                    *out = src[q as usize];
+                }
+            }
+            self.pool.put(xq);
+            self.pool.put(yq);
             return;
         }
         let perm = &self.r.perm;
@@ -170,6 +290,85 @@ mod tests {
             wrapped.spmv(xs.col(b), &mut y1);
             assert_eq!(ys.col(b), &y1[..], "lane {b}");
         }
+    }
+
+    #[test]
+    fn fusion_engages_only_for_permuted_kernels() {
+        let m = unstructured_mesh::<f64>(20, 20, 0.5, 13);
+        let r = Arc::new(Reordering::compute(&m, ReorderSpec::Rcm).unwrap());
+        let pm = r.apply(&m);
+        let plain = ReorderedEngine::new(build_engine::<f64>(EngineKind::CsrScalar, &pm, None), r.clone());
+        assert!(!plain.is_fused(), "csr-scalar has no internal permutation to fuse");
+        let plan = crate::preprocess::EhybPlan::build(&pm, &Default::default()).unwrap();
+        let ehyb: Arc<dyn crate::spmv::SpmvEngine<f64>> =
+            Arc::new(crate::spmv::ehyb_cpu::EhybCpu::new(&plan));
+        let fused = ReorderedEngine::new(ehyb.clone(), r.clone());
+        assert!(fused.is_fused(), "EHYB inner must engage gather fusion");
+        assert!(!ReorderedEngine::with_fusion(ehyb, r, false).is_fused());
+    }
+
+    #[test]
+    fn fused_path_bitwise_equals_two_pass() {
+        // The composed-gather route must reproduce the 0.8 two-pass
+        // adapter bit-for-bit: identical kernel inputs, identical
+        // kernel, pure copies on the way out.
+        let m = unstructured_mesh::<f64>(24, 24, 0.6, 7);
+        let n = m.nrows();
+        for spec in [ReorderSpec::Rcm, ReorderSpec::PartitionRank { k: 0 }] {
+            let r = Arc::new(Reordering::compute(&m, spec).unwrap());
+            let pm = r.apply(&m);
+            let plan = crate::preprocess::EhybPlan::build(&pm, &Default::default()).unwrap();
+            let inner: Arc<dyn crate::spmv::SpmvEngine<f64>> =
+                Arc::new(crate::spmv::ehyb_cpu::EhybCpu::new(&plan));
+            let fused = ReorderedEngine::new(inner.clone(), r.clone());
+            let twopass = ReorderedEngine::with_fusion(inner, r, false);
+            assert!(fused.is_fused() && !twopass.is_fused());
+            let x: Vec<f64> = (0..n).map(|i| ((i * 11 + 5) % 23) as f64 * 0.25 - 2.5).collect();
+            let mut y_fused = vec![0.0; n];
+            let mut y_two = vec![0.0; n];
+            fused.spmv(&x, &mut y_fused);
+            twopass.spmv(&x, &mut y_two);
+            assert_eq!(y_fused, y_two, "spmv diverged under {spec:?}");
+            // Batch path too (drives spmv_batch_permuted / blocked SpMM).
+            let mut xs = BatchBuf::<f64>::zeros(n, 3);
+            for b in 0..3 {
+                for i in 0..n {
+                    xs.col_mut(b)[i] = ((i * 3 + b * 17 + 1) % 19) as f64 * 0.5 - 4.0;
+                }
+            }
+            let mut ys_f = BatchBuf::<f64>::zeros(n, 3);
+            let mut ys_t = BatchBuf::<f64>::zeros(n, 3);
+            {
+                let mut yv = ys_f.view_mut();
+                fused.spmv_batch(xs.view(), &mut yv);
+            }
+            {
+                let mut yv = ys_t.view_mut();
+                twopass.spmv_batch(xs.view(), &mut yv);
+            }
+            for b in 0..3 {
+                assert_eq!(ys_f.col(b), ys_t.col(b), "batch lane {b} under {spec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_scratch_pool_reaches_steady_state() {
+        let m = unstructured_mesh::<f64>(16, 16, 0.4, 3);
+        let r = Arc::new(Reordering::compute(&m, ReorderSpec::Rcm).unwrap());
+        let pm = r.apply(&m);
+        let plan = crate::preprocess::EhybPlan::build(&pm, &Default::default()).unwrap();
+        let e = ReorderedEngine::new(Arc::new(crate::spmv::ehyb_cpu::EhybCpu::new(&plan)), r);
+        assert!(e.is_fused());
+        let n = m.nrows();
+        let x = vec![1.0; n];
+        let mut y = vec![0.0; n];
+        e.spmv(&x, &mut y);
+        let after_first = e.scratch_misses();
+        for _ in 0..16 {
+            e.spmv(&x, &mut y);
+        }
+        assert_eq!(e.scratch_misses(), after_first, "steady-state fused spmv must not allocate");
     }
 
     #[test]

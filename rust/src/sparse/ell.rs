@@ -5,6 +5,7 @@
 
 use super::csr::Csr;
 use super::scalar::Scalar;
+use crate::util::lanes::{lane_width, Pack};
 
 /// ELL matrix. `cols[k * nrows + i]` / `vals[k * nrows + i]` hold the
 /// k-th entry of row i; padding slots have `col = PAD` and `val = 0`.
@@ -69,7 +70,18 @@ impl<S: Scalar> Ell<S> {
     }
 
     /// `y = A x` traversing column-major (the GPU access order).
+    /// Dispatches on the crate's `simd` feature; both legs are always
+    /// compiled ([`Self::spmv_scalar`] / [`Self::spmv_simd`]).
     pub fn spmv(&self, x: &[S], y: &mut [S]) {
+        if cfg!(feature = "simd") {
+            self.spmv_simd(x, y)
+        } else {
+            self.spmv_scalar(x, y)
+        }
+    }
+
+    /// Reference column-major walk, pad slots skipped by branch.
+    pub fn spmv_scalar(&self, x: &[S], y: &mut [S]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
         y.fill(S::ZERO);
@@ -81,6 +93,47 @@ impl<S: Scalar> Ell<S> {
                     y[i] = self.vals[base + i].mul_add(x[c as usize], y[i]);
                 }
             }
+        }
+    }
+
+    /// Row-packed walk: `W` adjacent rows advance together down the k
+    /// columns with pad slots handled branch-free by the `+0.0`-fma
+    /// identity. Each row's k-ordered fused chain is untouched, so the
+    /// result is bitwise equal to [`Self::spmv_scalar`] for finite `x`.
+    pub fn spmv_simd(&self, x: &[S], y: &mut [S]) {
+        match lane_width(S::BYTES) {
+            16 => self.spmv_packed::<16>(x, y),
+            8 => self.spmv_packed::<8>(x, y),
+            4 => self.spmv_packed::<4>(x, y),
+            _ => self.spmv_packed::<2>(x, y),
+        }
+    }
+
+    fn spmv_packed<const W: usize>(&self, x: &[S], y: &mut [S]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let n = self.nrows;
+        let mut i = 0;
+        while i + W <= n {
+            let mut acc = Pack::<S, W>::ZERO;
+            for k in 0..self.width {
+                let off = k * n + i;
+                let vals = Pack::load(&self.vals[off..off + W]);
+                let xg = Pack::gather_u32_pad0(x, &self.cols[off..off + W], PAD);
+                acc = vals.mul_add(xg, acc);
+            }
+            acc.store(&mut y[i..i + W]);
+            i += W;
+        }
+        for r in i..n {
+            let mut acc = S::ZERO;
+            for k in 0..self.width {
+                let c = self.cols[k * n + r];
+                if c != PAD {
+                    acc = self.vals[k * n + r].mul_add(x[c as usize], acc);
+                }
+            }
+            y[r] = acc;
         }
     }
 
@@ -128,6 +181,27 @@ mod tests {
         csr.spmv(&x, &mut y1);
         e.spmv(&x, &mut y2);
         assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn simd_walk_bit_identical_to_scalar() {
+        use crate::util::Xoshiro256;
+        for &(n, seed) in &[(3usize, 1u64), (61, 4), (128, 9)] {
+            let mut rng = Xoshiro256::new(seed);
+            let mut coo = Coo::<f64>::new(n, n);
+            for i in 0..n {
+                for _ in 0..1 + rng.next_below(7) {
+                    coo.push(i, rng.next_below(n), rng.range_f64(-1.0, 1.0));
+                }
+            }
+            let e = Ell::from_csr(&coo.to_csr());
+            let x: Vec<f64> = (0..n).map(|i| ((i * 17 + 3) % 31) as f64 * 0.0625 - 1.0).collect();
+            let mut y_s = vec![0.0; n];
+            let mut y_v = vec![0.0; n];
+            e.spmv_scalar(&x, &mut y_s);
+            e.spmv_simd(&x, &mut y_v);
+            assert_eq!(y_s, y_v, "n={n}");
+        }
     }
 
     #[test]

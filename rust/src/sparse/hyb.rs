@@ -53,9 +53,30 @@ impl<S: Scalar> Hyb<S> {
         self.ell.nnz() + self.coo.nnz()
     }
 
+    /// Inherits the ELL part's `simd`-feature dispatch; the irregular
+    /// COO tail stays scalar on every leg (sorted row-major, so its
+    /// accumulation order is fixed either way).
     pub fn spmv(&self, x: &[S], y: &mut [S]) {
         self.ell.spmv(x, y);
-        // COO part accumulates on top.
+        self.coo_tail(x, y);
+    }
+
+    /// Explicit scalar twin: ELL scalar leg + scalar COO tail.
+    pub fn spmv_scalar(&self, x: &[S], y: &mut [S]) {
+        self.ell.spmv_scalar(x, y);
+        self.coo_tail(x, y);
+    }
+
+    /// Explicit SIMD twin: ELL packed leg + the same scalar COO tail.
+    /// Bitwise equal to [`Self::spmv_scalar`] for finite `x` (the ELL
+    /// legs are; the tail is shared).
+    pub fn spmv_simd(&self, x: &[S], y: &mut [S]) {
+        self.ell.spmv_simd(x, y);
+        self.coo_tail(x, y);
+    }
+
+    /// COO part accumulates on top of the ELL result.
+    fn coo_tail(&self, x: &[S], y: &mut [S]) {
         for i in 0..self.coo.nnz() {
             let r = self.coo.rows[i] as usize;
             let c = self.coo.cols[i] as usize;
@@ -101,6 +122,20 @@ mod tests {
             csr.spmv(&x, &mut y1);
             h.spmv(&x, &mut y2);
             assert_eq!(y1, y2, "width={width}");
+        }
+    }
+
+    #[test]
+    fn simd_twin_bit_identical() {
+        let csr = skewed();
+        for width in 1..=5 {
+            let h = Hyb::from_csr_with_width(&csr, width);
+            let x = [1.5, -2.0, 3.0, 0.25, -0.5];
+            let mut y_s = [0.0; 4];
+            let mut y_v = [0.0; 4];
+            h.spmv_scalar(&x, &mut y_s);
+            h.spmv_simd(&x, &mut y_v);
+            assert_eq!(y_s, y_v, "width={width}");
         }
     }
 

@@ -7,6 +7,7 @@
 use super::SpmvEngine;
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
+use crate::util::lanes::{lane_width, Pack};
 
 const OMEGA: usize = 4; // lanes per tile
 const SIGMA: usize = 16; // entries per lane
@@ -32,14 +33,9 @@ impl<S: Scalar> Csr5Like<S> {
     pub fn tile_size() -> usize {
         OMEGA * SIGMA
     }
-}
 
-impl<S: Scalar> SpmvEngine<S> for Csr5Like<S> {
-    fn name(&self) -> &'static str {
-        "csr5"
-    }
-
-    fn spmv(&self, x: &[S], y: &mut [S]) {
+    /// Reference walk: fused multiply-add straight into the carry.
+    pub fn spmv_scalar(&self, x: &[S], y: &mut [S]) {
         let m = &self.m;
         assert_eq!(x.len(), m.ncols());
         assert_eq!(y.len(), m.nrows());
@@ -67,6 +63,86 @@ impl<S: Scalar> SpmvEngine<S> for Csr5Like<S> {
         }
         if carry_row != usize::MAX {
             y[carry_row] += carry;
+        }
+    }
+
+    /// Two-phase SIMD walk mirroring real CSR5: each tile's products
+    /// `vals[idx] * x[col[idx]]` are computed in `W`-wide packs into a
+    /// tile-local buffer, then the (inherently serial) segmented sum
+    /// adds them into the carry. Splitting fma into mul-then-add
+    /// re-associates each row's rounding chain, so this leg matches
+    /// [`Self::spmv_scalar`] to 1e-9-relative, **not** bitwise — the
+    /// one engine where the simd contract is allclose.
+    pub fn spmv_simd(&self, x: &[S], y: &mut [S]) {
+        match lane_width(S::BYTES) {
+            16 => self.spmv_packed::<16>(x, y),
+            8 => self.spmv_packed::<8>(x, y),
+            4 => self.spmv_packed::<4>(x, y),
+            _ => self.spmv_packed::<2>(x, y),
+        }
+    }
+
+    fn spmv_packed<const W: usize>(&self, x: &[S], y: &mut [S]) {
+        let m = &self.m;
+        assert_eq!(x.len(), m.ncols());
+        assert_eq!(y.len(), m.nrows());
+        y.fill(S::ZERO);
+        let nnz = m.nnz();
+        let tile = Self::tile_size();
+        let mut products = [S::ZERO; OMEGA * SIGMA];
+        let mut k = 0usize;
+        let mut carry_row = usize::MAX;
+        let mut carry = S::ZERO;
+        while k < nnz {
+            let end = (k + tile).min(nnz);
+            let len = end - k;
+            // Phase 1: vectorized product pass over the tile.
+            let mut j = 0;
+            while j + W <= len {
+                let v = Pack::<S, W>::load(&m.vals[k + j..k + j + W]);
+                let mut xg = [S::ZERO; W];
+                let mut l = 0;
+                while l < W {
+                    xg[l] = x[m.col_idx[k + j + l] as usize];
+                    l += 1;
+                }
+                v.mul(Pack(xg)).store(&mut products[j..j + W]);
+                j += W;
+            }
+            while j < len {
+                products[j] = m.vals[k + j] * x[m.col_idx[k + j] as usize];
+                j += 1;
+            }
+            // Phase 2: serial segmented sum over the buffered products.
+            for (off, &p) in products[..len].iter().enumerate() {
+                let r = self.row_of_nnz[k + off] as usize;
+                if r != carry_row {
+                    if carry_row != usize::MAX {
+                        y[carry_row] += carry;
+                    }
+                    carry_row = r;
+                    carry = S::ZERO;
+                }
+                carry += p;
+            }
+            k = end;
+        }
+        if carry_row != usize::MAX {
+            y[carry_row] += carry;
+        }
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for Csr5Like<S> {
+    fn name(&self) -> &'static str {
+        "csr5"
+    }
+
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        if cfg!(feature = "simd") {
+            self.spmv_simd(x, y)
+        } else {
+            self.spmv_scalar(x, y)
         }
     }
 
@@ -105,6 +181,22 @@ mod tests {
     fn validates_skewed() {
         let m = circuit::<f32>(500, 4, 0.08, 31);
         validate_engine(&Csr5Like::new(&m), &m);
+    }
+
+    #[test]
+    fn simd_leg_allclose_to_scalar() {
+        use crate::util::check::assert_allclose;
+        let m = circuit::<f64>(800, 5, 0.06, 17);
+        let e = Csr5Like::new(&m);
+        let n = m.ncols();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 11 + 4) % 41) as f64 * 0.0625 - 1.25).collect();
+        let mut y_s = vec![0.0; m.nrows()];
+        let mut y_v = vec![0.0; m.nrows()];
+        e.spmv_scalar(&x, &mut y_s);
+        e.spmv_simd(&x, &mut y_v);
+        // mul-then-add vs fma re-associates per-row rounding: allclose,
+        // not assert_eq, by design.
+        assert_allclose(&y_v, &y_s, 1e-9, 1e-12).unwrap();
     }
 
     #[test]

@@ -6,6 +6,7 @@
 use super::SpmvEngine;
 use crate::sparse::csr::Csr;
 use crate::sparse::scalar::Scalar;
+use crate::util::lanes::{lane_width, Pack};
 
 pub const WARP: usize = 32;
 
@@ -17,14 +18,9 @@ impl<S: Scalar> CsrVector<S> {
     pub fn new(m: &Csr<S>) -> Self {
         Self { m: m.clone() }
     }
-}
 
-impl<S: Scalar> SpmvEngine<S> for CsrVector<S> {
-    fn name(&self) -> &'static str {
-        "cusparse-alg1"
-    }
-
-    fn spmv(&self, x: &[S], y: &mut [S]) {
+    /// Reference warp model: strided lane accumulation entry by entry.
+    pub fn spmv_scalar(&self, x: &[S], y: &mut [S]) {
         let m = &self.m;
         assert_eq!(x.len(), m.ncols());
         assert_eq!(y.len(), m.nrows());
@@ -37,16 +33,86 @@ impl<S: Scalar> SpmvEngine<S> for CsrVector<S> {
                 let lane = k % WARP;
                 lanes[lane] = v.mul_add(x[c as usize], lanes[lane]);
             }
-            // Tree reduction (shfl_down order).
-            let mut width = WARP / 2;
-            while width > 0 {
-                for l in 0..width {
-                    let other = lanes[l + width];
-                    lanes[l] += other;
+            Self::reduce_warp(&mut lanes, &mut y[i]);
+        }
+    }
+
+    /// SIMD warp model: each 32-entry stride group updates the lane
+    /// registers in `W`-wide packs (contiguous val loads + x gathers).
+    /// Entry `k` still lands on lane `k % WARP` with groups processed
+    /// in ascending `k`, so every lane's fused chain — and the final
+    /// tree reduction — is bit-identical to [`Self::spmv_scalar`],
+    /// unconditionally (no padding trick involved).
+    pub fn spmv_simd(&self, x: &[S], y: &mut [S]) {
+        match lane_width(S::BYTES) {
+            16 => self.spmv_packed::<16>(x, y),
+            8 => self.spmv_packed::<8>(x, y),
+            4 => self.spmv_packed::<4>(x, y),
+            _ => self.spmv_packed::<2>(x, y),
+        }
+    }
+
+    fn spmv_packed<const W: usize>(&self, x: &[S], y: &mut [S]) {
+        let m = &self.m;
+        assert_eq!(x.len(), m.ncols());
+        assert_eq!(y.len(), m.nrows());
+        let mut lanes = [S::ZERO; WARP];
+        for i in 0..m.nrows() {
+            let (cols, vals) = m.row(i);
+            lanes.fill(S::ZERO);
+            let mut k = 0;
+            while k < cols.len() {
+                // `k` is a multiple of WARP, so entry k+j maps to lane j.
+                let g = (cols.len() - k).min(WARP);
+                let mut j = 0;
+                while j + W <= g {
+                    let mut acc = Pack::<S, W>::load(&lanes[j..j + W]);
+                    let v = Pack::load(&vals[k + j..k + j + W]);
+                    let mut xg = [S::ZERO; W];
+                    let mut l = 0;
+                    while l < W {
+                        xg[l] = x[cols[k + j + l] as usize];
+                        l += 1;
+                    }
+                    acc = v.mul_add(Pack(xg), acc);
+                    acc.store(&mut lanes[j..j + W]);
+                    j += W;
                 }
-                width /= 2;
+                while j < g {
+                    lanes[j] = vals[k + j].mul_add(x[cols[k + j] as usize], lanes[j]);
+                    j += 1;
+                }
+                k += g;
             }
-            y[i] = lanes[0];
+            Self::reduce_warp(&mut lanes, &mut y[i]);
+        }
+    }
+
+    /// Tree reduction (shfl_down order) shared by both legs.
+    #[inline(always)]
+    fn reduce_warp(lanes: &mut [S; WARP], out: &mut S) {
+        let mut width = WARP / 2;
+        while width > 0 {
+            for l in 0..width {
+                let other = lanes[l + width];
+                lanes[l] += other;
+            }
+            width /= 2;
+        }
+        *out = lanes[0];
+    }
+}
+
+impl<S: Scalar> SpmvEngine<S> for CsrVector<S> {
+    fn name(&self) -> &'static str {
+        "cusparse-alg1"
+    }
+
+    fn spmv(&self, x: &[S], y: &mut [S]) {
+        if cfg!(feature = "simd") {
+            self.spmv_simd(x, y)
+        } else {
+            self.spmv_scalar(x, y)
         }
     }
 
@@ -80,6 +146,21 @@ mod tests {
     fn validates_on_irregular() {
         let m = unstructured_mesh::<f64>(20, 20, 0.5, 5);
         validate_engine(&CsrVector::new(&m), &m);
+    }
+
+    #[test]
+    fn simd_warp_model_bit_identical_to_scalar() {
+        for &(nx, ny, seed) in &[(20usize, 20usize, 5u64), (13, 17, 9)] {
+            let m = unstructured_mesh::<f64>(nx, ny, 0.5, seed);
+            let e = CsrVector::new(&m);
+            let n = m.ncols();
+            let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 2) % 37) as f64 * 0.125 - 2.0).collect();
+            let mut y_s = vec![0.0; m.nrows()];
+            let mut y_v = vec![0.0; m.nrows()];
+            e.spmv_scalar(&x, &mut y_s);
+            e.spmv_simd(&x, &mut y_v);
+            assert_eq!(y_s, y_v);
+        }
     }
 
     #[test]

@@ -24,12 +24,35 @@
 //!   ([`SpmvEngine::spmv_batch`]) runs over borrowed
 //!   [`VecBatch`]/[`VecBatchMut`] views and stages the whole batch in
 //!   **one** contiguous scratch allocation per side.
+//! * **SIMD lanes** — the ELL walk, the ER tail, and the blocked SpMM
+//!   all have lane-packed twins ([`crate::util::lanes`]) that process
+//!   [`lane_width`] output rows per step, selected by the on-by-default
+//!   `simd` cargo feature. Every output row keeps its own k-ordered
+//!   fused chain, so the simd walks are **bit-identical** to the scalar
+//!   ones (proptested in `rust/tests/simd.rs`); both variants are
+//!   always compiled and publicly callable
+//!   ([`EhybCpu::spmv_new_order_scalar`] /
+//!   [`EhybCpu::spmv_new_order_simd`]) so one binary benches the pair.
+//!
+//! The engine also implements [`PermutedSpmv`], exposing its internal
+//! permutation and the raw new-order kernels so the reorder adapter
+//! ([`crate::reorder::ReorderedEngine`]) can *fuse* its own permutation
+//! with EHYB's into one gather per side instead of two passes over x.
 
-use super::{SpmvEngine, VecBatch, VecBatchMut};
+use super::{PermutedSpmv, SpmvEngine, VecBatch, VecBatchMut};
 use crate::sparse::ehyb::EhybMatrix;
 use crate::sparse::scalar::Scalar;
+use crate::util::lanes::{lane_width, Pack};
 use crate::util::par;
 use std::sync::Mutex;
+
+/// Feature-selected default for the kernel dispatchers: the `simd`
+/// cargo feature only flips this bool — both kernel variants are
+/// always compiled.
+#[inline(always)]
+fn simd_default() -> bool {
+    cfg!(feature = "simd")
+}
 
 /// Stack-accumulator bound: slice heights are warp-sized (≤ 64).
 const MAX_H: usize = 64;
@@ -146,10 +169,26 @@ impl<S: Scalar> EhybCpu<S> {
     /// through the arrays) is kept as [`Self::spmv_new_order_lane_major`]
     /// for the before/after log in EXPERIMENTS.md §Perf.
     pub fn spmv_new_order(&self, xp: &[S], yp: &mut [S]) {
+        self.spmv_new_order_with(xp, yp, simd_default());
+    }
+
+    /// Scalar reference walk, regardless of the `simd` feature.
+    pub fn spmv_new_order_scalar(&self, xp: &[S], yp: &mut [S]) {
+        self.spmv_new_order_with(xp, yp, false);
+    }
+
+    /// Lane-packed walk, regardless of the `simd` feature. Bit-identical
+    /// to [`Self::spmv_new_order_scalar`] (per-row fused chains are
+    /// preserved; see the module docs).
+    pub fn spmv_new_order_simd(&self, xp: &[S], yp: &mut [S]) {
+        self.spmv_new_order_with(xp, yp, true);
+    }
+
+    fn spmv_new_order_with(&self, xp: &[S], yp: &mut [S], simd: bool) {
         debug_assert_eq!(xp.len(), self.m.padded_rows());
         debug_assert_eq!(yp.len(), self.m.padded_rows());
-        self.ell_pass(xp, yp, 0);
-        self.er_pass(xp, yp);
+        self.ell_pass(xp, yp, 0, simd);
+        self.er_pass(xp, yp, simd);
     }
 
     /// Partition-parallel SpMV in the new index space. Each worker owns
@@ -159,20 +198,24 @@ impl<S: Scalar> EhybCpu<S> {
     /// Per-row arithmetic order is unchanged, so the result is
     /// bit-identical to [`Self::spmv_new_order`] at any thread count.
     pub fn spmv_new_order_parallel(&self, xp: &[S], yp: &mut [S]) {
+        self.spmv_new_order_parallel_with(xp, yp, simd_default());
+    }
+
+    fn spmv_new_order_parallel_with(&self, xp: &[S], yp: &mut [S], simd: bool) {
         let m = &self.m;
         debug_assert_eq!(xp.len(), m.padded_rows());
         debug_assert_eq!(yp.len(), m.padded_rows());
         let threads = par::num_threads().min(m.num_parts).max(1);
         if threads <= 1 {
-            self.ell_pass(xp, yp, 0);
+            self.ell_pass(xp, yp, 0, simd);
         } else {
             let vec_size = m.vec_size;
             let rows_per = m.num_parts.div_ceil(threads) * vec_size;
             par::par_chunks_mut(yp, rows_per, |base, chunk| {
-                self.ell_pass(xp, chunk, base / vec_size);
+                self.ell_pass(xp, chunk, base / vec_size, simd);
             });
         }
-        self.er_pass_parallel(xp, yp);
+        self.er_pass_parallel(xp, yp, simd);
     }
 
     /// Blocked multi-vector SpMM in the new index space:
@@ -185,6 +228,13 @@ impl<S: Scalar> EhybCpu<S> {
     /// order matches the single-vector kernel, so each output is
     /// bit-identical to a [`Self::spmv_new_order`] call.
     pub fn spmm_new_order(&self, xps: &[&[S]], yps: &mut [&mut [S]]) {
+        self.spmm_new_order_with(xps, yps, simd_default());
+    }
+
+    /// [`Self::spmm_new_order`] with an explicit scalar/simd selector —
+    /// the bench sweep and the simd-vs-scalar proptests call this to
+    /// compare the pair inside one binary.
+    pub fn spmm_new_order_with(&self, xps: &[&[S]], yps: &mut [&mut [S]], simd: bool) {
         assert_eq!(xps.len(), yps.len(), "batch inputs/outputs disagree");
         let m = &self.m;
         let padded = m.padded_rows();
@@ -203,7 +253,7 @@ impl<S: Scalar> EhybCpu<S> {
             par::num_threads().min(m.num_parts).max(1)
         };
         if threads <= 1 {
-            self.spmm_ell_blocks(xps, yps, 0);
+            self.spmm_ell_blocks(xps, yps, 0, simd);
         } else {
             let parts_per = m.num_parts.div_ceil(threads);
             let rows_per = parts_per * m.vec_size;
@@ -215,7 +265,7 @@ impl<S: Scalar> EhybCpu<S> {
                 .map(|c| (c * parts_per, its.iter_mut().map(|it| it.next().unwrap()).collect()))
                 .collect();
             par::par_for_each(work, |_, (p0, mut chunks)| {
-                self.spmm_ell_blocks(xps, &mut chunks, p0);
+                self.spmm_ell_blocks(xps, &mut chunks, p0, simd);
             });
         }
         // ER tail: uncached gathers + scatter-add. Lanes are disjoint
@@ -224,32 +274,32 @@ impl<S: Scalar> EhybCpu<S> {
         if threads > 1 && xps.len() > 1 && self.m.er_nnz > 0 {
             let work: Vec<(&[S], &mut [S])> =
                 xps.iter().zip(yps.iter_mut()).map(|(x, y)| (*x, &mut **y)).collect();
-            par::par_for_each(work, |_, (xp, yp)| self.er_pass(xp, yp));
+            par::par_for_each(work, |_, (xp, yp)| self.er_pass(xp, yp, simd));
         } else {
             for (xp, yp) in xps.iter().zip(yps.iter_mut()) {
-                self.er_pass(xp, yp);
+                self.er_pass(xp, yp, simd);
             }
         }
     }
 
     /// Walk the batch in register blocks of 4/2/1 over one partition
     /// chunk (`youts` are the chunk's row ranges, one per vector).
-    fn spmm_ell_blocks(&self, xps: &[&[S]], youts: &mut [&mut [S]], p0: usize) {
+    fn spmm_ell_blocks(&self, xps: &[&[S]], youts: &mut [&mut [S]], p0: usize, simd: bool) {
         debug_assert_eq!(xps.len(), youts.len());
         let mut b0 = 0;
         while b0 < xps.len() {
             // Widest block that fits the remaining lanes.
             let nb = match xps.len() - b0 {
                 n if n >= 4 => {
-                    self.spmm_parts::<4>(&xps[b0..b0 + 4], &mut youts[b0..b0 + 4], p0);
+                    self.spmm_parts::<4>(&xps[b0..b0 + 4], &mut youts[b0..b0 + 4], p0, simd);
                     4
                 }
                 n if n >= 2 => {
-                    self.spmm_parts::<2>(&xps[b0..b0 + 2], &mut youts[b0..b0 + 2], p0);
+                    self.spmm_parts::<2>(&xps[b0..b0 + 2], &mut youts[b0..b0 + 2], p0, simd);
                     2
                 }
                 _ => {
-                    self.spmm_parts::<1>(&xps[b0..b0 + 1], &mut youts[b0..b0 + 1], p0);
+                    self.spmm_parts::<1>(&xps[b0..b0 + 1], &mut youts[b0..b0 + 1], p0, simd);
                     1
                 }
             };
@@ -257,10 +307,46 @@ impl<S: Scalar> EhybCpu<S> {
         }
     }
 
+    /// Per-block scalar/simd dispatch: the lane width is a compile-time
+    /// constant inside each instantiation.
+    fn spmm_parts<const NB: usize>(
+        &self,
+        xps: &[&[S]],
+        yout: &mut [&mut [S]],
+        p0: usize,
+        simd: bool,
+    ) {
+        if simd {
+            match lane_width(S::BYTES) {
+                16 => self.spmm_parts_simd::<NB, 16>(xps, yout, p0),
+                8 => self.spmm_parts_simd::<NB, 8>(xps, yout, p0),
+                4 => self.spmm_parts_simd::<NB, 4>(xps, yout, p0),
+                _ => self.spmm_parts_simd::<NB, 2>(xps, yout, p0),
+            }
+        } else {
+            self.spmm_parts_scalar::<NB>(xps, yout, p0);
+        }
+    }
+
     /// ELL pass over the partition range starting at `p0`, writing into
     /// `yp_chunk` whose row 0 is partition `p0`'s first row. Extracted
-    /// so the serial and parallel walks share one kernel body.
-    fn ell_pass(&self, xp: &[S], yp_chunk: &mut [S], p0: usize) {
+    /// so the serial and parallel walks share one kernel body;
+    /// dispatches to the scalar or lane-packed twin.
+    fn ell_pass(&self, xp: &[S], yp_chunk: &mut [S], p0: usize, simd: bool) {
+        if simd {
+            match lane_width(S::BYTES) {
+                16 => self.ell_pass_simd::<16>(xp, yp_chunk, p0),
+                8 => self.ell_pass_simd::<8>(xp, yp_chunk, p0),
+                4 => self.ell_pass_simd::<4>(xp, yp_chunk, p0),
+                _ => self.ell_pass_simd::<2>(xp, yp_chunk, p0),
+            }
+        } else {
+            self.ell_pass_scalar(xp, yp_chunk, p0);
+        }
+    }
+
+    /// Scalar reference ELL walk (k-outer / lane-inner).
+    fn ell_pass_scalar(&self, xp: &[S], yp_chunk: &mut [S], p0: usize) {
         let m = &self.m;
         let h = m.slice_height;
         let spp = m.slices_per_part();
@@ -299,11 +385,69 @@ impl<S: Scalar> EhybCpu<S> {
         }
     }
 
+    /// Lane-packed ELL walk: `W` output rows per pack, k-inner so the
+    /// pack accumulators stay in registers for a whole slice column
+    /// stream. Each output row's fused chain is still accumulated in k
+    /// order, so the result is bit-identical to
+    /// [`Self::ell_pass_scalar`]. Lanes past the last full pack (when
+    /// `W` does not divide the slice height) run the scalar chain.
+    fn ell_pass_simd<const W: usize>(&self, xp: &[S], yp_chunk: &mut [S], p0: usize) {
+        let m = &self.m;
+        let h = m.slice_height;
+        let spp = m.slices_per_part();
+        debug_assert!(h <= MAX_H);
+        debug_assert_eq!(yp_chunk.len() % m.vec_size, 0);
+        let nparts = yp_chunk.len() / m.vec_size;
+        let mut row = 0usize;
+        for p in p0..p0 + nparts {
+            // Explicit cache: this slice of xp stays hot in L1/L2 for
+            // the whole partition (GPU: shared memory).
+            let cached = &xp[p * m.vec_size..(p + 1) * m.vec_size];
+            for ls in 0..spp {
+                let s = p * spp + ls;
+                let base = m.slice_ptr[s] as usize;
+                let w = m.slice_width[s] as usize;
+                let mut lane = 0usize;
+                while lane + W <= h {
+                    let mut acc = Pack::<S, W>::ZERO;
+                    for k in 0..w {
+                        let off = base + k * h + lane;
+                        let vals = Pack::load(&m.ell_vals[off..off + W]);
+                        // SAFETY: EhybMatrix::validate bounds every ELL
+                        // column below vec_size == cached.len(); padding
+                        // is col 0 / val 0 (branch-free).
+                        let xg = unsafe {
+                            Pack::gather_u16_unchecked(cached, &m.ell_cols[off..off + W])
+                        };
+                        acc = vals.mul_add(xg, acc);
+                    }
+                    acc.store(&mut yp_chunk[row + lane..row + lane + W]);
+                    lane += W;
+                }
+                while lane < h {
+                    let mut acc = S::ZERO;
+                    for k in 0..w {
+                        let idx = base + k * h + lane;
+                        acc = unsafe {
+                            m.ell_vals.get_unchecked(idx).mul_add(
+                                *cached.get_unchecked(*m.ell_cols.get_unchecked(idx) as usize),
+                                acc,
+                            )
+                        };
+                    }
+                    yp_chunk[row + lane] = acc;
+                    lane += 1;
+                }
+                row += h;
+            }
+        }
+    }
+
     /// Blocked ELL kernel over the partition range starting at `p0`:
     /// NB input vectors, NB disjoint output row-chunks. The val/col
     /// load per (k, lane) slot is shared by NB fused multiply-adds —
     /// the batch-width multiplier on arithmetic intensity.
-    fn spmm_parts<const NB: usize>(&self, xps: &[&[S]], yout: &mut [&mut [S]], p0: usize) {
+    fn spmm_parts_scalar<const NB: usize>(&self, xps: &[&[S]], yout: &mut [&mut [S]], p0: usize) {
         let m = &self.m;
         let h = m.slice_height;
         let spp = m.slices_per_part();
@@ -346,6 +490,72 @@ impl<S: Scalar> EhybCpu<S> {
         }
     }
 
+    /// Lane-packed blocked SpMM: NB × W pack accumulators; one val/col
+    /// pack load is shared by NB lane-wise fmas. Per-(vector, row)
+    /// chains stay k-ordered — bit-identical to
+    /// [`Self::spmm_parts_scalar`].
+    fn spmm_parts_simd<const NB: usize, const W: usize>(
+        &self,
+        xps: &[&[S]],
+        yout: &mut [&mut [S]],
+        p0: usize,
+    ) {
+        let m = &self.m;
+        let h = m.slice_height;
+        let spp = m.slices_per_part();
+        debug_assert!(h <= MAX_H);
+        debug_assert_eq!(xps.len(), NB);
+        debug_assert_eq!(yout.len(), NB);
+        debug_assert_eq!(yout[0].len() % m.vec_size, 0);
+        let nparts = yout[0].len() / m.vec_size;
+        let mut row = 0usize;
+        for p in p0..p0 + nparts {
+            let lo = p * m.vec_size;
+            let cached: [&[S]; NB] = std::array::from_fn(|b| &xps[b][lo..lo + m.vec_size]);
+            for ls in 0..spp {
+                let s = p * spp + ls;
+                let base = m.slice_ptr[s] as usize;
+                let w = m.slice_width[s] as usize;
+                let mut lane = 0usize;
+                while lane + W <= h {
+                    let mut acc = [Pack::<S, W>::ZERO; NB];
+                    for k in 0..w {
+                        let off = base + k * h + lane;
+                        let vals = Pack::load(&m.ell_vals[off..off + W]);
+                        let cols = &m.ell_cols[off..off + W];
+                        for b in 0..NB {
+                            // SAFETY: same ELL column bound as
+                            // ell_pass_simd (validate: col < vec_size).
+                            let xg = unsafe { Pack::gather_u16_unchecked(cached[b], cols) };
+                            acc[b] = vals.mul_add(xg, acc[b]);
+                        }
+                    }
+                    for (b, a) in acc.iter().enumerate() {
+                        a.store(&mut yout[b][row + lane..row + lane + W]);
+                    }
+                    lane += W;
+                }
+                while lane < h {
+                    let mut acc = [S::ZERO; NB];
+                    for k in 0..w {
+                        let idx = base + k * h + lane;
+                        let (v, c) = unsafe {
+                            (*m.ell_vals.get_unchecked(idx), *m.ell_cols.get_unchecked(idx) as usize)
+                        };
+                        for b in 0..NB {
+                            acc[b] = unsafe { v.mul_add(*cached[b].get_unchecked(c), acc[b]) };
+                        }
+                    }
+                    for b in 0..NB {
+                        yout[b][row + lane] = acc[b];
+                    }
+                    lane += 1;
+                }
+                row += h;
+            }
+        }
+    }
+
     /// ER pass over the slice range `[s0, s1)`: uncached gathers over
     /// the full xp, scatter-add through the raw `yp` pointer. Extracted
     /// so the serial tail and the parallel scatter share one kernel
@@ -357,7 +567,40 @@ impl<S: Scalar> EhybCpu<S> {
     /// `y_idx_er` target must be `< yp_len` (checked by
     /// `EhybMatrix::validate`), and no other thread may concurrently
     /// access the `yp` elements this range scatters into.
-    unsafe fn er_pass_range(&self, xp: &[S], yp: *mut S, yp_len: usize, s0: usize, s1: usize) {
+    unsafe fn er_pass_range(
+        &self,
+        xp: &[S],
+        yp: *mut S,
+        yp_len: usize,
+        s0: usize,
+        s1: usize,
+        simd: bool,
+    ) {
+        if simd {
+            match lane_width(S::BYTES) {
+                16 => self.er_pass_range_simd::<16>(xp, yp, yp_len, s0, s1),
+                8 => self.er_pass_range_simd::<8>(xp, yp, yp_len, s0, s1),
+                4 => self.er_pass_range_simd::<4>(xp, yp, yp_len, s0, s1),
+                _ => self.er_pass_range_simd::<2>(xp, yp, yp_len, s0, s1),
+            }
+        } else {
+            self.er_pass_range_scalar(xp, yp, yp_len, s0, s1);
+        }
+    }
+
+    /// Scalar ER range walk (see [`Self::er_pass_range`] for the safety
+    /// contract).
+    ///
+    /// # Safety
+    /// Same contract as [`Self::er_pass_range`].
+    unsafe fn er_pass_range_scalar(
+        &self,
+        xp: &[S],
+        yp: *mut S,
+        yp_len: usize,
+        s0: usize,
+        s1: usize,
+    ) {
         let m = &self.m;
         let h = m.slice_height;
         debug_assert!(h <= MAX_H);
@@ -391,11 +634,74 @@ impl<S: Scalar> EhybCpu<S> {
         }
     }
 
+    /// Lane-packed ER range walk: `W` ER rows accumulate per pack with
+    /// k-ordered fused chains (bit-identical to
+    /// [`Self::er_pass_range_scalar`]); the injective scatter-add stays
+    /// scalar.
+    ///
+    /// # Safety
+    /// Same contract as [`Self::er_pass_range`].
+    unsafe fn er_pass_range_simd<const W: usize>(
+        &self,
+        xp: &[S],
+        yp: *mut S,
+        yp_len: usize,
+        s0: usize,
+        s1: usize,
+    ) {
+        let m = &self.m;
+        let h = m.slice_height;
+        debug_assert!(h <= MAX_H);
+        let mut acc = [S::ZERO; MAX_H];
+        for s in s0..s1 {
+            let base = m.er_slice_ptr[s] as usize;
+            let w = m.er_slice_width[s] as usize;
+            let jmax = (m.er_rows - s * h).min(h);
+            let mut lane = 0usize;
+            while lane + W <= jmax {
+                let mut a = Pack::<S, W>::ZERO;
+                for k in 0..w {
+                    let off = base + k * h + lane;
+                    let vals = Pack::load(&m.er_vals[off..off + W]);
+                    // SAFETY: validate() bounds every er_cols entry
+                    // below padded_rows == xp.len().
+                    let xg = unsafe { Pack::gather_u32_unchecked(xp, &m.er_cols[off..off + W]) };
+                    a = vals.mul_add(xg, a);
+                }
+                a.store(&mut acc[lane..lane + W]);
+                lane += W;
+            }
+            while lane < jmax {
+                let mut a = S::ZERO;
+                for k in 0..w {
+                    let idx = base + k * h + lane;
+                    a = unsafe {
+                        m.er_vals.get_unchecked(idx).mul_add(
+                            *xp.get_unchecked(*m.er_cols.get_unchecked(idx) as usize),
+                            a,
+                        )
+                    };
+                }
+                acc[lane] = a;
+                lane += 1;
+            }
+            for lane in 0..jmax {
+                let out = m.y_idx_er[s * h + lane] as usize;
+                // Always-on, as in the scalar walk: malformed targets
+                // panic, never write out of bounds.
+                assert!(out < yp_len, "yIdxER target {out} out of bounds {yp_len}");
+                unsafe { *yp.add(out) += acc[lane] };
+            }
+        }
+    }
+
     /// Serial ER tail over every slice.
-    fn er_pass(&self, xp: &[S], yp: &mut [S]) {
+    fn er_pass(&self, xp: &[S], yp: &mut [S], simd: bool) {
         // SAFETY: exclusive &mut access to all of yp; validate() bounds
         // every y_idx_er target below padded_rows == yp.len().
-        unsafe { self.er_pass_range(xp, yp.as_mut_ptr(), yp.len(), 0, self.m.er_slice_width.len()) }
+        unsafe {
+            self.er_pass_range(xp, yp.as_mut_ptr(), yp.len(), 0, self.m.er_slice_width.len(), simd)
+        }
     }
 
     /// Parallel ER scatter: ER slice ranges split across worker
@@ -408,11 +714,11 @@ impl<S: Scalar> EhybCpu<S> {
     /// pairwise-disjoint `yp` entries. Each row still gets exactly one
     /// k-ordered accumulate plus one add, so the result is bit-identical
     /// to the serial [`Self::er_pass`].
-    fn er_pass_parallel(&self, xp: &[S], yp: &mut [S]) {
+    fn er_pass_parallel(&self, xp: &[S], yp: &mut [S], simd: bool) {
         let nslices = self.m.er_slice_width.len();
         let threads = par::num_threads().min(nslices).max(1);
         if threads <= 1 || !self.er_scatter_disjoint {
-            return self.er_pass(xp, yp);
+            return self.er_pass(xp, yp, simd);
         }
         let len = yp.len();
         let base = SendPtr(yp.as_mut_ptr());
@@ -427,7 +733,7 @@ impl<S: Scalar> EhybCpu<S> {
             // y_idx_er targets, disjoint from every other worker's by
             // injectivity, through the raw pointer (no aliasing &mut
             // slices are formed). xp and the matrix are only read.
-            unsafe { self.er_pass_range(xp, base.0, len, s0, s1) };
+            unsafe { self.er_pass_range(xp, base.0, len, s0, s1, simd) };
         });
     }
 
@@ -506,6 +812,34 @@ impl<S: Scalar> EhybCpu<S> {
     }
 }
 
+impl<S: Scalar> PermutedSpmv<S> for EhybCpu<S> {
+    fn padded_len(&self) -> usize {
+        self.m.padded_rows()
+    }
+
+    fn inner_perm(&self) -> &[u32] {
+        &self.m.perm
+    }
+
+    fn inner_iperm(&self) -> &[u32] {
+        &self.m.iperm
+    }
+
+    fn spmv_permuted(&self, xq: &[S], yq: &mut [S]) {
+        assert_eq!(xq.len(), self.m.padded_rows());
+        assert_eq!(yq.len(), self.m.padded_rows());
+        if self.want_parallel() {
+            self.spmv_new_order_parallel(xq, yq);
+        } else {
+            self.spmv_new_order(xq, yq);
+        }
+    }
+
+    fn spmv_batch_permuted(&self, xqs: &[&[S]], yqs: &mut [&mut [S]]) {
+        self.spmm_new_order(xqs, yqs);
+    }
+}
+
 impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
     fn name(&self) -> &'static str {
         "ehyb"
@@ -559,6 +893,9 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
     }
     fn format_bytes(&self) -> usize {
         self.m.bytes()
+    }
+    fn permuted_kernel(&self) -> Option<&dyn PermutedSpmv<S>> {
+        Some(self)
     }
 }
 
@@ -720,6 +1057,67 @@ mod tests {
         engine.spmv_new_order(&xp, &mut y_ser);
         engine.spmv_new_order_parallel(&xp, &mut y_par);
         assert_eq!(y_ser, y_par);
+    }
+
+    #[test]
+    fn simd_walk_bit_identical_to_scalar() {
+        // The lane-packed ELL walk and ER tail preserve each row's
+        // k-ordered fused chain, so simd == scalar bit-for-bit — on an
+        // ER-heavy matrix too, and for both scalar types.
+        for &(nodes, hubs) in &[(900usize, 15usize), (2_000, 23)] {
+            let m = circuit::<f64>(nodes, 4, 0.05, hubs);
+            let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+            let engine = EhybCpu::new(&plan);
+            let xp = plan.matrix.permute_x(
+                &(0..m.nrows()).map(|i| ((i * 13 + 7) % 31) as f64 * 0.125 - 1.5).collect::<Vec<_>>(),
+            );
+            let mut y_sc = vec![0.0; plan.matrix.padded_rows()];
+            let mut y_simd = vec![0.0; plan.matrix.padded_rows()];
+            engine.spmv_new_order_scalar(&xp, &mut y_sc);
+            engine.spmv_new_order_simd(&xp, &mut y_simd);
+            assert_eq!(y_sc, y_simd, "nodes={nodes}");
+        }
+        let m = poisson2d::<f32>(40, 40);
+        let plan = EhybPlan::build(&m, &cfg(96)).unwrap();
+        let engine = EhybCpu::new(&plan);
+        let xp = plan.matrix.permute_x(
+            &(0..m.nrows()).map(|i| ((i * 7 + 3) % 17) as f32 * 0.25 - 2.0).collect::<Vec<_>>(),
+        );
+        let mut y_sc = vec![0.0f32; plan.matrix.padded_rows()];
+        let mut y_simd = vec![0.0f32; plan.matrix.padded_rows()];
+        engine.spmv_new_order_scalar(&xp, &mut y_sc);
+        engine.spmv_new_order_simd(&xp, &mut y_simd);
+        assert_eq!(y_sc, y_simd, "f32");
+    }
+
+    #[test]
+    fn spmm_simd_bit_identical_to_scalar() {
+        let m = unstructured_mesh::<f64>(28, 28, 0.6, 11);
+        let plan = EhybPlan::build(&m, &cfg(64)).unwrap();
+        let engine = EhybCpu::new(&plan);
+        let padded = plan.matrix.padded_rows();
+        // Width 7 exercises the 4/2/1 block dispatch in both variants.
+        let xps: Vec<Vec<f64>> = (0..7)
+            .map(|t| {
+                plan.matrix.permute_x(
+                    &(0..m.nrows())
+                        .map(|i| ((i * 5 + t * 13) % 19) as f64 * 0.5 - 2.0)
+                        .collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        let xrefs: Vec<&[f64]> = xps.iter().map(|v| v.as_slice()).collect();
+        let mut y_sc = vec![vec![0.0f64; padded]; 7];
+        let mut y_simd = vec![vec![0.0f64; padded]; 7];
+        {
+            let mut yr: Vec<&mut [f64]> = y_sc.iter_mut().map(|v| v.as_mut_slice()).collect();
+            engine.spmm_new_order_with(&xrefs, &mut yr, false);
+        }
+        {
+            let mut yr: Vec<&mut [f64]> = y_simd.iter_mut().map(|v| v.as_mut_slice()).collect();
+            engine.spmm_new_order_with(&xrefs, &mut yr, true);
+        }
+        assert_eq!(y_sc, y_simd);
     }
 
     #[test]

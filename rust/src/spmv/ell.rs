@@ -17,6 +17,16 @@ impl<S: Scalar> EllEngine<S> {
         let nnz = m.nnz();
         Self { e, nnz }
     }
+    /// Explicit scalar leg (the trait `spmv` dispatches on the `simd`
+    /// feature; this twin is always available for tests/benches).
+    pub fn spmv_scalar(&self, x: &[S], y: &mut [S]) {
+        self.e.spmv_scalar(x, y);
+    }
+    /// Explicit SIMD leg — bitwise equal to the scalar twin for finite
+    /// `x` (see [`Ell::spmv_simd`]).
+    pub fn spmv_simd(&self, x: &[S], y: &mut [S]) {
+        self.e.spmv_simd(x, y);
+    }
 }
 
 impl<S: Scalar> SpmvEngine<S> for EllEngine<S> {

@@ -14,6 +14,16 @@ impl<S: Scalar> HybEngine<S> {
     pub fn new(m: &Csr<S>) -> Self {
         Self { h: Hyb::from_csr_auto(m, 2.0 / 3.0), nrows: m.nrows() }
     }
+    /// Explicit scalar leg (the trait `spmv` dispatches on the `simd`
+    /// feature; this twin is always available for tests/benches).
+    pub fn spmv_scalar(&self, x: &[S], y: &mut [S]) {
+        self.h.spmv_scalar(x, y);
+    }
+    /// Explicit SIMD leg — ELL part packed, COO tail shared; bitwise
+    /// equal to the scalar twin for finite `x` (see [`Hyb::spmv_simd`]).
+    pub fn spmv_simd(&self, x: &[S], y: &mut [S]) {
+        self.h.spmv_simd(x, y);
+    }
 }
 
 impl<S: Scalar> SpmvEngine<S> for HybEngine<S> {

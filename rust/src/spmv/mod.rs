@@ -95,6 +95,37 @@ pub trait SpmvEngine<S: Scalar>: Send + Sync {
     fn nnz(&self) -> usize;
     /// Device-memory bytes the format occupies (traffic-model input).
     fn format_bytes(&self) -> usize;
+    /// The engine's internally-permuted kernel, when it has one.
+    /// Engines that permute vectors internally (EHYB permutes into its
+    /// partitioned new order on every call) expose it here so outer
+    /// permutation adapters ([`crate::reorder::ReorderedEngine`]) can
+    /// **fuse** both permutations into one gather per side instead of
+    /// two full passes over x and y. Default: no internal permutation.
+    fn permuted_kernel(&self) -> Option<&dyn PermutedSpmv<S>> {
+        None
+    }
+}
+
+/// Capability trait for engines whose `spmv` is really
+/// `permute_in → kernel → permute_out`: exposes the internal
+/// permutation pair and the raw kernel so a wrapping adapter can
+/// compose its own permutation with the engine's at build time
+/// (gather fusion). The kernel runs in the engine's padded internal
+/// index space of [`Self::padded_len`] elements.
+pub trait PermutedSpmv<S: Scalar>: Send + Sync {
+    /// Length of kernel-order vectors (≥ `nrows`; padding included).
+    fn padded_len(&self) -> usize;
+    /// `perm[old] = kernel index`; `len == nrows`.
+    fn inner_perm(&self) -> &[u32];
+    /// `iperm[kernel index] = old` (values `≥ nrows` mark padding
+    /// slots); `len == padded_len`.
+    fn inner_iperm(&self) -> &[u32];
+    /// Run the kernel directly in internal index space:
+    /// `yq = A_kernel xq`, both of [`Self::padded_len`] elements.
+    fn spmv_permuted(&self, xq: &[S], yq: &mut [S]);
+    /// Batched kernel in internal index space; every slice must be
+    /// [`Self::padded_len`] long.
+    fn spmv_batch_permuted(&self, xqs: &[&[S]], yqs: &mut [&mut [S]]);
 }
 
 /// GFLOPS for `secs` per SpMV at this engine's nnz (2 flops per entry —

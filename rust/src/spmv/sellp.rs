@@ -17,6 +17,16 @@ impl<S: Scalar> SellPEngine<S> {
     pub fn with_slice_height(m: &Csr<S>, h: usize) -> Self {
         Self { s: SellP::from_csr(m, h), nnz: m.nnz() }
     }
+    /// Explicit scalar leg (the trait `spmv` dispatches on the `simd`
+    /// feature; this twin is always available for tests/benches).
+    pub fn spmv_scalar(&self, x: &[S], y: &mut [S]) {
+        self.s.spmv_scalar(x, y);
+    }
+    /// Explicit SIMD leg — bitwise equal to the scalar twin for finite
+    /// `x` (see [`SellP::spmv_simd`]).
+    pub fn spmv_simd(&self, x: &[S], y: &mut [S]) {
+        self.s.spmv_simd(x, y);
+    }
 }
 
 impl<S: Scalar> SpmvEngine<S> for SellPEngine<S> {

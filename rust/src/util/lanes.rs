@@ -1,0 +1,234 @@
+//! Portable SIMD lane abstraction for the hot kernels (the `simd`
+//! cargo feature's implementation layer).
+//!
+//! `std::simd` is still nightly-only and the crate's MSRV is 1.75, so
+//! this module is the stable stand-in: a fixed-width value pack
+//! ([`Pack`]) whose per-element operations are written so LLVM's
+//! auto-vectorizer lowers them to vector instructions on every tier-1
+//! target (the arrays are register-sized, the loops are
+//! `W`-trip-count-known, and every method is `#[inline(always)]`).
+//! Kernels are generic over `const W: usize` and dispatched once per
+//! call through [`lane_width`], so the lane count is a compile-time
+//! constant inside every loop body.
+//!
+//! Two properties the kernel rewrites rely on:
+//!
+//! * **Per-lane fma chains are preserved.** [`Pack::mul_add`] applies
+//!   [`Scalar::mul_add`] lane-wise, so a kernel that assigns each
+//!   output row to a fixed lane keeps that row's k-ordered fused chain
+//!   bit-identical to the scalar walk — this is what makes the
+//!   simd-vs-scalar proptests *bitwise* for the lane-parallel engines
+//!   (EHYB ELL/ER, SELL-P, ELL, the csr-vector warp model, blocked
+//!   SpMM).
+//! * **Padding is a bitwise no-op for finite data.** Formats that pad
+//!   with `val = +0.0` can gather pad slots from `x[0]` instead of
+//!   branching: `fma(+0.0, x, acc)` returns `acc` bit-for-bit whenever
+//!   `x` is finite, because `+0.0 * x` is `±0.0` and `acc + ±0.0 == acc`
+//!   for every `acc` that is not `-0.0` — and an accumulator chain
+//!   seeded with `+0.0` over finite fmas can never produce `-0.0`
+//!   (IEEE 754 round-to-nearest only yields `-0.0` from a sum when
+//!   both addends are `-0.0`). Non-finite x entries at *pad* slots
+//!   would break this (`0 * inf = NaN`), which is why the per-kind
+//!   test docs state "bitwise for finite inputs".
+
+use crate::sparse::scalar::Scalar;
+
+/// Vector register width in bytes for the compile target: 64 when
+/// AVX-512 is enabled, 32 for AVX/AVX2, 16 otherwise (SSE2 baseline on
+/// x86-64, NEON on aarch64). `cfg!` resolves at compile time, so this
+/// is a true constant.
+pub const fn simd_bytes() -> usize {
+    if cfg!(target_feature = "avx512f") {
+        64
+    } else if cfg!(any(target_feature = "avx2", target_feature = "avx")) {
+        32
+    } else {
+        16
+    }
+}
+
+/// Lanes per [`Pack`] for a scalar of `scalar_bytes` bytes: the widest
+/// native vector divided by the element size, clamped to the
+/// `{2, 4, 8, 16}` widths the kernels instantiate (f64: 2–8,
+/// f32: 4–16).
+pub const fn lane_width(scalar_bytes: usize) -> usize {
+    let w = simd_bytes() / scalar_bytes;
+    if w < 2 {
+        2
+    } else if w > 16 {
+        16
+    } else {
+        w
+    }
+}
+
+/// A register-sized pack of `W` scalars. All operations are
+/// element-wise over the fixed-size array, which LLVM unrolls and
+/// vectorizes at the instantiated width.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Pack<S, const W: usize>(pub [S; W]);
+
+impl<S: Scalar, const W: usize> Pack<S, W> {
+    /// All-zero pack (`+0.0` in every lane — the identity-fma seed).
+    pub const ZERO: Self = Pack([S::ZERO; W]);
+
+    /// Broadcast one value to every lane.
+    #[inline(always)]
+    pub fn splat(v: S) -> Self {
+        Pack([v; W])
+    }
+
+    /// Load `W` consecutive elements from the front of `src`.
+    #[inline(always)]
+    pub fn load(src: &[S]) -> Self {
+        let arr: &[S; W] = src[..W].try_into().expect("Pack::load needs W elements");
+        Pack(*arr)
+    }
+
+    /// Store the pack to the front of `dst`.
+    #[inline(always)]
+    pub fn store(self, dst: &mut [S]) {
+        dst[..W].copy_from_slice(&self.0);
+    }
+
+    /// Lane-wise fused multiply-add: `self[l] * x[l] + acc[l]`. Uses
+    /// [`Scalar::mul_add`] per lane, preserving each lane's fused
+    /// rounding chain exactly as the scalar kernels compute it.
+    #[inline(always)]
+    pub fn mul_add(self, x: Self, acc: Self) -> Self {
+        let mut out = acc.0;
+        let mut l = 0;
+        while l < W {
+            out[l] = self.0[l].mul_add(x.0[l], out[l]);
+            l += 1;
+        }
+        Pack(out)
+    }
+
+    /// Lane-wise product `self[l] * rhs[l]` (unfused — used by the
+    /// CSR5 leg's two-phase product/segmented-sum split, which is why
+    /// that engine's simd-vs-scalar contract is allclose, not bitwise).
+    #[inline(always)]
+    pub fn mul(self, rhs: Self) -> Self {
+        let mut out = self.0;
+        let mut l = 0;
+        while l < W {
+            out[l] = out[l] * rhs.0[l];
+            l += 1;
+        }
+        Pack(out)
+    }
+
+    /// Gather `src[idx[l]]` for the first `W` u16 indices.
+    ///
+    /// # Safety
+    /// `idx` must hold at least `W` elements and every `idx[l] as usize`
+    /// must be `< src.len()` (the EHYB column invariant established by
+    /// `EhybMatrix::validate`: partition-local columns are `< vec_size`).
+    #[inline(always)]
+    pub unsafe fn gather_u16_unchecked(src: &[S], idx: &[u16]) -> Self {
+        debug_assert!(idx.len() >= W);
+        let mut out = [S::ZERO; W];
+        let mut l = 0;
+        while l < W {
+            out[l] = *src.get_unchecked(*idx.get_unchecked(l) as usize);
+            l += 1;
+        }
+        Pack(out)
+    }
+
+    /// Gather `src[idx[l]]` for the first `W` u32 indices.
+    ///
+    /// # Safety
+    /// `idx` must hold at least `W` elements and every `idx[l] as usize`
+    /// must be `< src.len()`.
+    #[inline(always)]
+    pub unsafe fn gather_u32_unchecked(src: &[S], idx: &[u32]) -> Self {
+        debug_assert!(idx.len() >= W);
+        let mut out = [S::ZERO; W];
+        let mut l = 0;
+        while l < W {
+            out[l] = *src.get_unchecked(*idx.get_unchecked(l) as usize);
+            l += 1;
+        }
+        Pack(out)
+    }
+
+    /// Gather with a pad sentinel: lanes whose index equals `pad` read
+    /// `src[0]` instead (safe because the matching value lane is
+    /// `+0.0`, making the fma a bitwise no-op for finite `src` — see
+    /// the module docs). Indices are checked: a corrupt non-pad column
+    /// panics exactly like the scalar path's `x[c as usize]` would.
+    #[inline(always)]
+    pub fn gather_u32_pad0(src: &[S], idx: &[u32], pad: u32) -> Self {
+        let idx: &[u32; W] = idx[..W].try_into().expect("gather needs W indices");
+        let mut out = [S::ZERO; W];
+        let mut l = 0;
+        while l < W {
+            let c = if idx[l] == pad { 0 } else { idx[l] as usize };
+            out[l] = src[c];
+            l += 1;
+        }
+        Pack(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_are_sane() {
+        let wf64 = lane_width(8);
+        let wf32 = lane_width(4);
+        assert!(wf64 >= 2 && wf64 <= 8, "f64 width {wf64}");
+        assert!(wf32 >= 4 && wf32 <= 16, "f32 width {wf32}");
+        assert_eq!(wf32, 2 * wf64, "f32 packs twice the lanes of f64");
+        assert!(simd_bytes().is_power_of_two());
+    }
+
+    #[test]
+    fn mul_add_matches_scalar_chain() {
+        let v = Pack::<f64, 4>([1.5, -2.0, 0.25, 3.0]);
+        let x = Pack::<f64, 4>([2.0, 0.5, -4.0, 1.0 / 3.0]);
+        let mut acc = Pack::<f64, 4>::splat(0.125);
+        acc = v.mul_add(x, acc);
+        for l in 0..4 {
+            assert_eq!(acc.0[l], v.0[l].mul_add(x.0[l], 0.125), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn pad_gather_is_fma_identity_for_finite_inputs() {
+        // The invariant the SELL-P/ELL simd legs rely on: a pad slot
+        // (val = +0.0, col -> 0) leaves any reachable accumulator
+        // bit-unchanged, including negative x[0] (whose product is
+        // -0.0) and acc == +0.0.
+        for &x0 in &[3.5f64, -3.5, 0.0] {
+            for &acc in &[0.0f64, 1.25, -1.25, 1e-300, -1e-300] {
+                let r = 0.0f64.mul_add(x0, acc);
+                assert_eq!(r.to_bits(), acc.to_bits(), "x0={x0} acc={acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn gathers_pick_indexed_lanes() {
+        let src = [10.0f64, 11.0, 12.0, 13.0, 14.0];
+        let p = unsafe { Pack::<f64, 4>::gather_u16_unchecked(&src, &[4u16, 0, 2, 2]) };
+        assert_eq!(p.0, [14.0, 10.0, 12.0, 12.0]);
+        let q = unsafe { Pack::<f64, 4>::gather_u32_unchecked(&src, &[1u32, 1, 3, 0]) };
+        assert_eq!(q.0, [11.0, 11.0, 13.0, 10.0]);
+        let r = Pack::<f64, 4>::gather_u32_pad0(&src, &[2u32, u32::MAX, 0, u32::MAX], u32::MAX);
+        assert_eq!(r.0, [12.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn load_store_round_trip() {
+        let src = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let p = Pack::<f32, 4>::load(&src);
+        let mut dst = [0.0f32; 6];
+        p.store(&mut dst[1..5]);
+        assert_eq!(dst, [0.0, 1.0, 2.0, 3.0, 4.0, 0.0]);
+    }
+}

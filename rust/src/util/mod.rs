@@ -8,6 +8,7 @@ pub mod stats;
 pub mod par;
 pub mod check;
 pub mod pool;
+pub mod lanes;
 
 pub use prng::Xoshiro256;
 pub use timer::Timer;

@@ -14,8 +14,12 @@
 //! the permuted structure (that is the point — the partitioner sees
 //! the improved locality) and agree to 1e-9.
 
-use ehyb::preprocess::PreprocessConfig;
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::reorder::ReorderedEngine;
 use ehyb::shard::{ShardPlan, ShardStrategy};
+use ehyb::spmv::ehyb_cpu::EhybCpu;
+use ehyb::spmv::SpmvEngine;
+use std::sync::Arc;
 use ehyb::sparse::coo::Coo;
 use ehyb::sparse::csr::Csr;
 use ehyb::sparse::gen::{banded, unstructured_mesh};
@@ -276,6 +280,85 @@ fn reorder_shards_tune_compose_without_double_permuting() {
     let (sol, rep) = reordered.solver().cg(&b, None, &pre, &scfg).unwrap();
     assert!(rep.converged() && rep_ref.converged());
     assert_eq!(sol, sol_ref, "CG trajectory must be bitwise identical under reordering");
+}
+
+/// ISSUE 9 acceptance: the 0.9 gather-fused adapter route is the same
+/// operator, bit for bit, as the 0.8 two-pass permute route — across
+/// reorder specs, through the facade, and composed with tune/shards.
+#[test]
+fn fused_gather_bitwise_equals_two_pass_on_compositions() {
+    let m = unstructured_mesh::<f64>(22, 24, 0.6, 19);
+    let n = m.nrows();
+    let x: Vec<f64> = (0..n).map(|i| ((i * 5 + 1) % 29) as f64 * 0.125 - 1.5).collect();
+    for spec in [ReorderSpec::DegreeSort, ReorderSpec::Rcm, ReorderSpec::PartitionRank { k: 0 }] {
+        let ctx = SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(cfg(64))
+            .reorder(spec)
+            .no_plan_cache()
+            .build()
+            .unwrap();
+        // Rebuild the exact same reordering + plan and run it through
+        // the explicit two-pass (0.8.0) route.
+        let r = Arc::new(ctx.reordering().expect("reordering").clone());
+        let pm = ctx.reordered_matrix().expect("reordered matrix").clone();
+        let plan = EhybPlan::build(&pm, &cfg(64)).unwrap();
+        let inner: Arc<dyn SpmvEngine<f64>> = Arc::new(EhybCpu::new(&plan));
+        let fused = ReorderedEngine::new(inner.clone(), r.clone());
+        let two = ReorderedEngine::with_fusion(inner, r, false);
+        assert!(fused.is_fused(), "EHYB inner must fuse under {spec:?}");
+        assert!(!two.is_fused());
+        let mut y_f = vec![0.0; n];
+        let mut y_two = vec![0.0; n];
+        fused.spmv(&x, &mut y_f);
+        two.spmv(&x, &mut y_two);
+        assert_eq!(y_f, y_two, "fused != two-pass under {spec:?}");
+        // The facade's automatically-fused engine is that operator too.
+        assert_eq!(ctx.spmv_alloc(&x).unwrap(), y_two, "facade route under {spec:?}");
+        // Batch path: fused single-gather batch vs two-pass blocked SpMM.
+        let mut xs = BatchBuf::<f64>::zeros(n, 3);
+        for b in 0..3 {
+            for i in 0..n {
+                xs.col_mut(b)[i] = ((i * 3 + b * 13 + 2) % 17) as f64 * 0.25 - 2.0;
+            }
+        }
+        let mut ys_f = BatchBuf::<f64>::zeros(n, 3);
+        let mut ys_t = BatchBuf::<f64>::zeros(n, 3);
+        {
+            let mut v = ys_f.view_mut();
+            fused.spmv_batch(xs.view(), &mut v);
+        }
+        {
+            let mut v = ys_t.view_mut();
+            two.spmv_batch(xs.view(), &mut v);
+        }
+        for b in 0..3 {
+            assert_eq!(ys_f.col(b), ys_t.col(b), "batch lane {b} under {spec:?}");
+        }
+        // × tune: the tuned facade may adopt a different plan, so the
+        // contract is operator equality (1e-9), not bitwise.
+        let tuned = SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(cfg(64))
+            .reorder(spec)
+            .tune(TuneLevel::Heuristic)
+            .no_plan_cache()
+            .build()
+            .unwrap();
+        assert_allclose(&tuned.spmv_alloc(&x).unwrap(), &y_two, 1e-9, 1e-9).unwrap();
+        // × shards: ShardedEngine exposes no permuted kernel, so fusion
+        // disengages inside the shards; the composition must stay the
+        // same operator.
+        let sharded = SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(cfg(64))
+            .reorder(spec)
+            .shards(ShardSpec::Count(3))
+            .no_plan_cache()
+            .build()
+            .unwrap();
+        assert_allclose(&sharded.spmv_alloc(&x).unwrap(), &y_two, 1e-9, 1e-9).unwrap();
+    }
 }
 
 #[test]

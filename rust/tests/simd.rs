@@ -1,0 +1,249 @@
+//! SIMD gate (ISSUE 9 acceptance): scalar-vs-simd twin contracts for
+//! every engine kind, under whichever feature leg this test crate was
+//! compiled with (CI runs the suite on both `default` and
+//! `--no-default-features`).
+//!
+//! Per-kind contract (see `ehyb::util::lanes` for the two proofs the
+//! bitwise rows rely on — per-lane fma-chain preservation and the
+//! `+0.0`-pad fma identity):
+//!
+//! | kind          | simd leg                         | contract        |
+//! |---------------|----------------------------------|-----------------|
+//! | ehyb          | packed ELL walk + ER tail + SpMM | bitwise (finite)|
+//! | sellp         | lane-packed slice walk           | bitwise (finite)|
+//! | ell           | row-packed k-outer walk          | bitwise (finite)|
+//! | hyb           | ELL leg packed, COO tail shared  | bitwise (finite)|
+//! | cusparse-alg1 | packed 32-wide warp model        | bitwise, always |
+//! | csr5          | two-phase product/segmented-sum  | 1e-9 allclose   |
+//! | csr-scalar    | none — the strictly-ordered      | n/a (scalar on  |
+//! |               | reference walk stays scalar      | every leg)      |
+//! | merge         | none — control-flow dominated    | n/a (scalar on  |
+//! |               | path-splitting, stays scalar     | every leg)      |
+//!
+//! csr5 is the one allclose row: its simd leg buffers unfused products
+//! per tile before the (serial) segmented sum, re-associating each
+//! row's fma chain. Everything lane-parallel keeps per-row k-ordered
+//! fused chains and must match bit-for-bit.
+
+use ehyb::preprocess::{EhybPlan, PreprocessConfig};
+use ehyb::sparse::csr::Csr;
+use ehyb::sparse::gen::{circuit, unstructured_mesh};
+use ehyb::sparse::scalar::Scalar;
+use ehyb::spmv::csr5::Csr5Like;
+use ehyb::spmv::csr_vector::CsrVector;
+use ehyb::spmv::ehyb_cpu::EhybCpu;
+use ehyb::spmv::ell::EllEngine;
+use ehyb::spmv::hyb::HybEngine;
+use ehyb::spmv::sellp::SellPEngine;
+use ehyb::spmv::SpmvEngine;
+use ehyb::util::check::{assert_allclose, check_prop, default_cases};
+use ehyb::util::Xoshiro256;
+use ehyb::{EngineKind, SpmvContext};
+
+fn rand_matrix<S: Scalar>(rng: &mut Xoshiro256) -> Csr<S> {
+    if rng.next_below(2) == 0 {
+        let nx = 8 + rng.next_below(20);
+        let ny = 8 + rng.next_below(20);
+        unstructured_mesh(nx, ny, 0.5, rng.next_below(1000) as u64)
+    } else {
+        circuit(200 + rng.next_below(300), 3 + rng.next_below(3), 0.05, rng.next_below(1000) as u64)
+    }
+}
+
+fn rand_x<S: Scalar>(rng: &mut Xoshiro256, n: usize) -> Vec<S> {
+    (0..n).map(|_| S::from_f64(rng.range_f64(-2.0, 2.0))).collect()
+}
+
+fn twin_pair<S: Scalar>(
+    name: &str,
+    scalar: impl Fn(&[S], &mut [S]),
+    simd: impl Fn(&[S], &mut [S]),
+    x: &[S],
+    nrows: usize,
+) -> Result<(), String> {
+    let mut ys = vec![S::ZERO; nrows];
+    let mut yv = vec![S::ZERO; nrows];
+    scalar(x, &mut ys);
+    simd(x, &mut yv);
+    if ys != yv {
+        return Err(format!("{name}: simd leg is not bitwise equal to the scalar twin"));
+    }
+    Ok(())
+}
+
+/// The lane-parallel engines: every simd leg bitwise equals its scalar
+/// twin on random structures and finite inputs, f32 and f64.
+#[test]
+fn prop_simd_twins_bitwise_on_lane_parallel_kinds() {
+    fn prop<S: Scalar>(rng: &mut Xoshiro256) -> Result<(), String> {
+        let m = rand_matrix::<S>(rng);
+        let x = rand_x::<S>(rng, m.ncols());
+        let n = m.nrows();
+        let sell = SellPEngine::new(&m);
+        twin_pair("sellp", |x, y| sell.spmv_scalar(x, y), |x, y| sell.spmv_simd(x, y), &x, n)?;
+        let hybe = HybEngine::new(&m);
+        twin_pair("hyb", |x, y| hybe.spmv_scalar(x, y), |x, y| hybe.spmv_simd(x, y), &x, n)?;
+        let alg1 = CsrVector::new(&m);
+        twin_pair("alg1", |x, y| alg1.spmv_scalar(x, y), |x, y| alg1.spmv_simd(x, y), &x, n)?;
+        // Dense-width ELL only where padding stays sane (hub rows in
+        // the circuit generator would blow up nrows x max_nnz).
+        if m.max_row_nnz() <= 32 {
+            let elle = EllEngine::new(&m);
+            twin_pair("ell", |x, y| elle.spmv_scalar(x, y), |x, y| elle.spmv_simd(x, y), &x, n)?;
+        }
+        Ok(())
+    }
+    check_prop("simd-twins-bitwise-f64", 0x51, default_cases(), prop::<f64>);
+    check_prop("simd-twins-bitwise-f32", 0x52, default_cases(), prop::<f32>);
+}
+
+/// EHYB: the packed ELL walk + ER tail and the register-blocked SpMM
+/// are bitwise against their scalar twins in the kernel (new-order)
+/// index space.
+#[test]
+fn prop_ehyb_simd_twins_bitwise() {
+    fn prop<S: Scalar>(rng: &mut Xoshiro256) -> Result<(), String> {
+        let m = rand_matrix::<S>(rng);
+        let plan =
+            EhybPlan::build(&m, &PreprocessConfig::default()).map_err(|e| format!("{e:#}"))?;
+        let e = EhybCpu::new(&plan);
+        let padded = plan.matrix.padded_rows();
+        let xp = rand_x::<S>(rng, padded);
+        let mut ys = vec![S::ZERO; padded];
+        let mut yv = vec![S::ZERO; padded];
+        e.spmv_new_order_scalar(&xp, &mut ys);
+        e.spmv_new_order_simd(&xp, &mut yv);
+        if ys != yv {
+            return Err("ehyb ELL walk + ER tail: simd leg not bitwise".into());
+        }
+        // Register-blocked SpMM, 3 vectors (drives the NB=2+1 blocks).
+        let xs: Vec<Vec<S>> = (0..3).map(|_| rand_x::<S>(rng, padded)).collect();
+        let xrefs: Vec<&[S]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut ys_b: Vec<Vec<S>> = (0..3).map(|_| vec![S::ZERO; padded]).collect();
+        let mut yv_b: Vec<Vec<S>> = (0..3).map(|_| vec![S::ZERO; padded]).collect();
+        {
+            let mut yrefs: Vec<&mut [S]> = ys_b.iter_mut().map(|v| v.as_mut_slice()).collect();
+            e.spmm_new_order_with(&xrefs, &mut yrefs, false);
+        }
+        {
+            let mut yrefs: Vec<&mut [S]> = yv_b.iter_mut().map(|v| v.as_mut_slice()).collect();
+            e.spmm_new_order_with(&xrefs, &mut yrefs, true);
+        }
+        if ys_b != yv_b {
+            return Err("ehyb blocked SpMM: simd leg not bitwise".into());
+        }
+        Ok(())
+    }
+    check_prop("ehyb-simd-bitwise-f64", 0x53, default_cases(), prop::<f64>);
+    check_prop("ehyb-simd-bitwise-f32", 0x54, default_cases(), prop::<f32>);
+}
+
+/// CSR5's two-phase simd leg re-associates fma into mul-then-add:
+/// allclose to the scalar twin (and to the f64 oracle), never asserted
+/// bitwise — that looseness is the documented contract for this kind.
+#[test]
+fn prop_csr5_simd_twin_allclose() {
+    fn prop<S: Scalar>(rng: &mut Xoshiro256) -> Result<(), String> {
+        let m = rand_matrix::<S>(rng);
+        let x = rand_x::<S>(rng, m.ncols());
+        let e = Csr5Like::new(&m);
+        let mut ys = vec![S::ZERO; m.nrows()];
+        let mut yv = vec![S::ZERO; m.nrows()];
+        e.spmv_scalar(&x, &mut ys);
+        e.spmv_simd(&x, &mut yv);
+        let ys64: Vec<f64> = ys.iter().map(|v| v.to_f64()).collect();
+        let yv64: Vec<f64> = yv.iter().map(|v| v.to_f64()).collect();
+        let (rtol, atol) = if S::BYTES == 4 { (1e-4, 1e-5) } else { (1e-9, 1e-12) };
+        assert_allclose(&yv64, &ys64, rtol, atol).map_err(|e| format!("csr5 twins: {e}"))?;
+        let oracle = m.spmv_f64_oracle(&x);
+        let (rtol, atol) = if S::BYTES == 4 { (1e-3, 1e-4) } else { (1e-9, 1e-10) };
+        assert_allclose(&yv64, &oracle, rtol, atol).map_err(|e| format!("csr5 oracle: {e}"))
+    }
+    check_prop("csr5-simd-allclose-f64", 0x55, default_cases(), prop::<f64>);
+    check_prop("csr5-simd-allclose-f32", 0x56, default_cases(), prop::<f32>);
+}
+
+/// The plain `spmv` entry points must route to exactly the leg the
+/// compiled feature set selects — checked bitwise against the explicit
+/// twin on this crate's own feature leg.
+#[test]
+fn plain_entry_points_dispatch_to_the_compiled_feature_leg() {
+    let m = unstructured_mesh::<f64>(24, 24, 0.5, 77);
+    let x: Vec<f64> = (0..m.ncols()).map(|i| ((i * 13 + 5) % 23) as f64 * 0.125 - 1.0).collect();
+    let simd_on = cfg!(feature = "simd");
+    let mut y_plain = vec![0.0; m.nrows()];
+    let mut y_leg = vec![0.0; m.nrows()];
+    let mut check = |name: &str,
+                     plain: &mut dyn FnMut(&[f64], &mut [f64]),
+                     scalar: &mut dyn FnMut(&[f64], &mut [f64]),
+                     simd: &mut dyn FnMut(&[f64], &mut [f64])| {
+        plain(&x, &mut y_plain);
+        if simd_on {
+            simd(&x, &mut y_leg);
+        } else {
+            scalar(&x, &mut y_leg);
+        }
+        assert_eq!(
+            y_plain, y_leg,
+            "{name}: plain spmv must dispatch to the {} leg",
+            if simd_on { "simd" } else { "scalar" }
+        );
+    };
+    let sell = SellPEngine::new(&m);
+    check(
+        "sellp",
+        &mut |x, y| sell.spmv(x, y),
+        &mut |x, y| sell.spmv_scalar(x, y),
+        &mut |x, y| sell.spmv_simd(x, y),
+    );
+    let elle = EllEngine::new(&m);
+    check(
+        "ell",
+        &mut |x, y| elle.spmv(x, y),
+        &mut |x, y| elle.spmv_scalar(x, y),
+        &mut |x, y| elle.spmv_simd(x, y),
+    );
+    let hybe = HybEngine::new(&m);
+    check(
+        "hyb",
+        &mut |x, y| hybe.spmv(x, y),
+        &mut |x, y| hybe.spmv_scalar(x, y),
+        &mut |x, y| hybe.spmv_simd(x, y),
+    );
+    let alg1 = CsrVector::new(&m);
+    check(
+        "alg1",
+        &mut |x, y| alg1.spmv(x, y),
+        &mut |x, y| alg1.spmv_scalar(x, y),
+        &mut |x, y| alg1.spmv_simd(x, y),
+    );
+    let c5 = Csr5Like::new(&m);
+    check(
+        "csr5",
+        &mut |x, y| c5.spmv(x, y),
+        &mut |x, y| c5.spmv_scalar(x, y),
+        &mut |x, y| c5.spmv_simd(x, y),
+    );
+}
+
+/// csr-scalar and merge deliberately have no simd leg (csr-scalar is
+/// the strictly-ordered reference walk; merge's two-pointer path split
+/// is control-flow dominated). On either feature leg they must stay
+/// deterministic and oracle-exact.
+#[test]
+fn scalar_only_kinds_unchanged_by_the_feature_leg() {
+    let m = unstructured_mesh::<f64>(20, 22, 0.5, 31);
+    let x: Vec<f64> = (0..m.ncols()).map(|i| ((i * 7 + 2) % 19) as f64 * 0.25 - 2.0).collect();
+    let oracle = m.spmv_f64_oracle(&x);
+    for kind in [EngineKind::CsrScalar, EngineKind::Merge] {
+        let ctx = SpmvContext::builder(m.clone()).engine(kind).build().expect("build");
+        let e = ctx.engine();
+        let mut y1 = vec![0.0; m.nrows()];
+        let mut y2 = vec![0.0; m.nrows()];
+        e.spmv(&x, &mut y1);
+        e.spmv(&x, &mut y2);
+        assert_eq!(y1, y2, "{}: nondeterministic", e.name());
+        assert_allclose(&y1, &oracle, 1e-10, 1e-12)
+            .unwrap_or_else(|err| panic!("{} vs oracle: {err}", e.name()));
+    }
+}

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Perf-regression gate for the bench-smoke CI job.
+
+Compares a freshly produced ``BENCH_ci.json`` (schema ``ehyb-bench-v1``,
+written by ``cargo bench --bench hotpath -- --smoke``) against the
+committed ``BENCH_baseline.json`` and enforces two kinds of checks:
+
+1. **Cross-run regression** — per (matrix, engine-row) pair present in
+   both files, the current GFLOPS must not fall more than
+   ``MAX_REGRESSION`` below the baseline. This is a *hard* failure only
+   when the baseline declares ``"provenance": "measured"`` (i.e. it was
+   recorded on the same class of CI runner). A baseline marked
+   ``"estimated"`` produces advisory warnings instead, because absolute
+   numbers from a different host class would gate on noise. Promote the
+   baseline by re-recording it from a CI artifact and flipping the
+   provenance field.
+
+2. **Within-run scalar-vs-simd pairs** — always hard, host-independent:
+   both legs ran seconds apart in the same process, so the simd row of
+   each ``PAIR_PREFIXES`` entry must reach at least ``PAIR_TOLERANCE``
+   of its scalar twin. This is the gate that catches a SIMD leg
+   silently degrading into (or below) the scalar walk.
+
+Rows present in only one file (e.g. host-dependent ``sharded<K>-*``
+names) are skipped and counted, never failed: the smoke sweep grows
+over time and the baseline must not block adding rows.
+
+Usage: ``bench_check.py BENCH_baseline.json BENCH_ci.json``
+Exit status: 0 ok, 1 hard failure, 2 usage/schema error.
+"""
+
+import json
+import sys
+
+SCHEMA = "ehyb-bench-v1"
+# Hard-fail when a measured baseline row regresses by more than this.
+MAX_REGRESSION = 0.25
+# Within one run, a simd leg must reach this fraction of its scalar
+# twin (slack for timer noise on short smoke reps).
+PAIR_TOLERANCE = 0.98
+# Engine-row prefixes whose `<prefix>-simd` must keep up with
+# `<prefix>-scalar` in the same run.
+PAIR_PREFIXES = ["ehyb-ellwalk", "ehyb-spmm4"]
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"bench_check: cannot read {path}: {e}")
+    if doc.get("schema") != SCHEMA:
+        sys.exit(f"bench_check: {path}: schema {doc.get('schema')!r} != {SCHEMA!r}")
+    return doc
+
+
+def rows(doc):
+    """{(matrix, engine): gflops} across all cases."""
+    out = {}
+    for case in doc.get("cases", []):
+        for name, g in case.get("gflops", {}).items():
+            out[(case["matrix"], name)] = float(g)
+    return out
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    base_doc = load(sys.argv[1])
+    cur_doc = load(sys.argv[2])
+    measured = base_doc.get("provenance", "estimated") == "measured"
+    base = rows(base_doc)
+    cur = rows(cur_doc)
+
+    failures, warnings, compared, skipped = [], [], 0, 0
+
+    # 1. Cross-run regression against the committed baseline.
+    for key, b in sorted(base.items()):
+        if key not in cur:
+            skipped += 1
+            continue
+        compared += 1
+        c = cur[key]
+        if b > 0 and c < b * (1.0 - MAX_REGRESSION):
+            msg = (f"{key[0]} / {key[1]}: {c:.3f} GFLOPS is "
+                   f"{100 * (1 - c / b):.1f}% below baseline {b:.3f}")
+            (failures if measured else warnings).append(msg)
+
+    # 2. Within-run simd-vs-scalar pairs (always hard).
+    pair_count = 0
+    for case in cur_doc.get("cases", []):
+        g = case.get("gflops", {})
+        for prefix in PAIR_PREFIXES:
+            s, v = g.get(f"{prefix}-scalar"), g.get(f"{prefix}-simd")
+            if s is None or v is None:
+                failures.append(
+                    f"{case['matrix']}: missing {prefix}-scalar/simd pair in current run")
+                continue
+            pair_count += 1
+            if v < s * PAIR_TOLERANCE:
+                failures.append(
+                    f"{case['matrix']} / {prefix}: simd leg {v:.3f} GFLOPS trails "
+                    f"scalar twin {s:.3f} (< {PAIR_TOLERANCE:.0%})")
+
+    prov = "measured (hard gate)" if measured else "estimated (advisory)"
+    print(f"bench_check: baseline provenance {prov}; "
+          f"{compared} rows compared, {skipped} baseline rows absent from current run, "
+          f"{pair_count} simd pairs checked")
+    for w in warnings:
+        print(f"  warn: {w}")
+    for f in failures:
+        print(f"  FAIL: {f}")
+    if failures:
+        sys.exit(1)
+    print("bench_check: OK")
+
+
+if __name__ == "__main__":
+    main()
