@@ -1,0 +1,124 @@
+//! A tour of kernel-level profiling + model-drift observability (the
+//! CI profile gate runs exactly this).
+//!
+//! ```text
+//! cargo run --release --example profile
+//! ```
+//!
+//! 1. Run a small EHYB workload and read back the [`KernelProfile`]
+//!    its hot paths recorded: per-component bytes, tile reuse, padding
+//!    waste, observed GFLOPS/bandwidth.
+//! 2. Diff observation against the traffic simulator's replay of the
+//!    same plan ([`DriftReport`]) — at B=1 every compulsory stream
+//!    must tie out exactly, so uncalibrated drift is zero.
+//! 3. Probe a few engines with measured timings, least-squares-fit a
+//!    host [`Calibration`], persist it through the plan store's atomic
+//!    JSON, reload it, and show the calibrated drift report.
+//!
+//! [`KernelProfile`]: ehyb::KernelProfile
+//! [`DriftReport`]: ehyb::DriftReport
+//! [`Calibration`]: ehyb::Calibration
+
+use std::time::Instant;
+
+use ehyb::autotune::device_key;
+use ehyb::harness::report;
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::profile::CalSample;
+use ehyb::sparse::gen;
+use ehyb::{Calibration, EngineKind, PlanStore, SpmvContext};
+
+fn main() -> anyhow::Result<()> {
+    if !ehyb::profile::enabled() {
+        println!("built without the `profile` feature; nothing to observe");
+        return Ok(());
+    }
+    let cfg = PreprocessConfig { vec_size_override: Some(128), ..Default::default() };
+    let m = gen::unstructured_mesh::<f64>(48, 48, 0.5, 9);
+    let x: Vec<f64> = (0..m.ncols()).map(|i| ((i * 13 + 5) % 23) as f64 * 0.125 - 1.0).collect();
+
+    // 1. Observe: the engines count their own data movement in the hot
+    //    paths — a handful of relaxed atomic adds per call.
+    let ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg.clone())
+        .build()?;
+    let mut y = vec![0.0; ctx.nrows()];
+    for _ in 0..5 {
+        ctx.spmv(&x, &mut y)?;
+    }
+    let p = ctx.profile().expect("profiled engine records");
+    println!("{}", report::profile_markdown("Observed kernel profile — ehyb", &p));
+
+    // 2. Diff: the same plan replayed through the traffic simulator.
+    //    Compulsory streams tie out exactly at B=1, so the verdict is
+    //    "within bounds" with zero component drift.
+    let d = ctx.drift().expect("unsharded context replays its plan");
+    println!("{}", report::drift_markdown("Model drift — ehyb vs traffic replay", &d));
+    anyhow::ensure!(d.max_rel_drift() == 0.0, "compulsory streams must tie out: {d:?}");
+    anyhow::ensure!(!d.exceeded(), "uncalibrated drift must stay within bounds");
+
+    // 3. Calibrate: measure a few engines with different DRAM/L2/shm
+    //    mixes, fit secs/byte per level, persist + reload.
+    let mut samples = Vec::new();
+    for kind in [EngineKind::Ehyb, EngineKind::CsrVector, EngineKind::CsrScalar, EngineKind::SellP]
+    {
+        let probe = SpmvContext::builder(m.clone()).engine(kind).config(cfg.clone()).build()?;
+        let traffic = probe.predicted_traffic().expect("unsharded probe replays");
+        let mut yp = vec![0.0; probe.nrows()];
+        probe.spmv(&x, &mut yp)?; // warm
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            probe.spmv(&x, &mut yp)?;
+        }
+        let secs = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("probe {:<11}: {:.1} us/call", kind.name(), secs * 1e6);
+        samples.push(CalSample::of(&traffic, secs));
+    }
+    let cal = Calibration::fit(&samples).expect("4 probes give a well-posed fit");
+    println!(
+        "fit          : dram {:.3e} s/B, l2 {:.3e} s/B, shm {:.3e} s/B, base {:.3e} s \
+         (residual {:.3})",
+        cal.dram_secs_per_byte,
+        cal.l2_secs_per_byte,
+        cal.shm_secs_per_byte,
+        cal.base_secs,
+        cal.residual
+    );
+
+    let dir = std::env::temp_dir().join(format!("ehyb-example-profile-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = PlanStore::new(&dir);
+    let key = device_key(&cfg.device);
+    let path = store.save_calibration(&cal, &key, "f64")?;
+    let back = store
+        .load_calibration(&key, "f64")?
+        .expect("just-saved calibration loads back");
+    anyhow::ensure!(back == cal, "calibration round trip drifted");
+    println!("persisted    : {} (round-trips bit-exact)", path.display());
+
+    // A context built with the fit applies it wherever predicted_secs
+    // is read; the drift report then judges calibrated seconds too.
+    let mut calibrated = SpmvContext::builder(m)
+        .engine(EngineKind::Ehyb)
+        .config(cfg)
+        .calibration(cal)
+        .build()?;
+    for _ in 0..5 {
+        calibrated.spmv(&x, &mut y)?;
+    }
+    let dc = calibrated.observe_drift().expect("calibrated observation");
+    println!(
+        "calibrated   : predicted {:.1} us vs observed {:.1} us per call (stamp {:.3})",
+        dc.predicted_secs * 1e6,
+        dc.observed_secs * 1e6,
+        dc.stamp()
+    );
+    anyhow::ensure!(dc.calibrated, "report must mark the calibrated leg");
+    anyhow::ensure!(dc.max_rel_drift() == 0.0, "byte components still tie out");
+    std::fs::remove_dir_all(&dir).ok();
+
+    println!("ok");
+    Ok(())
+}

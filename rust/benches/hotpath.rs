@@ -129,6 +129,37 @@ fn main() {
                 );
                 engine_rows.push((name, report.gflops()));
             }
+            // Observed-vs-predicted (ISSUE 10): the profiled engines'
+            // observed bytes/lane and their relative drift against the
+            // replay land in BENCH_ci.json; scripts/bench_check.py
+            // hard-fails the smoke job when a drift-* row exceeds the
+            // 15% bound.
+            if ehyb::profile::enabled() {
+                for kind in [EngineKind::Ehyb, EngineKind::CsrVector] {
+                    let mut ctx = SpmvContext::builder(m.clone())
+                        .engine(kind)
+                        .config(cfg.clone())
+                        .build()
+                        .expect("profiled build");
+                    let x = vec![1.0f64; m.ncols()];
+                    let mut y = vec![0.0f64; m.nrows()];
+                    for _ in 0..3 {
+                        ctx.engine().spmv(&x, &mut y);
+                    }
+                    let p = ctx.profile().expect("profiled engine records");
+                    let d = ctx.observe_drift().expect("unsharded context replays");
+                    let name = format!("observed-bytes-{}", kind.name());
+                    println!(
+                        "  {name:>24}: {:.0} bytes/lane (replay predicts {:.0})",
+                        p.bytes_per_lane(),
+                        d.predicted_bytes
+                    );
+                    engine_rows.push((name, p.bytes_per_lane()));
+                    let name = format!("drift-{}", kind.name());
+                    println!("  {name:>24}: {:.4} rel (bound {:.2})", d.stamp(), d.threshold);
+                    engine_rows.push((name, d.stamp()));
+                }
+            }
         }
         // Scalar-vs-SIMD twins (ISSUE 9): both legs of every rewritten
         // kernel timed in one process, whichever leg the `simd` feature

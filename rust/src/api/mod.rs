@@ -34,6 +34,7 @@ use crate::coordinator::precond::{Jacobi, Preconditioner};
 use crate::coordinator::service::{self, BatchKernel, SpmvService};
 use crate::coordinator::solver::{self, SolveReport, SolveStatus, SolverConfig};
 use crate::preprocess::{EhybPlan, PreprocessConfig};
+use crate::profile::{Calibration, DriftReport, KernelProfile};
 use crate::resilience::{GuardLevel, Health, HealthReport};
 use crate::reorder::{ReorderSpec, ReorderedEngine, Reordering};
 use crate::telemetry::{metrics::labeled, Telemetry, TelemetrySnapshot, TraceHealthEvent, TraceId};
@@ -189,6 +190,8 @@ pub struct SpmvContextBuilder<S: Scalar> {
     fallback: bool,
     guard: GuardLevel,
     oracle: ScoreOracle,
+    drift_threshold: f64,
+    calibration: Option<Calibration>,
     telemetry: Option<Telemetry>,
 }
 
@@ -224,6 +227,31 @@ impl<S: Scalar> SpmvContextBuilder<S> {
     /// heuristic plans only hit when their recorded oracle matches.
     pub fn score_oracle(mut self, oracle: ScoreOracle) -> Self {
         self.oracle = oracle;
+        self
+    }
+
+    /// Relative observed-vs-predicted drift bound (default
+    /// [`crate::profile::DEFAULT_DRIFT_THRESHOLD`], 15%). Two
+    /// consumers: a cached plan whose recorded observed drift
+    /// ([`TunedPlan::drift`]) exceeds the bound is re-searched instead
+    /// of adopted on warm start, and [`SpmvContext::observe_drift`]
+    /// records a model-drift health event when a fresh
+    /// [`DriftReport`] exceeds it.
+    pub fn drift_threshold(mut self, threshold: f64) -> Self {
+        self.drift_threshold = threshold;
+        self
+    }
+
+    /// Explicit oracle [`Calibration`] for heuristic scoring: rescales
+    /// the traffic oracle's predicted seconds with measured per-level
+    /// byte costs, so the search ranks candidates by the host's
+    /// observed speed rather than the reference device model. When not
+    /// set, a tuner-routed build loads the persisted calibration for
+    /// this device/dtype key from the plan cache directory, if one was
+    /// ever saved there ([`PlanStore::save_calibration`]). Roofline
+    /// scoring and measured probes ignore it.
+    pub fn calibration(mut self, cal: Calibration) -> Self {
+        self.calibration = Some(cal);
         self
     }
 
@@ -335,6 +363,8 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             fallback,
             guard,
             oracle,
+            drift_threshold,
+            mut calibration,
             telemetry,
         } = self;
         // Degradation ledger — shared with the solver handle so a
@@ -378,9 +408,23 @@ impl<S: Scalar> SpmvContextBuilder<S> {
         let reorder_tag =
             reordering.as_ref().map_or_else(|| "none".to_string(), |r| r.resolved.clone());
         let shard_k = shards.map(|s| s.resolve(exec.nrows()));
-        // The whole-matrix tuning arm consumes `cache_dir`; per-shard
-        // tuning below resolves its own store from the same setting.
+        // Per-shard tuning below resolves its own store from the same
+        // setting the whole-matrix store uses.
         let shard_cache_dir = cache_dir.clone();
+        // The cache only participates for tuner-routed requests with a
+        // real search (`Auto` / `Ehyb`): tuning a fixed baseline is the
+        // identity, and persisting it would clobber the shared
+        // fingerprint entry with a no-op plan. The handle outlives the
+        // build — `SpmvContext::observe_drift` re-persists the plan
+        // with its observed-drift stamp through it.
+        let store: Option<PlanStore> = if !cache_disabled
+            && (tune.is_some() || kind == EngineKind::Auto)
+            && matches!(kind, EngineKind::Auto | EngineKind::Ehyb)
+        {
+            cache_dir.map(PlanStore::new).or_else(PlanStore::from_env)
+        } else {
+            None
+        };
         let mut tuned: Option<TunedPlan> = None;
         let (resolved, plan): (EngineKind, Option<EhybPlan<S>>) = match (kind, tune) {
             (EngineKind::Ehyb, None) if shard_k.is_some_and(|k| k >= 2) => {
@@ -417,17 +461,6 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             (requested, tune_level) => {
                 let explicit = tune_level.is_some();
                 let level = tune_level.unwrap_or(TuneLevel::Heuristic);
-                // The cache only participates for requests with a real
-                // search (`Auto` / `Ehyb`): tuning a fixed baseline is
-                // the identity, and persisting it would clobber the
-                // shared fingerprint entry with a no-op plan.
-                let store = if !cache_disabled
-                    && matches!(requested, EngineKind::Auto | EngineKind::Ehyb)
-                {
-                    cache_dir.map(PlanStore::new).or_else(PlanStore::from_env)
-                } else {
-                    None
-                };
                 // The fingerprint is a full O(nnz) hash pass — compute
                 // it once, only when a store can use it, and hand it on
                 // to the tuner so the search does not re-hash. It is
@@ -437,13 +470,24 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                 let fp = store.as_ref().map(|_| Fingerprint::of(exec));
                 let device = autotune::device_key(&config.device);
                 let cfg_key = autotune::config_key(&config);
+                // Host calibration for the traffic oracle: an explicit
+                // builder calibration wins; otherwise the persisted fit
+                // for this device/dtype key (saved from profiled runs)
+                // warm-starts from the same directory as the plans.
+                if calibration.is_none() {
+                    if let Some(s) = &store {
+                        calibration = s.load_calibration(&device, S::NAME).ok().flatten();
+                    }
+                }
                 // A damaged cache entry (Err) is treated as a miss, and
                 // a hit is honored only when it fits this build: the
                 // entry for this search scope (so Auto and EHYB-only
                 // winners never clobber each other), same (or Auto)
                 // engine request, compatible tune level, an exactly
-                // matching base config (`TunedPlan::usable_for`), and
-                // the same resolved reordering provenance.
+                // matching base config (`TunedPlan::usable_for`), the
+                // same resolved reordering provenance, and no recorded
+                // observed drift past this build's bound (a drifted
+                // plan's score provenance is stale — re-search it).
                 let hit = store
                     .as_ref()
                     .zip(fp.as_ref())
@@ -451,7 +495,8 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                         s.load(&fp.key(), &device, S::NAME, requested.name()).ok().flatten()
                     })
                     .filter(|tp| tp.usable_for(requested, level, oracle, &cfg_key))
-                    .filter(|tp| tp.reorder == reorder_tag);
+                    .filter(|tp| tp.reorder == reorder_tag)
+                    .filter(|tp| tp.drift_ok(drift_threshold));
                 // Adopt the cached plan — unless rebuilding it fails
                 // (stale entry for a matrix/config drift the keys did
                 // not capture), in which case fall through to a fresh
@@ -473,19 +518,24 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                     }
                     None => {
                         let tune_span = tel.span("tune");
-                        let searched = if explicit {
-                            autotune::tuner::tune_scored_traced(
-                                exec, &config, requested, level, oracle, fp, &tel,
-                            )
-                        } else {
-                            // Implicit `Auto` (no `.tune(..)`): engine
-                            // choice only — one preprocessing pass,
-                            // like the pre-tuner engine comparison.
-                            // The knob search stays opt-in.
-                            autotune::tuner::choose_engine_traced(
-                                exec, &config, level, oracle, fp, &tel,
-                            )
-                        };
+                        // Implicit `Auto` (no `.tune(..)`, the only way
+                        // `explicit` is false here) keeps its engine-
+                        // choice-only search — one preprocessing pass,
+                        // like the pre-tuner engine comparison; the
+                        // knob search stays opt-in. Either way the
+                        // search scores through the host calibration
+                        // when one is in effect.
+                        let searched = autotune::tuner::tune_calibrated(
+                            exec,
+                            &config,
+                            requested,
+                            level,
+                            oracle,
+                            fp,
+                            calibration.as_ref(),
+                            explicit,
+                            Some(&tel),
+                        );
                         drop(tune_span);
                         match searched {
                             Err(e) if fallback => {
@@ -581,6 +631,8 @@ impl<S: Scalar> SpmvContextBuilder<S> {
                             oracle,
                             store.as_ref(),
                             &reorder_tag,
+                            calibration.as_ref(),
+                            drift_threshold,
                         )?;
                         shard_tuned.push(Some(tp));
                         overrides.push((cfg2, bplan));
@@ -638,6 +690,9 @@ impl<S: Scalar> SpmvContextBuilder<S> {
             fallback,
             guard,
             health,
+            store,
+            drift_threshold,
+            calibration,
             tel,
         })
     }
@@ -654,6 +709,7 @@ impl<S: Scalar> SpmvContextBuilder<S> {
 /// the engine construction downstream never preprocesses the block a
 /// second time.
 #[allow(clippy::type_complexity)]
+#[allow(clippy::too_many_arguments)]
 fn tune_shard_block<S: Scalar>(
     block: &Csr<S>,
     base: &PreprocessConfig,
@@ -661,6 +717,8 @@ fn tune_shard_block<S: Scalar>(
     oracle: ScoreOracle,
     store: Option<&PlanStore>,
     reorder_tag: &str,
+    calibration: Option<&Calibration>,
+    drift_threshold: f64,
 ) -> crate::Result<(TunedPlan, PreprocessConfig, Option<EhybPlan<S>>)> {
     let fp = Fingerprint::of(block);
     let device = autotune::device_key(&base.device);
@@ -668,7 +726,8 @@ fn tune_shard_block<S: Scalar>(
     let hit = store
         .and_then(|s| s.load(&fp.key(), &device, S::NAME, EngineKind::Ehyb.name()).ok().flatten())
         .filter(|tp| tp.usable_for(EngineKind::Ehyb, level, oracle, &cfg_key))
-        .filter(|tp| tp.reorder == reorder_tag);
+        .filter(|tp| tp.reorder == reorder_tag)
+        .filter(|tp| tp.drift_ok(drift_threshold));
     if let Some(tp) = hit {
         let cfg = tp.apply(base);
         // A stale entry that no longer rebuilds is a miss, not a build
@@ -678,8 +737,17 @@ fn tune_shard_block<S: Scalar>(
             return Ok((tp, cfg, Some(bplan)));
         }
     }
-    let mut out =
-        autotune::tuner::tune_scored(block, base, EngineKind::Ehyb, level, oracle, Some(fp))?;
+    let mut out = autotune::tuner::tune_calibrated(
+        block,
+        base,
+        EngineKind::Ehyb,
+        level,
+        oracle,
+        Some(fp),
+        calibration,
+        true,
+        None,
+    )?;
     // The block is a block of the already-reordered matrix; record the
     // ordering provenance just like the whole-matrix entry does.
     out.plan.reorder = reorder_tag.to_string();
@@ -752,6 +820,15 @@ pub struct SpmvContext<S: Scalar> {
     /// non-finite value lands here (snapshot via
     /// [`SpmvContext::health`]).
     health: Arc<Health>,
+    /// The plan cache handle the build resolved (tuner-routed builds
+    /// only) — retained so [`Self::observe_drift`] can re-persist the
+    /// plan with its observed-drift stamp.
+    store: Option<PlanStore>,
+    /// Relative drift bound ([`SpmvContextBuilder::drift_threshold`]).
+    drift_threshold: f64,
+    /// Oracle calibration in effect: the builder's explicit one, or
+    /// the persisted fit the build loaded from the plan cache.
+    calibration: Option<Calibration>,
     /// Telemetry handle shared by every layer this context drives:
     /// build spans were recorded into it at build time; the service
     /// ([`SpmvContext::serve`]), the sharded engine, and the solver
@@ -782,6 +859,8 @@ impl<S: Scalar> SpmvContext<S> {
             fallback: false,
             guard: GuardLevel::Off,
             oracle: ScoreOracle::default(),
+            drift_threshold: crate::profile::DEFAULT_DRIFT_THRESHOLD,
+            calibration: None,
             telemetry: None,
         }
     }
@@ -897,6 +976,106 @@ impl<S: Scalar> SpmvContext<S> {
         self.fallback
     }
 
+    /// Observed kernel-level data movement since the engine was built:
+    /// the aggregate of every `spmv`/`spmv_batch` this context ran,
+    /// counted inside the hot paths themselves (sharded builds merge
+    /// all shards, with cross-shard halo gathers attributed
+    /// separately). `None` when nothing was recorded — the engine
+    /// never ran, or the crate was built without the `profile`
+    /// feature.
+    pub fn profile(&self) -> Option<KernelProfile> {
+        self.engine.get().and_then(|e| e.kernel_profile())
+    }
+
+    /// The relative drift bound this context applies
+    /// ([`SpmvContextBuilder::drift_threshold`]).
+    pub fn drift_threshold(&self) -> f64 {
+        self.drift_threshold
+    }
+
+    /// The oracle calibration in effect — the builder's explicit one,
+    /// or the persisted fit loaded from the plan cache on a
+    /// tuner-routed build.
+    pub fn calibration(&self) -> Option<&Calibration> {
+        self.calibration.as_ref()
+    }
+
+    /// The [`crate::traffic`] replay of this context's prepared plan —
+    /// the prediction [`Self::drift`] diffs the observed profile
+    /// against, priced for the same reference device the tuner scored
+    /// on. `None` for sharded builds (their per-shard replay is the
+    /// separate [`crate::traffic::shard_traffic`] breakdown) and for
+    /// an EHYB context without a whole-matrix plan.
+    pub fn predicted_traffic(&self) -> Option<crate::traffic::TrafficReport> {
+        if self.sharded.is_some() {
+            return None;
+        }
+        let dev = crate::gpu::device::GpuDevice::v100();
+        match self.kind {
+            EngineKind::Ehyb => {
+                self.plan.as_ref().map(|p| crate::traffic::ehyb_traffic(&p.matrix, &dev))
+            }
+            kind => {
+                let exec = self.exec_matrix.as_ref().unwrap_or(&self.matrix);
+                Some(crate::traffic::baseline_traffic(kind, exec, &dev))
+            }
+        }
+    }
+
+    /// The sim-vs-observed cross-check: diff what the engine
+    /// observably moved ([`Self::profile`]) against what the traffic
+    /// simulator predicted for the same prepared plan, per component,
+    /// normalized per right-hand side. Pure read — records nothing;
+    /// use [`Self::observe_drift`] to feed the result back into the
+    /// health ledger and the plan cache. `None` when there is no
+    /// observation or no replayable plan (see
+    /// [`Self::predicted_traffic`]).
+    pub fn drift(&self) -> Option<DriftReport> {
+        let observed = self.profile()?;
+        let predicted = self.predicted_traffic()?;
+        Some(DriftReport::new(
+            &observed,
+            &predicted,
+            self.calibration.as_ref(),
+            self.drift_threshold,
+        ))
+    }
+
+    /// [`Self::drift`] with the loop closed: when the report exceeds
+    /// the drift bound, a model-drift event lands in [`Self::health`]
+    /// naming the worst component; and on tuner-routed builds the
+    /// winning plan's `drift` provenance is stamped with the observed
+    /// figure and re-persisted — so the next warm start re-searches
+    /// instead of adopting a plan whose score provenance no longer
+    /// matches reality.
+    pub fn observe_drift(&mut self) -> Option<DriftReport> {
+        let d = self.drift()?;
+        if d.exceeded() {
+            // Name the byte component when one tripped the bound;
+            // otherwise the calibrated-seconds leg did.
+            let worst = match d.worst_component() {
+                Some(c) if c.rel() >= d.stamp() => c.component,
+                _ => "calibrated-secs",
+            };
+            self.health.record_model_drift(format!(
+                "{}: {} off by {:.0}% (bound {:.0}%)",
+                d.engine,
+                worst,
+                d.stamp() * 100.0,
+                d.threshold * 100.0
+            ));
+        }
+        if let Some(tp) = self.tuned.as_mut() {
+            tp.drift = Some(d.stamp());
+            if let Some(store) = &self.store {
+                // Best-effort, like the build-time persist: an
+                // unwritable cache dir must not fail the observation.
+                let _ = store.save(tp);
+            }
+        }
+        Some(d)
+    }
+
     /// The telemetry handle every layer of this context records into —
     /// hand it to dashboards, or to other builds that should share one
     /// timeline.
@@ -920,6 +1099,29 @@ impl<S: Scalar> SpmvContext<S> {
                 }
             }
             self.tel.registry().set_gauge("shard.scratch_misses", sh.scratch_misses() as f64);
+        }
+        // Observed kernel counters, refreshed at snapshot time like the
+        // shard gauges (present only once something was profiled).
+        if let Some(p) = self.profile() {
+            let reg = self.tel.registry();
+            reg.set_gauge("profile.calls", p.calls as f64);
+            reg.set_gauge("profile.lanes", p.lanes as f64);
+            reg.set_gauge("profile.total_bytes", p.total_bytes() as f64);
+            reg.set_gauge("profile.bytes_per_lane", p.bytes_per_lane());
+            reg.set_gauge("profile.tile_reuse", p.tile_reuse());
+            reg.set_gauge("profile.secs", p.secs);
+            for (component, bytes) in [
+                ("ell", p.ell_bytes),
+                ("er", p.er_bytes),
+                ("meta", p.meta_bytes),
+                ("x-fill", p.x_fill_bytes),
+                ("x-gather", p.x_gather_bytes),
+                ("halo", p.halo_bytes),
+                ("write", p.write_bytes),
+            ] {
+                let name = labeled("profile.bytes", &[("component", component)]);
+                reg.set_gauge(&name, bytes as f64);
+            }
         }
         let mut snap = self.tel.snapshot();
         snap.health_events = self
@@ -1825,6 +2027,124 @@ mod tests {
             .count();
         assert_eq!(iters, rep.history.len());
         assert!(snap.events.iter().any(|e| e.trace == solve.trace && e.kind == "solver-done"));
+    }
+
+    #[cfg(feature = "profile")]
+    #[test]
+    fn profile_and_drift_close_the_loop_on_ehyb() {
+        let ctx = ctx_for(EngineKind::Ehyb);
+        assert!(ctx.profile().is_none(), "nothing recorded before the first call");
+        let x = vec![1.0; ctx.ncols()];
+        let mut y = vec![0.0; ctx.nrows()];
+        for _ in 0..3 {
+            ctx.spmv(&x, &mut y).unwrap();
+        }
+        let p = ctx.profile().expect("profiled engine");
+        assert_eq!(p.engine, "ehyb");
+        assert_eq!((p.calls, p.lanes), (3, 3));
+        assert!(p.total_bytes() > 0 && p.secs > 0.0);
+        // B=1 observation vs the B=1 replay of the same plan: every
+        // compulsory byte component ties out exactly, so uncalibrated
+        // drift is zero.
+        let d = ctx.drift().expect("drift report");
+        assert_eq!(d.max_rel_drift(), 0.0, "{d:?}");
+        assert!(!d.exceeded() && !d.calibrated);
+        // The snapshot folds the observed counters in as gauges.
+        let snap = ctx.telemetry_snapshot();
+        assert!(snap.gauges.contains_key("profile.total_bytes"));
+        assert!(snap.gauges.contains_key("profile.bytes{component=\"ell\"}"));
+        assert_eq!(snap.gauges["profile.lanes"], 3.0);
+        // Baselines profile too, against their own replay.
+        let csr = ctx_for(EngineKind::CsrVector);
+        csr.spmv(&x, &mut y).unwrap();
+        let dc = csr.drift().expect("csr drift report");
+        assert_eq!(dc.max_rel_drift(), 0.0, "{dc:?}");
+    }
+
+    #[cfg(feature = "profile")]
+    #[test]
+    fn observed_drift_invalidates_cached_plan_and_records_health() {
+        let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+        let dir =
+            std::env::temp_dir().join(format!("ehyb-api-drift-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = PreprocessConfig { vec_size_override: Some(128), ..Default::default() };
+        // A nonsense calibration (zero seconds for any traffic) makes
+        // the calibrated-seconds leg drift ~100% while the byte
+        // components still tie out.
+        let bogus = crate::profile::Calibration {
+            dram_secs_per_byte: 0.0,
+            l2_secs_per_byte: 0.0,
+            shm_secs_per_byte: 0.0,
+            base_secs: 0.0,
+            samples: 2,
+            residual: 0.0,
+        };
+        let mut ctx = SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(cfg.clone())
+            .tune(TuneLevel::Heuristic)
+            .plan_cache(&dir)
+            .calibration(bogus)
+            .build()
+            .unwrap();
+        let x = vec![1.0; ctx.ncols()];
+        let mut y = vec![0.0; ctx.nrows()];
+        ctx.spmv(&x, &mut y).unwrap();
+        let d = ctx.observe_drift().expect("observation");
+        assert!(d.calibrated && d.exceeded(), "{d:?}");
+        let h = ctx.health();
+        assert_eq!(h.model_drifts, 1);
+        assert!(!h.healthy() && !h.degraded());
+        assert!(h.events[0].contains("calibrated-secs"), "{:?}", h.events);
+        let stamp = d.stamp();
+        assert_eq!(ctx.tuned().unwrap().drift, Some(stamp));
+        // A permissive bound adopts the stamped entry as-is, drift
+        // provenance included.
+        let adopted = SpmvContext::builder(m.clone())
+            .engine(EngineKind::Ehyb)
+            .config(cfg.clone())
+            .tune(TuneLevel::Heuristic)
+            .plan_cache(&dir)
+            .drift_threshold(2.0)
+            .build()
+            .unwrap();
+        assert_eq!(adopted.tuned().unwrap().drift, Some(stamp));
+        // Under the default bound the stamped entry is filtered out:
+        // the build re-searches and the fresh winner carries no drift.
+        let fresh = SpmvContext::builder(m)
+            .engine(EngineKind::Ehyb)
+            .config(cfg)
+            .tune(TuneLevel::Heuristic)
+            .plan_cache(&dir)
+            .build()
+            .unwrap();
+        assert_eq!(fresh.tuned().unwrap().drift, None, "drifted plan re-searched");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_context_profiles_but_does_not_replay() {
+        let ctx = SpmvContext::builder(poisson2d::<f64>(16, 16))
+            .engine(EngineKind::Ehyb)
+            .config(PreprocessConfig { vec_size_override: Some(64), ..Default::default() })
+            .shards(ShardSpec::Count(2))
+            .build()
+            .unwrap();
+        let x = vec![1.0; ctx.ncols()];
+        let mut y = vec![0.0; ctx.nrows()];
+        ctx.spmv(&x, &mut y).unwrap();
+        // Per-shard replay lives in `traffic::shard_traffic`, not the
+        // whole-matrix drift path.
+        assert!(ctx.predicted_traffic().is_none());
+        assert!(ctx.drift().is_none());
+        if crate::profile::enabled() {
+            let p = ctx.profile().expect("sharded profile merges shards");
+            assert_eq!(p.engine, "sharded");
+            assert_eq!(p.lanes, 2, "one lane per shard kernel");
+        } else {
+            assert!(ctx.profile().is_none());
+        }
     }
 
     #[test]

@@ -37,8 +37,8 @@ pub mod tuner;
 pub use fingerprint::Fingerprint;
 pub use store::PlanStore;
 pub use tuner::{
-    choose_engine, tune, tune_scored, tune_with_fingerprint, ScoreOracle, TuneLevel, TuneOutcome,
-    TunedPlan,
+    choose_engine, tune, tune_calibrated, tune_scored, tune_with_fingerprint, ScoreOracle,
+    TuneLevel, TuneOutcome, TunedPlan,
 };
 
 use crate::preprocess::cache_size::DeviceParams;

@@ -137,19 +137,72 @@ impl PlanStore {
     /// renamed into place — readers see either the old entry or the
     /// new one, never a partial write.
     pub fn save(&self, plan: &TunedPlan) -> crate::Result<PathBuf> {
-        std::fs::create_dir_all(&self.dir)?;
         let path = self.path_for(&plan.fingerprint, &plan.device, &plan.dtype, &plan.scope);
+        self.write_atomic(&path, &plan.to_json().dump())?;
+        Ok(path)
+    }
+
+    /// Cache file for the host calibration of one (device, dtype) key.
+    /// Calibrations are host-wide — per-level secs/byte of the machine
+    /// running the kernels — not per matrix, so the fingerprint and
+    /// scope play no part in the key.
+    pub fn calibration_path(&self, device: &str, dtype: &str) -> PathBuf {
+        self.dir.join(format!("calibration-{device}-{dtype}.json"))
+    }
+
+    /// Persist a fitted [`Calibration`] with the same atomic protocol
+    /// as [`Self::save`].
+    ///
+    /// [`Calibration`]: crate::profile::Calibration
+    pub fn save_calibration(
+        &self,
+        cal: &crate::profile::Calibration,
+        device: &str,
+        dtype: &str,
+    ) -> crate::Result<PathBuf> {
+        let path = self.calibration_path(device, dtype);
+        self.write_atomic(&path, &cal.to_json().dump())?;
+        Ok(path)
+    }
+
+    /// Load the persisted calibration for a key, with the same
+    /// miss/damage discipline as [`Self::load`]: `Ok(None)` = no entry,
+    /// a malformed entry is quarantined to `<name>.bad` and returned as
+    /// `Err`, an I/O read error is returned as-is.
+    pub fn load_calibration(
+        &self,
+        device: &str,
+        dtype: &str,
+    ) -> crate::Result<Option<crate::profile::Calibration>> {
+        let path = self.calibration_path(device, dtype);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(crate::EhybError::Io(format!("{}: {e}", path.display()))),
+        };
+        match Json::parse(&text).and_then(|j| crate::profile::Calibration::from_json(&j)) {
+            Ok(cal) => Ok(Some(cal)),
+            Err(e) => {
+                self.quarantine(&path);
+                Err(e)
+            }
+        }
+    }
+
+    /// The shared temp-file + rename write both entry kinds use.
+    fn write_atomic(&self, path: &Path, text: &str) -> crate::Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
         let tmp = self.dir.join(format!(
             ".{}-{}-{}.tmp",
             path.file_name().and_then(|n| n.to_str()).unwrap_or("plan"),
             std::process::id(),
             TMP_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
-        std::fs::write(&tmp, plan.to_json().dump())
+        std::fs::write(&tmp, text)
             .map_err(|e| crate::EhybError::Io(format!("{}: {e}", tmp.display())))?;
-        std::fs::rename(&tmp, &path)
+        std::fs::rename(&tmp, path)
             .map_err(|e| crate::EhybError::Io(format!("{}: {e}", path.display())))?;
-        Ok(path)
+        Ok(())
     }
 }
 
@@ -175,6 +228,7 @@ mod tests {
             reorder: "none".into(),
             oracle: "roofline".into(),
             probe_width: 0,
+            drift: None,
         }
     }
 
@@ -276,6 +330,35 @@ mod tests {
         let e = store.load(&plan().fingerprint, &plan().device, "f64", "ehyb").unwrap().unwrap();
         assert_eq!(a, auto_plan);
         assert_eq!(e, ehyb_plan);
+        std::fs::remove_dir_all(store.dir()).ok();
+    }
+
+    #[test]
+    fn calibration_roundtrips_and_quarantines_like_plans() {
+        use crate::profile::Calibration;
+        let store = temp_store("cal");
+        assert!(store.load_calibration("p80-shm98304", "f64").unwrap().is_none());
+        let cal = Calibration {
+            dram_secs_per_byte: 1.2e-12,
+            l2_secs_per_byte: 4.0e-13,
+            shm_secs_per_byte: 8.0e-14,
+            base_secs: 3.0e-6,
+            samples: 9,
+            residual: 0.04,
+        };
+        let path = store.save_calibration(&cal, "p80-shm98304", "f64").unwrap();
+        assert!(path.exists());
+        let back = store.load_calibration("p80-shm98304", "f64").unwrap().unwrap();
+        assert_eq!(back, cal);
+        // A calibration never shadows a plan entry for the same device.
+        let p = plan();
+        store.save(&p).unwrap();
+        assert!(store.load(&p.fingerprint, &p.device, &p.dtype, &p.scope).unwrap().is_some());
+        // Damage quarantines like plan entries: err once, then a miss.
+        std::fs::write(store.calibration_path("p80-shm98304", "f64"), "{torn").unwrap();
+        assert!(store.load_calibration("p80-shm98304", "f64").is_err());
+        assert_eq!(store.quarantines(), 1);
+        assert!(store.load_calibration("p80-shm98304", "f64").unwrap().is_none());
         std::fs::remove_dir_all(store.dir()).ok();
     }
 

@@ -161,6 +161,16 @@ pub struct TunedPlan {
     /// 0 for heuristic plans (nothing was probed). Pre-0.7 measured
     /// entries load as 1 — they only ever probed B = 1.
     pub probe_width: u32,
+    /// Worst observed-vs-predicted relative component drift
+    /// (`DriftReport::max_rel_drift`) stamped back onto the plan by
+    /// `ctx.observe_drift()` after real kernel runs — `None` until a
+    /// drift check ran (the tuner itself always emits `None`; pre-0.10
+    /// entries load as `None`). A warm start honors the cached plan
+    /// only while [`Self::drift_ok`] holds, so a plan whose cost-model
+    /// provenance went stale is re-searched instead of trusted.
+    ///
+    /// [`Self::drift_ok`]: TunedPlan::drift_ok
+    pub drift: Option<f64>,
 }
 
 /// Overlay the three tuned knobs onto a base config — THE single code
@@ -213,7 +223,21 @@ impl TunedPlan {
             ("reorder", Json::Str(self.reorder.clone())),
             ("oracle", Json::Str(self.oracle.clone())),
             ("probe_width", Json::Num(self.probe_width as f64)),
+            (
+                "drift",
+                match self.drift {
+                    Some(d) => Json::Num(d),
+                    None => Json::Null,
+                },
+            ),
         ])
+    }
+
+    /// Whether the plan's observed drift (if any was ever recorded) is
+    /// within `threshold`. Plans with no recorded drift pass — absence
+    /// of evidence is not staleness.
+    pub fn drift_ok(&self, threshold: f64) -> bool {
+        self.drift.map_or(true, |d| d <= threshold)
     }
 
     /// Whether a cached plan may serve a build that requested
@@ -322,6 +346,13 @@ impl TunedPlan {
                     crate::EhybError::Parse("tuned plan field \"probe_width\" not a number".into())
                 })? as u32,
             },
+            // Absent in pre-0.10 entries: no drift check ever ran.
+            drift: match j.get("drift") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(v.as_f64().ok_or_else(|| {
+                    crate::EhybError::Parse("tuned plan field \"drift\" not a number".into())
+                })?),
+            },
         };
         // Range-validate before anything downstream trusts the knobs: a
         // corrupted / hand-edited cache entry must surface as an error
@@ -357,6 +388,9 @@ impl TunedPlan {
             "tuned plan has unknown oracle {:?}",
             plan.oracle
         );
+        if let Some(d) = plan.drift {
+            crate::ensure!(d.is_finite() && d >= 0.0, "tuned plan drift {d} out of range");
+        }
         Ok(plan)
     }
 }
@@ -464,7 +498,7 @@ pub fn tune_with_fingerprint<S: Scalar>(
     level: TuneLevel,
     fingerprint: Option<Fingerprint>,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, requested, level, ScoreOracle::default(), fingerprint, true, None)
+    search(m, base, requested, level, ScoreOracle::default(), fingerprint, None, true, None)
 }
 
 /// [`tune_with_fingerprint`] with an explicit heuristic
@@ -478,7 +512,7 @@ pub fn tune_scored<S: Scalar>(
     oracle: ScoreOracle,
     fingerprint: Option<Fingerprint>,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, requested, level, oracle, fingerprint, true, None)
+    search(m, base, requested, level, oracle, fingerprint, None, true, None)
 }
 
 /// [`tune_scored`] recording one `tune.candidate(…)` span per scored
@@ -494,7 +528,32 @@ pub fn tune_scored_traced<S: Scalar>(
     fingerprint: Option<Fingerprint>,
     tel: &Telemetry,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, requested, level, oracle, fingerprint, true, Some(tel))
+    search(m, base, requested, level, oracle, fingerprint, None, true, Some(tel))
+}
+
+/// The full-option search entry point: [`tune_scored_traced`] /
+/// [`choose_engine_traced`] plus an optional [`Calibration`] that
+/// rescales the traffic oracle's `predicted_secs` with observed
+/// per-level costs (fitted from real kernel runs), and an explicit
+/// `knob_variants` switch (`false` reproduces [`choose_engine`]'s
+/// engine-choice-only search). Roofline scoring and `Measured` probes
+/// ignore the calibration — it maps simulated per-level traffic to
+/// seconds, which only the traffic oracle produces.
+///
+/// [`Calibration`]: crate::profile::Calibration
+#[allow(clippy::too_many_arguments)]
+pub fn tune_calibrated<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    requested: EngineKind,
+    level: TuneLevel,
+    oracle: ScoreOracle,
+    fingerprint: Option<Fingerprint>,
+    calibration: Option<&crate::profile::Calibration>,
+    knob_variants: bool,
+    tel: Option<&Telemetry>,
+) -> crate::Result<TuneOutcome<S>> {
+    search(m, base, requested, level, oracle, fingerprint, calibration, knob_variants, tel)
 }
 
 /// Engine choice only — what implicit [`EngineKind::Auto`] (no
@@ -513,7 +572,7 @@ pub fn choose_engine<S: Scalar>(
     oracle: ScoreOracle,
     fingerprint: Option<Fingerprint>,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, EngineKind::Auto, level, oracle, fingerprint, false, None)
+    search(m, base, EngineKind::Auto, level, oracle, fingerprint, None, false, None)
 }
 
 /// [`choose_engine`] with per-candidate `tune.candidate(…)` spans
@@ -527,7 +586,7 @@ pub fn choose_engine_traced<S: Scalar>(
     fingerprint: Option<Fingerprint>,
     tel: &Telemetry,
 ) -> crate::Result<TuneOutcome<S>> {
-    search(m, base, EngineKind::Auto, level, oracle, fingerprint, false, Some(tel))
+    search(m, base, EngineKind::Auto, level, oracle, fingerprint, None, false, Some(tel))
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -538,6 +597,7 @@ fn search<S: Scalar>(
     level: TuneLevel,
     oracle: ScoreOracle,
     fingerprint: Option<Fingerprint>,
+    calibration: Option<&crate::profile::Calibration>,
     knob_variants: bool,
     tel: Option<&Telemetry>,
 ) -> crate::Result<TuneOutcome<S>> {
@@ -613,13 +673,13 @@ fn search<S: Scalar>(
     let mut best = {
         let _span =
             tel.map(|t| t.span(format!("tune.candidate(i=0,{:?})", default_cand.engine)));
-        match score_candidate::<S>(m, base, &default_cand, level, oracle, &dev) {
+        match score_candidate::<S>(m, base, &default_cand, level, oracle, &dev, calibration) {
             Ok(s) => s,
             Err(_) if requested == EngineKind::Auto && default_cand.engine == EngineKind::Ehyb => {
                 cands.retain(|c| c.engine != EngineKind::Ehyb);
                 let fallback = Candidate::baseline(EngineKind::CsrScalar, base);
                 cands.retain(|c| *c != fallback);
-                score_candidate::<S>(m, base, &fallback, level, oracle, &dev)?
+                score_candidate::<S>(m, base, &fallback, level, oracle, &dev, calibration)?
             }
             Err(e) => return Err(e),
         }
@@ -641,7 +701,7 @@ fn search<S: Scalar>(
             }
         }
         let _span = tel.map(|t| t.span(format!("tune.candidate(i={},{:?})", i + 1, c.engine)));
-        match score_candidate::<S>(m, base, c, level, oracle, &dev) {
+        match score_candidate::<S>(m, base, c, level, oracle, &dev, calibration) {
             Ok(s) => {
                 tried += 1;
                 if s.score < best.score {
@@ -672,6 +732,7 @@ fn search<S: Scalar>(
             reorder: "none".to_string(),
             oracle: oracle.tag().to_string(),
             probe_width: best.width,
+            drift: None,
         },
         ehyb: best.ehyb,
         candidates_tried: tried,
@@ -749,6 +810,7 @@ fn ehyb_variants<S: Scalar>(base: &PreprocessConfig, fp: &Fingerprint) -> Vec<Ca
     out
 }
 
+#[allow(clippy::too_many_arguments)]
 fn score_candidate<S: Scalar>(
     m: &Csr<S>,
     base: &PreprocessConfig,
@@ -756,14 +818,23 @@ fn score_candidate<S: Scalar>(
     level: TuneLevel,
     oracle: ScoreOracle,
     dev: &GpuDevice,
+    cal: Option<&crate::profile::Calibration>,
 ) -> crate::Result<Scored<S>> {
+    // With a calibration in hand, the traffic oracle's per-level byte
+    // counts are priced at the *observed* secs-per-byte instead of the
+    // device model's nominal bandwidths; rankings follow what the host
+    // actually measured. Roofline and Measured scoring are unaffected.
+    let priced = |r: crate::traffic::TrafficReport| match cal {
+        Some(c) => c.apply(&r),
+        None => r.predicted_secs,
+    };
     if cand.engine == EngineKind::Ehyb {
         let cfg = cand.config(base);
         let plan = EhybPlan::build(m, &cfg)?;
         let (score, width) = match level {
             TuneLevel::Heuristic => match oracle {
                 ScoreOracle::Traffic => {
-                    (crate::traffic::ehyb_traffic(&plan.matrix, dev).predicted_secs, 0)
+                    (priced(crate::traffic::ehyb_traffic(&plan.matrix, dev)), 0)
                 }
                 ScoreOracle::Roofline => {
                     (perfmodel::ehyb_bound(&plan.matrix).predicted_secs(dev), 0)
@@ -779,7 +850,7 @@ fn score_candidate<S: Scalar>(
         let (score, width) = match level {
             TuneLevel::Heuristic => match oracle {
                 ScoreOracle::Traffic => {
-                    (crate::traffic::baseline_traffic(cand.engine, m, dev).predicted_secs, 0)
+                    (priced(crate::traffic::baseline_traffic(cand.engine, m, dev)), 0)
                 }
                 ScoreOracle::Roofline => (baseline_predicted_secs(cand.engine, m, dev), 0),
             },
@@ -1102,6 +1173,7 @@ mod tests {
             reorder: "none".into(),
             oracle: "roofline".into(),
             probe_width: 0,
+            drift: None,
         }
     }
 
@@ -1163,6 +1235,75 @@ mod tests {
             m.insert("oracle".into(), Json::Str("crystal-ball".into()));
         }
         assert!(TunedPlan::from_json(&jb).is_err());
+    }
+
+    #[test]
+    fn pre_drift_entries_load_as_none_and_drift_round_trips() {
+        // 0.9-era cache entries have no "drift" field: no drift check
+        // ever ran against them, which is exactly what None records.
+        let mut j = sample_plan().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("drift");
+        }
+        let back = TunedPlan::from_json(&j).unwrap();
+        assert_eq!(back.drift, None);
+        assert!(back.drift_ok(0.0), "no recorded drift can never be stale");
+        // A stamped drift survives the round trip and gates drift_ok.
+        let stamped = TunedPlan { drift: Some(0.21), ..sample_plan() };
+        let back =
+            TunedPlan::from_json(&Json::parse(&stamped.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.drift, Some(0.21));
+        assert!(back.drift_ok(0.25) && !back.drift_ok(0.15));
+        // Out-of-range drifts are rejected like any corrupted field.
+        for bad in ["-0.5", "\"lots\""] {
+            let mut j = sample_plan().to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("drift".into(), Json::parse(bad).unwrap());
+            }
+            assert!(TunedPlan::from_json(&j).is_err(), "drift {bad} accepted");
+        }
+    }
+
+    #[test]
+    fn calibrated_search_stays_deterministic_and_never_worse() {
+        use crate::profile::Calibration;
+        let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+        // An uncalibrated-equivalent calibration (the device model's
+        // own secs-per-byte) must not change the traffic oracle's
+        // ranking; a skewed one still upholds the ≤-default guarantee.
+        let dev = GpuDevice::v100();
+        let neutral = Calibration::uncalibrated(&dev);
+        let skewed =
+            Calibration { dram_secs_per_byte: neutral.dram_secs_per_byte * 3.0, ..neutral.clone() };
+        for cal in [None, Some(&neutral), Some(&skewed)] {
+            let a = tune_calibrated(
+                &m,
+                &cfg(128),
+                EngineKind::Auto,
+                TuneLevel::Heuristic,
+                ScoreOracle::Traffic,
+                None,
+                cal,
+                true,
+                None,
+            )
+            .unwrap();
+            let b = tune_calibrated(
+                &m,
+                &cfg(128),
+                EngineKind::Auto,
+                TuneLevel::Heuristic,
+                ScoreOracle::Traffic,
+                None,
+                cal,
+                true,
+                None,
+            )
+            .unwrap();
+            assert_eq!(a.plan, b.plan, "calibrated scoring must stay deterministic");
+            assert!(a.plan.score_secs <= a.plan.default_score_secs);
+            assert_eq!(a.plan.drift, None, "a fresh search carries no observed drift");
+        }
     }
 
     #[test]

@@ -14,14 +14,14 @@
 //!   PJRT runtime, serving requests over channels; a drained request
 //!   batch executes as one fused `spmv_batch` call with recycled
 //!   output buffers.
-//! * [`metrics`] — deprecated aliases of the service metric types,
-//!   which moved to [`crate::telemetry`] in 0.8 (one registry
-//!   namespace for every subsystem).
+//!
+//! The service metric types live in [`crate::telemetry`] since 0.8;
+//! the deprecated `coordinator::metrics` aliases were removed in 0.10
+//! (MIGRATION.md 0.9 → 0.10).
 
 pub mod solver;
 pub mod precond;
 pub mod service;
-pub mod metrics;
 
 pub use precond::{Jacobi, Preconditioner, Spai0};
 pub use solver::{

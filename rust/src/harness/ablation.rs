@@ -310,6 +310,94 @@ pub fn traffic_ablation<S: Scalar>(
     Ok(rows)
 }
 
+/// One variant of the calibration ablation: the Heuristic pick made
+/// with or without the fitted per-host [`Calibration`], the oracle
+/// score it won on, and the measured throughput of the picked engine.
+///
+/// [`Calibration`]: crate::profile::Calibration
+#[derive(Clone, Debug)]
+pub struct DriftAblationRow {
+    /// "uncalibrated" | "calibrated".
+    pub variant: String,
+    /// Engine the Heuristic search chose.
+    pub pick: String,
+    /// The winner's oracle score (seconds per SpMV under the variant's
+    /// cost model — raw V100 replay vs calibrated-to-host).
+    pub score_secs: f64,
+    /// Wall-clock throughput of the picked engine on this host.
+    pub measured_gflops: f64,
+    /// RMS relative residual of the calibration fit (0 when raw).
+    pub fit_residual: f64,
+    /// Probes the fit consumed (0 when raw).
+    pub samples: usize,
+}
+
+/// ISSUE 10: the drift ablation — fit a [`crate::profile::Calibration`]
+/// from measured probes of a few concrete engines on this host, then
+/// run the same Heuristic search twice, uncalibrated and calibrated,
+/// and measure what each picked. The acceptance bar (asserted in the
+/// tests and rendered by `ablation --which drift`) is that the
+/// calibrated pick is never measurably worse than the uncalibrated one.
+pub fn drift_ablation<S: Scalar>(
+    m: &Csr<S>,
+    base: &PreprocessConfig,
+    dev: &GpuDevice,
+) -> crate::Result<Vec<DriftAblationRow>> {
+    use crate::profile::{CalSample, Calibration};
+    let x = vec![S::ONE; m.nrows()];
+    // Probe engines with distinct DRAM/L2/shm mixes so the fit's
+    // features stay distinguishable (the explicitly-cached EHYB walk
+    // vs two uncached CSR walks vs the padded SELL-P stream).
+    let mut samples = Vec::new();
+    for kind in
+        [EngineKind::Ehyb, EngineKind::CsrVector, EngineKind::CsrScalar, EngineKind::SellP]
+    {
+        let ctx =
+            SpmvContext::builder(m.clone()).engine(kind).config(base.clone()).no_plan_cache().build()?;
+        let report = match ctx.plan() {
+            Some(plan) => crate::traffic::ehyb_traffic(&plan.matrix, dev),
+            None => crate::traffic::baseline_traffic(kind, m, dev),
+        };
+        let e = ctx.engine();
+        let mut y = vec![S::ZERO; e.nrows()];
+        let secs = crate::util::timer::bench_secs(
+            || e.spmv(&x, &mut y),
+            3,
+            std::time::Duration::from_millis(20),
+        );
+        samples.push(CalSample::of(&report, secs));
+    }
+    let cal = Calibration::fit(&samples).unwrap_or_else(|| Calibration::uncalibrated(dev));
+    let mut rows = Vec::new();
+    for (variant, cal) in [("uncalibrated", None), ("calibrated", Some(cal))] {
+        let mut b = SpmvContext::builder(m.clone())
+            .config(base.clone())
+            .tune(TuneLevel::Heuristic)
+            .no_plan_cache();
+        if let Some(c) = &cal {
+            b = b.calibration(c.clone());
+        }
+        let ctx = b.build()?;
+        let tuned = ctx.tuned().expect("tuner-routed build records a TunedPlan");
+        let e = ctx.engine();
+        let mut y = vec![S::ZERO; e.nrows()];
+        let secs = crate::util::timer::bench_secs(
+            || e.spmv(&x, &mut y),
+            3,
+            std::time::Duration::from_millis(30),
+        );
+        rows.push(DriftAblationRow {
+            variant: variant.to_string(),
+            pick: tuned.engine.name().to_string(),
+            score_secs: tuned.score_secs,
+            measured_gflops: crate::spmv::gflops(e.nnz(), secs),
+            fit_residual: cal.as_ref().map_or(0.0, |c| c.residual),
+            samples: cal.as_ref().map_or(0, |c| c.samples),
+        });
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -413,6 +501,25 @@ mod tests {
             assert!(r.x_reuse >= 1.0, "{}: reuse factor below 1", r.engine);
             assert!((0.0..=1.0).contains(&r.l2_hit_rate), "{}", r.engine);
         }
+    }
+
+    #[test]
+    fn drift_ablation_calibrated_pick_not_measurably_worse() {
+        let (m, cfg, dev) = setup();
+        let rows = drift_ablation(&m, &cfg, &dev).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].variant, "uncalibrated");
+        assert_eq!(rows[1].variant, "calibrated");
+        assert_eq!(rows[1].samples, 4, "fit consumed every probe");
+        assert!(rows[1].fit_residual.is_finite());
+        assert!(rows.iter().all(|r| r.score_secs > 0.0 && r.measured_gflops > 0.0), "{rows:?}");
+        // The acceptance bar: calibrating the oracle must not make the
+        // Heuristic pick measurably worse. Generous slack absorbs CI
+        // timer noise when both variants pick the same engine.
+        assert!(
+            rows[1].measured_gflops >= 0.5 * rows[0].measured_gflops,
+            "calibrated pick regressed: {rows:?}"
+        );
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! observability surface (batch-width / bytes-moved / shard metrics),
 //! and the machine-readable bench report (`BENCH_ci.json` in CI).
 
-use super::ablation::{AblationRow, ReorderRow, TrafficRow};
+use super::ablation::{AblationRow, DriftAblationRow, ReorderRow, TrafficRow};
 use super::runner::ValidationRow;
 use super::tables::{Fig6Row, FigureSeries, SpeedupRow};
 use crate::runtime::json::{self, Json};
@@ -195,9 +195,9 @@ pub fn health_markdown(title: &str, h: &crate::resilience::HealthReport) -> Stri
     let _ = writeln!(s, "### {title}\n");
     let _ = writeln!(
         s,
-        "| status | engine fallbacks | solver restarts | non-finite outputs | rejected inputs |"
+        "| status | engine fallbacks | solver restarts | non-finite outputs | rejected inputs | model drifts |"
     );
-    let _ = writeln!(s, "|---|---|---|---|---|");
+    let _ = writeln!(s, "|---|---|---|---|---|---|");
     let status = if h.healthy() {
         "healthy"
     } else if h.degraded() {
@@ -207,8 +207,13 @@ pub fn health_markdown(title: &str, h: &crate::resilience::HealthReport) -> Stri
     };
     let _ = writeln!(
         s,
-        "| {} | {} | {} | {} | {} |",
-        status, h.engine_fallbacks, h.solver_restarts, h.nonfinite_outputs, h.rejected_inputs
+        "| {} | {} | {} | {} | {} | {} |",
+        status,
+        h.engine_fallbacks,
+        h.solver_restarts,
+        h.nonfinite_outputs,
+        h.rejected_inputs,
+        h.model_drifts
     );
     if !h.events.is_empty() {
         let _ = writeln!(s);
@@ -216,6 +221,99 @@ pub fn health_markdown(title: &str, h: &crate::resilience::HealthReport) -> Stri
             let _ = writeln!(s, "- {ev}");
         }
     }
+    s
+}
+
+/// An observed [`crate::profile::KernelProfile`] as markdown: the
+/// aggregate call/lane/throughput row plus the per-component byte
+/// attribution and the structural figures — the operator-facing view
+/// of `ctx.profile()` (also what the `profile` CLI subcommand prints).
+pub fn profile_markdown(title: &str, p: &crate::profile::KernelProfile) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(
+        s,
+        "| engine | calls | lanes | tile reuse | total bytes | bytes/lane | GFLOPS | GB/s |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|---|---|");
+    let _ = writeln!(
+        s,
+        "| {} | {} | {} | {:.2} | {} | {:.1} | {:.2} | {:.2} |",
+        p.engine,
+        p.calls,
+        p.lanes,
+        p.tile_reuse(),
+        p.total_bytes(),
+        p.bytes_per_lane(),
+        p.gflops(),
+        p.bandwidth_gbs()
+    );
+    let _ = writeln!(s, "\n| component | bytes |");
+    let _ = writeln!(s, "|---|---|");
+    for (name, b) in [
+        ("ell-stream", p.ell_bytes),
+        ("er-tail", p.er_bytes),
+        ("meta", p.meta_bytes),
+        ("x-fill", p.x_fill_bytes),
+        ("x-gather", p.x_gather_bytes),
+        ("halo", p.halo_bytes),
+        ("write", p.write_bytes),
+    ] {
+        let _ = writeln!(s, "| {name} | {b} |");
+    }
+    let _ = writeln!(
+        s,
+        "\nx footprint: {} lines; padding: {} slots ({} bytes/lane); ER scatter rows: {}",
+        p.x_lines, p.pad_slots, p.pad_bytes, p.er_scatter_rows
+    );
+    s
+}
+
+/// A [`crate::profile::DriftReport`] as markdown: one row per traffic
+/// component (observed per-lane vs the simulator's prediction, with
+/// the symmetric relative gap), then the total-bytes / DRAM-model /
+/// seconds summary and the verdict against the threshold.
+pub fn drift_markdown(title: &str, d: &crate::profile::DriftReport) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(s, "| component | observed bytes/lane | predicted bytes | rel drift |");
+    let _ = writeln!(s, "|---|---|---|---|");
+    for c in &d.components {
+        let _ = writeln!(
+            s,
+            "| {} | {:.0} | {:.0} | {:.1}% |",
+            c.component,
+            c.observed_bytes,
+            c.predicted_bytes,
+            100.0 * c.rel()
+        );
+    }
+    let _ = writeln!(
+        s,
+        "| total | {:.0} | {:.0} | {:.1}% |",
+        d.observed_bytes,
+        d.predicted_bytes,
+        100.0 * d.bytes_drift()
+    );
+    let _ = writeln!(
+        s,
+        "\nvs DRAM model ({} bytes): {:.1}%; secs {:.3e} observed vs {:.3e} predicted ({})",
+        d.predicted_dram_bytes,
+        100.0 * d.dram_drift(),
+        d.observed_secs,
+        d.predicted_secs,
+        if d.calibrated { "calibrated" } else { "uncalibrated" }
+    );
+    let verdict = if d.exceeded() {
+        let worst = d
+            .worst_component()
+            .filter(|c| c.rel() >= d.stamp())
+            .map_or("calibrated-secs", |c| c.component);
+        format!("DRIFTED: {} off by {:.1}%", worst, 100.0 * d.stamp())
+    } else {
+        format!("within bounds ({:.1}% <= {:.0}%)", 100.0 * d.stamp(), 100.0 * d.threshold)
+    };
+    let _ = writeln!(s, "{} — engine {}, {} lanes", verdict, d.engine, d.lanes);
     s
 }
 
@@ -390,6 +488,32 @@ pub fn traffic_validation_markdown(title: &str, rows: &[ValidationRow]) -> Strin
     s
 }
 
+/// The drift (calibration) ablation as markdown: the Heuristic pick
+/// with and without the fitted per-host calibration, the oracle score
+/// each won on, and the measured throughput of each pick.
+pub fn drift_ablation_markdown(title: &str, rows: &[DriftAblationRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "### {title}\n");
+    let _ = writeln!(
+        s,
+        "| variant | pick | oracle us | measured GFLOPS | fit residual | samples |"
+    );
+    let _ = writeln!(s, "|---|---|---|---|---|---|");
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {:.2} | {:.2} | {:.3} | {} |",
+            r.variant,
+            r.pick,
+            1e6 * r.score_secs,
+            r.measured_gflops,
+            r.fit_residual,
+            r.samples
+        );
+    }
+    s
+}
+
 pub fn ablation_markdown(title: &str, rows: &[AblationRow]) -> String {
     let mut s = String::new();
     let _ = writeln!(s, "### {title}\n");
@@ -504,16 +628,88 @@ mod tests {
         use crate::resilience::Health;
         let h = Health::default();
         let md = health_markdown("Health", &h.report());
-        assert!(md.contains("| healthy | 0 | 0 | 0 | 0 |"), "{md}");
+        assert!(md.contains("| healthy | 0 | 0 | 0 | 0 | 0 |"), "{md}");
         h.record_engine_fallback("ehyb plan failed; csr-vector serving");
         h.record_rejected_input("x[3] is NaN");
         let md = health_markdown("Health", &h.report());
-        assert!(md.contains("| degraded | 1 | 0 | 0 | 1 |"), "{md}");
+        assert!(md.contains("| degraded | 1 | 0 | 0 | 1 | 0 |"), "{md}");
         assert!(md.contains("- engine fallback: ehyb plan failed"), "{md}");
         // Guarded-but-not-downgraded contexts are "recovering".
         let h2 = Health::default();
         h2.record_solver_restart("cg breakdown at iter 2");
-        assert!(health_markdown("H", &h2.report()).contains("| recovering | 0 | 1 | 0 | 0 |"));
+        assert!(health_markdown("H", &h2.report()).contains("| recovering | 0 | 1 | 0 | 0 | 0 |"));
+        // A model-drift event is observability, not degradation: the
+        // context keeps serving its (re-searchable) plan.
+        let h3 = Health::default();
+        h3.record_model_drift("ehyb: x-gather off by 40% (bound 15%)");
+        let md = health_markdown("H", &h3.report());
+        assert!(md.contains("| recovering | 0 | 0 | 0 | 0 | 1 |"), "{md}");
+        assert!(md.contains("- model drift: ehyb: x-gather"), "{md}");
+    }
+
+    #[test]
+    fn profile_markdown_attributes_components() {
+        let p = crate::profile::KernelProfile {
+            engine: "ehyb".into(),
+            calls: 2,
+            lanes: 8,
+            spmm_blocks: 4,
+            ell_bytes: 4000,
+            er_bytes: 800,
+            meta_bytes: 200,
+            x_fill_bytes: 1000,
+            x_gather_bytes: 160,
+            write_bytes: 640,
+            halo_bytes: 0,
+            x_lines: 12,
+            pad_slots: 30,
+            pad_bytes: 300,
+            er_scatter_rows: 5,
+            flops: 16_000,
+            secs: 2e-3,
+        };
+        let md = profile_markdown("Profile", &p);
+        assert!(md.contains("| ehyb | 2 | 8 | 2.00 | 6800 | 850.0 |"), "{md}");
+        assert!(md.contains("| ell-stream | 4000 |"), "{md}");
+        assert!(md.contains("| halo | 0 |"), "{md}");
+        assert!(md.contains("x footprint: 12 lines; padding: 30 slots (300 bytes/lane)"), "{md}");
+    }
+
+    #[test]
+    fn drift_markdown_renders_verdicts() {
+        use crate::profile::{DriftReport, KernelProfile, DEFAULT_DRIFT_THRESHOLD};
+        use crate::traffic::ehyb_traffic;
+        let m = crate::sparse::gen::poisson2d::<f64>(16, 16);
+        let e = crate::preprocess::EhybPlan::build(&m, &Default::default()).unwrap().matrix;
+        let r = ehyb_traffic(&e, &crate::gpu::device::GpuDevice::v100());
+        let c = &r.components;
+        let agree = KernelProfile {
+            engine: "ehyb".into(),
+            calls: 1,
+            lanes: 1,
+            spmm_blocks: 1,
+            ell_bytes: c.ell,
+            er_bytes: c.er,
+            meta_bytes: c.meta,
+            x_fill_bytes: c.x_fill,
+            x_gather_bytes: c.x_gather,
+            write_bytes: c.write,
+            secs: 1e-4,
+            ..KernelProfile::default()
+        };
+        let d = DriftReport::new(&agree, &r, None, DEFAULT_DRIFT_THRESHOLD);
+        let md = drift_markdown("Drift", &d);
+        assert!(md.contains("| ell-stream |"), "{md}");
+        assert!(md.contains("| total |"), "{md}");
+        assert!(md.contains("within bounds (0.0% <= 15%)"), "{md}");
+        assert!(md.contains("uncalibrated"), "{md}");
+        // Inflate one component past the bound: the verdict names it.
+        let mut off = agree;
+        off.x_gather_bytes = off.x_gather_bytes * 3 + 64;
+        let d = DriftReport::new(&off, &r, None, DEFAULT_DRIFT_THRESHOLD);
+        let md = drift_markdown("Drift", &d);
+        assert!(d.exceeded());
+        assert!(md.contains("DRIFTED: x-gather off by"), "{md}");
     }
 
     #[test]
@@ -642,6 +838,20 @@ mod tests {
         assert!(md.contains("| fem-a | ehyb | ehyb | 10.00 | 10.00 | yes |"), "{md}");
         assert!(md.contains("| fem-b | sellp | csr-vector | 6.00 | 9.00 | no |"), "{md}");
         assert!(md.contains("agreement: 1/2 cases"), "{md}");
+    }
+
+    #[test]
+    fn drift_ablation_markdown_rows() {
+        let rows = vec![DriftAblationRow {
+            variant: "calibrated".into(),
+            pick: "ehyb".into(),
+            score_secs: 12.5e-6,
+            measured_gflops: 9.5,
+            fit_residual: 0.125,
+            samples: 4,
+        }];
+        let md = drift_ablation_markdown("Drift ablation", &rows);
+        assert!(md.contains("| calibrated | ehyb | 12.50 | 9.50 | 0.125 | 4 |"), "{md}");
     }
 
     #[test]

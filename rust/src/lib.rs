@@ -249,6 +249,33 @@
 //! request's full story from its trace ID. Tests pass
 //! [`Telemetry::with_fake_clock`] for bit-for-bit reproducible span
 //! trees.
+//!
+//! **Kernel profiling + model drift** ([`profile`], `profile` feature,
+//! on by default): the hot paths themselves count the data movement
+//! they observably perform — ELL-walk and ER-tail stream bytes,
+//! explicit x-cache fills, uncached gather footprint (distinct cache
+//! lines), SpMM register-tile reuse, pad-slot waste, per-shard halo
+//! bytes — as a handful of relaxed atomic adds per call
+//! ([`KernelProfile`], [`SpmvContext::profile`], also folded into the
+//! telemetry snapshot as `profile.*` gauges). [`SpmvContext::drift`]
+//! diffs the observation against the [`traffic`] replay of the same
+//! prepared plan, per component, and
+//! [`SpmvContext::observe_drift`] closes the loop: drift past the
+//! bound ([`SpmvContextBuilder::drift_threshold`]) records a
+//! model-drift health event, stamps the tuned plan's `drift`
+//! provenance, and re-persists it so a warm start re-searches instead
+//! of trusting a stale score. [`Calibration`] least-squares-fits
+//! per-level secs/byte from measured samples and rescales the traffic
+//! oracle's `predicted_secs` to the executing host (persisted beside
+//! plans via [`PlanStore::save_calibration`], applied via
+//! [`SpmvContextBuilder::calibration`]). With `--no-default-features`
+//! every recording call compiles to a no-op and the kernels are
+//! bitwise identical (`rust/tests/profile.rs`). `cargo run -- profile
+//! --seed 7` prints the observed-vs-predicted tables; `ablation
+//! --which drift` compares calibrated vs uncalibrated tuner picks.
+//!
+//! [`SpmvContextBuilder::drift_threshold`]: api::SpmvContextBuilder::drift_threshold
+//! [`SpmvContextBuilder::calibration`]: api::SpmvContextBuilder::calibration
 
 pub mod util;
 pub mod sparse;
@@ -259,6 +286,7 @@ pub mod spmv;
 pub mod shard;
 pub mod gpu;
 pub mod perfmodel;
+pub mod profile;
 pub mod traffic;
 pub mod runtime;
 pub mod coordinator;
@@ -270,6 +298,7 @@ pub mod telemetry;
 
 pub use api::{BatchBuf, EhybError, EngineKind, SpmvContext, VecBatch, VecBatchMut};
 pub use autotune::{Fingerprint, PlanStore, ScoreOracle, TuneLevel, TunedPlan};
+pub use profile::{Calibration, DriftReport, KernelProfile};
 pub use reorder::{ReorderQuality, ReorderSpec, Reordering};
 pub use resilience::{FaultInjector, FaultPlan, GuardLevel, HealthReport, RetryPolicy};
 pub use shard::{ShardSpec, ShardStrategy, ShardedEngine};

@@ -11,6 +11,7 @@
 //!   chaos       seeded fault-injection drills over the resilience layer
 //!   stats       seeded fake-clock workload -> full telemetry snapshot
 //!   trace       replay one request's story from its trace ID
+//!   profile     seeded workload -> observed kernel profile + model drift
 //!
 //! Matrix selection: `--gen poisson3d:24` style specs or `--mtx file.mtx`.
 
@@ -46,6 +47,7 @@ fn main() {
         "chaos" => cmd_chaos(&opts),
         "stats" => cmd_stats(&opts),
         "trace" => cmd_trace(&opts),
+        "profile" => cmd_profile(&opts),
         "--help" | "-h" | "help" => {
             usage();
             Ok(())
@@ -66,7 +68,7 @@ fn usage() {
     eprintln!(
         "usage: ehyb <cmd> [--gen SPEC | --mtx FILE] [options]\n\
          cmds: info | preprocess | spmv | solve | tune | bench | ablation | chaos\n\
-         \x20     | stats | trace\n\
+         \x20     | stats | trace | profile\n\
          gen specs: poisson2d:NX[:NY] poisson3d:N[:NY:NZ] stencil27:N\n\
                     elasticity:N unstructured:N circuit:N kkt:N banded:N\n\
          options: --vec-size V  --shards K|auto  --reorder none|degree|rcm|partrank[:K]|auto\n\
@@ -74,11 +76,12 @@ fn usage() {
                   --precond none|jacobi|spai0  --solver cg|bicgstab\n\
                   --table 1|2  --fig 2|3|4|5|6  --scale tiny|small|full\n\
                   --validate (bench: simulated-vs-measured engine ranking)\n\
-                  --out DIR  --which cache|partitioner|sort|vecsize|tuning|reorder|traffic\n\
+                  --out DIR  --which cache|partitioner|sort|vecsize|tuning|reorder|traffic|drift\n\
                   --level heuristic|measured  --oracle traffic|roofline  --budget-ms N\n\
                   --engine auto|ehyb|...\n\
-                  --cache DIR (tune; default $EHYB_TUNE_DIR)  --seed N (chaos/stats/trace)\n\
-                  --format md|json|prom (stats)  --trace N (trace; default: retried request)"
+                  --cache DIR (tune; default $EHYB_TUNE_DIR)  --seed N (chaos/stats/trace/profile)\n\
+                  --format md|json|prom (stats)  --trace N (trace; default: retried request)\n\
+                  --json (profile: machine-readable profile + drift report)"
     );
 }
 
@@ -695,6 +698,98 @@ fn cmd_ablation(opts: &HashMap<String, String>) -> anyhow::Result<()> {
                 &rows
             )
         );
+    }
+    if which == "drift" || which == "all" {
+        let rows = ablation::drift_ablation(&m, &cfg, &dev)?;
+        println!(
+            "{}",
+            report::drift_ablation_markdown(
+                "Oracle calibration (uncalibrated vs calibrated Heuristic pick)",
+                &rows
+            )
+        );
+        if let (Some(raw), Some(cal)) = (
+            rows.iter().find(|r| r.variant == "uncalibrated"),
+            rows.iter().find(|r| r.variant == "calibrated"),
+        ) {
+            anyhow::ensure!(
+                cal.measured_gflops >= 0.5 * raw.measured_gflops,
+                "calibrated pick measurably worse: {:.2} vs {:.2} GFLOPS",
+                cal.measured_gflops,
+                raw.measured_gflops
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `profile --seed N [--gen SPEC] [--json]`: run a seeded SpMV workload
+/// over the EHYB and csr-vector engines and print, per engine, the
+/// observed kernel profile and its drift against the traffic replay of
+/// the same prepared plan. With the `profile` feature compiled out
+/// (`--no-default-features`) there is nothing to observe; the command
+/// says so and exits cleanly.
+fn cmd_profile(opts: &HashMap<String, String>) -> anyhow::Result<()> {
+    use ehyb::runtime::json::{self, Json};
+    if !ehyb::profile::enabled() {
+        println!("profile feature is off (--no-default-features); nothing to observe");
+        return Ok(());
+    }
+    let seed = opts.get("seed").and_then(|v| v.parse().ok()).unwrap_or(7u64);
+    let m = build_matrix(opts)?;
+    let cfg = preprocess_cfg(opts);
+    let n = m.nrows();
+    let mut docs = Vec::new();
+    for kind in [EngineKind::Ehyb, EngineKind::CsrVector] {
+        let mut ctx =
+            SpmvContext::builder(m.clone()).engine(kind).config(cfg.clone()).build()?;
+        let x: Vec<f64> = (0..n)
+            .map(|i| ((i as u64).wrapping_mul(seed.max(1)) % 17) as f64 * 0.25 - 2.0)
+            .collect();
+        let mut y = vec![0.0f64; n];
+        for _ in 0..3 {
+            ctx.engine().spmv(&x, &mut y);
+        }
+        let p = ctx
+            .profile()
+            .ok_or_else(|| anyhow::anyhow!("{} recorded no profile", kind.name()))?;
+        let d = ctx
+            .observe_drift()
+            .ok_or_else(|| anyhow::anyhow!("{} produced no drift report", kind.name()))?;
+        if opts.contains_key("json") {
+            docs.push(json::obj([
+                ("engine", Json::Str(kind.name().to_string())),
+                ("profile", p.to_json()),
+                ("drift", d.to_json()),
+            ]));
+        } else {
+            println!(
+                "{}",
+                report::profile_markdown(
+                    &format!("Observed kernel profile — {} (seed {seed})", kind.name()),
+                    &p
+                )
+            );
+            println!(
+                "{}",
+                report::drift_markdown(
+                    &format!("Model drift — {} vs traffic replay", kind.name()),
+                    &d
+                )
+            );
+        }
+        let h = ctx.health();
+        if h.model_drifts > 0 {
+            println!("{}", report::health_markdown("Model-drift health", &h));
+        }
+    }
+    if opts.contains_key("json") {
+        let doc = json::obj([
+            ("schema", Json::Str("ehyb-profile-v1".to_string())),
+            ("seed", Json::Num(seed as f64)),
+            ("engines", Json::Arr(docs)),
+        ]);
+        println!("{}", doc.dump());
     }
     Ok(())
 }

@@ -1,0 +1,1141 @@
+//! Kernel-level profiling + model-drift observability (ISSUE 10
+//! tentpole): count the data movement the real hot paths *observably*
+//! perform, diff it against what [`crate::traffic`] *predicted* for
+//! the same prepared plan, and feed the measured gap back into the
+//! tuner as a calibration.
+//!
+//! The paper's whole argument is a data-movement argument — explicit
+//! shm caching of x and compact u16 columns cut bytes moved — and
+//! since PR 7 the traffic simulator *drives* tuning and reorder
+//! decisions. An autotuner is only as good as its cost model
+//! (Akbudak–Kayaaslan–Aykanat's OSKI analysis, PAPERS.md), so this
+//! layer closes the loop:
+//!
+//! 1. **Observe** — engines carry a [`ProfileState`] and record, per
+//!    `spmv`/`spmv_batch` call, the bytes their walk moves: ELL-walk
+//!    stream (slice values + u16 cols), explicit x-cache fills, ER-tail
+//!    stream and `y_idx_er` scatter width, x-gather footprint (distinct
+//!    cache lines via a coarse bitmap), SpMM register-block reuse,
+//!    pad-slot waste, per-shard halo bytes. All counters are
+//!    *structural* — they depend only on the matrix and plan, never on
+//!    x values — so the per-engine cost is computed once
+//!    ([`CallCost`]) and each call is a handful of relaxed atomic adds
+//!    plus one clock read. The aggregate is a [`KernelProfile`].
+//! 2. **Diff** — [`DriftReport`] replays the same plan through
+//!    [`crate::traffic`] and compares predicted vs observed bytes and
+//!    secs per component (ELL vs ER vs halo vs x-fetch), so a drifting
+//!    prediction names its cause.
+//! 3. **Calibrate** — [`Calibration`] least-squares-fits per-level
+//!    secs/byte scales from measured samples and rescales
+//!    [`crate::traffic::TrafficReport::predicted_secs`] so the
+//!    Heuristic oracle tracks the host it actually runs on; it
+//!    persists via the plan store's atomic JSON.
+//!
+//! Everything is behind the on-by-default `profile` cargo feature with
+//! the same twin discipline PR 9 used for `simd`: both legs always
+//! compile; with the feature off every recording method early-returns
+//! before touching a counter and [`timer`] returns `None`, so the
+//! kernels are bitwise identical either way (gated by
+//! `tests/profile.rs`).
+
+use crate::gpu::device::GpuDevice;
+use crate::runtime::json::{obj, Json};
+use crate::sparse::csr::Csr;
+use crate::sparse::ehyb::EhybMatrix;
+use crate::sparse::scalar::Scalar;
+use crate::traffic::{spmm_register_blocks, TrafficReport};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Default relative drift past which a prediction is considered to
+/// have diverged from observation (15%, the acceptance bound the CI
+/// smoke gate enforces on `drift-*` rows).
+pub const DEFAULT_DRIFT_THRESHOLD: f64 = 0.15;
+
+/// True when the crate was built with the `profile` feature; recording
+/// is a no-op otherwise.
+#[inline(always)]
+pub fn enabled() -> bool {
+    cfg!(feature = "profile")
+}
+
+/// Start a per-call timer — `None` (and thus zero cost) when the
+/// `profile` feature is off, so the off-leg never reads the clock.
+#[inline(always)]
+pub fn timer() -> Option<Instant> {
+    enabled().then(Instant::now)
+}
+
+/// Seconds elapsed since [`timer`], 0.0 on the off-leg.
+#[inline(always)]
+pub fn elapsed(t: Option<Instant>) -> f64 {
+    t.map_or(0.0, |t| t.elapsed().as_secs_f64())
+}
+
+/// Bytes one kernel invocation moves, split the same way
+/// [`crate::traffic::ComponentBytes`] attributes the simulated replay.
+/// Everything here is structural — computed once per engine from the
+/// prepared matrix, then multiplied per call by the register-block /
+/// lane counts — which is what makes recording cheap enough to leave
+/// on by default.
+///
+/// "Per block" fields are charged once per SpMM register block
+/// ([`spmm_register_blocks`]; a single `spmv` is one block of one
+/// lane); "per lane" fields are charged once per right-hand side.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CallCost {
+    /// Primary format stream, per block: ELL slice values + u16 cols
+    /// for EHYB, the whole cols+vals stream for CSR walks.
+    pub ell_stream: u64,
+    /// Descriptor bytes read with the primary stream, per block
+    /// (slice ptr/width pairs, CSR row pointers).
+    pub meta_block: u64,
+    /// ER-tail stream (u32 cols + values), per lane.
+    pub er_stream: u64,
+    /// ER descriptors + `y_idx_er` reads, per lane.
+    pub meta_lane: u64,
+    /// Explicit shared-memory x-cache fills, per lane.
+    pub x_fill: u64,
+    /// Uncached x gather lanes (ER tail / CSR gathers), logical bytes
+    /// per lane.
+    pub x_gather: u64,
+    /// Output-vector writes, per lane.
+    pub write: u64,
+    /// Distinct 64-byte x cache lines the uncached gathers touch
+    /// (coarse-bitmap footprint; the compulsory gather working set).
+    pub x_lines: u64,
+    /// Stored slots minus logical nonzeros (ELL + ER padding).
+    pub pad_slots: u64,
+    /// Stream bytes those pad slots waste in a single-lane walk.
+    pub pad_bytes: u64,
+    /// Rows the ER tail scatters into (`y_idx_er` width).
+    pub er_scatter_rows: u64,
+    /// Useful flops per lane (2·nnz).
+    pub flops: u64,
+}
+
+/// Count distinct 64-byte lines among `x[c]` touches (tau-byte
+/// elements, indices `< n`) with a flat bitmap — O(nnz) once per
+/// engine, never per call.
+fn distinct_x_lines(cols: impl Iterator<Item = usize>, n: usize, tau: u64) -> u64 {
+    const LINE: u64 = 64;
+    let nlines = (n as u64 * tau).div_ceil(LINE) as usize + 1;
+    let mut bm = vec![0u64; nlines.div_ceil(64)];
+    let mut count = 0u64;
+    for c in cols {
+        let l = (c as u64 * tau / LINE) as usize;
+        let (w, b) = (l / 64, l % 64);
+        if bm[w] & (1 << b) == 0 {
+            bm[w] |= 1 << b;
+            count += 1;
+        }
+    }
+    count
+}
+
+impl CallCost {
+    /// Closed-form cost of one EHYB walk — exactly the byte streams
+    /// [`crate::traffic::ehyb_traffic`] replays (`tests/profile.rs`
+    /// pins the equality component by component).
+    pub fn of_ehyb<S: Scalar>(e: &EhybMatrix<S>) -> CallCost {
+        let tau = S::BYTES as u64;
+        let h = e.slice_height as u64;
+        let ell_slots = e.ell_vals.len() as u64;
+        let er_slots = e.er_vals.len() as u64;
+        let er_slices = e.er_slice_width.len() as u64;
+        let padded = e.padded_rows() as u64;
+        let pad_slots =
+            (ell_slots - e.ell_nnz as u64) + (er_slots - e.er_nnz as u64);
+        CallCost {
+            ell_stream: ell_slots * (2 + tau),
+            meta_block: 8 * e.num_slices() as u64,
+            er_stream: er_slots * (4 + tau),
+            meta_lane: er_slices * (8 + 4 * h),
+            x_fill: padded * tau,
+            x_gather: er_slots * tau,
+            write: padded * tau + er_slices * h * tau,
+            // Only the ER tail gathers x uncached; the ELL part reads
+            // x through the explicit cache. Padding lanes gather too
+            // (they store column 0), exactly like the replay.
+            x_lines: distinct_x_lines(
+                e.er_cols.iter().map(|&c| c as usize),
+                e.padded_rows().max(e.n),
+                tau,
+            ),
+            pad_slots,
+            pad_bytes: (ell_slots - e.ell_nnz as u64) * (2 + tau)
+                + (er_slots - e.er_nnz as u64) * (4 + tau),
+            er_scatter_rows: e.er_rows as u64,
+            flops: 2 * e.nnz() as u64,
+        }
+    }
+
+    /// Closed-form cost of one CSR warp-per-row walk — the stream
+    /// shape [`crate::traffic::baseline_traffic`] replays for the
+    /// CSR-family engines.
+    pub fn of_csr<S: Scalar>(m: &Csr<S>) -> CallCost {
+        let tau = S::BYTES as u64;
+        let nnz = m.nnz() as u64;
+        let nrows = m.nrows() as u64;
+        CallCost {
+            ell_stream: nnz * (4 + tau),
+            meta_block: 8 * nrows,
+            x_gather: nnz * tau,
+            write: nrows * tau,
+            x_lines: distinct_x_lines(
+                (0..m.nrows()).flat_map(|r| m.row(r).0.iter().map(|&c| c as usize)),
+                m.ncols(),
+                tau,
+            ),
+            flops: 2 * nnz,
+            ..CallCost::default()
+        }
+    }
+
+    /// Closed-form cost of one halo-CSR accumulate pass
+    /// ([`EhybShard`](crate::shard::EhybShard)'s cross-shard tail).
+    /// Shaped like [`Self::of_csr`] minus the output write: the halo
+    /// accumulates into rows the diagonal block already produced, and
+    /// [`crate::traffic::shard_traffic`] charges each row's write once
+    /// in the block stream, not per tail. The gather bytes here are the
+    /// ones the shard snapshot reattributes to `halo_bytes`.
+    pub fn of_halo<S: Scalar>(halo: &Csr<S>) -> CallCost {
+        let tau = S::BYTES as u64;
+        let nnz = halo.nnz() as u64;
+        CallCost {
+            ell_stream: nnz * (4 + tau),
+            meta_block: 8 * halo.nrows() as u64,
+            x_gather: nnz * tau,
+            x_lines: distinct_x_lines(
+                (0..halo.nrows()).flat_map(|r| halo.row(r).0.iter().map(|&c| c as usize)),
+                halo.ncols(),
+                tau,
+            ),
+            flops: 2 * nnz,
+            ..CallCost::default()
+        }
+    }
+
+    /// Total bytes of a single-lane walk (one block, one lane).
+    pub fn lane_bytes(&self) -> u64 {
+        self.ell_stream + self.meta_block + self.er_stream + self.meta_lane
+            + self.x_fill
+            + self.x_gather
+            + self.write
+    }
+}
+
+/// Per-engine recording state: one lazily computed [`CallCost`] plus
+/// relaxed atomic accumulators, so profiling adds no locking to the
+/// parallel hot paths. With the `profile` feature off, [`record`]
+/// returns before touching anything.
+///
+/// [`record`]: ProfileState::record
+#[derive(Debug, Default)]
+pub struct ProfileState {
+    cost: OnceLock<CallCost>,
+    calls: AtomicU64,
+    lanes: AtomicU64,
+    blocks: AtomicU64,
+    ell_bytes: AtomicU64,
+    er_bytes: AtomicU64,
+    meta_bytes: AtomicU64,
+    x_fill_bytes: AtomicU64,
+    x_gather_bytes: AtomicU64,
+    write_bytes: AtomicU64,
+    nanos: AtomicU64,
+}
+
+impl ProfileState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one kernel invocation over `width` right-hand sides that
+    /// took `secs`. `cost` is evaluated once on the first profiled
+    /// call; per-block fields are multiplied by the register-block
+    /// count of `width`, per-lane fields by `width` — the same charge
+    /// [`crate::traffic::ehyb_batch_traffic`] makes, so observed and
+    /// simulated totals tie out exactly on the compulsory streams.
+    #[inline]
+    pub fn record(&self, width: usize, secs: f64, cost: impl FnOnce() -> CallCost) {
+        if !enabled() || width == 0 {
+            return;
+        }
+        let c = self.cost.get_or_init(cost);
+        let lanes = width as u64;
+        let nblocks = spmm_register_blocks(width).len() as u64;
+        self.calls.fetch_add(1, Relaxed);
+        self.lanes.fetch_add(lanes, Relaxed);
+        self.blocks.fetch_add(nblocks, Relaxed);
+        self.ell_bytes.fetch_add(c.ell_stream * nblocks, Relaxed);
+        self.er_bytes.fetch_add(c.er_stream * lanes, Relaxed);
+        self.meta_bytes.fetch_add(c.meta_block * nblocks + c.meta_lane * lanes, Relaxed);
+        self.x_fill_bytes.fetch_add(c.x_fill * lanes, Relaxed);
+        self.x_gather_bytes.fetch_add(c.x_gather * lanes, Relaxed);
+        self.write_bytes.fetch_add(c.write * lanes, Relaxed);
+        self.nanos.fetch_add((secs * 1e9) as u64, Relaxed);
+    }
+
+    /// Aggregate counters since construction, or `None` when nothing
+    /// was recorded (feature off, or no calls yet).
+    pub fn snapshot(&self, engine: &str) -> Option<KernelProfile> {
+        let calls = self.calls.load(Relaxed);
+        if calls == 0 {
+            return None;
+        }
+        let c = self.cost.get().copied().unwrap_or_default();
+        let lanes = self.lanes.load(Relaxed);
+        Some(KernelProfile {
+            engine: engine.to_string(),
+            calls,
+            lanes,
+            spmm_blocks: self.blocks.load(Relaxed),
+            ell_bytes: self.ell_bytes.load(Relaxed),
+            er_bytes: self.er_bytes.load(Relaxed),
+            meta_bytes: self.meta_bytes.load(Relaxed),
+            x_fill_bytes: self.x_fill_bytes.load(Relaxed),
+            x_gather_bytes: self.x_gather_bytes.load(Relaxed),
+            write_bytes: self.write_bytes.load(Relaxed),
+            halo_bytes: 0,
+            x_lines: c.x_lines,
+            pad_slots: c.pad_slots,
+            pad_bytes: c.pad_bytes,
+            er_scatter_rows: c.er_scatter_rows,
+            flops: c.flops * lanes,
+            secs: self.nanos.load(Relaxed) as f64 / 1e9,
+        })
+    }
+}
+
+/// Aggregated observed data movement for one engine (or one sharded
+/// fan-out, via [`KernelProfile::merge`]). Byte counters are totals
+/// across all recorded calls; `x_lines`/`pad_slots`/`pad_bytes`/
+/// `er_scatter_rows` are structural per-engine figures.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KernelProfile {
+    pub engine: String,
+    /// Kernel invocations recorded.
+    pub calls: u64,
+    /// Right-hand sides processed (a plain `spmv` is one lane).
+    pub lanes: u64,
+    /// SpMM register blocks executed — `lanes / spmm_blocks` is the
+    /// observed register-tile reuse of the fused path.
+    pub spmm_blocks: u64,
+    /// Primary format stream bytes (ELL slice data + u16 cols; the
+    /// whole cols+vals stream for CSR engines).
+    pub ell_bytes: u64,
+    /// ER-tail stream bytes.
+    pub er_bytes: u64,
+    /// Descriptor bytes (slice/row pointers, `y_idx_er`).
+    pub meta_bytes: u64,
+    /// Explicit shared-memory x-cache fill bytes.
+    pub x_fill_bytes: u64,
+    /// Uncached x gather bytes (logical).
+    pub x_gather_bytes: u64,
+    /// Output-vector write bytes.
+    pub write_bytes: u64,
+    /// Cross-shard halo gather bytes (sharded engines only).
+    pub halo_bytes: u64,
+    /// Distinct 64-byte x lines the uncached gathers touch.
+    pub x_lines: u64,
+    /// Stored slots minus logical nonzeros (format padding).
+    pub pad_slots: u64,
+    /// Stream bytes wasted on padding per single-lane walk.
+    pub pad_bytes: u64,
+    /// Rows the ER tail scatters into.
+    pub er_scatter_rows: u64,
+    /// Useful flops across all lanes.
+    pub flops: u64,
+    /// Wall-clock seconds inside recorded kernel calls.
+    pub secs: f64,
+}
+
+impl KernelProfile {
+    /// Total observed bytes across all components and calls.
+    pub fn total_bytes(&self) -> u64 {
+        self.ell_bytes
+            + self.er_bytes
+            + self.meta_bytes
+            + self.x_fill_bytes
+            + self.x_gather_bytes
+            + self.write_bytes
+            + self.halo_bytes
+    }
+
+    /// Observed bytes per right-hand side.
+    pub fn bytes_per_lane(&self) -> f64 {
+        self.total_bytes() as f64 / self.lanes.max(1) as f64
+    }
+
+    /// Observed register-tile reuse: lanes served per matrix stream.
+    pub fn tile_reuse(&self) -> f64 {
+        self.lanes as f64 / self.spmm_blocks.max(1) as f64
+    }
+
+    /// Observed arithmetic throughput over the recorded calls.
+    pub fn gflops(&self) -> f64 {
+        if self.secs <= 0.0 {
+            return 0.0;
+        }
+        self.flops as f64 / self.secs / 1e9
+    }
+
+    /// Observed effective bandwidth (logical bytes over wall time).
+    pub fn bandwidth_gbs(&self) -> f64 {
+        if self.secs <= 0.0 {
+            return 0.0;
+        }
+        self.total_bytes() as f64 / self.secs / 1e9
+    }
+
+    /// Fold another engine's profile into this one — used by the
+    /// sharded fan-out, where per-shard structural fields (footprint,
+    /// padding, scatter width) sum over disjoint shards.
+    pub fn merge(&mut self, other: &KernelProfile) {
+        self.calls += other.calls;
+        self.lanes += other.lanes;
+        self.spmm_blocks += other.spmm_blocks;
+        self.ell_bytes += other.ell_bytes;
+        self.er_bytes += other.er_bytes;
+        self.meta_bytes += other.meta_bytes;
+        self.x_fill_bytes += other.x_fill_bytes;
+        self.x_gather_bytes += other.x_gather_bytes;
+        self.write_bytes += other.write_bytes;
+        self.halo_bytes += other.halo_bytes;
+        self.x_lines += other.x_lines;
+        self.pad_slots += other.pad_slots;
+        self.pad_bytes += other.pad_bytes;
+        self.er_scatter_rows += other.er_scatter_rows;
+        self.flops += other.flops;
+        self.secs += other.secs;
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("engine", Json::Str(self.engine.clone())),
+            ("calls", Json::Num(self.calls as f64)),
+            ("lanes", Json::Num(self.lanes as f64)),
+            ("spmm_blocks", Json::Num(self.spmm_blocks as f64)),
+            ("ell_bytes", Json::Num(self.ell_bytes as f64)),
+            ("er_bytes", Json::Num(self.er_bytes as f64)),
+            ("meta_bytes", Json::Num(self.meta_bytes as f64)),
+            ("x_fill_bytes", Json::Num(self.x_fill_bytes as f64)),
+            ("x_gather_bytes", Json::Num(self.x_gather_bytes as f64)),
+            ("write_bytes", Json::Num(self.write_bytes as f64)),
+            ("halo_bytes", Json::Num(self.halo_bytes as f64)),
+            ("x_lines", Json::Num(self.x_lines as f64)),
+            ("pad_slots", Json::Num(self.pad_slots as f64)),
+            ("pad_bytes", Json::Num(self.pad_bytes as f64)),
+            ("er_scatter_rows", Json::Num(self.er_scatter_rows as f64)),
+            ("flops", Json::Num(self.flops as f64)),
+            ("secs", Json::Num(self.secs)),
+        ])
+    }
+}
+
+/// One component's observed-vs-predicted byte comparison. Observed is
+/// normalized per lane; predicted is the simulator's figure for the
+/// replayed call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComponentDrift {
+    pub component: &'static str,
+    pub observed_bytes: f64,
+    pub predicted_bytes: f64,
+}
+
+impl ComponentDrift {
+    /// Symmetric relative gap: |observed − predicted| over the larger
+    /// of the two (0 when both are 0), so it stays in [0, 1].
+    pub fn rel(&self) -> f64 {
+        let base = self.predicted_bytes.max(self.observed_bytes);
+        if base <= 0.0 {
+            return 0.0;
+        }
+        (self.observed_bytes - self.predicted_bytes).abs() / base
+    }
+}
+
+/// The sim-vs-observed cross-check: per-component byte attribution
+/// plus the secs gap the calibration exists to close. Built by
+/// [`DriftReport::new`] from a [`KernelProfile`] and the
+/// [`TrafficReport`] of the same prepared plan.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftReport {
+    pub engine: String,
+    /// Lanes the observation averaged over.
+    pub lanes: u64,
+    /// Relative bound past which [`DriftReport::exceeded`] fires.
+    pub threshold: f64,
+    pub components: Vec<ComponentDrift>,
+    /// Observed logical bytes per lane.
+    pub observed_bytes: f64,
+    /// Predicted logical bytes (component total of the replay).
+    pub predicted_bytes: f64,
+    /// Predicted sector-granular DRAM bytes — differs from the logical
+    /// figure by L2 hits and sector rounding, so a gap here that the
+    /// components don't show is cache-model, not stream-model, drift.
+    pub predicted_dram_bytes: u64,
+    /// Measured wall seconds per lane.
+    pub observed_secs: f64,
+    /// Simulator seconds, calibrated when a [`Calibration`] was given.
+    pub predicted_secs: f64,
+    /// Whether `predicted_secs` went through a calibration.
+    pub calibrated: bool,
+}
+
+impl DriftReport {
+    /// Diff `observed` against the replay `predicted` of the same
+    /// plan. Observed counters are normalized per lane, so a
+    /// single-vector workload compares exactly against the B=1 replay;
+    /// fused batch lanes legitimately show *less* observed ELL stream
+    /// than the B=1 prediction — that is the register-tile reuse, and
+    /// it is attributed to the named `ell-stream` component.
+    pub fn new(
+        observed: &KernelProfile,
+        predicted: &TrafficReport,
+        calibration: Option<&Calibration>,
+        threshold: f64,
+    ) -> DriftReport {
+        let lanes = observed.lanes.max(1) as f64;
+        let comp = |name: &'static str, obs: u64, pred: u64| ComponentDrift {
+            component: name,
+            observed_bytes: obs as f64 / lanes,
+            predicted_bytes: pred as f64,
+        };
+        let c = &predicted.components;
+        let components = vec![
+            comp("ell-stream", observed.ell_bytes, c.ell),
+            comp("er-tail", observed.er_bytes, c.er),
+            comp("meta", observed.meta_bytes, c.meta),
+            comp("x-fill", observed.x_fill_bytes, c.x_fill),
+            comp("x-gather", observed.x_gather_bytes, c.x_gather),
+            comp("halo", observed.halo_bytes, c.halo),
+            comp("write", observed.write_bytes, c.write),
+        ];
+        let predicted_secs = match calibration {
+            Some(cal) => cal.apply(predicted),
+            None => predicted.predicted_secs,
+        };
+        DriftReport {
+            engine: observed.engine.clone(),
+            lanes: observed.lanes,
+            threshold,
+            components,
+            observed_bytes: observed.total_bytes() as f64 / lanes,
+            predicted_bytes: c.total() as f64,
+            predicted_dram_bytes: predicted.dram_total_bytes(),
+            observed_secs: observed.secs / lanes,
+            predicted_secs,
+            calibrated: calibration.is_some(),
+        }
+    }
+
+    /// Relative gap on total logical bytes.
+    pub fn bytes_drift(&self) -> f64 {
+        ComponentDrift {
+            component: "total",
+            observed_bytes: self.observed_bytes,
+            predicted_bytes: self.predicted_bytes,
+        }
+        .rel()
+    }
+
+    /// Relative gap between observed logical bytes and the simulator's
+    /// sector-granular DRAM figure — the acceptance-criterion
+    /// comparison; when it exceeds the bound, [`Self::worst_component`]
+    /// names the stream responsible.
+    pub fn dram_drift(&self) -> f64 {
+        ComponentDrift {
+            component: "dram",
+            observed_bytes: self.observed_bytes,
+            predicted_bytes: self.predicted_dram_bytes as f64,
+        }
+        .rel()
+    }
+
+    /// Relative gap on seconds (meaningful once calibrated; the raw
+    /// V100 model is not expected to track a CPU host).
+    pub fn secs_drift(&self) -> f64 {
+        ComponentDrift {
+            component: "secs",
+            observed_bytes: self.observed_secs,
+            predicted_bytes: self.predicted_secs,
+        }
+        .rel()
+    }
+
+    /// Largest per-component relative gap.
+    pub fn max_rel_drift(&self) -> f64 {
+        self.components.iter().map(|c| c.rel()).fold(0.0, f64::max)
+    }
+
+    /// The component with the largest relative gap — the named cause a
+    /// drifting prediction is attributed to.
+    pub fn worst_component(&self) -> Option<&ComponentDrift> {
+        self.components
+            .iter()
+            .max_by(|a, b| a.rel().total_cmp(&b.rel()))
+    }
+
+    /// The scalar a plan's drift provenance records
+    /// (`TunedPlan::drift`): the worst relative gap [`Self::exceeded`]
+    /// gates on — component bytes, plus calibrated seconds once a
+    /// calibration claims to track this host.
+    pub fn stamp(&self) -> f64 {
+        let mut d = self.max_rel_drift();
+        if self.calibrated {
+            d = d.max(self.secs_drift());
+        }
+        d
+    }
+
+    /// True when the model has observably drifted: a component's byte
+    /// attribution is off by more than the threshold, or — once a
+    /// calibration claims to track this host — the calibrated seconds
+    /// are. This is the predicate that records a `ModelDrift` health
+    /// event and invalidates cached plans.
+    pub fn exceeded(&self) -> bool {
+        self.stamp() > self.threshold
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("engine", Json::Str(self.engine.clone())),
+            ("lanes", Json::Num(self.lanes as f64)),
+            ("threshold", Json::Num(self.threshold)),
+            ("observed_bytes", Json::Num(self.observed_bytes)),
+            ("predicted_bytes", Json::Num(self.predicted_bytes)),
+            ("predicted_dram_bytes", Json::Num(self.predicted_dram_bytes as f64)),
+            ("observed_secs", Json::Num(self.observed_secs)),
+            ("predicted_secs", Json::Num(self.predicted_secs)),
+            ("calibrated", Json::Bool(self.calibrated)),
+            ("max_rel_drift", Json::Num(self.max_rel_drift())),
+            ("exceeded", Json::Bool(self.exceeded())),
+            (
+                "components",
+                Json::Arr(
+                    self.components
+                        .iter()
+                        .map(|c| {
+                            obj([
+                                ("component", Json::Str(c.component.to_string())),
+                                ("observed_bytes", Json::Num(c.observed_bytes)),
+                                ("predicted_bytes", Json::Num(c.predicted_bytes)),
+                                ("rel", Json::Num(c.rel())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One measured data point for the calibration fit: the simulator's
+/// per-level byte totals for a plan plus the wall seconds a real call
+/// over that plan took.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CalSample {
+    pub dram_bytes: f64,
+    pub l2_bytes: f64,
+    pub shm_bytes: f64,
+    pub measured_secs: f64,
+}
+
+impl CalSample {
+    pub fn of(r: &TrafficReport, measured_secs: f64) -> CalSample {
+        CalSample {
+            dram_bytes: r.dram.total_bytes() as f64,
+            l2_bytes: r.l2.total_bytes() as f64,
+            shm_bytes: r.shm.read_bytes as f64,
+            measured_secs,
+        }
+    }
+}
+
+/// Least-squares per-level secs/byte scales mapping simulated traffic
+/// to wall time on the host that actually runs the kernels:
+/// `secs ≈ dram·a + l2·b + shm·c + base`. Fit from measured probes
+/// ([`Calibration::fit`]), persisted next to plans via the plan
+/// store's atomic JSON, and applied where the Heuristic oracle reads
+/// `predicted_secs` — an additive refit of the simulator's
+/// bottleneck-max model, which a linear fit can approximate because
+/// the per-engine mixes keep the level totals distinguishable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Calibration {
+    /// Seconds per DRAM byte.
+    pub dram_secs_per_byte: f64,
+    /// Seconds per L2 byte.
+    pub l2_secs_per_byte: f64,
+    /// Seconds per shared-memory byte.
+    pub shm_secs_per_byte: f64,
+    /// Fixed per-call overhead (launch/dispatch analogue).
+    pub base_secs: f64,
+    /// Samples the fit consumed.
+    pub samples: usize,
+    /// RMS relative residual of the fit over its own samples.
+    pub residual: f64,
+}
+
+/// Solve a 4×4 linear system by Gaussian elimination with partial
+/// pivoting — deterministic, no dependencies. `None` on a (nearly)
+/// singular pivot.
+fn solve4(mut a: [[f64; 4]; 4], mut b: [f64; 4]) -> Option<[f64; 4]> {
+    for col in 0..4 {
+        let piv = (col..4)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        if a[piv][col].abs() < 1e-300 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in col + 1..4 {
+            let f = a[row][col] / a[col][col];
+            for k in col..4 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; 4];
+    for col in (0..4).rev() {
+        let mut s = b[col];
+        for k in col + 1..4 {
+            s -= a[col][k] * x[k];
+        }
+        x[col] = s / a[col][col];
+    }
+    Some(x)
+}
+
+impl Calibration {
+    /// Ridge-damped least squares over `samples`; `None` with fewer
+    /// than two samples or a degenerate system. Features are scaled to
+    /// unit max before solving (bytes are ~1e6×, secs ~1e-4×, so raw
+    /// normal equations would be hopelessly conditioned), and the
+    /// coefficients are clamped non-negative so `apply` stays
+    /// monotone in traffic.
+    pub fn fit(samples: &[CalSample]) -> Option<Calibration> {
+        if samples.len() < 2 {
+            return None;
+        }
+        let feats: Vec<[f64; 4]> = samples
+            .iter()
+            .map(|s| [s.dram_bytes, s.l2_bytes, s.shm_bytes, 1.0])
+            .collect();
+        let mut scale = [0.0f64; 4];
+        for f in &feats {
+            for j in 0..4 {
+                scale[j] = scale[j].max(f[j].abs());
+            }
+        }
+        for s in &mut scale {
+            if *s <= 0.0 {
+                *s = 1.0;
+            }
+        }
+        let mut a = [[0.0f64; 4]; 4];
+        let mut b = [0.0f64; 4];
+        for (f, s) in feats.iter().zip(samples) {
+            let fs = [f[0] / scale[0], f[1] / scale[1], f[2] / scale[2], f[3] / scale[3]];
+            for i in 0..4 {
+                for j in 0..4 {
+                    a[i][j] += fs[i] * fs[j];
+                }
+                b[i] += fs[i] * s.measured_secs;
+            }
+        }
+        // Ridge damping keeps the tiny system solvable when engines
+        // share a bottleneck (collinear level totals).
+        let lam = 1e-9 * (a[0][0] + a[1][1] + a[2][2] + a[3][3]).max(1e-12);
+        for i in 0..4 {
+            a[i][i] += lam;
+        }
+        let x = solve4(a, b)?;
+        let coef = [
+            (x[0] / scale[0]).max(0.0),
+            (x[1] / scale[1]).max(0.0),
+            (x[2] / scale[2]).max(0.0),
+            (x[3] / scale[3]).max(0.0),
+        ];
+        let mut rss = 0.0;
+        let mut n = 0usize;
+        for s in samples {
+            if s.measured_secs > 0.0 {
+                let pred = coef[0] * s.dram_bytes
+                    + coef[1] * s.l2_bytes
+                    + coef[2] * s.shm_bytes
+                    + coef[3];
+                rss += ((pred - s.measured_secs) / s.measured_secs).powi(2);
+                n += 1;
+            }
+        }
+        Some(Calibration {
+            dram_secs_per_byte: coef[0],
+            l2_secs_per_byte: coef[1],
+            shm_secs_per_byte: coef[2],
+            base_secs: coef[3],
+            samples: samples.len(),
+            residual: if n > 0 { (rss / n as f64).sqrt() } else { 0.0 },
+        })
+    }
+
+    /// Calibrated seconds for a simulated report (floored at 1 ps so
+    /// score comparisons stay well-defined).
+    pub fn apply(&self, r: &TrafficReport) -> f64 {
+        (self.dram_secs_per_byte * r.dram.total_bytes() as f64
+            + self.l2_secs_per_byte * r.l2.total_bytes() as f64
+            + self.shm_secs_per_byte * r.shm.read_bytes as f64
+            + self.base_secs)
+            .max(1e-12)
+    }
+
+    /// The un-fit identity for `dev`: the simulator's own bandwidths,
+    /// i.e. `apply` ≈ the additive reading of `predicted_secs`.
+    pub fn uncalibrated(dev: &GpuDevice) -> Calibration {
+        let shm_bw = dev.shm_bytes_per_cycle * dev.sms as f64 * dev.total_cycles_per_sec();
+        Calibration {
+            dram_secs_per_byte: 1.0 / dev.hbm_bw,
+            l2_secs_per_byte: 1.0 / dev.l2_bw,
+            shm_secs_per_byte: 1.0 / shm_bw,
+            base_secs: dev.launch_overhead,
+            samples: 0,
+            residual: 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("schema", Json::Str("ehyb-calibration-v1".to_string())),
+            ("dram_secs_per_byte", Json::Num(self.dram_secs_per_byte)),
+            ("l2_secs_per_byte", Json::Num(self.l2_secs_per_byte)),
+            ("shm_secs_per_byte", Json::Num(self.shm_secs_per_byte)),
+            ("base_secs", Json::Num(self.base_secs)),
+            ("samples", Json::Num(self.samples as f64)),
+            ("residual", Json::Num(self.residual)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Calibration> {
+        crate::ensure!(
+            j.get("schema").and_then(Json::as_str) == Some("ehyb-calibration-v1"),
+            "not an ehyb-calibration-v1 document"
+        );
+        let num = |k: &str| -> crate::Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| {
+                crate::EhybError::Parse(format!("calibration missing numeric field {k:?}"))
+            })
+        };
+        let c = Calibration {
+            dram_secs_per_byte: num("dram_secs_per_byte")?,
+            l2_secs_per_byte: num("l2_secs_per_byte")?,
+            shm_secs_per_byte: num("shm_secs_per_byte")?,
+            base_secs: num("base_secs")?,
+            samples: num("samples")? as usize,
+            residual: num("residual")?,
+        };
+        crate::ensure!(
+            c.dram_secs_per_byte >= 0.0
+                && c.l2_secs_per_byte >= 0.0
+                && c.shm_secs_per_byte >= 0.0
+                && c.base_secs >= 0.0
+                && c.residual.is_finite(),
+            "calibration coefficients out of range"
+        );
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::preprocess::{EhybPlan, PreprocessConfig};
+    use crate::sparse::gen::{poisson2d, unstructured_mesh};
+    use crate::traffic::{baseline_traffic, ehyb_traffic};
+
+    fn dev() -> GpuDevice {
+        GpuDevice::v100()
+    }
+
+    fn fixture() -> EhybMatrix<f64> {
+        let m = unstructured_mesh::<f64>(40, 40, 0.5, 5);
+        EhybPlan::build(&m, &PreprocessConfig::default()).unwrap().matrix
+    }
+
+    #[test]
+    fn ehyb_cost_matches_replay_components() {
+        let e = fixture();
+        let cost = CallCost::of_ehyb(&e);
+        let r = ehyb_traffic(&e, &dev());
+        let c = &r.components;
+        assert_eq!(cost.ell_stream, c.ell);
+        assert_eq!(cost.er_stream, c.er);
+        assert_eq!(cost.meta_block + cost.meta_lane, c.meta);
+        assert_eq!(cost.x_fill, c.x_fill);
+        assert_eq!(cost.x_gather, c.x_gather);
+        assert_eq!(cost.write, c.write);
+        assert_eq!(cost.lane_bytes(), c.total());
+    }
+
+    #[test]
+    fn csr_cost_matches_replay_components() {
+        let m = poisson2d::<f64>(24, 24);
+        let cost = CallCost::of_csr(&m);
+        let r = baseline_traffic(crate::api::EngineKind::CsrVector, &m, &dev());
+        let c = &r.components;
+        assert_eq!(cost.ell_stream, c.ell);
+        assert_eq!(cost.meta_block, c.meta);
+        assert_eq!(cost.x_gather, c.x_gather);
+        assert_eq!(cost.write, c.write);
+    }
+
+    #[test]
+    fn x_footprint_counts_distinct_lines_once() {
+        // 8 f64 elements per 64-byte line: columns 0..8 share line 0.
+        assert_eq!(distinct_x_lines([0usize, 1, 7, 7, 0].into_iter(), 16, 8), 1);
+        assert_eq!(distinct_x_lines([0usize, 8, 16].into_iter(), 32, 8), 3);
+        assert_eq!(distinct_x_lines(std::iter::empty(), 4, 8), 0);
+    }
+
+    #[cfg(feature = "profile")]
+    #[test]
+    fn record_charges_blocks_and_lanes() {
+        let cost = CallCost {
+            ell_stream: 100,
+            meta_block: 10,
+            er_stream: 7,
+            meta_lane: 3,
+            x_fill: 50,
+            x_gather: 5,
+            write: 20,
+            flops: 11,
+            ..CallCost::default()
+        };
+        let st = ProfileState::new();
+        assert!(st.snapshot("e").is_none(), "no calls yet");
+        st.record(1, 0.5, || cost);
+        st.record(7, 1.5, || cost); // blocks: 4+2+1 → 3
+        let p = st.snapshot("e").unwrap();
+        assert_eq!((p.calls, p.lanes, p.spmm_blocks), (2, 8, 4));
+        assert_eq!(p.ell_bytes, 100 * 4);
+        assert_eq!(p.meta_bytes, 10 * 4 + 3 * 8);
+        assert_eq!(p.er_bytes, 7 * 8);
+        assert_eq!(p.x_fill_bytes, 50 * 8);
+        assert_eq!(p.x_gather_bytes, 5 * 8);
+        assert_eq!(p.write_bytes, 20 * 8);
+        assert_eq!(p.flops, 11 * 8);
+        assert!((p.secs - 2.0).abs() < 1e-6);
+        assert!((p.tile_reuse() - 2.0).abs() < 1e-12);
+        // Width 0 records nothing.
+        st.record(0, 9.0, || cost);
+        assert_eq!(st.snapshot("e").unwrap().calls, 2);
+    }
+
+    #[cfg(not(feature = "profile"))]
+    #[test]
+    fn recording_is_a_no_op_when_feature_off() {
+        let st = ProfileState::new();
+        st.record(4, 1.0, CallCost::default);
+        assert!(st.snapshot("e").is_none());
+        assert!(timer().is_none());
+        assert_eq!(elapsed(None), 0.0);
+    }
+
+    #[test]
+    fn zero_drift_when_observed_equals_replay() {
+        let e = fixture();
+        let r = ehyb_traffic(&e, &dev());
+        let st = ProfileState::new();
+        st.record(1, 1e-3, || CallCost::of_ehyb(&e));
+        if let Some(p) = st.snapshot("ehyb") {
+            let d = DriftReport::new(&p, &r, None, DEFAULT_DRIFT_THRESHOLD);
+            assert_eq!(d.max_rel_drift(), 0.0, "{d:?}");
+            assert_eq!(d.stamp(), 0.0, "uncalibrated stamp ignores secs");
+            assert!(!d.exceeded());
+            assert_eq!(d.bytes_drift(), 0.0);
+            // Uncalibrated secs never trip the predicate.
+            assert!(d.secs_drift() > 0.0);
+        }
+    }
+
+    #[test]
+    fn worst_component_names_an_injected_gap() {
+        let e = fixture();
+        let r = ehyb_traffic(&e, &dev());
+        let st = ProfileState::new();
+        st.record(1, 1e-3, || {
+            let mut c = CallCost::of_ehyb(&e);
+            c.x_gather *= 3; // model the tail gathering 3× the prediction
+            c
+        });
+        if let Some(p) = st.snapshot("ehyb") {
+            let d = DriftReport::new(&p, &r, None, 0.05);
+            assert!(d.exceeded());
+            assert_eq!(d.worst_component().unwrap().component, "x-gather");
+            assert!(d.max_rel_drift() > 0.5);
+        }
+    }
+
+    #[test]
+    fn component_rel_is_symmetric_and_bounded() {
+        let c = ComponentDrift { component: "c", observed_bytes: 50.0, predicted_bytes: 100.0 };
+        let f = ComponentDrift { component: "c", observed_bytes: 100.0, predicted_bytes: 50.0 };
+        assert_eq!(c.rel(), f.rel());
+        assert!((c.rel() - 0.5).abs() < 1e-12);
+        let z = ComponentDrift { component: "c", observed_bytes: 0.0, predicted_bytes: 0.0 };
+        assert_eq!(z.rel(), 0.0);
+    }
+
+    #[test]
+    fn fit_recovers_a_known_linear_model() {
+        let truth = [2.0e-12, 5.0e-13, 1.0e-13, 3.0e-6];
+        let mut samples = Vec::new();
+        for (i, j) in [(1u64, 3u64), (2, 1), (5, 4), (9, 2), (3, 7), (8, 8)] {
+            // i·j keeps the three byte features linearly independent so
+            // the fit recovers the generating coefficients exactly.
+            let (dram, l2, shm) =
+                (i as f64 * 1e6, (i * j + 1) as f64 * 2e6, j as f64 * 5e5);
+            samples.push(CalSample {
+                dram_bytes: dram,
+                l2_bytes: l2,
+                shm_bytes: shm,
+                measured_secs: truth[0] * dram + truth[1] * l2 + truth[2] * shm + truth[3],
+            });
+        }
+        let cal = Calibration::fit(&samples).unwrap();
+        assert!(cal.residual < 1e-6, "residual {}", cal.residual);
+        for s in &samples {
+            let pred = cal.dram_secs_per_byte * s.dram_bytes
+                + cal.l2_secs_per_byte * s.l2_bytes
+                + cal.shm_secs_per_byte * s.shm_bytes
+                + cal.base_secs;
+            assert!(
+                (pred - s.measured_secs).abs() / s.measured_secs < 1e-6,
+                "pred {pred} vs {s:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fit_needs_two_samples_and_survives_collinearity() {
+        let one = CalSample { dram_bytes: 1e6, l2_bytes: 2e6, shm_bytes: 0.0, measured_secs: 1e-4 };
+        assert!(Calibration::fit(&[one]).is_none());
+        // Perfectly collinear samples: ridge damping must still yield
+        // a usable (non-NaN, non-negative) fit.
+        let col: Vec<CalSample> = (1..=4)
+            .map(|k| CalSample {
+                dram_bytes: k as f64 * 1e6,
+                l2_bytes: k as f64 * 2e6,
+                shm_bytes: k as f64 * 1e5,
+                measured_secs: k as f64 * 1e-4,
+            })
+            .collect();
+        let cal = Calibration::fit(&col).unwrap();
+        assert!(cal.dram_secs_per_byte.is_finite() && cal.dram_secs_per_byte >= 0.0);
+        assert!(cal.residual.is_finite());
+    }
+
+    #[test]
+    fn calibration_json_roundtrip() {
+        let cal = Calibration {
+            dram_secs_per_byte: 1.25e-11,
+            l2_secs_per_byte: 4.5e-13,
+            shm_secs_per_byte: 6.0e-14,
+            base_secs: 2.5e-6,
+            samples: 9,
+            residual: 0.125,
+        };
+        let back = Calibration::from_json(&Json::parse(&cal.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back, cal);
+        assert!(Calibration::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"schema":"ehyb-calibration-v1","dram_secs_per_byte":-1,
+            "l2_secs_per_byte":0,"shm_secs_per_byte":0,"base_secs":0,
+            "samples":2,"residual":0}"#;
+        assert!(Calibration::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn uncalibrated_apply_tracks_the_sim_model() {
+        let e = fixture();
+        let r = ehyb_traffic(&e, &dev());
+        let cal = Calibration::uncalibrated(&dev());
+        // The additive reading is within a small factor of the
+        // bottleneck-max model (it sums instead of maxing).
+        let add = cal.apply(&r);
+        assert!(add >= r.predicted_secs * 0.3 && add <= r.predicted_secs * 3.5, "{add}");
+    }
+
+    #[test]
+    fn merge_sums_shard_profiles() {
+        let mut a = KernelProfile {
+            engine: "sharded".into(),
+            calls: 2,
+            lanes: 2,
+            spmm_blocks: 2,
+            ell_bytes: 100,
+            halo_bytes: 7,
+            x_lines: 10,
+            flops: 40,
+            secs: 0.5,
+            ..KernelProfile::default()
+        };
+        let b = KernelProfile {
+            engine: "ehyb-shard".into(),
+            calls: 2,
+            lanes: 2,
+            spmm_blocks: 2,
+            ell_bytes: 50,
+            halo_bytes: 3,
+            x_lines: 4,
+            flops: 10,
+            secs: 0.25,
+            ..KernelProfile::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.engine, "sharded", "merge keeps the aggregate tag");
+        assert_eq!((a.calls, a.lanes), (4, 4));
+        assert_eq!(a.ell_bytes, 150);
+        assert_eq!(a.halo_bytes, 10);
+        assert_eq!(a.x_lines, 14);
+        assert_eq!(a.flops, 50);
+        assert!((a.secs - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn profile_json_has_the_gauge_fields() {
+        let p = KernelProfile {
+            engine: "ehyb".into(),
+            calls: 3,
+            lanes: 5,
+            ell_bytes: 1000,
+            secs: 0.5,
+            ..KernelProfile::default()
+        };
+        let j = p.to_json();
+        assert_eq!(j.get("engine").unwrap().as_str(), Some("ehyb"));
+        assert_eq!(j.get("calls").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("ell_bytes").unwrap().as_usize(), Some(1000));
+        // Round-trips through the writer.
+        assert!(Json::parse(&j.dump()).is_ok());
+    }
+
+    #[test]
+    fn solve4_handles_pivoting_and_singularity() {
+        // A system that needs a row swap to solve.
+        let a = [
+            [0.0, 2.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0, 0.0],
+            [0.0, 0.0, 3.0, 0.0],
+            [0.0, 0.0, 0.0, 4.0],
+        ];
+        let x = solve4(a, [2.0, 1.0, 9.0, 8.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 1.0).abs() < 1e-12);
+        assert!((x[2] - 3.0).abs() < 1e-12);
+        assert!((x[3] - 2.0).abs() < 1e-12);
+        assert!(solve4([[0.0; 4]; 4], [1.0; 4]).is_none());
+    }
+}

@@ -249,6 +249,12 @@ impl<S: Scalar> SpmvEngine<S> for ReorderedEngine<S> {
         // The permutation pair rides along with the format.
         self.inner.format_bytes() + 2 * 4 * self.r.len()
     }
+    fn kernel_profile(&self) -> Option<crate::profile::KernelProfile> {
+        // Both routes land in the inner engine's counters: the fused
+        // path drives its permuted kernel (which records), the two-pass
+        // path calls `inner.spmv` directly.
+        self.inner.kernel_profile()
+    }
 }
 
 #[cfg(test)]

@@ -16,6 +16,7 @@ pub struct Health {
     solver_restarts: AtomicU64,
     nonfinite_outputs: AtomicU64,
     rejected_inputs: AtomicU64,
+    model_drifts: AtomicU64,
     /// Human-readable event log (one line per degradation, tagged with
     /// the request trace that triggered it — 0 when none was in
     /// scope), capped so a long-running degraded service cannot grow
@@ -81,6 +82,19 @@ impl Health {
         self.push_event(format!("rejected input: {}", detail.into()), trace);
     }
 
+    /// `ctx.observe_drift()` found the observed kernel traffic outside
+    /// the drift bound of the cost model that picked the engine — the
+    /// plan's provenance is stale, not the execution.
+    pub fn record_model_drift(&self, detail: impl Into<String>) {
+        self.record_model_drift_traced(detail, TraceId::NONE);
+    }
+
+    /// [`Self::record_model_drift`] tagged with the in-scope trace.
+    pub fn record_model_drift_traced(&self, detail: impl Into<String>, trace: TraceId) {
+        self.model_drifts.fetch_add(1, Ordering::Relaxed);
+        self.push_event(format!("model drift: {}", detail.into()), trace);
+    }
+
     /// The event log with trace tags, oldest first — what
     /// `SpmvContext::telemetry_snapshot` folds into the telemetry
     /// snapshot's `health` section.
@@ -95,6 +109,7 @@ impl Health {
             solver_restarts: self.solver_restarts.load(Ordering::Relaxed),
             nonfinite_outputs: self.nonfinite_outputs.load(Ordering::Relaxed),
             rejected_inputs: self.rejected_inputs.load(Ordering::Relaxed),
+            model_drifts: self.model_drifts.load(Ordering::Relaxed),
             events: self
                 .events
                 .lock()
@@ -115,6 +130,8 @@ pub struct HealthReport {
     pub nonfinite_outputs: u64,
     /// Non-finite inputs rejected by a guard.
     pub rejected_inputs: u64,
+    /// Observed kernel traffic drifted past the tuning oracle's bound.
+    pub model_drifts: u64,
     /// One line per degradation, oldest first (capped).
     pub events: Vec<String>,
 }
@@ -126,6 +143,7 @@ impl HealthReport {
             && self.solver_restarts == 0
             && self.nonfinite_outputs == 0
             && self.rejected_inputs == 0
+            && self.model_drifts == 0
     }
 
     /// True when the context is serving a different engine than
@@ -154,14 +172,33 @@ mod tests {
         h.record_solver_restart("cg breakdown at iter 3");
         h.record_nonfinite_output("spmv y[2]");
         h.record_rejected_input("x[7] is NaN");
+        h.record_model_drift("x-gather drifted 0.31 > 0.15");
         let rep = h.report();
         assert!(!rep.healthy() && rep.degraded());
         assert_eq!(
-            (rep.engine_fallbacks, rep.solver_restarts, rep.nonfinite_outputs, rep.rejected_inputs),
-            (1, 1, 1, 1)
+            (
+                rep.engine_fallbacks,
+                rep.solver_restarts,
+                rep.nonfinite_outputs,
+                rep.rejected_inputs,
+                rep.model_drifts
+            ),
+            (1, 1, 1, 1, 1)
         );
-        assert_eq!(rep.events.len(), 4);
+        assert_eq!(rep.events.len(), 5);
         assert!(rep.events[0].contains("csr-vector"));
+        assert!(rep.events[4].starts_with("model drift: "));
+    }
+
+    #[test]
+    fn model_drift_alone_is_unhealthy_but_not_degraded() {
+        let h = Health::default();
+        h.record_model_drift_traced("observed bytes 1.4x predicted", TraceId(7));
+        let rep = h.report();
+        assert!(!rep.healthy(), "drift must surface through healthy()");
+        assert!(!rep.degraded(), "drift does not change the serving engine");
+        assert_eq!(rep.model_drifts, 1);
+        assert_eq!(h.events_traced()[0].1, 7);
     }
 
     #[test]

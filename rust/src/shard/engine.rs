@@ -263,6 +263,28 @@ impl<S: Scalar> SpmvEngine<S> for ShardedEngine<S> {
     fn format_bytes(&self) -> usize {
         self.shards.iter().map(|s| s.engine.format_bytes()).sum()
     }
+    /// Aggregate of the per-shard profiles ([`KernelProfile::merge`]):
+    /// byte counters sum over the disjoint shards, and `lanes` counts
+    /// per-shard kernel executions (each solve contributes one lane
+    /// *per shard*, since every shard runs the full right-hand side).
+    ///
+    /// [`KernelProfile::merge`]: crate::profile::KernelProfile::merge
+    fn kernel_profile(&self) -> Option<crate::profile::KernelProfile> {
+        let mut agg: Option<crate::profile::KernelProfile> = None;
+        for s in &self.shards {
+            if let Some(p) = s.engine.kernel_profile() {
+                match &mut agg {
+                    Some(a) => a.merge(&p),
+                    None => {
+                        let mut p = p;
+                        p.engine = "sharded".to_string();
+                        agg = Some(p);
+                    }
+                }
+            }
+        }
+        agg
+    }
 }
 
 /// One EHYB row shard: the square diagonal block behind the full EHYB
@@ -284,6 +306,9 @@ pub struct EhybShard<S: Scalar> {
     /// Pooled staging for the batch path's contiguous x-slices
     /// (pop/push; steady-state batch calls allocate nothing).
     xpool: VecPool<S>,
+    /// Observed counters of the halo tail (the block engine keeps its
+    /// own); folded together in [`SpmvEngine::kernel_profile`].
+    halo_profile: crate::profile::ProfileState,
 }
 
 impl<S: Scalar> EhybShard<S> {
@@ -316,6 +341,7 @@ impl<S: Scalar> EhybShard<S> {
             ncols: m.ncols(),
             nnz,
             xpool: VecPool::new(2),
+            halo_profile: crate::profile::ProfileState::new(),
         })
     }
 
@@ -332,12 +358,19 @@ impl<S: Scalar> EhybShard<S> {
     }
 
     fn halo_accumulate(&self, x: &[S], y: &mut [S]) {
+        if self.halo.nnz() == 0 {
+            return;
+        }
+        let t = crate::profile::timer();
         for i in 0..self.halo.nrows() {
             let (cols, vals) = self.halo.row(i);
             for (&c, &v) in cols.iter().zip(vals) {
                 y[i] = v.mul_add(x[c as usize], y[i]);
             }
         }
+        self.halo_profile.record(1, crate::profile::elapsed(t), || {
+            crate::profile::CallCost::of_halo(&self.halo)
+        });
     }
 }
 
@@ -404,6 +437,37 @@ impl<S: Scalar> SpmvEngine<S> for EhybShard<S> {
     fn format_bytes(&self) -> usize {
         let block = self.block.as_ref().map_or(0, |e| e.format_bytes());
         block + self.halo.bytes()
+    }
+    fn kernel_profile(&self) -> Option<crate::profile::KernelProfile> {
+        // The halo tail's gather bytes are reattributed to
+        // `halo_bytes` — the component `shard_traffic` names "halo" —
+        // while its stream and pointer bytes stay in their usual
+        // components.
+        let halo = self.halo_profile.snapshot("ehyb-shard").map(|mut h| {
+            h.halo_bytes = h.x_gather_bytes;
+            h.x_gather_bytes = 0;
+            h
+        });
+        let block = self.block.as_ref().and_then(|e| e.kernel_profile());
+        match (block, halo) {
+            (Some(mut p), Some(h)) => {
+                p.engine = "ehyb-shard".to_string();
+                // The tail rides the block's lanes: fold its bytes,
+                // footprint, flops and time, not calls/lanes/blocks.
+                p.ell_bytes += h.ell_bytes;
+                p.meta_bytes += h.meta_bytes;
+                p.halo_bytes += h.halo_bytes;
+                p.x_lines += h.x_lines;
+                p.flops += h.flops;
+                p.secs += h.secs;
+                Some(p)
+            }
+            (Some(mut p), None) => {
+                p.engine = "ehyb-shard".to_string();
+                Some(p)
+            }
+            (None, halo) => halo,
+        }
     }
 }
 

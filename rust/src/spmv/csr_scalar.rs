@@ -9,11 +9,12 @@ use crate::sparse::scalar::Scalar;
 
 pub struct CsrScalar<S: Scalar> {
     m: Csr<S>,
+    profile: crate::profile::ProfileState,
 }
 
 impl<S: Scalar> CsrScalar<S> {
     pub fn new(m: &Csr<S>) -> Self {
-        Self { m: m.clone() }
+        Self { m: m.clone(), profile: crate::profile::ProfileState::new() }
     }
 }
 
@@ -23,6 +24,7 @@ impl<S: Scalar> SpmvEngine<S> for CsrScalar<S> {
     }
 
     fn spmv(&self, x: &[S], y: &mut [S]) {
+        let t = crate::profile::timer();
         let m = &self.m;
         assert_eq!(x.len(), m.ncols());
         assert_eq!(y.len(), m.nrows());
@@ -39,6 +41,9 @@ impl<S: Scalar> SpmvEngine<S> for CsrScalar<S> {
             }
             y[i] = acc;
         }
+        self.profile.record(1, crate::profile::elapsed(t), || {
+            crate::profile::CallCost::of_csr(&self.m)
+        });
     }
 
     fn nrows(&self) -> usize {
@@ -52,6 +57,9 @@ impl<S: Scalar> SpmvEngine<S> for CsrScalar<S> {
     }
     fn format_bytes(&self) -> usize {
         self.m.bytes()
+    }
+    fn kernel_profile(&self) -> Option<crate::profile::KernelProfile> {
+        self.profile.snapshot("csr-scalar")
     }
 }
 

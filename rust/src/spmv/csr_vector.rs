@@ -12,11 +12,12 @@ pub const WARP: usize = 32;
 
 pub struct CsrVector<S: Scalar> {
     m: Csr<S>,
+    profile: crate::profile::ProfileState,
 }
 
 impl<S: Scalar> CsrVector<S> {
     pub fn new(m: &Csr<S>) -> Self {
-        Self { m: m.clone() }
+        Self { m: m.clone(), profile: crate::profile::ProfileState::new() }
     }
 
     /// Reference warp model: strided lane accumulation entry by entry.
@@ -109,11 +110,15 @@ impl<S: Scalar> SpmvEngine<S> for CsrVector<S> {
     }
 
     fn spmv(&self, x: &[S], y: &mut [S]) {
+        let t = crate::profile::timer();
         if cfg!(feature = "simd") {
             self.spmv_simd(x, y)
         } else {
             self.spmv_scalar(x, y)
         }
+        self.profile.record(1, crate::profile::elapsed(t), || {
+            crate::profile::CallCost::of_csr(&self.m)
+        });
     }
 
     fn nrows(&self) -> usize {
@@ -127,6 +132,9 @@ impl<S: Scalar> SpmvEngine<S> for CsrVector<S> {
     }
     fn format_bytes(&self) -> usize {
         self.m.bytes()
+    }
+    fn kernel_profile(&self) -> Option<crate::profile::KernelProfile> {
+        self.profile.snapshot("cusparse-alg1")
     }
 }
 

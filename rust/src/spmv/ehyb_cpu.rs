@@ -78,6 +78,10 @@ pub struct EhybCpu<S: Scalar> {
     /// touch the lock at call boundaries, so engine use never
     /// serializes on the compute itself.
     pool: ScratchPool<S>,
+    /// Observed data-movement counters (relaxed atomics; structural
+    /// per-call cost computed once). No-op when the `profile` feature
+    /// is off — the kernels themselves are never touched either way.
+    profile: crate::profile::ProfileState,
 }
 
 /// Permuted x/y storage for one in-flight call: one contiguous
@@ -149,7 +153,12 @@ impl<S: Scalar> EhybCpu<S> {
             }),
             None => false, // malformed lengths: never fan the scatter out
         };
-        Self { m, er_scatter_disjoint, pool: ScratchPool::new() }
+        Self {
+            m,
+            er_scatter_disjoint,
+            pool: ScratchPool::new(),
+            profile: crate::profile::ProfileState::new(),
+        }
     }
 
     pub fn matrix(&self) -> &EhybMatrix<S> {
@@ -828,15 +837,23 @@ impl<S: Scalar> PermutedSpmv<S> for EhybCpu<S> {
     fn spmv_permuted(&self, xq: &[S], yq: &mut [S]) {
         assert_eq!(xq.len(), self.m.padded_rows());
         assert_eq!(yq.len(), self.m.padded_rows());
+        let t = crate::profile::timer();
         if self.want_parallel() {
             self.spmv_new_order_parallel(xq, yq);
         } else {
             self.spmv_new_order(xq, yq);
         }
+        self.profile.record(1, crate::profile::elapsed(t), || {
+            crate::profile::CallCost::of_ehyb(&self.m)
+        });
     }
 
     fn spmv_batch_permuted(&self, xqs: &[&[S]], yqs: &mut [&mut [S]]) {
+        let t = crate::profile::timer();
         self.spmm_new_order(xqs, yqs);
+        self.profile.record(xqs.len(), crate::profile::elapsed(t), || {
+            crate::profile::CallCost::of_ehyb(&self.m)
+        });
     }
 }
 
@@ -849,6 +866,7 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
         let m = &self.m;
         assert_eq!(x.len(), m.n);
         assert_eq!(y.len(), m.n);
+        let t = crate::profile::timer();
         let mut scr = self.pool.take(1, m.padded_rows());
         self.permute_in(x, &mut scr.xp);
         if self.want_parallel() {
@@ -858,6 +876,9 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
         }
         self.permute_out(&scr.yp, y);
         self.pool.put(scr);
+        self.profile.record(1, crate::profile::elapsed(t), || {
+            crate::profile::CallCost::of_ehyb(&self.m)
+        });
     }
 
     fn spmv_batch(&self, xs: VecBatch<'_, S>, ys: &mut VecBatchMut<'_, S>) {
@@ -869,6 +890,7 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
         let m = &self.m;
         assert_eq!(xs.n(), m.n);
         assert_eq!(ys.n(), m.n);
+        let t = crate::profile::timer();
         let padded = m.padded_rows();
         let mut scr = self.pool.take(bw, padded);
         for (b, chunk) in scr.xp.chunks_mut(padded).enumerate() {
@@ -883,6 +905,9 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
             self.permute_out(chunk, ys.col_mut(b));
         }
         self.pool.put(scr);
+        self.profile.record(bw, crate::profile::elapsed(t), || {
+            crate::profile::CallCost::of_ehyb(&self.m)
+        });
     }
 
     fn nrows(&self) -> usize {
@@ -896,6 +921,9 @@ impl<S: Scalar> SpmvEngine<S> for EhybCpu<S> {
     }
     fn permuted_kernel(&self) -> Option<&dyn PermutedSpmv<S>> {
         Some(self)
+    }
+    fn kernel_profile(&self) -> Option<crate::profile::KernelProfile> {
+        self.profile.snapshot("ehyb")
     }
 }
 

@@ -104,6 +104,14 @@ pub trait SpmvEngine<S: Scalar>: Send + Sync {
     fn permuted_kernel(&self) -> Option<&dyn PermutedSpmv<S>> {
         None
     }
+    /// Observed data-movement counters since the engine was built, when
+    /// this engine is instrumented (EHYB, the CSR walks, shard
+    /// fan-outs) and the `profile` feature recorded at least one call.
+    /// Default: not instrumented. Recording must never change results —
+    /// `tests/profile.rs` pins bitwise identity for every engine kind.
+    fn kernel_profile(&self) -> Option<crate::profile::KernelProfile> {
+        None
+    }
 }
 
 /// Capability trait for engines whose `spmv` is really

@@ -1,8 +1,8 @@
 //! The shared metric types and the lock-cheap registry.
 //!
 //! [`LatencyHistogram`] / [`WidthHistogram`] / [`ServiceMetrics`] moved
-//! here from `coordinator::metrics` in 0.8 (deprecated re-exports
-//! remain) so the service, the sharded engine, the tuner, and the
+//! here from `coordinator::metrics` in 0.8 (the deprecated re-exports
+//! were removed in 0.10) so the service, the sharded engine, the tuner, and the
 //! harness all publish into one namespace. Registration takes a short
 //! mutex once and hands back an `Arc`; the hot path afterwards is pure
 //! relaxed atomics.

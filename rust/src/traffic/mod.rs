@@ -94,6 +94,39 @@ impl XReuse {
     }
 }
 
+/// Logical (pre-coalescing) bytes each kernel component requested — the
+/// attribution layer [`crate::profile::DriftReport`] diffs against the
+/// engines' observed counters. Unlike the per-level counters these are
+/// not sector-granular: they count exactly the bytes the replayed
+/// kernel asked for, which is what the structural counters in
+/// [`crate::profile`] can reproduce and a drifting prediction can be
+/// blamed on by name.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ComponentBytes {
+    /// Primary format stream: ELL slice values + u16 columns for EHYB,
+    /// the whole CSR/ELL/SELL-P stream for the baseline walks.
+    pub ell: u64,
+    /// ER-tail stream (u32 columns + values); 0 for baselines.
+    pub er: u64,
+    /// Descriptors: slice/row pointers, widths, `y_idx_er`.
+    pub meta: u64,
+    /// Explicit shared-memory x-cache fills (EHYB only).
+    pub x_fill: u64,
+    /// Uncached x gather lanes (ER tail, CSR gathers), logical bytes.
+    pub x_gather: u64,
+    /// Halo (out-of-shard) share split out of `x_gather` in shard
+    /// replays; 0 for whole-matrix kernels.
+    pub halo: u64,
+    /// Output-vector writes.
+    pub write: u64,
+}
+
+impl ComponentBytes {
+    pub fn total(&self) -> u64 {
+        self.ell + self.er + self.meta + self.x_fill + self.x_gather + self.halo + self.write
+    }
+}
+
 /// Per-level traffic for one simulated kernel over one matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrafficReport {
@@ -108,6 +141,8 @@ pub struct TrafficReport {
     /// DRAM is the backstop: every probe hits.
     pub dram: LevelTraffic,
     pub x: XReuse,
+    /// Logical per-component attribution of the requested bytes.
+    pub components: ComponentBytes,
     /// Time at the binding level — max of DRAM, L2, and shared-memory
     /// service times — plus launch overhead. Unlike the roofline bound
     /// this credits hits: traffic served by L2/shm doesn't pay HBM.
@@ -136,6 +171,7 @@ struct MemSim<'d> {
     l2: LevelTraffic,
     dram: LevelTraffic,
     x: XReuse,
+    comp: ComponentBytes,
     x_sectors: HashSet<u64>,
 }
 
@@ -148,6 +184,7 @@ impl<'d> MemSim<'d> {
             l2: LevelTraffic::default(),
             dram: LevelTraffic::default(),
             x: XReuse::default(),
+            comp: ComponentBytes::default(),
             x_sectors: HashSet::new(),
         }
     }
@@ -181,6 +218,7 @@ impl<'d> MemSim<'d> {
             self.x_sectors.insert(sec);
         }
         self.x.gathers += len / tau;
+        self.comp.x_fill += len;
         let (h, m) = self.stream_read(addr, len);
         self.x.sector_probes += h + m;
         self.x.dram_bytes += m * sb;
@@ -195,6 +233,7 @@ impl<'d> MemSim<'d> {
         let mut ns = 0usize;
         for c in cols {
             self.x.gathers += 1;
+            self.comp.x_gather += tau;
             let sec = (X_BASE + c as u64 * tau) / sb;
             if ns < sectors.len() && !sectors[..ns].contains(&sec) {
                 sectors[ns] = sec;
@@ -234,6 +273,7 @@ impl<'d> MemSim<'d> {
     fn stream_write(&mut self, len: u64) {
         self.l2.write_bytes += len;
         self.dram.write_bytes += len;
+        self.comp.write += len;
     }
 
     fn finish(mut self, name: &str, nnz: usize, nrows: usize) -> TrafficReport {
@@ -252,6 +292,7 @@ impl<'d> MemSim<'d> {
             l2: self.l2,
             dram: self.dram,
             x: self.x,
+            components: self.comp,
             predicted_secs,
         }
     }
@@ -279,8 +320,10 @@ fn replay_csr<S: Scalar>(
             let (cols, _) = m.row(r);
             let rn = cols.len() as u64;
             ms.stream_read(PTR_BASE + p as u64 * 4, 8);
+            ms.comp.meta += 8;
             ms.stream_read(COL_BASE + k_off * 4, rn * 4);
             ms.stream_read(VAL_BASE + k_off * tau, rn * tau);
+            ms.comp.ell += rn * (4 + tau);
             k_off += rn;
             let mut k = 0usize;
             while k < cols.len() {
@@ -316,6 +359,7 @@ fn replay_ell_like<S: Scalar>(ms: &mut MemSim<'_>, m: &Csr<S>, slice_height: usi
     // single global width and no per-slice metadata.
     if sellp {
         ms.stream_read(PTR_BASE, (nslices as u64 + 1) * 8);
+        ms.comp.meta += (nslices as u64 + 1) * 8;
     }
     let global_w = (0..n).map(|r| m.row_nnz(r)).max().unwrap_or(0);
     let warp = ms.dev.warp_size;
@@ -336,6 +380,7 @@ fn replay_ell_like<S: Scalar>(ms: &mut MemSim<'_>, m: &Csr<S>, slice_height: usi
                 let slot0 = base + k as u64 * (r1 - r0) as u64 + (wr0 - r0) as u64;
                 ms.stream_read(COL_BASE + slot0 * 4, (wr1 - wr0) as u64 * 4);
                 ms.stream_read(VAL_BASE + slot0 * tau, (wr1 - wr0) as u64 * tau);
+                ms.comp.ell += (wr1 - wr0) as u64 * (4 + tau);
                 ms.warp_gather_x(
                     &mut (wr0..wr1).filter(|&r| k < m.row_nnz(r)).map(|r| {
                         let (cols, _) = m.row(r);
@@ -351,52 +396,112 @@ fn replay_ell_like<S: Scalar>(ms: &mut MemSim<'_>, m: &Csr<S>, slice_height: usi
     }
 }
 
+/// Greedy 4/2/1 register blocking the fused SpMM kernel uses
+/// (`EhybCpu`'s register-blocked `spmv_batch`): a batch of `b`
+/// right-hand sides is walked as blocks of 4, then 2, then 1 lanes,
+/// with the matrix streamed once per block. [`crate::profile`] charges
+/// its observed batch counters with the same blocking so the fused
+/// path cross-checks exactly.
+pub fn spmm_register_blocks(b: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut rem = b;
+    while rem >= 4 {
+        out.push(4);
+        rem -= 4;
+    }
+    if rem >= 2 {
+        out.push(2);
+        rem -= 2;
+    }
+    if rem == 1 {
+        out.push(1);
+    }
+    out
+}
+
 /// Replay the EHYB kernel (paper Algorithm 3) over a prepared matrix:
 /// per partition a coalesced explicit-cache fill of the x-slice, then
 /// u16-column ELL slices whose gathers are served entirely by shared
 /// memory, then the ER tail with u32 global columns gathering x through
 /// L2 and atomically scattering into y.
 pub fn ehyb_traffic<S: Scalar>(e: &EhybMatrix<S>, dev: &GpuDevice) -> TrafficReport {
+    ehyb_batch_traffic(e, dev, 1)
+}
+
+/// Replay the *fused* `spmv_batch` walk over `b` right-hand sides
+/// (ROADMAP "extend the replay to `spmv_batch`"): matrix streams are
+/// charged once per [`spmm_register_blocks`] register block — the
+/// fused path's reuse — while explicit-cache fills, shm serves, ER
+/// tails, and y writes are paid per lane. Each lane's x copy lives in
+/// its own address region, so cross-lane L2 reuse is matrix-stream
+/// reuse only, like the real kernel. `b = 1` is exactly the single
+/// [`ehyb_traffic`] replay.
+pub fn ehyb_batch_traffic<S: Scalar>(e: &EhybMatrix<S>, dev: &GpuDevice, b: usize) -> TrafficReport {
+    let b = b.max(1);
     let tau = S::BYTES as u64;
     let h = e.slice_height;
     let mut ms = MemSim::new(dev);
     let spp = e.slices_per_part();
-    for p in 0..e.num_parts {
-        // Algorithm 3 line 4: fill the shared-memory x-slice cache.
-        ms.stream_read_x(X_BASE + (p * e.vec_size) as u64 * tau, e.vec_size as u64 * tau, tau);
-        for ls in 0..spp {
-            let s = p * spp + ls;
-            let base = e.slice_ptr[s] as u64;
-            let w = e.slice_width[s] as u64;
-            // Slice descriptor (ptr + width).
-            ms.stream_read(PTR_BASE + s as u64 * 8, 8);
-            // Compact u16 columns + values, coalesced.
-            ms.stream_read(COL_BASE + base * 2, w * h as u64 * 2);
-            ms.stream_read(VAL_BASE + base * tau, w * h as u64 * tau);
-            // Every ELL gather is served by the explicit cache.
-            ms.shm_serve(w * h as u64, tau);
+    let x_stride = e.padded_rows() as u64;
+    let mut lane0 = 0u64;
+    for blk in spmm_register_blocks(b) {
+        let blk = blk as u64;
+        for p in 0..e.num_parts {
+            // Algorithm 3 line 4: fill the shared-memory x-slice cache,
+            // once per lane in the register block.
+            for lane in 0..blk {
+                let off = (lane0 + lane) * x_stride + (p * e.vec_size) as u64;
+                ms.stream_read_x(X_BASE + off * tau, e.vec_size as u64 * tau, tau);
+            }
+            for ls in 0..spp {
+                let s = p * spp + ls;
+                let base = e.slice_ptr[s] as u64;
+                let w = e.slice_width[s] as u64;
+                // Slice descriptor (ptr + width), once per block.
+                ms.stream_read(PTR_BASE + s as u64 * 8, 8);
+                ms.comp.meta += 8;
+                // Compact u16 columns + values, coalesced, streamed
+                // once per register block.
+                ms.stream_read(COL_BASE + base * 2, w * h as u64 * 2);
+                ms.stream_read(VAL_BASE + base * tau, w * h as u64 * tau);
+                ms.comp.ell += w * h as u64 * (2 + tau);
+                // Every ELL gather is served by the explicit cache, one
+                // read per lane.
+                ms.shm_serve(w * h as u64 * blk, tau);
+            }
+            ms.stream_write(e.vec_size as u64 * tau * blk);
         }
-        ms.stream_write(e.vec_size as u64 * tau);
-    }
-    // ER tail: u32 global columns, x through L2, atomic y scatter.
-    let er_ptr_base = PTR_BASE + (e.slice_ptr.len() as u64) * 8;
-    let er_col_base = COL_BASE + e.ell_cols.len() as u64 * 2;
-    let er_val_base = VAL_BASE + e.ell_vals.len() as u64 * tau;
-    for s in 0..e.er_slice_width.len() {
-        let base = e.er_slice_ptr[s] as u64;
-        let w = e.er_slice_width[s] as u64;
-        ms.stream_read(er_ptr_base + s as u64 * 8, 8);
-        ms.stream_read(er_col_base + base * 4, w * h as u64 * 4);
-        ms.stream_read(er_val_base + base * tau, w * h as u64 * tau);
-        for k in 0..w {
-            let idx0 = base as usize + k as usize * h;
-            ms.warp_gather_x(&mut (0..h).map(|lane| e.er_cols[idx0 + lane] as usize), tau);
+        // ER tail: u32 global columns, x through L2, atomic y scatter.
+        // The register-blocked kernel runs the tail per lane.
+        let er_ptr_base = PTR_BASE + (e.slice_ptr.len() as u64) * 8;
+        let er_col_base = COL_BASE + e.ell_cols.len() as u64 * 2;
+        let er_val_base = VAL_BASE + e.ell_vals.len() as u64 * tau;
+        for lane in 0..blk {
+            let xoff = ((lane0 + lane) * x_stride) as usize;
+            for s in 0..e.er_slice_width.len() {
+                let base = e.er_slice_ptr[s] as u64;
+                let w = e.er_slice_width[s] as u64;
+                ms.stream_read(er_ptr_base + s as u64 * 8, 8);
+                ms.comp.meta += 8;
+                ms.stream_read(er_col_base + base * 4, w * h as u64 * 4);
+                ms.stream_read(er_val_base + base * tau, w * h as u64 * tau);
+                ms.comp.er += w * h as u64 * (4 + tau);
+                for k in 0..w {
+                    let idx0 = base as usize + k as usize * h;
+                    ms.warp_gather_x(
+                        &mut (0..h).map(|l| xoff + e.er_cols[idx0 + l] as usize),
+                        tau,
+                    );
+                }
+                // yIdxER read + atomic scatter-add.
+                ms.stream_read(AUX_BASE + (s * h) as u64 * 4, h as u64 * 4);
+                ms.comp.meta += h as u64 * 4;
+                ms.stream_write(h as u64 * tau);
+            }
         }
-        // yIdxER read + atomic scatter-add.
-        ms.stream_read(AUX_BASE + (s * h) as u64 * 4, h as u64 * 4);
-        ms.stream_write(h as u64 * tau);
+        lane0 += blk;
     }
-    ms.finish("ehyb", e.nnz(), e.n)
+    ms.finish("ehyb", e.nnz() * b, e.n)
 }
 
 /// Replay a baseline engine's walk. The CSR-family engines (csr-scalar,
@@ -477,8 +582,10 @@ pub fn shard_traffic<S: Scalar>(m: &Csr<S>, plan: &ShardPlan, dev: &GpuDevice) -
                 let rn = cols.len() as u64;
                 nnz += cols.len();
                 ms.stream_read(PTR_BASE + (r - rg.start) as u64 * 4, 8);
+                ms.comp.meta += 8;
                 ms.stream_read(COL_BASE + k_off * 4, rn * 4);
                 ms.stream_read(VAL_BASE + k_off * tau, rn * tau);
+                ms.comp.ell += rn * (4 + tau);
                 k_off += rn;
                 // Diagonal-block lanes and halo lanes gather separately
                 // so halo misses are attributable.
@@ -497,6 +604,11 @@ pub fn shard_traffic<S: Scalar>(m: &Csr<S>, plan: &ShardPlan, dev: &GpuDevice) -
                 }
                 for chunk in halo.chunks(warp) {
                     halo_dram_bytes += ms.warp_gather_x(&mut chunk.iter().copied(), tau);
+                    // Attribute halo lanes separately from in-shard
+                    // gathers so the cross-shard share is named.
+                    let bytes = chunk.len() as u64 * tau;
+                    ms.comp.x_gather -= bytes;
+                    ms.comp.halo += bytes;
                 }
             }
             ms.stream_write((row_end - row) as u64 * tau);
@@ -593,6 +705,79 @@ mod tests {
         assert!(st.halo_nnz.iter().sum::<usize>() > 0);
         assert!(st.halo_dram_bytes > 0);
         assert_eq!(st.halo_nnz.len(), 4);
+    }
+
+    #[test]
+    fn register_blocks_cover_every_width() {
+        for b in 1..=9usize {
+            let blocks = spmm_register_blocks(b);
+            assert_eq!(blocks.iter().sum::<usize>(), b, "b={b}");
+            assert!(blocks.iter().all(|&w| matches!(w, 1 | 2 | 4)), "b={b}");
+        }
+        assert_eq!(spmm_register_blocks(7), vec![4, 2, 1]);
+        assert!(spmm_register_blocks(0).is_empty());
+    }
+
+    #[test]
+    fn batch_replay_reuses_matrix_streams() {
+        let m = poisson2d::<f64>(32, 32);
+        let plan = EhybPlan::build(&m, &PreprocessConfig::default()).unwrap();
+        let b1 = ehyb_traffic(&plan.matrix, &dev());
+        assert_eq!(b1, ehyb_batch_traffic(&plan.matrix, &dev(), 1), "b=1 is the single replay");
+        for b in [4usize, 8] {
+            let bb = ehyb_batch_traffic(&plan.matrix, &dev(), b);
+            conserve(&bb);
+            // The fused path streams the ELL part once per register
+            // block, not once per lane.
+            let blocks = spmm_register_blocks(b).len() as u64;
+            assert_eq!(bb.components.ell, b1.components.ell * blocks, "b={b}");
+            // Per-lane costs scale with the batch.
+            assert_eq!(bb.components.x_fill, b1.components.x_fill * b as u64, "b={b}");
+            assert_eq!(bb.components.er, b1.components.er * b as u64, "b={b}");
+            assert_eq!(bb.components.write, b1.components.write * b as u64, "b={b}");
+            assert_eq!(bb.nnz, m.nnz() * b);
+        }
+    }
+
+    #[test]
+    fn components_attribute_every_requested_byte() {
+        let m = unstructured_mesh::<f64>(48, 48, 0.5, 11);
+        // EHYB: logical components must tie out against the structural
+        // closed forms of the prepared matrix.
+        let plan = EhybPlan::build(&m, &PreprocessConfig::default()).unwrap();
+        let e = &plan.matrix;
+        let r = ehyb_traffic(e, &dev());
+        let tau = 8u64;
+        let h = e.slice_height as u64;
+        let er_slices = e.er_slice_width.len() as u64;
+        let c = &r.components;
+        assert_eq!(c.ell, e.ell_vals.len() as u64 * (2 + tau));
+        assert_eq!(c.er, e.er_vals.len() as u64 * (4 + tau));
+        assert_eq!(c.meta, 8 * e.num_slices() as u64 + er_slices * (8 + 4 * h));
+        assert_eq!(c.x_fill, e.padded_rows() as u64 * tau);
+        assert_eq!(c.x_gather, e.er_vals.len() as u64 * tau);
+        assert_eq!(c.write, e.padded_rows() as u64 * tau + er_slices * h * tau);
+        assert_eq!(c.halo, 0);
+        // CSR walk: stream + meta + gathers + writes.
+        let cr = baseline_traffic(EngineKind::CsrVector, &m, &dev());
+        let cc = &cr.components;
+        assert_eq!(cc.ell, m.nnz() as u64 * 12);
+        assert_eq!(cc.meta, 8 * m.nrows() as u64);
+        assert_eq!(cc.x_gather, m.nnz() as u64 * 8);
+        assert_eq!(cc.write, m.nrows() as u64 * 8);
+        assert_eq!(cc.er + cc.x_fill + cc.halo, 0);
+    }
+
+    #[test]
+    fn shard_components_split_halo_from_local_gathers() {
+        let m = poisson2d::<f64>(32, 32);
+        let plan = ShardPlan::new(&m, 4, ShardStrategy::NnzBalanced);
+        let st = shard_traffic(&m, &plan, &dev());
+        let halo: u64 = st.shards.iter().map(|s| s.components.halo).sum();
+        let local: u64 = st.shards.iter().map(|s| s.components.x_gather).sum();
+        assert!(halo > 0, "stencil shards always cross boundaries");
+        // Every gather lane is attributed exactly once.
+        assert_eq!(halo + local, m.nnz() as u64 * 8);
     }
 
     #[test]

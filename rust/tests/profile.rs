@@ -1,0 +1,313 @@
+//! Profiling gate (ISSUE 10 acceptance): the observed-counter layer
+//! through the public surface, on whichever feature leg this test
+//! crate was compiled with (CI runs the suite on both `default` and
+//! `--no-default-features --features simd`).
+//!
+//! Contracts:
+//! - Kernels are bitwise identical with profiling on or off: every
+//!   engine kind stays deterministic and oracle-exact on both legs,
+//!   and the off-leg provably records nothing.
+//! - Hand-computed byte counts match [`CallCost`] on fixed fixtures.
+//! - Observed counters tie out exactly against the traffic replay of
+//!   the same plan for EHYB and csr-vector at B=1, and against the
+//!   fused-batch replay at B=4; any observed-vs-DRAM gap is then
+//!   attributable to the cache model, never the stream model.
+//! - `observe_drift` past the bound records a model-drift health event
+//!   and stamps the cached plan so a warm start re-searches.
+//! - Calibrations persist and reload through the plan store, and a
+//!   tuner-routed build picks the persisted fit up automatically.
+
+use ehyb::autotune::device_key;
+use ehyb::gpu::device::GpuDevice;
+use ehyb::preprocess::PreprocessConfig;
+use ehyb::profile::{self, CalSample, CallCost};
+use ehyb::sparse::gen::{poisson2d, unstructured_mesh};
+use ehyb::traffic::{ehyb_batch_traffic, ehyb_traffic, spmm_register_blocks};
+use ehyb::util::check::assert_allclose;
+use ehyb::{BatchBuf, Calibration, EngineKind, PlanStore, SpmvContext, TuneLevel};
+
+fn cfg64() -> PreprocessConfig {
+    PreprocessConfig { vec_size_override: Some(64), ..Default::default() }
+}
+
+fn seeded_x(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i * 13 + 5) % 23) as f64 * 0.125 - 1.0).collect()
+}
+
+/// Every engine kind, on either feature leg: two runs are bitwise
+/// equal, the result is oracle-exact, and the recording layer's
+/// presence is exactly the compiled feature — which, run on both CI
+/// legs, is the twin-identity gate (recording happens strictly after
+/// the kernel computes, so the off-leg cannot change a bit).
+#[test]
+fn every_kind_deterministic_and_oracle_exact_on_this_leg() {
+    let m = unstructured_mesh::<f64>(20, 20, 0.5, 7);
+    let x = seeded_x(m.ncols());
+    let oracle = m.spmv_f64_oracle(&x);
+    for kind in EngineKind::ALL {
+        let ctx = SpmvContext::builder(m.clone()).engine(kind).config(cfg64()).build().unwrap();
+        let mut y1 = vec![0.0; ctx.nrows()];
+        let mut y2 = vec![0.0; ctx.nrows()];
+        ctx.spmv(&x, &mut y1).unwrap();
+        ctx.spmv(&x, &mut y2).unwrap();
+        assert_eq!(y1, y2, "{kind:?}: profiled run is nondeterministic");
+        assert_allclose(&y1, &oracle, 1e-9, 1e-9).unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        if !profile::enabled() {
+            assert!(ctx.profile().is_none(), "{kind:?}: off-leg must record nothing");
+            assert!(ctx.drift().is_none());
+            continue;
+        }
+        // The instrumented hot paths; the remaining study kinds keep
+        // the default no-profile implementation.
+        let instrumented =
+            matches!(kind, EngineKind::Ehyb | EngineKind::CsrScalar | EngineKind::CsrVector);
+        match ctx.profile() {
+            Some(p) => {
+                assert!(instrumented, "{kind:?}: unexpected profile {p:?}");
+                assert_eq!((p.calls, p.lanes), (2, 2), "{kind:?}");
+                assert_eq!(p.flops, 2 * 2 * m.nnz() as u64, "{kind:?}");
+                assert!(p.total_bytes() > 0 && p.secs > 0.0, "{kind:?}");
+            }
+            None => assert!(!instrumented, "{kind:?}: instrumented kind recorded nothing"),
+        }
+    }
+    if !profile::enabled() {
+        assert!(profile::timer().is_none(), "off-leg must never read the clock");
+        assert_eq!(profile::elapsed(None), 0.0);
+    }
+}
+
+/// Hand-computed byte counts on the 2x2 Poisson fixture (4 rows of 3
+/// nonzeros each, tau = 8): the CSR walk streams nnz (4 + tau) format
+/// bytes, 8 nrows of row pointers, nnz tau gather bytes, nrows tau
+/// writes — and all 32 bytes of x fit one 64-byte line.
+#[test]
+fn csr_call_cost_matches_hand_count() {
+    let m = poisson2d::<f64>(2, 2);
+    assert_eq!((m.nrows(), m.nnz()), (4, 12), "fixture drifted");
+    let c = CallCost::of_csr(&m);
+    assert_eq!(c.ell_stream, 12 * (4 + 8));
+    assert_eq!(c.meta_block, 8 * 4);
+    assert_eq!(c.x_gather, 12 * 8);
+    assert_eq!(c.write, 4 * 8);
+    assert_eq!(c.x_lines, 1);
+    assert_eq!(c.flops, 24);
+    assert_eq!((c.er_stream, c.meta_lane, c.x_fill, c.pad_slots), (0, 0, 0, 0));
+    assert_eq!(c.lane_bytes(), 144 + 32 + 96 + 32);
+}
+
+/// The EHYB cost re-derived from the format's public fields (slice
+/// slots, ER slots, descriptor widths) matches [`CallCost::of_ehyb`]
+/// and, component for component, the traffic replay of the same plan.
+#[test]
+fn ehyb_call_cost_matches_format_fields_and_replay() {
+    let m = unstructured_mesh::<f64>(40, 40, 0.5, 5);
+    let ctx =
+        SpmvContext::builder(m).engine(EngineKind::Ehyb).config(cfg64()).build().unwrap();
+    let e = &ctx.plan().expect("ehyb context has a plan").matrix;
+    let cost = CallCost::of_ehyb(e);
+    let tau = 8u64;
+    let h = e.slice_height as u64;
+    let (ell_slots, er_slots) = (e.ell_vals.len() as u64, e.er_vals.len() as u64);
+    let er_slices = e.er_slice_width.len() as u64;
+    let padded = e.padded_rows() as u64;
+    assert_eq!(cost.ell_stream, ell_slots * (2 + tau), "values + u16 cols per slot");
+    assert_eq!(cost.er_stream, er_slots * (4 + tau), "values + u32 cols per slot");
+    assert_eq!(cost.meta_block, 8 * e.num_slices() as u64, "slice ptr/width pairs");
+    assert_eq!(cost.meta_lane, er_slices * (8 + 4 * h), "ER descriptors + y_idx_er");
+    assert_eq!(cost.x_fill, padded * tau, "explicit cache fills every padded row");
+    assert_eq!(cost.x_gather, er_slots * tau, "only the ER tail gathers uncached");
+    assert_eq!(cost.write, padded * tau + er_slices * h * tau);
+    assert_eq!(
+        cost.pad_slots,
+        (ell_slots - e.ell_nnz as u64) + (er_slots - e.er_nnz as u64)
+    );
+    assert_eq!(cost.er_scatter_rows, e.er_rows as u64);
+    assert_eq!(cost.flops, 2 * e.nnz() as u64);
+    // Component-for-component agreement with the simulator's replay.
+    let r = ehyb_traffic(e, &GpuDevice::v100());
+    let c = &r.components;
+    assert_eq!(cost.ell_stream, c.ell);
+    assert_eq!(cost.er_stream, c.er);
+    assert_eq!(cost.meta_block + cost.meta_lane, c.meta);
+    assert_eq!(cost.x_fill, c.x_fill);
+    assert_eq!(cost.x_gather, c.x_gather);
+    assert_eq!(cost.write, c.write);
+    assert_eq!(cost.lane_bytes(), c.total());
+}
+
+/// The acceptance cross-check: what EHYB and csr-vector observably
+/// moved at B=1 equals what the simulator predicted, per component;
+/// any gap against the sector-granular DRAM figure is then cache
+/// model, not stream model, and stays attributable.
+#[test]
+fn observed_matches_simulated_for_ehyb_and_csr_vector() {
+    if !profile::enabled() {
+        return;
+    }
+    let m = unstructured_mesh::<f64>(40, 40, 0.5, 5);
+    let x = seeded_x(m.ncols());
+    for kind in [EngineKind::Ehyb, EngineKind::CsrVector] {
+        let ctx = SpmvContext::builder(m.clone()).engine(kind).config(cfg64()).build().unwrap();
+        let mut y = vec![0.0; ctx.nrows()];
+        for _ in 0..3 {
+            ctx.spmv(&x, &mut y).unwrap();
+        }
+        let d = ctx.drift().expect("unsharded context replays its plan");
+        assert_eq!(d.lanes, 3);
+        assert_eq!(d.max_rel_drift(), 0.0, "{kind:?}: {d:?}");
+        assert!(!d.exceeded() && !d.calibrated, "{kind:?}");
+        assert_eq!(d.bytes_drift(), 0.0, "{kind:?}");
+        // Observed logical bytes vs the simulator's DRAM figure: within
+        // the bound, or — with every stream component tying out exactly
+        // (asserted above) — the gap is the L2/sector cache model, the
+        // named attribution the report's markdown prints.
+        if d.dram_drift() > profile::DEFAULT_DRIFT_THRESHOLD {
+            assert!(
+                d.observed_bytes > d.predicted_dram_bytes as f64,
+                "{kind:?}: DRAM exceeding logical bytes cannot be cache reuse: {d:?}"
+            );
+        }
+    }
+}
+
+/// Fused-batch observation vs the fused-batch replay at B=4: the
+/// matrix stream is charged once per register block on both sides, the
+/// per-lane streams four times.
+#[test]
+fn batch_observation_ties_out_against_the_batch_replay() {
+    let m = unstructured_mesh::<f64>(28, 28, 0.5, 11);
+    let ctx =
+        SpmvContext::builder(m.clone()).engine(EngineKind::Ehyb).config(cfg64()).build().unwrap();
+    let n = ctx.nrows();
+    let xs: Vec<Vec<f64>> = (0..4)
+        .map(|t| (0..n).map(|i| ((i * 7 + t * 11 + 3) % 19) as f64 * 0.25 - 2.0).collect())
+        .collect();
+    let xrefs: Vec<&[f64]> = xs.iter().map(|v| v.as_slice()).collect();
+    let xbatch = BatchBuf::from_cols(&xrefs).unwrap();
+    let mut ybatch = BatchBuf::<f64>::zeros(n, xs.len());
+    {
+        let mut yv = ybatch.view_mut();
+        ctx.spmv_batch(xbatch.view(), &mut yv).unwrap();
+    }
+    if !profile::enabled() {
+        assert!(ctx.profile().is_none());
+        return;
+    }
+    let p = ctx.profile().expect("batched call recorded");
+    assert_eq!((p.calls, p.lanes), (1, 4));
+    assert_eq!(p.spmm_blocks, spmm_register_blocks(4).len() as u64);
+    assert!((p.tile_reuse() - 4.0 / p.spmm_blocks as f64).abs() < 1e-12);
+    let r = ehyb_batch_traffic(&ctx.plan().unwrap().matrix, &GpuDevice::v100(), 4);
+    let c = &r.components;
+    assert_eq!(p.ell_bytes, c.ell, "matrix stream charged once per register block");
+    assert_eq!(p.er_bytes, c.er);
+    assert_eq!(p.meta_bytes, c.meta);
+    assert_eq!(p.x_fill_bytes, c.x_fill);
+    assert_eq!(p.x_gather_bytes, c.x_gather);
+    assert_eq!(p.write_bytes, c.write);
+}
+
+/// The drift loop through the public surface: a calibration that
+/// cannot describe any host makes `observe_drift` trip the bound,
+/// record a model-drift health event, and stamp the cached plan —
+/// after which a warm start under the default bound re-searches while
+/// a permissive bound still adopts the stamped entry.
+#[test]
+fn observed_drift_records_health_and_invalidates_the_cached_plan() {
+    if !profile::enabled() {
+        return;
+    }
+    let m = unstructured_mesh::<f64>(32, 32, 0.4, 5);
+    let dir = std::env::temp_dir().join(format!("ehyb-test-profile-drift-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let bogus = Calibration {
+        dram_secs_per_byte: 0.0,
+        l2_secs_per_byte: 0.0,
+        shm_secs_per_byte: 0.0,
+        base_secs: 0.0,
+        samples: 2,
+        residual: 0.0,
+    };
+    let mut ctx = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg64())
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .calibration(bogus)
+        .build()
+        .unwrap();
+    let x = seeded_x(ctx.ncols());
+    let mut y = vec![0.0; ctx.nrows()];
+    ctx.spmv(&x, &mut y).unwrap();
+    let d = ctx.observe_drift().expect("observation");
+    assert!(d.calibrated && d.exceeded(), "zero-secs calibration must drift: {d:?}");
+    let h = ctx.health();
+    assert_eq!(h.model_drifts, 1);
+    assert!(!h.healthy() && !h.degraded(), "drift observes, it does not degrade");
+    let stamp = d.stamp();
+    assert_eq!(ctx.tuned().unwrap().drift, Some(stamp));
+    // Permissive bound first: it must adopt the stamped entry as-is
+    // (a default-bound build would re-search and overwrite the cache).
+    let adopted = SpmvContext::builder(m.clone())
+        .engine(EngineKind::Ehyb)
+        .config(cfg64())
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .drift_threshold(2.0)
+        .build()
+        .unwrap();
+    assert_eq!(adopted.tuned().unwrap().drift, Some(stamp));
+    let fresh = SpmvContext::builder(m)
+        .engine(EngineKind::Ehyb)
+        .config(cfg64())
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(fresh.tuned().unwrap().drift, None, "drifted plan must be re-searched");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Calibration persistence: fit -> save -> load round-trips through
+/// the plan store, a damaged entry is quarantined not trusted, and a
+/// tuner-routed build auto-loads the persisted fit for its device key.
+#[test]
+fn calibration_round_trips_through_the_plan_store() {
+    let dir = std::env::temp_dir().join(format!("ehyb-test-profile-cal-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let store = PlanStore::new(&dir);
+    let samples: Vec<CalSample> = [(1u64, 3u64), (2, 1), (5, 4), (9, 2)]
+        .iter()
+        .map(|&(i, j)| CalSample {
+            dram_bytes: i as f64 * 1e6,
+            // i*j keeps the features linearly independent.
+            l2_bytes: (i * j + 1) as f64 * 2e6,
+            shm_bytes: j as f64 * 5e5,
+            measured_secs: i as f64 * 2e-6 + j as f64 * 1e-6 + 3e-6,
+        })
+        .collect();
+    let cal = Calibration::fit(&samples).expect("well-posed fit");
+    assert_eq!(cal.samples, 4);
+    assert!(cal.residual.is_finite());
+    let cfg = PreprocessConfig::default();
+    let key = device_key(&cfg.device);
+    store.save_calibration(&cal, &key, "f64").unwrap();
+    assert_eq!(store.load_calibration(&key, "f64").unwrap(), Some(cal.clone()));
+    assert!(store.load_calibration("other-device", "f64").unwrap().is_none());
+    // A tuner-routed EHYB build picks the persisted fit up by itself.
+    let ctx = SpmvContext::builder(unstructured_mesh::<f64>(24, 24, 0.5, 3))
+        .engine(EngineKind::Ehyb)
+        .config(cfg)
+        .tune(TuneLevel::Heuristic)
+        .plan_cache(&dir)
+        .build()
+        .unwrap();
+    assert_eq!(ctx.calibration(), Some(&cal));
+    // Damage quarantines instead of trusting the bytes.
+    std::fs::write(store.calibration_path(&key, "f64"), "{not json").unwrap();
+    assert!(store.load_calibration(&key, "f64").is_err());
+    assert_eq!(store.quarantines(), 1);
+    assert!(store.load_calibration(&key, "f64").unwrap().is_none(), "quarantine moved it");
+    std::fs::remove_dir_all(&dir).ok();
+}

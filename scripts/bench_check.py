@@ -21,9 +21,19 @@ committed ``BENCH_baseline.json`` and enforces two kinds of checks:
    of its scalar twin. This is the gate that catches a SIMD leg
    silently degrading into (or below) the scalar walk.
 
+3. **Within-run model drift** — always hard, host-independent: every
+   ``drift-<engine>`` row in the current run holds the worst relative
+   gap between the bytes that engine *observably* moved and what the
+   traffic simulator predicted for the same plan, and must stay at or
+   under ``DRIFT_BOUND``. A failure here means the cost model the tuner
+   scores with no longer describes the kernels that actually run.
+
 Rows present in only one file (e.g. host-dependent ``sharded<K>-*``
 names) are skipped and counted, never failed: the smoke sweep grows
 over time and the baseline must not block adding rows.
+``drift-*`` and ``observed-bytes-*`` rows hold fractions and byte
+counts, not GFLOPS, so they are excluded from the cross-run
+regression comparison.
 
 Usage: ``bench_check.py BENCH_baseline.json BENCH_ci.json``
 Exit status: 0 ok, 1 hard failure, 2 usage/schema error.
@@ -41,6 +51,13 @@ PAIR_TOLERANCE = 0.98
 # Engine-row prefixes whose `<prefix>-simd` must keep up with
 # `<prefix>-scalar` in the same run.
 PAIR_PREFIXES = ["ehyb-ellwalk", "ehyb-spmm4"]
+# A drift-* row (observed-vs-simulated relative gap) past this bound
+# hard-fails the run: the tuner's cost model has stopped describing
+# the kernels that actually execute.
+DRIFT_BOUND = 0.15
+# Row prefixes that are not GFLOPS and must not enter the cross-run
+# regression comparison.
+NON_GFLOPS_PREFIXES = ("drift-", "observed-bytes-")
 
 
 def load(path):
@@ -76,6 +93,8 @@ def main():
 
     # 1. Cross-run regression against the committed baseline.
     for key, b in sorted(base.items()):
+        if key[1].startswith(NON_GFLOPS_PREFIXES):
+            continue
         if key not in cur:
             skipped += 1
             continue
@@ -102,10 +121,23 @@ def main():
                     f"{case['matrix']} / {prefix}: simd leg {v:.3f} GFLOPS trails "
                     f"scalar twin {s:.3f} (< {PAIR_TOLERANCE:.0%})")
 
+    # 3. Within-run model drift (always hard). The bench only emits
+    # drift-* rows when the profile feature is compiled in, so a
+    # feature-off smoke run simply checks zero rows.
+    drift_count = 0
+    for (matrix, name), v in sorted(cur.items()):
+        if not name.startswith("drift-"):
+            continue
+        drift_count += 1
+        if v > DRIFT_BOUND:
+            failures.append(
+                f"{matrix} / {name}: observed-vs-simulated drift {v:.3f} "
+                f"exceeds bound {DRIFT_BOUND}")
+
     prov = "measured (hard gate)" if measured else "estimated (advisory)"
     print(f"bench_check: baseline provenance {prov}; "
           f"{compared} rows compared, {skipped} baseline rows absent from current run, "
-          f"{pair_count} simd pairs checked")
+          f"{pair_count} simd pairs checked, {drift_count} drift rows checked")
     for w in warnings:
         print(f"  warn: {w}")
     for f in failures:
